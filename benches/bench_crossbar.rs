@@ -1,0 +1,62 @@
+//! Crossbar-simulator benches: tile VMM throughput across geometries, and
+//! the DAC/ADC transfer functions (the L3 hot path of host-side
+//! cross-validation and the crossbar explorer).
+
+use hic_train::bench::Bench;
+use hic_train::crossbar::quant::{AdcSpec, DacSpec};
+use hic_train::crossbar::tile::CrossbarTile;
+use hic_train::hic::weight::{HicGeometry, HicWeight};
+use hic_train::pcm::device::PcmParams;
+use hic_train::util::rng::Pcg64;
+
+fn tile(rows: usize, cols: usize, rng: &mut Pcg64) -> CrossbarTile {
+    let geom = HicGeometry::default();
+    let mut hw = HicWeight::new(PcmParams::default(), geom, rows, cols, rng);
+    let w: Vec<f32> = (0..rows * cols)
+        .map(|i| ((i % 15) as f32 - 7.0) / 7.0)
+        .collect();
+    hw.program_init(&w, 0.0, rng);
+    CrossbarTile::new(hw, DacSpec::default(), AdcSpec::default())
+}
+
+fn main() {
+    let mut b = Bench::new("crossbar");
+    let mut rng = Pcg64::new(1, 0);
+
+    for (rows, cols) in [(64, 64), (128, 128), (256, 256)] {
+        let t = tile(rows, cols, &mut rng);
+        let x: Vec<f32> = (0..rows).map(|i| (i as f32) / 64.0 - 1.0).collect();
+        let mut r = Pcg64::new(2, 0);
+        b.bench_with_elements(
+            &format!("tile_vmm_{rows}x{cols}"),
+            Some((rows * cols) as f64),
+            || {
+                std::hint::black_box(t.vmm(&x, 1.0, &mut r));
+            },
+        );
+    }
+
+    // Batched VMM (amortizes the per-call read)
+    let t = tile(128, 128, &mut rng);
+    let xb: Vec<f32> = (0..16 * 128).map(|i| (i % 128) as f32 / 64.0).collect();
+    let mut r = Pcg64::new(3, 0);
+    b.bench_with_elements("tile_vmm_batch16_128x128",
+                          Some((16 * 128 * 128) as f64), || {
+        std::hint::black_box(t.vmm_batch(&xb, 16, 1.0, &mut r));
+    });
+
+    // Converter transfer functions
+    let dac = DacSpec::default();
+    let adc = AdcSpec::default();
+    let vals: Vec<f32> = (0..4096).map(|i| (i as f32) / 512.0 - 4.0).collect();
+    b.bench_with_elements("dac_convert_4096", Some(4096.0), || {
+        let s: f32 = vals.iter().map(|&v| dac.convert(v)).sum();
+        std::hint::black_box(s);
+    });
+    b.bench_with_elements("adc_convert_4096", Some(4096.0), || {
+        let s: f32 = vals.iter().map(|&v| adc.convert(v)).sum();
+        std::hint::black_box(s);
+    });
+
+    b.finish();
+}

@@ -1,0 +1,56 @@
+//! Data-pipeline benches: synthetic sample generation, augmentation,
+//! batch assembly and the prefetch pipeline (L3 overlap with execution).
+
+use std::sync::Arc;
+
+use hic_train::bench::Bench;
+use hic_train::data::augment::{augment, hflip, pad_crop};
+use hic_train::data::loader::{DataLoader, Dataset};
+use hic_train::data::synthetic::SyntheticDataset;
+use hic_train::data::IMG_ELEMS;
+use hic_train::util::rng::Pcg64;
+
+fn main() {
+    let mut b = Bench::new("data");
+    let ds = SyntheticDataset::new(1, 5000, 500);
+
+    b.bench_with_elements("synthetic_sample", Some(IMG_ELEMS as f64), || {
+        std::hint::black_box(ds.sample(123, false));
+    });
+
+    let (img, _) = ds.sample(0, false);
+    let mut out = vec![0f32; IMG_ELEMS];
+    b.bench_with_elements("pad_crop", Some(IMG_ELEMS as f64), || {
+        pad_crop(&img, 2, -3, &mut out);
+    });
+    let mut img2 = img.clone();
+    b.bench_with_elements("hflip", Some(IMG_ELEMS as f64), || {
+        hflip(&mut img2);
+    });
+    let mut rng = Pcg64::new(2, 0);
+    b.bench_with_elements("augment_full", Some(IMG_ELEMS as f64), || {
+        augment(&img, &mut rng, &mut out);
+    });
+
+    // Whole-batch assembly (the producer cost the prefetch thread hides)
+    let dataset = Arc::new(Dataset::Synthetic(SyntheticDataset::new(
+        1, 5000, 500)));
+    let mut loader = DataLoader::new(Arc::clone(&dataset), 32, false, true, 3);
+    b.bench_with_elements("batch_assembly_b32",
+                          Some((32 * IMG_ELEMS) as f64), || {
+        std::hint::black_box(loader.next_batch());
+    });
+
+    // Prefetched consumption: end-to-end throughput of the bounded queue.
+    b.bench("prefetch_pipeline_64_batches", || {
+        let l = DataLoader::new(Arc::clone(&dataset), 32, false, true, 4);
+        let rx = l.prefetch(64, 4);
+        let mut n = 0;
+        for batch in rx {
+            n += batch.y.as_i32().unwrap().len();
+        }
+        std::hint::black_box(n);
+    });
+
+    b.finish();
+}

@@ -1,0 +1,53 @@
+//! FIG3 bench — end-to-end train-step cost across PCM-model ablations.
+//!
+//! The accuracy study itself is `hic-train fig3`; this target measures
+//! what each non-ideality *costs* in simulation time (the ablation's
+//! system-side counterpart): linear vs +noise terms vs the full model.
+
+use hic_train::bench::Bench;
+use hic_train::runtime::artifact::artifact_root;
+use hic_train::runtime::{Engine, HostTensor};
+use hic_train::util::rng::Pcg64;
+
+fn main() {
+    let mut b = Bench::new("fig3");
+    let mut rng = Pcg64::new(9, 0);
+    for tag in ["linear", "nonlinear", "full"] {
+        let dir = artifact_root().join(format!("fig3_{tag}"));
+        if !dir.join("manifest.json").exists() {
+            println!("[fig3] SKIP {tag}: artifacts missing \
+                      (python -m compile.aot --sets fig3)");
+            continue;
+        }
+        let engine = Engine::load(&dir).expect("engine");
+        engine.warmup(&["hic_init", "hic_train_step"]).expect("warmup");
+        let bsz = engine.manifest.batch_size();
+        let mut state = engine.init_state("hic_init", [0, 2]).expect("init");
+        let img = bsz * 32 * 32 * 3;
+        let x: Vec<f32> =
+            (0..img).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let xt = HostTensor::from_f32(&[bsz, 32, 32, 3], &x);
+        let y: Vec<i32> = (0..bsz).map(|i| (i % 10) as i32).collect();
+        let yt = HostTensor::from_i32(&[bsz], &y);
+        let mut step = 0u32;
+        b.bench_with_elements(
+            &format!("train_step[{tag}]"),
+            Some(engine.manifest.num_weights as f64),
+            || {
+                step += 1;
+                let m = engine
+                    .call_stateful(
+                        "hic_train_step",
+                        &mut state,
+                        &[xt.clone(), yt.clone(),
+                          HostTensor::key([1, step]),
+                          HostTensor::scalar_f32(step as f32 * 0.05),
+                          HostTensor::scalar_f32(0.5)],
+                    )
+                    .expect("train");
+                std::hint::black_box(m[2].scalar().unwrap());
+            },
+        );
+    }
+    b.finish();
+}

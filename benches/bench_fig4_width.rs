@@ -1,0 +1,89 @@
+//! FIG4 bench — train-step cost vs network width multiplier, HIC vs FP32
+//! baseline.  The step-time scaling with width is the system-side view of
+//! the model-size sweep `hic-train fig4` measures for accuracy.
+
+use hic_train::bench::Bench;
+use hic_train::runtime::artifact::artifact_root;
+use hic_train::runtime::{Engine, HostTensor};
+use hic_train::util::rng::Pcg64;
+
+fn main() {
+    let mut b = Bench::new("fig4");
+    let mut rng = Pcg64::new(13, 0);
+
+    for w in ["0p5", "1p0"] {
+        let dir = artifact_root().join(format!("fig4_hic_w{w}"));
+        if !dir.join("manifest.json").exists() {
+            println!("[fig4] SKIP hic w={w}: artifacts missing");
+            continue;
+        }
+        let engine = Engine::load(&dir).expect("engine");
+        engine.warmup(&["hic_init", "hic_train_step"]).expect("warmup");
+        let bsz = engine.manifest.batch_size();
+        let mut state = engine.init_state("hic_init", [0, 3]).expect("init");
+        let x: Vec<f32> = (0..bsz * 3072)
+            .map(|_| rng.normal_f32(0.0, 1.0))
+            .collect();
+        let xt = HostTensor::from_f32(&[bsz, 32, 32, 3], &x);
+        let y: Vec<i32> = (0..bsz).map(|i| (i % 10) as i32).collect();
+        let yt = HostTensor::from_i32(&[bsz], &y);
+        let mut step = 0u32;
+        b.bench_with_elements(
+            &format!("hic_train_step[w={w}]"),
+            Some(engine.manifest.num_weights as f64),
+            || {
+                step += 1;
+                let m = engine
+                    .call_stateful(
+                        "hic_train_step",
+                        &mut state,
+                        &[xt.clone(), yt.clone(),
+                          HostTensor::key([1, step]),
+                          HostTensor::scalar_f32(step as f32 * 0.05),
+                          HostTensor::scalar_f32(0.5)],
+                    )
+                    .expect("train");
+                std::hint::black_box(m[2].scalar().unwrap());
+            },
+        );
+    }
+
+    // FP32 baseline at matched width for the overhead ratio.
+    for w in ["0p5", "1p0"] {
+        let dir = artifact_root().join(format!("fig4_base_w{w}"));
+        if !dir.join("manifest.json").exists() {
+            println!("[fig4] SKIP base w={w}: artifacts missing");
+            continue;
+        }
+        let engine = Engine::load(&dir).expect("engine");
+        engine
+            .warmup(&["baseline_init", "baseline_train_step"])
+            .expect("warmup");
+        let bsz = engine.manifest.batch_size();
+        let mut state =
+            engine.init_state("baseline_init", [0, 4]).expect("init");
+        let x: Vec<f32> = (0..bsz * 3072)
+            .map(|_| rng.normal_f32(0.0, 1.0))
+            .collect();
+        let xt = HostTensor::from_f32(&[bsz, 32, 32, 3], &x);
+        let y: Vec<i32> = (0..bsz).map(|i| (i % 10) as i32).collect();
+        let yt = HostTensor::from_i32(&[bsz], &y);
+        b.bench_with_elements(
+            &format!("baseline_train_step[w={w}]"),
+            Some(engine.manifest.num_weights as f64),
+            || {
+                let m = engine
+                    .call_stateful(
+                        "baseline_train_step",
+                        &mut state,
+                        &[xt.clone(), yt.clone(),
+                          HostTensor::scalar_f32(0.1)],
+                    )
+                    .expect("train");
+                std::hint::black_box(m[1].scalar().unwrap());
+            },
+        );
+    }
+
+    b.finish();
+}

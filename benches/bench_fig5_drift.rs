@@ -1,0 +1,62 @@
+//! FIG5 bench — drifted-inference and AdaBS-calibration step costs.
+//!
+//! Confirms the system property behind Fig. 5's practicality argument:
+//! evaluating at any drift time costs the same (drift is a read-time
+//! power law, not a state rewrite), and one AdaBS calibration batch costs
+//! about one eval step.
+
+use hic_train::bench::Bench;
+use hic_train::runtime::artifact::artifact_root;
+use hic_train::runtime::{Engine, HostTensor};
+use hic_train::util::rng::Pcg64;
+
+fn main() {
+    let dir = artifact_root().join("tiny");
+    if !dir.join("manifest.json").exists() {
+        println!("[fig5] SKIP: tiny artifacts missing (make artifacts)");
+        return;
+    }
+    let mut b = Bench::new("fig5");
+    let engine = Engine::load(&dir).expect("engine");
+    engine
+        .warmup(&["hic_init", "hic_eval_step", "hic_adabs"])
+        .expect("warmup");
+    let bsz = engine.manifest.batch_size();
+    let mut rng = Pcg64::new(17, 0);
+    let mut state = engine.init_state("hic_init", [0, 5]).expect("init");
+    let x: Vec<f32> =
+        (0..bsz * 3072).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let xt = HostTensor::from_f32(&[bsz, 32, 32, 3], &x);
+    let y: Vec<i32> = (0..bsz).map(|i| (i % 10) as i32).collect();
+    let yt = HostTensor::from_i32(&[bsz], &y);
+
+    for t in [1e2f32, 1e6, 4e7] {
+        b.bench(&format!("eval_step@t={t:.0e}s"), || {
+            let m = engine
+                .call_stateful(
+                    "hic_eval_step",
+                    &mut state,
+                    &[xt.clone(), yt.clone(), HostTensor::key([1, 1]),
+                      HostTensor::scalar_f32(t)],
+                )
+                .expect("eval");
+            std::hint::black_box(m[0].scalar_i64().unwrap());
+        });
+    }
+
+    let mut k = 0u32;
+    b.bench("adabs_calibration_batch", || {
+        k += 1;
+        engine
+            .call_stateful(
+                "hic_adabs",
+                &mut state,
+                &[xt.clone(), HostTensor::key([2, k]),
+                  HostTensor::scalar_f32(1e6),
+                  HostTensor::scalar_f32(k as f32)],
+            )
+            .expect("adabs");
+    });
+
+    b.finish();
+}

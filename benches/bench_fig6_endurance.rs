@@ -1,0 +1,69 @@
+//! FIG6 bench — endurance-ledger extraction cost: pulling the per-device
+//! counters out of the state buffers and building the WE-cycle histograms
+//! (the bookkeeping path behind `hic-train fig6`).
+
+use hic_train::bench::Bench;
+use hic_train::pcm::endurance::EnduranceLedger;
+use hic_train::runtime::artifact::artifact_root;
+use hic_train::runtime::{Engine, HostTensor};
+use hic_train::util::rng::Pcg64;
+
+fn main() {
+    let dir = artifact_root().join("tiny");
+    if !dir.join("manifest.json").exists() {
+        println!("[fig6] SKIP: tiny artifacts missing (make artifacts)");
+        return;
+    }
+    let mut b = Bench::new("fig6");
+    let engine = Engine::load(&dir).expect("engine");
+    engine.warmup(&["hic_init", "hic_train_step"]).expect("warmup");
+    let bsz = engine.manifest.batch_size();
+    let mut rng = Pcg64::new(21, 0);
+    let mut state = engine.init_state("hic_init", [0, 6]).expect("init");
+
+    // Generate some device activity first.
+    let x: Vec<f32> =
+        (0..bsz * 3072).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let xt = HostTensor::from_f32(&[bsz, 32, 32, 3], &x);
+    let y: Vec<i32> = (0..bsz).map(|i| (i % 10) as i32).collect();
+    let yt = HostTensor::from_i32(&[bsz], &y);
+    for i in 0..5u32 {
+        engine
+            .call_stateful(
+                "hic_train_step",
+                &mut state,
+                &[xt.clone(), yt.clone(), HostTensor::key([1, i]),
+                  HostTensor::scalar_f32(i as f32 * 0.05),
+                  HostTensor::scalar_f32(0.5)],
+            )
+            .expect("train");
+    }
+
+    let weights = engine.manifest.num_weights as f64;
+    b.bench_with_elements("ledger_from_state", Some(weights), || {
+        let mut ledger = EnduranceLedger::new();
+        for side in ["pcm_p", "pcm_m"] {
+            let sets = state.find(&format!("{side}/set_count"));
+            let resets = state.find(&format!("{side}/reset_count"));
+            for ((_, s), (_, r)) in sets.iter().zip(resets.iter()) {
+                for (a, bb) in
+                    s.as_i32().unwrap().iter().zip(r.as_i32().unwrap())
+                {
+                    ledger.record_msb(*a as u64, *bb as u64);
+                }
+            }
+        }
+        let flips = state.find("lsb_flips");
+        let resets = state.find("lsb_resets");
+        for ((_, f), (_, r)) in flips.iter().zip(resets.iter()) {
+            for (a, bb) in
+                f.as_i32().unwrap().iter().zip(r.as_i32().unwrap())
+            {
+                ledger.record_lsb_weight(*a as u64, *bb as u64, 7);
+            }
+        }
+        std::hint::black_box(ledger.msb.max);
+    });
+
+    b.finish();
+}

@@ -1,0 +1,55 @@
+//! HIC update-path benches: the fixed-point accumulator, full hybrid
+//! weight updates, and the refresh cycle — host-side twins of the paper's
+//! update phase (Fig. 2).
+
+use hic_train::bench::Bench;
+use hic_train::hic::fixedpoint::FixedPointAccumulator;
+use hic_train::hic::weight::{HicGeometry, HicWeight};
+use hic_train::pcm::device::PcmParams;
+use hic_train::util::rng::Pcg64;
+
+fn main() {
+    let mut b = Bench::new("hic");
+    let mut rng = Pcg64::new(11, 0);
+
+    // Raw accumulator updates
+    let mut accs: Vec<FixedPointAccumulator> =
+        vec![FixedPointAccumulator::new(7); 16384];
+    let deltas: Vec<i32> =
+        (0..16384).map(|i| ((i * 37) % 255) as i32 - 127).collect();
+    b.bench_with_elements("fixedpoint_update_16k", Some(16384.0), || {
+        let mut ovf = 0i64;
+        for (a, &d) in accs.iter_mut().zip(&deltas) {
+            ovf += a.update(d).overflow as i64;
+        }
+        std::hint::black_box(ovf);
+    });
+
+    // Full hybrid update (quantize -> accumulate -> overflow -> program)
+    let geom = HicGeometry::default();
+    let mut hw =
+        HicWeight::new(PcmParams::default(), geom, 128, 128, &mut rng);
+    hw.program_init(&vec![0.0f32; 128 * 128], 0.0, &mut rng);
+    let grad: Vec<f32> = (0..128 * 128)
+        .map(|i| ((i % 200) as f32 - 100.0) / 1000.0)
+        .collect();
+    let mut t = 1.0f32;
+    b.bench_with_elements("hybrid_update_128x128",
+                          Some((128 * 128) as f64), || {
+        t += 0.05;
+        std::hint::black_box(hw.apply_update(&grad, 0.5, t, &mut rng));
+    });
+
+    // Refresh after heavy updates
+    b.bench_with_elements("refresh_128x128", Some((128 * 128) as f64), || {
+        t += 0.05;
+        std::hint::black_box(hw.refresh(t, &mut rng));
+    });
+
+    // Decode (inference read)
+    b.bench_with_elements("decode_128x128", Some((128 * 128) as f64), || {
+        std::hint::black_box(hw.decode(t));
+    });
+
+    b.finish();
+}

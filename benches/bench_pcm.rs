@@ -1,0 +1,71 @@
+//! PCM device-model benches: programming, reads, drift evaluation —
+//! the substrate costs behind every host-side analysis.
+
+use hic_train::bench::Bench;
+use hic_train::pcm::array::DifferentialPair;
+use hic_train::pcm::device::{PcmDevice, PcmParams};
+use hic_train::pcm::endurance::{EnduranceLedger, Histogram};
+use hic_train::util::rng::Pcg64;
+
+fn main() {
+    let mut b = Bench::new("pcm");
+    let params = PcmParams::default();
+    let mut rng = Pcg64::new(7, 0);
+
+    // Single-device pulse application
+    let mut dev = PcmDevice::new(&params, &mut rng);
+    b.bench("set_pulse", || {
+        dev.set_pulse(&params, 1.0, &mut rng);
+        if dev.g >= 1.0 {
+            dev.reset(1.0);
+        }
+    });
+
+    // Array-level programming (16k devices)
+    let mut pair = DifferentialPair::new(params, 128, 128, 1.0, &mut rng);
+    let w: Vec<f32> = (0..128 * 128)
+        .map(|i| ((i % 13) as f32 - 6.0) / 7.0)
+        .collect();
+    b.bench_with_elements("program_weights_128x128",
+                          Some((128 * 128) as f64), || {
+        pair.program_weights(&w, 1.0, &mut rng);
+    });
+
+    // Drift-decoded full-array read
+    b.bench_with_elements("decode_drifted_128x128",
+                          Some((128 * 128) as f64), || {
+        std::hint::black_box(pair.decode(1e6));
+    });
+
+    // Stochastic read
+    b.bench_with_elements("noisy_read_128x128",
+                          Some((128 * 128) as f64), || {
+        std::hint::black_box(pair.read_weights(1e6, &mut rng));
+    });
+
+    // Selective refresh scan (mostly a predicate sweep when healthy)
+    b.bench_with_elements("refresh_scan_128x128",
+                          Some((128 * 128) as f64), || {
+        std::hint::black_box(pair.refresh(1e6, &mut rng));
+    });
+
+    // Endurance ledger ingestion
+    b.bench_with_elements("ledger_record_16k", Some(16384.0), || {
+        let mut l = EnduranceLedger::new();
+        for i in 0..16384u64 {
+            l.record_msb(i % 300, i % 29);
+        }
+        std::hint::black_box(l.msb.max);
+    });
+
+    // Histogram ops
+    let mut h = Histogram::new();
+    for i in 0..100_000u64 {
+        h.add(i % 20_000);
+    }
+    b.bench("histogram_percentile", || {
+        std::hint::black_box(h.percentile(95.0));
+    });
+
+    b.finish();
+}

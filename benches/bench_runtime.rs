@@ -1,0 +1,105 @@
+//! Runtime benches over the compiled artifacts: per-entry execution cost
+//! on the `tiny` set, the state round-trip overhead, and the faithful
+//! 128^3 crossbar-tile kernel (the L1 perf target).
+//!
+//! Skips (with a message) when artifacts are missing.
+
+use hic_train::bench::Bench;
+use hic_train::runtime::artifact::artifact_root;
+use hic_train::runtime::{Engine, HostTensor};
+use hic_train::util::rng::Pcg64;
+
+fn main() {
+    let dir = artifact_root().join("tiny");
+    if !dir.join("manifest.json").exists() {
+        println!("[runtime] SKIP: tiny artifacts missing (make artifacts)");
+        return;
+    }
+    let mut b = Bench::new("runtime");
+    let engine = Engine::load(&dir).expect("engine");
+    engine
+        .warmup(&["hic_init", "hic_train_step", "hic_eval_step",
+                  "hic_refresh", "crossbar_vmm"])
+        .expect("warmup");
+
+    let bsz = engine.manifest.batch_size();
+    let mut rng = Pcg64::new(5, 0);
+    let mut state = engine.init_state("hic_init", [0, 1]).expect("init");
+
+    let img = bsz * 32 * 32 * 3;
+    let x: Vec<f32> = (0..img).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let xt = HostTensor::from_f32(&[bsz, 32, 32, 3], &x);
+    let y: Vec<i32> = (0..bsz).map(|i| (i % 10) as i32).collect();
+    let yt = HostTensor::from_i32(&[bsz], &y);
+
+    let weights = engine.manifest.num_weights as f64;
+    let mut step = 0u32;
+    b.bench_with_elements("hic_train_step(tiny)", Some(weights), || {
+        step += 1;
+        let m = engine
+            .call_stateful(
+                "hic_train_step",
+                &mut state,
+                &[xt.clone(), yt.clone(), HostTensor::key([2, step]),
+                  HostTensor::scalar_f32(step as f32 * 0.05),
+                  HostTensor::scalar_f32(0.5)],
+            )
+            .expect("train");
+        std::hint::black_box(m[2].scalar().unwrap());
+    });
+
+    b.bench_with_elements("hic_eval_step(tiny)", Some(weights), || {
+        let m = engine
+            .call_stateful(
+                "hic_eval_step",
+                &mut state,
+                &[xt.clone(), yt.clone(), HostTensor::key([3, step]),
+                  HostTensor::scalar_f32(10.0)],
+            )
+            .expect("eval");
+        std::hint::black_box(m[0].scalar_i64().unwrap());
+    });
+
+    b.bench("hic_refresh(tiny)", || {
+        let m = engine
+            .call_stateful(
+                "hic_refresh",
+                &mut state,
+                &[HostTensor::key([4, step]), HostTensor::scalar_f32(10.0)],
+            )
+            .expect("refresh");
+        std::hint::black_box(m[0].scalar().unwrap());
+    });
+
+    // State round-trip cost in isolation: serialize state leaves to
+    // literals and back (the Layer-3 overhead the §Perf log tracks).
+    b.bench_with_elements(
+        "state_literal_roundtrip",
+        Some(state.total_bytes() as f64),
+        || {
+            for leaf in &state.leaves {
+                let lit = leaf.to_literal().unwrap();
+                std::hint::black_box(
+                    HostTensor::from_literal(&lit).unwrap());
+            }
+        },
+    );
+
+    // The faithful 128^3 crossbar-tile kernel (TPU tiling).
+    let t = 128;
+    let xt2: Vec<f32> = (0..t * t).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let wt: Vec<f32> = (0..t * t).map(|_| rng.normal_f32(0.0, 0.05)).collect();
+    let nt = vec![0f32; t * t];
+    let xb = HostTensor::from_f32(&[t, t], &xt2);
+    let wb = HostTensor::from_f32(&[t, t], &wt);
+    let nb = HostTensor::from_f32(&[t, t], &nt);
+    b.bench_with_elements("crossbar_vmm_128x128x128 (L1 kernel)",
+                          Some((t * t * t) as f64), || {
+        let out = engine
+            .call("crossbar_vmm", &[xb.clone(), wb.clone(), nb.clone()])
+            .expect("vmm");
+        std::hint::black_box(out[0].as_f32().unwrap()[0]);
+    });
+
+    b.finish();
+}

@@ -1,0 +1,279 @@
+"""AOT lowering: JAX entry points -> HLO text artifacts + manifest.
+
+Usage (from python/):
+    python -m compile.aot --sets core            # default `make artifacts`
+    python -m compile.aot --sets fig3,fig4,fig5  # experiment artifact sets
+    python -m compile.aot --configs tiny         # individual configs
+    python -m compile.aot --list
+
+For every named ExperimentConfig this writes:
+
+    artifacts/<config>/<entry>.hlo.txt    — XLA HLO *text* modules
+    artifacts/<config>/manifest.json      — flattened I/O signatures
+
+HLO text (NOT ``lowered.compiler_ir().serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the Rust side's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md.
+
+The manifest tells the Rust runtime everything it needs to drive the
+programs without Python: the flattened order/shape/dtype of every input
+and output leaf, which spans are the persistent device state, and the echo
+of the config the set was baked from.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+from typing import Any, Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import resnet
+from .configs import SET_GROUPS, ExperimentConfig, all_configs
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _leaf_entries(tree) -> List[Dict[str, Any]]:
+    """Flatten a pytree of ShapeDtypeStructs to manifest leaf records."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path).strip("[]").replace("'", "")
+        name = (name.replace("][", "/").replace("].", "/")
+                .replace(".", "/").replace("[", "").replace("]", ""))
+        out.append({
+            "name": name or "arg",
+            "shape": list(leaf.shape),
+            "dtype": str(leaf.dtype),
+        })
+    return out
+
+
+def _spec_like(tree):
+    return jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+
+
+class EntryPoint:
+    def __init__(self, name: str, fn: Callable, args: Sequence[Any],
+                 arg_names: Sequence[str], state_arg: int = -1):
+        """state_arg: index of the persistent-state argument (-1 if none).
+
+        The state (when present) must be the first argument and, for
+        state-updating entries, the first element of the returned tuple —
+        the Rust runtime relies on this convention.
+        """
+        self.name = name
+        self.fn = fn
+        self.args = list(args)
+        self.arg_names = list(arg_names)
+        self.state_arg = state_arg
+
+    def lower(self) -> Tuple[str, Dict[str, Any]]:
+        # keep_unused=True: entries like eval_step read only part of the
+        # state, but the runtime contract feeds the full flattened state to
+        # every stateful entry — dead-arg elimination would break it.
+        lowered = jax.jit(self.fn, keep_unused=True).lower(*self.args)
+        text = to_hlo_text(lowered)
+
+        inputs: List[Dict[str, Any]] = []
+        state_in = [0, 0]
+        for i, (arg, an) in enumerate(zip(self.args, self.arg_names)):
+            leaves = _leaf_entries(arg)
+            for l in leaves:
+                l["name"] = f"{an}/{l['name']}" if l["name"] != "arg" else an
+            if i == self.state_arg:
+                state_in = [len(inputs), len(leaves)]
+            inputs.extend(leaves)
+
+        out_shape = jax.eval_shape(self.fn, *self.args)
+        outputs = _leaf_entries(out_shape)
+        state_out = [0, 0]
+        if self.state_arg >= 0 and isinstance(out_shape, tuple):
+            n_state = len(jax.tree_util.tree_leaves(
+                self.args[self.state_arg]))
+            first = jax.tree_util.tree_leaves(out_shape[0])
+            if len(first) == n_state:
+                state_out = [0, n_state]
+        elif self.state_arg >= 0 and isinstance(out_shape, dict):
+            state_out = [0, len(outputs)]  # entry returns the state itself
+
+        sig = {
+            "name": self.name,
+            "inputs": inputs,
+            "outputs": outputs,
+            "state_input_span": state_in,
+            "state_output_span": state_out,
+        }
+        return text, sig
+
+
+def build_entries(cfg: ExperimentConfig) -> List[EntryPoint]:
+    net, tr = cfg.net, cfg.train
+    b = tr.batch_size
+    img = (b, net.image_size, net.image_size, net.image_channels)
+
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    x = jax.ShapeDtypeStruct(img, jnp.float32)
+    y = jax.ShapeDtypeStruct((b,), jnp.int32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+
+    init = M.hic_init_fn(cfg)
+    state = _spec_like(jax.eval_shape(init, key))
+
+    entries = [
+        EntryPoint("hic_init", init, [key], ["key"]),
+        EntryPoint("hic_train_step", M.hic_train_step_fn(cfg),
+                   [state, x, y, key, scalar, scalar],
+                   ["state", "x", "y", "key", "t_now", "lr"], state_arg=0),
+        EntryPoint("hic_eval_step", M.hic_eval_step_fn(cfg),
+                   [state, x, y, key, scalar],
+                   ["state", "x", "y", "key", "t_now"], state_arg=0),
+        EntryPoint("hic_refresh", M.hic_refresh_fn(cfg),
+                   [state, key, scalar],
+                   ["state", "key", "t_now"], state_arg=0),
+        EntryPoint("hic_adabs", M.hic_adabs_fn(cfg),
+                   [state, x, key, scalar, scalar],
+                   ["state", "x", "key", "t_now", "kth"], state_arg=0),
+    ]
+
+    # Standalone Layer-1 microbench kernel (crossbar tile-sized).
+    t = 128
+    entries.append(EntryPoint(
+        "crossbar_vmm", M.crossbar_vmm_fn(cfg),
+        [jax.ShapeDtypeStruct((t, t), jnp.float32),
+         jax.ShapeDtypeStruct((t, t), jnp.float32),
+         jax.ShapeDtypeStruct((t, t), jnp.float32)],
+        ["x", "w", "noise"]))
+
+    if cfg.with_baseline:
+        binit = M.baseline_init_fn(cfg)
+        bstate = _spec_like(jax.eval_shape(binit, key))
+        entries.extend([
+            EntryPoint("baseline_init", binit, [key], ["key"]),
+            EntryPoint("baseline_train_step", M.baseline_train_step_fn(cfg),
+                       [bstate, x, y, scalar],
+                       ["state", "x", "y", "lr"], state_arg=0),
+            EntryPoint("baseline_eval_step", M.baseline_eval_step_fn(cfg),
+                       [bstate, x, y], ["state", "x", "y"], state_arg=0),
+        ])
+
+    return entries
+
+
+def _source_fingerprint() -> str:
+    """Hash of the compile-path sources; lets `make artifacts` skip configs
+    whose artifacts are already up to date."""
+    h = hashlib.sha256()
+    root = os.path.dirname(os.path.abspath(__file__))
+    for dirpath, _, files in sorted(os.walk(root)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(dirpath, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()[:16]
+
+
+def lower_config(cfg: ExperimentConfig, out_root: str, *,
+                 force: bool = False) -> None:
+    out_dir = os.path.join(out_root, cfg.name)
+    os.makedirs(out_dir, exist_ok=True)
+    stamp_path = os.path.join(out_dir, ".stamp")
+    fp = _source_fingerprint()
+    if not force and os.path.exists(stamp_path):
+        with open(stamp_path) as f:
+            if f.read().strip() == fp:
+                print(f"[aot] {cfg.name}: up to date")
+                return
+
+    print(f"[aot] lowering config '{cfg.name}' "
+          f"(depth={cfg.net.depth} width={cfg.net.width_mult} "
+          f"batch={cfg.train.batch_size})")
+    specs = resnet.layer_specs(cfg.net)
+    manifest: Dict[str, Any] = {
+        "config": cfg.describe(),
+        "num_weights": resnet.num_weights(cfg.net),
+        "layers": [
+            {"name": s.name, "k": s.k_dim, "n": s.cout,
+             "kh": s.kh, "kw": s.kw, "cin": s.cin, "stride": s.stride}
+            for s in specs
+        ],
+        "entries": {},
+        "fingerprint": fp,
+    }
+    for ep in build_entries(cfg):
+        text, sig = ep.lower()
+        path = os.path.join(out_dir, f"{ep.name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        sig["file"] = f"{ep.name}.hlo.txt"
+        manifest["entries"][ep.name] = sig
+        print(f"[aot]   {ep.name}: {len(text)/1e6:.2f} MB hlo, "
+              f"{len(sig['inputs'])} in / {len(sig['outputs'])} out")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    with open(stamp_path, "w") as f:
+        f.write(fp)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-root", default=None,
+                    help="artifact root (default: <repo>/artifacts)")
+    ap.add_argument("--sets", default="",
+                    help="comma-separated set groups: "
+                         + ",".join(SET_GROUPS))
+    ap.add_argument("--configs", default="",
+                    help="comma-separated individual config names")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    cfgs = all_configs()
+    if args.list:
+        for name, c in sorted(cfgs.items()):
+            print(f"{name:24s} depth={c.net.depth} width={c.net.width_mult}"
+                  f" batch={c.train.batch_size} baseline={c.with_baseline}")
+        return
+
+    out_root = args.out_root or os.path.join(
+        os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__)))), "artifacts")
+
+    names: List[str] = []
+    for s in filter(None, args.sets.split(",")):
+        if s not in SET_GROUPS:
+            sys.exit(f"unknown set '{s}'; known: {sorted(SET_GROUPS)}")
+        names.extend(SET_GROUPS[s])
+    names.extend(filter(None, args.configs.split(",")))
+    if not names:
+        names = list(SET_GROUPS["core"])
+
+    seen = set()
+    for n in names:
+        if n in seen:
+            continue
+        seen.add(n)
+        if n not in cfgs:
+            sys.exit(f"unknown config '{n}'; try --list")
+        lower_config(cfgs[n], out_root, force=args.force)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,279 @@
+"""Experiment configurations for AOT lowering.
+
+Every named config fully determines one artifact set
+(``artifacts/<name>/*.hlo.txt`` + ``manifest.json``): network depth/width,
+batch size, PCM-model ablation flags and fixed-point geometry are all baked
+at lowering time.  Runtime-variable quantities (learning rate, simulated
+wall-clock time, PRNG key) remain *inputs* of the lowered programs so the
+Rust coordinator can drive schedules without re-lowering.
+
+The config names mirror DESIGN.md §5 (experiment index).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class PcmConfig:
+    """Parameters of the statistical PCM model (Nandakumar et al. 2018 style).
+
+    Conductances are normalized to [0, 1] (1.0 == G_max, ~25 uS on silicon).
+    The four non-idealities can be toggled independently; the FIG3 ablation
+    lowers one artifact set per combination.
+    """
+
+    # -- programming curve -------------------------------------------------
+    #: expected conductance increment of the first SET pulse (fraction of range)
+    dg0: float = 0.10
+    #: pulse-count scale of the saturating (nonlinear) programming curve:
+    #: dG(n) = dg0 / (1 + n / n0).  Ignored when `nonlinear` is False.
+    n0: float = 15.0
+    #: enable the nonlinear programming curve (vs. constant-increment linear)
+    nonlinear: bool = True
+
+    # -- stochastic write ---------------------------------------------------
+    #: std-dev of write noise, as a fraction of the applied increment
+    write_sigma: float = 0.30
+    write_noise: bool = True
+
+    # -- stochastic read ----------------------------------------------------
+    #: std-dev of instantaneous read noise (fraction of full conductance range)
+    read_sigma: float = 0.009
+    read_noise: bool = True
+
+    # -- conductance drift ----------------------------------------------------
+    #: mean drift exponent nu (G(t) = G_prog * (t/t0)^-nu)
+    drift_nu: float = 0.031
+    #: device-to-device std-dev of the drift exponent
+    drift_nu_sigma: float = 0.007
+    #: reference time t0 (s) after programming at which G_prog is defined
+    drift_t0: float = 1.0
+    drift: bool = True
+
+    # -- binary (LSB-array) devices ------------------------------------------
+    #: write noise std-dev for the binary high-conductance state
+    binary_write_sigma: float = 0.05
+    #: read threshold separating the two binary states
+    binary_threshold: float = 0.5
+
+    def ablation(self, *, nonlinear: bool, write: bool, read: bool,
+                 drift: bool) -> "PcmConfig":
+        """Return a copy with the four non-idealities toggled (FIG3)."""
+        return dataclasses.replace(
+            self, nonlinear=nonlinear, write_noise=write, read_noise=read,
+            drift=drift)
+
+
+@dataclass(frozen=True)
+class HicConfig:
+    """Hybrid weight representation geometry (paper Fig. 1).
+
+    The MSB differential pair gives ~`msb_bits` of weight precision across
+    [-w_max, w_max]; the LSB array is an `lsb_bits`-bit signed fixed-point
+    accumulator whose overflow unit equals one MSB quantum.
+    """
+
+    #: equivalent precision of the multi-level differential pair
+    msb_bits: int = 4
+    #: signed fixed-point accumulator width (7 binary PCM devices)
+    lsb_bits: int = 7
+    #: weight clip range mapped onto the conductance window
+    w_max: float = 1.0
+    #: batches between MSB refresh operations (paper: every 10 batches)
+    refresh_every: int = 10
+    #: max SET pulses applied per programming event
+    max_pulses: int = 10
+    #: stochastically round quantized gradients (LFSR + comparator in the
+    #: digital update unit) — avoids the +-lsb_step/2 dead zone
+    stochastic_rounding: bool = True
+
+    @property
+    def msb_levels(self) -> int:
+        return (1 << self.msb_bits) - 1  # 15 levels across the range
+
+    @property
+    def msb_step(self) -> float:
+        """One MSB weight quantum (epsilon)."""
+        return 2.0 * self.w_max / self.msb_levels
+
+    @property
+    def lsb_half_range(self) -> int:
+        """Accumulator saturation magnitude (64 for 7-bit signed)."""
+        return 1 << (self.lsb_bits - 1)
+
+    @property
+    def lsb_step(self) -> float:
+        """Weight value of one accumulator count: epsilon / 2^(lsb_bits-1)."""
+        return self.msb_step / self.lsb_half_range
+
+
+@dataclass(frozen=True)
+class AdcDacConfig:
+    """Peripheral converter model (paper: 8-bit DAC / 8-bit ADC)."""
+
+    dac_bits: int = 8
+    adc_bits: int = 8
+    #: input clip range for the DAC (activations / error gradients)
+    dac_range: float = 4.0
+    #: ADC full-scale range, in units of (x_range * w_max * sqrt(K)) — the
+    #: column-current scale; calibrated per layer at mapping time.
+    adc_range: float = 16.0
+    enabled: bool = True
+
+
+@dataclass(frozen=True)
+class NetConfig:
+    """CIFAR-style ResNet family (He et al.): depth = 6n+2, 3 stages."""
+
+    depth: int = 8
+    width_mult: float = 1.0
+    num_classes: int = 10
+    image_size: int = 32
+    image_channels: int = 3
+    bn_momentum: float = 0.99
+
+    @property
+    def blocks_per_stage(self) -> int:
+        assert (self.depth - 2) % 6 == 0, "depth must be 6n+2"
+        return (self.depth - 2) // 6
+
+    @property
+    def stage_widths(self) -> Tuple[int, int, int]:
+        def w(c: int) -> int:
+            return max(4, int(round(c * self.width_mult)))
+        return (w(16), w(32), w(64))
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    batch_size: int = 32
+    #: paper (HIC): lr 0.05, decay 0.45 at schedule boundaries
+    lr: float = 0.05
+    lr_decay: float = 0.45
+    #: baseline: He et al. SGD-momentum settings
+    base_lr: float = 0.1
+    base_momentum: float = 0.9
+    base_weight_decay: float = 1e-4
+    #: simulated seconds of wall-clock per training batch (drift clock)
+    seconds_per_batch: float = 0.05
+
+
+@dataclass(frozen=True)
+class ExperimentConfig:
+    """One named, fully-baked artifact set."""
+
+    name: str
+    pcm: PcmConfig = PcmConfig()
+    hic: HicConfig = HicConfig()
+    adc: AdcDacConfig = AdcDacConfig()
+    net: NetConfig = NetConfig()
+    train: TrainConfig = TrainConfig()
+    #: lower the FP32 baseline entry points for this config too
+    with_baseline: bool = False
+
+    def describe(self) -> Dict:
+        return {
+            "name": self.name,
+            "pcm": dataclasses.asdict(self.pcm),
+            "hic": dataclasses.asdict(self.hic),
+            "adc": dataclasses.asdict(self.adc),
+            "net": dataclasses.asdict(self.net),
+            "train": dataclasses.asdict(self.train),
+            "with_baseline": self.with_baseline,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Named experiment sets (DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+def _fig3_variants() -> List[ExperimentConfig]:
+    """FIG3: PCM non-ideality ablation (paper Fig. 3 bar order)."""
+    base = ExperimentConfig(name="_", with_baseline=False)
+    combos = [
+        # (tag, nonlinear, write, read, drift)
+        ("linear", False, False, False, False),
+        ("linear_write", False, True, False, False),
+        ("linear_read", False, False, True, False),
+        ("linear_drift", False, False, False, True),
+        ("nonlinear", True, False, False, False),
+        ("nonlinear_write", True, True, False, False),
+        ("nonlinear_read", True, False, True, False),
+        ("full", True, True, True, True),
+    ]
+    out = []
+    for tag, nl, w, r, d in combos:
+        out.append(dataclasses.replace(
+            base,
+            name=f"fig3_{tag}",
+            pcm=base.pcm.ablation(nonlinear=nl, write=w, read=r, drift=d),
+            # FP32 reference lowered once alongside the first variant
+            with_baseline=(tag == "linear"),
+        ))
+    return out
+
+
+def _fig4_variants() -> List[ExperimentConfig]:
+    """FIG4: width-multiplier sweep, HIC (full PCM model) vs FP32 baseline."""
+    out = []
+    for wm in (0.5, 0.75, 1.0, 1.5):
+        out.append(ExperimentConfig(
+            name=f"fig4_hic_w{_wtag(wm)}",
+            net=NetConfig(width_mult=wm),
+        ))
+    for wm in (0.25, 0.5, 0.75, 1.0):
+        out.append(ExperimentConfig(
+            name=f"fig4_base_w{_wtag(wm)}",
+            net=NetConfig(width_mult=wm),
+            with_baseline=True,
+        ))
+    return out
+
+
+def _wtag(wm: float) -> str:
+    return str(wm).replace(".", "p")
+
+
+def all_configs() -> Dict[str, ExperimentConfig]:
+    cfgs: List[ExperimentConfig] = []
+
+    # Core config: default training/eval/quickstart + FIG5 drift study +
+    # FIG6 endurance ledger all run from this artifact set.
+    cfgs.append(ExperimentConfig(name="core", with_baseline=True))
+
+    # A deliberately tiny config for CI-grade integration tests and the
+    # runtime benchmarks: depth 8, width 0.25, batch 8.
+    cfgs.append(ExperimentConfig(
+        name="tiny",
+        net=NetConfig(depth=8, width_mult=0.25),
+        train=TrainConfig(batch_size=8),
+        with_baseline=True,
+    ))
+
+    # FIG5 uses a wider network (paper: width 1.7); scaled default 1.5.
+    cfgs.append(ExperimentConfig(
+        name="fig5_drift",
+        net=NetConfig(width_mult=1.5),
+    ))
+
+    cfgs.extend(_fig3_variants())
+    cfgs.extend(_fig4_variants())
+
+    return {c.name: c for c in cfgs}
+
+
+#: Artifact sets built by a bare `make artifacts` (the rest are built by
+#: `make artifacts-all` or on demand by `aot.py --sets ...`).
+CORE_SETS = ("core", "tiny")
+
+SET_GROUPS: Dict[str, List[str]] = {
+    "core": ["core", "tiny"],
+    "fig3": [c.name for c in _fig3_variants()],
+    "fig4": [c.name for c in _fig4_variants()],
+    "fig5": ["fig5_drift"],
+    "all": sorted(all_configs().keys()),
+}

@@ -1,0 +1,203 @@
+"""Hybrid in-memory weight representation (paper Figs. 1-2), in JAX.
+
+Per layer, the weight lives on two memory arrays:
+
+* **MSB array** — differential pair of multi-level PCM devices per weight
+  (`PcmArrays` x2).  ``w = w_max * (G+ - G-) / g_span`` with ~4-bit
+  equivalent precision.  All forward/backward VMMs read this array
+  (drifted conductances + per-read stochastic noise through the Pallas
+  kernel's noise operand).
+* **LSB array** — 7 binary PCM devices per weight forming a signed
+  fixed-point accumulator of quantized weight updates.  Overflow (one MSB
+  quantum) is the only event that programs the MSB array.
+
+Plus the **selective refresh** (every `refresh_every` batches the
+coordinator invokes `refresh`, which RESET-reprograms only the pairs whose
+devices approach conductance saturation — this is what keeps MSB
+write-erase cycles < 150 over a full training, paper Fig. 6).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import pcm_model
+from .configs import AdcDacConfig, HicConfig, PcmConfig
+from .kernels.lsb_update import lsb_update
+
+#: fraction of the normalized conductance window used by the weight map;
+#: the headroom above `G_SPAN` is the saturation guard band the refresh
+#: operation polices.
+G_SPAN = 0.8
+#: conductance level beyond which a device is considered saturating.
+G_SAT = 0.9
+
+
+class HicLayerState(NamedTuple):
+    """Device state of one HIC-mapped weight tensor (2-D: [K, N])."""
+
+    pcm_p: pcm_model.PcmArrays  # G+ (multi-level)
+    pcm_m: pcm_model.PcmArrays  # G- (multi-level)
+    lsb: jnp.ndarray            # i32 [K, N] — accumulator counts
+    lsb_flips: jnp.ndarray      # i32 [K, N] — cumulative binary-device writes
+    lsb_resets: jnp.ndarray     # i32 [K, N] — cumulative RESETs (WE commits)
+
+
+def _w_to_g(w: jnp.ndarray, hic: HicConfig) -> jnp.ndarray:
+    """Weight value -> differential conductance target (normalized)."""
+    return w * (G_SPAN / hic.w_max)
+
+
+def _g_to_w(g: jnp.ndarray, hic: HicConfig) -> jnp.ndarray:
+    return g * (hic.w_max / G_SPAN)
+
+
+def init_layer(key: jax.Array, w0: jnp.ndarray, t_now, pcm: PcmConfig,
+               hic: HicConfig) -> HicLayerState:
+    """Program freshly-RESET devices with the (quantized) init weights."""
+    k_nu_p, k_nu_m, k_wr_p, k_wr_m = jax.random.split(key, 4)
+    shape = w0.shape
+    arr_p = pcm_model.init_arrays(k_nu_p, shape, pcm)
+    arr_m = pcm_model.init_arrays(k_nu_m, shape, pcm)
+
+    w0 = quantize_msb(w0, hic)
+    g_target = _w_to_g(w0, hic)
+    arr_p = pcm_model.program_increment(
+        arr_p, jnp.maximum(g_target, 0.0), t_now, k_wr_p, pcm,
+        hic.max_pulses)
+    arr_m = pcm_model.program_increment(
+        arr_m, jnp.maximum(-g_target, 0.0), t_now, k_wr_m, pcm,
+        hic.max_pulses)
+    zi = jnp.zeros(shape, jnp.int32)
+    return HicLayerState(pcm_p=arr_p, pcm_m=arr_m, lsb=zi,
+                         lsb_flips=zi, lsb_resets=zi)
+
+
+def quantize_msb(w: jnp.ndarray, hic: HicConfig) -> jnp.ndarray:
+    """Snap a weight to the MSB (4-bit, 15-level) grid.
+
+    The representable range is ±(levels-1)/2 · ε (±7ε for 4 bits) — the
+    outermost codes of the symmetric grid, so every quantized value is an
+    exact multiple of ε (what the differential pair can actually store).
+    """
+    eps = hic.msb_step
+    kmax = (hic.msb_levels - 1) // 2
+    k = jnp.clip(jnp.round(w / eps), -kmax, kmax)
+    return k * eps
+
+
+def read_weights(st: HicLayerState, t_now, pcm: PcmConfig,
+                 hic: HicConfig) -> jnp.ndarray:
+    """Expected weight seen by a VMM at time t (drift, no read noise —
+    the stochastic-read term rides the Pallas kernel's noise operand)."""
+    gp = pcm_model.drifted_conductance(st.pcm_p, t_now, pcm)
+    gm = pcm_model.drifted_conductance(st.pcm_m, t_now, pcm)
+    return _g_to_w(gp - gm, hic)
+
+
+def read_noise_sigma(pcm: PcmConfig, hic: HicConfig) -> float:
+    """Std-dev of the per-read weight perturbation: two devices' read noise
+    add in quadrature across the differential pair."""
+    if not pcm.read_noise:
+        return 0.0
+    return float(pcm.read_sigma) * (2.0 ** 0.5) * (hic.w_max / G_SPAN)
+
+
+def sample_read_noise(key: jax.Array, shape: Tuple[int, ...],
+                      pcm: PcmConfig, hic: HicConfig) -> jnp.ndarray:
+    sigma = read_noise_sigma(pcm, hic)
+    if sigma == 0.0:
+        return jnp.zeros(shape, jnp.float32)
+    return sigma * jax.random.normal(key, shape)
+
+
+def apply_update(st: HicLayerState, dw: jnp.ndarray, lr, t_now,
+                 key: jax.Array, pcm: PcmConfig, hic: HicConfig
+                 ) -> Tuple[HicLayerState, jnp.ndarray]:
+    """One training update: quantize -> LSB accumulate -> overflow -> MSB.
+
+    Returns (new_state, overflow_events) where overflow_events is the count
+    of weights whose accumulator overflowed (programming activity metric).
+    """
+    half = hic.lsb_half_range
+    # Digital gradient quantization to accumulator counts.  Stochastic
+    # rounding keeps sub-quantum gradients alive in expectation (the LSB
+    # grid would otherwise have a +-lsb_step/2 dead zone); it is one LFSR +
+    # comparator per update unit in hardware.  A single step is clamped to
+    # +-(2*half - 1) counts (< 2 MSB quanta), the hardware adder's width.
+    key, k_round = jax.random.split(key)
+    v = -lr * dw / hic.lsb_step
+    if hic.stochastic_rounding:
+        delta = jnp.floor(v + jax.random.uniform(k_round, v.shape))
+    else:
+        delta = jnp.round(v)
+    delta = jnp.clip(delta, -(2 * half - 1), 2 * half - 1).astype(jnp.int32)
+
+    acc2, ovf, flip_word = lsb_update(st.lsb, delta, half_range=half,
+                                      nbits=hic.lsb_bits)
+    flips = flip_word & 0xFFFF
+    resets = flip_word >> 16
+
+    # Program the MSB array only on overflow (increment-only: positive
+    # overflow pulses G+, negative pulses G-).
+    dw_msb = ovf.astype(jnp.float32) * hic.msb_step
+    dg = jnp.abs(_w_to_g(dw_msb, hic))
+    k_p, k_m = jax.random.split(key)
+    pcm_p = pcm_model.program_increment(
+        st.pcm_p, jnp.where(ovf > 0, dg, 0.0), t_now, k_p, pcm,
+        hic.max_pulses)
+    pcm_m = pcm_model.program_increment(
+        st.pcm_m, jnp.where(ovf < 0, dg, 0.0), t_now, k_m, pcm,
+        hic.max_pulses)
+
+    new_st = HicLayerState(
+        pcm_p=pcm_p, pcm_m=pcm_m, lsb=acc2,
+        lsb_flips=st.lsb_flips + flips,
+        lsb_resets=st.lsb_resets + resets,
+    )
+    return new_st, jnp.sum(jnp.abs(ovf)).astype(jnp.float32)
+
+
+def refresh(st: HicLayerState, t_now, key: jax.Array, pcm: PcmConfig,
+            hic: HicConfig) -> Tuple[HicLayerState, jnp.ndarray]:
+    """Selective saturation refresh (paper §III-A; Boybat et al. 2018).
+
+    Pairs whose devices climbed into the saturation guard band are read
+    (through drift + read noise), RESET on both devices, and reprogrammed
+    to the differential target.  Untouched pairs keep their state — this
+    selectivity is what keeps MSB write-erase cycles tiny (Fig. 6).
+
+    Returns (new_state, number_of_pairs_refreshed).
+    """
+    k_read_p, k_read_m, k_wr_p, k_wr_m = jax.random.split(key, 4)
+    need = (st.pcm_p.g > G_SAT) | (st.pcm_m.g > G_SAT)
+
+    # Read the current weight through the periphery (drift + read noise).
+    gp = pcm_model.read(st.pcm_p, t_now, k_read_p, pcm)
+    gm = pcm_model.read(st.pcm_m, t_now, k_read_m, pcm)
+    w = quantize_msb(_g_to_w(gp - gm, hic), hic)
+    g_target = _w_to_g(w, hic)
+
+    # RESET both devices of the selected pairs ...
+    arr_p = pcm_model.reset(st.pcm_p, t_now, need)
+    arr_m = pcm_model.reset(st.pcm_m, t_now, need)
+    # ... and reprogram the difference into the appropriate device.
+    arr_p = pcm_model.program_increment(
+        arr_p, jnp.where(need, jnp.maximum(g_target, 0.0), 0.0), t_now,
+        k_wr_p, pcm, hic.max_pulses)
+    arr_m = pcm_model.program_increment(
+        arr_m, jnp.where(need, jnp.maximum(-g_target, 0.0), 0.0), t_now,
+        k_wr_m, pcm, hic.max_pulses)
+
+    new_st = HicLayerState(pcm_p=arr_p, pcm_m=arr_m, lsb=st.lsb,
+                           lsb_flips=st.lsb_flips, lsb_resets=st.lsb_resets)
+    return new_st, jnp.sum(need).astype(jnp.float32)
+
+
+def inference_model_bits(num_weights: int, hic: HicConfig) -> int:
+    """Inference model size in bits: only the MSB array is needed at
+    inference time (paper Fig. 4's x-axis): ~msb_bits per weight."""
+    return num_weights * hic.msb_bits

@@ -1,0 +1,122 @@
+"""Layer-1 Pallas kernel: the LSB-array update (paper Fig. 2, update phase).
+
+The LSB array is a 7-bit signed fixed-point accumulator per weight, stored
+on seven binary PCM devices.  The digital update circuit:
+
+  1. quantizes the weight gradient to accumulator counts
+     ``delta = round(-lr * dW / lsb_step)``  (done in Layer-2; the kernel
+     receives integer counts so it is exactly checkable),
+  2. adds the counts into the accumulator,
+  3. extracts the **overflow**: the number of whole MSB quanta
+     (+-`half_range` counts) the accumulator moved past, leaving the
+     remainder behind,
+  4. reports per-bit flip activity of the binary devices (endurance).
+
+Overflow uses round-toward-zero semantics so the sign of the residue always
+matches the sign of the pre-overflow sum — matching a two's-complement
+carry-out circuit and the Rust twin (`rust/src/hic/fixedpoint.rs`).
+
+Everything is elementwise, so the kernel tiles trivially; blocks are sized
+to VPU lanes rather than the MXU (no contraction here).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 262144  # elements per grid step (flattened view); large
+# blocks keep the interpret-mode while-loop short (elementwise math is
+# identical under any tiling)
+
+
+def _lsb_kernel(acc_ref, delta_ref, acc_out_ref, ovf_ref, flips_ref, *,
+                half_range: int, nbits: int):
+    acc = acc_ref[...].astype(jnp.int32)
+    delta = delta_ref[...].astype(jnp.int32)
+
+    s = acc + delta
+    # Round-toward-zero division by half_range = arithmetic shift with sign
+    # correction; jnp int division truncates toward zero already.
+    ovf = s // half_range + jnp.where((s % half_range != 0) & (s < 0), 1, 0)
+    res = s - ovf * half_range
+    # res is now in (-half_range, half_range); saturate defensively.
+    res = jnp.clip(res, -half_range, half_range - 1)
+
+    # Per-bit flip count of the two's-complement register (offset-encoded to
+    # u(nbits)): devices whose stored bit changed were rewritten.
+    old_u = (acc + half_range).astype(jnp.uint32)
+    new_u = (res + half_range).astype(jnp.uint32)
+    changed = old_u ^ new_u
+    flips = jnp.zeros_like(acc)
+    resets = jnp.zeros_like(acc)
+    for b in range(nbits):
+        bit = (changed >> b) & 1
+        flips = flips + bit.astype(jnp.int32)
+        # 1 -> 0 transitions are RESET pulses (the WE-cycle commit event).
+        went_low = ((old_u >> b) & 1) & bit
+        resets = resets + went_low.astype(jnp.int32)
+
+    acc_out_ref[...] = res
+    ovf_ref[...] = ovf
+    # One packed word per weight keeps the artifact small: low 16 bits are
+    # total device flips (SET+RESET writes), high bits are RESET events —
+    # the quantity the WE-cycle ledger needs (Tuma et al. definition).
+    flips_ref[...] = flips + (resets << 16)
+
+
+def lsb_update(acc: jnp.ndarray, delta: jnp.ndarray, *, half_range: int,
+               nbits: int,
+               block: int = DEFAULT_BLOCK
+               ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Accumulate integer gradient counts into the LSB array.
+
+    Args:
+      acc:   i32[...] — current accumulator counts in (-half_range, half_range)
+      delta: i32[...] — quantized update counts
+    Returns:
+      (acc', overflow, flip_word) with the same shape:
+        acc'      — residual counts
+        overflow  — whole MSB quanta to program into the MSB array (signed)
+        flip_word — low 16 bits: device flips (SET+RESET); high bits: RESETs
+    """
+    assert acc.shape == delta.shape
+    shape = acc.shape
+    flat = acc.reshape(-1)
+    dflat = delta.reshape(-1)
+    n = flat.shape[0]
+    bs = min(block, _ceil_pow2(n))
+    pad = (-n) % bs
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+        dflat = jnp.pad(dflat, (0, pad))
+    grid = (flat.shape[0] // bs,)
+
+    kernel = functools.partial(_lsb_kernel, half_range=half_range,
+                               nbits=nbits)
+    acc2, ovf, flips = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bs,), lambda i: (i,)),
+                  pl.BlockSpec((bs,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((bs,), lambda i: (i,)),
+                   pl.BlockSpec((bs,), lambda i: (i,)),
+                   pl.BlockSpec((bs,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct(flat.shape, jnp.int32),
+                   jax.ShapeDtypeStruct(flat.shape, jnp.int32),
+                   jax.ShapeDtypeStruct(flat.shape, jnp.int32)],
+        interpret=True,
+    )(flat, dflat)
+    return (acc2[:n].reshape(shape), ovf[:n].reshape(shape),
+            flips[:n].reshape(shape))
+
+
+def _ceil_pow2(v: int) -> int:
+    p = 1
+    while p < v:
+        p <<= 1
+    return p

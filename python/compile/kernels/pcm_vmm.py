@@ -1,0 +1,194 @@
+"""Layer-1 Pallas kernel: the analog crossbar vector-matrix multiply.
+
+One crossbar *tile* is one Pallas grid step.  The mapping from the paper's
+analog array to a TPU-style kernel (DESIGN.md §3, Hardware-Adaptation):
+
+  paper crossbar tile (<=128x128 differential PCM pairs)
+      -> one (bm x bn) MXU-shaped block held in VMEM
+  DAC row drivers streaming quantized activations
+      -> the HBM->VMEM BlockSpec schedule of the `x` operand
+  analog column-current MAC
+      -> `jnp.dot` on the block (MXU systolic array on real TPU)
+  per-read conductance noise (stochastic read, drift applied upstream)
+      -> an f32 noise operand streamed with the same schedule as `w`
+  ADC at each column
+      -> clip + uniform quantization epilogue on the accumulated tile
+
+The kernel is **deterministic**: all stochasticity (read noise) is drawn in
+Layer-2 with an explicit PRNG key and passed in as the `noise` operand.
+This makes the kernel exactly checkable against the pure-jnp oracle in
+`ref.py` (assert_allclose at f32 resolution) and keeps AOT lowering free of
+RNG state.
+
+interpret=True is mandatory on this image: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.  Interpret-mode lowers the
+grid to a `stablehlo.while` loop, so artifact size is O(kernel body), not
+O(grid).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..configs import AdcDacConfig
+
+# Default SIMULATION block sizes.  The *hardware* mapping is one crossbar
+# tile = one 128x128 MXU block (see `TPU_BLOCK` and DESIGN.md
+# §Hardware-Adaptation); but because the kernel is deterministic and the
+# ADC epilogue acts on the fully-accumulated output, tiling granularity
+# does not change the math — only the interpret-mode execution speed.
+# CPU-PJRT runs the grid as a sequential while-loop, so the training
+# artifacts use large blocks (few iterations); the `crossbar_vmm`
+# microbench artifact pins the faithful 128^3 TPU tiling.
+DEFAULT_BLOCK_M = 4096
+DEFAULT_BLOCK_N = 512
+DEFAULT_BLOCK_K = 2048
+
+#: the faithful TPU/crossbar tiling (MXU-native tile edge)
+TPU_BLOCK = (128, 128, 128)
+
+
+def _quantize_uniform(v: jnp.ndarray, bits: int, vmax: float) -> jnp.ndarray:
+    """Mid-rise uniform quantizer over [-vmax, vmax] with 2^bits levels."""
+    levels = (1 << bits) - 1
+    step = 2.0 * vmax / levels
+    v = jnp.clip(v, -vmax, vmax)
+    return jnp.round(v / step) * step
+
+
+def dac_quantize(x: jnp.ndarray, adc: AdcDacConfig) -> jnp.ndarray:
+    """The row DAC: quantize activations/error-gradients to dac_bits."""
+    if not adc.enabled:
+        return x
+    return _quantize_uniform(x, adc.dac_bits, adc.dac_range)
+
+
+def _vmm_kernel(x_ref, w_ref, noise_ref, o_ref, *,
+                n_k: int, adc_bits: int, adc_range: float, adc_enabled: bool):
+    """Grid = (M/bm, N/bn, K/bk); K is the innermost (fastest) dimension and
+    the output block index is independent of k, so the (bm x bn) output tile
+    stays resident in VMEM across the whole K sweep and doubles as the
+    accumulator (the standard Pallas matmul revisiting pattern)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Analog MAC of one crossbar tile + its per-read conductance noise.
+    # Noise enters as an equivalent weight perturbation: x @ (w + eta).
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...] + noise_ref[...],
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        acc = o_ref[...]
+        if adc_enabled:
+            # Column ADC: clip to full-scale range, quantize to adc_bits.
+            levels = (1 << adc_bits) - 1
+            step = 2.0 * adc_range / levels
+            acc = jnp.clip(acc, -adc_range, adc_range)
+            acc = jnp.round(acc / step) * step
+        o_ref[...] = acc
+
+
+def _pad_to(v: jnp.ndarray, m: int, axis: int) -> jnp.ndarray:
+    r = v.shape[axis] % m
+    if r == 0:
+        return v
+    pad = [(0, 0)] * v.ndim
+    pad[axis] = (0, m - r)
+    return jnp.pad(v, pad)
+
+
+def pcm_vmm(x: jnp.ndarray, w: jnp.ndarray, noise: jnp.ndarray,
+            adc: AdcDacConfig,
+            block: Tuple[int, int, int] = (DEFAULT_BLOCK_M,
+                                           DEFAULT_BLOCK_N,
+                                           DEFAULT_BLOCK_K)) -> jnp.ndarray:
+    """Crossbar VMM: ``ADC( DAC(x) @ (w + noise) )``, tiled.
+
+    Args:
+      x:     f32[M, K] — already DAC-quantized activations (see
+             `dac_quantize`; kept outside the kernel so the same quantized
+             values feed the digital outer-product in the update phase,
+             exactly as the architecture shares the DAC output bus).
+      w:     f32[K, N] — effective weights read from the MSB array
+             (drift applied upstream; this operand is the *expected* read).
+      noise: f32[K, N] — per-read stochastic-read perturbation, in weight
+             units (zero when the config disables read noise).
+      adc:   converter geometry; ADC epilogue applied per output element.
+
+    Returns f32[M, N].
+    """
+    assert x.ndim == 2 and w.ndim == 2 and noise.shape == w.shape
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+
+    bm, bn, bk = block
+    bm = min(bm, _ceil_pow2(m))
+    bn = min(bn, _ceil_pow2(n))
+    bk = min(bk, _ceil_pow2(k))
+
+    xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
+    wp = _pad_to(_pad_to(w, bk, 0), bn, 1)
+    np_ = _pad_to(_pad_to(noise, bk, 0), bn, 1)
+    mp, kp = xp.shape
+    _, npad = wp.shape
+    grid = (mp // bm, npad // bn, kp // bk)
+
+    kernel = functools.partial(
+        _vmm_kernel,
+        n_k=grid[2],
+        adc_bits=adc.adc_bits,
+        adc_range=adc.adc_range,
+        adc_enabled=adc.enabled,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, npad), jnp.float32),
+        interpret=True,
+    )(xp, wp, np_)
+    return out[:m, :n]
+
+
+def _ceil_pow2(v: int) -> int:
+    p = 1
+    while p < v:
+        p <<= 1
+    return p
+
+
+def vmem_footprint_bytes(block: Tuple[int, int, int]) -> int:
+    """Estimated VMEM residency of one grid step (perf model, DESIGN §7):
+    x-tile + w-tile + noise-tile + resident output/accumulator tile, f32."""
+    bm, bn, bk = block
+    return 4 * (bm * bk + 2 * bk * bn + bm * bn)
+
+
+def mxu_utilization_estimate(m: int, n: int, k: int,
+                             block: Tuple[int, int, int]) -> float:
+    """Fraction of MXU issue slots doing useful work for an (m,k)x(k,n)
+    problem under this tiling — pure padding accounting (the analytical
+    stand-in for real-TPU profiling; see DESIGN.md §7 L1)."""
+    bm, bn, bk = block
+    bm = min(bm, _ceil_pow2(m)); bn = min(bn, _ceil_pow2(n))
+    bk = min(bk, _ceil_pow2(k))
+    gm = -(-m // bm) * bm
+    gn = -(-n // bn) * bn
+    gk = -(-k // bk) * bk
+    return (m * n * k) / float(gm * gn * gk)

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for the Layer-1 Pallas kernels.
+
+These are the CORE correctness signal of the compile path: the kernels are
+deterministic (all stochasticity enters as operands), so pytest asserts
+*exact / f32-resolution* agreement between each kernel and its oracle over
+hypothesis-style shape/value sweeps (python/tests/test_kernel.py).
+
+The oracles are also what the Rust substrates' golden-vector tests are
+generated from.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from ..configs import AdcDacConfig
+
+
+def quantize_uniform_ref(v: jnp.ndarray, bits: int,
+                         vmax: float) -> jnp.ndarray:
+    levels = (1 << bits) - 1
+    step = 2.0 * vmax / levels
+    return jnp.round(jnp.clip(v, -vmax, vmax) / step) * step
+
+
+def pcm_vmm_ref(x: jnp.ndarray, w: jnp.ndarray, noise: jnp.ndarray,
+                adc: AdcDacConfig) -> jnp.ndarray:
+    """Oracle for kernels.pcm_vmm.pcm_vmm (x already DAC-quantized)."""
+    out = x @ (w + noise)
+    if adc.enabled:
+        out = quantize_uniform_ref(out, adc.adc_bits, adc.adc_range)
+    return out
+
+
+def lsb_update_ref(acc: jnp.ndarray, delta: jnp.ndarray, *, half_range: int,
+                   nbits: int
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Oracle for kernels.lsb_update.lsb_update."""
+    acc = acc.astype(jnp.int32)
+    delta = delta.astype(jnp.int32)
+    s = acc + delta
+    ovf = s // half_range + jnp.where((s % half_range != 0) & (s < 0), 1, 0)
+    res = s - ovf * half_range
+    res = jnp.clip(res, -half_range, half_range - 1)
+
+    old_u = (acc + half_range).astype(jnp.uint32)
+    new_u = (res + half_range).astype(jnp.uint32)
+    changed = old_u ^ new_u
+    flips = jnp.zeros_like(acc)
+    resets = jnp.zeros_like(acc)
+    for b in range(nbits):
+        bit = (changed >> b) & 1
+        flips = flips + bit.astype(jnp.int32)
+        went_low = ((old_u >> b) & 1) & bit
+        resets = resets + went_low.astype(jnp.int32)
+    return res, ovf, flips + (resets << 16)
+
+
+def unpack_flip_word(word: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Split the packed flip word into (total_flips, reset_events)."""
+    return word & 0xFFFF, word >> 16

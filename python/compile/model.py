@@ -1,0 +1,333 @@
+"""Layer-2 entry points lowered by aot.py (build-time only).
+
+Every function here is a pure ``state in -> state out`` JAX program over an
+explicit pytree of device/network state (no Python on the request path).
+The Rust coordinator drives training by calling the lowered artifacts:
+
+  hic_init(key)                                        -> state
+  hic_train_step(state, x, y, key, t_now, lr)          -> state', metrics
+  hic_eval_step(state, x, y, key, t_now)               -> (correct, loss_sum)
+  hic_refresh(state, key, t_now)                       -> state', refreshed
+  hic_adabs(state, x, key, t_now, kth)                 -> state'
+  baseline_init(key)                                   -> bstate
+  baseline_train_step(bstate, x, y, lr)                -> bstate', metrics
+  baseline_eval_step(bstate, x, y)                     -> (correct, loss_sum)
+  crossbar_vmm(x, w, noise)                            -> y   (L1 microbench)
+
+Runtime-schedulable quantities (learning rate, simulated time, PRNG key)
+are *inputs*; everything structural (depth, width, batch size, PCM
+ablation flags) is baked per config by aot.py.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import hic, pcm_model, resnet
+from .configs import ExperimentConfig
+from .kernels.pcm_vmm import TPU_BLOCK, dac_quantize, pcm_vmm
+
+
+# ---------------------------------------------------------------------------
+# HIC state pytree
+# ---------------------------------------------------------------------------
+
+def hic_init_fn(cfg: ExperimentConfig):
+    net, pcm, hcfg = cfg.net, cfg.pcm, cfg.hic
+    specs = resnet.layer_specs(net)
+
+    def init(key: jnp.ndarray) -> Dict:
+        key = _as_key(key)
+        kw, *kls = jax.random.split(key, 1 + len(specs))
+        w0 = resnet.he_init_weights(kw, net)
+        layers = []
+        for k, w in zip(kls, w0):
+            w = jnp.clip(w, -hcfg.w_max, hcfg.w_max)
+            layers.append(_layer_to_dict(hic.init_layer(k, w, 0.0, pcm, hcfg)))
+        bn_params, bn_stats = resnet.init_bn(net)
+        return {"layers": layers, "bn_params": bn_params,
+                "bn_stats": bn_stats}
+
+    return init
+
+
+def _as_key(raw: jnp.ndarray) -> jax.Array:
+    """u32[2] input array -> typed PRNG key."""
+    return jax.random.wrap_key_data(raw.astype(jnp.uint32),
+                                    impl="threefry2x32")
+
+
+def _layer_to_dict(st: hic.HicLayerState) -> Dict:
+    """Nested-dict pytree view (readable leaf names in the manifest)."""
+    return {
+        "pcm_p": st.pcm_p._asdict(),
+        "pcm_m": st.pcm_m._asdict(),
+        "lsb": st.lsb,
+        "lsb_flips": st.lsb_flips,
+        "lsb_resets": st.lsb_resets,
+    }
+
+
+def _layer_states(state: Dict) -> List[hic.HicLayerState]:
+    return [hic.HicLayerState(
+        pcm_p=pcm_model.PcmArrays(**l["pcm_p"]),
+        pcm_m=pcm_model.PcmArrays(**l["pcm_m"]),
+        lsb=l["lsb"], lsb_flips=l["lsb_flips"], lsb_resets=l["lsb_resets"])
+        for l in state["layers"]]
+
+
+def hic_train_step_fn(cfg: ExperimentConfig):
+    net, pcm, hcfg, adc = cfg.net, cfg.pcm, cfg.hic, cfg.adc
+    specs = resnet.layer_specs(net)
+    n_layers = len(specs)
+    momentum = net.bn_momentum
+
+    def train_step(state: Dict, x: jnp.ndarray, y: jnp.ndarray,
+                   key: jnp.ndarray, t_now: jnp.ndarray,
+                   lr: jnp.ndarray):
+        key = _as_key(key)
+        layers = _layer_states(state)
+        k_noise, k_write = jax.random.split(key)
+        nkeys = jax.random.split(k_noise, 2 * n_layers)
+        wkeys = jax.random.split(k_write, n_layers)
+
+        weights = [hic.read_weights(st, t_now, pcm, hcfg) for st in layers]
+        noises = [
+            (hic.sample_read_noise(nkeys[2 * i], w.shape, pcm, hcfg),
+             hic.sample_read_noise(nkeys[2 * i + 1], w.shape, pcm, hcfg))
+            for i, w in enumerate(weights)
+        ]
+
+        def loss_fn(ws, bn_params):
+            logits, moments = resnet.forward(
+                ws, bn_params, state["bn_stats"], x, noises, net, adc,
+                train=True)
+            return resnet.cross_entropy(logits, y), (logits, moments)
+
+        (loss, (logits, moments)), (gw, gbn) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True)(
+                weights, state["bn_params"])
+
+        # --- in-memory HIC update of every crossbar weight ---------------
+        new_layers = []
+        ovf_total = jnp.float32(0.0)
+        for st, dw, wk in zip(layers, gw, wkeys):
+            st2, ovf = hic.apply_update(st, dw, lr, t_now, wk, pcm, hcfg)
+            new_layers.append(_layer_to_dict(st2))
+            ovf_total = ovf_total + ovf
+
+        # --- digital updates: BN parameters (SGD) + running stats --------
+        bn_params = {k: v - lr * gbn[k]
+                     for k, v in state["bn_params"].items()}
+        bn_stats = dict(state["bn_stats"])
+        for name, (mean, var) in moments.items():
+            bn_stats[f"mean_{name}"] = (momentum * bn_stats[f"mean_{name}"]
+                                        + (1 - momentum) * mean)
+            bn_stats[f"var_{name}"] = (momentum * bn_stats[f"var_{name}"]
+                                       + (1 - momentum) * var)
+
+        new_state = {"layers": new_layers, "bn_params": bn_params,
+                     "bn_stats": bn_stats}
+        metrics = {
+            "loss": loss,
+            "acc": resnet.accuracy(logits, y),
+            "overflow_events": ovf_total,
+            "grad_norm": _global_norm(gw),
+        }
+        return new_state, metrics
+
+    return train_step
+
+
+def _global_norm(trees) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(trees)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l)) for l in leaves))
+
+
+def hic_eval_step_fn(cfg: ExperimentConfig):
+    net, pcm, hcfg, adc = cfg.net, cfg.pcm, cfg.hic, cfg.adc
+    n_layers = len(resnet.layer_specs(net))
+
+    def eval_step(state: Dict, x: jnp.ndarray, y: jnp.ndarray,
+                  key: jnp.ndarray, t_now: jnp.ndarray):
+        key = _as_key(key)
+        layers = _layer_states(state)
+        nkeys = jax.random.split(key, 2 * n_layers)
+        weights = [hic.read_weights(st, t_now, pcm, hcfg) for st in layers]
+        noises = [
+            (hic.sample_read_noise(nkeys[2 * i], w.shape, pcm, hcfg),
+             hic.sample_read_noise(nkeys[2 * i + 1], w.shape, pcm, hcfg))
+            for i, w in enumerate(weights)
+        ]
+        logits, _ = resnet.forward(
+            weights, state["bn_params"], state["bn_stats"], x, noises, net,
+            adc, train=False)
+        correct = jnp.sum(
+            (jnp.argmax(logits, axis=-1) == y).astype(jnp.int32))
+        loss_sum = resnet.cross_entropy(logits, y) * x.shape[0]
+        return correct, loss_sum
+
+    return eval_step
+
+
+def hic_refresh_fn(cfg: ExperimentConfig):
+    net, pcm, hcfg = cfg.net, cfg.pcm, cfg.hic
+    n_layers = len(resnet.layer_specs(net))
+
+    def refresh(state: Dict, key: jnp.ndarray, t_now: jnp.ndarray):
+        key = _as_key(key)
+        layers = _layer_states(state)
+        keys = jax.random.split(key, n_layers)
+        new_layers = []
+        refreshed = jnp.float32(0.0)
+        for st, k in zip(layers, keys):
+            st2, n = hic.refresh(st, t_now, k, pcm, hcfg)
+            new_layers.append(_layer_to_dict(st2))
+            refreshed = refreshed + n
+        new_state = {"layers": new_layers, "bn_params": state["bn_params"],
+                     "bn_stats": state["bn_stats"]}
+        return new_state, refreshed
+
+    return refresh
+
+
+def hic_adabs_fn(cfg: ExperimentConfig):
+    """One AdaBS calibration batch (Joshi et al. 2020).
+
+    The coordinator streams K calibration batches (~5 % of the training
+    set); the k-th call folds the drifted-forward batch moments into the
+    running statistics with weight 1/k, so after K calls the stats equal
+    the plain average of the K batch moments.
+    """
+    net, pcm, hcfg, adc = cfg.net, cfg.pcm, cfg.hic, cfg.adc
+    n_layers = len(resnet.layer_specs(net))
+
+    def adabs(state: Dict, x: jnp.ndarray, key: jnp.ndarray,
+              t_now: jnp.ndarray, kth: jnp.ndarray):
+        key = _as_key(key)
+        layers = _layer_states(state)
+        nkeys = jax.random.split(key, 2 * n_layers)
+        weights = [hic.read_weights(st, t_now, pcm, hcfg) for st in layers]
+        noises = [
+            (hic.sample_read_noise(nkeys[2 * i], w.shape, pcm, hcfg),
+             hic.sample_read_noise(nkeys[2 * i + 1], w.shape, pcm, hcfg))
+            for i, w in enumerate(weights)
+        ]
+        _, moments = resnet.forward(
+            weights, state["bn_params"], state["bn_stats"], x, noises, net,
+            adc, train=True)
+        w_new = 1.0 / jnp.maximum(kth, 1.0)
+        bn_stats = dict(state["bn_stats"])
+        for name, (mean, var) in moments.items():
+            bn_stats[f"mean_{name}"] = ((1 - w_new)
+                                        * bn_stats[f"mean_{name}"]
+                                        + w_new * mean)
+            bn_stats[f"var_{name}"] = ((1 - w_new) * bn_stats[f"var_{name}"]
+                                       + w_new * var)
+        return {"layers": state["layers"], "bn_params": state["bn_params"],
+                "bn_stats": bn_stats}
+
+    return adabs
+
+
+# ---------------------------------------------------------------------------
+# FP32 software baseline (SGD + momentum + weight decay, exact matmuls)
+# ---------------------------------------------------------------------------
+
+def baseline_init_fn(cfg: ExperimentConfig):
+    net = cfg.net
+
+    def init(key: jnp.ndarray) -> Dict:
+        key = _as_key(key)
+        w = resnet.he_init_weights(key, net)
+        bn_params, bn_stats = resnet.init_bn(net)
+        return {
+            "weights": w,
+            "vel": [jnp.zeros_like(x) for x in w],
+            "bn_params": bn_params,
+            "bn_vel": {k: jnp.zeros_like(v) for k, v in bn_params.items()},
+            "bn_stats": bn_stats,
+        }
+
+    return init
+
+
+def baseline_train_step_fn(cfg: ExperimentConfig):
+    net, adc, tr = cfg.net, cfg.adc, cfg.train
+    mu, wd = tr.base_momentum, tr.base_weight_decay
+    momentum = net.bn_momentum
+
+    def train_step(state: Dict, x: jnp.ndarray, y: jnp.ndarray,
+                   lr: jnp.ndarray):
+        def loss_fn(ws, bn_params):
+            logits, moments = resnet.forward(
+                ws, bn_params, state["bn_stats"], x, None, net, adc,
+                train=True, matmul_fn=resnet.exact_matmul)
+            return resnet.cross_entropy(logits, y), (logits, moments)
+
+        (loss, (logits, moments)), (gw, gbn) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True)(
+                state["weights"], state["bn_params"])
+
+        new_w, new_v = [], []
+        for w, v, g in zip(state["weights"], state["vel"], gw):
+            g = g + wd * w
+            v = mu * v + g
+            new_v.append(v)
+            new_w.append(w - lr * v)
+
+        bn_params, bn_vel = {}, {}
+        for k, p in state["bn_params"].items():
+            g = gbn[k]
+            v = mu * state["bn_vel"][k] + g
+            bn_vel[k] = v
+            bn_params[k] = p - lr * v
+
+        bn_stats = dict(state["bn_stats"])
+        for name, (mean, var) in moments.items():
+            bn_stats[f"mean_{name}"] = (momentum * bn_stats[f"mean_{name}"]
+                                        + (1 - momentum) * mean)
+            bn_stats[f"var_{name}"] = (momentum * bn_stats[f"var_{name}"]
+                                       + (1 - momentum) * var)
+
+        new_state = {"weights": new_w, "vel": new_v, "bn_params": bn_params,
+                     "bn_vel": bn_vel, "bn_stats": bn_stats}
+        metrics = {"loss": loss, "acc": resnet.accuracy(logits, y)}
+        return new_state, metrics
+
+    return train_step
+
+
+def baseline_eval_step_fn(cfg: ExperimentConfig):
+    net, adc = cfg.net, cfg.adc
+
+    def eval_step(state: Dict, x: jnp.ndarray, y: jnp.ndarray):
+        logits, _ = resnet.forward(
+            state["weights"], state["bn_params"], state["bn_stats"], x,
+            None, net, adc, train=False, matmul_fn=resnet.exact_matmul)
+        correct = jnp.sum(
+            (jnp.argmax(logits, axis=-1) == y).astype(jnp.int32))
+        loss_sum = resnet.cross_entropy(logits, y) * x.shape[0]
+        return correct, loss_sum
+
+    return eval_step
+
+
+# ---------------------------------------------------------------------------
+# Standalone L1 microbench artifact
+# ---------------------------------------------------------------------------
+
+def crossbar_vmm_fn(cfg: ExperimentConfig):
+    adc = cfg.adc
+
+    def vmm(x: jnp.ndarray, w: jnp.ndarray, noise: jnp.ndarray):
+        # Faithful crossbar/MXU tiling (128^3) — this artifact is the
+        # L1 perf/cross-validation target, not a simulation shortcut.
+        return (pcm_vmm(dac_quantize(x, adc), w, noise, adc,
+                        block=TPU_BLOCK),)
+
+    return vmm

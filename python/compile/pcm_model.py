@@ -1,0 +1,195 @@
+"""Statistical PCM device model (JAX, build-time only).
+
+Functional re-implementation of the phase-change-memory model of
+Nandakumar et al., *J. Appl. Phys.* 2018 ("A phase-change memory model for
+neuromorphic computing"), as used by the HIC paper.  Four non-idealities,
+each independently switchable (FIG3 ablation):
+
+1. **Nonlinear programming curve** — the expected conductance increment of
+   the n-th SET pulse decays as an inverse function of the accumulated
+   pulse count: ``dG(n) = dg0 / (1 + n / n0)``.  The *linear* ablation uses
+   a constant ``dg0``.
+2. **Stochastic write** — every programming event adds Gaussian noise with
+   std-dev proportional to the applied increment.
+3. **Stochastic read** — every read adds zero-mean Gaussian noise
+   (instantaneous 1/f + thermal noise lump).
+4. **Conductance drift** — ``G(t) = G_prog * ((t - t_prog)/t0)^(-nu)`` with
+   a per-device drift exponent ``nu ~ N(nu_mean, nu_sigma)``.
+
+All conductances are normalized to [0, 1] == [0, G_max].  The model is
+*pulse-aggregated*: a programming event that would take ``n`` SET pulses on
+silicon is applied as one vectorized update whose expected increment equals
+the sum of the per-pulse increments.  The Rust substrate
+(``rust/src/pcm/device.rs``) implements the true pulse-by-pulse process and
+the test suite cross-validates the aggregate statistics.
+
+Everything here is pure-functional: device state arrays in, device state
+arrays out, with explicit PRNG keys — mandatory for AOT lowering.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import PcmConfig
+
+
+class PcmArrays(NamedTuple):
+    """Per-device state of one multi-level PCM array (any shape)."""
+
+    g: jnp.ndarray        # f32 — programmed conductance (at t_prog, no drift)
+    pulses: jnp.ndarray   # f32 — SET pulses accumulated since last RESET
+    t_prog: jnp.ndarray   # f32 — time of last programming event (s)
+    nu: jnp.ndarray       # f32 — per-device drift exponent
+    set_count: jnp.ndarray    # i32 — lifetime SET pulse count (endurance)
+    reset_count: jnp.ndarray  # i32 — lifetime RESET pulse count (endurance)
+
+
+def init_arrays(key: jax.Array, shape: Tuple[int, ...],
+                cfg: PcmConfig) -> PcmArrays:
+    """Fresh (RESET) devices with per-device drift exponents."""
+    nu = cfg.drift_nu + cfg.drift_nu_sigma * jax.random.normal(key, shape)
+    nu = jnp.clip(nu, 0.0, 0.12)
+    zf = jnp.zeros(shape, jnp.float32)
+    zi = jnp.zeros(shape, jnp.int32)
+    return PcmArrays(g=zf, pulses=zf, t_prog=zf, nu=nu,
+                     set_count=zi, reset_count=zi)
+
+
+# ---------------------------------------------------------------------------
+# Programming (SET) — increment-only, like the hardware
+# ---------------------------------------------------------------------------
+
+def expected_increment(pulses: jnp.ndarray, n_new: jnp.ndarray,
+                       cfg: PcmConfig) -> jnp.ndarray:
+    """Expected total conductance gain of ``n_new`` SET pulses applied to a
+    device that has already received ``pulses`` pulses since RESET.
+
+    Nonlinear curve: sum_{i=0}^{n-1} dg0/(1 + (p+i)/n0)
+      ~= dg0 * n0 * log((n0 + p + n) / (n0 + p))   (continuous aggregate)
+    Linear curve:    dg0 * n
+    """
+    if cfg.nonlinear:
+        return cfg.dg0 * cfg.n0 * jnp.log(
+            (cfg.n0 + pulses + n_new) / (cfg.n0 + pulses))
+    return cfg.dg0 * n_new
+
+
+def pulses_for_target(pulses: jnp.ndarray, dg_target: jnp.ndarray,
+                      cfg: PcmConfig, max_pulses: int) -> jnp.ndarray:
+    """Number of SET pulses the (digital) write circuit schedules to move the
+    conductance by ``dg_target`` >= 0, given the device's pulse history.
+
+    The write circuit knows the *expected* curve (it was characterized), so
+    it inverts the aggregate expression; stochasticity makes the realized
+    increment differ.
+    """
+    if cfg.nonlinear:
+        n = (cfg.n0 + pulses) * (jnp.exp(dg_target / (cfg.dg0 * cfg.n0)) - 1.0)
+    else:
+        n = dg_target / cfg.dg0
+    n = jnp.ceil(n)
+    return jnp.clip(jnp.where(dg_target > 0, jnp.maximum(n, 1.0), 0.0),
+                    0.0, float(max_pulses))
+
+
+def program_increment(arr: PcmArrays, dg_target: jnp.ndarray, t_now,
+                      key: jax.Array, cfg: PcmConfig,
+                      max_pulses: int) -> PcmArrays:
+    """Apply an increment-only programming event towards ``dg_target >= 0``.
+
+    Elements with ``dg_target == 0`` are untouched (no pulse, no noise, no
+    t_prog update — their drift reference is preserved).
+    """
+    n = pulses_for_target(arr.pulses, dg_target, cfg, max_pulses)
+    active = n > 0
+    dg_mean = expected_increment(arr.pulses, n, cfg)
+    if cfg.write_noise:
+        noise = jax.random.normal(key, arr.g.shape)
+        dg = dg_mean + cfg.write_sigma * dg_mean * noise
+    else:
+        dg = dg_mean
+    dg = jnp.maximum(dg, 0.0)
+    g_new = jnp.clip(arr.g + dg, 0.0, 1.0)
+    t_now = jnp.asarray(t_now, jnp.float32)
+    return PcmArrays(
+        g=jnp.where(active, g_new, arr.g),
+        pulses=arr.pulses + n,
+        t_prog=jnp.where(active, t_now, arr.t_prog),
+        nu=arr.nu,
+        set_count=arr.set_count + n.astype(jnp.int32),
+        reset_count=arr.reset_count,
+    )
+
+
+def reset(arr: PcmArrays, t_now, mask: jnp.ndarray) -> PcmArrays:
+    """RESET the masked devices to the low-conductance state.
+
+    Counts one RESET pulse per masked device — the endurance ledger's
+    write–erase cycle accounting (Tuma et al.: a WE cycle is <=10 SETs
+    followed by a RESET) is derived from (set_count, reset_count) by the
+    Rust `pcm::endurance` module.
+    """
+    t_now = jnp.asarray(t_now, jnp.float32)
+    return PcmArrays(
+        g=jnp.where(mask, 0.0, arr.g),
+        pulses=jnp.where(mask, 0.0, arr.pulses),
+        t_prog=jnp.where(mask, t_now, arr.t_prog),
+        nu=arr.nu,
+        set_count=arr.set_count,
+        reset_count=arr.reset_count + mask.astype(jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Reading
+# ---------------------------------------------------------------------------
+
+def drifted_conductance(arr: PcmArrays, t_now, cfg: PcmConfig) -> jnp.ndarray:
+    """Conductance at time ``t_now`` including temporal drift (no read noise)."""
+    if not cfg.drift:
+        return arr.g
+    t_now = jnp.asarray(t_now, jnp.float32)
+    elapsed = jnp.maximum(t_now - arr.t_prog, cfg.drift_t0)
+    return arr.g * jnp.power(elapsed / cfg.drift_t0, -arr.nu)
+
+
+def read(arr: PcmArrays, t_now, key: jax.Array, cfg: PcmConfig) -> jnp.ndarray:
+    """One stochastic read of the whole array at time ``t_now``."""
+    g = drifted_conductance(arr, t_now, cfg)
+    if cfg.read_noise:
+        g = g + cfg.read_sigma * jax.random.normal(key, g.shape)
+    return jnp.clip(g, 0.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Binary devices (LSB array)
+# ---------------------------------------------------------------------------
+
+def binary_write_levels(key: jax.Array, bits: jnp.ndarray,
+                        cfg: PcmConfig) -> jnp.ndarray:
+    """Analog conductance realized when writing the given {0,1} bits.
+
+    SET states land at 1.0 + noise, RESET states at ~0.  Only used by the
+    (test-time) analog view of the LSB array — the training path models the
+    LSB array digitally because thresholded binary reads are exact until
+    drift pushes a SET state below threshold, which at nu<=0.12 over a year
+    stays > 0.35 of range (see python/tests/test_pcm_model.py).
+    """
+    noise = jax.random.normal(key, bits.shape)
+    high = jnp.clip(1.0 + cfg.binary_write_sigma * noise, 0.0, 1.2)
+    return jnp.where(bits > 0, high, 0.0)
+
+
+def binary_read(levels: jnp.ndarray, t_prog: jnp.ndarray, nu: jnp.ndarray,
+                t_now, key: jax.Array, cfg: PcmConfig) -> jnp.ndarray:
+    """Thresholded read of binary devices under drift + read noise."""
+    t_now = jnp.asarray(t_now, jnp.float32)
+    elapsed = jnp.maximum(t_now - t_prog, cfg.drift_t0)
+    g = levels * jnp.power(elapsed / cfg.drift_t0, -nu)
+    if cfg.read_noise:
+        g = g + cfg.read_sigma * jax.random.normal(key, g.shape)
+    return (g > cfg.binary_threshold).astype(jnp.int32)

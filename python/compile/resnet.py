@@ -1,0 +1,287 @@
+"""CIFAR-style ResNet family (He et al. 2015 §4.2) on crossbar VMMs.
+
+Depth = 6n+2: one 3x3 stem conv, three stages of n basic blocks at widths
+(16, 32, 64) x width_mult, strided at stage entry, identity (option-A,
+parameter-free) shortcuts, global average pool, one FC classifier.
+ResNet-8 -> n=1 (paper experiments scaled); ResNet-32 -> n=5 (paper
+configuration, accepted unchanged).
+
+Every conv/FC weight is crossbar-mapped: convs run as im2col x
+`crossbar_matmul` (the custom-VJP wrapper around the Layer-1 Pallas VMM
+kernel), which gives the paper's semantics on both passes:
+
+  forward : y  = ADC( DAC(x_col) @ (W_eff + read-noise_f) )
+  backward: dx = ADC( DAC(dy)    @ (W_eff + read-noise_b)^T ) (transposed
+            crossbar read with *independent* read noise), and
+            dW = DAC(x_col)^T @ dy computed digitally (the outer-product
+            unit of Fig. 2) — exact, fed to the LSB accumulator.
+
+BatchNorm runs digitally (paper: all non-VMM ops in CMOS); its running
+statistics are explicit state so the coordinator's AdaBS pass can
+recalibrate them (Fig. 5).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import AdcDacConfig, NetConfig
+from .kernels.pcm_vmm import dac_quantize, pcm_vmm
+from .kernels.ref import quantize_uniform_ref
+
+
+# ---------------------------------------------------------------------------
+# Crossbar matmul with the paper's backward semantics
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def crossbar_matmul(x, w, noise_f, noise_b, adc: AdcDacConfig):
+    """``ADC(DAC(x) @ (w + noise_f))`` with transposed-crossbar backward."""
+    return pcm_vmm(dac_quantize(x, adc), w, noise_f, adc)
+
+
+def _cbm_fwd(x, w, noise_f, noise_b, adc: AdcDacConfig):
+    xq = dac_quantize(x, adc)
+    y = pcm_vmm(xq, w, noise_f, adc)
+    return y, (xq, w, noise_b)
+
+
+def _cbm_bwd(adc: AdcDacConfig, res, dy):
+    xq, w, noise_b = res
+    # Backpropagation VMM on the transposed crossbar.  Error gradients are
+    # dynamically range-scaled before the 8-bit DAC (standard practice for
+    # mixed-signal training periphery) so quantization tracks their decaying
+    # magnitude across training.
+    scale = jnp.maximum(jnp.max(jnp.abs(dy)), 1e-12)
+    if adc.enabled:
+        dyq = quantize_uniform_ref(dy / scale, adc.dac_bits, 1.0)
+    else:
+        dyq = dy / scale
+    dx = pcm_vmm(dyq, w.T, noise_b.T, adc) * scale
+    # Digital outer-product unit: exact gradient w.r.t. the crossbar weights.
+    dw = xq.T @ dy
+    return dx, dw, None, None
+
+
+crossbar_matmul.defvjp(_cbm_fwd, _cbm_bwd)
+
+
+def exact_matmul(x, w, noise_f, noise_b, adc):
+    """FP32 baseline path — plain matmul, signature-compatible."""
+    return x @ w
+
+
+# ---------------------------------------------------------------------------
+# Layer shapes
+# ---------------------------------------------------------------------------
+
+class ConvSpec(NamedTuple):
+    name: str
+    kh: int
+    kw: int
+    cin: int
+    cout: int
+    stride: int
+
+    @property
+    def k_dim(self) -> int:
+        return self.kh * self.kw * self.cin
+
+    @property
+    def weight_shape(self) -> Tuple[int, int]:
+        """Crossbar-mapped 2-D shape [K, N]."""
+        return (self.k_dim, self.cout)
+
+    @property
+    def num_weights(self) -> int:
+        return self.k_dim * self.cout
+
+
+def layer_specs(net: NetConfig) -> List[ConvSpec]:
+    """All crossbar-mapped weight tensors of the network, in forward order.
+
+    The final FC classifier is included as a 1x1 'conv' over the pooled
+    feature vector — on hardware it is simply one more crossbar.
+    """
+    w1, w2, w3 = net.stage_widths
+    n = net.blocks_per_stage
+    specs: List[ConvSpec] = [
+        ConvSpec("stem", 3, 3, net.image_channels, w1, 1)]
+    cin = w1
+    for si, cout in enumerate((w1, w2, w3)):
+        for bi in range(n):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            specs.append(ConvSpec(f"s{si}b{bi}c1", 3, 3, cin, cout, stride))
+            specs.append(ConvSpec(f"s{si}b{bi}c2", 3, 3, cout, cout, 1))
+            cin = cout
+    specs.append(ConvSpec("fc", 1, 1, w3, net.num_classes, 1))
+    return specs
+
+
+def bn_channels(net: NetConfig) -> List[Tuple[str, int]]:
+    """(name, channels) of every BatchNorm, aligned with layer_specs()[:-1]
+    (each conv is followed by a BN; the FC classifier has none)."""
+    return [(s.name, s.cout) for s in layer_specs(net)[:-1]]
+
+
+def num_weights(net: NetConfig) -> int:
+    return sum(s.num_weights for s in layer_specs(net))
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def _im2col(x: jnp.ndarray, spec: ConvSpec) -> Tuple[jnp.ndarray,
+                                                     Tuple[int, int, int]]:
+    """NHWC -> [B*OH*OW, kh*kw*cin] patches (SAME padding)."""
+    b = x.shape[0]
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(spec.kh, spec.kw),
+        window_strides=(spec.stride, spec.stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    _, oh, ow, kdim = patches.shape
+    assert kdim == spec.k_dim, (patches.shape, spec)
+    return patches.reshape(b * oh * ow, kdim), (b, oh, ow)
+
+
+def conv(x: jnp.ndarray, w2d: jnp.ndarray, spec: ConvSpec,
+         noise_f: jnp.ndarray, noise_b: jnp.ndarray, adc: AdcDacConfig,
+         matmul_fn) -> jnp.ndarray:
+    cols, (b, oh, ow) = _im2col(x, spec)
+    y = matmul_fn(cols, w2d, noise_f, noise_b, adc)
+    return y.reshape(b, oh, ow, spec.cout)
+
+
+def batch_norm(x: jnp.ndarray, gamma, beta, mean, var, *, eps: float = 1e-5):
+    inv = jax.lax.rsqrt(var + eps)
+    return (x - mean) * inv * gamma + beta
+
+
+def batch_moments(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-channel moments over (B, H, W) of an NHWC tensor."""
+    mean = jnp.mean(x, axis=(0, 1, 2))
+    var = jnp.var(x, axis=(0, 1, 2))
+    return mean, var
+
+
+def _shortcut(x: jnp.ndarray, cout: int, stride: int) -> jnp.ndarray:
+    """Option-A identity shortcut: stride subsample + zero-pad channels."""
+    if stride != 1:
+        x = x[:, ::stride, ::stride, :]
+    cin = x.shape[-1]
+    if cin < cout:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, cout - cin)))
+    elif cin > cout:  # width multipliers can round stages non-monotonically
+        x = x[..., :cout]
+    return x
+
+
+def forward(weights: List[jnp.ndarray], bn_params: Dict[str, jnp.ndarray],
+            bn_stats: Dict[str, jnp.ndarray], x: jnp.ndarray,
+            noises: Optional[List[Tuple[jnp.ndarray, jnp.ndarray]]],
+            net: NetConfig, adc: AdcDacConfig, *, train: bool,
+            matmul_fn=crossbar_matmul):
+    """Run the network.
+
+    Args:
+      weights:  effective 2-D crossbar weights, order of `layer_specs`.
+      bn_params: {'gamma_<name>', 'beta_<name>'} digital parameters.
+      bn_stats:  {'mean_<name>', 'var_<name>'} running statistics.
+      noises:    per layer (noise_f, noise_b) read-noise operands
+                 (None -> zeros, e.g. for the FP32 baseline).
+      train:     True -> normalize with batch moments and return them.
+
+    Returns (logits, new_batch_moments) where new_batch_moments maps
+    '<name>' -> (mean, var) (empty dict when train=False).
+    """
+    specs = layer_specs(net)
+    moments: Dict[str, Tuple[jnp.ndarray, jnp.ndarray]] = {}
+
+    def zeros_like_w(w):
+        return jnp.zeros_like(w)
+
+    def layer_noise(i, w):
+        if noises is None:
+            return zeros_like_w(w), zeros_like_w(w)
+        return noises[i]
+
+    def bn_apply(h, name):
+        gamma = bn_params[f"gamma_{name}"]
+        beta = bn_params[f"beta_{name}"]
+        if train:
+            mean, var = batch_moments(h)
+            moments[name] = (mean, var)
+        else:
+            mean = bn_stats[f"mean_{name}"]
+            var = bn_stats[f"var_{name}"]
+        return batch_norm(h, gamma, beta, mean, var)
+
+    # Stem
+    nf, nb = layer_noise(0, weights[0])
+    h = conv(x, weights[0], specs[0], nf, nb, adc, matmul_fn)
+    h = jax.nn.relu(bn_apply(h, "stem"))
+
+    # Residual stages
+    li = 1
+    for si in range(3):
+        for bi in range(net.blocks_per_stage):
+            s1, s2 = specs[li], specs[li + 1]
+            idn = _shortcut(h, s2.cout, s1.stride)
+            nf, nb = layer_noise(li, weights[li])
+            y = conv(h, weights[li], s1, nf, nb, adc, matmul_fn)
+            y = jax.nn.relu(bn_apply(y, s1.name))
+            nf, nb = layer_noise(li + 1, weights[li + 1])
+            y = conv(y, weights[li + 1], s2, nf, nb, adc, matmul_fn)
+            y = bn_apply(y, s2.name)
+            h = jax.nn.relu(y + idn)
+            li += 2
+
+    # Head: global average pool + FC crossbar
+    pooled = jnp.mean(h, axis=(1, 2))  # [B, w3]
+    fc_spec = specs[-1]
+    nf, nb = layer_noise(len(specs) - 1, weights[-1])
+    logits = matmul_fn(pooled, weights[-1], nf, nb, adc)
+    assert logits.shape[-1] == net.num_classes, (logits.shape, fc_spec)
+    return logits, moments
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def accuracy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels)
+                    .astype(jnp.float32))
+
+
+def he_init_weights(key: jax.Array, net: NetConfig,
+                    scale: float = 1.0) -> List[jnp.ndarray]:
+    """Kaiming-normal init for every crossbar weight (2-D [K, N] layout)."""
+    specs = layer_specs(net)
+    keys = jax.random.split(key, len(specs))
+    out = []
+    for k, s in zip(keys, specs):
+        std = scale * (2.0 / s.k_dim) ** 0.5
+        out.append(std * jax.random.normal(k, s.weight_shape))
+    return out
+
+
+def init_bn(net: NetConfig) -> Tuple[Dict[str, jnp.ndarray],
+                                     Dict[str, jnp.ndarray]]:
+    params: Dict[str, jnp.ndarray] = {}
+    stats: Dict[str, jnp.ndarray] = {}
+    for name, c in bn_channels(net):
+        params[f"gamma_{name}"] = jnp.ones((c,), jnp.float32)
+        params[f"beta_{name}"] = jnp.zeros((c,), jnp.float32)
+        stats[f"mean_{name}"] = jnp.zeros((c,), jnp.float32)
+        stats[f"var_{name}"] = jnp.ones((c,), jnp.float32)
+    return params, stats

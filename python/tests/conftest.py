@@ -1,0 +1,44 @@
+"""Shared pytest fixtures for the compile-path test suite."""
+
+import os
+import sys
+
+# Make `compile.*` importable when pytest runs from python/ or repo root.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+import pytest
+
+from compile.configs import (AdcDacConfig, ExperimentConfig, HicConfig,
+                             NetConfig, PcmConfig, TrainConfig)
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg() -> ExperimentConfig:
+    """A minimal config for fast model-level tests."""
+    return ExperimentConfig(
+        name="pytest_tiny",
+        net=NetConfig(depth=8, width_mult=0.25),
+        train=TrainConfig(batch_size=4),
+        with_baseline=True,
+    )
+
+
+@pytest.fixture(scope="session")
+def adc() -> AdcDacConfig:
+    return AdcDacConfig()
+
+
+@pytest.fixture(scope="session")
+def pcm() -> PcmConfig:
+    return PcmConfig()
+
+
+@pytest.fixture(scope="session")
+def hic_cfg() -> HicConfig:
+    return HicConfig()
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)

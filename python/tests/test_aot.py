@@ -1,0 +1,97 @@
+"""AOT pipeline tests: lowering, manifest contract, HLO text properties."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, resnet
+from compile.configs import SET_GROUPS, all_configs
+
+
+def test_all_configs_wellformed():
+    cfgs = all_configs()
+    assert "core" in cfgs and "tiny" in cfgs
+    # FIG3: exactly the 8 ablation variants
+    fig3 = [n for n in cfgs if n.startswith("fig3_")]
+    assert len(fig3) == 8
+    # every set group references real configs
+    for group, names in SET_GROUPS.items():
+        for n in names:
+            assert n in cfgs, f"{group} references unknown config {n}"
+
+
+def test_fig3_ablation_flags():
+    cfgs = all_configs()
+    lin = cfgs["fig3_linear"].pcm
+    assert not (lin.nonlinear or lin.write_noise or lin.read_noise
+                or lin.drift)
+    full = cfgs["fig3_full"].pcm
+    assert full.nonlinear and full.write_noise and full.read_noise \
+        and full.drift
+    drift = cfgs["fig3_linear_drift"].pcm
+    assert drift.drift and not drift.nonlinear and not drift.write_noise
+
+
+def test_entry_manifest_contract(tiny_cfg):
+    """Lower the two init entries and check the manifest invariants the
+    Rust runtime relies on (state-first ordering, span arithmetic)."""
+    entries = {e.name: e for e in aot.build_entries(tiny_cfg)}
+    assert {"hic_init", "hic_train_step", "hic_eval_step", "hic_refresh",
+            "hic_adabs", "crossbar_vmm", "baseline_init",
+            "baseline_train_step", "baseline_eval_step"} \
+        <= set(entries.keys())
+
+    _, sig = entries["hic_train_step"].lower()
+    s, l = sig["state_input_span"]
+    assert s == 0 and l > 0
+    so, lo = sig["state_output_span"]
+    assert so == 0 and lo == l
+    # state leaves come first and carry the 'state/' prefix
+    assert all(i["name"].startswith("state/")
+               for i in sig["inputs"][:l])
+    extra = [i["name"] for i in sig["inputs"][l:]]
+    assert extra == ["x", "y", "key", "t_now", "lr"]
+    # outputs: state' first (same count), then sorted metrics
+    metrics = [o["name"] for o in sig["outputs"][lo:]]
+    assert metrics == ["1/acc", "1/grad_norm", "1/loss",
+                       "1/overflow_events"]
+    # input state leaf order == output state leaf order (suffix match)
+    in_names = [i["name"].split("state/")[1] for i in sig["inputs"][:l]]
+    out_names = [o["name"].split("/", 1)[1] for o in sig["outputs"][:lo]]
+    assert in_names == out_names
+
+
+def test_hlo_text_is_loadable_format(tiny_cfg, tmp_path):
+    """The emitted text must be XLA HLO (not StableHLO MLIR), tuple-rooted."""
+    entries = {e.name: e for e in aot.build_entries(tiny_cfg)}
+    text, sig = entries["crossbar_vmm"].lower()
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # return_tuple=True: root is a tuple
+    assert "tuple(" in text.replace(") ", "(") or "(f32[" in text
+    assert len(sig["inputs"]) == 3
+
+
+def test_lower_config_writes_artifacts(tmp_path, tiny_cfg, monkeypatch):
+    import dataclasses
+    cfg = dataclasses.replace(tiny_cfg, name="pytest_lower",
+                              with_baseline=False)
+    aot.lower_config(cfg, str(tmp_path))
+    out = tmp_path / "pytest_lower"
+    man = json.loads((out / "manifest.json").read_text())
+    assert man["config"]["name"] == "pytest_lower"
+    assert man["num_weights"] == resnet.num_weights(cfg.net)
+    for name, e in man["entries"].items():
+        assert (out / e["file"]).exists(), name
+        assert e["file"].endswith(".hlo.txt")
+    # idempotence: second call is a no-op (stamp check)
+    stamp = (out / ".stamp").read_text()
+    aot.lower_config(cfg, str(tmp_path))
+    assert (out / ".stamp").read_text() == stamp
+
+
+def test_source_fingerprint_stable():
+    assert aot._source_fingerprint() == aot._source_fingerprint()

@@ -1,0 +1,130 @@
+"""HIC weight-representation invariants (python/compile/hic.py)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import hic, pcm_model
+from compile.configs import HicConfig, PcmConfig
+
+
+def ideal_pcm() -> PcmConfig:
+    return dataclasses.replace(PcmConfig(), nonlinear=False,
+                               write_noise=False, read_noise=False,
+                               drift=False)
+
+
+def det_hic() -> HicConfig:
+    return dataclasses.replace(HicConfig(), stochastic_rounding=False)
+
+
+def test_geometry_constants(hic_cfg):
+    assert hic_cfg.msb_levels == 15
+    assert abs(hic_cfg.msb_step - 2.0 / 15.0) < 1e-9
+    assert hic_cfg.lsb_half_range == 64
+    assert abs(hic_cfg.lsb_step - hic_cfg.msb_step / 64) < 1e-12
+
+
+def test_init_and_read_roundtrip(key):
+    p, h = ideal_pcm(), det_hic()
+    w0 = jnp.array([[0.4, -0.6], [0.0, 0.9]])
+    st = hic.init_layer(key, w0, 0.0, p, h)
+    w = hic.read_weights(st, 0.0, p, h)
+    # ideal linear device quantizes to ~0.125-weight pulse granularity
+    np.testing.assert_allclose(np.asarray(w), np.asarray(w0), atol=0.13)
+
+
+def test_quantize_msb_grid(hic_cfg):
+    w = jnp.linspace(-1.5, 1.5, 31)
+    q = hic.quantize_msb(w, hic_cfg)
+    assert float(jnp.max(q)) <= hic_cfg.w_max
+    assert float(jnp.min(q)) >= -hic_cfg.w_max
+    # on-grid: q / step integral
+    k = np.asarray(q) / hic_cfg.msb_step
+    np.testing.assert_allclose(k, np.round(k), atol=1e-4)
+
+
+def test_apply_update_accumulates_without_msb(key):
+    """Sub-quantum updates must live entirely in the LSB array."""
+    p, h = ideal_pcm(), det_hic()
+    st = hic.init_layer(key, jnp.zeros((2, 2)), 0.0, p, h)
+    sets0 = st.pcm_p.set_count
+    dw = jnp.full((2, 2), 0.01)  # small gradient: ~2 LSB counts at lr 0.5
+    st2, ovf = hic.apply_update(st, dw, 0.5, 1.0, key, p, h)
+    assert float(ovf) == 0.0
+    np.testing.assert_array_equal(np.asarray(st2.pcm_p.set_count),
+                                  np.asarray(sets0))
+    assert int(jnp.sum(jnp.abs(st2.lsb))) > 0
+
+
+def test_apply_update_overflow_programs_msb(key):
+    p, h = ideal_pcm(), det_hic()
+    st = hic.init_layer(key, jnp.zeros((1, 1)), 0.0, p, h)
+    # one huge negative gradient -> positive update > 1 quantum
+    dw = jnp.full((1, 1), -1.0)
+    st2, ovf = hic.apply_update(st, dw, h.msb_step * 1.5, 1.0, key, p, h)
+    assert float(ovf) >= 1.0
+    assert int(st2.pcm_p.set_count[0, 0]) > 0
+    assert int(st2.pcm_m.set_count[0, 0]) == 0
+    w = hic.read_weights(st2, 1.0, p, h)
+    assert float(w[0, 0]) > 0.0
+
+
+def test_update_sign_symmetry(key):
+    p, h = ideal_pcm(), det_hic()
+    st = hic.init_layer(key, jnp.zeros((1, 1)), 0.0, p, h)
+    st_pos, _ = hic.apply_update(
+        st, jnp.full((1, 1), -1.0), 0.2, 1.0, key, p, h)
+    st_neg, _ = hic.apply_update(
+        st, jnp.full((1, 1), 1.0), 0.2, 1.0, key, p, h)
+    assert int(st_pos.lsb[0, 0]) == -int(st_neg.lsb[0, 0])
+
+
+def test_refresh_preserves_weights_and_resets_saturation(key):
+    p, h = ideal_pcm(), det_hic()
+    st = hic.init_layer(key, jnp.zeros((1, 2)), 0.0, p, h)
+    # Drive device 0 into saturation with alternating +- overflows.
+    for i in range(14):
+        sign = 1.0 if i % 2 == 0 else -1.0
+        dw = jnp.array([[-sign, 0.0]])
+        st, _ = hic.apply_update(st, dw, h.msb_step * 1.2, 1.0, key, p, h)
+    assert float(st.pcm_p.g[0, 0]) > hic.G_SAT
+
+    w_before = hic.read_weights(st, 2.0, p, h)
+    st2, n = hic.refresh(st, 2.0, key, p, h)
+    assert float(n) == 1.0  # only the saturating pair
+    w_after = hic.read_weights(st2, 2.0, p, h)
+    np.testing.assert_allclose(np.asarray(w_after), np.asarray(w_before),
+                               atol=0.14)
+    assert float(st2.pcm_p.g[0, 0]) < hic.G_SAT
+    assert int(st2.pcm_p.reset_count[0, 0]) == 1
+    assert int(st2.pcm_p.reset_count[0, 1]) == 0
+
+
+def test_read_noise_sigma_scaling(pcm, hic_cfg):
+    s = hic.read_noise_sigma(pcm, hic_cfg)
+    expect = pcm.read_sigma * np.sqrt(2.0) * hic_cfg.w_max / hic.G_SPAN
+    assert abs(s - expect) < 1e-9
+    off = dataclasses.replace(pcm, read_noise=False)
+    assert hic.read_noise_sigma(off, hic_cfg) == 0.0
+    noise = hic.sample_read_noise(jax.random.PRNGKey(0), (100, 100), pcm,
+                                  hic_cfg)
+    assert abs(float(noise.std()) - s) < 0.002
+
+
+def test_stochastic_rounding_unbiased(key, pcm):
+    h = HicConfig()  # stochastic_rounding=True
+    p = ideal_pcm()
+    st = hic.init_layer(key, jnp.zeros((64, 64)), 0.0, p, h)
+    # gradient worth 0.3 counts: deterministic rounding would drop it
+    dw = jnp.full((64, 64), -0.3 * h.lsb_step)
+    st2, _ = hic.apply_update(st, dw, 1.0, 1.0, key, p, h)
+    mean_counts = float(jnp.mean(st2.lsb.astype(jnp.float32)))
+    assert 0.2 < mean_counts < 0.4, mean_counts
+
+
+def test_inference_model_bits(hic_cfg):
+    assert hic.inference_model_bits(1000, hic_cfg) == 4000

@@ -1,0 +1,165 @@
+"""Layer-1 kernel correctness: Pallas vs pure-jnp oracle.
+
+THE core correctness signal of the compile path.  The kernels are
+deterministic (stochasticity enters as operands), so agreement is exact up
+to f32 accumulation order; hypothesis sweeps shapes and value ranges.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.configs import AdcDacConfig
+from compile.kernels import ref
+from compile.kernels.lsb_update import lsb_update
+from compile.kernels.pcm_vmm import (dac_quantize, mxu_utilization_estimate,
+                                     pcm_vmm, vmem_footprint_bytes)
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape)
+
+
+# ---------------------------------------------------------------------------
+# pcm_vmm
+# ---------------------------------------------------------------------------
+
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 40),
+    block=st.sampled_from([(8, 8, 8), (16, 16, 16), (32, 32, 32)]),
+    seed=st.integers(0, 2**16),
+)
+def test_pcm_vmm_matches_ref(m, k, n, block, seed):
+    adc = AdcDacConfig()
+    x = dac_quantize(rand(seed, (m, k), 2.0), adc)
+    w = rand(seed + 1, (k, n), 0.3)
+    noise = rand(seed + 2, (k, n), 0.01)
+    out = pcm_vmm(x, w, noise, adc, block=block)
+    expect = ref.pcm_vmm_ref(x, w, noise, adc)
+    np.testing.assert_allclose(out, expect, rtol=0, atol=2e-5)
+
+
+@pytest.mark.parametrize("enabled", [True, False])
+def test_pcm_vmm_adc_toggle(enabled):
+    adc = AdcDacConfig(enabled=enabled)
+    x = dac_quantize(rand(0, (16, 16)), adc)
+    w = rand(1, (16, 8), 0.3)
+    z = jnp.zeros_like(w)
+    out = pcm_vmm(x, w, z, adc, block=(8, 8, 8))
+    expect = ref.pcm_vmm_ref(x, w, z, adc)
+    np.testing.assert_allclose(out, expect, atol=2e-5)
+    if not enabled:
+        # no quantization: exact matmul
+        np.testing.assert_allclose(out, x @ w, atol=1e-5)
+
+
+def test_pcm_vmm_noise_is_weight_perturbation():
+    adc = AdcDacConfig(enabled=False)
+    x = dac_quantize(rand(3, (8, 8)), adc)
+    w = rand(4, (8, 4), 0.3)
+    noise = rand(5, (8, 4), 0.05)
+    out = pcm_vmm(x, w, noise, adc, block=(8, 8, 8))
+    np.testing.assert_allclose(out, x @ (w + noise), atol=1e-5)
+
+
+def test_pcm_vmm_jit_and_grad_safe():
+    # The kernel must lower inside jit (the AOT path) without surprises.
+    adc = AdcDacConfig()
+
+    @jax.jit
+    def f(x, w, n):
+        return pcm_vmm(x, w, n, adc, block=(16, 16, 16)).sum()
+
+    x = rand(6, (20, 12))
+    w = rand(7, (12, 8), 0.3)
+    n = jnp.zeros((12, 8))
+    assert jnp.isfinite(f(x, w, n))
+
+
+def test_adc_clips_large_outputs():
+    adc = AdcDacConfig()
+    x = jnp.full((4, 64), 4.0)
+    w = jnp.full((64, 4), 1.0)
+    z = jnp.zeros((64, 4))
+    out = pcm_vmm(dac_quantize(x, adc), w, z, adc, block=(8, 8, 8))
+    assert float(jnp.max(out)) <= adc.adc_range + 1e-5
+
+
+# ---------------------------------------------------------------------------
+# lsb_update
+# ---------------------------------------------------------------------------
+
+@given(
+    n=st.integers(1, 3000),
+    half=st.sampled_from([8, 32, 64]),
+    seed=st.integers(0, 2**16),
+    block=st.sampled_from([64, 256, 1024]),
+)
+def test_lsb_update_matches_ref(n, half, seed, block):
+    bits = int(np.log2(half)) + 1
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    acc = jax.random.randint(k1, (n,), -half + 1, half)
+    delta = jax.random.randint(k2, (n,), -2 * half + 1, 2 * half)
+    got = lsb_update(acc, delta, half_range=half, nbits=bits, block=block)
+    want = ref.lsb_update_ref(acc, delta, half_range=half, nbits=bits)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+@given(seed=st.integers(0, 2**16))
+def test_lsb_conservation_invariant(seed):
+    """acc + delta == acc' + half*overflow, always."""
+    half = 64
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    acc = jax.random.randint(k1, (500,), -63, 64)
+    delta = jax.random.randint(k2, (500,), -127, 128)
+    acc2, ovf, _ = lsb_update(acc, delta, half_range=half, nbits=7)
+    np.testing.assert_array_equal(np.asarray(acc + delta),
+                                  np.asarray(acc2 + half * ovf))
+    assert int(jnp.max(jnp.abs(acc2))) <= 64
+
+
+def test_lsb_flip_word_packing():
+    # 63 + 1: register 1111111 -> 1000000, 6 flips all resets.
+    acc = jnp.array([63, 0, -1], jnp.int32)
+    delta = jnp.array([1, 1, 1], jnp.int32)
+    _, ovf, word = lsb_update(acc, delta, half_range=64, nbits=7)
+    flips, resets = ref.unpack_flip_word(word)
+    assert list(np.asarray(ovf)) == [1, 0, 0]
+    # -1 -> 0 crosses the register midpoint: offset code 0111111 -> 1000000
+    # rewrites all seven devices (six of them 1->0 RESETs) — the worst-case
+    # flip cost of the offset encoding.
+    assert list(np.asarray(flips)) == [6, 1, 7]
+    assert list(np.asarray(resets)) == [6, 0, 6]
+
+
+def test_lsb_multidim_shapes():
+    acc = jnp.zeros((6, 5), jnp.int32)
+    delta = jnp.ones((6, 5), jnp.int32) * 70
+    acc2, ovf, _ = lsb_update(acc, delta, half_range=64, nbits=7)
+    assert acc2.shape == (6, 5)
+    np.testing.assert_array_equal(np.asarray(ovf), np.ones((6, 5)))
+    np.testing.assert_array_equal(np.asarray(acc2), np.full((6, 5), 6))
+
+
+# ---------------------------------------------------------------------------
+# perf-model helpers (DESIGN §7 L1)
+# ---------------------------------------------------------------------------
+
+def test_vmem_footprint_within_budget():
+    # Default 128^3 f32 tiling must fit comfortably in 16 MiB VMEM.
+    assert vmem_footprint_bytes((128, 128, 128)) < 1 << 20
+
+
+def test_mxu_utilization_estimate():
+    assert mxu_utilization_estimate(128, 128, 128, (128, 128, 128)) == 1.0
+    u = mxu_utilization_estimate(129, 128, 128, (128, 128, 128))
+    assert 0.4 < u < 0.6  # padded to 256 rows
+    assert mxu_utilization_estimate(1, 1, 1, (128, 128, 128)) == 1.0

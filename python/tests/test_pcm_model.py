@@ -1,0 +1,141 @@
+"""Statistical validation of the JAX PCM device model."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import pcm_model
+from compile.configs import PcmConfig
+
+
+def cfg(**kw) -> PcmConfig:
+    return dataclasses.replace(PcmConfig(), **kw)
+
+
+def ideal(**kw) -> PcmConfig:
+    return cfg(nonlinear=False, write_noise=False, read_noise=False,
+               drift=False, **kw)
+
+
+def test_init_arrays_shapes_and_nu(key):
+    arr = pcm_model.init_arrays(key, (50, 50), cfg())
+    assert arr.g.shape == (50, 50)
+    assert float(jnp.min(arr.nu)) >= 0.0
+    assert float(jnp.max(arr.nu)) <= 0.12
+    nu_std = float(jnp.std(arr.nu))
+    assert 0.004 < nu_std < 0.010  # ~drift_nu_sigma
+    assert int(jnp.sum(arr.set_count)) == 0
+
+
+def test_linear_programming_exact(key):
+    c = ideal()
+    arr = pcm_model.init_arrays(key, (4,), c)
+    target = jnp.array([0.35, 0.0, 0.1, 0.95])
+    arr2 = pcm_model.program_increment(arr, target, 1.0, key, c, 10)
+    # dg0=0.1: pulses = ceil(target/0.1), increment = pulses * 0.1
+    np.testing.assert_allclose(
+        np.asarray(arr2.g), [0.4, 0.0, 0.1, 1.0], atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(arr2.set_count), [4, 0, 1, 10])
+    # untouched element keeps its t_prog
+    assert float(arr2.t_prog[1]) == 0.0
+    assert float(arr2.t_prog[0]) == 1.0
+
+
+def test_nonlinear_aggregate_monotone_and_saturating(key):
+    c = cfg(write_noise=False, read_noise=False, drift=False)
+    # increments shrink as pulse count grows
+    inc0 = pcm_model.expected_increment(jnp.float32(0.0), jnp.float32(1.0), c)
+    inc20 = pcm_model.expected_increment(jnp.float32(20.0), jnp.float32(1.0), c)
+    assert float(inc20) < float(inc0)
+    # inverse (pulses_for_target) round-trips the aggregate
+    for p0 in [0.0, 5.0, 17.0]:
+        dg = 0.23
+        n = pcm_model.pulses_for_target(
+            jnp.float32(p0), jnp.float32(dg), c, 100)
+        realized = pcm_model.expected_increment(
+            jnp.float32(p0), n, c)
+        assert float(realized) >= dg - 1e-5  # ceil() overshoots slightly
+        under = pcm_model.expected_increment(jnp.float32(p0), n - 1, c)
+        assert float(under) < dg + 1e-5
+
+
+def test_write_noise_statistics(key):
+    c = cfg(nonlinear=False, read_noise=False, drift=False)
+    arr = pcm_model.init_arrays(key, (20000,), c)
+    arr2 = pcm_model.program_increment(
+        arr, jnp.full((20000,), 0.1), 0.0, key, c, 10)
+    g = np.asarray(arr2.g)
+    assert abs(g.mean() - 0.1) < 2e-3
+    assert abs(g.std() - c.write_sigma * c.dg0) < 4e-3
+
+
+def test_drift_power_law(key):
+    c = cfg(write_noise=False, read_noise=False, drift_nu_sigma=0.0)
+    arr = pcm_model.init_arrays(key, (8,), c)
+    arr = pcm_model.program_increment(
+        arr, jnp.full((8,), 0.5), 100.0, key, c, 10)
+    g0 = np.asarray(pcm_model.drifted_conductance(arr, 100.0 + 1.0, c))
+    g_day = np.asarray(pcm_model.drifted_conductance(arr, 100.0 + 86400.0, c))
+    ratio = g_day / g0
+    expect = 86400.0 ** (-c.drift_nu)
+    np.testing.assert_allclose(ratio, expect, rtol=1e-3)
+    # drift disabled -> no decay
+    c_off = dataclasses.replace(c, drift=False)
+    g_off = np.asarray(pcm_model.drifted_conductance(arr, 1e9, c_off))
+    np.testing.assert_allclose(g_off, np.asarray(arr.g))
+
+
+def test_reset_masks(key):
+    c = ideal()
+    arr = pcm_model.init_arrays(key, (4,), c)
+    arr = pcm_model.program_increment(
+        arr, jnp.full((4,), 0.3), 0.0, key, c, 10)
+    mask = jnp.array([True, False, True, False])
+    arr2 = pcm_model.reset(arr, 5.0, mask)
+    np.testing.assert_allclose(np.asarray(arr2.g), [0.0, 0.3, 0.0, 0.3],
+                               atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(arr2.reset_count), [1, 0, 1, 0])
+
+
+def test_read_noise_zero_mean(key):
+    c = cfg(nonlinear=False, write_noise=False, drift=False)
+    arr = pcm_model.init_arrays(key, (1,), c)
+    arr = pcm_model.program_increment(
+        arr, jnp.array([0.5]), 0.0, key, c, 10)
+    keys = jax.random.split(jax.random.PRNGKey(7), 2000)
+    reads = jnp.stack([pcm_model.read(arr, 0.0, k, c)[0] for k in keys[:200]])
+    assert abs(float(reads.mean()) - 0.5) < 0.005
+    assert abs(float(reads.std()) - c.read_sigma) < 0.003
+
+
+def test_binary_devices_hold_state_between_updates(key):
+    """LSB-array design assumption: binary reads are reliable over the
+    intervals the *training path* actually exposes them to — an active
+    register is rewritten every few batches (seconds..minutes), and even a
+    cold weight sees the full-training horizon (~1e5 s) only at mean
+    drift.  (Year-long retention is an MSB property; the LSB array is not
+    read at inference.)"""
+    c = cfg()
+    bits = jnp.ones((1000,), jnp.int32)
+    levels = pcm_model.binary_write_levels(key, bits, c)
+    t_prog = jnp.zeros((1000,))
+
+    # worst-case nu device, typical inter-update gap
+    nu_worst = jnp.full((1000,), 0.12)
+    read = pcm_model.binary_read(levels, t_prog, nu_worst, 100.0,
+                                 jax.random.PRNGKey(9), c)
+    assert float(jnp.mean((read == 1).astype(jnp.float32))) > 0.99
+
+    # mean-nu device, whole-training horizon
+    nu_mean = jnp.full((1000,), c.drift_nu)
+    read = pcm_model.binary_read(levels, t_prog, nu_mean, 1e5,
+                                 jax.random.PRNGKey(11), c)
+    assert float(jnp.mean((read == 1).astype(jnp.float32))) > 0.98
+
+    # a RESET device never reads as SET, even after a year
+    zeros = pcm_model.binary_read(jnp.zeros((1000,)), t_prog, nu_worst,
+                                  3.2e7, jax.random.PRNGKey(10), c)
+    assert float(jnp.mean(zeros.astype(jnp.float32))) < 0.01

@@ -1,0 +1,127 @@
+"""ResNet model-family tests: shapes, gradients, crossbar backward rules."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import resnet
+from compile.configs import AdcDacConfig, NetConfig
+
+
+def test_layer_specs_depths():
+    for depth, n_layers in [(8, 8), (14, 14), (20, 20), (32, 32)]:
+        net = NetConfig(depth=depth)
+        specs = resnet.layer_specs(net)
+        # 6n+2 convs + 1 fc == depth (He et al. count the fc layer):
+        # stem + 6n stage convs + fc
+        assert len(specs) == n_layers
+        assert specs[0].name == "stem"
+        assert specs[-1].name == "fc"
+    with pytest.raises(AssertionError):
+        resnet.layer_specs(NetConfig(depth=9))
+
+
+def test_width_multiplier_scales_parameters():
+    n1 = resnet.num_weights(NetConfig(depth=8, width_mult=1.0))
+    n2 = resnet.num_weights(NetConfig(depth=8, width_mult=2.0))
+    assert 3.0 < n2 / n1 < 4.5  # conv params ~ width^2
+
+
+def test_resnet32_parameter_count_near_paper():
+    """Paper: ResNet-32 has ~470 K trainable parameters."""
+    net = NetConfig(depth=32, width_mult=1.0)
+    n = resnet.num_weights(net)
+    bn = sum(2 * c for _, c in resnet.bn_channels(net))
+    total = n + bn
+    assert 4.2e5 < total < 5.2e5, total
+
+
+def test_forward_shapes_and_moments(tiny_cfg):
+    net, adc = tiny_cfg.net, tiny_cfg.adc
+    key = jax.random.PRNGKey(0)
+    ws = resnet.he_init_weights(key, net)
+    bn_params, bn_stats = resnet.init_bn(net)
+    x = jax.random.normal(key, (4, 32, 32, 3))
+    logits, moments = resnet.forward(
+        ws, bn_params, bn_stats, x, None, net, adc, train=True,
+        matmul_fn=resnet.exact_matmul)
+    assert logits.shape == (4, 10)
+    assert set(moments.keys()) == {n for n, _ in resnet.bn_channels(net)}
+    # eval mode: no moments, still finite
+    logits_e, m_e = resnet.forward(
+        ws, bn_params, bn_stats, x, None, net, adc, train=False,
+        matmul_fn=resnet.exact_matmul)
+    assert m_e == {}
+    assert bool(jnp.isfinite(logits_e).all())
+
+
+def test_gradients_flow_to_all_layers(tiny_cfg):
+    net, adc = tiny_cfg.net, tiny_cfg.adc
+    key = jax.random.PRNGKey(1)
+    ws = resnet.he_init_weights(key, net)
+    bn_params, bn_stats = resnet.init_bn(net)
+    x = jax.random.normal(key, (4, 32, 32, 3))
+    y = jnp.array([0, 1, 2, 3])
+
+    def loss_fn(ws):
+        logits, _ = resnet.forward(
+            ws, bn_params, bn_stats, x, None, net, adc, train=True,
+            matmul_fn=resnet.exact_matmul)
+        return resnet.cross_entropy(logits, y)
+
+    grads = jax.grad(loss_fn)(ws)
+    for spec, g in zip(resnet.layer_specs(net), grads):
+        assert g.shape == spec.weight_shape
+        assert float(jnp.abs(g).max()) > 0.0, f"dead gradient at {spec.name}"
+
+
+def test_crossbar_backward_rules():
+    """The custom VJP: dW is the exact digital outer product of the
+    DAC-quantized input; dx flows through the noisy transposed read."""
+    adc = AdcDacConfig()
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (6, 5))
+    w = 0.3 * jax.random.normal(key, (5, 3))
+    nf = 0.02 * jax.random.normal(key, (5, 3))
+    nb = 0.02 * jax.random.normal(jax.random.PRNGKey(3), (5, 3))
+
+    f = lambda x, w: resnet.crossbar_matmul(x, w, nf, nb, adc).sum()
+    dx, dw = jax.grad(f, argnums=(0, 1))(x, w)
+    dy = jnp.ones((6, 3))
+
+    from compile.kernels.pcm_vmm import dac_quantize
+    expect_dw = dac_quantize(x, adc).T @ dy
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(expect_dw),
+                               atol=1e-5)
+    # dx uses (w + nb)^T (scaled DAC/ADC path); with dy == ones the scale
+    # is 1 so quantization error is bounded by the converter steps.
+    rough = dy @ (w + nb).T
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(rough), atol=0.2)
+    # and crucially, dx is NOT computed with the forward noise
+    rough_f = dy @ (w + nf).T
+    assert not np.allclose(np.asarray(dx), np.asarray(rough_f), atol=1e-3)
+
+
+def test_option_a_shortcut():
+    x = jnp.arange(2 * 8 * 8 * 4, dtype=jnp.float32).reshape(2, 8, 8, 4)
+    s = resnet._shortcut(x, 8, 2)
+    assert s.shape == (2, 4, 4, 8)
+    # first 4 channels preserved (subsampled), rest zero
+    np.testing.assert_allclose(np.asarray(s[..., 4:]), 0.0)
+    np.testing.assert_allclose(np.asarray(s[..., :4]),
+                               np.asarray(x[:, ::2, ::2, :]))
+
+
+def test_cross_entropy_and_accuracy():
+    logits = jnp.array([[10.0, 0.0], [0.0, 10.0], [10.0, 0.0]])
+    labels = jnp.array([0, 1, 1])
+    assert float(resnet.cross_entropy(logits, labels)) > 0.0
+    assert abs(float(resnet.accuracy(logits, labels)) - 2 / 3) < 1e-6
+    perfect = resnet.cross_entropy(logits, jnp.array([0, 1, 0]))
+    assert float(perfect) < 1e-3
+
+
+def test_stage_widths_respect_minimum():
+    net = NetConfig(width_mult=0.05)
+    assert min(net.stage_widths) >= 4

@@ -1,0 +1,178 @@
+//! In-tree benchmark harness (criterion is unavailable offline).
+//!
+//! Minimal but honest: per-iteration wall times, warmup, fixed time/iter
+//! budgets, and robust summary statistics (median / p10 / p90).  The
+//! `benches/*.rs` targets (declared `harness = false`) build their own
+//! `main` on top of [`Bench`].
+//!
+//! ```no_run
+//! use hic_train::bench::Bench;
+//! let mut b = Bench::new("suite");
+//! b.bench("op", || { std::hint::black_box(1 + 1); });
+//! b.finish();
+//! ```
+
+use std::time::{Duration, Instant};
+
+/// Summary of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    /// optional throughput numerator (elements per iteration)
+    pub elements: Option<f64>,
+}
+
+impl Stats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    pub fn throughput(&self) -> Option<f64> {
+        self.elements.map(|e| e / (self.mean_ns / 1e9))
+    }
+}
+
+/// Benchmark suite runner.
+pub struct Bench {
+    pub suite: String,
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub max_iters: usize,
+    pub results: Vec<Stats>,
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Self {
+        // Respect a quick mode for CI: HIC_BENCH_QUICK=1.
+        let quick = std::env::var("HIC_BENCH_QUICK").is_ok();
+        Bench {
+            suite: suite.to_string(),
+            warmup: if quick { Duration::from_millis(50) }
+                    else { Duration::from_millis(300) },
+            budget: if quick { Duration::from_millis(200) }
+                    else { Duration::from_secs(2) },
+            max_iters: if quick { 20 } else { 1000 },
+            results: Vec::new(),
+        }
+    }
+
+    /// Benchmark a closure; returns the stats (also stored).
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> &Stats {
+        self.bench_with_elements(name, None, f)
+    }
+
+    /// Benchmark with a throughput denominator (elements per iteration).
+    pub fn bench_with_elements<F: FnMut()>(&mut self, name: &str,
+                                           elements: Option<f64>,
+                                           mut f: F) -> &Stats {
+        // Warmup
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            f();
+        }
+        // Measured iterations
+        let mut samples = Vec::new();
+        let b0 = Instant::now();
+        while b0.elapsed() < self.budget && samples.len() < self.max_iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        let stats = summarize(name, &mut samples, elements);
+        print_stats(&self.suite, &stats);
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// Print the suite footer.  Call at the end of `main`.
+    pub fn finish(&self) {
+        println!("[{}] {} case(s) complete", self.suite, self.results.len());
+    }
+}
+
+fn summarize(name: &str, samples: &mut [f64], elements: Option<f64>)
+             -> Stats {
+    assert!(!samples.is_empty());
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let q = |p: f64| samples[((n as f64 - 1.0) * p) as usize];
+    Stats {
+        name: name.to_string(),
+        iters: n,
+        mean_ns: mean,
+        median_ns: q(0.5),
+        p10_ns: q(0.1),
+        p90_ns: q(0.9),
+        elements,
+    }
+}
+
+fn print_stats(suite: &str, s: &Stats) {
+    let scale = |ns: f64| -> String {
+        if ns >= 1e9 {
+            format!("{:.2} s", ns / 1e9)
+        } else if ns >= 1e6 {
+            format!("{:.2} ms", ns / 1e6)
+        } else if ns >= 1e3 {
+            format!("{:.2} µs", ns / 1e3)
+        } else {
+            format!("{:.0} ns", ns)
+        }
+    };
+    let tp = s
+        .throughput()
+        .map(|t| {
+            if t >= 1e9 {
+                format!("  {:>8.2} Gelem/s", t / 1e9)
+            } else if t >= 1e6 {
+                format!("  {:>8.2} Melem/s", t / 1e6)
+            } else {
+                format!("  {:>8.0} elem/s", t)
+            }
+        })
+        .unwrap_or_default();
+    println!(
+        "[{suite}] {:<40} {:>10} (p10 {:>10}, p90 {:>10}, n={}){}",
+        s.name,
+        scale(s.median_ns),
+        scale(s.p10_ns),
+        scale(s.p90_ns),
+        s.iters,
+        tp
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_summarizes() {
+        std::env::set_var("HIC_BENCH_QUICK", "1");
+        let mut b = Bench::new("test");
+        let s = b.bench_with_elements("noop", Some(100.0), || {
+            std::hint::black_box(42);
+        });
+        assert!(s.iters > 0);
+        assert!(s.mean_ns > 0.0);
+        assert!(s.p10_ns <= s.median_ns && s.median_ns <= s.p90_ns);
+        assert!(s.throughput().unwrap() > 0.0);
+        b.finish();
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut samples = vec![5.0, 1.0, 3.0, 2.0, 4.0];
+        let s = summarize("x", &mut samples, None);
+        assert_eq!(s.median_ns, 3.0);
+        assert_eq!(s.p10_ns, 1.0);
+        assert_eq!(s.p90_ns, 4.0);
+        assert_eq!(s.mean_ns, 3.0);
+    }
+}

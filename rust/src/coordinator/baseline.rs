@@ -1,0 +1,140 @@
+//! FP32 software-baseline trainer (the comparison curves of Figs. 3–4).
+//!
+//! Same data pipeline and schedules as [`super::Trainer`], driving the
+//! `baseline_*` artifacts (exact matmuls, SGD + momentum + weight decay,
+//! no PCM anywhere).
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::data::{Dataset, DataLoader};
+use crate::runtime::{Engine, HostTensor, ModelState};
+use crate::util::rng::Pcg64;
+use crate::log_info;
+
+use super::metrics::{EvalResult, MetricsRecorder, StepMetrics};
+use super::schedule::LrSchedule;
+use super::trainer::TrainerOptions;
+
+pub struct BaselineTrainer {
+    pub engine: Arc<Engine>,
+    pub state: ModelState,
+    pub metrics: MetricsRecorder,
+    pub lr: LrSchedule,
+    dataset: Arc<Dataset>,
+    rng: Pcg64,
+    augment: bool,
+    prefetch: usize,
+    pub step: usize,
+}
+
+impl BaselineTrainer {
+    pub fn new(artifact_dir: &Path, opts: TrainerOptions) -> Result<Self> {
+        let engine = Arc::new(Engine::load(artifact_dir)?);
+        Self::with_engine(engine, opts)
+    }
+
+    pub fn with_engine(engine: Arc<Engine>, opts: TrainerOptions)
+                       -> Result<Self> {
+        let mut rng = Pcg64::new(opts.seed, 0xba5e);
+        let dataset = Arc::new(Dataset::auto(opts.seed, opts.data_scale));
+        let state = engine
+            .init_state("baseline_init", rng.jax_key())
+            .context("initializing baseline state — was this config \
+                      lowered with with_baseline=True?")?;
+        log_info!("baseline trainer: config '{}', state {:.1} MB",
+                  engine.manifest.config_name,
+                  state.total_bytes() as f64 / 1e6);
+        Ok(BaselineTrainer {
+            metrics: MetricsRecorder::new(),
+            lr: opts.lr.clone(),
+            dataset,
+            state,
+            engine,
+            rng,
+            augment: opts.augment,
+            prefetch: opts.prefetch,
+            step: 0,
+        })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.engine.manifest.batch_size()
+    }
+
+    pub fn train_steps(&mut self, n: usize) -> Result<()> {
+        let loader = DataLoader::new(
+            Arc::clone(&self.dataset),
+            self.batch_size(),
+            false,
+            self.augment,
+            self.rng.next_u64(),
+        );
+        let sig = self.engine.manifest.entry("baseline_train_step")?;
+        let i_acc = sig
+            .metric_outputs()
+            .iter()
+            .position(|l| l.name.ends_with("acc"))
+            .ok_or_else(|| anyhow!("no acc metric"))?;
+        let i_loss = sig
+            .metric_outputs()
+            .iter()
+            .position(|l| l.name.ends_with("loss"))
+            .ok_or_else(|| anyhow!("no loss metric"))?;
+
+        let rx = loader.prefetch(n, self.prefetch.max(1));
+        for batch in rx {
+            let lr = self.lr.at(self.step);
+            let t0 = Instant::now();
+            let m = self.engine.call_stateful(
+                "baseline_train_step",
+                &mut self.state,
+                &[batch.x, batch.y, HostTensor::scalar_f32(lr)],
+            )?;
+            self.metrics.record_step(StepMetrics {
+                step: self.step,
+                loss: m[i_loss].scalar()?,
+                acc: m[i_acc].scalar()?,
+                grad_norm: 0.0,
+                overflow_events: 0.0,
+                lr,
+                t_now: 0.0,
+                wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+            });
+            self.step += 1;
+        }
+        Ok(())
+    }
+
+    pub fn evaluate(&mut self, batches: usize) -> Result<EvalResult> {
+        let b = self.batch_size();
+        let mut loader =
+            DataLoader::new(Arc::clone(&self.dataset), b, true, false, 0);
+        let mut correct = 0i64;
+        let mut loss_sum = 0f64;
+        let mut samples = 0usize;
+        for _ in 0..batches {
+            let batch = loader.next_batch();
+            let out = self.engine.call_stateful(
+                "baseline_eval_step",
+                &mut self.state,
+                &[batch.x, batch.y],
+            )?;
+            correct += out[0].scalar_i64()?;
+            loss_sum += out[1].scalar()? as f64;
+            samples += b;
+        }
+        let res = EvalResult {
+            step: self.step,
+            t_now: 0.0,
+            accuracy: correct as f64 / samples as f64,
+            avg_loss: loss_sum / samples as f64,
+            samples,
+        };
+        self.metrics.record_eval(res);
+        Ok(res)
+    }
+}

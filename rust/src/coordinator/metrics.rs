@@ -1,0 +1,184 @@
+//! Run metrics: per-step records, moving statistics, CSV export.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::csv::{CsvCell, CsvWriter};
+
+/// Metrics of one training step (order matches the sorted metric outputs
+/// of `hic_train_step`: acc, grad_norm, loss, overflow_events).
+#[derive(Clone, Copy, Debug)]
+pub struct StepMetrics {
+    pub step: usize,
+    pub loss: f32,
+    pub acc: f32,
+    pub grad_norm: f32,
+    pub overflow_events: f32,
+    pub lr: f32,
+    pub t_now: f32,
+    pub wall_ms: f64,
+}
+
+/// Result of an evaluation pass.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EvalResult {
+    pub step: usize,
+    pub t_now: f32,
+    pub accuracy: f64,
+    pub avg_loss: f64,
+    pub samples: usize,
+}
+
+/// Accumulates step/eval records for a run.
+#[derive(Default)]
+pub struct MetricsRecorder {
+    pub steps: Vec<StepMetrics>,
+    pub evals: Vec<EvalResult>,
+}
+
+impl MetricsRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_step(&mut self, m: StepMetrics) {
+        self.steps.push(m);
+    }
+
+    pub fn record_eval(&mut self, e: EvalResult) {
+        self.evals.push(e);
+    }
+
+    /// Mean loss over the trailing `window` steps.
+    pub fn smoothed_loss(&self, window: usize) -> f64 {
+        if self.steps.is_empty() {
+            return f64::NAN;
+        }
+        let n = self.steps.len().min(window.max(1));
+        self.steps[self.steps.len() - n..]
+            .iter()
+            .map(|m| m.loss as f64)
+            .sum::<f64>()
+            / n as f64
+    }
+
+    pub fn smoothed_acc(&self, window: usize) -> f64 {
+        if self.steps.is_empty() {
+            return f64::NAN;
+        }
+        let n = self.steps.len().min(window.max(1));
+        self.steps[self.steps.len() - n..]
+            .iter()
+            .map(|m| m.acc as f64)
+            .sum::<f64>()
+            / n as f64
+    }
+
+    pub fn best_eval_accuracy(&self) -> Option<f64> {
+        self.evals
+            .iter()
+            .map(|e| e.accuracy)
+            .fold(None, |best, a| Some(best.map_or(a, |b: f64| b.max(a))))
+    }
+
+    pub fn total_overflow_events(&self) -> f64 {
+        self.steps.iter().map(|m| m.overflow_events as f64).sum()
+    }
+
+    pub fn mean_step_ms(&self) -> f64 {
+        if self.steps.is_empty() {
+            return 0.0;
+        }
+        self.steps.iter().map(|m| m.wall_ms).sum::<f64>()
+            / self.steps.len() as f64
+    }
+
+    /// Write the loss curve (`step,loss,acc,lr,overflow,ms`).
+    pub fn write_steps_csv(&self, path: &Path) -> Result<()> {
+        let mut w = CsvWriter::new(
+            &["step", "t_now_s", "loss", "acc", "grad_norm",
+              "overflow_events", "lr", "wall_ms"]);
+        for m in &self.steps {
+            w.row(&[
+                CsvCell::U(m.step as u64),
+                CsvCell::F(m.t_now as f64),
+                CsvCell::F(m.loss as f64),
+                CsvCell::F(m.acc as f64),
+                CsvCell::F(m.grad_norm as f64),
+                CsvCell::F(m.overflow_events as f64),
+                CsvCell::F(m.lr as f64),
+                CsvCell::F(m.wall_ms),
+            ]);
+        }
+        w.write(path)
+    }
+
+    pub fn write_evals_csv(&self, path: &Path) -> Result<()> {
+        let mut w = CsvWriter::new(
+            &["step", "t_now_s", "accuracy", "avg_loss", "samples"]);
+        for e in &self.evals {
+            w.row(&[
+                CsvCell::U(e.step as u64),
+                CsvCell::F(e.t_now as f64),
+                CsvCell::F(e.accuracy),
+                CsvCell::F(e.avg_loss),
+                CsvCell::U(e.samples as u64),
+            ]);
+        }
+        w.write(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(step: usize, loss: f32, acc: f32) -> StepMetrics {
+        StepMetrics { step, loss, acc, grad_norm: 1.0,
+                      overflow_events: 2.0, lr: 0.5, t_now: 0.0,
+                      wall_ms: 10.0 }
+    }
+
+    #[test]
+    fn smoothing_and_totals() {
+        let mut r = MetricsRecorder::new();
+        assert!(r.smoothed_loss(5).is_nan());
+        for i in 0..10 {
+            r.record_step(m(i, (10 - i) as f32, i as f32 / 10.0));
+        }
+        assert!((r.smoothed_loss(2) - 1.5).abs() < 1e-9);
+        assert!((r.smoothed_loss(100) - 5.5).abs() < 1e-9);
+        assert!((r.smoothed_acc(10) - 0.45).abs() < 1e-6);
+        assert_eq!(r.total_overflow_events(), 20.0);
+        assert_eq!(r.mean_step_ms(), 10.0);
+    }
+
+    #[test]
+    fn eval_best() {
+        let mut r = MetricsRecorder::new();
+        assert_eq!(r.best_eval_accuracy(), None);
+        r.record_eval(EvalResult { step: 1, t_now: 0.0, accuracy: 0.4,
+                                   avg_loss: 2.0, samples: 100 });
+        r.record_eval(EvalResult { step: 2, t_now: 0.0, accuracy: 0.7,
+                                   avg_loss: 1.0, samples: 100 });
+        r.record_eval(EvalResult { step: 3, t_now: 0.0, accuracy: 0.6,
+                                   avg_loss: 1.2, samples: 100 });
+        assert_eq!(r.best_eval_accuracy(), Some(0.7));
+    }
+
+    #[test]
+    fn csv_roundtrip_shapes() {
+        let mut r = MetricsRecorder::new();
+        r.record_step(m(0, 2.0, 0.1));
+        r.record_eval(EvalResult { step: 0, t_now: 5.0, accuracy: 0.5,
+                                   avg_loss: 1.5, samples: 64 });
+        let dir = std::env::temp_dir().join("hic_metrics_test");
+        r.write_steps_csv(&dir.join("steps.csv")).unwrap();
+        r.write_evals_csv(&dir.join("evals.csv")).unwrap();
+        let s = std::fs::read_to_string(dir.join("steps.csv")).unwrap();
+        assert!(s.starts_with("step,"));
+        assert_eq!(s.lines().count(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

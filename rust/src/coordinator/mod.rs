@@ -1,0 +1,25 @@
+//! The Layer-3 coordinator — the training orchestrator.
+//!
+//! Owns everything the paper's digital control plane does:
+//!
+//! * the batch loop driving `hic_train_step` artifacts through PJRT,
+//! * the **refresh scheduler** (MSB saturation refresh every N batches,
+//!   paper §III-A: N = 10),
+//! * the **drift clock** — simulated wall time advanced per batch, fed to
+//!   every program so PCM drift accrues across training and inference,
+//! * the **AdaBS calibrator** (Fig. 5): streaming BN-statistics
+//!   recalibration over ~5 % of the training set,
+//! * LR scheduling, evaluation cadence, metrics and checkpoints,
+//! * the endurance snapshot (device ledgers out of the state buffers).
+//!
+//! [`baseline`] mirrors the loop for the FP32 software baseline.
+
+pub mod baseline;
+pub mod metrics;
+pub mod schedule;
+pub mod trainer;
+
+pub use baseline::BaselineTrainer;
+pub use metrics::{EvalResult, MetricsRecorder, StepMetrics};
+pub use schedule::{DriftClock, LrSchedule, RefreshScheduler};
+pub use trainer::{Trainer, TrainerOptions};

@@ -1,0 +1,121 @@
+//! Schedules: learning rate, refresh cadence, the simulated drift clock.
+
+/// Step-decay learning-rate schedule (paper: HIC trains with lr 0.05 and
+/// decay factor 0.45; boundaries default to 50 % / 75 % of the run like
+//  the He et al. recipe).
+#[derive(Clone, Debug)]
+pub struct LrSchedule {
+    pub lr0: f32,
+    pub decay: f32,
+    /// absolute step boundaries at which lr multiplies by `decay`
+    pub boundaries: Vec<usize>,
+}
+
+impl LrSchedule {
+    pub fn constant(lr: f32) -> Self {
+        LrSchedule { lr0: lr, decay: 1.0, boundaries: vec![] }
+    }
+
+    /// Paper-style schedule scaled to a run of `total_steps`.
+    pub fn paper(lr0: f32, decay: f32, total_steps: usize) -> Self {
+        LrSchedule {
+            lr0,
+            decay,
+            boundaries: vec![total_steps / 2, (3 * total_steps) / 4],
+        }
+    }
+
+    pub fn at(&self, step: usize) -> f32 {
+        let k = self.boundaries.iter().filter(|&&b| step >= b).count();
+        self.lr0 * self.decay.powi(k as i32)
+    }
+}
+
+/// Refresh cadence (paper: every 10 batches).
+#[derive(Clone, Copy, Debug)]
+pub struct RefreshScheduler {
+    pub every: usize,
+}
+
+impl RefreshScheduler {
+    pub fn new(every: usize) -> Self {
+        RefreshScheduler { every }
+    }
+
+    /// Refresh fires *after* the step-th batch (1-indexed internally).
+    pub fn due(&self, step: usize) -> bool {
+        self.every > 0 && (step + 1) % self.every == 0
+    }
+}
+
+/// Simulated wall-clock driving PCM drift.
+///
+/// Training advances the clock by `seconds_per_batch` per step; the
+/// Fig. 5 study then jumps the clock far into the future to measure
+/// drifted inference.  f32 keeps adequate resolution because training
+/// accumulates small times (≤ ~1e5 s) and inference probes use large
+/// absolute times where per-batch increments no longer matter.
+#[derive(Clone, Copy, Debug)]
+pub struct DriftClock {
+    pub now: f64,
+    pub seconds_per_batch: f64,
+}
+
+impl DriftClock {
+    pub fn new(seconds_per_batch: f64) -> Self {
+        DriftClock { now: 0.0, seconds_per_batch }
+    }
+
+    pub fn tick(&mut self) -> f32 {
+        self.now += self.seconds_per_batch;
+        self.now as f32
+    }
+
+    pub fn now_f32(&self) -> f32 {
+        self.now as f32
+    }
+
+    /// Absolute jump (Fig. 5 inference-time probes).
+    pub fn jump_to(&mut self, t: f64) {
+        debug_assert!(t >= self.now, "drift clock cannot run backwards");
+        self.now = t;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_step_decay() {
+        let s = LrSchedule::paper(0.5, 0.45, 100);
+        assert_eq!(s.at(0), 0.5);
+        assert_eq!(s.at(49), 0.5);
+        assert!((s.at(50) - 0.225).abs() < 1e-6);
+        assert!((s.at(75) - 0.10125).abs() < 1e-6);
+        assert!((s.at(99) - 0.10125).abs() < 1e-6);
+        let c = LrSchedule::constant(0.1);
+        assert_eq!(c.at(0), c.at(10_000));
+    }
+
+    #[test]
+    fn refresh_every_10() {
+        let r = RefreshScheduler::new(10);
+        let due: Vec<usize> = (0..35).filter(|&s| r.due(s)).collect();
+        assert_eq!(due, vec![9, 19, 29]);
+        let off = RefreshScheduler::new(0);
+        assert!((0..100).all(|s| !off.due(s)));
+    }
+
+    #[test]
+    fn drift_clock_ticks_and_jumps() {
+        let mut c = DriftClock::new(0.05);
+        assert_eq!(c.now_f32(), 0.0);
+        let t1 = c.tick();
+        let t2 = c.tick();
+        assert!((t1 - 0.05).abs() < 1e-6);
+        assert!((t2 - 0.10).abs() < 1e-6);
+        c.jump_to(1e6);
+        assert_eq!(c.now_f32(), 1e6);
+    }
+}

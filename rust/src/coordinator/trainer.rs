@@ -1,0 +1,288 @@
+//! The HIC training orchestrator.
+//!
+//! Drives the lowered artifacts through a full run: batches from the data
+//! pipeline (with background prefetch), the train-step call, the
+//! every-N-batches MSB refresh, the drift clock, periodic evaluation, the
+//! AdaBS recalibration pass, checkpoints and the endurance snapshot.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::data::{Dataset, DataLoader};
+use crate::pcm::endurance::EnduranceLedger;
+use crate::runtime::{Engine, HostTensor, ModelState};
+use crate::util::rng::Pcg64;
+use crate::{log_debug, log_info};
+
+use super::metrics::{EvalResult, MetricsRecorder, StepMetrics};
+use super::schedule::{DriftClock, LrSchedule, RefreshScheduler};
+
+/// Options of one training run.
+#[derive(Clone, Debug)]
+pub struct TrainerOptions {
+    pub seed: u64,
+    pub lr: LrSchedule,
+    /// batches between MSB refresh operations (paper: 10)
+    pub refresh_every: usize,
+    /// simulated seconds of wall time per batch (drift clock)
+    pub seconds_per_batch: f64,
+    pub augment: bool,
+    /// synthetic-dataset size scale (1.0 == 50k/10k)
+    pub data_scale: f64,
+    /// prefetch queue depth (0 = synchronous)
+    pub prefetch: usize,
+}
+
+impl Default for TrainerOptions {
+    fn default() -> Self {
+        TrainerOptions {
+            seed: 42,
+            // Scaled-run default: the paper's 0.05 with 205 epochs maps to
+            // ~0.5 for the few-hundred-step runs this testbed executes
+            // (update-quantum per unit data kept comparable); both are
+            // runtime inputs, so full-fidelity runs just pass --lr 0.05.
+            lr: LrSchedule::constant(0.5),
+            refresh_every: 10,
+            seconds_per_batch: 0.05,
+            augment: true,
+            data_scale: 0.05,
+            prefetch: 4,
+        }
+    }
+}
+
+pub struct Trainer {
+    pub engine: Arc<Engine>,
+    pub state: ModelState,
+    pub opts: TrainerOptions,
+    pub metrics: MetricsRecorder,
+    pub clock: DriftClock,
+    dataset: Arc<Dataset>,
+    refresh: RefreshScheduler,
+    rng: Pcg64,
+    pub step: usize,
+}
+
+impl Trainer {
+    pub fn new(artifact_dir: &Path, opts: TrainerOptions) -> Result<Self> {
+        let engine = Arc::new(Engine::load(artifact_dir)?);
+        Self::with_engine(engine, opts)
+    }
+
+    pub fn with_engine(engine: Arc<Engine>, opts: TrainerOptions)
+                       -> Result<Self> {
+        let mut rng = Pcg64::new(opts.seed, 0x7ea1);
+        let dataset = Arc::new(Dataset::auto(opts.seed, opts.data_scale));
+        let state = engine
+            .init_state("hic_init", rng.jax_key())
+            .context("initializing HIC state")?;
+        log_info!(
+            "trainer: config '{}', {} weights, state {:.1} MB, batch {}",
+            engine.manifest.config_name,
+            engine.manifest.num_weights,
+            state.total_bytes() as f64 / 1e6,
+            engine.manifest.batch_size()
+        );
+        Ok(Trainer {
+            clock: DriftClock::new(opts.seconds_per_batch),
+            refresh: RefreshScheduler::new(opts.refresh_every),
+            metrics: MetricsRecorder::new(),
+            dataset,
+            state,
+            engine,
+            rng,
+            opts,
+            step: 0,
+        })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.engine.manifest.batch_size()
+    }
+
+    fn metric_index(&self, entry: &str, name: &str) -> Result<usize> {
+        let sig = self.engine.manifest.entry(entry)?;
+        sig.metric_outputs()
+            .iter()
+            .position(|l| l.name.ends_with(name))
+            .ok_or_else(|| anyhow!("{entry}: no metric output '{name}'"))
+    }
+
+    /// Run `n` training steps (with refresh scheduling + drift clock).
+    pub fn train_steps(&mut self, n: usize) -> Result<()> {
+        let loader = DataLoader::new(
+            Arc::clone(&self.dataset),
+            self.batch_size(),
+            false,
+            self.opts.augment,
+            self.rng.next_u64(),
+        );
+        let i_acc = self.metric_index("hic_train_step", "acc")?;
+        let i_gn = self.metric_index("hic_train_step", "grad_norm")?;
+        let i_loss = self.metric_index("hic_train_step", "loss")?;
+        let i_ovf = self.metric_index("hic_train_step", "overflow_events")?;
+
+        let rx = loader.prefetch(n, self.opts.prefetch.max(1));
+        for batch in rx {
+            let t_now = self.clock.tick();
+            let lr = self.opts.lr.at(self.step);
+            let t0 = Instant::now();
+            let m = self.engine.call_stateful(
+                "hic_train_step",
+                &mut self.state,
+                &[
+                    batch.x,
+                    batch.y,
+                    HostTensor::key(self.rng.jax_key()),
+                    HostTensor::scalar_f32(t_now),
+                    HostTensor::scalar_f32(lr),
+                ],
+            )?;
+            let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let sm = StepMetrics {
+                step: self.step,
+                loss: m[i_loss].scalar()?,
+                acc: m[i_acc].scalar()?,
+                grad_norm: m[i_gn].scalar()?,
+                overflow_events: m[i_ovf].scalar()?,
+                lr,
+                t_now,
+                wall_ms,
+            };
+            if !sm.loss.is_finite() {
+                return Err(anyhow!("non-finite loss at step {}", self.step));
+            }
+            self.metrics.record_step(sm);
+
+            if self.refresh.due(self.step) {
+                let refreshed = self.refresh_now()?;
+                log_debug!("step {}: refreshed {} pairs", self.step,
+                           refreshed);
+            }
+            self.step += 1;
+        }
+        Ok(())
+    }
+
+    /// Immediate MSB saturation refresh; returns refreshed-pair count.
+    pub fn refresh_now(&mut self) -> Result<f32> {
+        let t_now = self.clock.now_f32();
+        let m = self.engine.call_stateful(
+            "hic_refresh",
+            &mut self.state,
+            &[HostTensor::key(self.rng.jax_key()),
+              HostTensor::scalar_f32(t_now)],
+        )?;
+        m[0].scalar()
+    }
+
+    /// Evaluate on `batches` test batches at time `t_eval` (defaults to
+    /// the current drift clock — Fig. 5 passes future times).
+    pub fn evaluate(&mut self, batches: usize, t_eval: Option<f32>)
+                    -> Result<EvalResult> {
+        let t = t_eval.unwrap_or_else(|| self.clock.now_f32());
+        let b = self.batch_size();
+        let mut loader = DataLoader::new(
+            Arc::clone(&self.dataset), b, true, false, 0);
+        let mut correct = 0i64;
+        let mut loss_sum = 0f64;
+        let mut samples = 0usize;
+        for _ in 0..batches {
+            let batch = loader.next_batch();
+            let out = self.engine.call_stateful(
+                "hic_eval_step",
+                &mut self.state,
+                &[batch.x, batch.y, HostTensor::key(self.rng.jax_key()),
+                  HostTensor::scalar_f32(t)],
+            )?;
+            correct += out[0].scalar_i64()?;
+            loss_sum += out[1].scalar()? as f64;
+            samples += b;
+        }
+        let res = EvalResult {
+            step: self.step,
+            t_now: t,
+            accuracy: correct as f64 / samples as f64,
+            avg_loss: loss_sum / samples as f64,
+            samples,
+        };
+        self.metrics.record_eval(res);
+        Ok(res)
+    }
+
+    /// AdaBS recalibration (Joshi et al. 2020): recompute global BN
+    /// statistics from `batches` training batches at inference time `t`.
+    pub fn adabs_calibrate(&mut self, batches: usize, t: f32) -> Result<()> {
+        let mut loader = DataLoader::new(
+            Arc::clone(&self.dataset), self.batch_size(), false, false,
+            self.rng.next_u64());
+        for k in 1..=batches {
+            let batch = loader.next_batch();
+            self.engine.call_stateful(
+                "hic_adabs",
+                &mut self.state,
+                &[batch.x, HostTensor::key(self.rng.jax_key()),
+                  HostTensor::scalar_f32(t),
+                  HostTensor::scalar_f32(k as f32)],
+            )?;
+        }
+        log_debug!("adabs: recalibrated BN stats over {batches} batches");
+        Ok(())
+    }
+
+    /// Calibration batch count for the paper's "~5 % of the train set".
+    pub fn adabs_batches(&self) -> usize {
+        ((self.dataset.len(false) as f64 * 0.05)
+            / self.batch_size() as f64)
+            .ceil()
+            .max(1.0) as usize
+    }
+
+    /// Snapshot the endurance ledgers out of the device state.
+    pub fn endurance(&self) -> Result<EnduranceLedger> {
+        let mut ledger = EnduranceLedger::new();
+        for side in ["pcm_p", "pcm_m"] {
+            let sets = self.state.find(&format!("{side}/set_count"));
+            let resets = self.state.find(&format!("{side}/reset_count"));
+            if sets.len() != resets.len() || sets.is_empty() {
+                return Err(anyhow!("endurance counters missing for {side}"));
+            }
+            for ((_, s), (_, r)) in sets.iter().zip(resets.iter()) {
+                for (a, b) in s.as_i32()?.iter().zip(r.as_i32()?) {
+                    ledger.record_msb(*a as u64, *b as u64);
+                }
+            }
+        }
+        let flips = self.state.find("lsb_flips");
+        let resets = self.state.find("lsb_resets");
+        for ((_, f), (_, r)) in flips.iter().zip(resets.iter()) {
+            for (a, b) in f.as_i32()?.iter().zip(r.as_i32()?) {
+                ledger.record_lsb_weight(*a as u64, *b as u64, 7);
+            }
+        }
+        Ok(ledger)
+    }
+
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        self.state.save(path)?;
+        log_info!("checkpoint saved to {} (step {}, t={:.1}s)",
+                  path.display(), self.step, self.clock.now_f32());
+        Ok(())
+    }
+
+    pub fn load_checkpoint(&mut self, path: &Path) -> Result<()> {
+        let loaded = ModelState::load(path)?;
+        if loaded.leaves.len() != self.state.leaves.len() {
+            return Err(anyhow!(
+                "checkpoint arity {} != state arity {}",
+                loaded.leaves.len(),
+                self.state.leaves.len()
+            ));
+        }
+        self.state = loaded;
+        Ok(())
+    }
+}

@@ -1,0 +1,221 @@
+//! Energy / latency / area estimator for the crossbar accelerator.
+//!
+//! Architecture-level constants of ISAAC-class mixed-signal periphery
+//! (Shafiee et al. 2016; Rekhi et al. 2019 for converter scaling), in
+//! 32 nm-equivalent technology.  The absolute numbers are order-of-
+//! magnitude — what matters for the paper's argument is the *relative*
+//! cost structure: ADCs dominate, array reads are cheap, and the HIC
+//! update path (bit-flips on the LSB array) is far cheaper than
+//! reprogramming multi-level cells.
+
+use super::mapper::LayerMapping;
+
+/// Per-event energy constants (picojoules) and geometry constants.
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyModel {
+    /// one 8-bit DAC conversion
+    pub dac_pj: f64,
+    /// one 8-bit ADC conversion (dominant periphery cost)
+    pub adc_pj: f64,
+    /// one cross-point read MAC (current summation share per device)
+    pub cell_read_pj: f64,
+    /// one SET pulse on a multi-level cell
+    pub set_pulse_pj: f64,
+    /// one RESET pulse
+    pub reset_pulse_pj: f64,
+    /// one binary-device flip on the LSB array
+    pub lsb_flip_pj: f64,
+    /// digital MAC (outer product / normalization path), per op
+    pub digital_mac_pj: f64,
+    /// tile read latency (ns) — row drive + settle + ADC scan
+    pub tile_read_ns: f64,
+    /// area of one 128x128 tile incl. periphery (mm^2)
+    pub tile_area_mm2: f64,
+    /// SRAM read energy per 32-bit word (the von-Neumann comparison)
+    pub sram_read_pj: f64,
+    /// DRAM read energy per 32-bit word
+    pub dram_read_pj: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        EnergyModel {
+            dac_pj: 0.1,
+            adc_pj: 2.0,
+            cell_read_pj: 0.001,
+            set_pulse_pj: 10.0,
+            reset_pulse_pj: 15.0,
+            lsb_flip_pj: 5.0,
+            digital_mac_pj: 0.25,
+            tile_read_ns: 100.0,
+            tile_area_mm2: 0.015,
+            sram_read_pj: 5.0,
+            dram_read_pj: 640.0,
+        }
+    }
+}
+
+/// Aggregated cost report for a workload phase.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EnergyReport {
+    pub vmm_energy_pj: f64,
+    pub program_energy_pj: f64,
+    pub digital_energy_pj: f64,
+    pub latency_ns: f64,
+}
+
+impl EnergyReport {
+    pub fn total_pj(&self) -> f64 {
+        self.vmm_energy_pj + self.program_energy_pj + self.digital_energy_pj
+    }
+
+    pub fn add(&mut self, other: &EnergyReport) {
+        self.vmm_energy_pj += other.vmm_energy_pj;
+        self.program_energy_pj += other.program_energy_pj;
+        self.digital_energy_pj += other.digital_energy_pj;
+        self.latency_ns += other.latency_ns;
+    }
+}
+
+impl EnergyModel {
+    /// Cost of one batched VMM (`m` input vectors) through a mapped layer.
+    /// Tiles operate in parallel; latency counts sequential input vectors.
+    pub fn layer_vmm(&self, mapping: &LayerMapping, m: usize)
+                     -> EnergyReport {
+        let mut e = 0.0;
+        for t in &mapping.tiles {
+            let dacs = t.used_rows as f64;
+            let adcs = t.used_cols as f64;
+            let cells = t.used() as f64;
+            e += m as f64
+                * (dacs * self.dac_pj + adcs * self.adc_pj
+                   + 2.0 * cells * self.cell_read_pj);
+        }
+        // Partial sums across row-tiles are reduced digitally.
+        let row_tiles = mapping.k.div_ceil(mapping.policy.tile_rows);
+        let digital = if row_tiles > 1 {
+            m as f64 * mapping.n as f64 * (row_tiles - 1) as f64
+                * self.digital_mac_pj
+        } else {
+            0.0
+        };
+        EnergyReport {
+            vmm_energy_pj: e,
+            program_energy_pj: 0.0,
+            digital_energy_pj: digital,
+            latency_ns: m as f64 * self.tile_read_ns,
+        }
+    }
+
+    /// Cost of one HIC update phase on a layer: `flips` LSB bit-flips and
+    /// `set_pulses`/`reset_pulses` MSB programming events, plus the digital
+    /// outer product `m x k x n`.
+    pub fn layer_update(&self, mapping: &LayerMapping, m: usize,
+                        flips: u64, set_pulses: u64, reset_pulses: u64)
+                        -> EnergyReport {
+        EnergyReport {
+            vmm_energy_pj: 0.0,
+            program_energy_pj: flips as f64 * self.lsb_flip_pj
+                + set_pulses as f64 * self.set_pulse_pj
+                + reset_pulses as f64 * self.reset_pulse_pj,
+            digital_energy_pj: m as f64 * mapping.k as f64
+                * mapping.n as f64 * self.digital_mac_pj,
+            latency_ns: self.tile_read_ns, // update is one array cycle
+        }
+    }
+
+    /// The von-Neumann strawman: same VMM with weights streamed from
+    /// SRAM/DRAM into digital MACs (per 32-bit weight word read).
+    pub fn digital_vmm(&self, k: usize, n: usize, m: usize,
+                       from_dram: bool) -> EnergyReport {
+        let words = (k * n) as f64;
+        let mem = if from_dram { self.dram_read_pj } else { self.sram_read_pj };
+        EnergyReport {
+            vmm_energy_pj: 0.0,
+            program_energy_pj: 0.0,
+            digital_energy_pj: m as f64
+                * (words * self.digital_mac_pj + words * mem),
+            latency_ns: 0.0,
+        }
+    }
+
+    /// Chip area of a mapped network (tiles only).
+    pub fn network_area_mm2(&self, mappings: &[LayerMapping]) -> f64 {
+        let tiles: usize = mappings.iter().map(|m| m.tile_count()).sum();
+        tiles as f64 * self.tile_area_mm2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crossbar::mapper::TilingPolicy;
+
+    fn mapping(k: usize, n: usize) -> LayerMapping {
+        LayerMapping::new("t", k, n, TilingPolicy::default())
+    }
+
+    #[test]
+    fn adc_dominates_vmm_periphery() {
+        let m = mapping(128, 128);
+        let e = EnergyModel::default();
+        let r = e.layer_vmm(&m, 1);
+        let adc_share = 128.0 * e.adc_pj / r.vmm_energy_pj;
+        assert!(adc_share > 0.5, "adc share {adc_share}");
+        assert_eq!(r.program_energy_pj, 0.0);
+    }
+
+    #[test]
+    fn in_memory_beats_dram_streaming() {
+        // The core architectural claim: analog VMM ≪ DRAM-streamed digital.
+        let m = mapping(576, 64);
+        let e = EnergyModel::default();
+        let analog = e.layer_vmm(&m, 1).total_pj();
+        let dram = e.digital_vmm(576, 64, 1, true).total_pj();
+        let sram = e.digital_vmm(576, 64, 1, false).total_pj();
+        assert!(analog < sram, "analog={analog} sram={sram}");
+        assert!(sram < dram);
+        assert!(dram / analog > 50.0, "ratio {}", dram / analog);
+    }
+
+    #[test]
+    fn hic_update_cheaper_than_reprogramming() {
+        // LSB bit-flip accumulation vs programming every weight's MSB.
+        let m = mapping(576, 64);
+        let e = EnergyModel::default();
+        let weights = (576 * 64) as u64;
+        // Typical step: ~1 flip/weight, overflow on ~1% of weights.
+        let hic = e.layer_update(&m, 1, weights, weights / 100, 0);
+        // Naive multi-level update: 2 pulses per weight, every step.
+        let naive = e.layer_update(&m, 1, 0, 2 * weights, 0);
+        assert!(hic.program_energy_pj < naive.program_energy_pj / 2.0);
+    }
+
+    #[test]
+    fn partial_sum_reduction_charged() {
+        let small = mapping(128, 64);
+        let tall = mapping(512, 64);
+        let e = EnergyModel::default();
+        assert_eq!(e.layer_vmm(&small, 1).digital_energy_pj, 0.0);
+        assert!(e.layer_vmm(&tall, 1).digital_energy_pj > 0.0);
+    }
+
+    #[test]
+    fn report_accumulates() {
+        let e = EnergyModel::default();
+        let m = mapping(128, 128);
+        let mut total = EnergyReport::default();
+        total.add(&e.layer_vmm(&m, 2));
+        total.add(&e.layer_update(&m, 2, 10, 5, 1));
+        assert!(total.total_pj() > 0.0);
+        assert!(total.latency_ns > 0.0);
+    }
+
+    #[test]
+    fn area_scales_with_tiles() {
+        let e = EnergyModel::default();
+        let a1 = e.network_area_mm2(&[mapping(128, 128)]);
+        let a4 = e.network_area_mm2(&[mapping(256, 256)]);
+        assert!((a4 / a1 - 4.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,168 @@
+//! Layer-to-tile mapping.
+//!
+//! A `[K, N]` crossbar-mapped weight matrix is split onto physical tiles
+//! of `tile_rows x tile_cols` differential pairs.  The mapper computes
+//! the tile grid, per-tile occupancy and array utilization — the numbers
+//! behind the paper's memory-efficiency argument and the inputs to the
+//! energy model.
+
+use crate::runtime::artifact::LayerInfo;
+
+/// Physical tile geometry / mapping policy.
+#[derive(Clone, Copy, Debug)]
+pub struct TilingPolicy {
+    pub tile_rows: usize,
+    pub tile_cols: usize,
+}
+
+impl Default for TilingPolicy {
+    fn default() -> Self {
+        // 128x128: the common crossbar macro size (ISAAC, PUMA) and the
+        // MXU-aligned block the Pallas kernel tiles by.
+        TilingPolicy { tile_rows: 128, tile_cols: 128 }
+    }
+}
+
+/// Coordinates of one physical tile within a layer's grid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileCoord {
+    pub row: usize,
+    pub col: usize,
+    /// occupied rows/cols in this tile (edge tiles are partial)
+    pub used_rows: usize,
+    pub used_cols: usize,
+}
+
+impl TileCoord {
+    pub fn used(&self) -> usize {
+        self.used_rows * self.used_cols
+    }
+}
+
+/// The mapping of one layer onto tiles.
+#[derive(Clone, Debug)]
+pub struct LayerMapping {
+    pub name: String,
+    pub k: usize,
+    pub n: usize,
+    pub policy: TilingPolicy,
+    pub tiles: Vec<TileCoord>,
+}
+
+impl LayerMapping {
+    pub fn new(name: &str, k: usize, n: usize,
+               policy: TilingPolicy) -> Self {
+        let mut tiles = Vec::new();
+        let tr = policy.tile_rows;
+        let tc = policy.tile_cols;
+        let grid_r = k.div_ceil(tr);
+        let grid_c = n.div_ceil(tc);
+        for r in 0..grid_r {
+            for c in 0..grid_c {
+                tiles.push(TileCoord {
+                    row: r,
+                    col: c,
+                    used_rows: (k - r * tr).min(tr),
+                    used_cols: (n - c * tc).min(tc),
+                });
+            }
+        }
+        LayerMapping { name: name.to_string(), k, n, policy, tiles }
+    }
+
+    pub fn from_layer(info: &LayerInfo, policy: TilingPolicy) -> Self {
+        Self::new(&info.name, info.k, info.n, policy)
+    }
+
+    pub fn tile_count(&self) -> usize {
+        self.tiles.len()
+    }
+
+    /// Devices provisioned (2 per weight cell — differential pairs).
+    pub fn devices_provisioned(&self) -> usize {
+        2 * self.tile_count() * self.policy.tile_rows * self.policy.tile_cols
+    }
+
+    pub fn devices_used(&self) -> usize {
+        2 * self.k * self.n
+    }
+
+    /// Fraction of provisioned cross-points that hold real weights.
+    pub fn utilization(&self) -> f64 {
+        self.devices_used() as f64 / self.devices_provisioned() as f64
+    }
+
+    /// Column-current full-scale estimate for ADC range calibration:
+    /// `x_range * w_max * sqrt(active rows)` (uncorrelated-sum scaling).
+    pub fn adc_fullscale(&self, x_range: f32, w_max: f32) -> f32 {
+        x_range * w_max * (self.policy.tile_rows.min(self.k) as f32).sqrt()
+    }
+}
+
+/// Map an entire network; gives the whole-chip tile budget.
+pub fn map_network(layers: &[LayerInfo], policy: TilingPolicy)
+                   -> Vec<LayerMapping> {
+    layers
+        .iter()
+        .map(|l| LayerMapping::from_layer(l, policy))
+        .collect()
+}
+
+/// Total-chip summary used by `crossbar_explorer` and DESIGN.md tables.
+pub fn network_summary(mappings: &[LayerMapping]) -> (usize, usize, f64) {
+    let tiles: usize = mappings.iter().map(|m| m.tile_count()).sum();
+    let used: usize = mappings.iter().map(|m| m.devices_used()).sum();
+    let prov: usize =
+        mappings.iter().map(|m| m.devices_provisioned()).sum();
+    (tiles, used, used as f64 / prov as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_fit() {
+        let m = LayerMapping::new("t", 128, 256, TilingPolicy::default());
+        assert_eq!(m.tile_count(), 2);
+        assert_eq!(m.utilization(), 1.0);
+        assert!(m.tiles.iter().all(|t| t.used() == 128 * 128));
+    }
+
+    #[test]
+    fn partial_edge_tiles() {
+        let m = LayerMapping::new("t", 130, 10, TilingPolicy::default());
+        assert_eq!(m.tile_count(), 2); // 2 row-tiles x 1 col-tile
+        assert_eq!(m.tiles[0].used_rows, 128);
+        assert_eq!(m.tiles[1].used_rows, 2);
+        assert_eq!(m.tiles[0].used_cols, 10);
+        let covered: usize = m.tiles.iter().map(|t| t.used()).sum();
+        assert_eq!(covered, 130 * 10); // every element exactly once
+        assert!((m.utilization() - (130.0 * 10.0) / (2.0 * 128.0 * 128.0))
+            .abs() < 1e-12);
+    }
+
+    #[test]
+    fn coverage_is_a_partition() {
+        // Property: sum of used cells == K*N for arbitrary geometries.
+        for (k, n) in [(1, 1), (27, 16), (129, 129), (576, 64), (64, 640)] {
+            let m = LayerMapping::new("t", k, n, TilingPolicy {
+                tile_rows: 100, tile_cols: 60 });
+            let covered: usize = m.tiles.iter().map(|t| t.used()).sum();
+            assert_eq!(covered, k * n, "k={k} n={n}");
+            // no tile exceeds its physical size
+            assert!(m.tiles.iter().all(
+                |t| t.used_rows <= 100 && t.used_cols <= 60));
+        }
+    }
+
+    #[test]
+    fn adc_fullscale_scaling() {
+        let m = LayerMapping::new("t", 512, 64, TilingPolicy::default());
+        let fs = m.adc_fullscale(4.0, 1.0);
+        assert!((fs - 4.0 * (128.0f32).sqrt()).abs() < 1e-3);
+        // small layers bound by their own K
+        let m = LayerMapping::new("t", 9, 4, TilingPolicy::default());
+        assert!((m.adc_fullscale(4.0, 1.0) - 4.0 * 3.0).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,25 @@
+//! Crossbar microarchitecture simulator (the hw-codesign substrate).
+//!
+//! The paper's accelerator organizes weights on fixed-size analog crossbar
+//! tiles with 8-bit DACs on rows and 8-bit ADCs on columns.  This module
+//! models that periphery at the architecture level:
+//!
+//! * [`quant`] — DAC/ADC transfer functions (bit-exact with the Pallas
+//!   kernel's epilogue)
+//! * [`mapper`] — tiling of layer weight matrices onto physical tiles,
+//!   utilization accounting
+//! * [`tile`] — a functional tile: VMM through the PCM device model with
+//!   quantized I/O (the host-side oracle of the L1 kernel)
+//! * [`energy`] — energy / latency / area estimator with published-order
+//!   constants (ISAAC-class periphery), used for the architecture
+//!   comparisons in DESIGN.md and the `crossbar_explorer` example
+
+pub mod energy;
+pub mod mapper;
+pub mod quant;
+pub mod tile;
+
+pub use energy::{EnergyModel, EnergyReport};
+pub use mapper::{LayerMapping, TileCoord, TilingPolicy};
+pub use quant::{AdcSpec, DacSpec};
+pub use tile::CrossbarTile;

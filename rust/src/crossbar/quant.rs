@@ -1,0 +1,122 @@
+//! DAC / ADC transfer functions.
+//!
+//! Bit-exact with the quantizers baked into the Pallas kernel
+//! (`python/compile/kernels/pcm_vmm.py::_quantize_uniform`): mid-rise
+//! uniform quantizer over `[-range, range]` with `2^bits - 1` steps.
+//! The integration test `runtime_roundtrip::crossbar_vmm_microkernel`
+//! pins the Rust and kernel implementations against each other through
+//! the compiled artifact.
+
+/// Row driver DAC.
+#[derive(Clone, Copy, Debug)]
+pub struct DacSpec {
+    pub bits: u32,
+    pub range: f32,
+}
+
+/// Column ADC.
+#[derive(Clone, Copy, Debug)]
+pub struct AdcSpec {
+    pub bits: u32,
+    pub range: f32,
+}
+
+impl Default for DacSpec {
+    fn default() -> Self {
+        DacSpec { bits: 8, range: 4.0 }
+    }
+}
+
+impl Default for AdcSpec {
+    fn default() -> Self {
+        AdcSpec { bits: 8, range: 16.0 }
+    }
+}
+
+#[inline]
+fn quantize_uniform(v: f32, bits: u32, range: f32) -> f32 {
+    let levels = ((1u32 << bits) - 1) as f32;
+    let step = 2.0 * range / levels;
+    (v.clamp(-range, range) / step).round() * step
+}
+
+impl DacSpec {
+    #[inline]
+    pub fn convert(&self, v: f32) -> f32 {
+        quantize_uniform(v, self.bits, self.range)
+    }
+
+    pub fn step(&self) -> f32 {
+        2.0 * self.range / ((1u32 << self.bits) - 1) as f32
+    }
+
+    /// Worst-case quantization error (half a step inside the range).
+    pub fn max_error_in_range(&self) -> f32 {
+        self.step() / 2.0
+    }
+}
+
+impl AdcSpec {
+    #[inline]
+    pub fn convert(&self, v: f32) -> f32 {
+        quantize_uniform(v, self.bits, self.range)
+    }
+
+    pub fn step(&self) -> f32 {
+        2.0 * self.range / ((1u32 << self.bits) - 1) as f32
+    }
+
+    /// Signal-to-quantization-noise ratio (dB) for a full-scale sine —
+    /// the classic 6.02·bits + 1.76 check, used to validate bit widths.
+    pub fn sqnr_db(&self) -> f32 {
+        6.02 * self.bits as f32 + 1.76
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dac_grid_and_clipping() {
+        let d = DacSpec { bits: 8, range: 4.0 };
+        assert_eq!(d.convert(0.0), 0.0);
+        // Out-of-range clips to the largest on-grid code (127*step with
+        // 255 levels — f32 round puts 4.0/step at 127, same as the kernel).
+        assert_eq!(d.convert(100.0), 127.0 * d.step());
+        assert_eq!(d.convert(-100.0), -127.0 * d.step());
+        assert!(d.convert(100.0) <= d.range);
+        let v = d.convert(1.2345);
+        // On the grid: v / step is an integer.
+        let k = v / d.step();
+        assert!((k - k.round()).abs() < 1e-4);
+        assert!((v - 1.2345).abs() <= d.max_error_in_range() + 1e-6);
+    }
+
+    #[test]
+    fn adc_matches_kernel_constants() {
+        // Same constants as AdcDacConfig defaults; the kernel's epilogue
+        // uses step = 2*16/255.
+        let a = AdcSpec { bits: 8, range: 16.0 };
+        assert!((a.step() - 2.0 * 16.0 / 255.0).abs() < 1e-7);
+        assert_eq!(a.convert(16.1), 127.0 * a.step());
+        let v = a.convert(3.3333);
+        assert!((v - 3.3333).abs() <= a.step() / 2.0 + 1e-6);
+    }
+
+    #[test]
+    fn quantizer_is_idempotent_and_odd() {
+        let d = DacSpec::default();
+        for raw in [-3.7f32, -0.01, 0.0, 0.5, 3.99] {
+            let q = d.convert(raw);
+            assert_eq!(d.convert(q), q);
+            assert_eq!(d.convert(-raw), -q);
+        }
+    }
+
+    #[test]
+    fn sqnr() {
+        let a = AdcSpec { bits: 8, range: 1.0 };
+        assert!((a.sqnr_db() - 49.92).abs() < 0.01);
+    }
+}

@@ -1,0 +1,151 @@
+//! Functional crossbar tile: the host-side oracle of the L1 Pallas kernel.
+//!
+//! One tile = one `[rows, cols]` block of differential PCM pairs with a
+//! DAC per row and an ADC per column.  `vmm()` reproduces, on the device
+//! model, exactly what the lowered kernel computes on its conductance
+//! operands:
+//!
+//! ```text
+//! y[c] = ADC( Σ_r DAC(x[r]) · w_eff[r, c] )
+//! ```
+//!
+//! with `w_eff` the drifted differential read plus per-read Gaussian
+//! noise.  Used by the crossbar explorer, the energy model (activity
+//! factors) and cross-validation tests against the compiled artifact.
+
+use crate::hic::weight::HicWeight;
+use crate::util::rng::Pcg64;
+
+use super::quant::{AdcSpec, DacSpec};
+
+pub struct CrossbarTile {
+    pub weights: HicWeight,
+    pub dac: DacSpec,
+    pub adc: AdcSpec,
+}
+
+impl CrossbarTile {
+    pub fn new(weights: HicWeight, dac: DacSpec, adc: AdcSpec) -> Self {
+        CrossbarTile { weights, dac, adc }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.weights.msb.rows()
+    }
+
+    pub fn cols(&self) -> usize {
+        self.weights.msb.cols()
+    }
+
+    /// One analog VMM: `y = ADC(DAC(x) @ W_read(t))`.
+    ///
+    /// Each call performs one stochastic read of the whole array (fresh
+    /// read noise), like one pass through the hardware.
+    pub fn vmm(&self, x: &[f32], t_now: f32, rng: &mut Pcg64) -> Vec<f32> {
+        assert_eq!(x.len(), self.rows());
+        let xq: Vec<f32> = x.iter().map(|&v| self.dac.convert(v)).collect();
+        let w = self.weights.msb.read_weights(t_now, rng);
+        let (rows, cols) = (self.rows(), self.cols());
+        let mut y = vec![0f32; cols];
+        for r in 0..rows {
+            let xv = xq[r];
+            if xv == 0.0 {
+                continue;
+            }
+            let row = &w[r * cols..(r + 1) * cols];
+            for c in 0..cols {
+                y[c] += xv * row[c];
+            }
+        }
+        y.iter().map(|&v| self.adc.convert(v)).collect()
+    }
+
+    /// Batched VMM (`x: [m, rows]` row-major) — the whole-tile workload
+    /// unit the energy model charges per invocation.
+    pub fn vmm_batch(&self, x: &[f32], m: usize, t_now: f32,
+                     rng: &mut Pcg64) -> Vec<f32> {
+        assert_eq!(x.len(), m * self.rows());
+        let mut out = Vec::with_capacity(m * self.cols());
+        for i in 0..m {
+            out.extend(self.vmm(&x[i * self.rows()..(i + 1) * self.rows()],
+                                t_now, rng));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hic::weight::HicGeometry;
+    use crate::pcm::device::PcmParams;
+
+    fn ideal_tile(rows: usize, cols: usize, w: &[f32]) -> CrossbarTile {
+        let mut rng = Pcg64::new(10, 0);
+        let geom = HicGeometry { stochastic_rounding: false,
+                                 ..Default::default() };
+        let mut hw =
+            HicWeight::new(PcmParams::ideal(), geom, rows, cols, &mut rng);
+        hw.program_init(w, 0.0, &mut rng);
+        CrossbarTile::new(hw, DacSpec::default(), AdcSpec::default())
+    }
+
+    #[test]
+    fn ideal_vmm_matches_host_matmul() {
+        let rows = 8;
+        let cols = 4;
+        let w: Vec<f32> =
+            (0..rows * cols).map(|i| ((i % 7) as f32 - 3.0) / 5.0).collect();
+        let tile = ideal_tile(rows, cols, &w);
+        // the programmed (quantized) weights, not the requested ones:
+        let wq = tile.weights.decode(0.0);
+        let x: Vec<f32> = (0..rows).map(|i| (i as f32) / 4.0 - 1.0).collect();
+        let mut rng = Pcg64::new(11, 0);
+        let y = tile.vmm(&x, 0.0, &mut rng);
+        for c in 0..cols {
+            let mut acc = 0f32;
+            for r in 0..rows {
+                acc += tile.dac.convert(x[r]) * wq[r * cols + c];
+            }
+            let expect = tile.adc.convert(acc);
+            assert!((y[c] - expect).abs() < 1e-5,
+                    "col {c}: {} vs {expect}", y[c]);
+        }
+    }
+
+    #[test]
+    fn noisy_vmm_is_unbiased() {
+        let rows = 16;
+        let cols = 2;
+        let w = vec![0.25f32; rows * cols];
+        let mut rng = Pcg64::new(12, 0);
+        let geom = HicGeometry { stochastic_rounding: false,
+                                 ..Default::default() };
+        let params = PcmParams { nonlinear: false, drift: false,
+                                 ..Default::default() };
+        let mut hw = HicWeight::new(params, geom, rows, cols, &mut rng);
+        hw.program_init(&w, 0.0, &mut rng);
+        let clean = hw.decode(0.0);
+        let tile =
+            CrossbarTile::new(hw, DacSpec::default(), AdcSpec::default());
+        let x = vec![1.0f32; rows];
+        let clean_y: f32 =
+            (0..rows).map(|r| clean[r * cols]).sum();
+        let n = 500;
+        let mean: f64 = (0..n)
+            .map(|_| tile.vmm(&x, 0.0, &mut rng)[0] as f64)
+            .sum::<f64>() / n as f64;
+        assert!((mean - clean_y as f64).abs() < 0.05,
+                "mean={mean} clean={clean_y}");
+    }
+
+    #[test]
+    fn batch_shape() {
+        let tile = ideal_tile(4, 3, &[0.1; 12]);
+        let mut rng = Pcg64::new(13, 0);
+        let x = vec![0.5f32; 2 * 4];
+        let y = tile.vmm_batch(&x, 2, 0.0, &mut rng);
+        assert_eq!(y.len(), 2 * 3);
+        assert!((y[0] - y[3]).abs() < 1e-6); // identical rows
+    }
+}

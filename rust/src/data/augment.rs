@@ -1,0 +1,113 @@
+//! Training-time augmentation (He et al. CIFAR recipe): 4-pixel zero pad
+//! + random 32x32 crop, and random horizontal flip.  Operates on
+//! normalized NHWC f32 images in place.
+
+use crate::util::rng::Pcg64;
+
+use super::{IMG_C, IMG_ELEMS, IMG_H, IMG_W};
+
+pub const PAD: usize = 4;
+
+/// Random pad-crop: shift the image by (dy, dx) ∈ [-PAD, PAD], zero-fill.
+pub fn pad_crop(img: &[f32], dy: i32, dx: i32, out: &mut [f32]) {
+    assert_eq!(img.len(), IMG_ELEMS);
+    assert_eq!(out.len(), IMG_ELEMS);
+    out.fill(0.0);
+    for h in 0..IMG_H as i32 {
+        let sh = h + dy;
+        if !(0..IMG_H as i32).contains(&sh) {
+            continue;
+        }
+        for w in 0..IMG_W as i32 {
+            let sw = w + dx;
+            if !(0..IMG_W as i32).contains(&sw) {
+                continue;
+            }
+            let src = ((sh as usize) * IMG_W + sw as usize) * IMG_C;
+            let dst = ((h as usize) * IMG_W + w as usize) * IMG_C;
+            out[dst..dst + IMG_C].copy_from_slice(&img[src..src + IMG_C]);
+        }
+    }
+}
+
+/// Horizontal flip in place.
+pub fn hflip(img: &mut [f32]) {
+    assert_eq!(img.len(), IMG_ELEMS);
+    for h in 0..IMG_H {
+        for w in 0..IMG_W / 2 {
+            let a = (h * IMG_W + w) * IMG_C;
+            let b = (h * IMG_W + (IMG_W - 1 - w)) * IMG_C;
+            for c in 0..IMG_C {
+                img.swap(a + c, b + c);
+            }
+        }
+    }
+}
+
+/// Full augmentation of one image into `out`.
+pub fn augment(img: &[f32], rng: &mut Pcg64, out: &mut [f32]) {
+    let dy = rng.below(2 * PAD as u64 + 1) as i32 - PAD as i32;
+    let dx = rng.below(2 * PAD as u64 + 1) as i32 - PAD as i32;
+    pad_crop(img, dy, dx, out);
+    if rng.below(2) == 1 {
+        hflip(out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ramp() -> Vec<f32> {
+        (0..IMG_ELEMS).map(|i| i as f32).collect()
+    }
+
+    #[test]
+    fn zero_shift_is_identity() {
+        let img = ramp();
+        let mut out = vec![0f32; IMG_ELEMS];
+        pad_crop(&img, 0, 0, &mut out);
+        assert_eq!(img, out);
+    }
+
+    #[test]
+    fn shift_moves_and_zero_fills() {
+        let img = ramp();
+        let mut out = vec![0f32; IMG_ELEMS];
+        pad_crop(&img, 2, -3, &mut out);
+        // Row 0 of output samples source row 2.
+        let src = (2 * IMG_W + 0) * IMG_C; // w=3+(−3)=0
+        assert_eq!(out[(0 * IMG_W + 3) * IMG_C], img[src]);
+        // Columns < 3 at any row are zero-filled (sw < 0).
+        assert_eq!(out[(5 * IMG_W) * IMG_C], 0.0);
+        // Bottom rows beyond the shift are zero (sh >= 32).
+        assert_eq!(out[((IMG_H - 1) * IMG_W + 10) * IMG_C], 0.0);
+    }
+
+    #[test]
+    fn hflip_is_involution() {
+        let img = ramp();
+        let mut a = img.clone();
+        hflip(&mut a);
+        assert_ne!(a, img);
+        // pixel (0,0) swapped with (0,31)
+        assert_eq!(a[0], img[(IMG_W - 1) * IMG_C]);
+        hflip(&mut a);
+        assert_eq!(a, img);
+    }
+
+    #[test]
+    fn augment_preserves_shape_and_energy_bound() {
+        let img = ramp();
+        let mut rng = Pcg64::new(8, 0);
+        let mut out = vec![0f32; IMG_ELEMS];
+        for _ in 0..20 {
+            augment(&img, &mut rng, &mut out);
+            assert_eq!(out.len(), IMG_ELEMS);
+            // Crop can only remove mass, never add.
+            let sum_in: f32 = img.iter().map(|v| v.abs()).sum();
+            let sum_out: f32 = out.iter().map(|v| v.abs()).sum();
+            assert!(sum_out <= sum_in + 1e-3);
+        }
+    }
+}

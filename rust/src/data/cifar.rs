@@ -1,0 +1,172 @@
+//! CIFAR-10 binary-format loader.
+//!
+//! Standard format: each record is 3073 bytes — 1 label byte + 3072
+//! pixel bytes in CHW order (1024 R, 1024 G, 1024 B), row-major within a
+//! channel.  Train set: `data_batch_1..5.bin` (10 000 records each);
+//! test set: `test_batch.bin`.
+//!
+//! Images convert to normalized NHWC f32 using the standard per-channel
+//! statistics, matching what the compile-path model expects.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::{IMG_C, IMG_ELEMS, IMG_H, IMG_W, MEAN, NUM_CLASSES, STD};
+
+pub const RECORD_BYTES: usize = 1 + 3072;
+
+pub struct CifarDataset {
+    pub train_images: Vec<f32>,
+    pub train_labels: Vec<u8>,
+    pub test_images: Vec<f32>,
+    pub test_labels: Vec<u8>,
+}
+
+impl CifarDataset {
+    /// Look for a CIFAR-10 directory: `$HIC_CIFAR10`, `data/cifar-10`,
+    /// `data/cifar-10-batches-bin`.
+    pub fn discover() -> Option<PathBuf> {
+        let mut cands = Vec::new();
+        if let Ok(p) = std::env::var("HIC_CIFAR10") {
+            cands.push(PathBuf::from(p));
+        }
+        cands.push(PathBuf::from("data/cifar-10"));
+        cands.push(PathBuf::from("data/cifar-10-batches-bin"));
+        cands
+            .into_iter()
+            .find(|p| p.join("test_batch.bin").exists())
+    }
+
+    pub fn load(dir: &Path) -> Result<CifarDataset> {
+        let mut train_images = Vec::new();
+        let mut train_labels = Vec::new();
+        for i in 1..=5 {
+            let path = dir.join(format!("data_batch_{i}.bin"));
+            if !path.exists() {
+                continue; // tolerate partial downloads
+            }
+            let (im, lb) = parse_batch(&path)?;
+            train_images.extend(im);
+            train_labels.extend(lb);
+        }
+        if train_labels.is_empty() {
+            bail!("no data_batch_*.bin found in {}", dir.display());
+        }
+        let (test_images, test_labels) =
+            parse_batch(&dir.join("test_batch.bin"))?;
+        Ok(CifarDataset { train_images, train_labels, test_images,
+                          test_labels })
+    }
+
+    pub fn train_len(&self) -> usize {
+        self.train_labels.len()
+    }
+
+    pub fn test_len(&self) -> usize {
+        self.test_labels.len()
+    }
+
+    pub fn image(&self, i: usize, test: bool) -> &[f32] {
+        let store = if test { &self.test_images } else { &self.train_images };
+        &store[i * IMG_ELEMS..(i + 1) * IMG_ELEMS]
+    }
+
+    pub fn label(&self, i: usize, test: bool) -> u8 {
+        if test {
+            self.test_labels[i]
+        } else {
+            self.train_labels[i]
+        }
+    }
+}
+
+/// Parse one batch file into (normalized NHWC images, labels).
+pub fn parse_batch(path: &Path) -> Result<(Vec<f32>, Vec<u8>)> {
+    let bytes = fs::read(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    parse_records(&bytes)
+        .with_context(|| format!("parsing {}", path.display()))
+}
+
+/// Parse raw record bytes (exposed for tests).
+pub fn parse_records(bytes: &[u8]) -> Result<(Vec<f32>, Vec<u8>)> {
+    if bytes.len() % RECORD_BYTES != 0 {
+        bail!("file size {} is not a multiple of {}", bytes.len(),
+              RECORD_BYTES);
+    }
+    let n = bytes.len() / RECORD_BYTES;
+    let mut images = vec![0f32; n * IMG_ELEMS];
+    let mut labels = vec![0u8; n];
+    for r in 0..n {
+        let rec = &bytes[r * RECORD_BYTES..(r + 1) * RECORD_BYTES];
+        let label = rec[0];
+        if label as usize >= NUM_CLASSES {
+            bail!("record {r}: label {label} out of range");
+        }
+        labels[r] = label;
+        let pix = &rec[1..];
+        // CHW u8 -> normalized NHWC f32
+        for c in 0..IMG_C {
+            for h in 0..IMG_H {
+                for w in 0..IMG_W {
+                    let v = pix[c * 1024 + h * IMG_W + w] as f32 / 255.0;
+                    images[r * IMG_ELEMS + (h * IMG_W + w) * IMG_C + c] =
+                        (v - MEAN[c]) / STD[c];
+                }
+            }
+        }
+    }
+    Ok((images, labels))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build one synthetic record: label + CHW gradient pattern.
+    fn record(label: u8) -> Vec<u8> {
+        let mut rec = vec![label];
+        for c in 0..3u32 {
+            for i in 0..1024u32 {
+                rec.push(((i + c * 37) % 256) as u8);
+            }
+        }
+        rec
+    }
+
+    #[test]
+    fn parses_layout_and_normalization() {
+        let mut bytes = record(3);
+        bytes.extend(record(9));
+        let (im, lb) = parse_records(&bytes).unwrap();
+        assert_eq!(lb, vec![3, 9]);
+        assert_eq!(im.len(), 2 * IMG_ELEMS);
+        // First pixel of record 0: R channel byte 0 = 0 -> (0-mean)/std
+        let expect_r = (0.0 - MEAN[0]) / STD[0];
+        assert!((im[0] - expect_r).abs() < 1e-6);
+        // Its G channel byte: (0 + 37) % 256 = 37
+        let expect_g = (37.0 / 255.0 - MEAN[1]) / STD[1];
+        assert!((im[1] - expect_g).abs() < 1e-6);
+        // Pixel (h=1, w=2) R channel = byte 34 of channel plane
+        let v = ((34u32) % 256) as f32 / 255.0;
+        let idx = (IMG_W + 2) * IMG_C;
+        assert!((im[idx] - (v - MEAN[0]) / STD[0]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_bad_sizes_and_labels() {
+        assert!(parse_records(&[0u8; 100]).is_err());
+        let mut bytes = record(3);
+        bytes[0] = 11; // label out of range
+        assert!(parse_records(&bytes).is_err());
+    }
+
+    #[test]
+    fn discover_absent_is_none() {
+        // (environment has no dataset; ensure the probe is quiet)
+        std::env::remove_var("HIC_CIFAR10");
+        let _ = CifarDataset::discover(); // must not panic
+    }
+}

@@ -1,0 +1,31 @@
+//! Data pipeline: CIFAR-10 loading, synthetic fallback, augmentation and
+//! batching with background prefetch.
+//!
+//! * [`cifar`] — parser for the standard CIFAR-10 binary format
+//!   (`data_batch_*.bin`, 3073 bytes/record).  Used automatically when a
+//!   dataset directory is present (`$HIC_CIFAR10` or `data/cifar-10`).
+//! * [`synthetic`] — structured synthetic CIFAR-like dataset (per-class
+//!   smooth prototypes + noise): linearly non-separable but learnable, so
+//!   accuracy orderings across PCM ablations behave like a vision task.
+//! * [`augment`] — pad-crop + horizontal flip (He et al. recipe).
+//! * [`loader`] — epoch shuffling, batch assembly into `HostTensor`s, and
+//!   a background prefetch thread that overlaps augmentation with PJRT
+//!   execution.
+
+pub mod augment;
+pub mod cifar;
+pub mod loader;
+pub mod synthetic;
+
+pub use loader::{Batch, DataLoader, Dataset};
+
+/// Image geometry shared by the whole pipeline (CIFAR-10).
+pub const IMG_H: usize = 32;
+pub const IMG_W: usize = 32;
+pub const IMG_C: usize = 3;
+pub const IMG_ELEMS: usize = IMG_H * IMG_W * IMG_C;
+pub const NUM_CLASSES: usize = 10;
+
+/// Per-channel normalization constants (CIFAR-10 standard).
+pub const MEAN: [f32; 3] = [0.4914, 0.4822, 0.4465];
+pub const STD: [f32; 3] = [0.2470, 0.2435, 0.2616];

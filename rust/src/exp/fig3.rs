@@ -1,0 +1,139 @@
+//! FIG3 — ablation of PCM non-idealities (paper Fig. 3).
+//!
+//! Trains the same network under eight PCM-model variants (each its own
+//! artifact set, flags baked at lowering time) plus the FP32 baseline,
+//! and reports training/eval accuracy per variant.  Paper shape to
+//! reproduce:
+//!
+//! * nonlinearity < linear (programming-curve saturation hurts),
+//! * write/read stochasticity hurt further,
+//! * **drift alone helps** (acts as weight-decay regularization),
+//! * full model trails the FP32 baseline (by ~4.4 % in the paper's
+//!   470 K-parameter / 205-epoch setting).
+
+use anyhow::Result;
+
+use crate::coordinator::BaselineTrainer;
+use crate::util::csv::{CsvCell, CsvWriter};
+use crate::log_info;
+
+use super::{config_dir, ensure_out_dir, mean_std, print_row, run_hic,
+            ExpOptions};
+
+/// Variant tags in the paper's bar order.
+pub const VARIANTS: [&str; 8] = [
+    "linear",
+    "linear_write",
+    "linear_read",
+    "linear_drift",
+    "nonlinear",
+    "nonlinear_write",
+    "nonlinear_read",
+    "full",
+];
+
+#[derive(Debug, Clone)]
+pub struct Fig3Row {
+    pub variant: String,
+    pub train_acc: f64,
+    pub train_std: f64,
+    pub eval_acc: f64,
+    pub eval_std: f64,
+}
+
+pub fn run(opts: &ExpOptions) -> Result<Vec<Fig3Row>> {
+    ensure_out_dir(&opts.out_dir)?;
+    let mut rows = Vec::new();
+
+    // FP32 reference (lowered alongside fig3_linear).
+    let base_dir = config_dir("fig3_linear")?;
+    let mut base_accs = Vec::new();
+    for &seed in &opts.seeds {
+        let mut bt =
+            BaselineTrainer::new(&base_dir, opts.trainer_options(seed))?;
+        bt.lr = crate::coordinator::schedule::LrSchedule::paper(
+            0.1, 0.1, opts.steps);
+        bt.train_steps(opts.steps)?;
+        base_accs.push(bt.evaluate(opts.eval_batches)?.accuracy);
+    }
+    let (bm, bs) = mean_std(&base_accs);
+    rows.push(Fig3Row {
+        variant: "fp32_baseline".into(),
+        train_acc: f64::NAN,
+        train_std: 0.0,
+        eval_acc: bm,
+        eval_std: bs,
+    });
+    log_info!("fig3: fp32 baseline eval acc {:.3} ± {:.3}", bm, bs);
+
+    for tag in VARIANTS {
+        let cfg = format!("fig3_{tag}");
+        let mut train_accs = Vec::new();
+        let mut eval_accs = Vec::new();
+        for &seed in &opts.seeds {
+            let (t, acc) = run_hic(&cfg, opts, seed)?;
+            train_accs.push(t.metrics.smoothed_acc(20));
+            eval_accs.push(acc);
+        }
+        let (tm, ts) = mean_std(&train_accs);
+        let (em, es) = mean_std(&eval_accs);
+        log_info!("fig3 {tag}: train {:.3} ± {:.3}, eval {:.3} ± {:.3}",
+                  tm, ts, em, es);
+        rows.push(Fig3Row {
+            variant: tag.to_string(),
+            train_acc: tm,
+            train_std: ts,
+            eval_acc: em,
+            eval_std: es,
+        });
+    }
+
+    write_csv(opts, &rows)?;
+    print_table(&rows);
+    Ok(rows)
+}
+
+fn write_csv(opts: &ExpOptions, rows: &[Fig3Row]) -> Result<()> {
+    let mut w = CsvWriter::new(
+        &["variant", "train_acc", "train_std", "eval_acc", "eval_std",
+          "steps", "seeds"]);
+    for r in rows {
+        w.row(&[
+            CsvCell::s(&r.variant),
+            CsvCell::F(r.train_acc),
+            CsvCell::F(r.train_std),
+            CsvCell::F(r.eval_acc),
+            CsvCell::F(r.eval_std),
+            CsvCell::U(opts.steps as u64),
+            CsvCell::U(opts.seeds.len() as u64),
+        ]);
+    }
+    w.write(&opts.out_dir.join("fig3_ablation.csv"))
+}
+
+fn print_table(rows: &[Fig3Row]) {
+    println!("\nFIG3 — PCM non-ideality ablation (paper Fig. 3)");
+    print_row(&["variant".into(), "train acc".into(), "eval acc".into()]);
+    for r in rows {
+        print_row(&[
+            r.variant.clone(),
+            if r.train_acc.is_nan() {
+                "-".into()
+            } else {
+                format!("{:.3} ± {:.3}", r.train_acc, r.train_std)
+            },
+            format!("{:.3} ± {:.3}", r.eval_acc, r.eval_std),
+        ]);
+    }
+    // Shape checks (reported, not asserted — short runs are noisy).
+    let get = |v: &str| rows.iter().find(|r| r.variant == v)
+        .map(|r| r.eval_acc);
+    if let (Some(lin), Some(drift), Some(full)) =
+        (get("linear"), get("linear_drift"), get("full"))
+    {
+        println!("shape: drift-vs-linear delta = {:+.3} (paper: positive)",
+                 drift - lin);
+        println!("shape: full-vs-linear delta  = {:+.3} (paper: negative)",
+                 full - lin);
+    }
+}

@@ -1,0 +1,168 @@
+//! FIG4 — accuracy vs. inference model size across width multipliers
+//! (paper Fig. 4).
+//!
+//! HIC stores ~4 bits/weight at inference (MSB array only); the FP32
+//! baseline stores 32.  Sweeping the network width multiplier for both
+//! gives two accuracy-vs-size curves; the paper's shape:
+//!
+//! * HIC sits **above** the baseline at comparable model size (≥ 1 %),
+//! * HIC reaches baseline-comparable accuracy at **~50 % less** size.
+
+use anyhow::Result;
+
+use crate::coordinator::BaselineTrainer;
+use crate::runtime::Engine;
+use crate::util::csv::{CsvCell, CsvWriter};
+use crate::log_info;
+
+use super::{config_dir, ensure_out_dir, mean_std, print_row, run_hic,
+            ExpOptions};
+
+pub const HIC_WIDTHS: [&str; 4] = ["0p5", "0p75", "1p0", "1p5"];
+pub const BASE_WIDTHS: [&str; 4] = ["0p25", "0p5", "0p75", "1p0"];
+
+#[derive(Debug, Clone)]
+pub struct Fig4Row {
+    pub series: &'static str,
+    pub width: String,
+    pub model_kb: f64,
+    pub eval_acc: f64,
+    pub eval_std: f64,
+}
+
+pub fn run(opts: &ExpOptions) -> Result<Vec<Fig4Row>> {
+    ensure_out_dir(&opts.out_dir)?;
+    let mut rows = Vec::new();
+
+    for w in HIC_WIDTHS {
+        let cfg = format!("fig4_hic_w{w}");
+        let mut accs = Vec::new();
+        let mut kb = 0.0;
+        for &seed in &opts.seeds {
+            let (t, acc) = run_hic(&cfg, opts, seed)?;
+            kb = t.engine.manifest.inference_model_bits(true) as f64
+                / 8.0 / 1024.0;
+            accs.push(acc);
+        }
+        let (m, s) = mean_std(&accs);
+        log_info!("fig4 hic w={w}: {:.1} KB, acc {:.3} ± {:.3}", kb, m, s);
+        rows.push(Fig4Row { series: "hic", width: w.replace('p', "."),
+                            model_kb: kb, eval_acc: m, eval_std: s });
+    }
+
+    for w in BASE_WIDTHS {
+        let cfg = format!("fig4_base_w{w}");
+        let dir = config_dir(&cfg)?;
+        let mut accs = Vec::new();
+        let mut kb = 0.0;
+        for &seed in &opts.seeds {
+            let mut bt =
+                BaselineTrainer::new(&dir, opts.trainer_options(seed))?;
+            bt.lr = crate::coordinator::schedule::LrSchedule::paper(
+                0.1, 0.1, opts.steps);
+            bt.train_steps(opts.steps)?;
+            accs.push(bt.evaluate(opts.eval_batches)?.accuracy);
+            kb = bt.engine.manifest.inference_model_bits(false) as f64
+                / 8.0 / 1024.0;
+        }
+        let (m, s) = mean_std(&accs);
+        log_info!("fig4 base w={w}: {:.1} KB, acc {:.3} ± {:.3}", kb, m, s);
+        rows.push(Fig4Row { series: "fp32", width: w.replace('p', "."),
+                            model_kb: kb, eval_acc: m, eval_std: s });
+    }
+
+    write_csv(opts, &rows)?;
+    print_table(&rows);
+    Ok(rows)
+}
+
+/// Model size (KB) of a config without training it — for reports.
+pub fn model_size_kb(config: &str, hic: bool) -> Result<f64> {
+    let engine = Engine::load(&config_dir(config)?)?;
+    Ok(engine.manifest.inference_model_bits(hic) as f64 / 8.0 / 1024.0)
+}
+
+fn write_csv(opts: &ExpOptions, rows: &[Fig4Row]) -> Result<()> {
+    let mut w = CsvWriter::new(
+        &["series", "width_mult", "model_kb", "eval_acc", "eval_std",
+          "steps", "seeds"]);
+    for r in rows {
+        w.row(&[
+            CsvCell::s(r.series),
+            CsvCell::s(&r.width),
+            CsvCell::F(r.model_kb),
+            CsvCell::F(r.eval_acc),
+            CsvCell::F(r.eval_std),
+            CsvCell::U(opts.steps as u64),
+            CsvCell::U(opts.seeds.len() as u64),
+        ]);
+    }
+    w.write(&opts.out_dir.join("fig4_width_sweep.csv"))
+}
+
+fn print_table(rows: &[Fig4Row]) {
+    println!("\nFIG4 — accuracy vs inference model size (paper Fig. 4)");
+    print_row(&["series".into(), "width".into(), "size KB".into(),
+                "eval acc".into()]);
+    for r in rows {
+        print_row(&[
+            r.series.to_string(),
+            r.width.clone(),
+            format!("{:.1}", r.model_kb),
+            format!("{:.3} ± {:.3}", r.eval_acc, r.eval_std),
+        ]);
+    }
+    shape_checks(rows);
+}
+
+/// The two headline comparisons of the figure.
+pub fn shape_checks(rows: &[Fig4Row]) {
+    let hic: Vec<_> = rows.iter().filter(|r| r.series == "hic").collect();
+    let base: Vec<_> = rows.iter().filter(|r| r.series == "fp32").collect();
+    if hic.is_empty() || base.is_empty() {
+        return;
+    }
+    // (a) At comparable model size, HIC above baseline: compare every HIC
+    // point against the baseline point with the closest size.
+    let mut wins = 0;
+    let mut total = 0;
+    for h in &hic {
+        if let Some(b) = base.iter().min_by(|a, b| {
+            (a.model_kb - h.model_kb)
+                .abs()
+                .partial_cmp(&(b.model_kb - h.model_kb).abs())
+                .unwrap()
+        }) {
+            total += 1;
+            if h.eval_acc > b.eval_acc {
+                wins += 1;
+            }
+            println!(
+                "shape: HIC {:.0}KB acc {:.3} vs FP32 {:.0}KB acc {:.3} \
+                 -> {}",
+                h.model_kb, h.eval_acc, b.model_kb, b.eval_acc,
+                if h.eval_acc > b.eval_acc { "HIC wins" } else { "FP32 wins" }
+            );
+        }
+    }
+    println!("shape: HIC wins at matched size in {wins}/{total} pairings \
+              (paper: all)");
+    // (b) size ratio at matched accuracy: find smallest HIC model whose
+    // accuracy >= the largest baseline's, report the size ratio.
+    if let Some(best_base) = base
+        .iter()
+        .max_by(|a, b| a.eval_acc.partial_cmp(&b.eval_acc).unwrap())
+    {
+        if let Some(h) = hic
+            .iter()
+            .filter(|h| h.eval_acc >= best_base.eval_acc)
+            .min_by(|a, b| a.model_kb.partial_cmp(&b.model_kb).unwrap())
+        {
+            println!(
+                "shape: matched-accuracy size ratio HIC/FP32 = {:.2} \
+                 (paper: ~0.5)",
+                h.model_kb / best_base.model_kb
+            );
+        }
+    }
+}

@@ -1,0 +1,106 @@
+//! FIG5 — post-training inference accuracy under PCM drift, with and
+//! without AdaBS compensation (paper Fig. 5).
+//!
+//! Train once, checkpoint the device state, then probe inference accuracy
+//! at exponentially spaced times from 10^2 to 4·10^7 s:
+//!
+//! * **no compensation** — evaluate the drifted weights as-is;
+//! * **AdaBS** — first restore the checkpointed BN statistics, run the
+//!   calibration pass (~5 % of the train set) *at the probe time*, then
+//!   evaluate.
+//!
+//! Paper shape: flat to ~10^6 s; large degradation at a year without
+//! compensation (−9.37 %), almost none with AdaBS (−0.12 %).
+
+use anyhow::Result;
+
+use crate::util::csv::{CsvCell, CsvWriter};
+use crate::log_info;
+
+use super::{ensure_out_dir, print_row, run_hic, ExpOptions};
+
+/// Probe times (s): 1e2 … 4e7 (~1.3 years), paper Fig. 5 x-axis.
+pub fn probe_times() -> Vec<f64> {
+    vec![1e2, 1e3, 1e4, 1e5, 1e6, 1e7, 4e7]
+}
+
+#[derive(Debug, Clone)]
+pub struct Fig5Row {
+    pub t_seconds: f64,
+    pub acc_nocomp: f64,
+    pub acc_adabs: f64,
+}
+
+pub fn run(opts: &ExpOptions, config: &str) -> Result<Vec<Fig5Row>> {
+    ensure_out_dir(&opts.out_dir)?;
+    let seed = *opts.seeds.first().unwrap_or(&42);
+    log_info!("fig5: training '{config}' for {} steps", opts.steps);
+    let (mut trainer, trained_acc) = run_hic(config, opts, seed)?;
+    log_info!("fig5: trained, eval acc {:.3}", trained_acc);
+
+    // Reference point: the state right after training.
+    let snapshot = trainer.state.clone();
+    let adabs_batches = trainer.adabs_batches();
+
+    let mut rows = Vec::new();
+    for &t in &probe_times().iter().copied().collect::<Vec<_>>() {
+        let t_f = t as f32;
+        // (a) no compensation
+        trainer.state = snapshot.clone();
+        let no_comp = trainer.evaluate(opts.eval_batches, Some(t_f))?;
+        // (b) AdaBS at the probe time
+        trainer.state = snapshot.clone();
+        trainer.adabs_calibrate(adabs_batches, t_f)?;
+        let with = trainer.evaluate(opts.eval_batches, Some(t_f))?;
+        log_info!(
+            "fig5 t={t:.0e}s: nocomp {:.3}, adabs {:.3}",
+            no_comp.accuracy, with.accuracy
+        );
+        rows.push(Fig5Row {
+            t_seconds: t,
+            acc_nocomp: no_comp.accuracy,
+            acc_adabs: with.accuracy,
+        });
+    }
+
+    write_csv(opts, &rows, trained_acc)?;
+    print_table(&rows, trained_acc);
+    Ok(rows)
+}
+
+fn write_csv(opts: &ExpOptions, rows: &[Fig5Row],
+             trained_acc: f64) -> Result<()> {
+    let mut w = CsvWriter::new(
+        &["t_seconds", "acc_nocomp", "acc_adabs", "trained_acc", "steps"]);
+    for r in rows {
+        w.row(&[
+            CsvCell::F(r.t_seconds),
+            CsvCell::F(r.acc_nocomp),
+            CsvCell::F(r.acc_adabs),
+            CsvCell::F(trained_acc),
+            CsvCell::U(opts.steps as u64),
+        ]);
+    }
+    w.write(&opts.out_dir.join("fig5_drift.csv"))
+}
+
+fn print_table(rows: &[Fig5Row], trained_acc: f64) {
+    println!("\nFIG5 — drifted inference accuracy (paper Fig. 5)");
+    print_row(&["t (s)".into(), "no comp".into(), "AdaBS".into()]);
+    for r in rows {
+        print_row(&[
+            format!("{:.0e}", r.t_seconds),
+            format!("{:.3}", r.acc_nocomp),
+            format!("{:.3}", r.acc_adabs),
+        ]);
+    }
+    if let (Some(first), Some(last)) = (rows.first(), rows.last()) {
+        println!(
+            "shape: year-long drop no-comp {:+.3} (paper −0.094), \
+             AdaBS {:+.3} (paper −0.001); trained acc {:.3}",
+            last.acc_nocomp - first.acc_nocomp,
+            last.acc_adabs - first.acc_adabs,
+            trained_acc
+        );
+    }
+}

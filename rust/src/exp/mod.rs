@@ -1,0 +1,128 @@
+//! Experiment drivers — one per figure of the paper's evaluation.
+//!
+//! Each driver regenerates its figure's data series as CSV under
+//! `results/` and prints the paper-comparison rows.  Absolute accuracies
+//! differ from the paper (scaled networks, synthetic data, short runs —
+//! see DESIGN.md §2); the drivers check and report the *shape*: orderings,
+//! gaps, crossovers.
+//!
+//! | driver | paper figure | headline shape |
+//! |--------|--------------|----------------|
+//! | [`fig3`] | Fig. 3 | non-ideality ablation ordering; drift helps |
+//! | [`fig4`] | Fig. 4 | HIC above baseline at matched model size |
+//! | [`fig5`] | Fig. 5 | drift knee at ~1e6 s; AdaBS recovers it |
+//! | [`fig6`] | Fig. 6 | WE cycles: MSB ≪ LSB ≪ 1e8 endurance |
+
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::schedule::LrSchedule;
+use crate::coordinator::{Trainer, TrainerOptions};
+use crate::runtime::artifact::artifact_root;
+
+/// Common run parameters shared by the drivers.
+#[derive(Clone, Debug)]
+pub struct ExpOptions {
+    pub steps: usize,
+    pub seeds: Vec<u64>,
+    pub eval_batches: usize,
+    pub lr0: f32,
+    pub lr_decay: f32,
+    pub data_scale: f64,
+    pub out_dir: PathBuf,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        ExpOptions {
+            steps: 300,
+            seeds: vec![42],
+            eval_batches: 16,
+            lr0: 0.5,
+            lr_decay: 0.45,
+            data_scale: 0.05,
+            out_dir: PathBuf::from("results"),
+        }
+    }
+}
+
+impl ExpOptions {
+    pub fn trainer_options(&self, seed: u64) -> TrainerOptions {
+        TrainerOptions {
+            seed,
+            lr: LrSchedule::paper(self.lr0, self.lr_decay, self.steps),
+            data_scale: self.data_scale,
+            ..Default::default()
+        }
+    }
+}
+
+/// Resolve `artifacts/<config>`, with a actionable error if missing.
+pub fn config_dir(config: &str) -> Result<PathBuf> {
+    let dir = artifact_root().join(config);
+    if !dir.join("manifest.json").exists() {
+        anyhow::bail!(
+            "artifact set '{config}' not found under {} — build it with \
+             `cd python && python -m compile.aot --configs {config}` (or \
+             `make artifacts-all`)",
+            artifact_root().display()
+        );
+    }
+    Ok(dir)
+}
+
+/// Train one HIC run to completion and return (trainer, eval accuracy).
+pub fn run_hic(config: &str, opts: &ExpOptions, seed: u64)
+               -> Result<(Trainer, f64)> {
+    let dir = config_dir(config)?;
+    let mut t = Trainer::new(&dir, opts.trainer_options(seed))
+        .with_context(|| format!("creating trainer for '{config}'"))?;
+    t.train_steps(opts.steps)?;
+    let ev = t.evaluate(opts.eval_batches, None)?;
+    Ok((t, ev.accuracy))
+}
+
+/// Mean ± population std over seeds.
+pub fn mean_std(vals: &[f64]) -> (f64, f64) {
+    let n = vals.len().max(1) as f64;
+    let mean = vals.iter().sum::<f64>() / n;
+    let var = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n;
+    (mean, var.sqrt())
+}
+
+/// Markdown-ish row printer used by all drivers.
+pub fn print_row(cols: &[String]) {
+    println!("| {} |", cols.join(" | "));
+}
+
+pub fn ensure_out_dir(dir: &Path) -> Result<()> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating {}", dir.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basics() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((s - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        let (m, s) = mean_std(&[5.0]);
+        assert_eq!(m, 5.0);
+        assert_eq!(s, 0.0);
+    }
+
+    #[test]
+    fn missing_config_is_actionable() {
+        let err = config_dir("definitely_not_a_config").unwrap_err();
+        assert!(err.to_string().contains("compile.aot"));
+    }
+}

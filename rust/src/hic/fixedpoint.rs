@@ -1,0 +1,191 @@
+//! The LSB array's signed fixed-point accumulator semantics.
+//!
+//! Must stay **bit-exact** with `python/compile/kernels/lsb_update.py`
+//! (and its jnp oracle): round-toward-zero overflow division, residue in
+//! `(-half_range, half_range)`, two's-complement per-bit flip accounting
+//! in offset-encoded u(nbits).
+
+/// Outcome of accumulating one quantized update into one weight's LSB
+/// register.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct UpdateOutcome {
+    /// residual accumulator counts after overflow extraction
+    pub acc: i32,
+    /// whole MSB quanta carried out (signed)
+    pub overflow: i32,
+    /// binary devices rewritten (SET or RESET)
+    pub flips: u32,
+    /// of those, 1→0 transitions (RESET pulses — WE-cycle commits)
+    pub resets: u32,
+}
+
+/// A single weight's accumulator register.
+#[derive(Clone, Copy, Debug)]
+pub struct FixedPointAccumulator {
+    pub bits: u32,
+    pub acc: i32,
+}
+
+impl FixedPointAccumulator {
+    pub fn new(bits: u32) -> Self {
+        assert!((2..=16).contains(&bits));
+        FixedPointAccumulator { bits, acc: 0 }
+    }
+
+    pub fn half_range(&self) -> i32 {
+        1 << (self.bits - 1)
+    }
+
+    /// Accumulate `delta` counts; extract overflow (round-toward-zero).
+    pub fn update(&mut self, delta: i32) -> UpdateOutcome {
+        let half = self.half_range();
+        let s = self.acc + delta;
+        // Round-toward-zero division (Rust `/` already truncates).
+        let ovf = s / half;
+        let mut res = s - ovf * half;
+        res = res.clamp(-half, half - 1);
+
+        let old_u = (self.acc + half) as u32;
+        let new_u = (res + half) as u32;
+        let changed = old_u ^ new_u;
+        let mut flips = 0u32;
+        let mut resets = 0u32;
+        for b in 0..self.bits {
+            let bit = (changed >> b) & 1;
+            flips += bit;
+            resets += ((old_u >> b) & 1) & bit;
+        }
+        self.acc = res;
+        UpdateOutcome { acc: res, overflow: ovf, flips, resets }
+    }
+
+    /// Quantize a weight-space update to accumulator counts with optional
+    /// stochastic rounding (mirrors `hic.py::apply_update`).
+    pub fn quantize_counts(dw_over_lsb_step: f32, stochastic: bool,
+                           dither: f32, half: i32) -> i32 {
+        let clamp = (2 * half - 1) as f32;
+        let v = dw_over_lsb_step;
+        let q = if stochastic {
+            debug_assert!((0.0..1.0).contains(&dither));
+            (v + dither).floor()
+        } else {
+            v.round()
+        };
+        q.clamp(-clamp, clamp) as i32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn acc7(start: i32) -> FixedPointAccumulator {
+        let mut a = FixedPointAccumulator::new(7);
+        a.acc = start;
+        a
+    }
+
+    #[test]
+    fn overflow_round_toward_zero() {
+        // Mirrors the kernel smoke cases.
+        let cases = [
+            // (acc, delta, acc', ovf)
+            (0, 63, 63, 0),
+            (0, 64, 0, 1),
+            (0, -64, 0, -1),
+            (-1, -64, -1, -1),
+            (63, 1, 0, 1),
+            (-63, -2, -1, -1),
+            (10, 127, 9, 2),
+            (-10, -127, -9, -2),
+            (0, 0, 0, 0),
+        ];
+        for (start, delta, want_acc, want_ovf) in cases {
+            let mut a = acc7(start);
+            let out = a.update(delta);
+            assert_eq!((out.acc, out.overflow), (want_acc, want_ovf),
+                       "acc={start} delta={delta}");
+            // Conservation: start + delta == acc' + 64*ovf
+            assert_eq!(start + delta, out.acc + 64 * out.overflow);
+        }
+    }
+
+    #[test]
+    fn residue_always_in_open_range() {
+        let mut rng = Pcg64::new(1, 0);
+        for _ in 0..10_000 {
+            let start = rng.below(127) as i32 - 63;
+            let delta = rng.below(255) as i32 - 127;
+            let mut a = acc7(start);
+            let out = a.update(delta);
+            assert!((-64..=63).contains(&out.acc),
+                    "start={start} delta={delta} -> {out:?}");
+            assert_eq!(start + delta, out.acc + 64 * out.overflow);
+        }
+    }
+
+    #[test]
+    fn flip_accounting() {
+        // 0 -> 1 counts one flip (a SET on bit 0 of the offset register:
+        // 64=1000000b -> 65=1000001b).
+        let mut a = acc7(0);
+        let out = a.update(1);
+        assert_eq!(out.flips, 1);
+        assert_eq!(out.resets, 0);
+
+        // 63 + 1 -> overflow: register 127 (1111111b) -> 64 (1000000b):
+        // six 1->0 transitions.
+        let mut a = acc7(63);
+        let out = a.update(1);
+        assert_eq!(out.overflow, 1);
+        assert_eq!(out.flips, 6);
+        assert_eq!(out.resets, 6);
+
+        // No change -> no flips.
+        let mut a = acc7(17);
+        let out = a.update(0);
+        assert_eq!(out.flips, 0);
+    }
+
+    #[test]
+    fn flips_bounded_by_bits() {
+        let mut rng = Pcg64::new(2, 0);
+        for _ in 0..5_000 {
+            let start = rng.below(127) as i32 - 63;
+            let delta = rng.below(255) as i32 - 127;
+            let mut a = acc7(start);
+            let out = a.update(delta);
+            assert!(out.flips <= 7);
+            assert!(out.resets <= out.flips);
+        }
+    }
+
+    #[test]
+    fn quantize_counts_deterministic() {
+        assert_eq!(
+            FixedPointAccumulator::quantize_counts(2.4, false, 0.0, 64), 2);
+        assert_eq!(
+            FixedPointAccumulator::quantize_counts(-2.6, false, 0.0, 64),
+            -3);
+        // clamp at +-127
+        assert_eq!(
+            FixedPointAccumulator::quantize_counts(500.0, false, 0.0, 64),
+            127);
+        assert_eq!(
+            FixedPointAccumulator::quantize_counts(-500.0, false, 0.0, 64),
+            -127);
+    }
+
+    #[test]
+    fn quantize_counts_stochastic_unbiased() {
+        let mut rng = Pcg64::new(3, 0);
+        let v = 0.3f32;
+        let n = 50_000;
+        let mean: f64 = (0..n)
+            .map(|_| FixedPointAccumulator::quantize_counts(
+                v, true, rng.uniform() as f32, 64) as f64)
+            .sum::<f64>() / n as f64;
+        assert!((mean - 0.3).abs() < 0.01, "mean={mean}");
+    }
+}

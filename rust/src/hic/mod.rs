@@ -1,0 +1,20 @@
+//! HIC weight-representation substrate (host-side twin of
+//! `python/compile/hic.py` + `kernels/lsb_update.py`).
+//!
+//! * [`fixedpoint`] — the 7-bit signed LSB accumulator: saturating
+//!   accumulate, round-toward-zero overflow extraction, per-bit flip
+//!   accounting.  Bit-exact with the Pallas kernel (shared golden vectors
+//!   in tests).
+//! * [`weight`] — one HIC-mapped weight tensor over a
+//!   [`crate::pcm::DifferentialPair`] MSB array + accumulator LSB array,
+//!   with the full update / refresh / decode cycle.
+//!
+//! The coordinator uses this twin for host-side analyses (endurance
+//! projections, refresh policy studies, crossbar mapping) and the test
+//! suite uses it to cross-validate the lowered JAX implementation.
+
+pub mod fixedpoint;
+pub mod weight;
+
+pub use fixedpoint::{FixedPointAccumulator, UpdateOutcome};
+pub use weight::HicWeight;

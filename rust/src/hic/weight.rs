@@ -1,0 +1,256 @@
+//! One HIC-mapped weight tensor: MSB differential pair + LSB accumulators.
+//!
+//! Host-side twin of the per-layer state inside the lowered training
+//! programs; the update cycle (quantize → accumulate → overflow → program
+//! → selective refresh) matches `python/compile/hic.py` step for step.
+//! Used by the crossbar simulator, the refresh/endurance analyses and the
+//! property-test suite.
+
+use crate::pcm::array::{DifferentialPair, G_SPAN};
+use crate::pcm::device::PcmParams;
+use crate::pcm::endurance::EnduranceLedger;
+use crate::util::rng::Pcg64;
+
+use super::fixedpoint::FixedPointAccumulator;
+
+/// Geometry of the hybrid representation (mirrors `HicConfig`).
+#[derive(Clone, Copy, Debug)]
+pub struct HicGeometry {
+    pub msb_bits: u32,
+    pub lsb_bits: u32,
+    pub w_max: f32,
+    pub max_pulses: u32,
+    pub stochastic_rounding: bool,
+}
+
+impl Default for HicGeometry {
+    fn default() -> Self {
+        HicGeometry { msb_bits: 4, lsb_bits: 7, w_max: 1.0, max_pulses: 10,
+                      stochastic_rounding: true }
+    }
+}
+
+impl HicGeometry {
+    pub fn msb_levels(&self) -> u32 {
+        (1 << self.msb_bits) - 1
+    }
+
+    /// One MSB weight quantum ε.
+    pub fn msb_step(&self) -> f32 {
+        2.0 * self.w_max / self.msb_levels() as f32
+    }
+
+    pub fn lsb_half_range(&self) -> i32 {
+        1 << (self.lsb_bits - 1)
+    }
+
+    /// Weight value of one accumulator count.
+    pub fn lsb_step(&self) -> f32 {
+        self.msb_step() / self.lsb_half_range() as f32
+    }
+
+    /// Snap to the MSB (15-level) grid: ±(levels-1)/2 · ε representable,
+    /// so every quantized value is an exact grid multiple (matches
+    /// `python/compile/hic.py::quantize_msb`).
+    pub fn quantize_msb(&self, w: f32) -> f32 {
+        let eps = self.msb_step();
+        let kmax = ((self.msb_levels() - 1) / 2) as f32;
+        (w / eps).round().clamp(-kmax, kmax) * eps
+    }
+}
+
+/// One weight tensor on hybrid memory.
+pub struct HicWeight {
+    pub geom: HicGeometry,
+    pub msb: DifferentialPair,
+    pub acc: Vec<FixedPointAccumulator>,
+    pub lsb_flips: Vec<u64>,
+    pub lsb_resets: Vec<u64>,
+}
+
+impl HicWeight {
+    pub fn new(params: PcmParams, geom: HicGeometry, rows: usize,
+               cols: usize, rng: &mut Pcg64) -> Self {
+        let msb = DifferentialPair::new(params, rows, cols, geom.w_max, rng);
+        let n = rows * cols;
+        HicWeight {
+            geom,
+            msb,
+            acc: vec![FixedPointAccumulator::new(geom.lsb_bits); n],
+            lsb_flips: vec![0; n],
+            lsb_resets: vec![0; n],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.acc.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.acc.is_empty()
+    }
+
+    /// Program initial weights (MSB-quantized).
+    pub fn program_init(&mut self, w0: &[f32], t_now: f32,
+                        rng: &mut Pcg64) {
+        let q: Vec<f32> =
+            w0.iter().map(|&w| self.geom.quantize_msb(w)).collect();
+        self.msb.program_weights(&q, t_now, rng);
+    }
+
+    /// Decode the inference weights at `t_now` (drift, no read noise).
+    pub fn decode(&self, t_now: f32) -> Vec<f32> {
+        self.msb.decode(t_now)
+    }
+
+    /// One training update: quantize `-lr * grad` into the accumulators,
+    /// program MSB on overflow.  Returns the number of overflow events.
+    pub fn apply_update(&mut self, grad: &[f32], lr: f32, t_now: f32,
+                        rng: &mut Pcg64) -> usize {
+        assert_eq!(grad.len(), self.len());
+        let half = self.geom.lsb_half_range();
+        let eps = self.geom.msb_step();
+        let lsb_step = self.geom.lsb_step();
+        let mut overflows = 0usize;
+        for i in 0..grad.len() {
+            let v = -lr * grad[i] / lsb_step;
+            let delta = FixedPointAccumulator::quantize_counts(
+                v, self.geom.stochastic_rounding, rng.uniform() as f32,
+                half);
+            let out = self.acc[i].update(delta);
+            self.lsb_flips[i] += out.flips as u64;
+            self.lsb_resets[i] += out.resets as u64;
+            if out.overflow != 0 {
+                overflows += out.overflow.unsigned_abs() as usize;
+                self.msb.apply_increment(
+                    i, out.overflow as f32 * eps, t_now, rng);
+            }
+        }
+        overflows
+    }
+
+    /// Selective saturation refresh; returns refreshed pair count.
+    pub fn refresh(&mut self, t_now: f32, rng: &mut Pcg64) -> usize {
+        self.msb.refresh(t_now, rng).len()
+    }
+
+    /// Fold this tensor's device activity into an endurance ledger.
+    pub fn record_endurance(&self, ledger: &mut EnduranceLedger) {
+        for d in self.msb.plus.devices.iter()
+            .chain(self.msb.minus.devices.iter())
+        {
+            ledger.record_msb(d.set_count, d.reset_count);
+        }
+        for i in 0..self.len() {
+            ledger.record_lsb_weight(self.lsb_flips[i], self.lsb_resets[i],
+                                     self.geom.lsb_bits as u64);
+        }
+    }
+
+    /// Inference model bits: only the MSB array is needed at inference.
+    pub fn inference_bits(&self) -> usize {
+        self.len() * self.geom.msb_bits as usize
+    }
+}
+
+/// Conductance-window headroom check used by tests and the mapper: the
+/// weight map must keep programmed conductances within the guard band.
+pub fn conductance_headroom(w_max: f32) -> f32 {
+    1.0 - G_SPAN * (w_max / w_max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ideal() -> (PcmParams, HicGeometry) {
+        (PcmParams::ideal(),
+         HicGeometry { stochastic_rounding: false, ..Default::default() })
+    }
+
+    #[test]
+    fn geometry() {
+        let g = HicGeometry::default();
+        assert_eq!(g.msb_levels(), 15);
+        assert!((g.msb_step() - 2.0 / 15.0).abs() < 1e-6);
+        assert_eq!(g.lsb_half_range(), 64);
+        assert!((g.lsb_step() - g.msb_step() / 64.0).abs() < 1e-9);
+        assert_eq!(g.quantize_msb(0.0), 0.0);
+        // clamp to the outermost grid code: 7 * (2/15)
+        let wmax_repr = 7.0 * g.msb_step();
+        assert_eq!(g.quantize_msb(5.0), wmax_repr);
+        assert_eq!(g.quantize_msb(-5.0), -wmax_repr);
+        let q = g.quantize_msb(0.31);
+        assert!((q - 0.2667).abs() < 1e-3);
+    }
+
+    #[test]
+    fn gradient_descends_a_quadratic() {
+        // Minimize ||w - target||^2 through the full hybrid pipeline.
+        let (p, g) = ideal();
+        let mut rng = Pcg64::new(4, 0);
+        let mut hw = HicWeight::new(p, g, 4, 4, &mut rng);
+        let target: Vec<f32> =
+            (0..16).map(|i| ((i as f32) - 8.0) / 10.0).collect();
+        hw.program_init(&vec![0.0; 16], 0.0, &mut rng);
+        let mut t = 1.0;
+        for _ in 0..400 {
+            let w = hw.decode(t);
+            let grad: Vec<f32> =
+                w.iter().zip(&target).map(|(a, b)| a - b).collect();
+            hw.apply_update(&grad, 0.5, t, &mut rng);
+            t += 0.05;
+        }
+        let w = hw.decode(t);
+        let err: f32 = w.iter().zip(&target)
+            .map(|(a, b)| (a - b).abs()).sum::<f32>() / 16.0;
+        // Converges to within ~1 MSB quantum on average.
+        assert!(err < g.msb_step(), "err={err}");
+    }
+
+    #[test]
+    fn overflow_drives_msb_only() {
+        let (p, g) = ideal();
+        let mut rng = Pcg64::new(5, 0);
+        let mut hw = HicWeight::new(p, g, 1, 1, &mut rng);
+        hw.program_init(&[0.0], 0.0, &mut rng);
+        // Updates summing to less than one quantum: MSB untouched.
+        let small_grad = [-g.lsb_step() * 10.0 / 0.5];
+        for _ in 0..5 {
+            hw.apply_update(&small_grad, 0.5, 1.0, &mut rng);
+        }
+        assert_eq!(hw.msb.plus.devices[0].set_count, 0);
+        assert_eq!(hw.acc[0].acc, 50);
+        // Push past the boundary.
+        for _ in 0..2 {
+            hw.apply_update(&small_grad, 0.5, 1.0, &mut rng);
+        }
+        assert!(hw.msb.plus.devices[0].set_count > 0);
+        assert_eq!(hw.acc[0].acc, 70 - 64);
+    }
+
+    #[test]
+    fn endurance_recording() {
+        let (p, g) = ideal();
+        let mut rng = Pcg64::new(6, 0);
+        let mut hw = HicWeight::new(p, g, 2, 2, &mut rng);
+        hw.program_init(&[0.5, -0.5, 0.2, 0.0], 0.0, &mut rng);
+        let grad = [1.0f32, -1.0, 0.5, -0.5];
+        for _ in 0..50 {
+            hw.apply_update(&grad, 0.5, 1.0, &mut rng);
+        }
+        let mut ledger = EnduranceLedger::new();
+        hw.record_endurance(&mut ledger);
+        assert_eq!(ledger.msb.count as usize, 2 * hw.len());
+        assert_eq!(ledger.lsb.count as usize, hw.len());
+        assert!(ledger.msb.max > 0);
+    }
+
+    #[test]
+    fn inference_bits() {
+        let (p, g) = ideal();
+        let mut rng = Pcg64::new(7, 0);
+        let hw = HicWeight::new(p, g, 8, 4, &mut rng);
+        assert_eq!(hw.inference_bits(), 32 * 4);
+    }
+}

@@ -1,0 +1,30 @@
+//! # hic-train — Hybrid In-memory Computing for DNN training
+//!
+//! Full-system reproduction of Joshi et al., *"Hybrid In-memory Computing
+//! Architecture for the Training of Deep Neural Networks"* (2021), as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1/2 (build time)** — `python/compile/` authors the PCM device
+//!   model, the Pallas crossbar-VMM kernel and the ResNet training step,
+//!   AOT-lowered to HLO-text artifacts (`make artifacts`).
+//! * **Layer 3 (this crate)** — loads the artifacts via PJRT and owns the
+//!   whole training run: batch scheduling, the every-10-batches MSB
+//!   refresh, the simulated drift clock, AdaBS recalibration, endurance
+//!   ledgers, metrics and the Fig. 3–6 experiment drivers.
+//!
+//! Python never runs on the request path.
+
+pub mod bench;
+pub mod coordinator;
+pub mod crossbar;
+pub mod data;
+pub mod exp;
+pub mod hic;
+pub mod pcm;
+pub mod runtime;
+pub mod testutil;
+pub mod util;
+
+// Re-export the log macros' home so `crate::util::logging` paths resolve
+// from the macro expansions in downstream modules.
+pub use util::logging;

@@ -1,0 +1,252 @@
+//! `hic-train` — the Layer-3 leader binary.
+//!
+//! Subcommands:
+//!   train     run an end-to-end HIC training (loss curve + eval + CSVs)
+//!   baseline  run the FP32 software baseline
+//!   fig3      regenerate the PCM non-ideality ablation (paper Fig. 3)
+//!   fig4      regenerate the width-multiplier sweep (paper Fig. 4)
+//!   fig5      regenerate the drift/AdaBS study (paper Fig. 5)
+//!   fig6      regenerate the write–erase-cycle histograms (paper Fig. 6)
+//!   info      inspect an artifact set (entries, sizes, config echo)
+//!
+//! All compute runs through AOT-compiled HLO artifacts on PJRT; Python is
+//! never invoked.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use hic_train::coordinator::schedule::LrSchedule;
+use hic_train::coordinator::{BaselineTrainer, Trainer};
+use hic_train::exp::{self, ExpOptions};
+use hic_train::runtime::artifact::artifact_root;
+use hic_train::runtime::Engine;
+use hic_train::util::cli::Spec;
+use hic_train::util::logging::{set_level, Level};
+use hic_train::log_info;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "train" => cmd_train(rest),
+        "baseline" => cmd_baseline(rest),
+        "fig3" => cmd_fig3(rest),
+        "fig4" => cmd_fig4(rest),
+        "fig5" => cmd_fig5(rest),
+        "fig6" | "endurance" => cmd_fig6(rest),
+        "info" => cmd_info(rest),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (try `hic-train help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "hic-train — Hybrid In-memory Computing DNN training \
+         (Joshi et al. 2021 reproduction)\n\n\
+         usage: hic-train <subcommand> [options]\n\n\
+         subcommands:\n\
+         \x20 train      end-to-end HIC training run\n\
+         \x20 baseline   FP32 software baseline run\n\
+         \x20 fig3       PCM non-ideality ablation      (paper Fig. 3)\n\
+         \x20 fig4       width sweep: acc vs model size (paper Fig. 4)\n\
+         \x20 fig5       drift + AdaBS study            (paper Fig. 5)\n\
+         \x20 fig6       write–erase cycle histograms   (paper Fig. 6)\n\
+         \x20 info       inspect an artifact set\n\n\
+         run any subcommand with --help for its options"
+    );
+}
+
+fn common_exp_spec(name: &'static str, about: &'static str) -> Spec {
+    Spec::new(name, about)
+        .opt("steps", "300", "training steps per run")
+        .opt("seeds", "42", "comma-separated seeds")
+        .opt("eval-batches", "16", "evaluation batches")
+        .opt("lr", "0.5", "initial learning rate (scaled-run default)")
+        .opt("lr-decay", "0.45", "decay factor at 50%/75% of the run")
+        .opt("data-scale", "0.05",
+             "synthetic dataset size vs CIFAR-10 (1.0 = 50k)")
+        .opt("out", "results", "output directory for CSVs")
+        .flag("verbose", "debug logging")
+}
+
+fn parse_exp(m: &hic_train::util::cli::Matches) -> Result<ExpOptions> {
+    if m.flag("verbose") {
+        set_level(Level::Debug);
+    }
+    Ok(ExpOptions {
+        steps: m.usize("steps")?,
+        seeds: m
+            .list("seeds")
+            .iter()
+            .map(|s| s.parse::<u64>())
+            .collect::<std::result::Result<Vec<_>, _>>()?,
+        eval_batches: m.usize("eval-batches")?,
+        lr0: m.f32("lr")?,
+        lr_decay: m.f32("lr-decay")?,
+        data_scale: m.f64("data-scale")?,
+        out_dir: PathBuf::from(m.str("out")?),
+    })
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let spec = common_exp_spec("train", "end-to-end HIC training run")
+        .opt("config", "core", "artifact config name")
+        .opt("eval-every", "100", "steps between evaluations (0 = end only)")
+        .opt("refresh-every", "10", "batches between MSB refreshes")
+        .opt("checkpoint", "", "path to save the final device state");
+    let m = spec.parse(args)?;
+    let opts = parse_exp(&m)?;
+    let config = m.string("config")?;
+
+    let dir = exp::config_dir(&config)?;
+    let mut topts = opts.trainer_options(opts.seeds[0]);
+    topts.lr = LrSchedule::paper(opts.lr0, opts.lr_decay, opts.steps);
+    topts.refresh_every = m.usize("refresh-every")?;
+    let mut t = Trainer::new(&dir, topts)?;
+
+    let eval_every = m.usize("eval-every")?;
+    let mut done = 0;
+    while done < opts.steps {
+        let chunk = if eval_every == 0 {
+            opts.steps - done
+        } else {
+            eval_every.min(opts.steps - done)
+        };
+        t.train_steps(chunk)?;
+        done += chunk;
+        let ev = t.evaluate(opts.eval_batches, None)?;
+        log_info!(
+            "step {:>5}: train loss {:.3} acc {:.3} | eval acc {:.3} | \
+             {:.0} ms/step",
+            t.step,
+            t.metrics.smoothed_loss(50),
+            t.metrics.smoothed_acc(50),
+            ev.accuracy,
+            t.metrics.mean_step_ms()
+        );
+    }
+
+    exp::ensure_out_dir(&opts.out_dir)?;
+    t.metrics
+        .write_steps_csv(&opts.out_dir.join(format!("{config}_steps.csv")))?;
+    t.metrics
+        .write_evals_csv(&opts.out_dir.join(format!("{config}_evals.csv")))?;
+    let ledger = t.endurance()?;
+    println!("{}", ledger.summary());
+    if let Some(path) = m.get("checkpoint") {
+        if !path.is_empty() {
+            t.save_checkpoint(&PathBuf::from(path))?;
+        }
+    }
+    for (entry, (calls, secs)) in t.engine.stats() {
+        log_info!("perf: {entry}: {calls} calls, {:.1} ms avg",
+                  1e3 * secs / calls.max(1) as f64);
+    }
+    Ok(())
+}
+
+fn cmd_baseline(args: &[String]) -> Result<()> {
+    let spec = common_exp_spec("baseline", "FP32 software baseline run")
+        .opt("config", "core", "artifact config name (with baseline)");
+    let m = spec.parse(args)?;
+    let opts = parse_exp(&m)?;
+    let config = m.string("config")?;
+    let dir = exp::config_dir(&config)?;
+    let mut topts = opts.trainer_options(opts.seeds[0]);
+    topts.lr = LrSchedule::paper(0.1, 0.1, opts.steps);
+    let mut bt = BaselineTrainer::new(&dir, topts)?;
+    bt.train_steps(opts.steps)?;
+    let ev = bt.evaluate(opts.eval_batches)?;
+    log_info!(
+        "baseline: train loss {:.3} acc {:.3} | eval acc {:.3}",
+        bt.metrics.smoothed_loss(50),
+        bt.metrics.smoothed_acc(50),
+        ev.accuracy
+    );
+    exp::ensure_out_dir(&opts.out_dir)?;
+    bt.metrics.write_steps_csv(
+        &opts.out_dir.join(format!("{config}_baseline_steps.csv")))?;
+    Ok(())
+}
+
+fn cmd_fig3(args: &[String]) -> Result<()> {
+    let spec = common_exp_spec(
+        "fig3", "PCM non-ideality ablation (paper Fig. 3)");
+    let m = spec.parse(args)?;
+    let opts = parse_exp(&m)?;
+    exp::fig3::run(&opts)?;
+    Ok(())
+}
+
+fn cmd_fig4(args: &[String]) -> Result<()> {
+    let spec = common_exp_spec(
+        "fig4", "width sweep: accuracy vs model size (paper Fig. 4)");
+    let m = spec.parse(args)?;
+    let opts = parse_exp(&m)?;
+    exp::fig4::run(&opts)?;
+    Ok(())
+}
+
+fn cmd_fig5(args: &[String]) -> Result<()> {
+    let spec = common_exp_spec(
+        "fig5", "drift + AdaBS inference study (paper Fig. 5)")
+        .opt("config", "fig5_drift", "artifact config to train");
+    let m = spec.parse(args)?;
+    let opts = parse_exp(&m)?;
+    exp::fig5::run(&opts, m.str("config")?)?;
+    Ok(())
+}
+
+fn cmd_fig6(args: &[String]) -> Result<()> {
+    let spec = common_exp_spec(
+        "fig6", "write–erase cycle histograms (paper Fig. 6)")
+        .opt("config", "core", "artifact config to train");
+    let m = spec.parse(args)?;
+    let opts = parse_exp(&m)?;
+    exp::fig6::run(&opts, m.str("config")?)?;
+    Ok(())
+}
+
+fn cmd_info(args: &[String]) -> Result<()> {
+    let spec = Spec::new("info", "inspect an artifact set")
+        .opt("config", "core", "artifact config name");
+    let m = spec.parse(args)?;
+    let config = m.string("config")?;
+    let dir = artifact_root().join(&config);
+    let engine = Engine::load(&dir)?;
+    let man = &engine.manifest;
+    println!("artifact set '{}' at {}", man.config_name, dir.display());
+    println!("  weights: {}  (inference: {:.1} KB HIC vs {:.1} KB FP32)",
+             man.num_weights,
+             man.inference_model_bits(true) as f64 / 8192.0,
+             man.inference_model_bits(false) as f64 / 8192.0);
+    println!("  batch: {}  image: {}x{}", man.batch_size(),
+             man.image_size(), man.image_size());
+    println!("  layers:");
+    for l in &man.layers {
+        println!("    {:10} [{:4} x {:3}]  {}x{} cin={} stride={}",
+                 l.name, l.k, l.n, l.kh, l.kw, l.cin, l.stride);
+    }
+    println!("  entries:");
+    for (name, e) in &man.entries {
+        println!("    {:22} {:3} in / {:3} out  ({})", name,
+                 e.inputs.len(), e.outputs.len(), e.file);
+    }
+    Ok(())
+}

@@ -1,0 +1,315 @@
+//! Single PCM device: pulse-by-pulse statistical model.
+//!
+//! Parameters mirror `python/compile/configs.py::PcmConfig`; conductance
+//! is normalized to [0, 1] (1.0 == G_max ≈ 25 µS on silicon).
+//!
+//! The model (Nandakumar et al. 2018 structure):
+//! * nonlinear programming curve — the expected increment of the n-th SET
+//!   pulse since RESET decays as `dg0 / (1 + n/n0)`;
+//! * stochastic write — per-pulse Gaussian noise `σ_w · E[ΔG]`;
+//! * stochastic read — additive Gaussian `σ_r` per read;
+//! * temporal drift — `G(t) = G_prog · ((t−t_prog)/t0)^(−ν)` with a
+//!   per-device exponent `ν ~ N(ν̄, σ_ν)`.
+
+use crate::util::rng::Pcg64;
+
+/// Device-model parameters (see `PcmConfig` for provenance / defaults).
+#[derive(Clone, Copy, Debug)]
+pub struct PcmParams {
+    pub dg0: f32,
+    pub n0: f32,
+    pub nonlinear: bool,
+    pub write_sigma: f32,
+    pub write_noise: bool,
+    pub read_sigma: f32,
+    pub read_noise: bool,
+    pub drift_nu: f32,
+    pub drift_nu_sigma: f32,
+    pub drift_t0: f32,
+    pub drift: bool,
+    pub max_pulses: u32,
+}
+
+impl Default for PcmParams {
+    fn default() -> Self {
+        PcmParams {
+            dg0: 0.10,
+            n0: 15.0,
+            nonlinear: true,
+            write_sigma: 0.30,
+            write_noise: true,
+            read_sigma: 0.009,
+            read_noise: true,
+            drift_nu: 0.031,
+            drift_nu_sigma: 0.007,
+            drift_t0: 1.0,
+            drift: true,
+            max_pulses: 10,
+        }
+    }
+}
+
+impl PcmParams {
+    /// Ideal device (all non-idealities off) — for deterministic tests.
+    pub fn ideal() -> Self {
+        PcmParams {
+            nonlinear: false,
+            write_noise: false,
+            read_noise: false,
+            drift: false,
+            ..Default::default()
+        }
+    }
+
+    /// Expected per-pulse increment after `pulses` accumulated pulses.
+    pub fn pulse_increment_mean(&self, pulses: f32) -> f32 {
+        if self.nonlinear {
+            self.dg0 / (1.0 + pulses / self.n0)
+        } else {
+            self.dg0
+        }
+    }
+
+    /// Closed-form aggregate increment of `n` pulses from pulse count `p`
+    /// (the approximation the JAX model lowers; validated against the
+    /// pulse-by-pulse process in tests).
+    pub fn aggregate_increment_mean(&self, p: f32, n: f32) -> f32 {
+        if self.nonlinear {
+            self.dg0 * self.n0 * (((self.n0 + p + n) / (self.n0 + p)).ln())
+        } else {
+            self.dg0 * n
+        }
+    }
+
+    /// Pulses the write circuit schedules for a target increment.
+    pub fn pulses_for_target(&self, p: f32, dg_target: f32) -> u32 {
+        if dg_target <= 0.0 {
+            return 0;
+        }
+        let n = if self.nonlinear {
+            (self.n0 + p) * ((dg_target / (self.dg0 * self.n0)).exp() - 1.0)
+        } else {
+            dg_target / self.dg0
+        };
+        (n.ceil().max(1.0) as u32).min(self.max_pulses)
+    }
+}
+
+/// One multi-level PCM device.
+#[derive(Clone, Debug)]
+pub struct PcmDevice {
+    /// conductance programmed at `t_prog` (drift reference value)
+    pub g: f32,
+    /// SET pulses since last RESET
+    pub pulses: f32,
+    /// time of last programming event (s)
+    pub t_prog: f32,
+    /// per-device drift exponent
+    pub nu: f32,
+    /// lifetime counters (endurance)
+    pub set_count: u64,
+    pub reset_count: u64,
+}
+
+impl PcmDevice {
+    /// A fresh (RESET, never-programmed) device with a sampled ν.
+    pub fn new(params: &PcmParams, rng: &mut Pcg64) -> Self {
+        let nu = (params.drift_nu
+            + params.drift_nu_sigma * rng.normal() as f32)
+            .clamp(0.0, 0.12);
+        PcmDevice { g: 0.0, pulses: 0.0, t_prog: 0.0, nu,
+                    set_count: 0, reset_count: 0 }
+    }
+
+    /// Apply one SET pulse at time `t_now`.
+    pub fn set_pulse(&mut self, params: &PcmParams, t_now: f32,
+                     rng: &mut Pcg64) {
+        let mean = params.pulse_increment_mean(self.pulses);
+        let dg = if params.write_noise {
+            mean + params.write_sigma * mean * rng.normal() as f32
+        } else {
+            mean
+        };
+        self.g = (self.g + dg.max(0.0)).clamp(0.0, 1.0);
+        self.pulses += 1.0;
+        self.t_prog = t_now;
+        self.set_count += 1;
+    }
+
+    /// Program towards a target increment (`dg_target` >= 0) using the
+    /// pulse-by-pulse process; returns the number of pulses applied.
+    pub fn program_increment(&mut self, params: &PcmParams, dg_target: f32,
+                             t_now: f32, rng: &mut Pcg64) -> u32 {
+        let n = params.pulses_for_target(self.pulses, dg_target);
+        for _ in 0..n {
+            self.set_pulse(params, t_now, rng);
+        }
+        n
+    }
+
+    /// RESET to the low-conductance state.
+    pub fn reset(&mut self, t_now: f32) {
+        self.g = 0.0;
+        self.pulses = 0.0;
+        self.t_prog = t_now;
+        self.reset_count += 1;
+    }
+
+    /// Drifted conductance at `t_now` (no read noise).
+    pub fn drifted(&self, params: &PcmParams, t_now: f32) -> f32 {
+        if !params.drift {
+            return self.g;
+        }
+        let elapsed = (t_now - self.t_prog).max(params.drift_t0);
+        self.g * (elapsed / params.drift_t0).powf(-self.nu)
+    }
+
+    /// One stochastic read at `t_now`.
+    pub fn read(&self, params: &PcmParams, t_now: f32,
+                rng: &mut Pcg64) -> f32 {
+        let mut g = self.drifted(params, t_now);
+        if params.read_noise {
+            g += params.read_sigma * rng.normal() as f32;
+        }
+        g.clamp(0.0, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Pcg64 {
+        Pcg64::new(42, 0)
+    }
+
+    #[test]
+    fn ideal_linear_programming_is_exact() {
+        let p = PcmParams::ideal();
+        let mut r = rng();
+        let mut d = PcmDevice::new(&p, &mut r);
+        let n = d.program_increment(&p, 0.35, 1.0, &mut r);
+        assert_eq!(n, 4); // ceil(0.35 / 0.1)
+        assert!((d.g - 0.4).abs() < 1e-6);
+        assert_eq!(d.set_count, 4);
+        assert_eq!(d.pulses, 4.0);
+    }
+
+    #[test]
+    fn nonlinear_curve_saturates() {
+        let p = PcmParams { write_noise: false, read_noise: false,
+                            drift: false, ..Default::default() };
+        let mut r = rng();
+        let mut d = PcmDevice::new(&p, &mut r);
+        let mut increments = Vec::new();
+        for _ in 0..30 {
+            let before = d.g;
+            d.set_pulse(&p, 0.0, &mut r);
+            increments.push(d.g - before);
+        }
+        // Strictly decreasing per-pulse gain.
+        for w in increments.windows(2) {
+            assert!(w[1] < w[0] + 1e-9, "{:?}", w);
+        }
+        // 30 pulses of the nonlinear curve stay below linear total (3.0)
+        assert!(d.g < 1.0 + 1e-6);
+    }
+
+    #[test]
+    fn aggregate_matches_pulsewise_mean() {
+        // The closed-form aggregate the JAX model lowers must match the
+        // pulse-by-pulse expectation within a few percent.
+        let p = PcmParams { write_noise: false, read_noise: false,
+                            drift: false, ..Default::default() };
+        for start_pulses in [0.0f32, 5.0, 20.0] {
+            for n in [1u32, 3, 7, 10] {
+                let mut exact = 0.0f32;
+                let mut pulses = start_pulses;
+                for _ in 0..n {
+                    exact += p.pulse_increment_mean(pulses);
+                    pulses += 1.0;
+                }
+                let agg = p.aggregate_increment_mean(start_pulses, n as f32);
+                let rel = (agg - exact).abs() / exact;
+                assert!(rel < 0.05,
+                        "p0={start_pulses} n={n}: exact={exact} agg={agg}");
+            }
+        }
+    }
+
+    #[test]
+    fn write_noise_statistics() {
+        let p = PcmParams { nonlinear: false, read_noise: false,
+                            drift: false, ..Default::default() };
+        let mut r = rng();
+        let trials = 20_000;
+        let mut sum = 0.0f64;
+        let mut sumsq = 0.0f64;
+        for _ in 0..trials {
+            let mut d = PcmDevice::new(&p, &mut r);
+            d.set_pulse(&p, 0.0, &mut r);
+            sum += d.g as f64;
+            sumsq += (d.g as f64) * (d.g as f64);
+        }
+        let mean = sum / trials as f64;
+        let std = (sumsq / trials as f64 - mean * mean).sqrt();
+        assert!((mean - 0.1).abs() < 0.002, "mean={mean}");
+        // σ = write_sigma * dg0 = 0.03 (slightly shrunk by the max(0) clip)
+        assert!((std - 0.03).abs() < 0.004, "std={std}");
+    }
+
+    #[test]
+    fn drift_decays_and_respects_t0() {
+        let p = PcmParams { write_noise: false, read_noise: false,
+                            nonlinear: false, drift_nu_sigma: 0.0,
+                            ..Default::default() };
+        let mut r = rng();
+        let mut d = PcmDevice::new(&p, &mut r);
+        d.program_increment(&p, 0.5, 100.0, &mut r);
+        let g0 = d.drifted(&p, 100.0 + p.drift_t0);
+        let g_day = d.drifted(&p, 100.0 + 86_400.0);
+        let g_year = d.drifted(&p, 100.0 + 3.15e7);
+        assert!(g0 > g_day && g_day > g_year);
+        // ν = 0.031: one-day decay factor (86400)^-0.031 ≈ 0.70
+        let expect = (86_400.0f32 / p.drift_t0).powf(-0.031);
+        assert!((g_day / g0 - expect).abs() < 0.01,
+                "ratio={} expect={expect}", g_day / g0);
+        // within t0 of programming: no drift applied
+        assert!((d.drifted(&p, 100.0) - d.g).abs() < 1e-6);
+    }
+
+    #[test]
+    fn reset_clears_and_counts() {
+        let p = PcmParams::ideal();
+        let mut r = rng();
+        let mut d = PcmDevice::new(&p, &mut r);
+        d.program_increment(&p, 0.3, 5.0, &mut r);
+        d.reset(6.0);
+        assert_eq!(d.g, 0.0);
+        assert_eq!(d.pulses, 0.0);
+        assert_eq!(d.reset_count, 1);
+        assert_eq!(d.t_prog, 6.0);
+    }
+
+    #[test]
+    fn max_pulses_clamped() {
+        let p = PcmParams::ideal();
+        assert_eq!(p.pulses_for_target(0.0, 5.0), 10); // clamped
+        assert_eq!(p.pulses_for_target(0.0, 0.0), 0);
+        assert_eq!(p.pulses_for_target(0.0, 0.05), 1);
+    }
+
+    #[test]
+    fn read_noise_zero_mean() {
+        let p = PcmParams { nonlinear: false, write_noise: false,
+                            drift: false, ..Default::default() };
+        let mut r = rng();
+        let mut d = PcmDevice::new(&p, &mut r);
+        d.program_increment(&p, 0.5, 0.0, &mut r);
+        let n = 10_000;
+        let mean: f64 = (0..n)
+            .map(|_| d.read(&p, 0.0, &mut r) as f64)
+            .sum::<f64>() / n as f64;
+        assert!((mean - d.g as f64).abs() < 0.001);
+    }
+}

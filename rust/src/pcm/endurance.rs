@@ -1,0 +1,215 @@
+//! Write–erase-cycle accounting (paper §III-E, Fig. 6).
+//!
+//! Following Tuma et al. (2016), one **write–erase cycle** is a sequence
+//! of at most 10 SET pulses followed by a RESET pulse.  The ledger
+//! converts per-device lifetime (SET, RESET) counters — tracked both by
+//! the Rust device model and, in packed form, by the lowered training
+//! programs — into WE-cycle estimates and histograms, and compares them
+//! against the 10^8 endurance limit.
+
+use std::fmt;
+
+/// PCM endurance limit (write–erase cycles), Tuma et al. 2016.
+pub const ENDURANCE_LIMIT: f64 = 1e8;
+
+/// SET pulses per WE cycle in the Tuma et al. definition.
+pub const SETS_PER_CYCLE: u64 = 10;
+
+/// Per-device WE-cycle estimate from lifetime counters.
+///
+/// Every RESET closes a cycle; additionally, every `SETS_PER_CYCLE` SET
+/// pulses amount to a cycle even if the device was never RESET (the
+/// definition's "at most 10 SETs" clause), so the estimate is
+/// `max(resets, ceil(sets / 10))`.
+pub fn we_cycles(sets: u64, resets: u64) -> u64 {
+    let by_sets = sets.div_ceil(SETS_PER_CYCLE);
+    resets.max(by_sets)
+}
+
+/// Log-bucketed histogram for WE-cycle distributions (Fig. 6 uses a log
+/// x-axis; buckets are powers of two to keep it parameter-free).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// bucket i counts values in [2^i, 2^(i+1)); bucket 0 includes 0 and 1.
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub max: u64,
+    pub sum: u128,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram { buckets: vec![0; 40], count: 0, max: 0, sum: 0 }
+    }
+
+    pub fn add(&mut self, v: u64) {
+        let b = if v <= 1 { 0 } else { 63 - v.leading_zeros() as usize };
+        if b >= self.buckets.len() {
+            self.buckets.resize(b + 1, 0);
+        }
+        self.buckets[b] += 1;
+        self.count += 1;
+        self.max = self.max.max(v);
+        self.sum += v as u128;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Percentile (nearest-rank over bucket lower-bounds; adequate for the
+    /// order-of-magnitude comparisons of Fig. 6).
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return if i == 0 { 0 } else { 1u64 << i };
+            }
+        }
+        self.max
+    }
+
+    /// Fraction of the endurance limit consumed by the worst device.
+    pub fn endurance_fraction(&self) -> f64 {
+        self.max as f64 / ENDURANCE_LIMIT
+    }
+
+    /// Non-empty (bucket_lower_bound, count) pairs — CSV/report rows.
+    pub fn rows(&self) -> Vec<(u64, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (if i == 0 { 0 } else { 1u64 << i }, c))
+            .collect()
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl fmt::Display for Histogram {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "devices={} mean={:.1} max={} (endurance {:.2e} of 1e8)",
+                 self.count, self.mean(), self.max,
+                 self.endurance_fraction())?;
+        let peak = self.buckets.iter().copied().max().unwrap_or(1).max(1);
+        for (lo, c) in self.rows() {
+            let bar = "#".repeat((c * 50 / peak).max(1) as usize);
+            writeln!(f, "{lo:>10} | {bar} {c}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Whole-array ledger: WE cycles per device, split MSB vs LSB.
+#[derive(Clone, Debug, Default)]
+pub struct EnduranceLedger {
+    pub msb: Histogram,
+    pub lsb: Histogram,
+}
+
+impl EnduranceLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one MSB device from lifetime (sets, resets).
+    pub fn record_msb(&mut self, sets: u64, resets: u64) {
+        self.msb.add(we_cycles(sets, resets));
+    }
+
+    /// Record one LSB *weight* (7 binary devices) from the packed
+    /// training-program counters: total flips and RESET events are summed
+    /// over the 7 devices, so attribute the per-device average.
+    pub fn record_lsb_weight(&mut self, flips: u64, resets: u64,
+                             bits: u64) {
+        // Per-device: a binary device's WE cycle is SET followed by RESET;
+        // resets counts exactly the completed cycles across the register.
+        let per_device = resets.div_ceil(bits.max(1));
+        let _ = flips;
+        self.lsb.add(per_device);
+    }
+
+    /// Paper Fig. 6 headline check: MSB max < LSB max << endurance.
+    pub fn summary(&self) -> String {
+        format!(
+            "MSB: max {} WE cycles ({:.2e} of limit) | LSB: max {} \
+             ({:.2e} of limit)",
+            self.msb.max,
+            self.msb.endurance_fraction(),
+            self.lsb.max,
+            self.lsb.endurance_fraction()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn we_cycle_definition() {
+        assert_eq!(we_cycles(0, 0), 0);
+        assert_eq!(we_cycles(10, 1), 1);
+        assert_eq!(we_cycles(11, 1), 2); // 11 SETs = 2 cycles by the clause
+        assert_eq!(we_cycles(5, 3), 3);  // resets dominate
+        assert_eq!(we_cycles(100, 0), 10);
+    }
+
+    #[test]
+    fn histogram_buckets_and_stats() {
+        let mut h = Histogram::new();
+        for v in [0u64, 1, 1, 2, 3, 4, 150, 20_000] {
+            h.add(v);
+        }
+        assert_eq!(h.count, 8);
+        assert_eq!(h.max, 20_000);
+        assert!(h.endurance_fraction() < 1e-3);
+        let rows = h.rows();
+        assert_eq!(rows[0], (0, 3)); // 0,1,1
+        assert!(rows.iter().any(|&(lo, c)| lo == 128 && c == 1)); // 150
+        assert!(rows.iter().any(|&(lo, c)| lo == 16_384 && c == 1));
+        assert!((h.mean() - 20160.0 / 8.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn percentile_monotone() {
+        let mut h = Histogram::new();
+        for v in 0..1000u64 {
+            h.add(v);
+        }
+        assert!(h.percentile(50.0) <= h.percentile(90.0));
+        assert!(h.percentile(90.0) <= h.percentile(100.0).max(h.max));
+        assert_eq!(Histogram::new().percentile(50.0), 0);
+    }
+
+    #[test]
+    fn ledger_paper_shape() {
+        // Synthetic full-training ledger: MSB devices see < 150 cycles,
+        // LSB weights see < 20 K — the Fig. 6 shape.
+        let mut l = EnduranceLedger::new();
+        for i in 0..1000u64 {
+            l.record_msb(3 * (i % 50), i % 20);
+            l.record_lsb_weight(14 * (i % 1000), 7 * (i % 1000), 7);
+        }
+        assert!(l.msb.max < 150);
+        assert!(l.lsb.max <= 20_000);
+        assert!(l.msb.max < l.lsb.max);
+        assert!(l.msb.endurance_fraction() < 1e-4);
+        assert!(l.lsb.endurance_fraction() < 1e-3);
+        assert!(!l.summary().is_empty());
+    }
+}

@@ -1,0 +1,24 @@
+//! PCM device-physics substrate (Rust twin of `python/compile/pcm_model.py`).
+//!
+//! The JAX implementation lives *inside* the lowered training programs and
+//! uses a pulse-aggregated approximation for vectorization.  This module
+//! implements the reference **pulse-by-pulse** process (each SET pulse an
+//! individual stochastic event) plus everything host-side the coordinator
+//! needs:
+//!
+//! * [`device`] — single multi-level / binary device: programming curve,
+//!   write & read stochasticity, temporal drift
+//! * [`array`] — arrays of devices with differential-pair weight mapping
+//! * [`endurance`] — write–erase-cycle ledger and histograms (Fig. 6)
+//!
+//! Unit/property tests cross-validate the aggregate statistics of the
+//! pulse-by-pulse process against the closed-form aggregate the JAX model
+//! uses (`expected_increment`), bounding the approximation error.
+
+pub mod array;
+pub mod device;
+pub mod endurance;
+
+pub use array::{DifferentialPair, PcmArray};
+pub use device::{PcmDevice, PcmParams};
+pub use endurance::{EnduranceLedger, Histogram};

@@ -1,0 +1,362 @@
+//! Artifact manifest model — the Rust half of the AOT contract.
+//!
+//! `python/compile/aot.py` writes one directory per experiment config:
+//!
+//! ```text
+//! artifacts/<config>/
+//!   manifest.json       <- parsed here
+//!   hic_init.hlo.txt
+//!   hic_train_step.hlo.txt
+//!   ...
+//! ```
+//!
+//! The manifest pins the *flattened* order, shape and dtype of every input
+//! and output leaf of every entry point (JAX pytree flattening order), and
+//! marks which span of the signature is the persistent model state.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element types the artifacts use (subset of XLA's).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "float32" => DType::F32,
+            "int32" => DType::I32,
+            "uint32" => DType::U32,
+            other => bail!("unsupported dtype '{other}' in manifest"),
+        })
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+
+    pub fn element_type(self) -> xla::ElementType {
+        match self {
+            DType::F32 => xla::ElementType::F32,
+            DType::I32 => xla::ElementType::S32,
+            DType::U32 => xla::ElementType::U32,
+        }
+    }
+}
+
+/// One flattened input/output leaf.
+#[derive(Clone, Debug)]
+pub struct LeafSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl LeafSpec {
+    fn parse(j: &Json) -> Result<LeafSpec> {
+        let shape = j
+            .get("shape")?
+            .as_arr()?
+            .iter()
+            .map(|d| d.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        Ok(LeafSpec {
+            name: j.get("name")?.as_str()?.to_string(),
+            shape,
+            dtype: DType::parse(j.get("dtype")?.as_str()?)?,
+        })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.element_count() * self.dtype.size_bytes()
+    }
+}
+
+/// Signature of one lowered entry point.
+#[derive(Clone, Debug)]
+pub struct EntrySig {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<LeafSpec>,
+    pub outputs: Vec<LeafSpec>,
+    /// (start, len) span of the persistent state within `inputs`.
+    pub state_input_span: (usize, usize),
+    /// (start, len) span of the updated state within `outputs`.
+    pub state_output_span: (usize, usize),
+}
+
+impl EntrySig {
+    fn parse(j: &Json) -> Result<EntrySig> {
+        let span = |key: &str| -> Result<(usize, usize)> {
+            let a = j.get(key)?.as_arr()?;
+            if a.len() != 2 {
+                bail!("{key}: expected [start, len]");
+            }
+            Ok((a[0].as_usize()?, a[1].as_usize()?))
+        };
+        Ok(EntrySig {
+            name: j.get("name")?.as_str()?.to_string(),
+            file: j.get("file")?.as_str()?.to_string(),
+            inputs: j
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(LeafSpec::parse)
+                .collect::<Result<Vec<_>>>()?,
+            outputs: j
+                .get("outputs")?
+                .as_arr()?
+                .iter()
+                .map(LeafSpec::parse)
+                .collect::<Result<Vec<_>>>()?,
+            state_input_span: span("state_input_span")?,
+            state_output_span: span("state_output_span")?,
+        })
+    }
+
+    /// Inputs that follow the state span (batch data, keys, scalars…).
+    pub fn extra_inputs(&self) -> &[LeafSpec] {
+        let (s, l) = self.state_input_span;
+        if l == 0 {
+            &self.inputs
+        } else {
+            debug_assert_eq!(s, 0, "state must lead the signature");
+            &self.inputs[s + l..]
+        }
+    }
+
+    /// Outputs that follow the updated-state span (metrics).
+    pub fn metric_outputs(&self) -> &[LeafSpec] {
+        let (s, l) = self.state_output_span;
+        if l == 0 {
+            &self.outputs
+        } else {
+            debug_assert_eq!(s, 0);
+            &self.outputs[s + l..]
+        }
+    }
+}
+
+/// One crossbar-mapped layer (geometry for the crossbar simulator and the
+/// model-size accounting of Fig. 4).
+#[derive(Clone, Debug)]
+pub struct LayerInfo {
+    pub name: String,
+    pub k: usize,
+    pub n: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub cin: usize,
+    pub stride: usize,
+}
+
+impl LayerInfo {
+    pub fn num_weights(&self) -> usize {
+        self.k * self.n
+    }
+}
+
+/// Parsed `manifest.json` for one artifact config.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config_name: String,
+    /// Raw config echo (hyperparameters baked at lowering time).
+    pub config: Json,
+    pub num_weights: usize,
+    pub layers: Vec<LayerInfo>,
+    pub entries: BTreeMap<String, EntrySig>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` (or `python -m \
+                 compile.aot --configs <name>` from python/) first",
+                path.display()
+            )
+        })?;
+        let j = Json::parse(&text)
+            .with_context(|| format!("parsing {}", path.display()))?;
+
+        let config = j.get("config")?.clone();
+        let config_name = config.get("name")?.as_str()?.to_string();
+        let layers = j
+            .get("layers")?
+            .as_arr()?
+            .iter()
+            .map(|l| {
+                Ok(LayerInfo {
+                    name: l.get("name")?.as_str()?.to_string(),
+                    k: l.get("k")?.as_usize()?,
+                    n: l.get("n")?.as_usize()?,
+                    kh: l.get("kh")?.as_usize()?,
+                    kw: l.get("kw")?.as_usize()?,
+                    cin: l.get("cin")?.as_usize()?,
+                    stride: l.get("stride")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut entries = BTreeMap::new();
+        for (name, e) in j.get("entries")?.as_obj()? {
+            entries.insert(name.clone(), EntrySig::parse(e)?);
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            config_name,
+            config,
+            num_weights: j.get("num_weights")?.as_usize()?,
+            layers,
+            entries,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySig> {
+        self.entries.get(name).ok_or_else(|| {
+            anyhow!(
+                "entry '{name}' not in artifact set '{}' (have: {:?})",
+                self.config_name,
+                self.entries.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn hlo_path(&self, entry: &EntrySig) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// Convenience: typed scalar from the config echo, e.g.
+    /// `cfg_f64("train", "lr")`.
+    pub fn cfg_f64(&self, section: &str, key: &str) -> Result<f64> {
+        self.config.get(section)?.get(key)?.as_f64()
+    }
+
+    pub fn cfg_usize(&self, section: &str, key: &str) -> Result<usize> {
+        self.config.get(section)?.get(key)?.as_usize()
+    }
+
+    pub fn cfg_bool(&self, section: &str, key: &str) -> Result<bool> {
+        self.config.get(section)?.get(key)?.as_bool()
+    }
+
+    /// Batch size the artifacts were lowered with.
+    pub fn batch_size(&self) -> usize {
+        self.cfg_usize("train", "batch_size").unwrap_or(32)
+    }
+
+    pub fn image_size(&self) -> usize {
+        self.cfg_usize("net", "image_size").unwrap_or(32)
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.cfg_usize("net", "num_classes").unwrap_or(10)
+    }
+
+    /// Inference model size in bits (Fig. 4 x-axis): HIC needs only the
+    /// MSB array (~msb_bits/weight); the FP32 baseline needs 32.
+    pub fn inference_model_bits(&self, hic: bool) -> usize {
+        let per_weight = if hic {
+            self.cfg_usize("hic", "msb_bits").unwrap_or(4)
+        } else {
+            32
+        };
+        self.num_weights * per_weight
+    }
+}
+
+/// Locate the artifact root: $HIC_ARTIFACTS, else ./artifacts relative to
+/// the working directory, else relative to the executable.
+pub fn artifact_root() -> PathBuf {
+    if let Ok(p) = std::env::var("HIC_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let cwd = PathBuf::from("artifacts");
+    if cwd.exists() {
+        return cwd;
+    }
+    // target/{debug,release}/<bin> -> repo root
+    if let Ok(exe) = std::env::current_exe() {
+        for anc in exe.ancestors().skip(1) {
+            let cand = anc.join("artifacts");
+            if cand.join("..").join("Cargo.toml").exists() && cand.exists() {
+                return cand;
+            }
+        }
+    }
+    cwd
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest_json() -> String {
+        r#"{
+          "config": {"name": "t", "train": {"batch_size": 4},
+                     "net": {"image_size": 32, "num_classes": 10},
+                     "hic": {"msb_bits": 4}},
+          "num_weights": 100,
+          "layers": [{"name": "stem", "k": 27, "n": 4, "kh": 3, "kw": 3,
+                      "cin": 3, "stride": 1}],
+          "entries": {
+            "f": {"name": "f", "file": "f.hlo.txt",
+                  "inputs": [
+                    {"name": "state/a", "shape": [2,3], "dtype": "float32"},
+                    {"name": "x", "shape": [4], "dtype": "int32"}],
+                  "outputs": [
+                    {"name": "0/a", "shape": [2,3], "dtype": "float32"},
+                    {"name": "1/loss", "shape": [], "dtype": "float32"}],
+                  "state_input_span": [0,1], "state_output_span": [0,1]}
+          },
+          "fingerprint": "x"
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join("hic_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), fake_manifest_json())
+            .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.config_name, "t");
+        assert_eq!(m.num_weights, 100);
+        assert_eq!(m.batch_size(), 4);
+        assert_eq!(m.layers[0].num_weights(), 108);
+        let e = m.entry("f").unwrap();
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.extra_inputs().len(), 1);
+        assert_eq!(e.extra_inputs()[0].name, "x");
+        assert_eq!(e.metric_outputs()[0].name, "1/loss");
+        assert_eq!(e.inputs[0].element_count(), 6);
+        assert_eq!(e.inputs[0].size_bytes(), 24);
+        assert_eq!(m.inference_model_bits(true), 400);
+        assert_eq!(m.inference_model_bits(false), 3200);
+        assert!(m.entry("nope").is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("float32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("int32").unwrap(), DType::I32);
+        assert_eq!(DType::parse("uint32").unwrap(), DType::U32);
+        assert!(DType::parse("float64").is_err());
+    }
+}

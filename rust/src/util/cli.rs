@@ -1,0 +1,263 @@
+//! Declarative command-line parser (offline stand-in for `clap`).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options
+//! with defaults and typed accessors, positional arguments, and generated
+//! `--help` text.  The `hic-train` binary and the experiment drivers all
+//! parse through this.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+    pub is_flag: bool,
+}
+
+/// One subcommand's option table.
+#[derive(Clone, Debug, Default)]
+pub struct Spec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+    pub positional: Vec<(&'static str, &'static str)>,
+}
+
+impl Spec {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Spec { name, about, opts: Vec::new(), positional: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str,
+               help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, default: Some(default), help,
+                                 is_flag: false });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, default: None, help, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, default: Some(""), help,
+                                 is_flag: true });
+        self
+    }
+
+    pub fn pos(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positional.push((name, help));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let d = match (o.is_flag, o.default) {
+                (true, _) => String::new(),
+                (false, Some(d)) if !d.is_empty() => format!(" [default: {d}]"),
+                _ => " (required)".to_string(),
+            };
+            s.push_str(&format!("  --{:<22} {}{}\n", o.name, o.help, d));
+        }
+        for (p, h) in &self.positional {
+            s.push_str(&format!("  <{p}>  {h}\n"));
+        }
+        s
+    }
+
+    /// Parse `args` (without the program/subcommand names).
+    pub fn parse(&self, args: &[String]) -> Result<Matches> {
+        let mut vals: BTreeMap<String, String> = BTreeMap::new();
+        let mut pos: Vec<String> = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                bail!("{}", self.usage());
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| anyhow!(
+                        "unknown option --{key}\n\n{}", self.usage()))?;
+                let value = if spec.is_flag {
+                    if inline.is_some() {
+                        bail!("flag --{key} takes no value");
+                    }
+                    "true".to_string()
+                } else if let Some(v) = inline {
+                    v
+                } else {
+                    i += 1;
+                    args.get(i)
+                        .cloned()
+                        .ok_or_else(|| anyhow!("--{key} needs a value"))?
+                };
+                vals.insert(key, value);
+            } else {
+                pos.push(a.clone());
+            }
+            i += 1;
+        }
+        for o in &self.opts {
+            if !vals.contains_key(o.name) {
+                match o.default {
+                    Some(d) if !o.is_flag => {
+                        if d.is_empty() && !o.is_flag {
+                            // empty default = optional, stays absent
+                        } else {
+                            vals.insert(o.name.to_string(), d.to_string());
+                        }
+                    }
+                    Some(_) => {} // flag absent -> false
+                    None => bail!("missing required option --{}\n\n{}",
+                                  o.name, self.usage()),
+                }
+            }
+        }
+        if pos.len() > self.positional.len() {
+            bail!("unexpected positional argument '{}'\n\n{}",
+                  pos[self.positional.len()], self.usage());
+        }
+        Ok(Matches { vals, pos })
+    }
+}
+
+#[derive(Debug)]
+pub struct Matches {
+    vals: BTreeMap<String, String>,
+    pos: Vec<String>,
+}
+
+impl Matches {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.vals.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, key: &str) -> Result<&str> {
+        self.get(key).ok_or_else(|| anyhow!("option --{key} not set"))
+    }
+
+    pub fn string(&self, key: &str) -> Result<String> {
+        Ok(self.str(key)?.to_string())
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true"))
+    }
+
+    pub fn usize(&self, key: &str) -> Result<usize> {
+        self.str(key)?
+            .parse()
+            .map_err(|e| anyhow!("--{key}: invalid integer: {e}"))
+    }
+
+    pub fn u64(&self, key: &str) -> Result<u64> {
+        self.str(key)?
+            .parse()
+            .map_err(|e| anyhow!("--{key}: invalid integer: {e}"))
+    }
+
+    pub fn f64(&self, key: &str) -> Result<f64> {
+        self.str(key)?
+            .parse()
+            .map_err(|e| anyhow!("--{key}: invalid number: {e}"))
+    }
+
+    pub fn f32(&self, key: &str) -> Result<f32> {
+        Ok(self.f64(key)? as f32)
+    }
+
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.pos.get(i).map(|s| s.as_str())
+    }
+
+    /// Comma-separated list option.
+    pub fn list(&self, key: &str) -> Vec<String> {
+        match self.get(key) {
+            Some(s) if !s.is_empty() => {
+                s.split(',').map(|x| x.trim().to_string()).collect()
+            }
+            _ => Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Spec {
+        Spec::new("train", "train a model")
+            .opt("steps", "100", "number of steps")
+            .opt("lr", "0.5", "learning rate")
+            .req("config", "artifact config name")
+            .flag("verbose", "chatty output")
+            .pos("out", "output path")
+    }
+
+    fn args(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let m = spec().parse(&args(&["--config", "core"])).unwrap();
+        assert_eq!(m.usize("steps").unwrap(), 100);
+        assert_eq!(m.f32("lr").unwrap(), 0.5);
+        assert!(!m.flag("verbose"));
+
+        let m = spec()
+            .parse(&args(&["--config=core", "--steps", "5", "--verbose"]))
+            .unwrap();
+        assert_eq!(m.usize("steps").unwrap(), 5);
+        assert!(m.flag("verbose"));
+    }
+
+    #[test]
+    fn required_missing_is_error() {
+        assert!(spec().parse(&args(&["--steps", "5"])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_is_error() {
+        assert!(spec().parse(&args(&["--config", "c", "--bogus", "1"]))
+            .is_err());
+    }
+
+    #[test]
+    fn positional_capture() {
+        let m = spec().parse(&args(&["--config", "c", "out.csv"])).unwrap();
+        assert_eq!(m.positional(0), Some("out.csv"));
+        assert!(spec()
+            .parse(&args(&["--config", "c", "a", "b"]))
+            .is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let m = Spec::new("x", "")
+            .opt("names", "a,b, c", "names")
+            .parse(&args(&[]))
+            .unwrap();
+        assert_eq!(m.list("names"), vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(spec()
+            .parse(&args(&["--config", "c", "--verbose=yes"]))
+            .is_err());
+    }
+}

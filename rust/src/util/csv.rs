@@ -1,0 +1,123 @@
+//! CSV emitter for experiment series (figures are regenerated as CSV +
+//! a printed "paper row" table; plotting stays out-of-repo).
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// In-memory CSV table with typed cells, written atomically at the end.
+pub struct CsvWriter {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvWriter {
+    pub fn new(columns: &[&str]) -> Self {
+        CsvWriter {
+            header: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[CsvCell]) {
+        assert_eq!(cells.len(), self.header.len(),
+                   "row width != header width");
+        self.rows
+            .push(cells.iter().map(|c| c.render()).collect());
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{}", self.header.join(","));
+        for r in &self.rows {
+            let _ = writeln!(s, "{}", r.join(","));
+        }
+        s
+    }
+
+    pub fn write(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        fs::write(path, self.to_string())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+/// A typed CSV cell (quotes strings only when needed).
+pub enum CsvCell {
+    S(String),
+    I(i64),
+    U(u64),
+    F(f64),
+}
+
+impl CsvCell {
+    pub fn s(v: &str) -> CsvCell {
+        CsvCell::S(v.to_string())
+    }
+
+    fn render(&self) -> String {
+        match self {
+            CsvCell::S(v) => {
+                if v.contains(',') || v.contains('"') || v.contains('\n') {
+                    format!("\"{}\"", v.replace('"', "\"\""))
+                } else {
+                    v.clone()
+                }
+            }
+            CsvCell::I(v) => v.to_string(),
+            CsvCell::U(v) => v.to_string(),
+            CsvCell::F(v) => {
+                if v.fract() == 0.0 && v.abs() < 1e15 {
+                    format!("{:.1}", v)
+                } else {
+                    format!("{v}")
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_rows() {
+        let mut w = CsvWriter::new(&["name", "x", "y"]);
+        w.row(&[CsvCell::s("a"), CsvCell::I(1), CsvCell::F(0.5)]);
+        w.row(&[CsvCell::s("b,c"), CsvCell::I(-2), CsvCell::F(3.0)]);
+        let s = w.to_string();
+        assert_eq!(s, "name,x,y\na,1,0.5\n\"b,c\",-2,3.0\n");
+        assert_eq!(w.len(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn width_mismatch_panics() {
+        let mut w = CsvWriter::new(&["a", "b"]);
+        w.row(&[CsvCell::I(1)]);
+    }
+
+    #[test]
+    fn writes_file() {
+        let dir = std::env::temp_dir().join("hic_csv_test");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::new(&["a"]);
+        w.row(&[CsvCell::U(7)]);
+        w.write(&path).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "a\n7\n");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

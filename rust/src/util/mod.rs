@@ -1,0 +1,17 @@
+//! Offline-build substrates.
+//!
+//! This workspace builds with no network access, so the usual ecosystem
+//! crates (serde/serde_json, clap, rand, criterion, proptest) are replaced
+//! by small, fully-tested in-tree implementations:
+//!
+//! * [`json`] — JSON reader/writer (artifact manifests, metric dumps)
+//! * [`rng`] — PCG64 PRNG + Gaussian/uniform sampling
+//! * [`cli`] — declarative command-line parser for the `hic-train` binary
+//! * [`csv`] — CSV emitter for experiment series
+//! * [`logging`] — leveled stderr logger with timestamps
+
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod logging;
+pub mod rng;

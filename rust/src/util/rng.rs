@@ -1,0 +1,207 @@
+//! Deterministic PRNG substrate (no `rand` crate offline).
+//!
+//! [`Pcg64`] is the PCG-XSL-RR 128/64 generator (O'Neill 2014) — the same
+//! algorithm as `rand_pcg::Pcg64`, so streams are reproducible against the
+//! ecosystem implementation.  On top of it: uniform ranges, Gaussian
+//! sampling (Box–Muller with caching), shuffles and index sampling — the
+//! primitives the data pipeline, synthetic workloads and the Rust PCM
+//! simulator need.
+
+const MULTIPLIER: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+/// PCG-XSL-RR 128/64.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+    cached_normal: Option<f64>,
+}
+
+impl Pcg64 {
+    /// Seed with a (seed, stream) pair; distinct streams are independent.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let initseq = ((stream as u128) << 64) | 0xda3e_39cb_94b9_5bdb;
+        let mut rng = Pcg64 {
+            state: 0,
+            inc: (initseq << 1) | 1,
+            cached_normal: None,
+        };
+        rng.next_u64();
+        rng.state = rng.state.wrapping_add(
+            ((seed as u128) << 64) | seed as u128);
+        rng.next_u64();
+        rng
+    }
+
+    /// Derive a child generator (for per-worker / per-layer streams).
+    pub fn split(&mut self, tag: u64) -> Pcg64 {
+        Pcg64::new(self.next_u64() ^ tag.rotate_left(17), tag)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self
+            .state
+            .wrapping_mul(MULTIPLIER)
+            .wrapping_add(self.inc);
+        // XSL-RR output function
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        let rot = (self.state >> 122) as u32;
+        xored.rotate_right(rot)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [lo, hi).
+    pub fn uniform_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.uniform() as f32
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire's method).
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let lo = m as u64;
+            if lo >= n || lo >= (u64::MAX - n + 1) % n {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Standard normal via Box–Muller (second deviate cached).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.cached_normal.take() {
+            return z;
+        }
+        loop {
+            let u1 = self.uniform();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.uniform();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+            self.cached_normal = Some(r * s);
+            return r * c;
+        }
+    }
+
+    /// Normal with the given mean / std-dev, as f32.
+    pub fn normal_f32(&mut self, mean: f32, sigma: f32) -> f32 {
+        mean + sigma * self.normal() as f32
+    }
+
+    /// Fill a slice with standard normals.
+    pub fn fill_normal(&mut self, out: &mut [f32], mean: f32, sigma: f32) {
+        for v in out {
+            *v = self.normal_f32(mean, sigma);
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, v: &mut [T]) {
+        for i in (1..v.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            v.swap(i, j);
+        }
+    }
+
+    /// Draw a fresh `u32[2]` PRNG-key payload for the JAX programs.
+    pub fn jax_key(&mut self) -> [u32; 2] {
+        [self.next_u32(), self.next_u32()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_stream_dependent() {
+        let a: Vec<u64> = (0..8).map({
+            let mut r = Pcg64::new(1, 2);
+            move |_| r.next_u64()
+        }).collect();
+        let b: Vec<u64> = (0..8).map({
+            let mut r = Pcg64::new(1, 2);
+            move |_| r.next_u64()
+        }).collect();
+        let c: Vec<u64> = (0..8).map({
+            let mut r = Pcg64::new(1, 3);
+            move |_| r.next_u64()
+        }).collect();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn uniform_bounds_and_mean() {
+        let mut r = Pcg64::new(7, 0);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_is_unbiased_over_small_range() {
+        let mut r = Pcg64::new(3, 1);
+        let mut counts = [0usize; 5];
+        let n = 50_000;
+        for _ in 0..n {
+            counts[r.below(5) as usize] += 1;
+        }
+        for &c in &counts {
+            let frac = c as f64 / n as f64;
+            assert!((frac - 0.2).abs() < 0.02, "frac={frac}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::new(11, 4);
+        let n = 50_000;
+        let (mut s1, mut s2) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let z = r.normal();
+            s1 += z;
+            s2 += z * z;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut r = Pcg64::new(5, 5);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn split_streams_diverge() {
+        let mut root = Pcg64::new(9, 0);
+        let mut a = root.split(1);
+        let mut b = root.split(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

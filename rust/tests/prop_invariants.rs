@@ -1,0 +1,255 @@
+//! Property-test suites over the substrate invariants (DESIGN.md §6),
+//! using the in-tree `testutil` mini-framework.
+
+use hic_train::crossbar::mapper::{LayerMapping, TilingPolicy};
+use hic_train::hic::fixedpoint::FixedPointAccumulator;
+use hic_train::hic::weight::{HicGeometry, HicWeight};
+use hic_train::pcm::device::{PcmDevice, PcmParams};
+use hic_train::pcm::endurance::we_cycles;
+use hic_train::testutil::prop;
+use hic_train::util::json::Json;
+
+/// LSB accumulator: residue bounded, conservation holds, flips bounded.
+#[test]
+fn prop_lsb_accumulator() {
+    prop("lsb accumulator invariants", 2000, |g| {
+        let bits = [4u32, 7, 8][g.usize_in(0, 2)];
+        let half = 1i32 << (bits - 1);
+        let start = g.i32_in(-half + 1, half - 1);
+        let delta = g.i32_in(-2 * half + 1, 2 * half - 1);
+        let mut acc = FixedPointAccumulator::new(bits);
+        acc.acc = start;
+        let out = acc.update(delta);
+        if !(-half..half).contains(&out.acc) {
+            return Err(format!("residue {} escapes range", out.acc));
+        }
+        if start + delta != out.acc + half * out.overflow {
+            return Err(format!(
+                "conservation: {start}+{delta} != {}+{half}*{}",
+                out.acc, out.overflow
+            ));
+        }
+        if out.flips > bits || out.resets > out.flips {
+            return Err(format!("flip accounting: {out:?}"));
+        }
+        // Sign agreement: residue sign never opposes the sum's sign.
+        let s = start + delta;
+        if s > 0 && out.acc < 0 || s < 0 && out.acc > 0 {
+            return Err(format!("sign rule: sum {s}, residue {}", out.acc));
+        }
+        Ok(())
+    });
+}
+
+/// Accumulator sequences: repeated updates never lose mass.
+#[test]
+fn prop_lsb_sequences_conserve() {
+    prop("lsb sequences conserve mass", 300, |g| {
+        let mut acc = FixedPointAccumulator::new(7);
+        let n = g.usize_in(1, 50);
+        let mut total: i64 = 0;
+        let mut ovf: i64 = 0;
+        for _ in 0..n {
+            let d = g.i32_in(-127, 127);
+            total += d as i64;
+            ovf += acc.update(d).overflow as i64;
+        }
+        if total != acc.acc as i64 + 64 * ovf {
+            return Err(format!(
+                "sequence conservation: {total} != {} + 64*{ovf}", acc.acc));
+        }
+        Ok(())
+    });
+}
+
+/// PCM device: conductance stays in [0,1]; counters monotone; drift only
+/// decays.
+#[test]
+fn prop_pcm_device_bounds() {
+    prop("pcm device bounds", 300, |g| {
+        let params = PcmParams {
+            nonlinear: g.bool(),
+            write_noise: g.bool(),
+            read_noise: g.bool(),
+            drift: true,
+            ..Default::default()
+        };
+        let mut rng = g.rng();
+        let mut d = PcmDevice::new(&params, &mut rng);
+        let ops = g.usize_in(1, 60);
+        let mut t = 0.0f32;
+        let mut last_sets = 0;
+        for _ in 0..ops {
+            t += 1.0;
+            if g.bool() {
+                d.program_increment(&params, g.f32_in(0.0, 0.4), t,
+                                    &mut rng);
+            } else {
+                d.reset(t);
+            }
+            if !(0.0..=1.0).contains(&d.g) {
+                return Err(format!("g escaped: {}", d.g));
+            }
+            if d.set_count < last_sets {
+                return Err("set_count went backwards".into());
+            }
+            last_sets = d.set_count;
+        }
+        // Drift monotonically decays after programming.
+        let g1 = d.drifted(&params, t + 10.0);
+        let g2 = d.drifted(&params, t + 1e6);
+        if g2 > g1 + 1e-6 {
+            return Err(format!("drift increased: {g1} -> {g2}"));
+        }
+        Ok(())
+    });
+}
+
+/// Hybrid weight: decoded value always within the representable range and
+/// refresh never leaves a device in the guard band.
+#[test]
+fn prop_hic_weight_refresh() {
+    prop("hic refresh clears guard band", 60, |g| {
+        let geom = HicGeometry::default();
+        let mut rng = g.rng();
+        let mut hw = HicWeight::new(
+            PcmParams { write_noise: g.bool(), ..PcmParams::ideal() },
+            geom, 2, 2, &mut rng);
+        hw.program_init(&[0.0; 4], 0.0, &mut rng);
+        let steps = g.usize_in(5, 80);
+        let mut t = 1.0;
+        for _ in 0..steps {
+            let grad: Vec<f32> =
+                (0..4).map(|_| g.f32_in(-2.0, 2.0)).collect();
+            hw.apply_update(&grad, 0.5, t, &mut rng);
+            t += 0.05;
+        }
+        hw.refresh(t, &mut rng);
+        for d in hw.msb.plus.devices.iter()
+            .chain(hw.msb.minus.devices.iter())
+        {
+            // after refresh no device may sit above the guard band
+            if d.g > 0.98 {
+                return Err(format!("saturated device survived: {}", d.g));
+            }
+        }
+        for w in hw.decode(t) {
+            if w.abs() > geom.w_max * 1.3 {
+                return Err(format!("decoded weight exploded: {w}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Tile mapper: every matrix element covered exactly once, none padded in.
+#[test]
+fn prop_mapper_partition() {
+    prop("mapper partitions the matrix", 500, |g| {
+        let k = g.usize_in(1, 700);
+        let n = g.usize_in(1, 700);
+        let tr = g.usize_in(8, 256);
+        let tc = g.usize_in(8, 256);
+        let m = LayerMapping::new(
+            "p", k, n, TilingPolicy { tile_rows: tr, tile_cols: tc });
+        let covered: usize = m.tiles.iter().map(|t| t.used()).sum();
+        if covered != k * n {
+            return Err(format!("covered {covered} != {}", k * n));
+        }
+        if m.tiles.iter().any(|t| t.used_rows > tr || t.used_cols > tc) {
+            return Err("tile overflows physical size".into());
+        }
+        let util = m.utilization();
+        if !(0.0..=1.0 + 1e-9).contains(&util) {
+            return Err(format!("utilization {util}"));
+        }
+        Ok(())
+    });
+}
+
+/// WE-cycle estimator: monotone in both inputs, consistent with the
+/// Tuma et al. definition's edge cases.
+#[test]
+fn prop_we_cycles_monotone() {
+    prop("we_cycles monotone", 1000, |g| {
+        let sets = g.u64_below(100_000);
+        let resets = g.u64_below(10_000);
+        let base = we_cycles(sets, resets);
+        if we_cycles(sets + 10, resets) < base
+            || we_cycles(sets, resets + 1) < base
+        {
+            return Err(format!("non-monotone at ({sets},{resets})"));
+        }
+        if base < resets {
+            return Err("fewer cycles than resets".into());
+        }
+        Ok(())
+    });
+}
+
+/// JSON parser round-trip on randomly generated documents.
+#[test]
+fn prop_json_roundtrip() {
+    fn gen_value(g: &mut hic_train::testutil::Gen, depth: usize) -> Json {
+        match if depth == 0 { g.usize_in(0, 3) } else { g.usize_in(0, 5) } {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool()),
+            2 => Json::Num((g.i32_in(-100_000, 100_000) as f64) / 4.0),
+            3 => Json::Str(
+                (0..g.usize_in(0, 12))
+                    .map(|_| {
+                        let c = g.usize_in(0, 4);
+                        match c {
+                            0 => '"',
+                            1 => '\\',
+                            2 => '\n',
+                            3 => 'é',
+                            _ => 'a',
+                        }
+                    })
+                    .collect()),
+            4 => Json::Arr(
+                (0..g.usize_in(0, 4))
+                    .map(|_| gen_value(g, depth - 1))
+                    .collect()),
+            _ => {
+                let n = g.usize_in(0, 4);
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..n {
+                    m.insert(format!("k{i}"), gen_value(g, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+    prop("json roundtrip", 500, |g| {
+        let v = gen_value(g, 3);
+        let s = v.to_string();
+        match Json::parse(&s) {
+            Ok(back) if back == v => Ok(()),
+            Ok(back) => Err(format!("mismatch: {v:?} -> {s} -> {back:?}")),
+            Err(e) => Err(format!("parse failed on {s}: {e}")),
+        }
+    });
+}
+
+/// DAC/ADC: quantization error bounded by half a step inside range.
+#[test]
+fn prop_quantizer_error_bound() {
+    use hic_train::crossbar::quant::{AdcSpec, DacSpec};
+    prop("quantizer error bound", 2000, |g| {
+        let dac = DacSpec { bits: [4, 6, 8][g.usize_in(0, 2)], range: 4.0 };
+        let v = g.f32_in(-4.0, 4.0);
+        let q = dac.convert(v);
+        if (q - v).abs() > dac.step() / 2.0 + 1e-5 {
+            return Err(format!("|{q} - {v}| > step/2 ({})", dac.step()));
+        }
+        let adc = AdcSpec { bits: 8, range: 16.0 };
+        let w = g.f32_in(-20.0, 20.0);
+        let qa = adc.convert(w);
+        if qa.abs() > adc.range + 1e-5 {
+            return Err(format!("ADC output {qa} escapes range"));
+        }
+        Ok(())
+    });
+}

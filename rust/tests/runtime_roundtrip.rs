@@ -1,0 +1,223 @@
+//! End-to-end runtime integration: load the `tiny` artifact set, init the
+//! HIC state, run train/eval/refresh/adabs steps and check the contract
+//! (shapes, state threading, metric plausibility, loss decrease).
+//!
+//! Requires `make artifacts` (the tiny config) to have run.
+
+use std::path::PathBuf;
+
+use hic_train::runtime::{artifact::artifact_root, Engine, HostTensor};
+use hic_train::util::rng::Pcg64;
+
+fn tiny_dir() -> Option<PathBuf> {
+    let d = artifact_root().join("tiny");
+    d.join("manifest.json").exists().then_some(d)
+}
+
+fn synth_batch(rng: &mut Pcg64, b: usize, protos: &[Vec<f32>])
+               -> (HostTensor, HostTensor) {
+    let img = 32 * 32 * 3;
+    let mut x = vec![0f32; b * img];
+    let mut y = vec![0i32; b];
+    for i in 0..b {
+        let c = rng.below(10) as usize;
+        y[i] = c as i32;
+        for j in 0..img {
+            x[i * img + j] = protos[c][j] + rng.normal_f32(0.0, 0.7);
+        }
+    }
+    (HostTensor::from_f32(&[b, 32, 32, 3], &x),
+     HostTensor::from_i32(&[b], &y))
+}
+
+#[test]
+fn full_training_contract() {
+    let Some(dir) = tiny_dir() else {
+        eprintln!("SKIP: tiny artifacts missing; run `make artifacts`");
+        return;
+    };
+    let engine = Engine::load(&dir).unwrap();
+    assert_eq!(engine.manifest.config_name, "tiny");
+    let b = engine.manifest.batch_size();
+
+    let mut state = engine.init_state("hic_init", [0, 42]).unwrap();
+    let n_leaves = state.leaves.len();
+    assert!(n_leaves > 100, "HIC state should have many leaves");
+
+    // Endurance ledger leaves exist per layer.
+    assert!(!state.find("lsb_resets").is_empty());
+    assert!(!state.find("pcm_p/set_count").is_empty());
+
+    let mut rng = Pcg64::new(7, 0);
+    let protos: Vec<Vec<f32>> = (0..10)
+        .map(|_| (0..32 * 32 * 3).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+        .collect();
+
+    let mut t_now = 0.0f32;
+    let mut first_loss = None;
+    let mut last_loss = 0.0f32;
+    for step in 0..30 {
+        let (x, y) = synth_batch(&mut rng, b, &protos);
+        let metrics = engine
+            .call_stateful(
+                "hic_train_step",
+                &mut state,
+                &[x, y, HostTensor::key([1, step]),
+                  HostTensor::scalar_f32(t_now),
+                  HostTensor::scalar_f32(0.5)],
+            )
+            .unwrap();
+        // metric outputs: acc, grad_norm, loss, overflow_events (sorted)
+        assert_eq!(metrics.len(), 4);
+        let loss = metrics[2].scalar().unwrap();
+        assert!(loss.is_finite() && loss > 0.0, "loss={loss}");
+        if first_loss.is_none() {
+            first_loss = Some(loss);
+        }
+        last_loss = loss;
+        t_now += 0.05;
+
+        // Refresh every 10 batches, like the coordinator will.
+        if (step + 1) % 10 == 0 {
+            let m = engine
+                .call_stateful(
+                    "hic_refresh",
+                    &mut state,
+                    &[HostTensor::key([2, step]),
+                      HostTensor::scalar_f32(t_now)],
+                )
+                .unwrap();
+            assert_eq!(m.len(), 1); // refreshed-pairs count
+            assert!(m[0].scalar().unwrap() >= 0.0);
+        }
+        assert_eq!(state.leaves.len(), n_leaves);
+    }
+    assert!(
+        last_loss < first_loss.unwrap() * 1.05,
+        "training diverged: first={:?} last={last_loss}",
+        first_loss
+    );
+
+    // Eval: correct count within [0, b], loss_sum positive.
+    let (x, y) = synth_batch(&mut rng, b, &protos);
+    let out = engine
+        .call_stateful(
+            "hic_eval_step",
+            &mut state,
+            &[x.clone(), y, HostTensor::key([3, 0]),
+              HostTensor::scalar_f32(t_now)],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 2);
+    let correct = out[0].scalar_i64().unwrap();
+    assert!((0..=b as i64).contains(&correct), "correct={correct}");
+    assert!(out[1].scalar().unwrap() > 0.0);
+
+    // AdaBS calibration call preserves state arity.
+    engine
+        .call_stateful(
+            "hic_adabs",
+            &mut state,
+            &[x, HostTensor::key([4, 0]), HostTensor::scalar_f32(t_now),
+              HostTensor::scalar_f32(1.0)],
+        )
+        .unwrap();
+    assert_eq!(state.leaves.len(), n_leaves);
+
+    // Endurance counters are monotone >= 0 and some LSB flips happened.
+    let total_flips: i64 = state
+        .find("lsb_flips")
+        .iter()
+        .map(|(_, t)| t.as_i32().unwrap().iter().map(|&v| v as i64).sum::<i64>())
+        .sum();
+    assert!(total_flips > 0, "no LSB activity after 30 steps");
+}
+
+#[test]
+fn baseline_contract() {
+    let Some(dir) = tiny_dir() else {
+        eprintln!("SKIP: tiny artifacts missing; run `make artifacts`");
+        return;
+    };
+    let engine = Engine::load(&dir).unwrap();
+    let b = engine.manifest.batch_size();
+    let mut state = engine.init_state("baseline_init", [0, 1]).unwrap();
+
+    let mut rng = Pcg64::new(9, 0);
+    let protos: Vec<Vec<f32>> = (0..10)
+        .map(|_| (0..32 * 32 * 3).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+        .collect();
+
+    let mut losses = Vec::new();
+    for step in 0..20 {
+        let (x, y) = synth_batch(&mut rng, b, &protos);
+        let m = engine
+            .call_stateful(
+                "baseline_train_step",
+                &mut state,
+                &[x, y, HostTensor::scalar_f32(0.05)],
+            )
+            .unwrap();
+        assert_eq!(m.len(), 2); // acc, loss
+        losses.push(m[1].scalar().unwrap());
+        let _ = step;
+    }
+    let first: f32 = losses[..5].iter().sum::<f32>() / 5.0;
+    let last: f32 = losses[losses.len() - 5..].iter().sum::<f32>() / 5.0;
+    assert!(last < first, "baseline not learning: {first} -> {last}");
+
+    let (x, y) = synth_batch(&mut rng, b, &protos);
+    let out = engine
+        .call_stateful("baseline_eval_step", &mut state, &[x, y])
+        .unwrap();
+    assert_eq!(out.len(), 2);
+}
+
+#[test]
+fn crossbar_vmm_microkernel() {
+    let Some(dir) = tiny_dir() else {
+        eprintln!("SKIP: tiny artifacts missing; run `make artifacts`");
+        return;
+    };
+    let engine = Engine::load(&dir).unwrap();
+    let t = 128;
+    let mut rng = Pcg64::new(1, 1);
+    let x: Vec<f32> = (0..t * t).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let w: Vec<f32> = (0..t * t).map(|_| rng.normal_f32(0.0, 0.05)).collect();
+    let z = vec![0f32; t * t];
+    let out = engine
+        .call(
+            "crossbar_vmm",
+            &[
+                HostTensor::from_f32(&[t, t], &x),
+                HostTensor::from_f32(&[t, t], &w),
+                HostTensor::from_f32(&[t, t], &z),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].shape, vec![t, t]);
+    let vals = out[0].as_f32().unwrap();
+    assert!(vals.iter().all(|v| v.is_finite()));
+    // With zero noise and ADC quantization, output ~ x @ w within ADC step.
+    // Spot check one element against a host-side dot product.
+    let adc_range = 16.0f32;
+    let adc_step = 2.0 * adc_range / 255.0;
+    let dac_range = 4.0f32;
+    let dac_step = 2.0 * dac_range / 255.0;
+    let xq = |v: f32| (v.clamp(-dac_range, dac_range) / dac_step).round()
+        * dac_step;
+    for (r, c) in [(0usize, 0usize), (7, 13), (127, 127)] {
+        let mut acc = 0f32;
+        for kk in 0..t {
+            acc += xq(x[r * t + kk]) * w[kk * t + c];
+        }
+        let expect = (acc.clamp(-adc_range, adc_range) / adc_step).round()
+            * adc_step;
+        let got = vals[r * t + c];
+        assert!(
+            (got - expect).abs() <= adc_step + 1e-3,
+            "({r},{c}): got {got}, expected {expect}"
+        );
+    }
+}
