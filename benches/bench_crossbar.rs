@@ -1,12 +1,18 @@
 //! Crossbar-simulator benches: tile VMM throughput across geometries, and
 //! the DAC/ADC transfer functions (the L3 hot path of host-side
 //! cross-validation and the crossbar explorer).
+//!
+//! `vmm_batch16_aos_ref` replays the seed's batched-VMM cost model —
+//! one full array-of-structs re-read (with `powf` drift and a fresh
+//! `rows*cols` allocation) **per sample** — against the planar
+//! `vmm_batch_into` path, which drifts once per batch into reusable
+//! scratch and draws only fresh read noise per sample.
 
 use hic_train::bench::Bench;
 use hic_train::crossbar::quant::{AdcSpec, DacSpec};
 use hic_train::crossbar::tile::CrossbarTile;
 use hic_train::hic::weight::{HicGeometry, HicWeight};
-use hic_train::pcm::device::PcmParams;
+use hic_train::pcm::device::{PcmDevice, PcmParams};
 use hic_train::util::rng::Pcg64;
 
 fn tile(rows: usize, cols: usize, rng: &mut Pcg64) -> CrossbarTile {
@@ -17,6 +23,43 @@ fn tile(rows: usize, cols: usize, rng: &mut Pcg64) -> CrossbarTile {
         .collect();
     hw.program_init(&w, 0.0, rng);
     CrossbarTile::new(hw, DacSpec::default(), AdcSpec::default())
+}
+
+/// The seed's `vmm_batch`: per-sample full-array re-read over scalar
+/// device structs, allocating the weight read every time.
+fn vmm_batch_aos_ref(t: &CrossbarTile, plus: &[PcmDevice],
+                     minus: &[PcmDevice], x: &[f32], m: usize,
+                     t_now: f32, rng: &mut Pcg64) -> Vec<f32> {
+    let (rows, cols) = (t.rows(), t.cols());
+    let params = &t.weights.msb.plus.params;
+    let mut out = Vec::with_capacity(m * cols);
+    for s in 0..m {
+        let xq: Vec<f32> = x[s * rows..(s + 1) * rows]
+            .iter()
+            .map(|&v| t.dac.convert(v))
+            .collect();
+        let gp: Vec<f32> =
+            plus.iter().map(|d| d.read(params, t_now, rng)).collect();
+        let w: Vec<f32> = gp
+            .iter()
+            .zip(minus)
+            .map(|(p, d)| {
+                t.weights.msb.g_to_w(p - d.read(params, t_now, rng))
+            })
+            .collect();
+        let mut y = vec![0f32; cols];
+        for (r, &xv) in xq.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let row = &w[r * cols..(r + 1) * cols];
+            for (yc, &wc) in y.iter_mut().zip(row) {
+                *yc += xv * wc;
+            }
+        }
+        out.extend(y.iter().map(|&v| t.adc.convert(v)));
+    }
+    out
 }
 
 fn main() {
@@ -36,14 +79,34 @@ fn main() {
         );
     }
 
-    // Batched VMM (amortizes the per-call read)
+    // Batched VMM: seed-style per-sample re-read vs the planar batched
+    // path (drift once per batch, scratch reused across invocations).
     let t = tile(128, 128, &mut rng);
+    let plus: Vec<PcmDevice> =
+        (0..t.weights.msb.len()).map(|i| t.weights.msb.plus.device_at(i))
+                                .collect();
+    let minus: Vec<PcmDevice> =
+        (0..t.weights.msb.len()).map(|i| t.weights.msb.minus.device_at(i))
+                                .collect();
     let xb: Vec<f32> = (0..16 * 128).map(|i| (i % 128) as f32 / 64.0).collect();
     let mut r = Pcg64::new(3, 0);
+    b.bench_with_elements("tile_vmm_batch16_aos_ref_128x128",
+                          Some((16 * 128 * 128) as f64), || {
+        std::hint::black_box(
+            vmm_batch_aos_ref(&t, &plus, &minus, &xb, 16, 1.0, &mut r));
+    });
+    let mut scratch = t.scratch();
+    let mut out = vec![0f32; 16 * 128];
     b.bench_with_elements("tile_vmm_batch16_128x128",
                           Some((16 * 128 * 128) as f64), || {
-        std::hint::black_box(t.vmm_batch(&xb, 16, 1.0, &mut r));
+        t.vmm_batch_into(&xb, 16, 1.0, &mut r, &mut scratch, &mut out);
+        std::hint::black_box(&out);
     });
+    if let Some(s) = b.speedup("tile_vmm_batch16_aos_ref_128x128",
+                               "tile_vmm_batch16_128x128") {
+        println!("[crossbar] vmm_batch16: planar {s:.2}x over AoS \
+                  per-sample re-read");
+    }
 
     // Converter transfer functions
     let dac = DacSpec::default();

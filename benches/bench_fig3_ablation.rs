@@ -10,6 +10,11 @@ use hic_train::runtime::{Engine, HostTensor};
 use hic_train::util::rng::Pcg64;
 
 fn main() {
+    if !cfg!(feature = "pjrt") {
+        println!("[fig3] SKIP: built without the `pjrt` feature \
+                  (stub runtime backend)");
+        return;
+    }
     let mut b = Bench::new("fig3");
     let mut rng = Pcg64::new(9, 0);
     for tag in ["linear", "nonlinear", "full"] {

@@ -8,6 +8,11 @@ use hic_train::runtime::{Engine, HostTensor};
 use hic_train::util::rng::Pcg64;
 
 fn main() {
+    if !cfg!(feature = "pjrt") {
+        println!("[fig4] SKIP: built without the `pjrt` feature \
+                  (stub runtime backend)");
+        return;
+    }
     let mut b = Bench::new("fig4");
     let mut rng = Pcg64::new(13, 0);
 

@@ -11,6 +11,11 @@ use hic_train::runtime::{Engine, HostTensor};
 use hic_train::util::rng::Pcg64;
 
 fn main() {
+    if !cfg!(feature = "pjrt") {
+        println!("[fig5] SKIP: built without the `pjrt` feature \
+                  (stub runtime backend)");
+        return;
+    }
     let dir = artifact_root().join("tiny");
     if !dir.join("manifest.json").exists() {
         println!("[fig5] SKIP: tiny artifacts missing (make artifacts)");

@@ -1,18 +1,30 @@
 //! PCM device-model benches: programming, reads, drift evaluation —
 //! the substrate costs behind every host-side analysis.
+//!
+//! The `aos_ref_*` cases re-run the seed's array-of-structs path (a
+//! `Vec<PcmDevice>` walked device-by-device with `powf` drift and a
+//! fresh allocation per read) against the planar SoA kernels, and the
+//! suite emits `BENCH_pcm_soa.json` with the measured speedups — the
+//! before/after datapoint for the planar-state-engine refactor.
 
 use hic_train::bench::Bench;
-use hic_train::pcm::array::DifferentialPair;
+use hic_train::pcm::array::{DifferentialPair, PcmArray};
 use hic_train::pcm::device::{PcmDevice, PcmParams};
 use hic_train::pcm::endurance::{EnduranceLedger, Histogram};
 use hic_train::util::rng::Pcg64;
+
+/// Gather the scalar (seed-layout) twin of one planar array.
+fn aos_twin(arr: &PcmArray) -> Vec<PcmDevice> {
+    (0..arr.len()).map(|i| arr.device_at(i)).collect()
+}
 
 fn main() {
     let mut b = Bench::new("pcm");
     let params = PcmParams::default();
     let mut rng = Pcg64::new(7, 0);
+    let n = 128 * 128;
 
-    // Single-device pulse application
+    // Single-device pulse application (scalar reference path)
     let mut dev = PcmDevice::new(&params, &mut rng);
     b.bench("set_pulse", || {
         dev.set_pulse(&params, 1.0, &mut rng);
@@ -21,40 +33,71 @@ fn main() {
         }
     });
 
-    // Array-level programming (16k devices)
+    // Array-level programming (16k devices, planar sweep)
     let mut pair = DifferentialPair::new(params, 128, 128, 1.0, &mut rng);
-    let w: Vec<f32> = (0..128 * 128)
+    let w: Vec<f32> = (0..n)
         .map(|i| ((i % 13) as f32 - 6.0) / 7.0)
         .collect();
-    b.bench_with_elements("program_weights_128x128",
-                          Some((128 * 128) as f64), || {
+    b.bench_with_elements("program_weights_128x128", Some(n as f64), || {
         pair.program_weights(&w, 1.0, &mut rng);
     });
 
-    // Drift-decoded full-array read
-    b.bench_with_elements("decode_drifted_128x128",
-                          Some((128 * 128) as f64), || {
-        std::hint::black_box(pair.decode(1e6));
+    // ---- the SoA-vs-AoS headline cases --------------------------------
+    let plus_twin = aos_twin(&pair.plus);
+    let minus_twin = aos_twin(&pair.minus);
+
+    // (a) whole-array drifted decode: seed-style device walk + alloc...
+    b.bench_with_elements("decode_drifted_aos_ref_128x128",
+                          Some(n as f64), || {
+        let out: Vec<f32> = plus_twin
+            .iter()
+            .zip(&minus_twin)
+            .map(|(p, m)| {
+                pair.g_to_w(p.drifted(&params, 1e6)
+                    - m.drifted(&params, 1e6))
+            })
+            .collect();
+        std::hint::black_box(out);
+    });
+    // ...vs the planar fused kernel into a reused buffer.
+    let mut decode_buf = vec![0f32; n];
+    b.bench_with_elements("decode_drifted_planar_128x128",
+                          Some(n as f64), || {
+        pair.decode_into(1e6, &mut decode_buf);
+        std::hint::black_box(&decode_buf);
     });
 
-    // Stochastic read
-    b.bench_with_elements("noisy_read_128x128",
-                          Some((128 * 128) as f64), || {
-        std::hint::black_box(pair.read_weights(1e6, &mut rng));
+    // (b) whole-array stochastic read: seed-style per-device reads...
+    b.bench_with_elements("noisy_read_aos_ref_128x128",
+                          Some(n as f64), || {
+        let gp: Vec<f32> = plus_twin
+            .iter()
+            .map(|d| d.read(&params, 1e6, &mut rng))
+            .collect();
+        let out: Vec<f32> = gp
+            .iter()
+            .zip(&minus_twin)
+            .map(|(p, m)| pair.g_to_w(p - m.read(&params, 1e6, &mut rng)))
+            .collect();
+        std::hint::black_box(out);
+    });
+    // ...vs the planar batched read into a reused buffer.
+    let mut read_buf = vec![0f32; n];
+    b.bench_with_elements("noisy_read_planar_128x128",
+                          Some(n as f64), || {
+        pair.read_weights_into(1e6, &mut rng, &mut read_buf);
+        std::hint::black_box(&read_buf);
     });
 
     // Selective refresh scan (mostly a predicate sweep when healthy)
-    b.bench_with_elements("refresh_scan_128x128",
-                          Some((128 * 128) as f64), || {
+    b.bench_with_elements("refresh_scan_128x128", Some(n as f64), || {
         std::hint::black_box(pair.refresh(1e6, &mut rng));
     });
 
-    // Endurance ledger ingestion
-    b.bench_with_elements("ledger_record_16k", Some(16384.0), || {
+    // Endurance ledger ingestion (planar count-plane sweep)
+    b.bench_with_elements("ledger_record_planes_16k", Some(16384.0), || {
         let mut l = EnduranceLedger::new();
-        for i in 0..16384u64 {
-            l.record_msb(i % 300, i % 29);
-        }
+        l.record_msb_planes(&pair.plus.set_count, &pair.plus.reset_count);
         std::hint::black_box(l.msb.max);
     });
 
@@ -66,6 +109,27 @@ fn main() {
     b.bench("histogram_percentile", || {
         std::hint::black_box(h.percentile(95.0));
     });
+
+    // Emit the before/after datapoint for the SoA refactor.  Speedups
+    // are keyed by the planar case name so tooling can join each ratio
+    // back to its measurements in the `cases` map.
+    let mut speedups = Vec::new();
+    for (base, plan) in [
+        ("decode_drifted_aos_ref_128x128",
+         "decode_drifted_planar_128x128"),
+        ("noisy_read_aos_ref_128x128",
+         "noisy_read_planar_128x128"),
+    ] {
+        if let Some(s) = b.speedup(base, plan) {
+            println!("[pcm] {plan}: {s:.2}x over {base}");
+            speedups.push((plan.to_string(), s));
+        }
+    }
+    if let Err(e) = b.write_json(
+        std::path::Path::new("BENCH_pcm_soa.json"), &speedups)
+    {
+        eprintln!("[pcm] could not write BENCH_pcm_soa.json: {e}");
+    }
 
     b.finish();
 }

@@ -10,6 +10,11 @@ use hic_train::runtime::{Engine, HostTensor};
 use hic_train::util::rng::Pcg64;
 
 fn main() {
+    if !cfg!(feature = "pjrt") {
+        println!("[runtime] SKIP: built without the `pjrt` feature \
+                  (stub runtime backend)");
+        return;
+    }
     let dir = artifact_root().join("tiny");
     if !dir.join("manifest.json").exists() {
         println!("[runtime] SKIP: tiny artifacts missing (make artifacts)");
@@ -73,6 +78,8 @@ fn main() {
 
     // State round-trip cost in isolation: serialize state leaves to
     // literals and back (the Layer-3 overhead the §Perf log tracks).
+    // PJRT builds only — the stub backend has no literal bridge.
+    #[cfg(feature = "pjrt")]
     b.bench_with_elements(
         "state_literal_roundtrip",
         Some(state.total_bytes() as f64),

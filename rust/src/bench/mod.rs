@@ -12,7 +12,11 @@
 //! b.finish();
 //! ```
 
+use std::collections::BTreeMap;
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
 
 /// Summary of one benchmark case.
 #[derive(Clone, Debug)]
@@ -34,6 +38,23 @@ impl Stats {
 
     pub fn throughput(&self) -> Option<f64> {
         self.elements.map(|e| e / (self.mean_ns / 1e9))
+    }
+
+    /// JSON record of this case (for `Bench::write_json`).
+    pub fn json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("iters".into(), Json::Num(self.iters as f64));
+        m.insert("mean_ns".into(), Json::Num(self.mean_ns));
+        m.insert("median_ns".into(), Json::Num(self.median_ns));
+        m.insert("p10_ns".into(), Json::Num(self.p10_ns));
+        m.insert("p90_ns".into(), Json::Num(self.p90_ns));
+        if let Some(e) = self.elements {
+            m.insert("elements".into(), Json::Num(e));
+        }
+        if let Some(t) = self.throughput() {
+            m.insert("throughput_elem_per_s".into(), Json::Num(t));
+        }
+        Json::Obj(m)
     }
 }
 
@@ -87,6 +108,37 @@ impl Bench {
         print_stats(&self.suite, &stats);
         self.results.push(stats);
         self.results.last().unwrap()
+    }
+
+    /// Stats of a completed case, by name.
+    pub fn get(&self, name: &str) -> Option<&Stats> {
+        self.results.iter().find(|s| s.name == name)
+    }
+
+    /// Median-time speedup of `contender` over `baseline` (>1 = faster).
+    pub fn speedup(&self, baseline: &str, contender: &str) -> Option<f64> {
+        Some(self.get(baseline)?.median_ns / self.get(contender)?.median_ns)
+    }
+
+    /// Dump the suite (plus named comparison ratios) as a JSON datapoint
+    /// — the before/after evidence file the perf-tracking PRs commit.
+    pub fn write_json(&self, path: &Path, speedups: &[(String, f64)])
+                      -> std::io::Result<()> {
+        let mut cases = BTreeMap::new();
+        for s in &self.results {
+            cases.insert(s.name.clone(), s.json());
+        }
+        let mut sp = BTreeMap::new();
+        for (name, v) in speedups {
+            sp.insert(name.clone(), Json::Num(*v));
+        }
+        let mut root = BTreeMap::new();
+        root.insert("suite".into(), Json::Str(self.suite.clone()));
+        root.insert("cases".into(), Json::Obj(cases));
+        root.insert("speedups".into(), Json::Obj(sp));
+        std::fs::write(path, Json::Obj(root).to_string())?;
+        println!("[{}] wrote {}", self.suite, path.display());
+        Ok(())
     }
 
     /// Print the suite footer.  Call at the end of `main`.

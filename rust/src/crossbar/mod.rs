@@ -8,8 +8,11 @@
 //!   kernel's epilogue)
 //! * [`mapper`] — tiling of layer weight matrices onto physical tiles,
 //!   utilization accounting
-//! * [`tile`] — a functional tile: VMM through the PCM device model with
-//!   quantized I/O (the host-side oracle of the L1 kernel)
+//! * [`tile`] — a functional tile: VMM through the planar PCM device
+//!   planes with quantized I/O (the host-side oracle of the L1 kernel).
+//!   Batched reads evaluate drift once per invocation into a reusable
+//!   [`tile::TileScratch`] and draw fresh per-sample read noise — no
+//!   per-sample allocation or re-read of the array.
 //! * [`energy`] — energy / latency / area estimator with published-order
 //!   constants (ISAAC-class periphery), used for the architecture
 //!   comparisons in DESIGN.md and the `crossbar_explorer` example
@@ -22,4 +25,4 @@ pub mod tile;
 pub use energy::{EnergyModel, EnergyReport};
 pub use mapper::{LayerMapping, TileCoord, TilingPolicy};
 pub use quant::{AdcSpec, DacSpec};
-pub use tile::CrossbarTile;
+pub use tile::{CrossbarTile, TileScratch};

@@ -12,6 +12,15 @@
 //! with `w_eff` the drifted differential read plus per-read Gaussian
 //! noise.  Used by the crossbar explorer, the energy model (activity
 //! factors) and cross-validation tests against the compiled artifact.
+//!
+//! Batched reads run on the planar device planes: `vmm_batch` evaluates
+//! the drift power law **once per batch** into a [`TileScratch`] (drift
+//! does not advance within one invocation — `t_now` is fixed), then per
+//! sample draws a fresh stochastic read of the whole array (G+ noise
+//! plane first, then G−, the scalar-reference RNG order) and runs a
+//! row-major inner loop over flat slices.  No allocation per sample;
+//! callers that keep a `TileScratch` across invocations
+//! (`vmm_batch_into`) allocate nothing per batch either.
 
 use crate::hic::weight::HicWeight;
 use crate::util::rng::Pcg64;
@@ -22,6 +31,16 @@ pub struct CrossbarTile {
     pub weights: HicWeight,
     pub dac: DacSpec,
     pub adc: AdcSpec,
+}
+
+/// Reusable per-tile read buffers: drifted conductance planes (valid for
+/// one `t_now`), the per-sample effective-weight read and the quantized
+/// input row.
+pub struct TileScratch {
+    gp: Vec<f32>,
+    gm: Vec<f32>,
+    w: Vec<f32>,
+    xq: Vec<f32>,
 }
 
 impl CrossbarTile {
@@ -37,40 +56,109 @@ impl CrossbarTile {
         self.weights.msb.cols()
     }
 
+    /// Allocate scratch buffers sized for this tile.
+    pub fn scratch(&self) -> TileScratch {
+        let n = self.rows() * self.cols();
+        TileScratch {
+            gp: vec![0.0; n],
+            gm: vec![0.0; n],
+            w: vec![0.0; n],
+            xq: vec![0.0; self.rows()],
+        }
+    }
+
     /// One analog VMM: `y = ADC(DAC(x) @ W_read(t))`.
     ///
-    /// Each call performs one stochastic read of the whole array (fresh
-    /// read noise), like one pass through the hardware.
+    /// Performs one stochastic read of the whole array (fresh read
+    /// noise), like one pass through the hardware.
     pub fn vmm(&self, x: &[f32], t_now: f32, rng: &mut Pcg64) -> Vec<f32> {
-        assert_eq!(x.len(), self.rows());
-        let xq: Vec<f32> = x.iter().map(|&v| self.dac.convert(v)).collect();
-        let w = self.weights.msb.read_weights(t_now, rng);
-        let (rows, cols) = (self.rows(), self.cols());
-        let mut y = vec![0f32; cols];
-        for r in 0..rows {
-            let xv = xq[r];
-            if xv == 0.0 {
-                continue;
-            }
-            let row = &w[r * cols..(r + 1) * cols];
-            for c in 0..cols {
-                y[c] += xv * row[c];
-            }
-        }
-        y.iter().map(|&v| self.adc.convert(v)).collect()
+        self.vmm_batch(x, 1, t_now, rng)
     }
 
     /// Batched VMM (`x: [m, rows]` row-major) — the whole-tile workload
-    /// unit the energy model charges per invocation.
+    /// unit the energy model charges per invocation.  Allocating wrapper
+    /// of [`CrossbarTile::vmm_batch_into`].
     pub fn vmm_batch(&self, x: &[f32], m: usize, t_now: f32,
                      rng: &mut Pcg64) -> Vec<f32> {
-        assert_eq!(x.len(), m * self.rows());
-        let mut out = Vec::with_capacity(m * self.cols());
-        for i in 0..m {
-            out.extend(self.vmm(&x[i * self.rows()..(i + 1) * self.rows()],
-                                t_now, rng));
-        }
+        let mut scratch = self.scratch();
+        let mut out = vec![0.0; m * self.cols()];
+        self.vmm_batch_into(x, m, t_now, rng, &mut scratch, &mut out);
         out
+    }
+
+    /// Batched VMM into caller-provided buffers: drift evaluated once
+    /// for the whole batch, one fresh whole-array stochastic read per
+    /// sample, zero allocations.
+    pub fn vmm_batch_into(&self, x: &[f32], m: usize, t_now: f32,
+                          rng: &mut Pcg64, scratch: &mut TileScratch,
+                          out: &mut [f32]) {
+        let (rows, cols) = (self.rows(), self.cols());
+        assert_eq!(x.len(), m * rows);
+        assert_eq!(out.len(), m * cols);
+        let msb = &self.weights.msb;
+        assert_eq!(scratch.w.len(), msb.len());
+        assert_eq!(scratch.xq.len(), rows, "scratch shape != tile shape");
+
+        // Drift is a function of t_now only: evaluate both conductance
+        // planes once per batch, not once per sample.
+        msb.plus.drift_into(t_now, &mut scratch.gp);
+        msb.minus.drift_into(t_now, &mut scratch.gm);
+
+        // Each plane keeps its own noise model (arrays of a pair may be
+        // configured asymmetrically), like the scalar read path.
+        let (noise_p, sigma_p) =
+            (msb.plus.params.read_noise, msb.plus.params.read_sigma);
+        let (noise_m, sigma_m) =
+            (msb.minus.params.read_noise, msb.minus.params.read_sigma);
+        let scale = msb.g_to_w(1.0);
+
+        for s in 0..m {
+            // Fresh stochastic read of the whole array for this sample
+            // (G+ noise plane first, then G− — the scalar draw order).
+            if noise_p {
+                for (w, &gp) in scratch.w.iter_mut().zip(&scratch.gp) {
+                    *w = (gp + sigma_p * rng.normal() as f32)
+                        .clamp(0.0, 1.0);
+                }
+            } else {
+                for (w, &gp) in scratch.w.iter_mut().zip(&scratch.gp) {
+                    *w = gp.clamp(0.0, 1.0);
+                }
+            }
+            if noise_m {
+                for (w, &gm) in scratch.w.iter_mut().zip(&scratch.gm) {
+                    *w = (*w
+                        - (gm + sigma_m * rng.normal() as f32)
+                            .clamp(0.0, 1.0))
+                        * scale;
+                }
+            } else {
+                for (w, &gm) in scratch.w.iter_mut().zip(&scratch.gm) {
+                    *w = (*w - gm.clamp(0.0, 1.0)) * scale;
+                }
+            }
+
+            // DAC the input row, then a row-major inner loop over the
+            // flat weight slice (autovectorizes per output column).
+            let xs = &x[s * rows..(s + 1) * rows];
+            for (q, &v) in scratch.xq.iter_mut().zip(xs) {
+                *q = self.dac.convert(v);
+            }
+            let y = &mut out[s * cols..(s + 1) * cols];
+            y.fill(0.0);
+            for (r, &xv) in scratch.xq.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let row = &scratch.w[r * cols..(r + 1) * cols];
+                for (yc, &wc) in y.iter_mut().zip(row) {
+                    *yc += xv * wc;
+                }
+            }
+            for yc in y.iter_mut() {
+                *yc = self.adc.convert(*yc);
+            }
+        }
     }
 }
 
@@ -147,5 +235,50 @@ mod tests {
         let y = tile.vmm_batch(&x, 2, 0.0, &mut rng);
         assert_eq!(y.len(), 2 * 3);
         assert!((y[0] - y[3]).abs() < 1e-6); // identical rows
+    }
+
+    #[test]
+    fn batch_matches_sequential_vmm_on_same_stream() {
+        // The batched path must consume the RNG exactly like m sequential
+        // single-sample reads (fresh noise per sample), so with equal
+        // seeds the outputs agree bit for bit.
+        let rows = 6;
+        let cols = 5;
+        let mut rng = Pcg64::new(21, 0);
+        let geom = HicGeometry { stochastic_rounding: false,
+                                 ..Default::default() };
+        let params = PcmParams { nonlinear: false, drift: false,
+                                 ..Default::default() };
+        let mut hw = HicWeight::new(params, geom, rows, cols, &mut rng);
+        let w: Vec<f32> =
+            (0..rows * cols).map(|i| ((i % 9) as f32 - 4.0) / 6.0).collect();
+        hw.program_init(&w, 0.0, &mut rng);
+        let tile =
+            CrossbarTile::new(hw, DacSpec::default(), AdcSpec::default());
+
+        let m = 3;
+        let x: Vec<f32> =
+            (0..m * rows).map(|i| ((i % 11) as f32 - 5.0) / 5.0).collect();
+        let mut rng_batch = Pcg64::new(77, 1);
+        let mut rng_seq = Pcg64::new(77, 1);
+        let batched = tile.vmm_batch(&x, m, 0.0, &mut rng_batch);
+        let mut sequential = Vec::new();
+        for s in 0..m {
+            sequential.extend(tile.vmm(&x[s * rows..(s + 1) * rows], 0.0,
+                                       &mut rng_seq));
+        }
+        assert_eq!(batched, sequential);
+    }
+
+    #[test]
+    fn scratch_reuse_is_allocation_free_path() {
+        let tile = ideal_tile(4, 4, &[0.2; 16]);
+        let mut rng = Pcg64::new(30, 0);
+        let mut scratch = tile.scratch();
+        let x = vec![0.25f32; 2 * 4];
+        let mut out = vec![0.0; 2 * 4];
+        tile.vmm_batch_into(&x, 2, 0.0, &mut rng, &mut scratch, &mut out);
+        let alloc = tile.vmm_batch(&x, 2, 0.0, &mut rng);
+        assert_eq!(out, alloc); // ideal tile: no RNG consumed, same result
     }
 }

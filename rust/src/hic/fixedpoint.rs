@@ -75,6 +75,53 @@ impl FixedPointAccumulator {
     }
 }
 
+/// A whole weight tensor's accumulator registers as one planar `i32`
+/// slice (all registers share the bit width), the SoA twin of
+/// `Vec<FixedPointAccumulator>`: half the memory per register and a
+/// contiguous plane for the update sweep.
+#[derive(Clone, Debug)]
+pub struct AccumulatorPlane {
+    pub bits: u32,
+    pub acc: Vec<i32>,
+}
+
+impl AccumulatorPlane {
+    pub fn new(bits: u32, n: usize) -> Self {
+        assert!((2..=16).contains(&bits));
+        AccumulatorPlane { bits, acc: vec![0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.acc.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.acc.is_empty()
+    }
+
+    pub fn half_range(&self) -> i32 {
+        1 << (self.bits - 1)
+    }
+
+    /// Accumulate `delta` counts into register `i` — identical semantics
+    /// to [`FixedPointAccumulator::update`] on the scalar view.
+    #[inline]
+    pub fn update(&mut self, i: usize, delta: i32) -> UpdateOutcome {
+        let mut scalar = FixedPointAccumulator {
+            bits: self.bits,
+            acc: self.acc[i],
+        };
+        let out = scalar.update(delta);
+        self.acc[i] = scalar.acc;
+        out
+    }
+
+    /// Scalar view of register `i` (test/inspection path).
+    pub fn at(&self, i: usize) -> FixedPointAccumulator {
+        FixedPointAccumulator { bits: self.bits, acc: self.acc[i] }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -159,6 +206,26 @@ mod tests {
             assert!(out.flips <= 7);
             assert!(out.resets <= out.flips);
         }
+    }
+
+    #[test]
+    fn plane_matches_scalar_registers() {
+        let mut rng = Pcg64::new(9, 0);
+        let n = 64;
+        let mut plane = AccumulatorPlane::new(7, n);
+        let mut scalars = vec![FixedPointAccumulator::new(7); n];
+        for _ in 0..200 {
+            let i = rng.below(n as u64) as usize;
+            let d = rng.below(255) as i32 - 127;
+            let a = plane.update(i, d);
+            let b = scalars[i].update(d);
+            assert_eq!(a, b);
+        }
+        for i in 0..n {
+            assert_eq!(plane.at(i).acc, scalars[i].acc);
+        }
+        assert_eq!(plane.len(), n);
+        assert_eq!(plane.half_range(), 64);
     }
 
     #[test]

@@ -4,10 +4,12 @@
 //! * [`fixedpoint`] — the 7-bit signed LSB accumulator: saturating
 //!   accumulate, round-toward-zero overflow extraction, per-bit flip
 //!   accounting.  Bit-exact with the Pallas kernel (shared golden vectors
-//!   in tests).
-//! * [`weight`] — one HIC-mapped weight tensor over a
-//!   [`crate::pcm::DifferentialPair`] MSB array + accumulator LSB array,
-//!   with the full update / refresh / decode cycle.
+//!   in tests).  [`fixedpoint::AccumulatorPlane`] is the planar (SoA)
+//!   register file the weight tensor sweeps.
+//! * [`weight`] — one HIC-mapped weight tensor over a planar
+//!   [`crate::pcm::DifferentialPair`] MSB array + accumulator LSB plane,
+//!   with the full update / refresh / decode cycle running on flat
+//!   slices.
 //!
 //! The coordinator uses this twin for host-side analyses (endurance
 //! projections, refresh policy studies, crossbar mapping) and the test
@@ -16,5 +18,6 @@
 pub mod fixedpoint;
 pub mod weight;
 
-pub use fixedpoint::{FixedPointAccumulator, UpdateOutcome};
+pub use fixedpoint::{AccumulatorPlane, FixedPointAccumulator,
+                     UpdateOutcome};
 pub use weight::HicWeight;

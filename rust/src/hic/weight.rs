@@ -11,7 +11,7 @@ use crate::pcm::device::PcmParams;
 use crate::pcm::endurance::EnduranceLedger;
 use crate::util::rng::Pcg64;
 
-use super::fixedpoint::FixedPointAccumulator;
+use super::fixedpoint::{AccumulatorPlane, FixedPointAccumulator};
 
 /// Geometry of the hybrid representation (mirrors `HicConfig`).
 #[derive(Clone, Copy, Debug)]
@@ -59,11 +59,15 @@ impl HicGeometry {
     }
 }
 
-/// One weight tensor on hybrid memory.
+/// One weight tensor on hybrid memory.  All per-weight state is planar:
+/// the MSB differential pair holds two `PcmArray` plane sets, the LSB
+/// registers one `i32` plane, the flip/RESET counters one `u64` plane
+/// each — so the update cycle and the endurance snapshot sweep flat
+/// slices.
 pub struct HicWeight {
     pub geom: HicGeometry,
     pub msb: DifferentialPair,
-    pub acc: Vec<FixedPointAccumulator>,
+    pub acc: AccumulatorPlane,
     pub lsb_flips: Vec<u64>,
     pub lsb_resets: Vec<u64>,
 }
@@ -76,7 +80,7 @@ impl HicWeight {
         HicWeight {
             geom,
             msb,
-            acc: vec![FixedPointAccumulator::new(geom.lsb_bits); n],
+            acc: AccumulatorPlane::new(geom.lsb_bits, n),
             lsb_flips: vec![0; n],
             lsb_resets: vec![0; n],
         }
@@ -103,21 +107,27 @@ impl HicWeight {
         self.msb.decode(t_now)
     }
 
-    /// One training update: quantize `-lr * grad` into the accumulators,
-    /// program MSB on overflow.  Returns the number of overflow events.
+    /// Decode into a caller-provided buffer (no allocation).
+    pub fn decode_into(&self, t_now: f32, out: &mut [f32]) {
+        self.msb.decode_into(t_now, out);
+    }
+
+    /// One training update over the planar state: quantize `-lr * grad`
+    /// into the accumulator plane, program MSB on overflow.  Returns the
+    /// number of overflow events.
     pub fn apply_update(&mut self, grad: &[f32], lr: f32, t_now: f32,
                         rng: &mut Pcg64) -> usize {
         assert_eq!(grad.len(), self.len());
         let half = self.geom.lsb_half_range();
         let eps = self.geom.msb_step();
         let lsb_step = self.geom.lsb_step();
+        let stochastic = self.geom.stochastic_rounding;
         let mut overflows = 0usize;
-        for i in 0..grad.len() {
-            let v = -lr * grad[i] / lsb_step;
+        for (i, &gi) in grad.iter().enumerate() {
+            let v = -lr * gi / lsb_step;
             let delta = FixedPointAccumulator::quantize_counts(
-                v, self.geom.stochastic_rounding, rng.uniform() as f32,
-                half);
-            let out = self.acc[i].update(delta);
+                v, stochastic, rng.uniform() as f32, half);
+            let out = self.acc.update(i, delta);
             self.lsb_flips[i] += out.flips as u64;
             self.lsb_resets[i] += out.resets as u64;
             if out.overflow != 0 {
@@ -134,16 +144,16 @@ impl HicWeight {
         self.msb.refresh(t_now, rng).len()
     }
 
-    /// Fold this tensor's device activity into an endurance ledger.
+    /// Fold this tensor's device activity into an endurance ledger —
+    /// whole-plane sweeps over the lifetime-counter planes (G+ then G−,
+    /// like the scalar chain the ledger previously walked).
     pub fn record_endurance(&self, ledger: &mut EnduranceLedger) {
-        for d in self.msb.plus.devices.iter()
-            .chain(self.msb.minus.devices.iter())
-        {
-            ledger.record_msb(d.set_count, d.reset_count);
-        }
-        for i in 0..self.len() {
-            ledger.record_lsb_weight(self.lsb_flips[i], self.lsb_resets[i],
-                                     self.geom.lsb_bits as u64);
+        ledger.record_msb_planes(&self.msb.plus.set_count,
+                                 &self.msb.plus.reset_count);
+        ledger.record_msb_planes(&self.msb.minus.set_count,
+                                 &self.msb.minus.reset_count);
+        for (&f, &r) in self.lsb_flips.iter().zip(&self.lsb_resets) {
+            ledger.record_lsb_weight(f, r, self.geom.lsb_bits as u64);
         }
     }
 
@@ -192,7 +202,7 @@ mod tests {
         let mut hw = HicWeight::new(p, g, 4, 4, &mut rng);
         let target: Vec<f32> =
             (0..16).map(|i| ((i as f32) - 8.0) / 10.0).collect();
-        hw.program_init(&vec![0.0; 16], 0.0, &mut rng);
+        hw.program_init(&[0.0; 16], 0.0, &mut rng);
         let mut t = 1.0;
         for _ in 0..400 {
             let w = hw.decode(t);
@@ -219,14 +229,14 @@ mod tests {
         for _ in 0..5 {
             hw.apply_update(&small_grad, 0.5, 1.0, &mut rng);
         }
-        assert_eq!(hw.msb.plus.devices[0].set_count, 0);
-        assert_eq!(hw.acc[0].acc, 50);
+        assert_eq!(hw.msb.plus.set_count[0], 0);
+        assert_eq!(hw.acc.acc[0], 50);
         // Push past the boundary.
         for _ in 0..2 {
             hw.apply_update(&small_grad, 0.5, 1.0, &mut rng);
         }
-        assert!(hw.msb.plus.devices[0].set_count > 0);
-        assert_eq!(hw.acc[0].acc, 70 - 64);
+        assert!(hw.msb.plus.set_count[0] > 0);
+        assert_eq!(hw.acc.acc[0], 70 - 64);
     }
 
     #[test]

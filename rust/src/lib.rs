@@ -7,12 +7,28 @@
 //! * **Layer 1/2 (build time)** — `python/compile/` authors the PCM device
 //!   model, the Pallas crossbar-VMM kernel and the ResNet training step,
 //!   AOT-lowered to HLO-text artifacts (`make artifacts`).
-//! * **Layer 3 (this crate)** — loads the artifacts via PJRT and owns the
-//!   whole training run: batch scheduling, the every-10-batches MSB
-//!   refresh, the simulated drift clock, AdaBS recalibration, endurance
-//!   ledgers, metrics and the Fig. 3–6 experiment drivers.
+//! * **Layer 3 (this crate)** — loads the artifacts via PJRT (behind the
+//!   default-off `pjrt` feature; a stub backend keeps everything
+//!   host-side buildable without XLA) and owns the whole training run:
+//!   batch scheduling, the every-10-batches MSB refresh, the simulated
+//!   drift clock, AdaBS recalibration, endurance ledgers, metrics and
+//!   the Fig. 3–6 experiment drivers.
 //!
 //! Python never runs on the request path.
+//!
+//! ## Layer map (host-side device stack)
+//!
+//! The device layer is **planar** (struct-of-arrays): [`pcm::PcmArray`]
+//! stores one contiguous plane per device field and exposes batched
+//! kernels (`read_into`, `drift_into`, `program_increments`,
+//! `reset_where`); [`hic::HicWeight`] composes two plane sets (the MSB
+//! differential pair) with a planar LSB accumulator register file;
+//! [`crossbar::CrossbarTile`] runs batched VMMs over the planes with a
+//! once-per-batch drift evaluation and fresh per-sample read noise; the
+//! [`coordinator`] and [`exp`] analyses consume the same planes for
+//! endurance/refresh accounting.  The scalar [`pcm::PcmDevice`] model
+//! remains the statistical reference path, pinned against the planar
+//! kernels by the SoA-equivalence property suite.
 
 pub mod bench;
 pub mod coordinator;

@@ -1,13 +1,33 @@
-//! Arrays of PCM devices and the differential-pair weight mapping.
+//! Planar (struct-of-arrays) PCM state engine + differential-pair map.
 //!
-//! `PcmArray` is a dense array of multi-level devices (one conductance per
-//! element); `DifferentialPair` combines two arrays into the signed-weight
+//! [`PcmArray`] stores one device *field* per contiguous plane (`g`,
+//! `pulses`, `t_prog`, `nu`, `set_count`, `reset_count`), row-major, so
+//! whole-array operations — drift evaluation, stochastic reads,
+//! increment programming, endurance sweeps — are single passes over flat
+//! `f32`/`u64` slices that the compiler autovectorizes, instead of walks
+//! over a `Vec<PcmDevice>` of scalar structs.  This mirrors how the
+//! lowered JAX model (`python/compile/pcm_model.py::PcmArrays`) holds
+//! device state, and is what makes the Fig. 3–6 style sweeps (millions
+//! of per-device conductance operations) tractable host-side.
+//!
+//! [`DifferentialPair`] combines two planar arrays into the signed-weight
 //! map the MSB array uses: `w = w_max * (G+ − G−) / g_span`.
 //!
-//! This is the host-side twin of `python/compile/hic.py`'s conductance
-//! encoding — the crossbar simulator and the endurance/refresh analyses
-//! run on it without touching PJRT.
+//! RNG contract: batched kernels draw exactly the same stream as the
+//! scalar [`PcmDevice`] reference path applied element-by-element in
+//! row-major order — `new` draws one `normal()` per device for ν,
+//! `read_into` one per device (when read noise is on), programming one
+//! per SET pulse (when write noise is on).  The SoA-equivalence property
+//! suite (`rust/tests/prop_soa_equivalence.rs`) pins this.  The only
+//! divergence from the scalar path is the drift power law, which uses
+//! `util::fastmath` (relative error < 1e-5 vs `powf`); ideal-params
+//! paths are bit-for-bit identical.
+//!
+//! `PcmDevice` survives as the scalar reference model and a test-facing
+//! view: [`PcmArray::device_at`] gathers one element's planes back into
+//! a `PcmDevice` value.
 
+use crate::util::fastmath::pow_fast;
 use crate::util::rng::Pcg64;
 
 use super::device::{PcmDevice, PcmParams};
@@ -18,57 +38,227 @@ pub const G_SPAN: f32 = 0.8;
 /// Saturation threshold policed by refresh — `hic.py::G_SAT`.
 pub const G_SAT: f32 = 0.9;
 
-/// Dense array of multi-level PCM devices.
+/// Dense planar array of multi-level PCM devices (struct-of-arrays).
+///
+/// All planes have length `rows * cols` and are indexed row-major:
+/// element `(r, c)` lives at `r * cols + c` in every plane.
 pub struct PcmArray {
     pub params: PcmParams,
-    pub devices: Vec<PcmDevice>,
     pub rows: usize,
     pub cols: usize,
+    /// conductance programmed at `t_prog` (drift reference value)
+    pub g: Vec<f32>,
+    /// SET pulses since last RESET
+    pub pulses: Vec<f32>,
+    /// time of last programming event (s)
+    pub t_prog: Vec<f32>,
+    /// per-device drift exponent
+    pub nu: Vec<f32>,
+    /// lifetime SET counters (endurance)
+    pub set_count: Vec<u64>,
+    /// lifetime RESET counters (endurance)
+    pub reset_count: Vec<u64>,
 }
 
 impl PcmArray {
+    /// Fresh (RESET, never-programmed) array; ν is sampled per device in
+    /// row-major order — the same RNG stream as constructing
+    /// `PcmDevice::new` sequentially.
     pub fn new(params: PcmParams, rows: usize, cols: usize,
                rng: &mut Pcg64) -> Self {
-        let devices = (0..rows * cols)
-            .map(|_| PcmDevice::new(&params, rng))
-            .collect();
-        PcmArray { params, devices, rows, cols }
+        let n = rows * cols;
+        let mut nu = Vec::with_capacity(n);
+        for _ in 0..n {
+            nu.push(
+                (params.drift_nu
+                    + params.drift_nu_sigma * rng.normal() as f32)
+                    .clamp(0.0, 0.12),
+            );
+        }
+        PcmArray {
+            params,
+            rows,
+            cols,
+            g: vec![0.0; n],
+            pulses: vec![0.0; n],
+            t_prog: vec![0.0; n],
+            nu,
+            set_count: vec![0; n],
+            reset_count: vec![0; n],
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.devices.len()
+        self.g.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.devices.is_empty()
+        self.g.is_empty()
     }
 
-    pub fn at(&self, r: usize, c: usize) -> &PcmDevice {
-        &self.devices[r * self.cols + c]
+    /// Row-major plane index of element `(r, c)`.
+    #[inline]
+    pub fn index(&self, r: usize, c: usize) -> usize {
+        debug_assert!(r < self.rows && c < self.cols);
+        r * self.cols + c
     }
 
-    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut PcmDevice {
-        &mut self.devices[r * self.cols + c]
+    /// Scalar view of element `(r, c)` — gathers the planes back into a
+    /// `PcmDevice` value (test/inspection path, not a hot path).
+    pub fn at(&self, r: usize, c: usize) -> PcmDevice {
+        self.device_at(self.index(r, c))
     }
 
-    /// Drifted conductances at `t_now`, row-major.
+    /// Scalar view of flat element `i` (see [`PcmArray::at`]).
+    pub fn device_at(&self, i: usize) -> PcmDevice {
+        PcmDevice {
+            g: self.g[i],
+            pulses: self.pulses[i],
+            t_prog: self.t_prog[i],
+            nu: self.nu[i],
+            set_count: self.set_count[i],
+            reset_count: self.reset_count[i],
+        }
+    }
+
+    // -- batched kernels ---------------------------------------------------
+
+    /// Drifted conductance of one element at `t_now` (no read noise).
+    #[inline]
+    pub fn drift_at(&self, i: usize, t_now: f32) -> f32 {
+        if !self.params.drift {
+            return self.g[i];
+        }
+        let elapsed = (t_now - self.t_prog[i]).max(self.params.drift_t0);
+        self.g[i] * pow_fast(elapsed / self.params.drift_t0, -self.nu[i])
+    }
+
+    /// Whole-array drift evaluation into a caller-provided buffer — one
+    /// flat pass, no allocation.
+    pub fn drift_into(&self, t_now: f32, out: &mut [f32]) {
+        assert_eq!(out.len(), self.len());
+        if !self.params.drift {
+            out.copy_from_slice(&self.g);
+            return;
+        }
+        let t0 = self.params.drift_t0;
+        for ((o, (&g, &tp)), &nu) in out
+            .iter_mut()
+            .zip(self.g.iter().zip(&self.t_prog))
+            .zip(&self.nu)
+        {
+            let elapsed = (t_now - tp).max(t0);
+            *o = g * pow_fast(elapsed / t0, -nu);
+        }
+    }
+
+    /// Drifted conductances at `t_now`, row-major (allocating wrapper of
+    /// [`PcmArray::drift_into`]).
     pub fn drifted(&self, t_now: f32) -> Vec<f32> {
-        self.devices
-            .iter()
-            .map(|d| d.drifted(&self.params, t_now))
-            .collect()
+        let mut out = vec![0.0; self.len()];
+        self.drift_into(t_now, &mut out);
+        out
     }
 
-    /// One stochastic read of every device.
+    /// One stochastic read of every device into `out`: drift pass, then
+    /// a per-element noise pass drawing one `normal()` per device in
+    /// row-major order (same stream as the scalar reference path).
+    pub fn read_into(&self, t_now: f32, rng: &mut Pcg64,
+                     out: &mut [f32]) {
+        self.drift_into(t_now, out);
+        if self.params.read_noise {
+            let sigma = self.params.read_sigma;
+            for v in out.iter_mut() {
+                *v += sigma * rng.normal() as f32;
+            }
+        }
+        for v in out.iter_mut() {
+            *v = v.clamp(0.0, 1.0);
+        }
+    }
+
+    /// One stochastic read of every device (allocating wrapper).
     pub fn read(&self, t_now: f32, rng: &mut Pcg64) -> Vec<f32> {
-        self.devices
-            .iter()
-            .map(|d| d.read(&self.params, t_now, rng))
-            .collect()
+        let mut out = vec![0.0; self.len()];
+        self.read_into(t_now, rng, &mut out);
+        out
+    }
+
+    /// One stochastic read of a single element.
+    pub fn read_at(&self, i: usize, t_now: f32, rng: &mut Pcg64) -> f32 {
+        let mut g = self.drift_at(i, t_now);
+        if self.params.read_noise {
+            g += self.params.read_sigma * rng.normal() as f32;
+        }
+        g.clamp(0.0, 1.0)
+    }
+
+    /// Apply one SET pulse to element `i` at `t_now` — identical update
+    /// rule to `PcmDevice::set_pulse`.
+    pub fn set_pulse_at(&mut self, i: usize, t_now: f32,
+                        rng: &mut Pcg64) {
+        let mean = self.params.pulse_increment_mean(self.pulses[i]);
+        let dg = if self.params.write_noise {
+            mean + self.params.write_sigma * mean * rng.normal() as f32
+        } else {
+            mean
+        };
+        self.g[i] = (self.g[i] + dg.max(0.0)).clamp(0.0, 1.0);
+        self.pulses[i] += 1.0;
+        self.t_prog[i] = t_now;
+        self.set_count[i] += 1;
+    }
+
+    /// Program element `i` towards a target increment (pulse-by-pulse);
+    /// returns the pulses applied.
+    pub fn program_increment_at(&mut self, i: usize, dg_target: f32,
+                                t_now: f32, rng: &mut Pcg64) -> u32 {
+        let n = self.params.pulses_for_target(self.pulses[i], dg_target);
+        for _ in 0..n {
+            self.set_pulse_at(i, t_now, rng);
+        }
+        n
+    }
+
+    /// Program the whole array towards per-element target increments
+    /// (`dg_targets[i] <= 0` leaves element `i` untouched), element
+    /// order, pulse-by-pulse; returns total pulses applied.
+    pub fn program_increments(&mut self, dg_targets: &[f32], t_now: f32,
+                              rng: &mut Pcg64) -> u64 {
+        assert_eq!(dg_targets.len(), self.len());
+        let mut total = 0u64;
+        for (i, &dg) in dg_targets.iter().enumerate() {
+            if dg > 0.0 {
+                total += self.program_increment_at(i, dg, t_now, rng) as u64;
+            }
+        }
+        total
+    }
+
+    /// RESET element `i` to the low-conductance state.
+    pub fn reset_at(&mut self, i: usize, t_now: f32) {
+        self.g[i] = 0.0;
+        self.pulses[i] = 0.0;
+        self.t_prog[i] = t_now;
+        self.reset_count[i] += 1;
+    }
+
+    /// RESET every element whose mask entry is set; returns the count.
+    pub fn reset_where(&mut self, mask: &[bool], t_now: f32) -> usize {
+        assert_eq!(mask.len(), self.len());
+        let mut n = 0;
+        for (i, &m) in mask.iter().enumerate() {
+            if m {
+                self.reset_at(i, t_now);
+                n += 1;
+            }
+        }
+        n
     }
 }
 
-/// Differential pair of arrays encoding signed weights (the MSB array).
+/// Differential pair of planar arrays encoding signed weights (the MSB
+/// array).
 pub struct DifferentialPair {
     pub plus: PcmArray,
     pub minus: PcmArray,
@@ -93,6 +283,14 @@ impl DifferentialPair {
         self.plus.cols
     }
 
+    pub fn len(&self) -> usize {
+        self.plus.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.plus.is_empty()
+    }
+
     /// Weight target -> differential conductance target.
     pub fn w_to_g(&self, w: f32) -> f32 {
         w * (G_SPAN / self.w_max)
@@ -105,20 +303,24 @@ impl DifferentialPair {
 
     /// Program all weights from a row-major target matrix (used at init
     /// and by test fixtures).  Increment-only: positive targets pulse G+,
-    /// negative pulse G−, assuming both devices start from RESET.
+    /// negative pulse G−, assuming both devices start from RESET.  The
+    /// targets are split into per-array increment planes and each array
+    /// is programmed in one `program_increments` sweep (G+ first).
     pub fn program_weights(&mut self, w: &[f32], t_now: f32,
                            rng: &mut Pcg64) {
         assert_eq!(w.len(), self.plus.len());
+        let mut dgp = vec![0.0f32; w.len()];
+        let mut dgm = vec![0.0f32; w.len()];
         for (i, &wi) in w.iter().enumerate() {
             let g = self.w_to_g(wi.clamp(-self.w_max, self.w_max));
             if g >= 0.0 {
-                self.plus.devices[i].program_increment(
-                    &self.plus.params, g, t_now, rng);
+                dgp[i] = g;
             } else {
-                self.minus.devices[i].program_increment(
-                    &self.minus.params, -g, t_now, rng);
+                dgm[i] = -g;
             }
         }
+        self.plus.program_increments(&dgp, t_now, rng);
+        self.minus.program_increments(&dgm, t_now, rng);
     }
 
     /// Apply one signed weight increment to element `i` (overflow
@@ -127,44 +329,67 @@ impl DifferentialPair {
                            rng: &mut Pcg64) -> u32 {
         let dg = self.w_to_g(dw.abs());
         if dw > 0.0 {
-            self.plus.devices[i].program_increment(
-                &self.plus.params, dg, t_now, rng)
+            self.plus.program_increment_at(i, dg, t_now, rng)
         } else if dw < 0.0 {
-            self.minus.devices[i].program_increment(
-                &self.minus.params, dg, t_now, rng)
+            self.minus.program_increment_at(i, dg, t_now, rng)
         } else {
             0
         }
     }
 
-    /// Decode the weight matrix at `t_now` (drift, no read noise).
+    /// Decode the weight matrix at `t_now` into `out` (drift, no read
+    /// noise) — one fused pass over both conductance planes.
+    pub fn decode_into(&self, t_now: f32, out: &mut [f32]) {
+        assert_eq!(out.len(), self.len());
+        let scale = self.w_max / G_SPAN;
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = (self.plus.drift_at(i, t_now)
+                - self.minus.drift_at(i, t_now))
+                * scale;
+        }
+    }
+
+    /// Decode the weight matrix at `t_now` (allocating wrapper).
     pub fn decode(&self, t_now: f32) -> Vec<f32> {
-        let gp = self.plus.drifted(t_now);
-        let gm = self.minus.drifted(t_now);
-        gp.iter()
-            .zip(&gm)
-            .map(|(p, m)| self.g_to_w(p - m))
-            .collect()
+        let mut out = vec![0.0; self.len()];
+        self.decode_into(t_now, &mut out);
+        out
     }
 
-    /// Noisy read of the weight matrix (each device read independently).
+    /// Noisy read of the weight matrix into `out` (each device read
+    /// independently; G+ noise drawn for the whole plane first, then G−,
+    /// matching the scalar reference stream).  Both planes go through
+    /// the vectorizable `read_into` passes; the one internal `gm`
+    /// buffer is the price of the two-plane subtraction (callers that
+    /// need full buffer control use `CrossbarTile`'s scratch path).
+    pub fn read_weights_into(&self, t_now: f32, rng: &mut Pcg64,
+                             out: &mut [f32]) {
+        self.plus.read_into(t_now, rng, out);
+        let mut gm = vec![0.0f32; self.len()];
+        self.minus.read_into(t_now, rng, &mut gm);
+        let scale = self.w_max / G_SPAN;
+        for (o, &m) in out.iter_mut().zip(&gm) {
+            *o = (*o - m) * scale;
+        }
+    }
+
+    /// Noisy read of the weight matrix (allocating wrapper).
     pub fn read_weights(&self, t_now: f32, rng: &mut Pcg64) -> Vec<f32> {
-        let gp = self.plus.read(t_now, rng);
-        let gm = self.minus.read(t_now, rng);
-        gp.iter()
-            .zip(&gm)
-            .map(|(p, m)| self.g_to_w(p - m))
-            .collect()
+        let mut out = vec![0.0; self.len()];
+        self.read_weights_into(t_now, rng, &mut out);
+        out
     }
 
-    /// Pairs whose devices entered the saturation guard band.
+    /// Pairs whose devices entered the saturation guard band — one scan
+    /// over the two programmed-conductance planes.
     pub fn saturating(&self) -> Vec<usize> {
-        (0..self.plus.len())
-            .filter(|&i| {
-                self.plus.devices[i].g > G_SAT
-                    || self.minus.devices[i].g > G_SAT
-            })
-            .collect()
+        let mut idx = Vec::new();
+        for i in 0..self.len() {
+            if self.plus.g[i] > G_SAT || self.minus.g[i] > G_SAT {
+                idx.push(i);
+            }
+        }
+        idx
     }
 
     /// Selective saturation refresh (paper §III-A): read, RESET both,
@@ -172,19 +397,16 @@ impl DifferentialPair {
     pub fn refresh(&mut self, t_now: f32, rng: &mut Pcg64) -> Vec<usize> {
         let idx = self.saturating();
         for &i in &idx {
-            let p = self.plus.devices[i].read(&self.plus.params, t_now, rng);
-            let m =
-                self.minus.devices[i].read(&self.minus.params, t_now, rng);
+            let p = self.plus.read_at(i, t_now, rng);
+            let m = self.minus.read_at(i, t_now, rng);
             let w = self.g_to_w(p - m).clamp(-self.w_max, self.w_max);
-            self.plus.devices[i].reset(t_now);
-            self.minus.devices[i].reset(t_now);
+            self.plus.reset_at(i, t_now);
+            self.minus.reset_at(i, t_now);
             let g = self.w_to_g(w);
             if g >= 0.0 {
-                self.plus.devices[i].program_increment(
-                    &self.plus.params, g, t_now, rng);
+                self.plus.program_increment_at(i, g, t_now, rng);
             } else {
-                self.minus.devices[i].program_increment(
-                    &self.minus.params, -g, t_now, rng);
+                self.minus.program_increment_at(i, -g, t_now, rng);
             }
         }
         idx
@@ -197,6 +419,21 @@ mod tests {
 
     fn rng() -> Pcg64 {
         Pcg64::new(123, 0)
+    }
+
+    #[test]
+    fn planes_are_row_major() {
+        let mut r = rng();
+        let mut a = PcmArray::new(PcmParams::ideal(), 3, 5, &mut r);
+        a.program_increment_at(a.index(1, 2), 0.3, 1.0, &mut r);
+        assert_eq!(a.index(1, 2), 7);
+        assert!(a.g[7] > 0.0);
+        assert_eq!(a.at(1, 2).g, a.g[7]);
+        assert_eq!(a.at(1, 2).set_count, a.set_count[7]);
+        // Scalar view gathers every plane.
+        let d = a.device_at(7);
+        assert_eq!(d.pulses, a.pulses[7]);
+        assert_eq!(d.t_prog, 1.0);
     }
 
     #[test]
@@ -215,15 +452,28 @@ mod tests {
     }
 
     #[test]
+    fn decode_into_matches_decode() {
+        let mut r = rng();
+        let mut pair = DifferentialPair::new(
+            PcmParams::default(), 4, 4, 1.0, &mut r);
+        let w: Vec<f32> = (0..16).map(|i| (i as f32 - 8.0) / 10.0).collect();
+        pair.program_weights(&w, 0.0, &mut r);
+        let alloc = pair.decode(1e5);
+        let mut buf = vec![0.0; 16];
+        pair.decode_into(1e5, &mut buf);
+        assert_eq!(alloc, buf);
+    }
+
+    #[test]
     fn increments_are_one_sided() {
         let mut r = rng();
         let mut pair =
             DifferentialPair::new(PcmParams::ideal(), 1, 1, 1.0, &mut r);
         pair.apply_increment(0, 0.2, 0.0, &mut r);
-        assert!(pair.plus.devices[0].g > 0.0);
-        assert_eq!(pair.minus.devices[0].g, 0.0);
+        assert!(pair.plus.g[0] > 0.0);
+        assert_eq!(pair.minus.g[0], 0.0);
         pair.apply_increment(0, -0.3, 0.0, &mut r);
-        assert!(pair.minus.devices[0].g > 0.0);
+        assert!(pair.minus.g[0] > 0.0);
         assert_eq!(pair.apply_increment(0, 0.0, 0.0, &mut r), 0);
     }
 
@@ -240,7 +490,7 @@ mod tests {
         }
         pair.apply_increment(1, 0.3, 0.0, &mut r); // healthy element
         let before = pair.decode(0.0);
-        assert!(pair.plus.devices[0].g > G_SAT);
+        assert!(pair.plus.g[0] > G_SAT);
 
         let refreshed = pair.refresh(1.0, &mut r);
         assert_eq!(refreshed, vec![0]);
@@ -249,10 +499,25 @@ mod tests {
         assert!((after[0] - before[0]).abs() < 0.13,
                 "{} vs {}", after[0], before[0]);
         // ...with conductances out of the guard band.
-        assert!(pair.plus.devices[0].g < G_SAT);
-        assert_eq!(pair.plus.devices[0].reset_count, 1);
+        assert!(pair.plus.g[0] < G_SAT);
+        assert_eq!(pair.plus.reset_count[0], 1);
         // Healthy pair untouched.
-        assert_eq!(pair.plus.devices[1].reset_count, 0);
+        assert_eq!(pair.plus.reset_count[1], 0);
+    }
+
+    #[test]
+    fn reset_where_masks() {
+        let mut r = rng();
+        let mut a = PcmArray::new(PcmParams::ideal(), 1, 4, &mut r);
+        for i in 0..4 {
+            a.program_increment_at(i, 0.2, 0.0, &mut r);
+        }
+        let n = a.reset_where(&[true, false, true, false], 5.0);
+        assert_eq!(n, 2);
+        assert_eq!(a.g, vec![0.0, 0.2, 0.0, 0.2]);
+        assert_eq!(a.reset_count, vec![1, 0, 1, 0]);
+        assert_eq!(a.t_prog[0], 5.0);
+        assert_eq!(a.t_prog[1], 0.0);
     }
 
     #[test]

@@ -1,5 +1,11 @@
 //! Single PCM device: pulse-by-pulse statistical model.
 //!
+//! Since the planar refactor this is the **scalar reference path**: the
+//! hot paths run on the struct-of-arrays [`crate::pcm::PcmArray`] planes,
+//! and `PcmDevice` serves (a) as the oracle the SoA-equivalence property
+//! tests compare against on identical RNG streams, and (b) as the value
+//! type `PcmArray::device_at` gathers for test-facing inspection.
+//!
 //! Parameters mirror `python/compile/configs.py::PcmConfig`; conductance
 //! is normalized to [0, 1] (1.0 == G_max ≈ 25 µS on silicon).
 //!

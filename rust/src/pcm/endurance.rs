@@ -131,6 +131,16 @@ impl EnduranceLedger {
         self.msb.add(we_cycles(sets, resets));
     }
 
+    /// Record a whole MSB array from its planar lifetime-counter planes
+    /// (one `PcmArray` sweep — the planar twin of calling
+    /// [`EnduranceLedger::record_msb`] per device in row-major order).
+    pub fn record_msb_planes(&mut self, sets: &[u64], resets: &[u64]) {
+        assert_eq!(sets.len(), resets.len());
+        for (&s, &r) in sets.iter().zip(resets) {
+            self.msb.add(we_cycles(s, r));
+        }
+    }
+
     /// Record one LSB *weight* (7 binary devices) from the packed
     /// training-program counters: total flips and RESET events are summed
     /// over the 7 devices, so attribute the per-device average.
@@ -194,6 +204,21 @@ mod tests {
         assert!(h.percentile(50.0) <= h.percentile(90.0));
         assert!(h.percentile(90.0) <= h.percentile(100.0).max(h.max));
         assert_eq!(Histogram::new().percentile(50.0), 0);
+    }
+
+    #[test]
+    fn plane_sweep_matches_per_device() {
+        let sets: Vec<u64> = (0..100).map(|i| 3 * i).collect();
+        let resets: Vec<u64> = (0..100).map(|i| i % 7).collect();
+        let mut a = EnduranceLedger::new();
+        a.record_msb_planes(&sets, &resets);
+        let mut b = EnduranceLedger::new();
+        for (&s, &r) in sets.iter().zip(&resets) {
+            b.record_msb(s, r);
+        }
+        assert_eq!(a.msb.count, b.msb.count);
+        assert_eq!(a.msb.max, b.msb.max);
+        assert_eq!(a.msb.buckets, b.msb.buckets);
     }
 
     #[test]

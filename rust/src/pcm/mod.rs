@@ -4,16 +4,25 @@
 //! uses a pulse-aggregated approximation for vectorization.  This module
 //! implements the reference **pulse-by-pulse** process (each SET pulse an
 //! individual stochastic event) plus everything host-side the coordinator
-//! needs:
+//! needs, with device state held **planar** (struct-of-arrays — one
+//! contiguous plane per field, like the JAX `PcmArrays` NamedTuple) so
+//! whole-array reads, drift evaluations, programming sweeps and
+//! endurance scans are flat-slice passes:
 //!
-//! * [`device`] — single multi-level / binary device: programming curve,
-//!   write & read stochasticity, temporal drift
-//! * [`array`] — arrays of devices with differential-pair weight mapping
-//! * [`endurance`] — write–erase-cycle ledger and histograms (Fig. 6)
+//! * [`device`] — the scalar single-device reference model (programming
+//!   curve, write & read stochasticity, temporal drift); oracle for the
+//!   SoA-equivalence property tests and the `device_at` view type
+//! * [`array`] — planar `PcmArray` planes + batched kernels
+//!   (`read_into`, `drift_into`, `program_increments`, `reset_where`)
+//!   and the differential-pair weight mapping
+//! * [`endurance`] — write–erase-cycle ledger and histograms (Fig. 6),
+//!   ingesting whole count planes per sweep
 //!
 //! Unit/property tests cross-validate the aggregate statistics of the
 //! pulse-by-pulse process against the closed-form aggregate the JAX model
-//! uses (`expected_increment`), bounding the approximation error.
+//! uses (`expected_increment`), bounding the approximation error, and pin
+//! the planar kernels against the scalar reference on identical RNG
+//! streams.
 
 pub mod array;
 pub mod device;

@@ -44,6 +44,7 @@ impl DType {
         4
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn element_type(self) -> xla::ElementType {
         match self {
             DType::F32 => xla::ElementType::F32,

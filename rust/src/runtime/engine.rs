@@ -6,22 +6,151 @@
 //! (`hic_train_step`, `hic_refresh`, …); the engine validates every call
 //! against the manifest signature so shape drift between the compile path
 //! and the coordinator fails loudly rather than numerically.
+//!
+//! The XLA/PJRT linkage lives behind the default-off `pjrt` cargo
+//! feature.  Without it the engine still loads manifests, validates
+//! signatures and round-trips checkpoints (everything host-side), but
+//! entry-point execution returns a descriptive error — see
+//! [`backend`] for the stub.
 
 use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::artifact::{EntrySig, Manifest};
 use super::tensor::HostTensor;
-use crate::log_debug;
+
+/// Real PJRT-backed executor (feature `pjrt`): wraps the CPU client and
+/// the per-entry compiled-executable cache.
+#[cfg(feature = "pjrt")]
+mod backend {
+    use std::cell::RefCell;
+    use std::collections::BTreeMap;
+    use std::path::Path;
+    use std::time::Instant;
+
+    use anyhow::{anyhow, bail, Result};
+
+    use crate::log_debug;
+    use crate::runtime::tensor::HostTensor;
+
+    pub struct Backend {
+        client: xla::PjRtClient,
+        executables: RefCell<BTreeMap<String, xla::PjRtLoadedExecutable>>,
+    }
+
+    impl Backend {
+        pub fn new() -> Result<Backend> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| anyhow!("creating PJRT CPU client: {e}"))?;
+            Ok(Backend {
+                client,
+                executables: RefCell::new(BTreeMap::new()),
+            })
+        }
+
+        pub fn ensure_compiled(&self, name: &str, path: &Path)
+                               -> Result<()> {
+            if self.executables.borrow().contains_key(name) {
+                return Ok(());
+            }
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
+            log_debug!("compiled {} in {:.2}s", name,
+                       t0.elapsed().as_secs_f64());
+            self.executables
+                .borrow_mut()
+                .insert(name.to_string(), exe);
+            Ok(())
+        }
+
+        /// Execute a compiled entry; returns the outputs plus the
+        /// measured execute-and-fetch seconds (input conversion
+        /// excluded, matching the historical per-entry stats span).
+        pub fn execute(&self, name: &str, inputs: &[HostTensor])
+                       -> Result<(Vec<HostTensor>, f64)> {
+            let literals = inputs
+                .iter()
+                .map(|t| t.to_literal())
+                .collect::<Result<Vec<_>>>()?;
+            let t0 = Instant::now();
+            let exes = self.executables.borrow();
+            let Some(exe) = exes.get(name) else {
+                bail!("entry '{name}' executed before compilation");
+            };
+            let out = exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| anyhow!("executing {name}: {e}"))?;
+            let root = out[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetching {name} result: {e}"))?;
+            // aot.py lowers with return_tuple=True: the root is always a
+            // tuple.
+            let parts = root
+                .to_tuple()
+                .map_err(|e| anyhow!("untupling {name} result: {e}"))?;
+            let tensors = parts
+                .iter()
+                .map(HostTensor::from_literal)
+                .collect::<Result<Vec<_>>>()?;
+            Ok((tensors, t0.elapsed().as_secs_f64()))
+        }
+    }
+}
+
+/// Stub executor (feature `pjrt` disabled): manifest/checkpoint plumbing
+/// keeps working so analyses, tests and `hic-train info` run on machines
+/// without XLA; any attempt to compile or execute an entry errors with a
+/// pointer at the feature flag.
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    use std::path::Path;
+
+    use anyhow::{Error, Result};
+
+    use crate::runtime::tensor::HostTensor;
+
+    pub struct Backend;
+
+    fn unavailable(action: &str, name: &str) -> Error {
+        anyhow::anyhow!(
+            "cannot {action} entry '{name}': hic-train was built without \
+             the `pjrt` feature (stub runtime backend); rebuild with \
+             `--features pjrt` and an `xla` dependency to execute \
+             artifacts"
+        )
+    }
+
+    impl Backend {
+        pub fn new() -> Result<Backend> {
+            Ok(Backend)
+        }
+
+        pub fn ensure_compiled(&self, name: &str, _path: &Path)
+                               -> Result<()> {
+            Err(unavailable("compile", name))
+        }
+
+        pub fn execute(&self, name: &str, _inputs: &[HostTensor])
+                       -> Result<(Vec<HostTensor>, f64)> {
+            Err(unavailable("execute", name))
+        }
+    }
+}
 
 pub struct Engine {
     pub manifest: Manifest,
-    client: xla::PjRtClient,
-    executables: RefCell<BTreeMap<String, xla::PjRtLoadedExecutable>>,
+    backend: backend::Backend,
     /// cumulative (calls, seconds) per entry — perf accounting
     stats: RefCell<BTreeMap<String, (u64, f64)>>,
 }
@@ -29,38 +158,17 @@ pub struct Engine {
 impl Engine {
     pub fn load(artifact_dir: &Path) -> Result<Engine> {
         let manifest = Manifest::load(artifact_dir)?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow!("creating PJRT CPU client: {e}"))?;
         Ok(Engine {
             manifest,
-            client,
-            executables: RefCell::new(BTreeMap::new()),
+            backend: backend::Backend::new()?,
             stats: RefCell::new(BTreeMap::new()),
         })
     }
 
     /// Compile (or fetch cached) the named entry point.
     fn ensure_compiled(&self, entry: &EntrySig) -> Result<()> {
-        if self.executables.borrow().contains_key(&entry.name) {
-            return Ok(());
-        }
-        let path = self.manifest.hlo_path(entry);
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
-        log_debug!("compiled {} in {:.2}s", entry.name,
-                   t0.elapsed().as_secs_f64());
-        self.executables
-            .borrow_mut()
-            .insert(entry.name.clone(), exe);
-        Ok(())
+        self.backend
+            .ensure_compiled(&entry.name, &self.manifest.hlo_path(entry))
     }
 
     /// Eagerly compile a set of entries (warmup before timed loops).
@@ -80,39 +188,15 @@ impl Engine {
         self.validate_inputs(&entry, inputs)?;
         self.ensure_compiled(&entry)?;
 
-        let literals = inputs
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<Vec<_>>>()?;
-
-        let t0 = Instant::now();
-        let exes = self.executables.borrow();
-        let exe = exes.get(name).expect("compiled above");
-        let out = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("executing {name}: {e}"))?;
-        let root = out[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching {name} result: {e}"))?;
-        drop(exes);
-
-        // aot.py lowers with return_tuple=True: the root is always a tuple.
-        let parts = root
-            .to_tuple()
-            .map_err(|e| anyhow!("untupling {name} result: {e}"))?;
-        if parts.len() != entry.outputs.len() {
+        let (tensors, dt) = self.backend.execute(name, inputs)?;
+        if tensors.len() != entry.outputs.len() {
             bail!(
                 "{name}: manifest promises {} outputs, runtime produced {}",
                 entry.outputs.len(),
-                parts.len()
+                tensors.len()
             );
         }
-        let tensors = parts
-            .iter()
-            .map(HostTensor::from_literal)
-            .collect::<Result<Vec<_>>>()?;
 
-        let dt = t0.elapsed().as_secs_f64();
         let mut stats = self.stats.borrow_mut();
         let e = stats.entry(name.to_string()).or_insert((0, 0.0));
         e.0 += 1;

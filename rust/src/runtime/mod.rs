@@ -15,6 +15,12 @@
 //! Interchange is HLO text (not serialized protos): xla_extension 0.5.1
 //! rejects jax>=0.5's 64-bit instruction ids; the text parser reassigns
 //! them (see /opt/xla-example/README.md).
+//!
+//! The XLA linkage itself sits behind the default-off `pjrt` cargo
+//! feature: default builds use a stub backend (manifests, tensors and
+//! checkpoints all work; executing an entry returns a descriptive
+//! error), so the crate builds and tests on machines without an XLA
+//! toolchain.
 
 pub mod artifact;
 pub mod engine;

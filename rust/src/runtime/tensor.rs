@@ -111,8 +111,12 @@ impl HostTensor {
         })
     }
 
-    // -- literal bridge --------------------------------------------------
+}
 
+// -- literal bridge (PJRT builds only) ----------------------------------
+
+#[cfg(feature = "pjrt")]
+impl HostTensor {
     pub fn to_literal(&self) -> Result<xla::Literal> {
         Ok(xla::Literal::create_from_shape_and_untyped_data(
             self.dtype.element_type(),
@@ -187,6 +191,7 @@ mod tests {
         assert!(t.shape.is_empty());
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_roundtrip() {
         let cases = [

@@ -4,9 +4,8 @@
 //! timestamps relative to process start (useful for step-time eyeballing).
 
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
-
-use once_cell::sync::Lazy;
 
 #[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
 pub enum Level {
@@ -17,7 +16,7 @@ pub enum Level {
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
-static START: Lazy<Instant> = Lazy::new(Instant::now);
+static START: OnceLock<Instant> = OnceLock::new();
 
 pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
@@ -40,7 +39,7 @@ pub fn log(l: Level, args: std::fmt::Arguments<'_>) {
     if !enabled(l) {
         return;
     }
-    let t = START.elapsed();
+    let t = START.get_or_init(Instant::now).elapsed();
     let tag = match l {
         Level::Error => "ERROR",
         Level::Warn => "WARN ",

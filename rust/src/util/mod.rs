@@ -9,9 +9,12 @@
 //! * [`cli`] — declarative command-line parser for the `hic-train` binary
 //! * [`csv`] — CSV emitter for experiment series
 //! * [`logging`] — leveled stderr logger with timestamps
+//! * [`fastmath`] — vectorization-friendly `exp2`/`log2`/`pow` used by
+//!   the planar PCM drift kernels
 
 pub mod cli;
 pub mod csv;
+pub mod fastmath;
 pub mod json;
 pub mod logging;
 pub mod rng;

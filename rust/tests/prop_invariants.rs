@@ -125,12 +125,10 @@ fn prop_hic_weight_refresh() {
             t += 0.05;
         }
         hw.refresh(t, &mut rng);
-        for d in hw.msb.plus.devices.iter()
-            .chain(hw.msb.minus.devices.iter())
-        {
+        for &g in hw.msb.plus.g.iter().chain(hw.msb.minus.g.iter()) {
             // after refresh no device may sit above the guard band
-            if d.g > 0.98 {
-                return Err(format!("saturated device survived: {}", d.g));
+            if g > 0.98 {
+                return Err(format!("saturated device survived: {g}"));
             }
         }
         for w in hw.decode(t) {

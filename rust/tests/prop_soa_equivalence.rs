@@ -1,0 +1,267 @@
+//! SoA-migration equivalence suite: the planar `PcmArray` kernels must
+//! reproduce the scalar `PcmDevice` reference path element-by-element on
+//! **identical RNG streams**.
+//!
+//! Contract (see `pcm::array` module docs):
+//! * RNG draw order is bit-for-bit identical — construction draws one
+//!   `normal()` per device, `read_into` one per device (when read noise
+//!   is on), programming one per SET pulse (when write noise is on),
+//!   all in row-major element order;
+//! * values are bit-for-bit identical whenever drift is off (ideal and
+//!   noisy params alike) — the arithmetic is the same ops in the same
+//!   order;
+//! * with drift on, values agree within the `util::fastmath` tolerance
+//!   (the planar drift kernel uses the fast `pow`, the scalar reference
+//!   keeps `powf`).
+
+use hic_train::pcm::array::{DifferentialPair, PcmArray};
+use hic_train::pcm::device::{PcmDevice, PcmParams};
+use hic_train::testutil::prop;
+use hic_train::util::rng::Pcg64;
+
+/// Construct the scalar twin of `PcmArray::new` on its own stream.
+fn scalar_array(params: &PcmParams, n: usize,
+                rng: &mut Pcg64) -> Vec<PcmDevice> {
+    (0..n).map(|_| PcmDevice::new(params, rng)).collect()
+}
+
+/// Random params with drift forced off (the exact-equality domain).
+fn params_no_drift(write_noise: bool, read_noise: bool,
+                   nonlinear: bool) -> PcmParams {
+    PcmParams {
+        nonlinear,
+        write_noise,
+        read_noise,
+        drift: false,
+        ..Default::default()
+    }
+}
+
+/// Planar construction consumes the same ν stream as sequential
+/// `PcmDevice::new`.
+#[test]
+fn prop_new_matches_scalar_stream() {
+    prop("planar new == scalar new", 200, |g| {
+        let rows = g.usize_in(1, 8);
+        let cols = g.usize_in(1, 8);
+        let seed = g.u64_below(1 << 32);
+        let params = PcmParams::default();
+        let arr = PcmArray::new(params, rows, cols,
+                                &mut Pcg64::new(seed, 3));
+        let twin = scalar_array(&params, rows * cols,
+                                &mut Pcg64::new(seed, 3));
+        for (i, d) in twin.iter().enumerate() {
+            if arr.nu[i] != d.nu {
+                return Err(format!("nu[{i}]: {} vs {}", arr.nu[i], d.nu));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// `program_increments` (whole-array sweep) matches per-device
+/// `program_increment` bit for bit, ideal and noisy params alike.
+#[test]
+fn prop_program_increments_matches_scalar() {
+    prop("planar program == scalar program", 150, |g| {
+        let params = if g.bool() {
+            PcmParams::ideal()
+        } else {
+            params_no_drift(g.bool(), false, g.bool())
+        };
+        let rows = g.usize_in(1, 6);
+        let cols = g.usize_in(1, 6);
+        let n = rows * cols;
+        let targets = g.vec_f32(n, 0.0, 0.6);
+        let seed = g.u64_below(1 << 32);
+
+        let mut arr = PcmArray::new(params, rows, cols,
+                                    &mut Pcg64::new(seed, 5));
+        let mut r_planar = Pcg64::new(seed, 6);
+        arr.program_increments(&targets, 2.0, &mut r_planar);
+
+        let mut twin = scalar_array(&params, n, &mut Pcg64::new(seed, 5));
+        let mut r_scalar = Pcg64::new(seed, 6);
+        for (d, &t) in twin.iter_mut().zip(&targets) {
+            if t > 0.0 {
+                d.program_increment(&params, t, 2.0, &mut r_scalar);
+            }
+        }
+
+        for (i, d) in twin.iter().enumerate() {
+            let v = arr.device_at(i);
+            if v.g != d.g || v.pulses != d.pulses
+                || v.set_count != d.set_count || v.t_prog != d.t_prog
+            {
+                return Err(format!(
+                    "element {i}: planar {v:?} vs scalar {d:?}"));
+            }
+        }
+        // Both paths must have consumed the same number of draws.
+        if r_planar.next_u64() != r_scalar.next_u64() {
+            return Err("RNG streams diverged after programming".into());
+        }
+        Ok(())
+    });
+}
+
+/// `read_into` matches scalar per-device reads bit for bit when drift is
+/// off (ideal and noisy), on the same stream.
+#[test]
+fn prop_read_into_matches_scalar_no_drift() {
+    prop("planar read == scalar read (no drift)", 150, |g| {
+        let params = if g.bool() {
+            PcmParams::ideal()
+        } else {
+            params_no_drift(g.bool(), g.bool(), g.bool())
+        };
+        let rows = g.usize_in(1, 6);
+        let cols = g.usize_in(1, 6);
+        let n = rows * cols;
+        let targets = g.vec_f32(n, 0.0, 0.6);
+        let seed = g.u64_below(1 << 32);
+
+        let mut arr = PcmArray::new(params, rows, cols,
+                                    &mut Pcg64::new(seed, 5));
+        arr.program_increments(&targets, 1.0, &mut Pcg64::new(seed, 6));
+        let twin: Vec<PcmDevice> =
+            (0..n).map(|i| arr.device_at(i)).collect();
+
+        let mut out = vec![0.0f32; n];
+        let mut r_planar = Pcg64::new(seed, 7);
+        arr.read_into(5.0, &mut r_planar, &mut out);
+
+        let mut r_scalar = Pcg64::new(seed, 7);
+        for (i, d) in twin.iter().enumerate() {
+            let want = d.read(&params, 5.0, &mut r_scalar);
+            if out[i] != want {
+                return Err(format!(
+                    "read[{i}]: planar {} vs scalar {want}", out[i]));
+            }
+        }
+        if r_planar.next_u64() != r_scalar.next_u64() {
+            return Err("RNG streams diverged after read".into());
+        }
+        Ok(())
+    });
+}
+
+/// With drift on, planar reads track the scalar `powf` reference within
+/// the fastmath tolerance while consuming the identical RNG stream.
+#[test]
+fn prop_read_matches_scalar_under_drift() {
+    prop("planar read ~ scalar read (drift)", 100, |g| {
+        let params = PcmParams {
+            read_noise: g.bool(),
+            ..Default::default()
+        };
+        let n = g.usize_in(1, 30);
+        let targets = g.vec_f32(n, 0.0, 0.6);
+        let seed = g.u64_below(1 << 32);
+        let t_read = g.f32_in(10.0, 4e7);
+
+        let mut arr = PcmArray::new(params, 1, n,
+                                    &mut Pcg64::new(seed, 5));
+        arr.program_increments(&targets, 1.0, &mut Pcg64::new(seed, 6));
+        let twin: Vec<PcmDevice> =
+            (0..n).map(|i| arr.device_at(i)).collect();
+
+        let mut out = vec![0.0f32; n];
+        let mut r_planar = Pcg64::new(seed, 7);
+        arr.read_into(t_read, &mut r_planar, &mut out);
+
+        let mut r_scalar = Pcg64::new(seed, 7);
+        for (i, d) in twin.iter().enumerate() {
+            let want = d.read(&params, t_read, &mut r_scalar);
+            if (out[i] - want).abs() > 1e-4 {
+                return Err(format!(
+                    "read[{i}] at t={t_read}: planar {} vs scalar {want}",
+                    out[i]));
+            }
+        }
+        if r_planar.next_u64() != r_scalar.next_u64() {
+            return Err("RNG streams diverged under drift".into());
+        }
+        Ok(())
+    });
+}
+
+/// Row-major indexing invariant: `at(r, c)` is `device_at(r*cols + c)`
+/// and plane writes land where the scalar view says they do.
+#[test]
+fn prop_at_is_row_major() {
+    prop("PcmArray::at row-major", 200, |g| {
+        let rows = g.usize_in(1, 9);
+        let cols = g.usize_in(1, 9);
+        let mut rng = g.rng();
+        let mut arr =
+            PcmArray::new(PcmParams::ideal(), rows, cols, &mut rng);
+        let r = g.usize_in(0, rows - 1);
+        let c = g.usize_in(0, cols - 1);
+        let i = r * cols + c;
+        if arr.index(r, c) != i {
+            return Err(format!("index({r},{c}) != {i}"));
+        }
+        arr.program_increment_at(i, 0.3, 4.0, &mut rng);
+        let view = arr.at(r, c);
+        if view.g != arr.g[i] || view.set_count != arr.set_count[i] {
+            return Err(format!("at({r},{c}) disagrees with planes"));
+        }
+        if view.t_prog != 4.0 {
+            return Err("write landed on the wrong element".into());
+        }
+        // Every other element untouched.
+        let touched =
+            arr.set_count.iter().filter(|&&s| s > 0).count();
+        if touched != 1 {
+            return Err(format!("{touched} elements touched"));
+        }
+        Ok(())
+    });
+}
+
+/// Differential-pair noisy reads match the scalar reference order:
+/// all G+ devices first, then all G−.
+#[test]
+fn prop_pair_read_weights_matches_scalar() {
+    prop("pair read_weights == scalar order", 100, |g| {
+        let params = params_no_drift(g.bool(), g.bool(), false);
+        let rows = g.usize_in(1, 5);
+        let cols = g.usize_in(1, 5);
+        let n = rows * cols;
+        let seed = g.u64_below(1 << 32);
+
+        let mut pair = DifferentialPair::new(params, rows, cols, 1.0,
+                                             &mut Pcg64::new(seed, 2));
+        let w = g.vec_f32(n, -0.9, 0.9);
+        pair.program_weights(&w, 0.0, &mut Pcg64::new(seed, 3));
+
+        let plus: Vec<PcmDevice> =
+            (0..n).map(|i| pair.plus.device_at(i)).collect();
+        let minus: Vec<PcmDevice> =
+            (0..n).map(|i| pair.minus.device_at(i)).collect();
+
+        let mut r_planar = Pcg64::new(seed, 4);
+        let got = pair.read_weights(1.0, &mut r_planar);
+
+        let mut r_scalar = Pcg64::new(seed, 4);
+        let gp: Vec<f32> = plus
+            .iter()
+            .map(|d| d.read(&params, 1.0, &mut r_scalar))
+            .collect();
+        let gm: Vec<f32> = minus
+            .iter()
+            .map(|d| d.read(&params, 1.0, &mut r_scalar))
+            .collect();
+        for (i, ((&got_i, &p), &m)) in
+            got.iter().zip(&gp).zip(&gm).enumerate()
+        {
+            let want = pair.g_to_w(p - m);
+            if got_i != want {
+                return Err(format!(
+                    "w[{i}]: planar {got_i} vs scalar {want}"));
+            }
+        }
+        Ok(())
+    });
+}

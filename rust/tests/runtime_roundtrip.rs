@@ -2,14 +2,22 @@
 //! HIC state, run train/eval/refresh/adabs steps and check the contract
 //! (shapes, state threading, metric plausibility, loss decrease).
 //!
-//! Requires `make artifacts` (the tiny config) to have run.
+//! Requires `make artifacts` (the tiny config) to have run AND a
+//! `--features pjrt` build — the default stub backend cannot execute
+//! entries, so each test also skips when the feature is off.
 
 use std::path::PathBuf;
 
 use hic_train::runtime::{artifact::artifact_root, Engine, HostTensor};
 use hic_train::util::rng::Pcg64;
 
+/// The artifact dir, or `None` (with a SKIP note) when the test cannot
+/// run: artifacts missing, or built without the `pjrt` runtime.
 fn tiny_dir() -> Option<PathBuf> {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("SKIP: built without the `pjrt` feature (stub runtime)");
+        return None;
+    }
     let d = artifact_root().join("tiny");
     d.join("manifest.json").exists().then_some(d)
 }

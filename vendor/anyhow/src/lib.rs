@@ -1,0 +1,249 @@
+//! Minimal offline stand-in for the [`anyhow`](https://docs.rs/anyhow)
+//! crate: the API subset this repository uses (`Error`, `Result`,
+//! `anyhow!`, `bail!`, `Context`), implemented without any registry
+//! dependency so the workspace builds in sealed environments.
+//!
+//! Semantics mirror the real crate where it matters:
+//! * `Error` does **not** implement `std::error::Error`, which is what
+//!   makes the blanket `From<E: std::error::Error>` impl coherent — the
+//!   same trick the real crate uses on stable;
+//! * `Display` prints the outermost message, `{:#}` prints the chain
+//!   joined by `: `, and `Debug` prints the `Caused by:` block;
+//! * `.context(..)` / `.with_context(..)` wrap the previous error as the
+//!   new source.
+//!
+//! Swap back to the registry crate by replacing the `[dependencies]`
+//! path entry with `anyhow = "1"`; no call sites need to change.
+
+use std::fmt;
+
+/// Drop-in subset of `anyhow::Error`: an error message plus a chain of
+/// causes (stored as messages — sufficient for display and logging).
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+/// Drop-in for `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from any displayable message (`anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// The message chain, outermost first.
+    pub fn chain(&self) -> Chain<'_> {
+        Chain { next: Some(self) }
+    }
+
+    /// The innermost error message of the chain.
+    pub fn root_cause(&self) -> &str {
+        let mut cur = self;
+        while let Some(next) = cur.source.as_deref() {
+            cur = next;
+        }
+        &cur.msg
+    }
+}
+
+/// Iterator over an error chain, outermost first.
+pub struct Chain<'a> {
+    next: Option<&'a Error>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a Error;
+
+    fn next(&mut self) -> Option<&'a Error> {
+        let cur = self.next?;
+        self.next = cur.source.as_deref();
+        Some(cur)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            let mut cur = self.source.as_deref();
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if let Some(first) = self.source.as_deref() {
+            write!(f, "\n\nCaused by:")?;
+            let mut cur = Some(first);
+            while let Some(e) = cur {
+                write!(f, "\n    {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+// The blanket conversion every `?` site relies on.  Coherent with the
+// std identity `From<T> for T` because `Error` itself deliberately does
+// not implement `std::error::Error`.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        // Flatten the std source chain into our message chain.
+        let mut msgs = Vec::new();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut tail = None;
+        for msg in msgs.into_iter().rev() {
+            tail = Some(Box::new(Error { msg, source: tail }));
+        }
+        Error { msg: e.to_string(), source: tail }
+    }
+}
+
+/// Drop-in for `anyhow::Context` over `Result` and `Option`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Drop-in for `anyhow::anyhow!`.
+#[macro_export]
+macro_rules! anyhow {
+    ($fmt:literal $(, $($arg:tt)*)?) => {
+        $crate::Error::msg(format!($fmt $(, $($arg)*)?))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Drop-in for `anyhow::bail!`.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Drop-in for `anyhow::ensure!`.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            return Err($crate::anyhow!(concat!(
+                "condition failed: `", stringify!($cond), "`")));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e: Error = Error::from(io_err()).context("reading config");
+        assert_eq!(e.to_string(), "reading config");
+        assert!(format!("{e:#}").starts_with("reading config: "));
+        assert!(format!("{e:?}").contains("Caused by:"));
+        assert_eq!(e.chain().count(), 2);
+        assert_eq!(e.root_cause(), "gone");
+    }
+
+    #[test]
+    fn macros() {
+        fn inner(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("failed with code {}", 7);
+            }
+            ensure!(1 + 1 == 2, "math broke");
+            Ok(3)
+        }
+        assert_eq!(inner(false).unwrap(), 3);
+        assert_eq!(inner(true).unwrap_err().to_string(),
+                   "failed with code 7");
+        let e = anyhow!("x = {}", 5);
+        assert_eq!(e.to_string(), "x = 5");
+        let owned = anyhow!(String::from("owned message"));
+        assert_eq!(owned.to_string(), "owned message");
+    }
+
+    #[test]
+    fn question_mark_conversion() {
+        fn f() -> Result<String> {
+            let v = String::from_utf8(vec![0xff])?;
+            Ok(v)
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn context_on_option() {
+        let v: Option<u32> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+        let v = Some(2u32);
+        assert_eq!(v.with_context(|| "unused").unwrap(), 2);
+    }
+}
