@@ -1,0 +1,166 @@
+//! Grid-engine benches: multi-tile VMM scaling across worker counts
+//! against the serial single-tile path, plus the batched Box–Muller
+//! noise fill against the scalar Box–Muller loop.
+//!
+//! `tile_vmm_batch16_serial_ref` replays the pre-grid cost model — one
+//! whole-matrix `CrossbarTile` with the scalar per-element `normal()`
+//! read-noise draw — on the same logical workload the 4×4 grid shards
+//! across workers.  `BENCH_grid.json` records the cases plus the
+//! headline speedups (grid@4 workers vs the serial single-tile path,
+//! and the noise-fill win).
+
+use hic_train::bench::Bench;
+use hic_train::crossbar::grid::CrossbarGrid;
+use hic_train::crossbar::quant::{AdcSpec, DacSpec};
+use hic_train::crossbar::tile::CrossbarTile;
+use hic_train::crossbar::TilingPolicy;
+use hic_train::hic::weight::{HicGeometry, HicWeight};
+use hic_train::pcm::device::PcmParams;
+use hic_train::util::pool::WorkerPool;
+use hic_train::util::rng::Pcg64;
+
+const K: usize = 128;
+const N: usize = 128;
+const TILE: usize = 32; // 4x4 grid
+const M: usize = 16;
+
+fn pattern(len: usize) -> Vec<f32> {
+    (0..len).map(|i| (((i * 3) % 15) as f32 - 7.0) / 7.0).collect()
+}
+
+/// The pre-grid serial reference: whole-matrix tile, scalar-`normal()`
+/// read noise per element (the PR-1 noise path).
+fn vmm_batch_scalar_noise(t: &CrossbarTile, x: &[f32], m: usize,
+                          t_now: f32, rng: &mut Pcg64,
+                          out: &mut [f32]) {
+    let (rows, cols) = (t.rows(), t.cols());
+    let msb = &t.weights.msb;
+    let nelem = rows * cols;
+    let mut gp = vec![0.0f32; nelem];
+    let mut gm = vec![0.0f32; nelem];
+    msb.plus.drift_into(t_now, &mut gp);
+    msb.minus.drift_into(t_now, &mut gm);
+    let sigma_p = msb.plus.params.read_sigma;
+    let sigma_m = msb.minus.params.read_sigma;
+    let scale = msb.g_to_w(1.0);
+    let mut w = vec![0.0f32; nelem];
+    let mut xq = vec![0.0f32; rows];
+    for s in 0..m {
+        for (wv, &g) in w.iter_mut().zip(&gp) {
+            *wv = (g + sigma_p * rng.normal() as f32).clamp(0.0, 1.0);
+        }
+        for (wv, &g) in w.iter_mut().zip(&gm) {
+            *wv = (*wv - (g + sigma_m * rng.normal() as f32)
+                .clamp(0.0, 1.0)) * scale;
+        }
+        for (q, &v) in xq.iter_mut().zip(&x[s * rows..(s + 1) * rows]) {
+            *q = t.dac.convert(v);
+        }
+        let y = &mut out[s * cols..(s + 1) * cols];
+        y.fill(0.0);
+        for (r, &xv) in xq.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let row = &w[r * cols..(r + 1) * cols];
+            for (yc, &wc) in y.iter_mut().zip(row) {
+                *yc += xv * wc;
+            }
+        }
+        for yc in y.iter_mut() {
+            *yc = t.adc.convert(*yc);
+        }
+    }
+}
+
+fn main() {
+    let mut b = Bench::new("grid");
+    let params = PcmParams::default();
+    let geom = HicGeometry::default();
+    let elements = (M * K * N) as f64;
+    let w = pattern(K * N);
+    let x = pattern(M * K);
+
+    // Serial single-tile reference on the same logical matrix.
+    let mut rng = Pcg64::new(1, 0);
+    let mut hw = HicWeight::new(params, geom, K, N, &mut rng);
+    hw.program_init(&w, 0.0, &mut rng);
+    let tile = CrossbarTile::new(hw, DacSpec::default(),
+                                 AdcSpec::default());
+    let mut out = vec![0.0f32; M * N];
+    let mut r = Pcg64::new(2, 0);
+    b.bench_with_elements(
+        &format!("tile_vmm_batch{M}_serial_ref_{K}x{N}"),
+        Some(elements),
+        || {
+            vmm_batch_scalar_noise(&tile, &x, M, 1.0, &mut r, &mut out);
+            std::hint::black_box(&out);
+        },
+    );
+    // The current single-tile path (batched Box–Muller, still serial).
+    let mut scratch = tile.scratch();
+    b.bench_with_elements(
+        &format!("tile_vmm_batch{M}_fill_{K}x{N}"),
+        Some(elements),
+        || {
+            tile.vmm_batch_into(&x, M, 1.0, &mut r, &mut scratch,
+                                &mut out);
+            std::hint::black_box(&out);
+        },
+    );
+
+    // The 4x4 grid at 1/2/4 workers.
+    let mut grid = CrossbarGrid::new(
+        params, geom, K, N,
+        TilingPolicy { tile_rows: TILE, tile_cols: TILE },
+        DacSpec::default(), AdcSpec::default(), 5);
+    grid.program_init(&w, 0.0, 0, &WorkerPool::serial());
+    let mut gscratch = grid.scratch();
+    let mut round = 1u64;
+    for workers in [1usize, 2, 4] {
+        let pool = WorkerPool::new(workers);
+        b.bench_with_elements(
+            &format!("grid_vmm_batch{M}_4x4_w{workers}"),
+            Some(elements),
+            || {
+                grid.vmm_batch_into(&x, M, 1.0, round, &pool,
+                                    &mut gscratch, &mut out);
+                round += 1;
+                std::hint::black_box(&out);
+            },
+        );
+    }
+
+    // Noise fill: scalar Box–Muller loop vs the batched fill.
+    let mut noise = vec![0.0f32; 65_536];
+    let mut r = Pcg64::new(3, 0);
+    b.bench_with_elements("fill_normal_scalar_65536", Some(65_536.0), || {
+        r.fill_normal(&mut noise, 0.0, 1.0);
+        std::hint::black_box(&noise);
+    });
+    b.bench_with_elements("fill_gaussian_65536", Some(65_536.0), || {
+        r.fill_gaussian(&mut noise, 0.0, 1.0);
+        std::hint::black_box(&noise);
+    });
+
+    let mut speedups = Vec::new();
+    for (label, base, cont) in [
+        ("grid_w4_vs_serial_tile",
+         format!("tile_vmm_batch{M}_serial_ref_{K}x{N}"),
+         format!("grid_vmm_batch{M}_4x4_w4")),
+        ("grid_w4_vs_w1",
+         format!("grid_vmm_batch{M}_4x4_w1"),
+         format!("grid_vmm_batch{M}_4x4_w4")),
+        ("fill_gaussian_vs_scalar",
+         "fill_normal_scalar_65536".to_string(),
+         "fill_gaussian_65536".to_string()),
+    ] {
+        if let Some(s) = b.speedup(&base, &cont) {
+            println!("[grid] {label}: {s:.2}x");
+            speedups.push((label.to_string(), s));
+        }
+    }
+    b.write_json(std::path::Path::new("BENCH_grid.json"), &speedups)
+        .expect("writing BENCH_grid.json");
+    b.finish();
+}

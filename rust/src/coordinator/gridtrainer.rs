@@ -1,0 +1,342 @@
+//! Device-level training loop on the sharded crossbar grid.
+//!
+//! The artifact-backed [`super::Trainer`] needs AOT-lowered HLO programs
+//! (and a PJRT toolchain) to run; this trainer instead drives the
+//! **device model directly** through `crossbar::CrossbarGrid`, so the
+//! fig3/fig5/fig6-style sweeps can run anywhere the crate builds.  The
+//! task is analog in-memory linear regression: a fixed target matrix
+//! `W*` defines `y = x·W*`; every step draws an input batch, runs the
+//! analog forward pass (`vmm_batch` — DAC/ADC, drift, read noise),
+//! forms the least-squares gradient on the host, and applies the hybrid
+//! update (`apply_update` — LSB accumulation, MSB overflow programming),
+//! with the drift clock and refresh cadence of the real loop.
+//!
+//! Everything is deterministic given `(seed, worker pool)` — and, by
+//! the grid's sharding contract, **independent of the worker count**:
+//! per-step kernels use the step index as the RNG `round`, evaluation
+//! probes use caller-supplied rounds in a disjoint range
+//! ([`EVAL_ROUND_BASE`]).
+
+use crate::crossbar::grid::{CrossbarGrid, GridScratch};
+use crate::crossbar::{AdcSpec, DacSpec, TilingPolicy};
+use crate::hic::weight::HicGeometry;
+use crate::pcm::device::PcmParams;
+use crate::pcm::endurance::EnduranceLedger;
+use crate::util::pool::WorkerPool;
+use crate::util::rng::Pcg64;
+
+use super::schedule::{DriftClock, LrSchedule, RefreshScheduler};
+
+/// First RNG round reserved for evaluation probes (training steps use
+/// rounds `0..steps`, far below this).
+pub const EVAL_ROUND_BASE: u64 = 1 << 32;
+
+/// Options of one grid-trainer run.
+#[derive(Clone, Debug)]
+pub struct GridTrainerOptions {
+    pub seed: u64,
+    pub lr: LrSchedule,
+    /// batches between MSB refresh operations (0 = never)
+    pub refresh_every: usize,
+    /// simulated seconds of wall time per batch (drift clock)
+    pub seconds_per_batch: f64,
+    /// input batch size
+    pub batch: usize,
+    /// inputs drawn uniform in [-x_range, x_range]
+    pub x_range: f32,
+}
+
+impl Default for GridTrainerOptions {
+    fn default() -> Self {
+        GridTrainerOptions {
+            seed: 42,
+            lr: LrSchedule::constant(0.5),
+            refresh_every: 10,
+            seconds_per_batch: 0.05,
+            batch: 8,
+            x_range: 1.0,
+        }
+    }
+}
+
+pub struct GridTrainer {
+    pub grid: CrossbarGrid,
+    pub pool: WorkerPool,
+    /// the regression target `W*`, logical `[k, n]` row-major
+    pub target: Vec<f32>,
+    pub opts: GridTrainerOptions,
+    pub clock: DriftClock,
+    refresh: RefreshScheduler,
+    data_rng: Pcg64,
+    scratch: GridScratch,
+    pub step: usize,
+    /// per-step training MSE of the analog forward pass
+    pub losses: Vec<f64>,
+    pub overflows: usize,
+    pub refreshed: usize,
+    // reusable step buffers
+    x: Vec<f32>,
+    y_ref: Vec<f32>,
+    y_hat: Vec<f32>,
+    diff: Vec<f32>,
+    grad: Vec<f32>,
+}
+
+impl GridTrainer {
+    /// Build a trainer over a fresh (RESET) grid; training starts from
+    /// zero weights, so no initial programming pass is consumed.
+    pub fn new(params: PcmParams, geom: HicGeometry, k: usize, n: usize,
+               policy: TilingPolicy, target: Vec<f32>, pool: WorkerPool,
+               opts: GridTrainerOptions) -> Self {
+        assert_eq!(target.len(), k * n);
+        let grid = CrossbarGrid::new(params, geom, k, n, policy,
+                                     DacSpec::default(),
+                                     AdcSpec::default(), opts.seed);
+        let scratch = grid.scratch();
+        let m = opts.batch;
+        GridTrainer {
+            clock: DriftClock::new(opts.seconds_per_batch),
+            refresh: RefreshScheduler::new(opts.refresh_every),
+            data_rng: Pcg64::new(opts.seed, 0xDA7A),
+            scratch,
+            step: 0,
+            losses: Vec::new(),
+            overflows: 0,
+            refreshed: 0,
+            x: vec![0.0; m * k],
+            y_ref: vec![0.0; m * n],
+            y_hat: vec![0.0; m * n],
+            diff: vec![0.0; m * n],
+            grad: vec![0.0; k * n],
+            target,
+            grid,
+            pool,
+            opts,
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.grid.k()
+    }
+
+    pub fn n(&self) -> usize {
+        self.grid.n()
+    }
+
+    /// Run `steps` training steps (forward VMM → host gradient → hybrid
+    /// update, with drift clock and refresh cadence).
+    pub fn train_steps(&mut self, steps: usize) {
+        let k = self.grid.k();
+        let n = self.grid.n();
+        let m = self.opts.batch;
+        for _ in 0..steps {
+            let t_now = self.clock.tick();
+            let lr = self.opts.lr.at(self.step);
+            let round = self.step as u64;
+
+            // Input batch.
+            for v in self.x.iter_mut() {
+                *v = self
+                    .data_rng
+                    .uniform_in(-self.opts.x_range, self.opts.x_range);
+            }
+            // Reference outputs y* = x · W* (host, fp32).
+            for s in 0..m {
+                for j in 0..n {
+                    let mut acc = 0.0f32;
+                    for i in 0..k {
+                        acc += self.x[s * k + i] * self.target[i * n + j];
+                    }
+                    self.y_ref[s * n + j] = acc;
+                }
+            }
+            // Analog forward pass.
+            self.grid.vmm_batch_into(&self.x, m, t_now, round,
+                                     &self.pool, &mut self.scratch,
+                                     &mut self.y_hat);
+            // Residual + loss.
+            let mut se = 0.0f64;
+            for (d, (&yh, &yr)) in self
+                .diff
+                .iter_mut()
+                .zip(self.y_hat.iter().zip(&self.y_ref))
+            {
+                *d = yh - yr;
+                se += (*d as f64) * (*d as f64);
+            }
+            self.losses.push(se / (m * n) as f64);
+            // Least-squares gradient G = xᵀ·diff / m.
+            let inv_m = 1.0f32 / m as f32;
+            for i in 0..k {
+                for j in 0..n {
+                    let mut acc = 0.0f32;
+                    for s in 0..m {
+                        acc += self.x[s * k + i] * self.diff[s * n + j];
+                    }
+                    self.grad[i * n + j] = acc * inv_m;
+                }
+            }
+            self.overflows += self.grid.apply_update(
+                &self.grad, lr, t_now, round, &self.pool);
+            if self.refresh.due(self.step) {
+                self.refreshed +=
+                    self.grid.refresh(t_now, round, &self.pool);
+            }
+            self.step += 1;
+        }
+    }
+
+    /// MSE of the analog forward pass against `y* = x·W*` on a fresh
+    /// deterministic evaluation batch at inference time `t_eval`.
+    ///
+    /// With `gain_comp`, scores `α·ŷ` with the global scale `α`
+    /// minimizing ‖α·ŷ − y*‖² on the same batch (the drift-compensation
+    /// scaling of the mixed-precision trainers, a device-level stand-in
+    /// for AdaBS).  `round` must be unique per probe (use
+    /// [`EVAL_ROUND_BASE`]` + i`).  Wrapper over
+    /// [`GridTrainer::eval_mse_pair`].
+    pub fn eval_mse(&mut self, t_eval: f32, round: u64,
+                    gain_comp: bool) -> f64 {
+        let (raw, comp) = self.eval_mse_pair(t_eval, round);
+        if gain_comp { comp } else { raw }
+    }
+
+    /// One forward pass, both scores: `(raw MSE, gain-compensated
+    /// MSE)` on the **same** read-noise realization — the paired
+    /// comparison the fig5 sweep plots, at one VMM's cost.
+    pub fn eval_mse_pair(&mut self, t_eval: f32, round: u64)
+                         -> (f64, f64) {
+        let k = self.grid.k();
+        let n = self.grid.n();
+        let m = self.opts.batch;
+        let mut rng = Pcg64::new(self.opts.seed, 0xE7A1);
+        let mut x = vec![0.0f32; m * k];
+        for v in x.iter_mut() {
+            *v = rng.uniform_in(-self.opts.x_range, self.opts.x_range);
+        }
+        let mut y_ref = vec![0.0f32; m * n];
+        for s in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for i in 0..k {
+                    acc += x[s * k + i] * self.target[i * n + j];
+                }
+                y_ref[s * n + j] = acc;
+            }
+        }
+        let mut y_hat = vec![0.0f32; m * n];
+        self.grid.vmm_batch_into(&x, m, t_eval, round, &self.pool,
+                                 &mut self.scratch, &mut y_hat);
+        let mut se_raw = 0.0f64;
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (&yh, &yr) in y_hat.iter().zip(&y_ref) {
+            let d = yh as f64 - yr as f64;
+            se_raw += d * d;
+            num += yh as f64 * yr as f64;
+            den += yh as f64 * yh as f64;
+        }
+        let gain = if den > 0.0 { num / den } else { 1.0 };
+        let mut se_comp = 0.0f64;
+        for (&yh, &yr) in y_hat.iter().zip(&y_ref) {
+            let d = gain * yh as f64 - yr as f64;
+            se_comp += d * d;
+        }
+        let mn = (m * n) as f64;
+        (se_raw / mn, se_comp / mn)
+    }
+
+    /// Mean |decoded − target| over the logical matrix at time `t`
+    /// (drift-evaluated, no read noise).
+    pub fn weight_error(&self, t: f32) -> f64 {
+        let mut w = vec![0.0f32; self.grid.k() * self.grid.n()];
+        self.grid.drift_into(t, &self.pool, &mut w);
+        let mut s = 0.0f64;
+        for (&a, &b) in w.iter().zip(&self.target) {
+            s += (a as f64 - b as f64).abs();
+        }
+        s / w.len() as f64
+    }
+
+    /// Endurance snapshot over every grid tile.
+    pub fn endurance(&self) -> EnduranceLedger {
+        let mut ledger = EnduranceLedger::new();
+        self.grid.record_endurance(&mut ledger);
+        ledger
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn target(k: usize, n: usize) -> Vec<f32> {
+        (0..k * n)
+            .map(|i| (((i * 3 + 5) % 13) as f32 - 6.0) / 8.0)
+            .collect()
+    }
+
+    fn opts() -> GridTrainerOptions {
+        GridTrainerOptions { refresh_every: 0, ..Default::default() }
+    }
+
+    #[test]
+    fn loss_decreases_on_ideal_devices() {
+        let geom =
+            HicGeometry { stochastic_rounding: false, ..Default::default() };
+        let mut t = GridTrainer::new(
+            PcmParams::ideal(), geom, 8, 6,
+            TilingPolicy { tile_rows: 4, tile_cols: 3 },
+            target(8, 6), WorkerPool::serial(), opts());
+        t.train_steps(60);
+        let early = t.losses[0];
+        let late = *t.losses.last().unwrap();
+        assert!(late < early * 0.2, "loss {early} -> {late}");
+        // The decoded matrix approaches W* to within ~1 MSB quantum.
+        assert!(t.weight_error(t.clock.now_f32()) < 0.14,
+                "weight err {}", t.weight_error(t.clock.now_f32()));
+        assert!(t.overflows > 0);
+    }
+
+    #[test]
+    fn gain_compensation_recovers_drift_loss() {
+        // Drift shrinks all conductances by a common-ish factor; the
+        // global-gain calibration must recover most of the MSE at long
+        // probe times (the fig5 shape at device level).
+        let geom =
+            HicGeometry { stochastic_rounding: false, ..Default::default() };
+        let params = PcmParams {
+            nonlinear: false,
+            write_noise: false,
+            read_noise: false,
+            drift: true,
+            drift_nu_sigma: 0.0,
+            ..Default::default()
+        };
+        let mut t = GridTrainer::new(
+            params, geom, 8, 6,
+            TilingPolicy { tile_rows: 4, tile_cols: 3 },
+            target(8, 6), WorkerPool::serial(), opts());
+        t.train_steps(60);
+        let nocomp = t.eval_mse(1e7, EVAL_ROUND_BASE, false);
+        let comp = t.eval_mse(1e7, EVAL_ROUND_BASE + 1, true);
+        assert!(comp < nocomp, "gain comp must help: {comp} vs {nocomp}");
+    }
+
+    #[test]
+    fn run_is_worker_count_invariant() {
+        let run = |workers: usize| {
+            let mut t = GridTrainer::new(
+                PcmParams::default(), HicGeometry::default(), 6, 5,
+                TilingPolicy { tile_rows: 3, tile_cols: 2 },
+                target(6, 5), WorkerPool::new(workers),
+                GridTrainerOptions::default());
+            t.train_steps(12);
+            (t.losses.clone(), t.overflows,
+             t.eval_mse(100.0, EVAL_ROUND_BASE, true))
+        };
+        let a = run(1);
+        assert_eq!(a, run(2));
+        assert_eq!(a, run(4));
+    }
+}

@@ -12,14 +12,19 @@
 //! * LR scheduling, evaluation cadence, metrics and checkpoints,
 //! * the endurance snapshot (device ledgers out of the state buffers).
 //!
-//! [`baseline`] mirrors the loop for the FP32 software baseline.
+//! [`baseline`] mirrors the loop for the FP32 software baseline, and
+//! [`gridtrainer`] runs the same cycle directly on the sharded
+//! `crossbar::CrossbarGrid` device model (no artifacts/PJRT needed) —
+//! the engine behind the grid-routed fig3/fig5/fig6 sweeps.
 
 pub mod baseline;
+pub mod gridtrainer;
 pub mod metrics;
 pub mod schedule;
 pub mod trainer;
 
 pub use baseline::BaselineTrainer;
+pub use gridtrainer::{GridTrainer, GridTrainerOptions};
 pub use metrics::{EvalResult, MetricsRecorder, StepMetrics};
 pub use schedule::{DriftClock, LrSchedule, RefreshScheduler};
 pub use trainer::{Trainer, TrainerOptions};

@@ -1,0 +1,570 @@
+//! Sharded multi-tile crossbar engine.
+//!
+//! [`CrossbarGrid`] maps one logical `[k, n]` weight matrix onto the
+//! R×C tile grid computed by [`mapper::LayerMapping`] and runs the
+//! device kernels — batched VMM, increment programming, training
+//! updates, drift decode, saturation refresh — **tile-parallel** on a
+//! [`WorkerPool`].  This converts the PR-1 planar data layout into
+//! wall-clock scaling: every tile's planes are independent, exactly the
+//! per-tile independence the paper's accelerator (and the
+//! mixed-precision trainers it builds on) exploits.
+//!
+//! # Sharding scheme
+//!
+//! * **State kernels** (`program_init`, `program_increments`,
+//!   `apply_update`, `refresh`): one shard per tile.  Each shard owns
+//!   its tile's planes, so shards never alias.
+//! * **`vmm_batch_into`**: two phases.  Phase 1 evaluates drift once
+//!   per batch, one shard per tile.  Phase 2 shards by **column strip**
+//!   (all tiles of one grid column): a strip owns a disjoint slice of
+//!   output columns, walks its row-tiles top-down per sample
+//!   accumulating partial sums into the same running output, and
+//!   applies the ADC once per logical column after the last row-tile.
+//!   Row-tiles accumulating *into* the running sum (instead of
+//!   reducing independent partials) keeps the f32 addition sequence
+//!   identical to a single tile spanning the whole matrix — which is
+//!   what makes the grid bit-compatible with the serial single-tile
+//!   path in the noise-free domain.
+//! * **`drift_into`**: one shard per tile, serial deterministic gather.
+//!
+//! # RNG stream discipline
+//!
+//! Shards never share a generator.  Every kernel invocation derives one
+//! counter-based stream per shard:
+//! `Pcg64::new(seed ⊕ round·φ, (op_tag << 32) | shard_id)` — `seed` is
+//! the grid's, `round` is a caller-supplied invocation counter (training
+//! step, probe index, …), `op_tag` separates kernel families, and
+//! `shard_id` is the tile index (state kernels) or grid column (VMM).
+//! Reusing a `(seed, round, op)` triple replays the same noise, so
+//! callers advance `round` between invocations.  Because a shard's
+//! stream depends only on these values — never on the worker that runs
+//! it — **all grid kernels are bitwise identical for any worker
+//! count**; `rust/tests/prop_parallel_equivalence.rs` pins this, and
+//! the noise-free equivalence against the single-tile serial path.
+//!
+//! Read noise inside the VMM uses the batched Box–Muller fill
+//! (`Pcg64::fill_gaussian`) per tile plane, the same discipline as
+//! `CrossbarTile::vmm_batch_into`.
+
+use crate::hic::weight::{HicGeometry, HicWeight};
+use crate::pcm::device::PcmParams;
+use crate::pcm::endurance::EnduranceLedger;
+use crate::util::pool::WorkerPool;
+use crate::util::rng::Pcg64;
+
+use super::mapper::{LayerMapping, TilingPolicy};
+use super::quant::{AdcSpec, DacSpec};
+use super::tile::CrossbarTile;
+
+/// Kernel-family tags baked into the high bits of each shard's RNG
+/// stream id (see the module docs).
+pub const OP_INIT: u64 = 1;
+pub const OP_PROGRAM: u64 = 2;
+pub const OP_UPDATE: u64 = 3;
+pub const OP_VMM: u64 = 4;
+pub const OP_REFRESH: u64 = 5;
+pub const OP_PROGRAM_INIT: u64 = 6;
+
+/// Weyl constant mixing the invocation counter into the stream seed.
+const ROUND_MIX: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// The per-shard generator: counter-based, scheduling-independent.
+#[inline]
+pub fn op_rng(seed: u64, round: u64, op: u64, shard: usize) -> Pcg64 {
+    Pcg64::new(seed ^ round.wrapping_mul(ROUND_MIX),
+               (op << 32) | shard as u64)
+}
+
+/// One logical weight matrix sharded onto an R×C grid of
+/// [`CrossbarTile`]s (edge tiles sized to their used extent, so the
+/// grid holds exactly `k·n` weight cells).
+pub struct CrossbarGrid {
+    pub mapping: LayerMapping,
+    /// Row-major tile grid (`mapping.tile_index` addressing).
+    pub tiles: Vec<CrossbarTile>,
+    pub dac: DacSpec,
+    pub adc: AdcSpec,
+    pub seed: u64,
+}
+
+/// Per-tile drifted-conductance planes (valid for one `t_now`).
+struct TileDrift {
+    gp: Vec<f32>,
+    gm: Vec<f32>,
+}
+
+/// Per-column-strip working buffers for the VMM shards.
+struct StripScratch {
+    w: Vec<f32>,
+    noise: Vec<f32>,
+    xq: Vec<f32>,
+    out: Vec<f32>,
+}
+
+/// Reusable grid buffers: drift planes per tile + VMM strip scratch.
+pub struct GridScratch {
+    drift: Vec<TileDrift>,
+    strips: Vec<StripScratch>,
+}
+
+/// Per-tile task unit handed to the pool by the state kernels.
+struct TileTask<'a> {
+    tile: &'a mut CrossbarTile,
+    sub: Vec<f32>,
+    count: u64,
+}
+
+impl CrossbarGrid {
+    /// Build the grid: tiles are constructed in row-major order, each
+    /// from its own `(seed, OP_INIT, tile)` stream, so construction is
+    /// deterministic and independent of tile count elsewhere.
+    pub fn new(params: PcmParams, geom: HicGeometry, k: usize, n: usize,
+               policy: TilingPolicy, dac: DacSpec, adc: AdcSpec,
+               seed: u64) -> Self {
+        let mapping = LayerMapping::new("grid", k, n, policy);
+        let mut tiles = Vec::with_capacity(mapping.tile_count());
+        for (ti, t) in mapping.tiles.iter().enumerate() {
+            let mut rng = op_rng(seed, 0, OP_INIT, ti);
+            let hw = HicWeight::new(params, geom, t.used_rows,
+                                    t.used_cols, &mut rng);
+            tiles.push(CrossbarTile::new(hw, dac, adc));
+        }
+        CrossbarGrid { mapping, tiles, dac, adc, seed }
+    }
+
+    pub fn k(&self) -> usize {
+        self.mapping.k
+    }
+
+    pub fn n(&self) -> usize {
+        self.mapping.n
+    }
+
+    pub fn tile_count(&self) -> usize {
+        self.tiles.len()
+    }
+
+    /// Tile at grid coordinate `(gr, gc)`.
+    pub fn tile(&self, gr: usize, gc: usize) -> &CrossbarTile {
+        &self.tiles[self.mapping.tile_index(gr, gc)]
+    }
+
+    /// Allocate reusable buffers sized for this grid.
+    pub fn scratch(&self) -> GridScratch {
+        let drift = self
+            .tiles
+            .iter()
+            .map(|t| {
+                let nt = t.rows() * t.cols();
+                TileDrift { gp: vec![0.0; nt], gm: vec![0.0; nt] }
+            })
+            .collect();
+        let tr_max = self.mapping.policy.tile_rows.min(self.mapping.k);
+        let mut strips = Vec::with_capacity(self.mapping.grid_cols());
+        for c in 0..self.mapping.grid_cols() {
+            let strip_cols =
+                self.mapping.tiles[self.mapping.tile_index(0, c)].used_cols;
+            let nmax = tr_max * strip_cols;
+            strips.push(StripScratch {
+                w: vec![0.0; nmax],
+                noise: vec![0.0; nmax],
+                xq: vec![0.0; tr_max],
+                out: Vec::new(),
+            });
+        }
+        GridScratch { drift, strips }
+    }
+
+    // -- logical <-> tile layout ------------------------------------------
+
+    /// Split a logical row-major `[k, n]` matrix into per-tile
+    /// row-major submatrices (tile enumeration order).
+    fn scatter(&self, src: &[f32]) -> Vec<Vec<f32>> {
+        assert_eq!(src.len(), self.k() * self.n());
+        let n = self.n();
+        self.mapping
+            .tiles
+            .iter()
+            .map(|t| {
+                let (r0, c0) = self.mapping.origin(t);
+                let mut sub = vec![0.0f32; t.used_rows * t.used_cols];
+                for r in 0..t.used_rows {
+                    let src_row = (r0 + r) * n + c0;
+                    sub[r * t.used_cols..(r + 1) * t.used_cols]
+                        .copy_from_slice(
+                            &src[src_row..src_row + t.used_cols]);
+                }
+                sub
+            })
+            .collect()
+    }
+
+    /// Gather per-tile row-major buffers back into the logical matrix.
+    fn gather(&self, bufs: &[Vec<f32>], out: &mut [f32]) {
+        assert_eq!(out.len(), self.k() * self.n());
+        let n = self.n();
+        for (t, buf) in self.mapping.tiles.iter().zip(bufs) {
+            let (r0, c0) = self.mapping.origin(t);
+            for r in 0..t.used_rows {
+                let dst_row = (r0 + r) * n + c0;
+                out[dst_row..dst_row + t.used_cols].copy_from_slice(
+                    &buf[r * t.used_cols..(r + 1) * t.used_cols]);
+            }
+        }
+    }
+
+    // -- state kernels (shard = tile) -------------------------------------
+
+    /// Program initial weights (MSB-quantized), tile-parallel.  Uses
+    /// its own op tag (`OP_PROGRAM_INIT`), so an init followed by a
+    /// `program_increments` at the same `round` still draws
+    /// independent write-noise streams.
+    pub fn program_init(&mut self, w: &[f32], t_now: f32, round: u64,
+                        pool: &WorkerPool) {
+        let subs = self.scatter(w);
+        let seed = self.seed;
+        let mut tasks: Vec<TileTask> = self
+            .tiles
+            .iter_mut()
+            .zip(subs)
+            .map(|(tile, sub)| TileTask { tile, sub, count: 0 })
+            .collect();
+        pool.run(&mut tasks, |ti, task| {
+            let mut rng = op_rng(seed, round, OP_PROGRAM_INIT, ti);
+            task.tile.weights.program_init(&task.sub, t_now, &mut rng);
+        });
+    }
+
+    /// Apply signed per-weight increments (`dw` logical `[k, n]`,
+    /// zeros untouched) through the differential pairs, tile-parallel.
+    /// Returns total SET pulses applied.
+    pub fn program_increments(&mut self, dw: &[f32], t_now: f32,
+                              round: u64, pool: &WorkerPool) -> u64 {
+        let subs = self.scatter(dw);
+        let seed = self.seed;
+        let mut tasks: Vec<TileTask> = self
+            .tiles
+            .iter_mut()
+            .zip(subs)
+            .map(|(tile, sub)| TileTask { tile, sub, count: 0 })
+            .collect();
+        pool.run(&mut tasks, |ti, task| {
+            let mut rng = op_rng(seed, round, OP_PROGRAM, ti);
+            let mut pulses = 0u64;
+            for (i, &d) in task.sub.iter().enumerate() {
+                if d != 0.0 {
+                    pulses += task.tile.weights.msb.apply_increment(
+                        i, d, t_now, &mut rng) as u64;
+                }
+            }
+            task.count = pulses;
+        });
+        tasks.iter().map(|t| t.count).sum()
+    }
+
+    /// One hybrid training update (`grad` logical `[k, n]`),
+    /// tile-parallel; returns total LSB→MSB overflow events.
+    pub fn apply_update(&mut self, grad: &[f32], lr: f32, t_now: f32,
+                        round: u64, pool: &WorkerPool) -> usize {
+        let subs = self.scatter(grad);
+        let seed = self.seed;
+        let mut tasks: Vec<TileTask> = self
+            .tiles
+            .iter_mut()
+            .zip(subs)
+            .map(|(tile, sub)| TileTask { tile, sub, count: 0 })
+            .collect();
+        pool.run(&mut tasks, |ti, task| {
+            let mut rng = op_rng(seed, round, OP_UPDATE, ti);
+            task.count = task.tile.weights.apply_update(
+                &task.sub, lr, t_now, &mut rng) as u64;
+        });
+        tasks.iter().map(|t| t.count as usize).sum()
+    }
+
+    /// Selective saturation refresh, tile-parallel; returns refreshed
+    /// pair count.
+    pub fn refresh(&mut self, t_now: f32, round: u64,
+                   pool: &WorkerPool) -> usize {
+        let seed = self.seed;
+        let mut tasks: Vec<TileTask> = self
+            .tiles
+            .iter_mut()
+            .map(|tile| TileTask { tile, sub: Vec::new(), count: 0 })
+            .collect();
+        pool.run(&mut tasks, |ti, task| {
+            let mut rng = op_rng(seed, round, OP_REFRESH, ti);
+            task.count = task.tile.weights.refresh(t_now, &mut rng) as u64;
+        });
+        tasks.iter().map(|t| t.count as usize).sum()
+    }
+
+    // -- read kernels ------------------------------------------------------
+
+    /// Drift-evaluated decode of the logical weight matrix at `t_now`
+    /// (no read noise) — the grid twin of `DifferentialPair::decode_into`
+    /// with the drift power law evaluated tile-parallel.
+    pub fn drift_into(&self, t_now: f32, pool: &WorkerPool,
+                      out: &mut [f32]) {
+        let mut bufs: Vec<Vec<f32>> = self
+            .tiles
+            .iter()
+            .map(|t| vec![0.0f32; t.rows() * t.cols()])
+            .collect();
+        let tiles = &self.tiles;
+        pool.run(&mut bufs, |ti, buf| {
+            tiles[ti].weights.decode_into(t_now, buf);
+        });
+        self.gather(&bufs, out);
+    }
+
+    /// Batched analog VMM over the whole grid (`x: [m, k]` row-major
+    /// logical inputs, `out: [m, n]`), drift once per batch, fresh
+    /// per-sample read noise per tile.  See the module docs for the
+    /// sharding and RNG scheme.
+    pub fn vmm_batch_into(&self, x: &[f32], m: usize, t_now: f32,
+                          round: u64, pool: &WorkerPool,
+                          scratch: &mut GridScratch, out: &mut [f32]) {
+        let k = self.k();
+        let n = self.n();
+        assert_eq!(x.len(), m * k);
+        assert_eq!(out.len(), m * n);
+        assert_eq!(scratch.drift.len(), self.tiles.len(),
+                   "scratch does not match this grid");
+        assert_eq!(scratch.strips.len(), self.mapping.grid_cols());
+
+        let GridScratch { drift, strips } = scratch;
+        let tiles = &self.tiles;
+
+        // Phase 1: drift both conductance planes once per batch,
+        // tile-parallel (no RNG).
+        pool.run(&mut drift[..], |ti, d| {
+            let msb = &tiles[ti].weights.msb;
+            msb.plus.drift_into(t_now, &mut d.gp);
+            msb.minus.drift_into(t_now, &mut d.gm);
+        });
+
+        // Phase 2: column strips (shard = grid column).
+        let grid_r = self.mapping.grid_rows();
+        let seed = self.seed;
+        let mapping = &self.mapping;
+        let dac = self.dac;
+        let adc = self.adc;
+        let drift_ro: &[TileDrift] = &drift[..];
+        pool.run(&mut strips[..], |c, strip| {
+            let strip_cols =
+                mapping.tiles[mapping.tile_index(0, c)].used_cols;
+            let need = m * strip_cols;
+            if strip.out.len() < need {
+                strip.out.resize(need, 0.0);
+            }
+            let mut rng = op_rng(seed, round, OP_VMM, c);
+            for s in 0..m {
+                let y = &mut strip.out
+                    [s * strip_cols..(s + 1) * strip_cols];
+                y.fill(0.0);
+                for gr in 0..grid_r {
+                    let ti = mapping.tile_index(gr, c);
+                    let tile = &tiles[ti];
+                    let (tr, tc) = (tile.rows(), tile.cols());
+                    let nt = tr * tc;
+                    let msb = &tile.weights.msb;
+                    let (noise_p, sigma_p) = (msb.plus.params.read_noise,
+                                              msb.plus.params.read_sigma);
+                    let (noise_m, sigma_m) = (msb.minus.params.read_noise,
+                                              msb.minus.params.read_sigma);
+                    let scale = msb.g_to_w(1.0);
+                    let d = &drift_ro[ti];
+                    let w = &mut strip.w[..nt];
+
+                    // Fresh stochastic read of this tile: G+ plane
+                    // first, then G− (the tile-kernel draw order).
+                    if noise_p {
+                        let z = &mut strip.noise[..nt];
+                        rng.fill_gaussian(z, 0.0, 1.0);
+                        for ((wv, &gp), &zv) in
+                            w.iter_mut().zip(&d.gp).zip(z.iter())
+                        {
+                            *wv = (gp + sigma_p * zv).clamp(0.0, 1.0);
+                        }
+                    } else {
+                        for (wv, &gp) in w.iter_mut().zip(&d.gp) {
+                            *wv = gp.clamp(0.0, 1.0);
+                        }
+                    }
+                    if noise_m {
+                        let z = &mut strip.noise[..nt];
+                        rng.fill_gaussian(z, 0.0, 1.0);
+                        for ((wv, &gm), &zv) in
+                            w.iter_mut().zip(&d.gm).zip(z.iter())
+                        {
+                            *wv = (*wv
+                                - (gm + sigma_m * zv).clamp(0.0, 1.0))
+                                * scale;
+                        }
+                    } else {
+                        for (wv, &gm) in w.iter_mut().zip(&d.gm) {
+                            *wv = (*wv - gm.clamp(0.0, 1.0)) * scale;
+                        }
+                    }
+
+                    // DAC this row block's inputs, accumulate row-major
+                    // into the running column sums.
+                    let (r0, _) = mapping.origin(&mapping.tiles[ti]);
+                    let xs = &x[s * k + r0..s * k + r0 + tr];
+                    let xq = &mut strip.xq[..tr];
+                    for (q, &v) in xq.iter_mut().zip(xs) {
+                        *q = dac.convert(v);
+                    }
+                    for (r, &xv) in xq.iter().enumerate() {
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        let row = &w[r * tc..(r + 1) * tc];
+                        for (yc, &wc) in y.iter_mut().zip(row) {
+                            *yc += xv * wc;
+                        }
+                    }
+                }
+                // ADC once per logical column, after the last row-tile
+                // (digital accumulation at full precision across
+                // row-tiles — the modeling choice that keeps the grid
+                // bit-compatible with a whole-matrix single tile; a
+                // per-row-tile ADC is a future knob).
+                for yc in y.iter_mut() {
+                    *yc = adc.convert(*yc);
+                }
+            }
+        });
+
+        // Serial deterministic gather: strip outputs → logical [m, n].
+        for (c, strip) in strips.iter().enumerate() {
+            let t0 = &self.mapping.tiles[self.mapping.tile_index(0, c)];
+            let (_, c0) = self.mapping.origin(t0);
+            let strip_cols = t0.used_cols;
+            for s in 0..m {
+                out[s * n + c0..s * n + c0 + strip_cols].copy_from_slice(
+                    &strip.out[s * strip_cols..(s + 1) * strip_cols]);
+            }
+        }
+    }
+
+    /// Allocating wrapper of [`CrossbarGrid::vmm_batch_into`].
+    pub fn vmm_batch(&self, x: &[f32], m: usize, t_now: f32, round: u64,
+                     pool: &WorkerPool) -> Vec<f32> {
+        let mut scratch = self.scratch();
+        let mut out = vec![0.0; m * self.n()];
+        self.vmm_batch_into(x, m, t_now, round, pool, &mut scratch,
+                            &mut out);
+        out
+    }
+
+    // -- accounting --------------------------------------------------------
+
+    /// Fold every tile's device activity into an endurance ledger
+    /// (tile enumeration order).
+    pub fn record_endurance(&self, ledger: &mut EnduranceLedger) {
+        for t in &self.tiles {
+            t.weights.record_endurance(ledger);
+        }
+    }
+
+    /// Lifetime SET pulses across all tiles (G+ and G− planes).
+    pub fn total_set_pulses(&self) -> u64 {
+        self.tiles
+            .iter()
+            .map(|t| {
+                let msb = &t.weights.msb;
+                msb.plus.set_count.iter().sum::<u64>()
+                    + msb.minus.set_count.iter().sum::<u64>()
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ideal_geom() -> HicGeometry {
+        HicGeometry { stochastic_rounding: false, ..Default::default() }
+    }
+
+    fn pattern(k: usize, n: usize) -> Vec<f32> {
+        (0..k * n)
+            .map(|i| (((i * 3) % 13) as f32 - 6.0) / 8.0)
+            .collect()
+    }
+
+    #[test]
+    fn scatter_gather_roundtrip() {
+        let g = CrossbarGrid::new(
+            PcmParams::ideal(), ideal_geom(), 10, 7,
+            TilingPolicy { tile_rows: 4, tile_cols: 3 },
+            DacSpec::default(), AdcSpec::default(), 9);
+        assert_eq!(g.tile_count(), 3 * 3);
+        let src = pattern(10, 7);
+        let subs = g.scatter(&src);
+        let mut back = vec![0.0f32; 10 * 7];
+        g.gather(&subs, &mut back);
+        assert_eq!(src, back);
+    }
+
+    #[test]
+    fn grid_decode_matches_programmed_pattern() {
+        let pool = WorkerPool::serial();
+        let mut g = CrossbarGrid::new(
+            PcmParams::ideal(), ideal_geom(), 9, 5,
+            TilingPolicy { tile_rows: 4, tile_cols: 2 },
+            DacSpec::default(), AdcSpec::default(), 11);
+        let w = pattern(9, 5);
+        g.program_init(&w, 0.0, 0, &pool);
+        let mut got = vec![0.0f32; 9 * 5];
+        g.drift_into(0.0, &pool, &mut got);
+        // Ideal linear devices: programmed to within one pulse quantum
+        // through the conductance map.
+        for (a, b) in w.iter().zip(&got) {
+            assert!((a - b).abs() <= 0.13, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn vmm_worker_invariant_smoke() {
+        // Full noisy params: the parallel schedule must not change a bit.
+        let params = PcmParams::default();
+        let g = {
+            let mut g = CrossbarGrid::new(
+                params, HicGeometry::default(), 12, 9,
+                TilingPolicy { tile_rows: 5, tile_cols: 4 },
+                DacSpec::default(), AdcSpec::default(), 21);
+            g.program_init(&pattern(12, 9), 0.0, 7, &WorkerPool::serial());
+            g
+        };
+        let m = 3;
+        let x: Vec<f32> =
+            (0..m * 12).map(|i| ((i % 9) as f32 - 4.0) / 4.0).collect();
+        let y1 = g.vmm_batch(&x, m, 2.0, 5, &WorkerPool::new(1));
+        let y2 = g.vmm_batch(&x, m, 2.0, 5, &WorkerPool::new(4));
+        assert_eq!(y1, y2);
+        // A different round draws different noise.
+        let y3 = g.vmm_batch(&x, m, 2.0, 6, &WorkerPool::new(1));
+        assert_ne!(y1, y3);
+    }
+
+    #[test]
+    fn total_set_pulses_counts_programming() {
+        let pool = WorkerPool::serial();
+        let mut g = CrossbarGrid::new(
+            PcmParams::ideal(), ideal_geom(), 4, 4,
+            TilingPolicy { tile_rows: 2, tile_cols: 2 },
+            DacSpec::default(), AdcSpec::default(), 3);
+        assert_eq!(g.total_set_pulses(), 0);
+        let dw = vec![0.25f32; 16];
+        let pulses = g.program_increments(&dw, 0.0, 1, &pool);
+        assert!(pulses > 0);
+        assert_eq!(pulses, g.total_set_pulses());
+        let mut ledger = EnduranceLedger::new();
+        g.record_endurance(&mut ledger);
+        assert_eq!(ledger.msb.count as usize, 2 * 16);
+    }
+}

@@ -78,6 +78,29 @@ impl LayerMapping {
         self.tiles.len()
     }
 
+    /// Number of tile rows in the grid (`⌈k / tile_rows⌉`).
+    pub fn grid_rows(&self) -> usize {
+        self.k.div_ceil(self.policy.tile_rows)
+    }
+
+    /// Number of tile columns in the grid (`⌈n / tile_cols⌉`).
+    pub fn grid_cols(&self) -> usize {
+        self.n.div_ceil(self.policy.tile_cols)
+    }
+
+    /// Row-major index of grid tile `(gr, gc)` into [`LayerMapping::tiles`].
+    #[inline]
+    pub fn tile_index(&self, gr: usize, gc: usize) -> usize {
+        debug_assert!(gr < self.grid_rows() && gc < self.grid_cols());
+        gr * self.grid_cols() + gc
+    }
+
+    /// Top-left logical-matrix coordinate covered by a tile.
+    #[inline]
+    pub fn origin(&self, t: &TileCoord) -> (usize, usize) {
+        (t.row * self.policy.tile_rows, t.col * self.policy.tile_cols)
+    }
+
     /// Devices provisioned (2 per weight cell — differential pairs).
     pub fn devices_provisioned(&self) -> usize {
         2 * self.tile_count() * self.policy.tile_rows * self.policy.tile_cols
@@ -153,6 +176,29 @@ mod tests {
             // no tile exceeds its physical size
             assert!(m.tiles.iter().all(
                 |t| t.used_rows <= 100 && t.used_cols <= 60));
+        }
+    }
+
+    #[test]
+    fn grid_dims_and_origins() {
+        let m = LayerMapping::new("t", 130, 10, TilingPolicy::default());
+        assert_eq!((m.grid_rows(), m.grid_cols()), (2, 1));
+        assert_eq!(m.tile_index(1, 0), 1);
+        assert_eq!(m.origin(&m.tiles[0]), (0, 0));
+        assert_eq!(m.origin(&m.tiles[1]), (128, 0));
+        // Row-major enumeration matches (row, col) grid coordinates,
+        // and every origin + extent stays inside the logical matrix.
+        let m = LayerMapping::new("t", 65, 130, TilingPolicy {
+            tile_rows: 32, tile_cols: 48 });
+        assert_eq!((m.grid_rows(), m.grid_cols()), (3, 3));
+        for gr in 0..m.grid_rows() {
+            for gc in 0..m.grid_cols() {
+                let t = &m.tiles[m.tile_index(gr, gc)];
+                assert_eq!((t.row, t.col), (gr, gc));
+                let (r0, c0) = m.origin(t);
+                assert!(r0 + t.used_rows <= 65);
+                assert!(c0 + t.used_cols <= 130);
+            }
         }
     }
 

@@ -11,18 +11,25 @@
 //! * [`tile`] — a functional tile: VMM through the planar PCM device
 //!   planes with quantized I/O (the host-side oracle of the L1 kernel).
 //!   Batched reads evaluate drift once per invocation into a reusable
-//!   [`tile::TileScratch`] and draw fresh per-sample read noise — no
-//!   per-sample allocation or re-read of the array.
+//!   [`tile::TileScratch`] and draw fresh per-sample read noise (batched
+//!   Box–Muller fill) — no per-sample allocation or re-read of the array.
+//! * [`grid`] — the sharded multi-tile engine: one logical weight matrix
+//!   on an R×C grid of tiles, kernels run tile- / column-strip-parallel
+//!   on a `util::pool::WorkerPool` with counter-based per-shard RNG
+//!   streams (bitwise identical for any worker count; bit-compatible
+//!   with the serial single-tile path in the noise-free domain)
 //! * [`energy`] — energy / latency / area estimator with published-order
 //!   constants (ISAAC-class periphery), used for the architecture
 //!   comparisons in DESIGN.md and the `crossbar_explorer` example
 
 pub mod energy;
+pub mod grid;
 pub mod mapper;
 pub mod quant;
 pub mod tile;
 
 pub use energy::{EnergyModel, EnergyReport};
+pub use grid::{CrossbarGrid, GridScratch};
 pub use mapper::{LayerMapping, TileCoord, TilingPolicy};
 pub use quant::{AdcSpec, DacSpec};
 pub use tile::{CrossbarTile, TileScratch};

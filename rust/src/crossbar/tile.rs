@@ -17,10 +17,18 @@
 //! the drift power law **once per batch** into a [`TileScratch`] (drift
 //! does not advance within one invocation — `t_now` is fixed), then per
 //! sample draws a fresh stochastic read of the whole array (G+ noise
-//! plane first, then G−, the scalar-reference RNG order) and runs a
-//! row-major inner loop over flat slices.  No allocation per sample;
-//! callers that keep a `TileScratch` across invocations
-//! (`vmm_batch_into`) allocate nothing per batch either.
+//! plane first, then G−) and runs a row-major inner loop over flat
+//! slices.  No allocation per sample; callers that keep a `TileScratch`
+//! across invocations (`vmm_batch_into`) allocate nothing per batch
+//! either.
+//!
+//! Read-noise RNG contract: each noisy plane read fills the scratch
+//! noise buffer with the **batched Box–Muller** stream
+//! ([`Pcg64::fill_gaussian`] — `2·⌈len/2⌉` draws per plane per sample),
+//! not the scalar `normal()` sequence.  The scalar-reference stream
+//! survives unchanged on `PcmArray::read_into` /
+//! `DifferentialPair::read_weights_into`, where the SoA-equivalence
+//! property suite pins it.
 
 use crate::hic::weight::HicWeight;
 use crate::util::rng::Pcg64;
@@ -34,12 +42,13 @@ pub struct CrossbarTile {
 }
 
 /// Reusable per-tile read buffers: drifted conductance planes (valid for
-/// one `t_now`), the per-sample effective-weight read and the quantized
-/// input row.
+/// one `t_now`), the per-sample effective-weight read, the batched
+/// read-noise deviates and the quantized input row.
 pub struct TileScratch {
     gp: Vec<f32>,
     gm: Vec<f32>,
     w: Vec<f32>,
+    noise: Vec<f32>,
     xq: Vec<f32>,
 }
 
@@ -63,6 +72,7 @@ impl CrossbarTile {
             gp: vec![0.0; n],
             gm: vec![0.0; n],
             w: vec![0.0; n],
+            noise: vec![0.0; n],
             xq: vec![0.0; self.rows()],
         }
     }
@@ -113,12 +123,18 @@ impl CrossbarTile {
         let scale = msb.g_to_w(1.0);
 
         for s in 0..m {
-            // Fresh stochastic read of the whole array for this sample
-            // (G+ noise plane first, then G− — the scalar draw order).
+            // Fresh stochastic read of the whole array for this sample:
+            // G+ noise plane first, then G−, each filled with the
+            // batched Box–Muller stream.
             if noise_p {
-                for (w, &gp) in scratch.w.iter_mut().zip(&scratch.gp) {
-                    *w = (gp + sigma_p * rng.normal() as f32)
-                        .clamp(0.0, 1.0);
+                rng.fill_gaussian(&mut scratch.noise, 0.0, 1.0);
+                for ((w, &gp), &z) in scratch
+                    .w
+                    .iter_mut()
+                    .zip(&scratch.gp)
+                    .zip(&scratch.noise)
+                {
+                    *w = (gp + sigma_p * z).clamp(0.0, 1.0);
                 }
             } else {
                 for (w, &gp) in scratch.w.iter_mut().zip(&scratch.gp) {
@@ -126,10 +142,14 @@ impl CrossbarTile {
                 }
             }
             if noise_m {
-                for (w, &gm) in scratch.w.iter_mut().zip(&scratch.gm) {
-                    *w = (*w
-                        - (gm + sigma_m * rng.normal() as f32)
-                            .clamp(0.0, 1.0))
+                rng.fill_gaussian(&mut scratch.noise, 0.0, 1.0);
+                for ((w, &gm), &z) in scratch
+                    .w
+                    .iter_mut()
+                    .zip(&scratch.gm)
+                    .zip(&scratch.noise)
+                {
+                    *w = (*w - (gm + sigma_m * z).clamp(0.0, 1.0))
                         * scale;
                 }
             } else {

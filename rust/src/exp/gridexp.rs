@@ -1,0 +1,325 @@
+//! Grid-routed figure sweeps (device level, no artifacts needed).
+//!
+//! The artifact-backed fig3–fig6 drivers need AOT-lowered programs; these
+//! variants route the same experiment *shapes* through the sharded
+//! [`crate::crossbar::CrossbarGrid`] device model via
+//! [`GridTrainer`]: train an analog linear-regression task under the
+//! figure's PCM-variant parameters and report device-level metrics.
+//!
+//! Output is a **byte-stable metric JSON** document (`util::json`
+//! serialization is deterministic: sorted keys, integer fast path; all
+//! float metrics are quantized to integer micro-units before they enter
+//! the document).  Determinism contract: a document depends only on
+//! `(GridExpOptions, variant set)` — never on the worker count — so the
+//! golden regression suite (`rust/tests/golden_gridexp.rs`) can pin
+//! experiment outputs across refactors, and the CI worker matrix
+//! (`HIC_WORKERS=1` / `4`) proves the routing is schedule-independent.
+//!
+//! Two deliberate modeling choices keep the sweeps reproducible:
+//! `drift_nu_sigma = 0` (per-device ν spread off, so streams do not
+//! depend on device enumeration) and refresh disabled (its saturation
+//! reads draw from the scalar libm Box–Muller path; refresh coverage
+//! lives in the property suites instead).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::gridtrainer::{GridTrainer, GridTrainerOptions,
+                                      EVAL_ROUND_BASE};
+use crate::coordinator::schedule::LrSchedule;
+use crate::crossbar::TilingPolicy;
+use crate::hic::weight::HicGeometry;
+use crate::pcm::device::PcmParams;
+use crate::util::json::Json;
+use crate::util::pool::WorkerPool;
+use crate::log_info;
+
+use super::ensure_out_dir;
+
+/// The fig3 variant subset whose device math is fully portable
+/// (no libm in any consumed path), used by the golden byte-regression
+/// tests; the CLI sweeps all of `super::fig3::VARIANTS`.
+pub const GOLDEN_FIG3_VARIANTS: [&str; 3] =
+    ["linear", "linear_read", "linear_drift"];
+
+/// Common parameters of the grid-routed sweeps.
+#[derive(Clone, Debug)]
+pub struct GridExpOptions {
+    /// logical weight matrix rows (layer fan-in)
+    pub k: usize,
+    /// logical weight matrix cols (layer fan-out)
+    pub n: usize,
+    /// square physical tile size
+    pub tile: usize,
+    pub steps: usize,
+    pub batch: usize,
+    pub seed: u64,
+    /// worker threads (0 = `HIC_WORKERS` / machine default)
+    pub workers: usize,
+    pub out_dir: PathBuf,
+}
+
+impl Default for GridExpOptions {
+    fn default() -> Self {
+        GridExpOptions {
+            k: 64,
+            n: 32,
+            tile: 16,
+            steps: 60,
+            batch: 8,
+            seed: 42,
+            workers: 0,
+            out_dir: PathBuf::from("results"),
+        }
+    }
+}
+
+impl GridExpOptions {
+    pub fn pool(&self) -> WorkerPool {
+        if self.workers == 0 {
+            WorkerPool::from_env()
+        } else {
+            WorkerPool::new(self.workers)
+        }
+    }
+
+    fn policy(&self) -> TilingPolicy {
+        TilingPolicy { tile_rows: self.tile, tile_cols: self.tile }
+    }
+
+    fn trainer_options(&self) -> GridTrainerOptions {
+        GridTrainerOptions {
+            seed: self.seed,
+            lr: LrSchedule::constant(0.5),
+            refresh_every: 0,
+            batch: self.batch,
+            ..Default::default()
+        }
+    }
+
+    /// Deterministic regression target `W*` (exact small rationals).
+    fn target(&self) -> Vec<f32> {
+        (0..self.k * self.n)
+            .map(|i| (((i * 3 + 5) % 13) as f32 - 6.0) / 8.0)
+            .collect()
+    }
+
+    fn trainer(&self, params: PcmParams) -> GridTrainer {
+        let geom = HicGeometry::default();
+        GridTrainer::new(params, geom, self.k, self.n, self.policy(),
+                         self.target(), self.pool(),
+                         self.trainer_options())
+    }
+
+    /// Config echo shared by every document (workers deliberately
+    /// excluded: documents must be worker-count invariant).
+    fn echo(&self, experiment: &str) -> Vec<(&'static str, Json)> {
+        vec![
+            ("experiment", Json::str(experiment)),
+            ("k", Json::Num(self.k as f64)),
+            ("n", Json::Num(self.n as f64)),
+            ("tile", Json::Num(self.tile as f64)),
+            ("steps", Json::Num(self.steps as f64)),
+            ("batch", Json::Num(self.batch as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+        ]
+    }
+}
+
+/// PCM parameters of one fig3 ablation variant (paper Fig. 3 bar set),
+/// with the gridexp determinism choices applied (ν spread off).
+pub fn variant_params(tag: &str) -> Result<PcmParams> {
+    let mut p = PcmParams {
+        nonlinear: false,
+        write_noise: false,
+        read_noise: false,
+        drift: false,
+        drift_nu_sigma: 0.0,
+        ..Default::default()
+    };
+    match tag {
+        "linear" => {}
+        "linear_write" => p.write_noise = true,
+        "linear_read" => p.read_noise = true,
+        "linear_drift" => p.drift = true,
+        "nonlinear" => p.nonlinear = true,
+        "nonlinear_write" => {
+            p.nonlinear = true;
+            p.write_noise = true;
+        }
+        "nonlinear_read" => {
+            p.nonlinear = true;
+            p.read_noise = true;
+        }
+        "full" => {
+            p.nonlinear = true;
+            p.write_noise = true;
+            p.read_noise = true;
+            p.drift = true;
+        }
+        other => bail!("unknown fig3 variant '{other}'"),
+    }
+    Ok(p)
+}
+
+/// Quantize a float metric to integer micro-units (round half away from
+/// zero, like `f64::round`) — every number in the documents is integral,
+/// which keeps serialization byte-stable across formatters.
+fn u6(v: f64) -> Json {
+    Json::Num((v * 1e6).round())
+}
+
+fn u3(v: f64) -> Json {
+    Json::Num((v * 1e3).round())
+}
+
+/// FIG3 (grid-routed): PCM non-ideality ablation on the device model.
+pub fn run_fig3(opts: &GridExpOptions, variants: &[&str]) -> Result<Json> {
+    let mut vmap = std::collections::BTreeMap::new();
+    for &tag in variants {
+        let params = variant_params(tag)?;
+        let mut t = opts.trainer(params);
+        t.train_steps(opts.steps);
+        let t_final = t.clock.now_f32();
+        let final_mse = *t.losses.last().unwrap_or(&f64::NAN);
+        let eval_mse = t.eval_mse(t_final, EVAL_ROUND_BASE, false);
+        let werr = t.weight_error(t_final);
+        log_info!(
+            "fig3-grid {tag}: train mse {final_mse:.4}, eval mse \
+             {eval_mse:.4}, weight err {werr:.4}");
+        vmap.insert(tag.to_string(), Json::obj(vec![
+            ("final_mse_u6", u6(final_mse)),
+            ("eval_mse_u6", u6(eval_mse)),
+            ("weight_err_u6", u6(werr)),
+            ("overflows", Json::Num(t.overflows as f64)),
+            ("set_pulses", Json::Num(t.grid.total_set_pulses() as f64)),
+        ]));
+    }
+    let mut doc = opts.echo("fig3_grid");
+    doc.push(("variants", Json::Obj(vmap)));
+    Ok(Json::obj(doc))
+}
+
+/// FIG5 (grid-routed): drifted inference MSE vs probe time, with and
+/// without global-gain drift compensation (the device-level AdaBS
+/// stand-in).  Device model: linear, read noise on, drift on.
+pub fn run_fig5(opts: &GridExpOptions) -> Result<Json> {
+    let params = PcmParams {
+        nonlinear: false,
+        write_noise: false,
+        read_noise: true,
+        drift: true,
+        drift_nu_sigma: 0.0,
+        ..Default::default()
+    };
+    let mut t = opts.trainer(params);
+    t.train_steps(opts.steps);
+    let trained_mse = *t.losses.last().unwrap_or(&f64::NAN);
+    let mut probes = Vec::new();
+    for (i, &probe_t) in super::fig5::probe_times().iter().enumerate() {
+        let round = EVAL_ROUND_BASE + i as u64;
+        // One forward pass per probe: both scores on the same
+        // read-noise realization (a clean paired comparison).
+        let (nocomp, comp) = t.eval_mse_pair(probe_t as f32, round);
+        log_info!("fig5-grid t={probe_t:.0e}s: nocomp {nocomp:.4}, \
+                   gain-comp {comp:.4}");
+        probes.push(Json::obj(vec![
+            ("t_seconds", Json::Num(probe_t)),
+            ("mse_nocomp_u6", u6(nocomp)),
+            ("mse_adabs_u6", u6(comp)),
+        ]));
+    }
+    let mut doc = opts.echo("fig5_grid");
+    doc.push(("trained_mse_u6", u6(trained_mse)));
+    doc.push(("probes", Json::Arr(probes)));
+    Ok(Json::obj(doc))
+}
+
+/// FIG6 (grid-routed): write–erase-cycle accounting over one training
+/// run on the full device model.
+pub fn run_fig6(opts: &GridExpOptions) -> Result<Json> {
+    let mut t = opts.trainer(variant_params("full")?);
+    t.train_steps(opts.steps);
+    let ledger = t.endurance();
+    log_info!("fig6-grid: {}", ledger.summary());
+    let mut doc = opts.echo("fig6_grid");
+    doc.push(("msb_count", Json::Num(ledger.msb.count as f64)));
+    doc.push(("msb_max", Json::Num(ledger.msb.max as f64)));
+    doc.push(("msb_mean_u3", u3(ledger.msb.mean())));
+    doc.push(("lsb_count", Json::Num(ledger.lsb.count as f64)));
+    doc.push(("lsb_max", Json::Num(ledger.lsb.max as f64)));
+    doc.push(("overflows", Json::Num(t.overflows as f64)));
+    doc.push(("set_pulses",
+              Json::Num(t.grid.total_set_pulses() as f64)));
+    Ok(Json::obj(doc))
+}
+
+/// Write a metric document under the experiment output directory.
+pub fn write_json(dir: &Path, name: &str, doc: &Json) -> Result<PathBuf> {
+    ensure_out_dir(dir)?;
+    let path = dir.join(name);
+    std::fs::write(&path, doc.to_string())
+        .with_context(|| format!("writing {}", path.display()))?;
+    log_info!("wrote {}", path.display());
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> GridExpOptions {
+        GridExpOptions {
+            k: 6,
+            n: 4,
+            tile: 3,
+            steps: 4,
+            batch: 3,
+            seed: 5,
+            workers: 1,
+            out_dir: PathBuf::from("/tmp"),
+        }
+    }
+
+    #[test]
+    fn fig3_document_shape() {
+        let doc = run_fig3(&tiny(), &["linear", "full"]).unwrap();
+        assert_eq!(doc.get("experiment").unwrap().as_str().unwrap(),
+                   "fig3_grid");
+        let variants = doc.get("variants").unwrap().as_obj().unwrap();
+        assert_eq!(variants.len(), 2);
+        for v in variants.values() {
+            for key in ["final_mse_u6", "eval_mse_u6", "weight_err_u6",
+                        "overflows", "set_pulses"] {
+                let num = v.get(key).unwrap().as_f64().unwrap();
+                assert!(num.is_finite() && num.fract() == 0.0,
+                        "{key} = {num} not integral");
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_variant_is_an_error() {
+        assert!(variant_params("linear").is_ok());
+        assert!(variant_params("warp_drive").is_err());
+    }
+
+    #[test]
+    fn fig5_probes_cover_the_time_axis() {
+        let doc = run_fig5(&tiny()).unwrap();
+        let probes = doc.get("probes").unwrap().as_arr().unwrap();
+        assert_eq!(probes.len(), super::super::fig5::probe_times().len());
+        let t0 = probes[0].get("t_seconds").unwrap().as_f64().unwrap();
+        assert_eq!(t0, 1e2);
+    }
+
+    #[test]
+    fn fig6_ledger_counts_every_device() {
+        let o = tiny();
+        let doc = run_fig6(&o).unwrap();
+        let msb = doc.get("msb_count").unwrap().as_f64().unwrap();
+        // 2 devices per weight cell, G+ and G− planes both recorded.
+        assert_eq!(msb as usize, 2 * o.k * o.n);
+    }
+}

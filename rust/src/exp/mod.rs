@@ -12,11 +12,17 @@
 //! | [`fig4`] | Fig. 4 | HIC above baseline at matched model size |
 //! | [`fig5`] | Fig. 5 | drift knee at ~1e6 s; AdaBS recovers it |
 //! | [`fig6`] | Fig. 6 | WE cycles: MSB ≪ LSB ≪ 1e8 endurance |
+//!
+//! [`gridexp`] routes the fig3/fig5/fig6 shapes through the sharded
+//! crossbar grid device model instead of the artifacts (runs anywhere
+//! the crate builds; byte-stable metric JSON pinned by the golden
+//! regression suite).  The CLI exposes it as `--device-grid`.
 
 pub mod fig3;
 pub mod fig4;
 pub mod fig5;
 pub mod fig6;
+pub mod gridexp;
 
 use std::path::{Path, PathBuf};
 

@@ -115,6 +115,12 @@ impl HicWeight {
     /// One training update over the planar state: quantize `-lr * grad`
     /// into the accumulator plane, program MSB on overflow.  Returns the
     /// number of overflow events.
+    ///
+    /// RNG contract: one `uniform()` dither per element **only when
+    /// stochastic rounding is on** (deterministic rounding consumes no
+    /// draws), plus the write-noise draws of any overflow programming —
+    /// so a grid of tiles running this kernel on per-tile streams stays
+    /// schedule-independent.
     pub fn apply_update(&mut self, grad: &[f32], lr: f32, t_now: f32,
                         rng: &mut Pcg64) -> usize {
         assert_eq!(grad.len(), self.len());
@@ -125,8 +131,10 @@ impl HicWeight {
         let mut overflows = 0usize;
         for (i, &gi) in grad.iter().enumerate() {
             let v = -lr * gi / lsb_step;
+            let dither =
+                if stochastic { rng.uniform() as f32 } else { 0.0 };
             let delta = FixedPointAccumulator::quantize_counts(
-                v, stochastic, rng.uniform() as f32, half);
+                v, stochastic, dither, half);
             let out = self.acc.update(i, delta);
             self.lsb_flips[i] += out.flips as u64;
             self.lsb_resets[i] += out.resets as u64;

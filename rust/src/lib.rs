@@ -24,11 +24,17 @@
 //! `reset_where`); [`hic::HicWeight`] composes two plane sets (the MSB
 //! differential pair) with a planar LSB accumulator register file;
 //! [`crossbar::CrossbarTile`] runs batched VMMs over the planes with a
-//! once-per-batch drift evaluation and fresh per-sample read noise; the
+//! once-per-batch drift evaluation and fresh per-sample read noise
+//! (batched Box–Muller fill); [`crossbar::CrossbarGrid`] shards one
+//! logical weight matrix across an R×C tile grid and runs the kernels
+//! tile-parallel on a [`util::pool::WorkerPool`] with counter-based
+//! per-shard RNG streams (bitwise identical for any worker count); the
 //! [`coordinator`] and [`exp`] analyses consume the same planes for
 //! endurance/refresh accounting.  The scalar [`pcm::PcmDevice`] model
 //! remains the statistical reference path, pinned against the planar
-//! kernels by the SoA-equivalence property suite.
+//! kernels by the SoA-equivalence property suite, and the grid is pinned
+//! against the serial single-tile path by the parallel-equivalence
+//! suite.
 
 pub mod bench;
 pub mod coordinator;

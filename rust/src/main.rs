@@ -68,6 +68,8 @@ fn print_usage() {
          \x20 fig5       drift + AdaBS study            (paper Fig. 5)\n\
          \x20 fig6       write–erase cycle histograms   (paper Fig. 6)\n\
          \x20 info       inspect an artifact set\n\n\
+         fig3/fig5/fig6 accept --device-grid to run on the sharded\n\
+         crossbar grid device model (no artifacts needed).\n\
          run any subcommand with --help for its options"
     );
 }
@@ -83,6 +85,48 @@ fn common_exp_spec(name: &'static str, about: &'static str) -> Spec {
              "synthetic dataset size vs CIFAR-10 (1.0 = 50k)")
         .opt("out", "results", "output directory for CSVs")
         .flag("verbose", "debug logging")
+}
+
+/// Grid-routing options shared by the fig3/fig5/fig6 subcommands: with
+/// `--device-grid` the sweep runs on the sharded crossbar device model
+/// (no artifacts/PJRT needed) and writes `<out>/figN_grid.json`.
+fn with_grid_opts(spec: Spec) -> Spec {
+    spec.flag("device-grid",
+              "route the sweep through the crossbar grid device model")
+        .opt("grid-k", "64", "[device-grid] logical matrix rows")
+        .opt("grid-n", "32", "[device-grid] logical matrix cols")
+        .opt("grid-tile", "16", "[device-grid] physical tile size")
+        .opt("grid-steps", "60", "[device-grid] training steps")
+        .opt("grid-batch", "8", "[device-grid] batch size")
+        .opt("workers", "0",
+             "[device-grid] worker threads (0 = HIC_WORKERS/auto)")
+}
+
+fn parse_grid_opts(m: &hic_train::util::cli::Matches)
+                   -> Result<hic_train::exp::gridexp::GridExpOptions> {
+    if m.flag("verbose") {
+        set_level(Level::Debug);
+    }
+    for key in ["grid-k", "grid-n", "grid-tile", "grid-batch"] {
+        if m.usize(key)? == 0 {
+            bail!("--{key} must be >= 1");
+        }
+    }
+    Ok(hic_train::exp::gridexp::GridExpOptions {
+        k: m.usize("grid-k")?,
+        n: m.usize("grid-n")?,
+        tile: m.usize("grid-tile")?,
+        steps: m.usize("grid-steps")?,
+        batch: m.usize("grid-batch")?,
+        seed: m
+            .list("seeds")
+            .first()
+            .map(|s| s.parse::<u64>())
+            .transpose()?
+            .unwrap_or(42),
+        workers: m.usize("workers")?,
+        out_dir: PathBuf::from(m.str("out")?),
+    })
 }
 
 fn parse_exp(m: &hic_train::util::cli::Matches) -> Result<ExpOptions> {
@@ -186,9 +230,16 @@ fn cmd_baseline(args: &[String]) -> Result<()> {
 }
 
 fn cmd_fig3(args: &[String]) -> Result<()> {
-    let spec = common_exp_spec(
-        "fig3", "PCM non-ideality ablation (paper Fig. 3)");
+    let spec = with_grid_opts(common_exp_spec(
+        "fig3", "PCM non-ideality ablation (paper Fig. 3)"));
     let m = spec.parse(args)?;
+    if m.flag("device-grid") {
+        let gopts = parse_grid_opts(&m)?;
+        let variants: Vec<&str> = exp::fig3::VARIANTS.to_vec();
+        let doc = exp::gridexp::run_fig3(&gopts, &variants)?;
+        exp::gridexp::write_json(&gopts.out_dir, "fig3_grid.json", &doc)?;
+        return Ok(());
+    }
     let opts = parse_exp(&m)?;
     exp::fig3::run(&opts)?;
     Ok(())
@@ -204,20 +255,32 @@ fn cmd_fig4(args: &[String]) -> Result<()> {
 }
 
 fn cmd_fig5(args: &[String]) -> Result<()> {
-    let spec = common_exp_spec(
-        "fig5", "drift + AdaBS inference study (paper Fig. 5)")
+    let spec = with_grid_opts(common_exp_spec(
+        "fig5", "drift + AdaBS inference study (paper Fig. 5)"))
         .opt("config", "fig5_drift", "artifact config to train");
     let m = spec.parse(args)?;
+    if m.flag("device-grid") {
+        let gopts = parse_grid_opts(&m)?;
+        let doc = exp::gridexp::run_fig5(&gopts)?;
+        exp::gridexp::write_json(&gopts.out_dir, "fig5_grid.json", &doc)?;
+        return Ok(());
+    }
     let opts = parse_exp(&m)?;
     exp::fig5::run(&opts, m.str("config")?)?;
     Ok(())
 }
 
 fn cmd_fig6(args: &[String]) -> Result<()> {
-    let spec = common_exp_spec(
-        "fig6", "write–erase cycle histograms (paper Fig. 6)")
+    let spec = with_grid_opts(common_exp_spec(
+        "fig6", "write–erase cycle histograms (paper Fig. 6)"))
         .opt("config", "core", "artifact config to train");
     let m = spec.parse(args)?;
+    if m.flag("device-grid") {
+        let gopts = parse_grid_opts(&m)?;
+        let doc = exp::gridexp::run_fig6(&gopts)?;
+        exp::gridexp::write_json(&gopts.out_dir, "fig6_grid.json", &doc)?;
+        return Ok(());
+    }
     let opts = parse_exp(&m)?;
     exp::fig6::run(&opts, m.str("config")?)?;
     Ok(())

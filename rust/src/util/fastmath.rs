@@ -65,6 +65,55 @@ pub fn pow_fast(x: f32, y: f32) -> f32 {
     exp2_fast(y * log2_fast(x))
 }
 
+/// `(sin, cos)` of `2π·t` for a turn fraction `t ∈ [0, 1)` — the angular
+/// half of the batched Box–Muller transform (`util::rng::fill_gaussian`).
+///
+/// The turn is split into a quadrant `q = ⌊4t⌋` and a fractional angle
+/// `f ∈ [0, π/2)`; `sin f`/`cos f` come from degree-11/12 Taylor
+/// polynomials (truncation ≤ 6e-8 on the quadrant, f32 rounding
+/// dominates) and the quadrant maps back by sign/swap.  Branch-light and
+/// call-free, so the noise-fill loops stay vectorizable.
+#[inline]
+pub fn sincos_turns_fast(t: f32) -> (f32, f32) {
+    debug_assert!((0.0..1.0).contains(&t), "sincos_turns_fast domain: {t}");
+    let x = t * 4.0;
+    let q = x as i32; // 0..=3 for t ∈ [0, 1)
+    let f = (x - q as f32) * std::f32::consts::FRAC_PI_2;
+    let s = sin_quadrant(f);
+    let c = cos_quadrant(f);
+    match q {
+        0 => (s, c),
+        1 => (c, -s),
+        2 => (-s, -c),
+        _ => (-c, s),
+    }
+}
+
+/// `sin x` for `x ∈ [0, π/2)` (Taylor, degree 11).
+#[inline]
+fn sin_quadrant(x: f32) -> f32 {
+    let x2 = x * x;
+    x * (1.0
+        + x2 * (-1.0 / 6.0
+            + x2 * (1.0 / 120.0
+                + x2 * (-1.0 / 5040.0
+                    + x2 * (1.0 / 362_880.0
+                        + x2 * (-1.0 / 39_916_800.0))))))
+}
+
+/// `cos x` for `x ∈ [0, π/2)` (Taylor, degree 12).
+#[inline]
+fn cos_quadrant(x: f32) -> f32 {
+    let x2 = x * x;
+    1.0 + x2
+        * (-0.5
+            + x2 * (1.0 / 24.0
+                + x2 * (-1.0 / 720.0
+                    + x2 * (1.0 / 40_320.0
+                        + x2 * (-1.0 / 3_628_800.0
+                            + x2 * (1.0 / 479_001_600.0))))))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -114,6 +163,35 @@ mod tests {
                 assert!(rel < 1e-5,
                         "pow({base}, {}): {got} vs {want}", -nu);
             }
+        }
+    }
+
+    #[test]
+    fn sincos_turns_matches_std() {
+        for i in 0..40_000 {
+            let t = i as f32 / 40_000.0;
+            let (s, c) = sincos_turns_fast(t);
+            let a = 2.0 * std::f64::consts::PI * t as f64;
+            assert!((s as f64 - a.sin()).abs() < 2e-6,
+                    "sin(2π·{t}): {s} vs {}", a.sin());
+            assert!((c as f64 - a.cos()).abs() < 2e-6,
+                    "cos(2π·{t}): {c} vs {}", a.cos());
+        }
+        // Exact quadrant anchors.
+        assert_eq!(sincos_turns_fast(0.0), (0.0, 1.0));
+        let (s, c) = sincos_turns_fast(0.25);
+        assert_eq!((s, c), (1.0, -0.0));
+        let (s, c) = sincos_turns_fast(0.5);
+        assert_eq!((s, c), (-0.0, -1.0));
+    }
+
+    #[test]
+    fn sincos_turns_unit_circle() {
+        for i in 0..2_000 {
+            let t = (i as f32 + 0.31) / 2_000.0;
+            let (s, c) = sincos_turns_fast(t);
+            let norm = s * s + c * c;
+            assert!((norm - 1.0).abs() < 1e-5, "|sincos({t})|² = {norm}");
         }
     }
 

@@ -9,12 +9,16 @@
 //! * [`cli`] — declarative command-line parser for the `hic-train` binary
 //! * [`csv`] — CSV emitter for experiment series
 //! * [`logging`] — leveled stderr logger with timestamps
-//! * [`fastmath`] — vectorization-friendly `exp2`/`log2`/`pow` used by
-//!   the planar PCM drift kernels
+//! * [`fastmath`] — vectorization-friendly `exp2`/`log2`/`pow`/`sincos`
+//!   used by the planar PCM drift kernels and the batched Box–Muller
+//!   noise fill
+//! * [`pool`] — scoped-thread worker pool for the deterministic sharded
+//!   grid kernels (`HIC_WORKERS` sizing, bitwise worker-count invariance)
 
 pub mod cli;
 pub mod csv;
 pub mod fastmath;
 pub mod json;
 pub mod logging;
+pub mod pool;
 pub mod rng;

@@ -1,0 +1,157 @@
+//! Scoped-thread worker pool for deterministic sharded kernels.
+//!
+//! The multi-tile crossbar engine (`crossbar::grid`) splits its kernels
+//! into **shards** — units of work that own disjoint state and, when they
+//! need randomness, their own counter-based RNG stream
+//! (`Pcg64::new(seed, (op << 32) | shard_id)`).  Because a shard's output
+//! depends only on its inputs and its own stream — never on which worker
+//! runs it or in what order — results are **bitwise identical for any
+//! worker count**, which is what lets the parallel-equivalence property
+//! suite pin the parallel path against the serial one.
+//!
+//! The pool itself is deliberately small: `std::thread::scope` workers
+//! pulling shard indices off an atomic counter (work-stealing by index).
+//! Shards are handed out as `&mut S` slots through per-shard mutexes —
+//! each mutex is locked exactly once, so there is no contention, only a
+//! borrow-checker-friendly way to move `&mut` access across threads.
+//! No dependencies beyond `std` (the tree builds offline).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// A fixed-width worker pool.  Cheap to construct (threads are spawned
+/// per [`WorkerPool::run`] call and joined before it returns, so no
+/// lifecycle management or channel plumbing).
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerPool {
+    workers: usize,
+}
+
+impl WorkerPool {
+    /// Pool with exactly `workers` workers (clamped to at least 1).
+    pub fn new(workers: usize) -> Self {
+        WorkerPool { workers: workers.max(1) }
+    }
+
+    /// Pool sized from the environment: `HIC_WORKERS` if set (the CI
+    /// test matrix runs the suite at 1 and 4), else the machine's
+    /// available parallelism, capped at 16.
+    pub fn from_env() -> Self {
+        let workers = std::env::var("HIC_WORKERS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&w| w > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1)
+                    .min(16)
+            });
+        WorkerPool::new(workers)
+    }
+
+    /// Serial pool (the reference execution schedule).
+    pub fn serial() -> Self {
+        WorkerPool::new(1)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run `f(shard_index, &mut shard)` for every shard, distributing
+    /// shards across up to `workers` threads.  `f` must keep each
+    /// shard's work independent of scheduling (own state, own RNG
+    /// stream) — that is the determinism contract the grid kernels and
+    /// their property tests rely on.
+    ///
+    /// With one worker (or ≤ 1 shard) everything runs inline on the
+    /// calling thread in shard order; the parallel path runs the same
+    /// closures on the same shards, just interleaved.
+    pub fn run<S, F>(&self, shards: &mut [S], f: F)
+    where
+        S: Send,
+        F: Fn(usize, &mut S) + Sync,
+    {
+        let workers = self.workers.min(shards.len());
+        if workers <= 1 {
+            for (i, shard) in shards.iter_mut().enumerate() {
+                f(i, shard);
+            }
+            return;
+        }
+        // One mutex per shard, each locked exactly once: the lock is a
+        // safe conveyance for `&mut S` across the scope, not a
+        // synchronization point.
+        let slots: Vec<Mutex<&mut S>> =
+            shards.iter_mut().map(Mutex::new).collect();
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= slots.len() {
+                        break;
+                    }
+                    let mut slot = slots[i].lock().unwrap();
+                    f(i, &mut **slot);
+                });
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_every_shard_exactly_once() {
+        for workers in [1, 2, 4, 9] {
+            let pool = WorkerPool::new(workers);
+            let mut shards = vec![0u64; 23];
+            pool.run(&mut shards, |i, s| {
+                *s += i as u64 + 1;
+            });
+            let want: Vec<u64> = (1..=23).collect();
+            assert_eq!(shards, want, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn worker_count_invariant_results() {
+        // Shard work that depends only on the shard index must come out
+        // identical under any schedule.
+        let compute = |workers: usize| {
+            let pool = WorkerPool::new(workers);
+            let mut shards = vec![0.0f32; 64];
+            pool.run(&mut shards, |i, s| {
+                let mut acc = 0.0f32;
+                for k in 0..100 {
+                    acc += ((i * 31 + k) as f32).sin();
+                }
+                *s = acc;
+            });
+            shards
+        };
+        let serial = compute(1);
+        assert_eq!(serial, compute(2));
+        assert_eq!(serial, compute(4));
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        let pool = WorkerPool::new(4);
+        let mut none: Vec<u32> = vec![];
+        pool.run(&mut none, |_, _| panic!("no shards to run"));
+        let mut one = vec![7u32];
+        pool.run(&mut one, |i, s| *s += i as u32 + 1);
+        assert_eq!(one, vec![8]);
+    }
+
+    #[test]
+    fn clamps_to_at_least_one_worker() {
+        assert_eq!(WorkerPool::new(0).workers(), 1);
+        assert!(WorkerPool::from_env().workers() >= 1);
+    }
+}

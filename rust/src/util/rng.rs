@@ -106,6 +106,52 @@ impl Pcg64 {
         }
     }
 
+    /// Batched Gaussian fill: pairwise Box–Muller on the `fastmath`
+    /// polynomials (`log2_fast` for the radius, `sincos_turns_fast` for
+    /// the angle), all in f32 — no libm calls, so the loop stays inline
+    /// and vectorizable.  This is the read-noise hot path of the crossbar
+    /// tile and grid kernels.
+    ///
+    /// Stream contract: consumes exactly `2 * ceil(out.len() / 2)`
+    /// `next_u64` draws (two per output pair; an odd tail costs one full
+    /// pair and discards the sine deviate).  The stream **differs by
+    /// design** from the scalar [`Pcg64::normal`] sequence (f64 libm
+    /// Box–Muller with a cached second deviate, which this method neither
+    /// reads nor writes); the distribution is pinned instead by the
+    /// moment/tail property suite in `rust/tests/prop_parallel_equivalence.rs`.
+    pub fn fill_gaussian(&mut self, out: &mut [f32], mean: f32,
+                         sigma: f32) {
+        let mut pairs = out.chunks_exact_mut(2);
+        for pair in &mut pairs {
+            let (z0, z1) = self.gauss_pair();
+            pair[0] = mean + sigma * z0;
+            pair[1] = mean + sigma * z1;
+        }
+        if let Some(last) = pairs.into_remainder().first_mut() {
+            let (z0, _) = self.gauss_pair();
+            *last = mean + sigma * z0;
+        }
+    }
+
+    /// One Box–Muller pair of standard normals in f32 (see
+    /// [`Pcg64::fill_gaussian`] for the stream contract).
+    #[inline]
+    fn gauss_pair(&mut self) -> (f32, f32) {
+        use crate::util::fastmath::{log2_fast, sincos_turns_fast};
+        let a = self.next_u64();
+        let b = self.next_u64();
+        // u1 ∈ (0, 1]: never zero (so the log is finite), and u1 = 1
+        // gives radius 0 — an 8.6σ tail from the 53-bit mantissa.
+        let u1 = (((a >> 11) + 1) as f64
+            * (1.0 / (1u64 << 53) as f64)) as f32;
+        // −2·ln u1 = −2·ln2·log2 u1, all non-negative.
+        let r = (-2.0 * std::f32::consts::LN_2 * log2_fast(u1)).sqrt();
+        // 24-bit turn fraction in [0, 1).
+        let t = (b >> 40) as f32 * (1.0 / (1u64 << 24) as f32);
+        let (s, c) = sincos_turns_fast(t);
+        (r * c, r * s)
+    }
+
     /// Fisher–Yates shuffle.
     pub fn shuffle<T>(&mut self, v: &mut [T]) {
         for i in (1..v.len()).rev() {
@@ -184,6 +230,51 @@ mod tests {
         let var = s2 / n as f64 - mean * mean;
         assert!(mean.abs() < 0.02, "mean={mean}");
         assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn fill_gaussian_moments_and_determinism() {
+        let mut r = Pcg64::new(17, 2);
+        let n = 100_000;
+        let mut buf = vec![0.0f32; n];
+        r.fill_gaussian(&mut buf, 0.0, 1.0);
+        let mean: f64 = buf.iter().map(|&v| v as f64).sum::<f64>() / n as f64;
+        let var: f64 = buf.iter().map(|&v| (v as f64 - mean).powi(2))
+            .sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+        // Same seed → byte-identical refill.
+        let mut again = vec![0.0f32; n];
+        Pcg64::new(17, 2).fill_gaussian(&mut again, 0.0, 1.0);
+        assert_eq!(buf, again);
+    }
+
+    #[test]
+    fn fill_gaussian_draw_count_contract() {
+        // Even length: exactly len draws; odd length: len + 1.
+        for len in [0usize, 1, 2, 5, 8] {
+            let mut a = Pcg64::new(33, 1);
+            let mut b = Pcg64::new(33, 1);
+            let mut buf = vec![0.0f32; len];
+            a.fill_gaussian(&mut buf, 0.0, 1.0);
+            for _ in 0..(2 * len.div_ceil(2)) {
+                b.next_u64();
+            }
+            assert_eq!(a.next_u64(), b.next_u64(), "len={len}");
+        }
+    }
+
+    #[test]
+    fn fill_gaussian_mean_sigma_scaling() {
+        let mut r = Pcg64::new(51, 0);
+        let n = 50_000;
+        let mut buf = vec![0.0f32; n];
+        r.fill_gaussian(&mut buf, 2.0, 0.5);
+        let mean: f64 = buf.iter().map(|&v| v as f64).sum::<f64>() / n as f64;
+        let var: f64 = buf.iter().map(|&v| (v as f64 - mean).powi(2))
+            .sum::<f64>() / n as f64;
+        assert!((mean - 2.0).abs() < 0.02, "mean={mean}");
+        assert!((var - 0.25).abs() < 0.01, "var={var}");
     }
 
     #[test]

@@ -1,0 +1,608 @@
+#!/usr/bin/env python3
+"""Bit-exact reference oracle for the grid-routed golden documents.
+
+Transliterates the Rust device math op for op into numpy float32 /
+Python float (IEEE binary64), and regenerates
+`fig3_grid.json` / `fig5_grid.json` — the goldens pinned by
+`rust/tests/golden_gridexp.rs`.  Every code path consumed by the golden
+configs is pure f32/f64 arithmetic (no libm), so the two
+implementations agree byte for byte on any IEEE-754 platform.
+
+Mirrored sources (keep in sync when the Rust changes):
+  rust/src/util/rng.rs        Pcg64, uniform, fill_gaussian
+  rust/src/util/fastmath.rs   log2_fast, exp2_fast, pow_fast, sincos
+  rust/src/crossbar/quant.rs  DAC/ADC quantize_uniform
+  rust/src/crossbar/grid.rs   op_rng, tiling, vmm, apply_update routing
+  rust/src/pcm/{array,device}.rs  linear programming path, drift law
+  rust/src/hic/{weight,fixedpoint}.rs  hybrid update, accumulator
+  rust/src/coordinator/gridtrainer.rs  training loop, eval, metrics
+  rust/src/exp/gridexp.rs     documents and micro-unit quantization
+
+Run:  python3 rust/tests/golden/oracle.py          (writes the goldens)
+"""
+import os
+import numpy as np
+
+f32 = np.float32
+M64 = (1 << 64) - 1
+M128 = (1 << 128) - 1
+MULTIPLIER = 0x2360_ED05_1FC6_5DA4_4385_DF64_9FCC_F645
+ROUND_MIX = 0x9E37_79B9_7F4A_7C15
+
+LN_2 = f32(0.6931471805599453)
+FRAC_PI_2 = f32(1.5707963267948966)
+LOG2_E = f32(1.4426950408889634)
+SQRT_2 = f32(1.4142135623730951)
+
+OP_INIT, OP_PROGRAM, OP_UPDATE, OP_VMM, OP_REFRESH = 1, 2, 3, 4, 5
+
+
+# -- util::rng ---------------------------------------------------------------
+
+class Pcg64:
+    def __init__(self, seed, stream):
+        initseq = (((stream & M64) << 64) | 0xDA3E_39CB_94B9_5BDB) & M128
+        self.inc = ((initseq << 1) | 1) & M128
+        self.state = 0
+        self.next_u64()
+        self.state = (self.state
+                      + ((((seed & M64) << 64) | (seed & M64)) & M128)) & M128
+        self.next_u64()
+
+    def next_u64(self):
+        self.state = (self.state * MULTIPLIER + self.inc) & M128
+        xored = ((self.state >> 64) ^ self.state) & M64
+        rot = (self.state >> 122) & 0x3F
+        if rot == 0:
+            return xored
+        return ((xored >> rot) | (xored << (64 - rot))) & M64
+
+    def uniform(self):
+        # f64, exact
+        return float(self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def uniform_in(self, lo, hi):
+        lo, hi = f32(lo), f32(hi)
+        return f32(lo + f32(f32(hi - lo) * f32(self.uniform())))
+
+    def gauss_pair(self):
+        a = self.next_u64()
+        b = self.next_u64()
+        u1 = f32(float((a >> 11) + 1) * (1.0 / (1 << 53)))
+        arg = f32(f32(f32(-2.0) * LN_2) * log2_fast(u1))
+        r = f32(np.sqrt(arg))
+        t = f32(f32(float(b >> 40)) * f32(1.0 / (1 << 24)))
+        s, c = sincos_turns_fast(t)
+        return f32(r * c), f32(r * s)
+
+    def fill_gaussian(self, n, mean=0.0, sigma=1.0):
+        mean, sigma = f32(mean), f32(sigma)
+        out = np.zeros(n, dtype=np.float32)
+        i = 0
+        while i + 1 < n:
+            z0, z1 = self.gauss_pair()
+            out[i] = f32(mean + f32(sigma * z0))
+            out[i + 1] = f32(mean + f32(sigma * z1))
+            i += 2
+        if i < n:
+            z0, _ = self.gauss_pair()
+            out[i] = f32(mean + f32(sigma * z0))
+        return out
+
+
+def op_rng(seed, rnd, op, shard):
+    return Pcg64(seed ^ ((rnd * ROUND_MIX) & M64), ((op << 32) | shard) & M64)
+
+
+# -- util::fastmath ----------------------------------------------------------
+
+def f32_bits(x):
+    return int(np.float32(x).view(np.uint32))
+
+
+def bits_f32(b):
+    return np.uint32(b & 0xFFFF_FFFF).view(np.float32)
+
+
+def log2_fast(x):
+    x = f32(x)
+    bits = f32_bits(x)
+    e = f32(np.int32((bits >> 23) - 127))
+    m = bits_f32((bits & 0x007F_FFFF) | 0x3F80_0000)
+    if m > SQRT_2:
+        m = f32(m * f32(0.5))
+        e = f32(e + f32(1.0))
+    t = f32(f32(m - f32(1.0)) / f32(m + f32(1.0)))
+    t2 = f32(t * t)
+    ln_m = f32(f32(f32(2.0) * t) * f32(f32(1.0) + f32(t2 * f32(
+        f32(1.0 / 3.0) + f32(t2 * f32(f32(0.2)
+                                      + f32(t2 * f32(1.0 / 7.0))))))))
+    return f32(e + f32(ln_m * LOG2_E))
+
+
+def rust_round_f32(x):
+    """f32::round — half away from zero, exact at .5."""
+    x = f32(x)
+    fl = f32(np.floor(x))
+    diff = f32(x - fl)  # exact for |x| < 2^23
+    if diff > f32(0.5):
+        return f32(fl + f32(1.0))
+    if diff == f32(0.5):
+        # half away from zero: up for x>0, down (=floor) for x<0
+        return f32(fl + f32(1.0)) if x > 0 else fl
+    return fl
+
+
+def exp2_fast(x):
+    x = f32(x)
+    k = rust_round_f32(x)
+    fr = f32(f32(x - k) * LN_2)
+    p = f32(f32(1.0) + f32(fr * f32(f32(1.0) + f32(fr * f32(f32(0.5)
+        + f32(fr * f32(f32(1.0 / 6.0) + f32(fr * f32(f32(1.0 / 24.0)
+        + f32(fr * f32(f32(1.0 / 120.0)
+                       + f32(fr * f32(1.0 / 720.0)))))))))))))
+    scale = bits_f32((int(np.int32(k)) + 127) << 23)
+    return f32(scale * p)
+
+
+def pow_fast(x, y):
+    return exp2_fast(f32(f32(y) * log2_fast(x)))
+
+
+def sin_quadrant(x):
+    x = f32(x)
+    x2 = f32(x * x)
+    return f32(x * f32(f32(1.0) + f32(x2 * f32(f32(-1.0 / 6.0)
+        + f32(x2 * f32(f32(1.0 / 120.0) + f32(x2 * f32(f32(-1.0 / 5040.0)
+        + f32(x2 * f32(f32(1.0 / 362880.0)
+                       + f32(x2 * f32(-1.0 / 39916800.0))))))))))))
+
+
+def cos_quadrant(x):
+    x = f32(x)
+    x2 = f32(x * x)
+    return f32(f32(1.0) + f32(x2 * f32(f32(-0.5) + f32(x2 * f32(
+        f32(1.0 / 24.0) + f32(x2 * f32(f32(-1.0 / 720.0)
+        + f32(x2 * f32(f32(1.0 / 40320.0) + f32(x2 * f32(
+            f32(-1.0 / 3628800.0)
+            + f32(x2 * f32(1.0 / 479001600.0)))))))))))))
+
+
+def sincos_turns_fast(t):
+    t = f32(t)
+    x = f32(t * f32(4.0))
+    q = int(x)
+    fq = f32(f32(x - f32(q)) * FRAC_PI_2)
+    s, c = sin_quadrant(fq), cos_quadrant(fq)
+    return [(s, c), (c, f32(-s)), (f32(-s), f32(-c)), (f32(-c), s)][q]
+
+
+# -- crossbar::quant ---------------------------------------------------------
+
+def clamp(v, lo, hi):
+    # Rust f32::clamp semantics (returns v when equal to a bound)
+    if v < lo:
+        return lo
+    if v > hi:
+        return hi
+    return v
+
+
+def quantize_uniform(v, bits, rng_):
+    levels = f32((1 << bits) - 1)
+    step = f32(f32(f32(2.0) * rng_) / levels)
+    return f32(rust_round_f32(f32(clamp(f32(v), f32(-rng_), rng_) / step))
+               * step)
+
+
+def dac_convert(v):
+    return quantize_uniform(v, 8, f32(4.0))
+
+
+def adc_convert(v):
+    return quantize_uniform(v, 8, f32(16.0))
+
+
+# -- geometry constants (HicGeometry::default) -------------------------------
+
+W_MAX = f32(1.0)
+G_SPAN = f32(0.8)
+MSB_LEVELS = 15
+MSB_STEP = f32(f32(f32(2.0) * W_MAX) / f32(MSB_LEVELS))
+LSB_HALF = 64
+LSB_STEP = f32(MSB_STEP / f32(LSB_HALF))
+W_TO_G = f32(G_SPAN / W_MAX)   # DifferentialPair::w_to_g scale
+G_TO_W = f32(W_MAX / G_SPAN)   # DifferentialPair::g_to_w scale
+DG0 = f32(0.10)
+MAX_PULSES = 10
+DRIFT_NU = f32(0.031)
+DRIFT_T0 = f32(1.0)
+READ_SIGMA = f32(0.009)
+
+
+class Params:
+    def __init__(self, read_noise=False, drift=False):
+        # golden variants are linear, write-noise off, nu-sigma 0
+        self.read_noise = read_noise
+        self.drift = drift
+
+
+# -- pcm planes (linear, write-noise-off path only) --------------------------
+
+class Plane:
+    """One PcmArray's planes (ν = DRIFT_NU everywhere: σ_ν = 0)."""
+
+    def __init__(self, nelem):
+        self.g = np.zeros(nelem, dtype=np.float32)
+        self.pulses = np.zeros(nelem, dtype=np.float32)
+        self.t_prog = np.zeros(nelem, dtype=np.float32)
+        self.set_count = np.zeros(nelem, dtype=np.int64)
+        self.reset_count = np.zeros(nelem, dtype=np.int64)
+
+    def set_pulse_at(self, i, t_now):
+        # linear, no write noise: dg = DG0
+        self.g[i] = clamp(f32(self.g[i] + DG0), f32(0.0), f32(1.0))
+        self.pulses[i] = f32(self.pulses[i] + f32(1.0))
+        self.t_prog[i] = f32(t_now)
+        self.set_count[i] += 1
+
+    def program_increment_at(self, i, dg_target, t_now):
+        if dg_target <= 0.0:
+            return 0
+        nf = f32(f32(dg_target) / DG0)
+        n = int(f32(max(float(np.ceil(nf)), 1.0)))
+        n = min(n, MAX_PULSES)
+        for _ in range(n):
+            self.set_pulse_at(i, t_now)
+        return n
+
+    def drift_at(self, i, t_now, drift):
+        if not drift:
+            return f32(self.g[i])
+        elapsed = f32(max(f32(f32(t_now) - self.t_prog[i]), DRIFT_T0))
+        return f32(self.g[i]
+                   * pow_fast(f32(elapsed / DRIFT_T0), f32(-DRIFT_NU)))
+
+    def drift_into(self, t_now, drift):
+        out = np.zeros(len(self.g), dtype=np.float32)
+        for i in range(len(self.g)):
+            out[i] = self.drift_at(i, t_now, drift)
+        return out
+
+
+class Tile:
+    """One grid tile: differential pair + LSB accumulator plane."""
+
+    def __init__(self, rows, cols):
+        self.rows, self.cols = rows, cols
+        n = rows * cols
+        self.plus = Plane(n)
+        self.minus = Plane(n)
+        self.acc = np.zeros(n, dtype=np.int64)
+
+    def apply_increment(self, i, dw, t_now):
+        dg = f32(f32(abs(f32(dw))) * W_TO_G)
+        if dw > 0.0:
+            return self.plus.program_increment_at(i, dg, t_now)
+        if dw < 0.0:
+            return self.minus.program_increment_at(i, dg, t_now)
+        return 0
+
+    def apply_update(self, grad, lr, t_now, rng):
+        """HicWeight::apply_update — stochastic rounding on (default)."""
+        overflows = 0
+        lr = f32(lr)
+        for i, gi in enumerate(grad):
+            v = f32(f32(f32(-lr) * f32(gi)) / LSB_STEP)
+            dither = f32(rng.uniform())
+            q = f32(np.floor(f32(v + dither)))
+            q = clamp(q, f32(-127.0), f32(127.0))
+            delta = int(q)  # trunc of an integral value
+            s = int(self.acc[i]) + delta
+            ovf = abs(s) // LSB_HALF * (1 if s >= 0 else -1)
+            res = s - ovf * LSB_HALF
+            res = max(-LSB_HALF, min(LSB_HALF - 1, res))
+            self.acc[i] = res
+            if ovf != 0:
+                overflows += abs(ovf)
+                dw = f32(f32(float(ovf)) * MSB_STEP)
+                self.apply_increment(i, dw, t_now)
+        return overflows
+
+    def decode_at(self, i, t_now, drift):
+        return f32(f32(self.plus.drift_at(i, t_now, drift)
+                       - self.minus.drift_at(i, t_now, drift)) * G_TO_W)
+
+
+# -- crossbar::grid ----------------------------------------------------------
+
+class Grid:
+    def __init__(self, k, n, tile, seed, params):
+        self.k, self.n, self.tsz, self.seed = k, n, tile, seed
+        self.params = params
+        self.grid_r = -(-k // tile)
+        self.grid_c = -(-n // tile)
+        self.tiles = []
+        self.coords = []  # (r0, c0, used_rows, used_cols)
+        for gr in range(self.grid_r):
+            for gc in range(self.grid_c):
+                ur = min(k - gr * tile, tile)
+                uc = min(n - gc * tile, tile)
+                self.tiles.append(Tile(ur, uc))
+                self.coords.append((gr * tile, gc * tile, ur, uc))
+
+    def scatter(self, src):
+        subs = []
+        for (r0, c0, ur, uc) in self.coords:
+            sub = np.zeros(ur * uc, dtype=np.float32)
+            for r in range(ur):
+                sub[r * uc:(r + 1) * uc] = \
+                    src[(r0 + r) * self.n + c0:(r0 + r) * self.n + c0 + uc]
+            subs.append(sub)
+        return subs
+
+    def apply_update(self, grad, lr, t_now, rnd):
+        subs = self.scatter(grad)
+        total = 0
+        for ti, tile in enumerate(self.tiles):
+            rng = op_rng(self.seed, rnd, OP_UPDATE, ti)
+            total += tile.apply_update(subs[ti], lr, t_now, rng)
+        return total
+
+    def drift_into(self, t_now):
+        out = np.zeros(self.k * self.n, dtype=np.float32)
+        for ti, tile in enumerate(self.tiles):
+            (r0, c0, ur, uc) = self.coords[ti]
+            for r in range(ur):
+                for c in range(uc):
+                    out[(r0 + r) * self.n + c0 + c] = tile.decode_at(
+                        r * uc + c, t_now, self.params.drift)
+        return out
+
+    def vmm_batch(self, x, m, t_now, rnd):
+        k, n = self.k, self.n
+        # Phase 1: drift planes per tile.
+        gps = [t.plus.drift_into(t_now, self.params.drift)
+               for t in self.tiles]
+        gms = [t.minus.drift_into(t_now, self.params.drift)
+               for t in self.tiles]
+        out = np.zeros(m * n, dtype=np.float32)
+        # Phase 2: column strips.
+        for c in range(self.grid_c):
+            strip_cols = self.coords[c][3]
+            c0 = self.coords[c][1]
+            rng = op_rng(self.seed, rnd, OP_VMM, c)
+            for s in range(m):
+                y = np.zeros(strip_cols, dtype=np.float32)
+                for gr in range(self.grid_r):
+                    ti = gr * self.grid_c + c
+                    tile = self.tiles[ti]
+                    tr, tc = tile.rows, tile.cols
+                    nt = tr * tc
+                    w = np.zeros(nt, dtype=np.float32)
+                    if self.params.read_noise:
+                        z = rng.fill_gaussian(nt)
+                        for i in range(nt):
+                            w[i] = clamp(
+                                f32(gps[ti][i] + f32(READ_SIGMA * z[i])),
+                                f32(0.0), f32(1.0))
+                        z = rng.fill_gaussian(nt)
+                        for i in range(nt):
+                            gm = clamp(
+                                f32(gms[ti][i] + f32(READ_SIGMA * z[i])),
+                                f32(0.0), f32(1.0))
+                            w[i] = f32(f32(w[i] - gm) * G_TO_W)
+                    else:
+                        for i in range(nt):
+                            w[i] = clamp(f32(gps[ti][i]), f32(0.0),
+                                         f32(1.0))
+                        for i in range(nt):
+                            gm = clamp(f32(gms[ti][i]), f32(0.0), f32(1.0))
+                            w[i] = f32(f32(w[i] - gm) * G_TO_W)
+                    r0 = self.coords[ti][0]
+                    xq = np.zeros(tr, dtype=np.float32)
+                    for r in range(tr):
+                        xq[r] = dac_convert(x[s * k + r0 + r])
+                    for r in range(tr):
+                        if xq[r] == 0.0:
+                            continue
+                        for j in range(tc):
+                            y[j] = f32(y[j] + f32(xq[r] * w[r * tc + j]))
+                for j in range(strip_cols):
+                    y[j] = adc_convert(y[j])
+                out[s * n + c0:s * n + c0 + strip_cols] = y
+        return out
+
+    def total_set_pulses(self):
+        return sum(int(t.plus.set_count.sum()) + int(t.minus.set_count.sum())
+                   for t in self.tiles)
+
+
+# -- coordinator::gridtrainer ------------------------------------------------
+
+class GridTrainer:
+    def __init__(self, k, n, tile, seed, params, batch):
+        self.grid = Grid(k, n, tile, seed, params)
+        self.seed = seed
+        self.batch = batch
+        self.x_range = f32(1.0)
+        self.lr = f32(0.5)
+        self.data_rng = Pcg64(seed, 0xDA7A)
+        self.now = 0.0  # f64 drift clock
+        self.step = 0
+        self.losses = []
+        self.overflows = 0
+        self.target = np.array(
+            [f32(f32(f32((i * 3 + 5) % 13) - f32(6.0)) / f32(8.0))
+             for i in range(k * n)], dtype=np.float32)
+
+    def host_matmul(self, x, m):
+        k, n = self.grid.k, self.grid.n
+        y = np.zeros(m * n, dtype=np.float32)
+        for s in range(m):
+            for j in range(n):
+                acc = f32(0.0)
+                for i in range(k):
+                    acc = f32(acc + f32(x[s * k + i]
+                                        * self.target[i * n + j]))
+                y[s * n + j] = acc
+        return y
+
+    def train_steps(self, steps):
+        k, n, m = self.grid.k, self.grid.n, self.batch
+        for _ in range(steps):
+            self.now += 0.05
+            t_now = f32(self.now)
+            rnd = self.step
+            x = np.array([self.data_rng.uniform_in(-self.x_range,
+                                                   self.x_range)
+                          for _ in range(m * k)], dtype=np.float32)
+            y_ref = self.host_matmul(x, m)
+            y_hat = self.grid.vmm_batch(x, m, t_now, rnd)
+            diff = np.zeros(m * n, dtype=np.float32)
+            se = 0.0
+            for i in range(m * n):
+                diff[i] = f32(y_hat[i] - y_ref[i])
+                se += float(diff[i]) * float(diff[i])
+            self.losses.append(se / float(m * n))
+            inv_m = f32(f32(1.0) / f32(float(m)))
+            grad = np.zeros(k * n, dtype=np.float32)
+            for i in range(k):
+                for j in range(n):
+                    acc = f32(0.0)
+                    for s in range(m):
+                        acc = f32(acc + f32(x[s * k + i]
+                                            * diff[s * n + j]))
+                    grad[i * n + j] = f32(acc * inv_m)
+            self.overflows += self.grid.apply_update(grad, self.lr,
+                                                     t_now, rnd)
+            self.step += 1
+
+    def eval_mse_pair(self, t_eval, rnd):
+        """One forward pass → (raw MSE, gain-compensated MSE)."""
+        k, n, m = self.grid.k, self.grid.n, self.batch
+        rng = Pcg64(self.seed, 0xE7A1)
+        x = np.array([rng.uniform_in(-self.x_range, self.x_range)
+                      for _ in range(m * k)], dtype=np.float32)
+        y_ref = self.host_matmul(x, m)
+        y_hat = self.grid.vmm_batch(x, m, f32(t_eval), rnd)
+        se_raw = num = den = 0.0
+        for i in range(m * n):
+            d = float(y_hat[i]) - float(y_ref[i])
+            se_raw += d * d
+            num += float(y_hat[i]) * float(y_ref[i])
+            den += float(y_hat[i]) * float(y_hat[i])
+        gain = num / den if den > 0.0 else 1.0
+        se_comp = 0.0
+        for i in range(m * n):
+            d = gain * float(y_hat[i]) - float(y_ref[i])
+            se_comp += d * d
+        mn = float(m * n)
+        return se_raw / mn, se_comp / mn
+
+    def eval_mse(self, t_eval, rnd, gain_comp):
+        raw, comp = self.eval_mse_pair(t_eval, rnd)
+        return comp if gain_comp else raw
+
+    def weight_error(self, t):
+        w = self.grid.drift_into(f32(t))
+        s = 0.0
+        for a, b in zip(w, self.target):
+            s += abs(float(a) - float(b))
+        return s / float(len(w))
+
+
+# -- exp::gridexp documents --------------------------------------------------
+
+EVAL_ROUND_BASE = 1 << 32
+
+
+def round_half_away(x):
+    a = abs(x)
+    fa = float(np.floor(a))
+    rem = a - fa
+    ra = fa + 1.0 if rem >= 0.5 else fa
+    return ra if x >= 0 else -ra
+
+
+def u6(v):
+    return round_half_away(v * 1e6)
+
+
+def jnum(n):
+    n = float(n)
+    if n == int(n) and abs(n) < 9.0e15:
+        return str(int(n))
+    return repr(n)
+
+
+def jdump(v):
+    if isinstance(v, dict):
+        items = ",".join('"%s":%s' % (k, jdump(v[k])) for k in sorted(v))
+        return "{%s}" % items
+    if isinstance(v, list):
+        return "[%s]" % ",".join(jdump(e) for e in v)
+    if isinstance(v, str):
+        return '"%s"' % v
+    return jnum(v)
+
+
+TINY = dict(k=10, n=6, tile=4, steps=8, batch=4, seed=7)
+
+
+def echo(experiment, o):
+    return {"experiment": experiment, "k": o["k"], "n": o["n"],
+            "tile": o["tile"], "steps": o["steps"], "batch": o["batch"],
+            "seed": o["seed"]}
+
+
+def run_fig3(o):
+    variants = {}
+    for tag in ["linear", "linear_read", "linear_drift"]:
+        params = Params(read_noise=(tag == "linear_read"),
+                        drift=(tag == "linear_drift"))
+        t = GridTrainer(o["k"], o["n"], o["tile"], o["seed"], params,
+                        o["batch"])
+        t.train_steps(o["steps"])
+        t_final = f32(t.now)
+        variants[tag] = {
+            "final_mse_u6": u6(t.losses[-1]),
+            "eval_mse_u6": u6(t.eval_mse(t_final, EVAL_ROUND_BASE, False)),
+            "weight_err_u6": u6(t.weight_error(t_final)),
+            "overflows": t.overflows,
+            "set_pulses": t.grid.total_set_pulses(),
+        }
+    doc = echo("fig3_grid", o)
+    doc["variants"] = variants
+    return doc
+
+
+def run_fig5(o):
+    params = Params(read_noise=True, drift=True)
+    t = GridTrainer(o["k"], o["n"], o["tile"], o["seed"], params,
+                    o["batch"])
+    t.train_steps(o["steps"])
+    probes = []
+    for i, pt in enumerate([1e2, 1e3, 1e4, 1e5, 1e6, 1e7, 4e7]):
+        nocomp, comp = t.eval_mse_pair(pt, EVAL_ROUND_BASE + i)
+        probes.append({
+            "t_seconds": pt,
+            "mse_nocomp_u6": u6(nocomp),
+            "mse_adabs_u6": u6(comp),
+        })
+    doc = echo("fig5_grid", o)
+    doc["trained_mse_u6"] = u6(t.losses[-1])
+    doc["probes"] = probes
+    return doc
+
+
+if __name__ == "__main__":
+    here = os.path.dirname(os.path.abspath(__file__))
+    fig3 = jdump(run_fig3(TINY))
+    with open(os.path.join(here, "fig3_grid.json"), "w") as f:
+        f.write(fig3)
+    print("fig3_grid.json:", fig3)
+    fig5 = jdump(run_fig5(TINY))
+    with open(os.path.join(here, "fig5_grid.json"), "w") as f:
+        f.write(fig5)
+    print("fig5_grid.json:", fig5)

@@ -4,8 +4,9 @@
 use hic_train::crossbar::mapper::{LayerMapping, TilingPolicy};
 use hic_train::hic::fixedpoint::FixedPointAccumulator;
 use hic_train::hic::weight::{HicGeometry, HicWeight};
+use hic_train::pcm::array::PcmArray;
 use hic_train::pcm::device::{PcmDevice, PcmParams};
-use hic_train::pcm::endurance::we_cycles;
+use hic_train::pcm::endurance::{we_cycles, EnduranceLedger};
 use hic_train::testutil::prop;
 use hic_train::util::json::Json;
 
@@ -160,6 +161,103 @@ fn prop_mapper_partition() {
         let util = m.utilization();
         if !(0.0..=1.0 + 1e-9).contains(&util) {
             return Err(format!("utilization {util}"));
+        }
+        Ok(())
+    });
+}
+
+/// Endurance ledger invariants on the planar planes under interleaved
+/// `reset_where` + `program_increments`: SET/RESET counters are exact
+/// event tallies (monotone, conserved against kernel return values),
+/// RESET clears the programmed state of exactly the masked elements,
+/// and the ledger sweep reproduces the per-element WE-cycle estimate.
+#[test]
+fn prop_endurance_ledger_interleaved() {
+    prop("endurance ledger under interleaved kernels", 120, |g| {
+        let params = PcmParams {
+            nonlinear: g.bool(),
+            write_noise: g.bool(),
+            read_noise: false,
+            drift: false,
+            ..Default::default()
+        };
+        let rows = g.usize_in(1, 5);
+        let cols = g.usize_in(1, 5);
+        let nelem = rows * cols;
+        let mut rng = g.rng();
+        let mut arr = PcmArray::new(params, rows, cols, &mut rng);
+
+        let rounds = g.usize_in(1, 8);
+        let mut pulses_reported = 0u64;
+        let mut resets_reported = 0usize;
+        let mut t = 0.0f32;
+        for _ in 0..rounds {
+            t += 1.0;
+            let prev_sets = arr.set_count.clone();
+            if g.bool() {
+                let targets = g.vec_f32(nelem, 0.0, 0.5);
+                pulses_reported +=
+                    arr.program_increments(&targets, t, &mut rng);
+                // SET counters only grow, and only on targeted elements.
+                for (i, (&s, &p)) in
+                    arr.set_count.iter().zip(&prev_sets).enumerate()
+                {
+                    if s < p {
+                        return Err(format!("set_count[{i}] shrank"));
+                    }
+                    if targets[i] <= 0.0 && s != p {
+                        return Err(format!(
+                            "untargeted element {i} pulsed"));
+                    }
+                }
+            } else {
+                let mask: Vec<bool> =
+                    (0..nelem).map(|_| g.bool()).collect();
+                let cleared = arr.reset_where(&mask, t);
+                resets_reported += cleared;
+                if cleared != mask.iter().filter(|&&m| m).count() {
+                    return Err("reset_where count != mask count".into());
+                }
+                for (i, &m) in mask.iter().enumerate() {
+                    if m && (arr.g[i] != 0.0 || arr.pulses[i] != 0.0) {
+                        return Err(format!(
+                            "masked element {i} not cleared"));
+                    }
+                }
+            }
+        }
+        // Conservation: counters tally exactly the reported events.
+        let total_sets: u64 = arr.set_count.iter().sum();
+        if total_sets != pulses_reported {
+            return Err(format!(
+                "set conservation: {total_sets} != {pulses_reported}"));
+        }
+        let total_resets: u64 = arr.reset_count.iter().sum();
+        if total_resets != resets_reported as u64 {
+            return Err(format!(
+                "reset conservation: {total_resets} != {resets_reported}"));
+        }
+        // Ledger sweep == per-element WE-cycle estimates.
+        let mut ledger = EnduranceLedger::new();
+        ledger.record_msb_planes(&arr.set_count, &arr.reset_count);
+        if ledger.msb.count as usize != nelem {
+            return Err("ledger missed devices".into());
+        }
+        let want_max = arr
+            .set_count
+            .iter()
+            .zip(&arr.reset_count)
+            .map(|(&s, &r)| we_cycles(s, r))
+            .max()
+            .unwrap_or(0);
+        if ledger.msb.max != want_max {
+            return Err(format!(
+                "ledger max {} != per-element max {want_max}",
+                ledger.msb.max));
+        }
+        let bucket_total: u64 = ledger.msb.buckets.iter().sum();
+        if bucket_total != ledger.msb.count {
+            return Err("histogram lost mass".into());
         }
         Ok(())
     });
