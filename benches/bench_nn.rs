@@ -1,0 +1,86 @@
+//! Multi-layer device-training benches: full `NetTrainer` steps
+//! (forward VMMs + transposed-VMM backprop + hybrid updates) across
+//! layer counts, width multipliers and worker counts.
+//!
+//! `BENCH_nn.json` records steps/sec per case plus the headline
+//! worker-scaling ratios — the evidence that the backward pass shards
+//! like the forward pass does.
+
+use hic_train::bench::Bench;
+use hic_train::coordinator::nettrainer::{NetTrainer, NetTrainerOptions};
+use hic_train::crossbar::TilingPolicy;
+use hic_train::nn::features::{BlobDataset, FeatureSource};
+use hic_train::nn::net::NetSpec;
+use hic_train::pcm::device::PcmParams;
+use hic_train::util::pool::WorkerPool;
+
+const DIM: usize = 64;
+const CLASSES: usize = 10;
+const BATCH: usize = 16;
+const TILE: usize = 32;
+
+fn data() -> FeatureSource {
+    FeatureSource::Blobs(BlobDataset::new(7, DIM, CLASSES, 0.4, 4096, 512))
+}
+
+fn trainer(hidden: &[usize], width_permille: u32,
+           workers: usize) -> NetTrainer {
+    let spec = NetSpec {
+        input: DIM,
+        hidden_base: hidden.to_vec(),
+        classes: CLASSES,
+        width_permille,
+    };
+    NetTrainer::new(
+        PcmParams::default(), &spec.dims(),
+        TilingPolicy { tile_rows: TILE, tile_cols: TILE }, data(),
+        WorkerPool::new(workers),
+        NetTrainerOptions { batch: BATCH, ..Default::default() })
+}
+
+fn main() {
+    let mut b = Bench::new("nn");
+    // One benched element = one trained sample (batch per step).
+    let elements = BATCH as f64;
+
+    // Depth sweep at width 1.0, serial.
+    for hidden in [&[128][..], &[128, 64][..], &[128, 96, 64][..]] {
+        let mut t = trainer(hidden, 1000, 1);
+        let layers = hidden.len() + 1;
+        b.bench_with_elements(
+            &format!("net_step_l{layers}_w1000_workers1"), Some(elements),
+            || t.train_steps(1));
+    }
+
+    // Width sweep on the 3-layer net, serial.
+    for w in [500u32, 1500] {
+        let mut t = trainer(&[128, 64], w, 1);
+        b.bench_with_elements(
+            &format!("net_step_l3_w{w}_workers1"), Some(elements),
+            || t.train_steps(1));
+    }
+
+    // Worker scaling on the deepest config.
+    for workers in [1usize, 2, 4] {
+        let mut t = trainer(&[128, 96, 64], 1000, workers);
+        b.bench_with_elements(
+            &format!("net_step_l4_w1000_workers{workers}"),
+            Some(elements), || t.train_steps(1));
+    }
+
+    let mut speedups = Vec::new();
+    for (label, base, cont) in [
+        ("net_l4_w4_vs_w1",
+         "net_step_l4_w1000_workers1", "net_step_l4_w1000_workers4"),
+        ("net_l4_w2_vs_w1",
+         "net_step_l4_w1000_workers1", "net_step_l4_w1000_workers2"),
+    ] {
+        if let Some(s) = b.speedup(base, cont) {
+            println!("[nn] {label}: {s:.2}x");
+            speedups.push((label.to_string(), s));
+        }
+    }
+    b.write_json(std::path::Path::new("BENCH_nn.json"), &speedups)
+        .expect("writing BENCH_nn.json");
+    b.finish();
+}

@@ -177,7 +177,8 @@ impl GridTrainer {
                 }
             }
             self.overflows += self.grid.apply_update(
-                &self.grad, lr, t_now, round, &self.pool);
+                &self.grad, lr, t_now, round, &self.pool,
+                &mut self.scratch);
             if self.refresh.due(self.step) {
                 self.refreshed +=
                     self.grid.refresh(t_now, round, &self.pool);
@@ -248,9 +249,9 @@ impl GridTrainer {
 
     /// Mean |decoded − target| over the logical matrix at time `t`
     /// (drift-evaluated, no read noise).
-    pub fn weight_error(&self, t: f32) -> f64 {
+    pub fn weight_error(&mut self, t: f32) -> f64 {
         let mut w = vec![0.0f32; self.grid.k() * self.grid.n()];
-        self.grid.drift_into(t, &self.pool, &mut w);
+        self.grid.drift_into(t, &self.pool, &mut self.scratch, &mut w);
         let mut s = 0.0f64;
         for (&a, &b) in w.iter().zip(&self.target) {
             s += (a as f64 - b as f64).abs();

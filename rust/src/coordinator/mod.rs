@@ -12,19 +12,25 @@
 //! * LR scheduling, evaluation cadence, metrics and checkpoints,
 //! * the endurance snapshot (device ledgers out of the state buffers).
 //!
-//! [`baseline`] mirrors the loop for the FP32 software baseline, and
+//! [`baseline`] mirrors the loop for the FP32 software baseline;
 //! [`gridtrainer`] runs the same cycle directly on the sharded
 //! `crossbar::CrossbarGrid` device model (no artifacts/PJRT needed) —
-//! the engine behind the grid-routed fig3/fig5/fig6 sweeps.
+//! the engine behind the grid-routed fig3/fig5/fig6 sweeps; and
+//! [`nettrainer`] extends the device-level path to **multi-layer**
+//! networks (per-layer grids, transposed-VMM backprop, shared drift
+//! clock and refresh cadence) — the engine behind the grid-routed fig4
+//! width sweep.
 
 pub mod baseline;
 pub mod gridtrainer;
 pub mod metrics;
+pub mod nettrainer;
 pub mod schedule;
 pub mod trainer;
 
 pub use baseline::BaselineTrainer;
 pub use gridtrainer::{GridTrainer, GridTrainerOptions};
 pub use metrics::{EvalResult, MetricsRecorder, StepMetrics};
+pub use nettrainer::{NetTrainer, NetTrainerOptions};
 pub use schedule::{DriftClock, LrSchedule, RefreshScheduler};
 pub use trainer::{Trainer, TrainerOptions};

@@ -1,0 +1,434 @@
+//! Multi-layer device-level training loop on per-layer crossbar grids.
+//!
+//! [`NetTrainer`] drives a [`DeviceNet`] end to end: analog forward
+//! VMMs layer by layer, softmax cross-entropy on the host, analog
+//! **transposed** VMMs (`CrossbarGrid::vmm_t_batch_into`) carrying the
+//! error back down the stack, digital weight-gradient outer products,
+//! and the per-layer hybrid update (LSB accumulation, MSB overflow
+//! programming) — with one shared drift clock, one refresh cadence and
+//! the endurance ledgers folded across every layer's tiles.  This is
+//! the mixed-precision computational-memory training loop (Nandakumar
+//! et al. 1712.01192 / 2001.11773) run entirely on the device model.
+//!
+//! Backward DAC headroom: backprop errors shrink as training converges,
+//! so the error batch is pre-scaled by `bwd_gain` before the transposed
+//! VMM and the result scaled back by `1/bwd_gain` — the ranged-scaling
+//! trick of the mixed-precision trainers, keeping the error inside the
+//! DAC's quantization range without per-batch calibration.
+//!
+//! Determinism: data sampling is counter-based (sequential epoch
+//! order), every grid kernel uses the step index as its RNG `round`
+//! (evaluation probes use the disjoint [`EVAL_ROUND_BASE`] range), and
+//! per-layer grid seeds keep all layer streams independent — so a full
+//! training-plus-eval run is **bitwise identical for any worker
+//! count**, pinned by `rust/tests/prop_parallel_equivalence.rs`.
+
+use crate::crossbar::{GridScratch, TilingPolicy};
+use crate::nn::features::FeatureSource;
+use crate::nn::net::{argmax_row, nll_sum, softmax_rows, DeviceNet};
+use crate::pcm::device::PcmParams;
+use crate::pcm::endurance::EnduranceLedger;
+use crate::util::pool::WorkerPool;
+
+use super::gridtrainer::EVAL_ROUND_BASE;
+use super::schedule::{DriftClock, LrSchedule, RefreshScheduler};
+
+/// Options of one net-trainer run.
+#[derive(Clone, Debug)]
+pub struct NetTrainerOptions {
+    pub seed: u64,
+    pub lr: LrSchedule,
+    /// batches between MSB refresh operations (0 = never)
+    pub refresh_every: usize,
+    /// simulated seconds of wall time per batch (drift clock)
+    pub seconds_per_batch: f64,
+    /// input batch size
+    pub batch: usize,
+    /// backward error pre-scale before the transposed VMM's DAC
+    pub bwd_gain: f32,
+    /// per-layer weight range scale: `w_max = w_scale / √fan_in`
+    pub w_scale: f32,
+}
+
+impl Default for NetTrainerOptions {
+    fn default() -> Self {
+        NetTrainerOptions {
+            seed: 42,
+            lr: LrSchedule::constant(0.05),
+            refresh_every: 0,
+            seconds_per_batch: 0.05,
+            batch: 8,
+            bwd_gain: 4.0,
+            w_scale: 2.0,
+        }
+    }
+}
+
+pub struct NetTrainer {
+    pub net: DeviceNet,
+    pub data: FeatureSource,
+    pub pool: WorkerPool,
+    pub opts: NetTrainerOptions,
+    pub clock: DriftClock,
+    refresh: RefreshScheduler,
+    /// one reusable scratch per layer grid
+    scratches: Vec<GridScratch>,
+    pub step: usize,
+    /// per-step mean training cross-entropy
+    pub losses: Vec<f64>,
+    pub overflows: usize,
+    pub refreshed: usize,
+    eval_rounds: u64,
+    // reusable step buffers
+    x: Vec<f32>,
+    labels: Vec<u8>,
+    /// per-layer pre-activations `[m, dims[l+1]]`
+    zs: Vec<Vec<f32>>,
+    /// per-layer hidden ReLU outputs `[m, dims[l+1]]` (layers `0..L-1`)
+    acts: Vec<Vec<f32>>,
+    probs: Vec<f32>,
+    /// per-layer backprop errors `[m, dims[l+1]]`
+    deltas: Vec<Vec<f32>>,
+    /// gain-scaled error staging buffer
+    escaled: Vec<f32>,
+    /// per-layer weight gradients `[dims[l] * dims[l+1]]`
+    grads: Vec<Vec<f32>>,
+}
+
+impl NetTrainer {
+    /// Build a trainer: the net is constructed and its init weights
+    /// programmed through `pool` (deterministic for any worker count).
+    pub fn new(params: PcmParams, dims: &[usize], policy: TilingPolicy,
+               data: FeatureSource, pool: WorkerPool,
+               opts: NetTrainerOptions) -> Self {
+        assert_eq!(dims[0], data.dim(), "input dim != feature dim");
+        assert_eq!(*dims.last().unwrap(), data.classes(),
+                   "output dim != classes");
+        let net = DeviceNet::new(params, dims, policy, opts.w_scale,
+                                 opts.seed, &pool);
+        let scratches = net.scratches();
+        let m = opts.batch;
+        let nl = net.layers();
+        let classes = net.classes();
+        let zs: Vec<Vec<f32>> =
+            (0..nl).map(|l| vec![0.0; m * dims[l + 1]]).collect();
+        let acts: Vec<Vec<f32>> =
+            (0..nl - 1).map(|l| vec![0.0; m * dims[l + 1]]).collect();
+        let deltas: Vec<Vec<f32>> =
+            (0..nl).map(|l| vec![0.0; m * dims[l + 1]]).collect();
+        let grads: Vec<Vec<f32>> =
+            (0..nl).map(|l| vec![0.0; dims[l] * dims[l + 1]]).collect();
+        let wmax_dim = *dims.iter().max().unwrap();
+        NetTrainer {
+            clock: DriftClock::new(opts.seconds_per_batch),
+            refresh: RefreshScheduler::new(opts.refresh_every),
+            scratches,
+            step: 0,
+            losses: Vec::new(),
+            overflows: 0,
+            refreshed: 0,
+            eval_rounds: 0,
+            x: vec![0.0; m * dims[0]],
+            labels: vec![0; m],
+            zs,
+            acts,
+            probs: vec![0.0; m * classes],
+            deltas,
+            escaled: vec![0.0; m * wmax_dim],
+            grads,
+            net,
+            data,
+            pool,
+            opts,
+        }
+    }
+
+    /// Run `steps` training steps: forward VMMs → softmax CE → backward
+    /// transposed VMMs → per-layer hybrid updates, drift clock and
+    /// refresh cadence included.
+    pub fn train_steps(&mut self, steps: usize) {
+        let nl = self.net.layers();
+        let classes = self.net.classes();
+        let d0 = self.net.input_dim();
+        let m = self.opts.batch;
+        for _ in 0..steps {
+            let t_now = self.clock.tick();
+            let lr = self.opts.lr.at(self.step);
+            let round = self.step as u64;
+
+            // Input batch: sequential epoch order (counter-based, so
+            // the data stream is schedule-independent by construction).
+            for j in 0..m {
+                let idx = (self.step * m + j) % self.data.train_len();
+                self.labels[j] = self.data.sample_into(
+                    idx, false, &mut self.x[j * d0..(j + 1) * d0]);
+            }
+
+            // Forward: analog VMM per layer, ReLU between layers.
+            for l in 0..nl {
+                let input: &[f32] =
+                    if l == 0 { &self.x } else { &self.acts[l - 1] };
+                self.net.grids[l].vmm_batch_into(
+                    input, m, t_now, round, &self.pool,
+                    &mut self.scratches[l], &mut self.zs[l]);
+                if l + 1 < nl {
+                    for (a, &z) in
+                        self.acts[l].iter_mut().zip(&self.zs[l])
+                    {
+                        *a = if z > 0.0 { z } else { 0.0 };
+                    }
+                }
+            }
+
+            // Loss and output error (softmax − one-hot).
+            softmax_rows(&self.zs[nl - 1], m, classes, &mut self.probs);
+            self.losses.push(
+                nll_sum(&self.probs, &self.labels, classes) / m as f64);
+            for s in 0..m {
+                for j in 0..classes {
+                    let y = if self.labels[s] as usize == j {
+                        1.0
+                    } else {
+                        0.0
+                    };
+                    self.deltas[nl - 1][s * classes + j] =
+                        self.probs[s * classes + j] - y;
+                }
+            }
+
+            // Backward: digital weight-gradient outer product per
+            // layer, then the analog transposed VMM carries the error
+            // to the layer below (pre-update weights: all updates are
+            // applied after the full backward pass).
+            let inv_m = 1.0f32 / m as f32;
+            for l in (0..nl).rev() {
+                let (k, n) = (self.net.dims[l], self.net.dims[l + 1]);
+                let a_in: &[f32] =
+                    if l == 0 { &self.x } else { &self.acts[l - 1] };
+                for i in 0..k {
+                    for j in 0..n {
+                        let mut acc = 0.0f32;
+                        for s in 0..m {
+                            acc += a_in[s * k + i]
+                                * self.deltas[l][s * n + j];
+                        }
+                        self.grads[l][i * n + j] = acc * inv_m;
+                    }
+                }
+                if l > 0 {
+                    let gain = self.opts.bwd_gain;
+                    for (ev, &dv) in self.escaled[..m * n]
+                        .iter_mut()
+                        .zip(&self.deltas[l][..m * n])
+                    {
+                        *ev = dv * gain;
+                    }
+                    self.net.grids[l].vmm_t_batch_into(
+                        &self.escaled[..m * n], m, t_now, round,
+                        &self.pool, &mut self.scratches[l],
+                        &mut self.deltas[l - 1]);
+                    let inv_gain = 1.0f32 / gain;
+                    for (d, &z) in
+                        self.deltas[l - 1].iter_mut().zip(&self.zs[l - 1])
+                    {
+                        *d = if z > 0.0 { *d * inv_gain } else { 0.0 };
+                    }
+                }
+            }
+
+            // Hybrid updates + refresh cadence across every layer.
+            for l in 0..nl {
+                self.overflows += self.net.grids[l].apply_update(
+                    &self.grads[l], lr, t_now, round, &self.pool,
+                    &mut self.scratches[l]);
+            }
+            if self.refresh.due(self.step) {
+                for l in 0..nl {
+                    self.refreshed += self.net.grids[l].refresh(
+                        t_now, round, &self.pool);
+                }
+            }
+            self.step += 1;
+        }
+    }
+
+    /// Mean cross-entropy and accuracy of the analog forward pass over
+    /// the first `n` test samples at inference time `t_eval`.  Each
+    /// chunk uses a fresh evaluation round (disjoint from training
+    /// rounds), so repeated probes draw fresh read noise and never
+    /// replay training noise.
+    pub fn evaluate(&mut self, n: usize, t_eval: f32) -> (f64, f64) {
+        let nl = self.net.layers();
+        let classes = self.net.classes();
+        let d0 = self.net.input_dim();
+        let m = self.opts.batch;
+        let mut hits = 0usize;
+        let mut loss_sum = 0.0f64;
+        let mut done = 0usize;
+        while done < n {
+            let mb = m.min(n - done);
+            let round = EVAL_ROUND_BASE + self.eval_rounds;
+            self.eval_rounds += 1;
+            for j in 0..mb {
+                self.labels[j] = self.data.sample_into(
+                    done + j, true, &mut self.x[j * d0..(j + 1) * d0]);
+            }
+            for l in 0..nl {
+                let (k, n_out) = (self.net.dims[l], self.net.dims[l + 1]);
+                let input: &[f32] = if l == 0 {
+                    &self.x[..mb * k]
+                } else {
+                    &self.acts[l - 1][..mb * k]
+                };
+                self.net.grids[l].vmm_batch_into(
+                    input, mb, t_eval, round, &self.pool,
+                    &mut self.scratches[l],
+                    &mut self.zs[l][..mb * n_out]);
+                if l + 1 < nl {
+                    for (a, &z) in self.acts[l][..mb * n_out]
+                        .iter_mut()
+                        .zip(&self.zs[l][..mb * n_out])
+                    {
+                        *a = if z > 0.0 { z } else { 0.0 };
+                    }
+                }
+            }
+            softmax_rows(&self.zs[nl - 1][..mb * classes], mb, classes,
+                         &mut self.probs[..mb * classes]);
+            loss_sum += nll_sum(&self.probs[..mb * classes],
+                                &self.labels[..mb], classes);
+            for s in 0..mb {
+                let row = &self.probs[s * classes..(s + 1) * classes];
+                if argmax_row(row) == self.labels[s] as usize {
+                    hits += 1;
+                }
+            }
+            done += mb;
+        }
+        (loss_sum / n as f64, hits as f64 / n as f64)
+    }
+
+    /// Endurance snapshot folded over every layer's tiles.
+    pub fn endurance(&self) -> EnduranceLedger {
+        let mut ledger = EnduranceLedger::new();
+        for g in &self.net.grids {
+            g.record_endurance(&mut ledger);
+        }
+        ledger
+    }
+
+    /// Total SET pulses across all layers.
+    pub fn total_set_pulses(&self) -> u64 {
+        self.net.grids.iter().map(|g| g.total_set_pulses()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::features::{BlobDataset, PooledCifar};
+
+    fn blob_data() -> FeatureSource {
+        FeatureSource::Blobs(BlobDataset::new(3, 8, 4, 0.35, 400, 80))
+    }
+
+    fn linear_read_params() -> PcmParams {
+        PcmParams {
+            nonlinear: false,
+            write_noise: false,
+            read_noise: true,
+            drift: false,
+            drift_nu_sigma: 0.0,
+            ..Default::default()
+        }
+    }
+
+    fn policy(t: usize) -> TilingPolicy {
+        TilingPolicy { tile_rows: t, tile_cols: t }
+    }
+
+    #[test]
+    fn device_net_learns_blobs() {
+        // Thresholds validated against the bit-exact oracle
+        // (`rust/tests/golden/oracle.py` NnTrainer on this exact
+        // config): acc 0.175 -> 0.988 (60 steps) -> 1.0 (120).
+        let mut t = NetTrainer::new(
+            linear_read_params(), &[8, 12, 8, 4], policy(6), blob_data(),
+            WorkerPool::serial(),
+            NetTrainerOptions { batch: 16,
+                                lr: LrSchedule::constant(0.2),
+                                ..Default::default() });
+        let (_, acc0) = t.evaluate(80, 0.0);
+        t.train_steps(60);
+        let (_, acc_mid) = t.evaluate(80, t.clock.now_f32());
+        t.train_steps(60);
+        let (loss, acc) = t.evaluate(80, t.clock.now_f32());
+        assert!(acc0 < 0.5, "untrained net is already accurate? {acc0}");
+        assert!(acc_mid > acc0 + 0.3, "mid {acc_mid} vs start {acc0}");
+        assert!(acc > 0.85, "device eval acc {acc} (from {acc0})");
+        assert!(acc >= acc_mid - 0.05, "end {acc} << mid {acc_mid}");
+        assert!(loss < 0.5, "eval loss {loss}");
+        assert!(t.overflows > 0, "no LSB->MSB overflow ever fired");
+        // Training loss trends down too.
+        let early: f64 = t.losses[..10].iter().sum::<f64>() / 10.0;
+        let late: f64 =
+            t.losses[t.losses.len() - 10..].iter().sum::<f64>() / 10.0;
+        assert!(late < early * 0.5, "train loss {early} -> {late}");
+    }
+
+    #[test]
+    fn device_net_learns_pooled_synthetic_cifar() {
+        // The acceptance-criterion workload: >= 2 hidden layers on the
+        // data pipeline's synthetic CIFAR, monotonically improving eval
+        // accuracy (non-strict: probes allow small noise wiggle).
+        let data =
+            FeatureSource::Cifar(PooledCifar::new(1, 8, 1000, 200));
+        let mut t = NetTrainer::new(
+            linear_read_params(), &[48, 16, 12, 10], policy(16), data,
+            WorkerPool::from_env(),
+            NetTrainerOptions { batch: 16,
+                                lr: LrSchedule::constant(0.1),
+                                ..Default::default() });
+        let (_, acc0) = t.evaluate(60, 0.0);
+        t.train_steps(40);
+        let (_, acc1) = t.evaluate(60, t.clock.now_f32());
+        t.train_steps(40);
+        let (_, acc2) = t.evaluate(60, t.clock.now_f32());
+        assert!(acc1 >= acc0, "acc {acc0} -> {acc1}");
+        assert!(acc2 >= acc1 - 0.05, "acc {acc1} -> {acc2}");
+        assert!(acc2 > acc0 + 0.2 && acc2 > 0.5,
+                "no real learning: {acc0} -> {acc1} -> {acc2}");
+    }
+
+    #[test]
+    fn refresh_and_endurance_cover_all_layers() {
+        let mut t = NetTrainer::new(
+            linear_read_params(), &[8, 12, 8, 4], policy(6), blob_data(),
+            WorkerPool::serial(),
+            NetTrainerOptions { batch: 8, refresh_every: 5,
+                                ..Default::default() });
+        t.train_steps(20);
+        let ledger = t.endurance();
+        // 2 devices per weight cell over every layer's matrix.
+        let weights = 8 * 12 + 12 * 8 + 8 * 4;
+        assert_eq!(ledger.msb.count as usize, 2 * weights);
+        assert!(t.total_set_pulses() > 0);
+    }
+
+    #[test]
+    fn run_is_worker_count_invariant() {
+        let run = |workers: usize| {
+            let mut t = NetTrainer::new(
+                PcmParams::default(), &[8, 12, 8, 4], policy(5),
+                blob_data(), WorkerPool::new(workers),
+                NetTrainerOptions { batch: 6, refresh_every: 4,
+                                    ..Default::default() });
+            t.train_steps(8);
+            let ev = t.evaluate(24, t.clock.now_f32());
+            (t.losses.clone(), t.overflows, t.refreshed, ev)
+        };
+        let a = run(1);
+        assert_eq!(a, run(2));
+        assert_eq!(a, run(4));
+    }
+}

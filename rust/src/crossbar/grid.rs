@@ -13,18 +13,30 @@
 //!
 //! * **State kernels** (`program_init`, `program_increments`,
 //!   `apply_update`, `refresh`): one shard per tile.  Each shard owns
-//!   its tile's planes, so shards never alias.
-//! * **`vmm_batch_into`**: two phases.  Phase 1 evaluates drift once
-//!   per batch, one shard per tile.  Phase 2 shards by **column strip**
-//!   (all tiles of one grid column): a strip owns a disjoint slice of
-//!   output columns, walks its row-tiles top-down per sample
-//!   accumulating partial sums into the same running output, and
+//!   its tile's planes, so shards never alias; integer side-totals
+//!   (pulses, overflows, refresh counts) fold through an atomic adder
+//!   (exact: `u64` addition is commutative).
+//! * **`vmm_batch_into`** (forward): two phases.  Phase 1 evaluates
+//!   drift once per batch, one shard per tile.  Phase 2 shards by
+//!   **column strip** (all tiles of one grid column): a strip owns a
+//!   disjoint slice of output columns, walks its row-tiles top-down per
+//!   sample accumulating partial sums into the same running output, and
 //!   applies the ADC once per logical column after the last row-tile.
 //!   Row-tiles accumulating *into* the running sum (instead of
 //!   reducing independent partials) keeps the f32 addition sequence
 //!   identical to a single tile spanning the whole matrix — which is
 //!   what makes the grid bit-compatible with the serial single-tile
 //!   path in the noise-free domain.
+//! * **`vmm_t_batch_into`** (transposed, the error-backpropagation
+//!   pass): the mirror image.  Phase 1 is the same per-tile drift
+//!   evaluation; phase 2 shards by **row strip** (all tiles of one grid
+//!   row): a strip owns a disjoint slice of output *rows*, walks its
+//!   column-tiles left-to-right per sample accumulating the transposed
+//!   partial sums into the running row outputs, and applies the ADC
+//!   once per logical row after the last column-tile.  Per output row
+//!   the f32 term order is ascending logical column — identical to a
+//!   whole-matrix single tile's `vmm_t_batch_into`, so the noise-free
+//!   bit-compatibility contract extends to the backward pass.
 //! * **`drift_into`**: one shard per tile, serial deterministic gather.
 //!
 //! # RNG stream discipline
@@ -34,17 +46,23 @@
 //! `Pcg64::new(seed ⊕ round·φ, (op_tag << 32) | shard_id)` — `seed` is
 //! the grid's, `round` is a caller-supplied invocation counter (training
 //! step, probe index, …), `op_tag` separates kernel families, and
-//! `shard_id` is the tile index (state kernels) or grid column (VMM).
-//! Reusing a `(seed, round, op)` triple replays the same noise, so
-//! callers advance `round` between invocations.  Because a shard's
-//! stream depends only on these values — never on the worker that runs
-//! it — **all grid kernels are bitwise identical for any worker
-//! count**; `rust/tests/prop_parallel_equivalence.rs` pins this, and
-//! the noise-free equivalence against the single-tile serial path.
+//! `shard_id` is the tile index (state kernels), the grid column
+//! (forward VMM) or the grid **row** (transposed VMM — its own
+//! `OP_VMM_T` op stream, so a forward and a backward pass at the same
+//! `round` draw independent read noise).  Reusing a `(seed, round, op)`
+//! triple replays the same noise, so callers advance `round` between
+//! invocations.  Because a shard's stream depends only on these values
+//! — never on the worker that runs it — **all grid kernels are bitwise
+//! identical for any worker count**;
+//! `rust/tests/prop_parallel_equivalence.rs` pins this, and the
+//! noise-free equivalence against the single-tile serial path.
 //!
-//! Read noise inside the VMM uses the batched Box–Muller fill
-//! (`Pcg64::fill_gaussian`) per tile plane, the same discipline as
+//! Read noise inside both VMM kernels uses the shared noisy-weight-read
+//! helper (`crossbar::tile::read_noisy_weights`: batched Box–Muller
+//! fill, G+ plane first then G−), the same sequence as
 //! `CrossbarTile::vmm_batch_into`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::hic::weight::{HicGeometry, HicWeight};
 use crate::pcm::device::PcmParams;
@@ -54,7 +72,7 @@ use crate::util::rng::Pcg64;
 
 use super::mapper::{LayerMapping, TilingPolicy};
 use super::quant::{AdcSpec, DacSpec};
-use super::tile::CrossbarTile;
+use super::tile::{read_noisy_weights, CrossbarTile};
 
 /// Kernel-family tags baked into the high bits of each shard's RNG
 /// stream id (see the module docs).
@@ -64,6 +82,7 @@ pub const OP_UPDATE: u64 = 3;
 pub const OP_VMM: u64 = 4;
 pub const OP_REFRESH: u64 = 5;
 pub const OP_PROGRAM_INIT: u64 = 6;
+pub const OP_VMM_T: u64 = 7;
 
 /// Weyl constant mixing the invocation counter into the stream seed.
 const ROUND_MIX: u64 = 0x9E37_79B9_7F4A_7C15;
@@ -93,7 +112,7 @@ struct TileDrift {
     gm: Vec<f32>,
 }
 
-/// Per-column-strip working buffers for the VMM shards.
+/// Per-column-strip working buffers for the forward VMM shards.
 struct StripScratch {
     w: Vec<f32>,
     noise: Vec<f32>,
@@ -101,17 +120,27 @@ struct StripScratch {
     out: Vec<f32>,
 }
 
-/// Reusable grid buffers: drift planes per tile + VMM strip scratch.
+/// Per-row-strip working buffers for the transposed VMM shards.
+struct RowStripScratch {
+    w: Vec<f32>,
+    noise: Vec<f32>,
+    eq: Vec<f32>,
+    out: Vec<f32>,
+}
+
+/// Reusable grid buffers: drift planes per tile, forward column-strip
+/// and transposed row-strip scratch, plus the per-tile scatter buffers
+/// the state kernels (`program_increments` / `apply_update`) and
+/// `drift_into` reuse — with a long-lived `GridScratch`, none of the
+/// training-loop kernels allocate per call.
 pub struct GridScratch {
     drift: Vec<TileDrift>,
     strips: Vec<StripScratch>,
-}
-
-/// Per-tile task unit handed to the pool by the state kernels.
-struct TileTask<'a> {
-    tile: &'a mut CrossbarTile,
-    sub: Vec<f32>,
-    count: u64,
+    rstrips: Vec<RowStripScratch>,
+    /// per-tile row-major submatrix buffers (scatter targets for the
+    /// state kernels, decode targets for `drift_into` — tiles are
+    /// sized to their used extent, so one buffer serves both roles)
+    subs: Vec<Vec<f32>>,
 }
 
 impl CrossbarGrid {
@@ -172,31 +201,59 @@ impl CrossbarGrid {
                 out: Vec::new(),
             });
         }
-        GridScratch { drift, strips }
+        let tc_max = self.mapping.policy.tile_cols.min(self.mapping.n);
+        let mut rstrips = Vec::with_capacity(self.mapping.grid_rows());
+        for r in 0..self.mapping.grid_rows() {
+            let strip_rows =
+                self.mapping.tiles[self.mapping.tile_index(r, 0)].used_rows;
+            let nmax = strip_rows * tc_max;
+            rstrips.push(RowStripScratch {
+                w: vec![0.0; nmax],
+                noise: vec![0.0; nmax],
+                eq: vec![0.0; tc_max],
+                out: Vec::new(),
+            });
+        }
+        let subs = self
+            .tiles
+            .iter()
+            .map(|t| vec![0.0f32; t.rows() * t.cols()])
+            .collect();
+        GridScratch { drift, strips, rstrips, subs }
     }
 
     // -- logical <-> tile layout ------------------------------------------
 
     /// Split a logical row-major `[k, n]` matrix into per-tile
-    /// row-major submatrices (tile enumeration order).
+    /// row-major submatrices (tile enumeration order) — allocating
+    /// wrapper of [`CrossbarGrid::scatter_into`], used where no scratch
+    /// is alive yet (construction-time programming).
     fn scatter(&self, src: &[f32]) -> Vec<Vec<f32>> {
-        assert_eq!(src.len(), self.k() * self.n());
-        let n = self.n();
-        self.mapping
+        let mut subs: Vec<Vec<f32>> = self
+            .mapping
             .tiles
             .iter()
-            .map(|t| {
-                let (r0, c0) = self.mapping.origin(t);
-                let mut sub = vec![0.0f32; t.used_rows * t.used_cols];
-                for r in 0..t.used_rows {
-                    let src_row = (r0 + r) * n + c0;
-                    sub[r * t.used_cols..(r + 1) * t.used_cols]
-                        .copy_from_slice(
-                            &src[src_row..src_row + t.used_cols]);
-                }
-                sub
-            })
-            .collect()
+            .map(|t| vec![0.0f32; t.used_rows * t.used_cols])
+            .collect();
+        self.scatter_into(src, &mut subs);
+        subs
+    }
+
+    /// Split a logical row-major `[k, n]` matrix into the caller's
+    /// per-tile buffers (tile enumeration order, no allocation).
+    fn scatter_into(&self, src: &[f32], subs: &mut [Vec<f32>]) {
+        assert_eq!(src.len(), self.k() * self.n());
+        assert_eq!(subs.len(), self.tiles.len());
+        let n = self.n();
+        for (t, sub) in self.mapping.tiles.iter().zip(subs) {
+            let (r0, c0) = self.mapping.origin(t);
+            assert_eq!(sub.len(), t.used_rows * t.used_cols);
+            for r in 0..t.used_rows {
+                let src_row = (r0 + r) * n + c0;
+                sub[r * t.used_cols..(r + 1) * t.used_cols]
+                    .copy_from_slice(&src[src_row..src_row + t.used_cols]);
+            }
+        }
     }
 
     /// Gather per-tile row-major buffers back into the logical matrix.
@@ -218,20 +275,16 @@ impl CrossbarGrid {
     /// Program initial weights (MSB-quantized), tile-parallel.  Uses
     /// its own op tag (`OP_PROGRAM_INIT`), so an init followed by a
     /// `program_increments` at the same `round` still draws
-    /// independent write-noise streams.
+    /// independent write-noise streams.  (Construction-time path: the
+    /// one state kernel that allocates its scatter buffers itself, so
+    /// it can run before any `GridScratch` exists.)
     pub fn program_init(&mut self, w: &[f32], t_now: f32, round: u64,
                         pool: &WorkerPool) {
         let subs = self.scatter(w);
         let seed = self.seed;
-        let mut tasks: Vec<TileTask> = self
-            .tiles
-            .iter_mut()
-            .zip(subs)
-            .map(|(tile, sub)| TileTask { tile, sub, count: 0 })
-            .collect();
-        pool.run(&mut tasks, |ti, task| {
+        pool.run(&mut self.tiles, |ti, tile| {
             let mut rng = op_rng(seed, round, OP_PROGRAM_INIT, ti);
-            task.tile.weights.program_init(&task.sub, t_now, &mut rng);
+            tile.weights.program_init(&subs[ti], t_now, &mut rng);
         });
     }
 
@@ -239,47 +292,42 @@ impl CrossbarGrid {
     /// zeros untouched) through the differential pairs, tile-parallel.
     /// Returns total SET pulses applied.
     pub fn program_increments(&mut self, dw: &[f32], t_now: f32,
-                              round: u64, pool: &WorkerPool) -> u64 {
-        let subs = self.scatter(dw);
+                              round: u64, pool: &WorkerPool,
+                              scratch: &mut GridScratch) -> u64 {
+        self.scatter_into(dw, &mut scratch.subs);
+        let subs: &[Vec<f32>] = &scratch.subs;
         let seed = self.seed;
-        let mut tasks: Vec<TileTask> = self
-            .tiles
-            .iter_mut()
-            .zip(subs)
-            .map(|(tile, sub)| TileTask { tile, sub, count: 0 })
-            .collect();
-        pool.run(&mut tasks, |ti, task| {
+        let total = AtomicU64::new(0);
+        pool.run(&mut self.tiles, |ti, tile| {
             let mut rng = op_rng(seed, round, OP_PROGRAM, ti);
             let mut pulses = 0u64;
-            for (i, &d) in task.sub.iter().enumerate() {
+            for (i, &d) in subs[ti].iter().enumerate() {
                 if d != 0.0 {
-                    pulses += task.tile.weights.msb.apply_increment(
+                    pulses += tile.weights.msb.apply_increment(
                         i, d, t_now, &mut rng) as u64;
                 }
             }
-            task.count = pulses;
+            total.fetch_add(pulses, Ordering::Relaxed);
         });
-        tasks.iter().map(|t| t.count).sum()
+        total.into_inner()
     }
 
     /// One hybrid training update (`grad` logical `[k, n]`),
     /// tile-parallel; returns total LSB→MSB overflow events.
     pub fn apply_update(&mut self, grad: &[f32], lr: f32, t_now: f32,
-                        round: u64, pool: &WorkerPool) -> usize {
-        let subs = self.scatter(grad);
+                        round: u64, pool: &WorkerPool,
+                        scratch: &mut GridScratch) -> usize {
+        self.scatter_into(grad, &mut scratch.subs);
+        let subs: &[Vec<f32>] = &scratch.subs;
         let seed = self.seed;
-        let mut tasks: Vec<TileTask> = self
-            .tiles
-            .iter_mut()
-            .zip(subs)
-            .map(|(tile, sub)| TileTask { tile, sub, count: 0 })
-            .collect();
-        pool.run(&mut tasks, |ti, task| {
+        let total = AtomicU64::new(0);
+        pool.run(&mut self.tiles, |ti, tile| {
             let mut rng = op_rng(seed, round, OP_UPDATE, ti);
-            task.count = task.tile.weights.apply_update(
-                &task.sub, lr, t_now, &mut rng) as u64;
+            let ovf = tile.weights.apply_update(
+                &subs[ti], lr, t_now, &mut rng) as u64;
+            total.fetch_add(ovf, Ordering::Relaxed);
         });
-        tasks.iter().map(|t| t.count as usize).sum()
+        total.into_inner() as usize
     }
 
     /// Selective saturation refresh, tile-parallel; returns refreshed
@@ -287,35 +335,29 @@ impl CrossbarGrid {
     pub fn refresh(&mut self, t_now: f32, round: u64,
                    pool: &WorkerPool) -> usize {
         let seed = self.seed;
-        let mut tasks: Vec<TileTask> = self
-            .tiles
-            .iter_mut()
-            .map(|tile| TileTask { tile, sub: Vec::new(), count: 0 })
-            .collect();
-        pool.run(&mut tasks, |ti, task| {
+        let total = AtomicU64::new(0);
+        pool.run(&mut self.tiles, |ti, tile| {
             let mut rng = op_rng(seed, round, OP_REFRESH, ti);
-            task.count = task.tile.weights.refresh(t_now, &mut rng) as u64;
+            let n = tile.weights.refresh(t_now, &mut rng) as u64;
+            total.fetch_add(n, Ordering::Relaxed);
         });
-        tasks.iter().map(|t| t.count as usize).sum()
+        total.into_inner() as usize
     }
 
     // -- read kernels ------------------------------------------------------
 
     /// Drift-evaluated decode of the logical weight matrix at `t_now`
     /// (no read noise) — the grid twin of `DifferentialPair::decode_into`
-    /// with the drift power law evaluated tile-parallel.
+    /// with the drift power law evaluated tile-parallel into the
+    /// scratch's per-tile buffers (no allocation), then a serial
+    /// deterministic gather.
     pub fn drift_into(&self, t_now: f32, pool: &WorkerPool,
-                      out: &mut [f32]) {
-        let mut bufs: Vec<Vec<f32>> = self
-            .tiles
-            .iter()
-            .map(|t| vec![0.0f32; t.rows() * t.cols()])
-            .collect();
+                      scratch: &mut GridScratch, out: &mut [f32]) {
         let tiles = &self.tiles;
-        pool.run(&mut bufs, |ti, buf| {
+        pool.run(&mut scratch.subs, |ti, buf| {
             tiles[ti].weights.decode_into(t_now, buf);
         });
-        self.gather(&bufs, out);
+        self.gather(&scratch.subs, out);
     }
 
     /// Batched analog VMM over the whole grid (`x: [m, k]` row-major
@@ -333,7 +375,7 @@ impl CrossbarGrid {
                    "scratch does not match this grid");
         assert_eq!(scratch.strips.len(), self.mapping.grid_cols());
 
-        let GridScratch { drift, strips } = scratch;
+        let GridScratch { drift, strips, .. } = scratch;
         let tiles = &self.tiles;
 
         // Phase 1: drift both conductance planes once per batch,
@@ -368,45 +410,14 @@ impl CrossbarGrid {
                     let tile = &tiles[ti];
                     let (tr, tc) = (tile.rows(), tile.cols());
                     let nt = tr * tc;
-                    let msb = &tile.weights.msb;
-                    let (noise_p, sigma_p) = (msb.plus.params.read_noise,
-                                              msb.plus.params.read_sigma);
-                    let (noise_m, sigma_m) = (msb.minus.params.read_noise,
-                                              msb.minus.params.read_sigma);
-                    let scale = msb.g_to_w(1.0);
                     let d = &drift_ro[ti];
-                    let w = &mut strip.w[..nt];
 
-                    // Fresh stochastic read of this tile: G+ plane
-                    // first, then G− (the tile-kernel draw order).
-                    if noise_p {
-                        let z = &mut strip.noise[..nt];
-                        rng.fill_gaussian(z, 0.0, 1.0);
-                        for ((wv, &gp), &zv) in
-                            w.iter_mut().zip(&d.gp).zip(z.iter())
-                        {
-                            *wv = (gp + sigma_p * zv).clamp(0.0, 1.0);
-                        }
-                    } else {
-                        for (wv, &gp) in w.iter_mut().zip(&d.gp) {
-                            *wv = gp.clamp(0.0, 1.0);
-                        }
-                    }
-                    if noise_m {
-                        let z = &mut strip.noise[..nt];
-                        rng.fill_gaussian(z, 0.0, 1.0);
-                        for ((wv, &gm), &zv) in
-                            w.iter_mut().zip(&d.gm).zip(z.iter())
-                        {
-                            *wv = (*wv
-                                - (gm + sigma_m * zv).clamp(0.0, 1.0))
-                                * scale;
-                        }
-                    } else {
-                        for (wv, &gm) in w.iter_mut().zip(&d.gm) {
-                            *wv = (*wv - gm.clamp(0.0, 1.0)) * scale;
-                        }
-                    }
+                    // Fresh stochastic read of this tile (shared
+                    // sequence: G+ plane first, then G−).
+                    read_noisy_weights(&tile.weights.msb, &d.gp, &d.gm,
+                                       &mut rng, &mut strip.noise[..nt],
+                                       &mut strip.w[..nt]);
+                    let w = &strip.w[..nt];
 
                     // DAC this row block's inputs, accumulate row-major
                     // into the running column sums.
@@ -459,6 +470,125 @@ impl CrossbarGrid {
         out
     }
 
+    /// Batched **transposed** analog VMM over the whole grid
+    /// (`e: [m, n]` row-major logical error inputs, `out: [m, k]`) —
+    /// the error-backpropagation kernel: the same crossbars are driven
+    /// from their columns and read out on their rows, so
+    /// `out = ADC(DAC(e) @ Wᵀ)` under the full device model (drift once
+    /// per batch, fresh per-sample read noise per tile).  Sharded by
+    /// **row strip** on its own `OP_VMM_T` RNG op stream (shard id =
+    /// grid row); see the module docs for the determinism contract.
+    pub fn vmm_t_batch_into(&self, e: &[f32], m: usize, t_now: f32,
+                            round: u64, pool: &WorkerPool,
+                            scratch: &mut GridScratch, out: &mut [f32]) {
+        let k = self.k();
+        let n = self.n();
+        assert_eq!(e.len(), m * n);
+        assert_eq!(out.len(), m * k);
+        assert_eq!(scratch.drift.len(), self.tiles.len(),
+                   "scratch does not match this grid");
+        assert_eq!(scratch.rstrips.len(), self.mapping.grid_rows());
+
+        let GridScratch { drift, rstrips, .. } = scratch;
+        let tiles = &self.tiles;
+
+        // Phase 1: drift both conductance planes once per batch,
+        // tile-parallel (no RNG) — same pass as the forward kernel.
+        pool.run(&mut drift[..], |ti, d| {
+            let msb = &tiles[ti].weights.msb;
+            msb.plus.drift_into(t_now, &mut d.gp);
+            msb.minus.drift_into(t_now, &mut d.gm);
+        });
+
+        // Phase 2: row strips (shard = grid row).
+        let grid_c = self.mapping.grid_cols();
+        let seed = self.seed;
+        let mapping = &self.mapping;
+        let dac = self.dac;
+        let adc = self.adc;
+        let drift_ro: &[TileDrift] = &drift[..];
+        pool.run(&mut rstrips[..], |gr, strip| {
+            let strip_rows =
+                mapping.tiles[mapping.tile_index(gr, 0)].used_rows;
+            let need = m * strip_rows;
+            if strip.out.len() < need {
+                strip.out.resize(need, 0.0);
+            }
+            let mut rng = op_rng(seed, round, OP_VMM_T, gr);
+            for s in 0..m {
+                let y = &mut strip.out
+                    [s * strip_rows..(s + 1) * strip_rows];
+                y.fill(0.0);
+                for gc in 0..grid_c {
+                    let ti = mapping.tile_index(gr, gc);
+                    let tile = &tiles[ti];
+                    let (tr, tc) = (tile.rows(), tile.cols());
+                    let nt = tr * tc;
+                    let d = &drift_ro[ti];
+
+                    // Fresh stochastic read of this tile (shared
+                    // sequence: G+ plane first, then G−).
+                    read_noisy_weights(&tile.weights.msb, &d.gp, &d.gm,
+                                       &mut rng, &mut strip.noise[..nt],
+                                       &mut strip.w[..nt]);
+                    let w = &strip.w[..nt];
+
+                    // DAC this column block's errors, accumulate the
+                    // transposed partial sums into the running row
+                    // outputs.  Per output row the term order is
+                    // ascending logical column (gc ascending, local c
+                    // ascending) — identical to a whole-matrix single
+                    // tile, which keeps the backward pass
+                    // bit-compatible with the serial path in the
+                    // noise-free domain.
+                    let (_, c0) = mapping.origin(&mapping.tiles[ti]);
+                    let es = &e[s * n + c0..s * n + c0 + tc];
+                    let eq = &mut strip.eq[..tc];
+                    for (q, &v) in eq.iter_mut().zip(es) {
+                        *q = dac.convert(v);
+                    }
+                    debug_assert_eq!(tr, strip_rows);
+                    for (c, &ev) in eq.iter().enumerate() {
+                        if ev == 0.0 {
+                            continue;
+                        }
+                        for (r, yr) in y.iter_mut().enumerate() {
+                            *yr += ev * w[r * tc + c];
+                        }
+                    }
+                }
+                // ADC once per logical row, after the last column-tile
+                // (digital accumulation at full precision across
+                // column-tiles, mirroring the forward kernel's
+                // once-per-column ADC).
+                for yr in y.iter_mut() {
+                    *yr = adc.convert(*yr);
+                }
+            }
+        });
+
+        // Serial deterministic gather: strip outputs → logical [m, k].
+        for (gr, strip) in rstrips.iter().enumerate() {
+            let t0 = &self.mapping.tiles[self.mapping.tile_index(gr, 0)];
+            let (r0, _) = self.mapping.origin(t0);
+            let strip_rows = t0.used_rows;
+            for s in 0..m {
+                out[s * k + r0..s * k + r0 + strip_rows].copy_from_slice(
+                    &strip.out[s * strip_rows..(s + 1) * strip_rows]);
+            }
+        }
+    }
+
+    /// Allocating wrapper of [`CrossbarGrid::vmm_t_batch_into`].
+    pub fn vmm_t_batch(&self, e: &[f32], m: usize, t_now: f32,
+                       round: u64, pool: &WorkerPool) -> Vec<f32> {
+        let mut scratch = self.scratch();
+        let mut out = vec![0.0; m * self.k()];
+        self.vmm_t_batch_into(e, m, t_now, round, pool, &mut scratch,
+                              &mut out);
+        out
+    }
+
     // -- accounting --------------------------------------------------------
 
     /// Fold every tile's device activity into an endurance ledger
@@ -467,6 +597,12 @@ impl CrossbarGrid {
         for t in &self.tiles {
             t.weights.record_endurance(ledger);
         }
+    }
+
+    /// Inference model bits held by this grid (MSB arrays only — the
+    /// hybrid representation's inference footprint, paper Fig. 4).
+    pub fn inference_bits(&self) -> usize {
+        self.tiles.iter().map(|t| t.weights.inference_bits()).sum()
     }
 
     /// Lifetime SET pulses across all tiles (G+ and G− planes).
@@ -519,13 +655,38 @@ mod tests {
             DacSpec::default(), AdcSpec::default(), 11);
         let w = pattern(9, 5);
         g.program_init(&w, 0.0, 0, &pool);
+        let mut scratch = g.scratch();
         let mut got = vec![0.0f32; 9 * 5];
-        g.drift_into(0.0, &pool, &mut got);
+        g.drift_into(0.0, &pool, &mut scratch, &mut got);
         // Ideal linear devices: programmed to within one pulse quantum
         // through the conductance map.
         for (a, b) in w.iter().zip(&got) {
             assert!((a - b).abs() <= 0.13, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn vmm_t_worker_invariant_smoke() {
+        let params = PcmParams::default();
+        let g = {
+            let mut g = CrossbarGrid::new(
+                params, HicGeometry::default(), 12, 9,
+                TilingPolicy { tile_rows: 5, tile_cols: 4 },
+                DacSpec::default(), AdcSpec::default(), 21);
+            g.program_init(&pattern(12, 9), 0.0, 7, &WorkerPool::serial());
+            g
+        };
+        let m = 3;
+        let e: Vec<f32> =
+            (0..m * 9).map(|i| ((i % 7) as f32 - 3.0) / 4.0).collect();
+        let y1 = g.vmm_t_batch(&e, m, 2.0, 5, &WorkerPool::new(1));
+        let y2 = g.vmm_t_batch(&e, m, 2.0, 5, &WorkerPool::new(4));
+        assert_eq!(y1, y2);
+        assert_eq!(y1.len(), m * 12);
+        // A different round draws different noise, and the forward op
+        // stream is independent of the transposed one.
+        let y3 = g.vmm_t_batch(&e, m, 2.0, 6, &WorkerPool::new(1));
+        assert_ne!(y1, y3);
     }
 
     #[test]
@@ -559,8 +720,9 @@ mod tests {
             TilingPolicy { tile_rows: 2, tile_cols: 2 },
             DacSpec::default(), AdcSpec::default(), 3);
         assert_eq!(g.total_set_pulses(), 0);
+        let mut scratch = g.scratch();
         let dw = vec![0.25f32; 16];
-        let pulses = g.program_increments(&dw, 0.0, 1, &pool);
+        let pulses = g.program_increments(&dw, 0.0, 1, &pool, &mut scratch);
         assert!(pulses > 0);
         assert_eq!(pulses, g.total_set_pulses());
         let mut ledger = EnduranceLedger::new();

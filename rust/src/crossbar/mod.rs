@@ -12,12 +12,18 @@
 //!   planes with quantized I/O (the host-side oracle of the L1 kernel).
 //!   Batched reads evaluate drift once per invocation into a reusable
 //!   [`tile::TileScratch`] and draw fresh per-sample read noise (batched
-//!   Box–Muller fill) — no per-sample allocation or re-read of the array.
+//!   Box–Muller fill) — no per-sample allocation or re-read of the
+//!   array.  The forward and **transposed** kernels
+//!   (`vmm_batch_into` / `vmm_t_batch_into`) share one
+//!   noisy-weight-read helper, the single in-tree copy of the
+//!   DAC/read/MAC/ADC weight-read sequence.
 //! * [`grid`] — the sharded multi-tile engine: one logical weight matrix
 //!   on an R×C grid of tiles, kernels run tile- / column-strip-parallel
-//!   on a `util::pool::WorkerPool` with counter-based per-shard RNG
-//!   streams (bitwise identical for any worker count; bit-compatible
-//!   with the serial single-tile path in the noise-free domain)
+//!   (forward VMM) / row-strip-parallel (transposed VMM, the
+//!   error-backpropagation pass) on a `util::pool::WorkerPool` with
+//!   counter-based per-shard RNG streams (bitwise identical for any
+//!   worker count; bit-compatible with the serial single-tile path in
+//!   the noise-free domain)
 //! * [`energy`] — energy / latency / area estimator with published-order
 //!   constants (ISAAC-class periphery), used for the architecture
 //!   comparisons in DESIGN.md and the `crossbar_explorer` example

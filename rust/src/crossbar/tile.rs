@@ -31,6 +31,7 @@
 //! property suite pins it.
 
 use crate::hic::weight::HicWeight;
+use crate::pcm::array::DifferentialPair;
 use crate::util::rng::Pcg64;
 
 use super::quant::{AdcSpec, DacSpec};
@@ -43,13 +44,57 @@ pub struct CrossbarTile {
 
 /// Reusable per-tile read buffers: drifted conductance planes (valid for
 /// one `t_now`), the per-sample effective-weight read, the batched
-/// read-noise deviates and the quantized input row.
+/// read-noise deviates and the quantized input row / error column.
 pub struct TileScratch {
     gp: Vec<f32>,
     gm: Vec<f32>,
     w: Vec<f32>,
     noise: Vec<f32>,
     xq: Vec<f32>,
+    eq: Vec<f32>,
+}
+
+/// One fresh stochastic read of a differential tile's effective weights
+/// into `w` (`len = rows·cols`): the G+ noise plane is drawn first, then
+/// G−, each with the batched Box–Muller fill, then the clamped
+/// differential is scaled to weight units.  `gp`/`gm` are the drifted
+/// conductance planes (valid for the invocation's `t_now`); `noise` is a
+/// same-length deviate buffer.
+///
+/// This is the **single in-tree copy** of the noisy-weight-read sequence
+/// shared by [`CrossbarTile::vmm_batch_into`], the grid's column-strip
+/// forward kernel and the row-strip transposed kernel
+/// (`CrossbarGrid::{vmm_batch_into, vmm_t_batch_into}`) — the RNG draw
+/// order (G+ plane, then G−, per sample) is part of the grid determinism
+/// contract and of the golden oracle mirror, so keep them in sync.
+pub(crate) fn read_noisy_weights(msb: &DifferentialPair, gp: &[f32],
+                                 gm: &[f32], rng: &mut Pcg64,
+                                 noise: &mut [f32], w: &mut [f32]) {
+    let (noise_p, sigma_p) =
+        (msb.plus.params.read_noise, msb.plus.params.read_sigma);
+    let (noise_m, sigma_m) =
+        (msb.minus.params.read_noise, msb.minus.params.read_sigma);
+    let scale = msb.g_to_w(1.0);
+    if noise_p {
+        rng.fill_gaussian(noise, 0.0, 1.0);
+        for ((wv, &g), &z) in w.iter_mut().zip(gp).zip(noise.iter()) {
+            *wv = (g + sigma_p * z).clamp(0.0, 1.0);
+        }
+    } else {
+        for (wv, &g) in w.iter_mut().zip(gp) {
+            *wv = g.clamp(0.0, 1.0);
+        }
+    }
+    if noise_m {
+        rng.fill_gaussian(noise, 0.0, 1.0);
+        for ((wv, &g), &z) in w.iter_mut().zip(gm).zip(noise.iter()) {
+            *wv = (*wv - (g + sigma_m * z).clamp(0.0, 1.0)) * scale;
+        }
+    } else {
+        for (wv, &g) in w.iter_mut().zip(gm) {
+            *wv = (*wv - g.clamp(0.0, 1.0)) * scale;
+        }
+    }
 }
 
 impl CrossbarTile {
@@ -74,6 +119,7 @@ impl CrossbarTile {
             w: vec![0.0; n],
             noise: vec![0.0; n],
             xq: vec![0.0; self.rows()],
+            eq: vec![0.0; self.cols()],
         }
     }
 
@@ -114,49 +160,11 @@ impl CrossbarTile {
         msb.plus.drift_into(t_now, &mut scratch.gp);
         msb.minus.drift_into(t_now, &mut scratch.gm);
 
-        // Each plane keeps its own noise model (arrays of a pair may be
-        // configured asymmetrically), like the scalar read path.
-        let (noise_p, sigma_p) =
-            (msb.plus.params.read_noise, msb.plus.params.read_sigma);
-        let (noise_m, sigma_m) =
-            (msb.minus.params.read_noise, msb.minus.params.read_sigma);
-        let scale = msb.g_to_w(1.0);
-
         for s in 0..m {
-            // Fresh stochastic read of the whole array for this sample:
-            // G+ noise plane first, then G−, each filled with the
-            // batched Box–Muller stream.
-            if noise_p {
-                rng.fill_gaussian(&mut scratch.noise, 0.0, 1.0);
-                for ((w, &gp), &z) in scratch
-                    .w
-                    .iter_mut()
-                    .zip(&scratch.gp)
-                    .zip(&scratch.noise)
-                {
-                    *w = (gp + sigma_p * z).clamp(0.0, 1.0);
-                }
-            } else {
-                for (w, &gp) in scratch.w.iter_mut().zip(&scratch.gp) {
-                    *w = gp.clamp(0.0, 1.0);
-                }
-            }
-            if noise_m {
-                rng.fill_gaussian(&mut scratch.noise, 0.0, 1.0);
-                for ((w, &gm), &z) in scratch
-                    .w
-                    .iter_mut()
-                    .zip(&scratch.gm)
-                    .zip(&scratch.noise)
-                {
-                    *w = (*w - (gm + sigma_m * z).clamp(0.0, 1.0))
-                        * scale;
-                }
-            } else {
-                for (w, &gm) in scratch.w.iter_mut().zip(&scratch.gm) {
-                    *w = (*w - gm.clamp(0.0, 1.0)) * scale;
-                }
-            }
+            // Fresh stochastic read of the whole array for this sample
+            // (shared sequence: G+ noise plane first, then G−).
+            read_noisy_weights(msb, &scratch.gp, &scratch.gm, rng,
+                               &mut scratch.noise, &mut scratch.w);
 
             // DAC the input row, then a row-major inner loop over the
             // flat weight slice (autovectorizes per output column).
@@ -179,6 +187,64 @@ impl CrossbarTile {
                 *yc = self.adc.convert(*yc);
             }
         }
+    }
+
+    /// Batched **transposed** analog VMM (`e: [m, cols]` row-major error
+    /// inputs, `out: [m, rows]`): `y = ADC(DAC(e) @ W_read(t)ᵀ)` — the
+    /// backward pass of on-grid training, where the error vector drives
+    /// the tile's columns and the partial sums are read out on the rows.
+    /// Same drift/read discipline as [`CrossbarTile::vmm_batch_into`]:
+    /// drift once per batch, one fresh whole-array stochastic read per
+    /// sample (G+ plane first, then G−), zero allocations.  Allocating
+    /// wrapper: [`CrossbarTile::vmm_t_batch`].
+    pub fn vmm_t_batch_into(&self, e: &[f32], m: usize, t_now: f32,
+                            rng: &mut Pcg64, scratch: &mut TileScratch,
+                            out: &mut [f32]) {
+        let (rows, cols) = (self.rows(), self.cols());
+        assert_eq!(e.len(), m * cols);
+        assert_eq!(out.len(), m * rows);
+        let msb = &self.weights.msb;
+        assert_eq!(scratch.w.len(), msb.len());
+        assert_eq!(scratch.eq.len(), cols, "scratch shape != tile shape");
+
+        msb.plus.drift_into(t_now, &mut scratch.gp);
+        msb.minus.drift_into(t_now, &mut scratch.gm);
+
+        for s in 0..m {
+            read_noisy_weights(msb, &scratch.gp, &scratch.gm, rng,
+                               &mut scratch.noise, &mut scratch.w);
+
+            // DAC the error row, then accumulate column-by-column into
+            // the row sums (per output row the term order is ascending
+            // logical column — the op order the grid's row-strip shards
+            // reproduce exactly).
+            let es = &e[s * cols..(s + 1) * cols];
+            for (q, &v) in scratch.eq.iter_mut().zip(es) {
+                *q = self.dac.convert(v);
+            }
+            let y = &mut out[s * rows..(s + 1) * rows];
+            y.fill(0.0);
+            for (c, &ev) in scratch.eq.iter().enumerate() {
+                if ev == 0.0 {
+                    continue;
+                }
+                for (r, yr) in y.iter_mut().enumerate() {
+                    *yr += ev * scratch.w[r * cols + c];
+                }
+            }
+            for yr in y.iter_mut() {
+                *yr = self.adc.convert(*yr);
+            }
+        }
+    }
+
+    /// Allocating wrapper of [`CrossbarTile::vmm_t_batch_into`].
+    pub fn vmm_t_batch(&self, e: &[f32], m: usize, t_now: f32,
+                       rng: &mut Pcg64) -> Vec<f32> {
+        let mut scratch = self.scratch();
+        let mut out = vec![0.0; m * self.rows()];
+        self.vmm_t_batch_into(e, m, t_now, rng, &mut scratch, &mut out);
+        out
     }
 }
 
@@ -288,6 +354,53 @@ mod tests {
                                        &mut rng_seq));
         }
         assert_eq!(batched, sequential);
+    }
+
+    #[test]
+    fn ideal_vmm_t_matches_host_transposed_matmul() {
+        let rows = 6;
+        let cols = 5;
+        let w: Vec<f32> =
+            (0..rows * cols).map(|i| ((i % 7) as f32 - 3.0) / 5.0).collect();
+        let tile = ideal_tile(rows, cols, &w);
+        let wq = tile.weights.decode(0.0);
+        let e: Vec<f32> = (0..cols).map(|i| (i as f32) / 3.0 - 0.5).collect();
+        let mut rng = Pcg64::new(14, 0);
+        let y = tile.vmm_t_batch(&e, 1, 0.0, &mut rng);
+        assert_eq!(y.len(), rows);
+        for r in 0..rows {
+            let mut acc = 0f32;
+            for c in 0..cols {
+                acc += tile.dac.convert(e[c]) * wq[r * cols + c];
+            }
+            let expect = tile.adc.convert(acc);
+            assert!((y[r] - expect).abs() < 1e-5,
+                    "row {r}: {} vs {expect}", y[r]);
+        }
+    }
+
+    #[test]
+    fn vmm_t_consumes_same_stream_as_forward() {
+        // Per sample both kernels draw one G+ and one G− noise plane, so
+        // with equal seeds the RNG ends in the same state.
+        let rows = 5;
+        let cols = 4;
+        let mut rng = Pcg64::new(23, 0);
+        let geom = HicGeometry { stochastic_rounding: false,
+                                 ..Default::default() };
+        let mut hw = HicWeight::new(PcmParams::default(), geom, rows, cols,
+                                    &mut rng);
+        hw.program_init(&vec![0.3; rows * cols], 0.0, &mut rng);
+        let tile =
+            CrossbarTile::new(hw, DacSpec::default(), AdcSpec::default());
+        let m = 2;
+        let x = vec![0.5f32; m * rows];
+        let e = vec![0.5f32; m * cols];
+        let mut ra = Pcg64::new(91, 3);
+        let mut rb = Pcg64::new(91, 3);
+        tile.vmm_batch(&x, m, 0.0, &mut ra);
+        tile.vmm_t_batch(&e, m, 0.0, &mut rb);
+        assert_eq!(ra.next_u64(), rb.next_u64());
     }
 
     #[test]

@@ -27,9 +27,14 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::gridtrainer::{GridTrainer, GridTrainerOptions,
                                       EVAL_ROUND_BASE};
+use crate::coordinator::nettrainer::{NetTrainer, NetTrainerOptions};
 use crate::coordinator::schedule::LrSchedule;
 use crate::crossbar::TilingPolicy;
+use crate::data::{IMG_C, IMG_H, IMG_W, NUM_CLASSES};
 use crate::hic::weight::HicGeometry;
+use crate::nn::features::{BlobDataset, FeatureSource, PooledCifar};
+use crate::nn::net::NetSpec;
+use crate::nn::FpNet;
 use crate::pcm::device::PcmParams;
 use crate::util::json::Json;
 use crate::util::pool::WorkerPool;
@@ -255,6 +260,220 @@ pub fn run_fig6(opts: &GridExpOptions) -> Result<Json> {
     Ok(Json::obj(doc))
 }
 
+// -- FIG4 (grid-routed): the multi-layer width sweep ---------------------
+
+/// Feature source of the fig4 device sweep.
+#[derive(Clone, Debug)]
+pub enum NnExpData {
+    /// portable Gaussian blobs (no libm — the golden-pinned source)
+    Blobs { dim: usize },
+    /// pooled synthetic CIFAR from the `data` pipeline (default)
+    Cifar { pool: usize },
+}
+
+/// Parameters of the grid-routed fig4 width sweep.
+#[derive(Clone, Debug)]
+pub struct NnExpOptions {
+    pub data: NnExpData,
+    /// base hidden widths, scaled by each width multiplier
+    pub hidden_base: Vec<usize>,
+    /// width multipliers in permille (integers keep documents
+    /// byte-stable)
+    pub widths_permille: Vec<u32>,
+    /// classes (blobs; the CIFAR source is always 10)
+    pub classes: usize,
+    pub steps: usize,
+    pub batch: usize,
+    /// square physical tile size
+    pub tile: usize,
+    /// evaluation samples per accuracy point
+    pub eval_n: usize,
+    pub train_len: usize,
+    pub test_len: usize,
+    pub lr: f32,
+    /// blob per-feature noise σ
+    pub blob_noise: f32,
+    pub seed: u64,
+    /// worker threads (0 = `HIC_WORKERS` / machine default)
+    pub workers: usize,
+    pub out_dir: PathBuf,
+}
+
+impl Default for NnExpOptions {
+    fn default() -> Self {
+        NnExpOptions {
+            data: NnExpData::Cifar { pool: 8 },
+            hidden_base: vec![32, 16],
+            widths_permille: vec![500, 750, 1000, 1500],
+            classes: 10,
+            steps: 150,
+            batch: 16,
+            tile: 32,
+            eval_n: 200,
+            train_len: 2000,
+            test_len: 500,
+            lr: 0.1,
+            blob_noise: 0.5,
+            seed: 42,
+            workers: 0,
+            out_dir: PathBuf::from("results"),
+        }
+    }
+}
+
+impl NnExpOptions {
+    pub fn pool(&self) -> WorkerPool {
+        if self.workers == 0 {
+            WorkerPool::from_env()
+        } else {
+            WorkerPool::new(self.workers)
+        }
+    }
+
+    fn feature_source(&self) -> FeatureSource {
+        match self.data {
+            NnExpData::Blobs { dim } => FeatureSource::Blobs(
+                BlobDataset::new(self.seed, dim, self.classes,
+                                 self.blob_noise, self.train_len,
+                                 self.test_len)),
+            NnExpData::Cifar { pool } => FeatureSource::Cifar(
+                PooledCifar::new(self.seed, pool, self.train_len,
+                                 self.test_len)),
+        }
+    }
+
+    /// Feature dimension of the configured source, computed without
+    /// building a dataset (the CIFAR source generates its class
+    /// prototypes at construction — don't pay that just for a shape).
+    fn input_dim(&self) -> usize {
+        match self.data {
+            NnExpData::Blobs { dim } => dim,
+            NnExpData::Cifar { pool } => {
+                (IMG_H / pool) * (IMG_W / pool) * IMG_C
+            }
+        }
+    }
+
+    fn data_classes(&self) -> usize {
+        match self.data {
+            NnExpData::Blobs { .. } => self.classes,
+            NnExpData::Cifar { .. } => NUM_CLASSES,
+        }
+    }
+
+    fn spec(&self, width_permille: u32) -> NetSpec {
+        NetSpec {
+            input: self.input_dim(),
+            hidden_base: self.hidden_base.clone(),
+            classes: self.data_classes(),
+            width_permille,
+        }
+    }
+
+    fn echo(&self) -> Vec<(&'static str, Json)> {
+        let (data_tag, data_param) = match self.data {
+            NnExpData::Blobs { dim } => ("blobs", dim),
+            NnExpData::Cifar { pool } => ("cifar_pooled", pool),
+        };
+        vec![
+            ("experiment", Json::str("fig4_grid")),
+            ("data", Json::str(data_tag)),
+            ("data_param", Json::Num(data_param as f64)),
+            ("input", Json::Num(self.input_dim() as f64)),
+            ("classes", Json::Num(self.data_classes() as f64)),
+            ("hidden_base", Json::Arr(
+                self.hidden_base.iter()
+                    .map(|&h| Json::Num(h as f64)).collect())),
+            ("steps", Json::Num(self.steps as f64)),
+            ("batch", Json::Num(self.batch as f64)),
+            ("tile", Json::Num(self.tile as f64)),
+            ("eval_n", Json::Num(self.eval_n as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+        ]
+    }
+}
+
+/// FIG4 (grid-routed): accuracy vs inference model size across width
+/// multipliers, multi-layer training **on the device grids** (forward
+/// analog VMM, transposed-VMM backprop, hybrid updates) against the
+/// FP32 host baseline of the same architecture.  Device model: linear,
+/// read noise on (every consumed op portable, so the document is
+/// byte-stable and golden-pinnable).
+pub fn run_fig4(opts: &NnExpOptions) -> Result<Json> {
+    if opts.widths_permille.is_empty() {
+        bail!("fig4 needs at least one width multiplier");
+    }
+    let params = PcmParams {
+        nonlinear: false,
+        write_noise: false,
+        read_noise: true,
+        drift: false,
+        drift_nu_sigma: 0.0,
+        ..Default::default()
+    };
+    let policy =
+        TilingPolicy { tile_rows: opts.tile, tile_cols: opts.tile };
+    let mut rows = Vec::new();
+    for &w in &opts.widths_permille {
+        let dims = opts.spec(w).dims();
+        let mut t = NetTrainer::new(
+            params, &dims, policy, opts.feature_source(), opts.pool(),
+            NetTrainerOptions {
+                seed: opts.seed,
+                lr: LrSchedule::constant(opts.lr),
+                refresh_every: 0,
+                batch: opts.batch,
+                ..Default::default()
+            });
+        t.train_steps(opts.steps);
+        let (eval_loss, acc) = t.evaluate(opts.eval_n, t.clock.now_f32());
+        let train_loss = *t.losses.last().unwrap_or(&f64::NAN);
+        let bits = t.net.inference_bits();
+        log_info!(
+            "fig4-grid hic w={:.2}: dims {:?}, {} bits, eval acc \
+             {acc:.3}, eval loss {eval_loss:.3}",
+            w as f64 / 1000.0, dims, bits);
+        rows.push(Json::obj(vec![
+            ("series", Json::str("hic")),
+            ("width_permille", Json::Num(w as f64)),
+            ("model_bits", Json::Num(bits as f64)),
+            ("eval_acc_u6", u6(acc)),
+            ("eval_loss_u6", u6(eval_loss)),
+            ("final_train_loss_u6", u6(train_loss)),
+            ("overflows", Json::Num(t.overflows as f64)),
+            ("set_pulses", Json::Num(t.total_set_pulses() as f64)),
+        ]));
+    }
+    for &w in &opts.widths_permille {
+        let dims = opts.spec(w).dims();
+        let data = opts.feature_source();
+        let mut net = FpNet::new(&dims, 2.0, opts.seed);
+        net.train_steps(&data, opts.steps, opts.batch, opts.lr);
+        let (eval_loss, acc) =
+            net.evaluate(&data, opts.eval_n, opts.batch);
+        let train_loss = *net.losses.last().unwrap_or(&f64::NAN);
+        let bits = net.inference_bits();
+        log_info!(
+            "fig4-grid fp32 w={:.2}: dims {:?}, {} bits, eval acc \
+             {acc:.3}, eval loss {eval_loss:.3}",
+            w as f64 / 1000.0, dims, bits);
+        rows.push(Json::obj(vec![
+            ("series", Json::str("fp32")),
+            ("width_permille", Json::Num(w as f64)),
+            ("model_bits", Json::Num(bits as f64)),
+            ("eval_acc_u6", u6(acc)),
+            ("eval_loss_u6", u6(eval_loss)),
+            ("final_train_loss_u6", u6(train_loss)),
+        ]));
+    }
+    let mut doc = opts.echo();
+    doc.push(("widths_permille", Json::Arr(
+        opts.widths_permille.iter()
+            .map(|&w| Json::Num(w as f64)).collect())));
+    doc.push(("rows", Json::Arr(rows)));
+    Ok(Json::obj(doc))
+}
+
 /// Write a metric document under the experiment output directory.
 pub fn write_json(dir: &Path, name: &str, doc: &Json) -> Result<PathBuf> {
     ensure_out_dir(dir)?;
@@ -297,6 +516,53 @@ mod tests {
                         "{key} = {num} not integral");
             }
         }
+    }
+
+    fn tiny_nn() -> NnExpOptions {
+        NnExpOptions {
+            data: NnExpData::Blobs { dim: 6 },
+            hidden_base: vec![4, 3],
+            widths_permille: vec![500, 1000],
+            classes: 3,
+            steps: 4,
+            batch: 3,
+            tile: 3,
+            eval_n: 6,
+            train_len: 30,
+            test_len: 12,
+            lr: 0.05, // pinned: the golden/oracle TINY_NN config
+            workers: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fig4_document_shape_and_worker_invariance() {
+        let doc = run_fig4(&tiny_nn()).unwrap();
+        assert_eq!(doc.get("experiment").unwrap().as_str().unwrap(),
+                   "fig4_grid");
+        let rows = doc.get("rows").unwrap().as_arr().unwrap();
+        // One HIC + one FP32 row per width, HIC first.
+        assert_eq!(rows.len(), 4);
+        for (i, r) in rows.iter().enumerate() {
+            let series = r.get("series").unwrap().as_str().unwrap();
+            assert_eq!(series, if i < 2 { "hic" } else { "fp32" });
+            for key in ["width_permille", "model_bits", "eval_acc_u6",
+                        "eval_loss_u6", "final_train_loss_u6"] {
+                let num = r.get(key).unwrap().as_f64().unwrap();
+                assert!(num.is_finite() && num.fract() == 0.0,
+                        "{key} = {num} not integral");
+            }
+        }
+        // The hybrid representation must actually be smaller: 4 bits
+        // vs 32 at equal width.
+        let hic_bits = rows[1].get("model_bits").unwrap().as_f64().unwrap();
+        let fp_bits = rows[3].get("model_bits").unwrap().as_f64().unwrap();
+        assert_eq!(fp_bits, 8.0 * hic_bits);
+        // Document is worker-count invariant.
+        let w4 = run_fig4(&NnExpOptions { workers: 4, ..tiny_nn() })
+            .unwrap();
+        assert_eq!(doc.to_string(), w4.to_string());
     }
 
     #[test]

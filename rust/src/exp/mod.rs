@@ -16,7 +16,10 @@
 //! [`gridexp`] routes the fig3/fig5/fig6 shapes through the sharded
 //! crossbar grid device model instead of the artifacts (runs anywhere
 //! the crate builds; byte-stable metric JSON pinned by the golden
-//! regression suite).  The CLI exposes it as `--device-grid`.
+//! regression suite), and `gridexp::run_fig4` runs the fig4 width
+//! sweep as true **multi-layer on-grid training** (per-layer crossbar
+//! grids, transposed-VMM backprop, FP32 host baseline).  The CLI
+//! exposes all of it as `--device-grid`.
 
 pub mod fig3;
 pub mod fig4;

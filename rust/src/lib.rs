@@ -35,6 +35,13 @@
 //! kernels by the SoA-equivalence property suite, and the grid is pinned
 //! against the serial single-tile path by the parallel-equivalence
 //! suite.
+//!
+//! On top of the grid sits the [`nn`] subsystem: a layered feed-forward
+//! network whose every weight matrix lives on its own `CrossbarGrid`
+//! (forward = analog VMM, backward = analog **transposed** VMM on the
+//! same crossbars, updates = per-layer hybrid LSB/MSB cycle), driven by
+//! [`coordinator::nettrainer::NetTrainer`] — the device-level
+//! multi-layer training path behind the grid-routed fig4 width sweep.
 
 pub mod bench;
 pub mod coordinator;
@@ -42,6 +49,7 @@ pub mod crossbar;
 pub mod data;
 pub mod exp;
 pub mod hic;
+pub mod nn;
 pub mod pcm;
 pub mod runtime;
 pub mod testutil;

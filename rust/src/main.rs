@@ -68,8 +68,10 @@ fn print_usage() {
          \x20 fig5       drift + AdaBS study            (paper Fig. 5)\n\
          \x20 fig6       write–erase cycle histograms   (paper Fig. 6)\n\
          \x20 info       inspect an artifact set\n\n\
-         fig3/fig5/fig6 accept --device-grid to run on the sharded\n\
-         crossbar grid device model (no artifacts needed).\n\
+         fig3/fig4/fig5/fig6 accept --device-grid to run on the sharded\n\
+         crossbar grid device model (no artifacts needed); fig4's grid\n\
+         path trains multi-layer networks with per-layer crossbar\n\
+         grids and transposed-VMM backprop.\n\
          run any subcommand with --help for its options"
     );
 }
@@ -247,11 +249,99 @@ fn cmd_fig3(args: &[String]) -> Result<()> {
 
 fn cmd_fig4(args: &[String]) -> Result<()> {
     let spec = common_exp_spec(
-        "fig4", "width sweep: accuracy vs model size (paper Fig. 4)");
+        "fig4", "width sweep: accuracy vs model size (paper Fig. 4)")
+        .flag("device-grid",
+              "run the multi-layer sweep on the crossbar grid device \
+               model (per-layer grids, transposed-VMM backprop)")
+        .opt("nn-data", "cifar",
+             "[device-grid] feature source: cifar (pooled synthetic) \
+              or blobs (portable)")
+        .opt("nn-pool", "8", "[device-grid] CIFAR pooling factor")
+        .opt("nn-dim", "32", "[device-grid] blob feature dimension")
+        .opt("nn-hidden", "32,16", "[device-grid] base hidden widths")
+        .opt("widths", "0.5,0.75,1.0,1.5",
+             "[device-grid] width multipliers")
+        .opt("nn-steps", "150", "[device-grid] training steps")
+        .opt("nn-batch", "16", "[device-grid] batch size")
+        .opt("nn-tile", "32", "[device-grid] physical tile size")
+        .opt("nn-eval", "200", "[device-grid] evaluation samples")
+        .opt("nn-lr", "0.1", "[device-grid] learning rate")
+        .opt("workers", "0",
+             "[device-grid] worker threads (0 = HIC_WORKERS/auto)");
     let m = spec.parse(args)?;
+    if m.flag("device-grid") {
+        let nopts = parse_nn_opts(&m)?;
+        let doc = exp::gridexp::run_fig4(&nopts)?;
+        exp::gridexp::write_json(&nopts.out_dir, "fig4_grid.json", &doc)?;
+        return Ok(());
+    }
     let opts = parse_exp(&m)?;
     exp::fig4::run(&opts)?;
     Ok(())
+}
+
+fn parse_nn_opts(m: &hic_train::util::cli::Matches)
+                 -> Result<hic_train::exp::gridexp::NnExpOptions> {
+    use hic_train::exp::gridexp::{NnExpData, NnExpOptions};
+    if m.flag("verbose") {
+        set_level(Level::Debug);
+    }
+    let data = match m.str("nn-data")? {
+        "cifar" => {
+            let pool = m.usize("nn-pool")?;
+            if pool == 0 || 32 % pool != 0 {
+                bail!("--nn-pool must divide the 32x32 image \
+                       (1, 2, 4, 8, 16 or 32)");
+            }
+            NnExpData::Cifar { pool }
+        }
+        "blobs" => NnExpData::Blobs { dim: m.usize("nn-dim")? },
+        other => bail!("unknown --nn-data '{other}' (cifar | blobs)"),
+    };
+    let hidden_base = m
+        .list("nn-hidden")
+        .iter()
+        .map(|s| s.parse::<usize>())
+        .collect::<std::result::Result<Vec<_>, _>>()?;
+    let widths_permille = m
+        .list("widths")
+        .iter()
+        .map(|s| -> Result<u32> {
+            let w: f64 = s.parse()?;
+            if !(0.001..=64.0).contains(&w) {
+                bail!("width multiplier {w} out of range");
+            }
+            Ok((w * 1000.0 + 0.5).floor() as u32)
+        })
+        .collect::<Result<Vec<_>>>()?;
+    if hidden_base.is_empty() || widths_permille.is_empty() {
+        bail!("--nn-hidden and --widths must be non-empty");
+    }
+    for key in ["nn-pool", "nn-dim", "nn-steps", "nn-batch", "nn-tile",
+                "nn-eval"] {
+        if m.usize(key)? == 0 {
+            bail!("--{key} must be >= 1");
+        }
+    }
+    Ok(NnExpOptions {
+        data,
+        hidden_base,
+        widths_permille,
+        steps: m.usize("nn-steps")?,
+        batch: m.usize("nn-batch")?,
+        tile: m.usize("nn-tile")?,
+        eval_n: m.usize("nn-eval")?,
+        lr: m.f32("nn-lr")?,
+        seed: m
+            .list("seeds")
+            .first()
+            .map(|s| s.parse::<u64>())
+            .transpose()?
+            .unwrap_or(42),
+        workers: m.usize("workers")?,
+        out_dir: PathBuf::from(m.str("out")?),
+        ..Default::default()
+    })
 }
 
 fn cmd_fig5(args: &[String]) -> Result<()> {

@@ -1,0 +1,232 @@
+//! FP32 host baseline of the on-grid network — the digital reference
+//! the device-level fig4 sweep compares model sizes against.
+//!
+//! Same architecture, initialization scale and loss as [`DeviceNet`]
+//! (ReLU MLP, softmax cross-entropy, plain SGD), but weights are plain
+//! f32 matrices updated exactly (32 bits/weight at inference vs the
+//! HIC grids' 4).  Every consumed op is portable f32/f64 arithmetic on
+//! the `fastmath` nonlinearities, deterministic in loop order, so the
+//! baseline rows of the fig4 document are byte-stable and
+//! oracle-mirrored like the device rows.
+
+use crate::nn::features::FeatureSource;
+use crate::nn::net::{argmax_row, layer_seed, nll_sum, softmax_rows};
+use crate::util::rng::Pcg64;
+
+/// Stream tag of the baseline's weight-initialization draws (distinct
+/// from the device net's, so the two models are independent draws of
+/// the same distribution).
+const INIT_STREAM: u64 = 0xF32B;
+
+/// Plain f32 MLP trained with SGD on the host.
+pub struct FpNet {
+    /// layer-size chain: layer `l` maps `dims[l] → dims[l+1]`
+    pub dims: Vec<usize>,
+    /// per-layer row-major `[k, n]` weight matrices
+    pub w: Vec<Vec<f32>>,
+    pub seed: u64,
+    /// per-step mean training cross-entropy
+    pub losses: Vec<f64>,
+    step: usize,
+}
+
+impl FpNet {
+    /// Same init law as the device net: layer `l` draws uniform in
+    /// `±(w_scale/√fan_in)/2` from its own stream.
+    pub fn new(dims: &[usize], w_scale: f32, seed: u64) -> Self {
+        assert!(dims.len() >= 2, "need at least one layer");
+        let mut w = Vec::with_capacity(dims.len() - 1);
+        for l in 0..dims.len() - 1 {
+            let (k, n) = (dims[l], dims[l + 1]);
+            let w_max = w_scale / (k as f32).sqrt();
+            let half = 0.5 * w_max;
+            let mut rng = Pcg64::new(layer_seed(seed, l), INIT_STREAM);
+            w.push((0..k * n)
+                .map(|_| rng.uniform_in(-half, half))
+                .collect());
+        }
+        FpNet { dims: dims.to_vec(), w, seed, losses: Vec::new(), step: 0 }
+    }
+
+    pub fn layers(&self) -> usize {
+        self.w.len()
+    }
+
+    pub fn classes(&self) -> usize {
+        *self.dims.last().unwrap()
+    }
+
+    /// Inference model bits (32 per weight).
+    pub fn inference_bits(&self) -> usize {
+        self.w.iter().map(|m| m.len() * 32).sum()
+    }
+
+    /// Forward pass over `m` samples: returns per-layer pre-activations
+    /// (`zs[l]: [m, dims[l+1]]`) and hidden ReLU outputs.
+    fn forward(&self, x: &[f32], m: usize)
+               -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let nl = self.layers();
+        let mut zs = Vec::with_capacity(nl);
+        let mut acts = Vec::with_capacity(nl - 1);
+        for l in 0..nl {
+            let (k, n) = (self.dims[l], self.dims[l + 1]);
+            let a_in: &[f32] = if l == 0 { x } else { &acts[l - 1] };
+            let wl = &self.w[l];
+            let mut z = vec![0.0f32; m * n];
+            for s in 0..m {
+                for j in 0..n {
+                    let mut acc = 0.0f32;
+                    for i in 0..k {
+                        acc += a_in[s * k + i] * wl[i * n + j];
+                    }
+                    z[s * n + j] = acc;
+                }
+            }
+            if l + 1 < nl {
+                let a: Vec<f32> = z
+                    .iter()
+                    .map(|&v| if v > 0.0 { v } else { 0.0 })
+                    .collect();
+                acts.push(a);
+            }
+            zs.push(z);
+        }
+        (zs, acts)
+    }
+
+    /// Run `steps` SGD steps on the feature source (sequential epoch
+    /// order, the device trainer's batch discipline).
+    pub fn train_steps(&mut self, data: &FeatureSource, steps: usize,
+                       batch: usize, lr: f32) {
+        let d0 = self.dims[0];
+        let classes = self.classes();
+        let nl = self.layers();
+        assert_eq!(d0, data.dim());
+        assert_eq!(classes, data.classes());
+        let m = batch;
+        let mut x = vec![0.0f32; m * d0];
+        let mut labels = vec![0u8; m];
+        let mut probs = vec![0.0f32; m * classes];
+        for _ in 0..steps {
+            for j in 0..m {
+                let idx = (self.step * m + j) % data.train_len();
+                labels[j] = data.sample_into(
+                    idx, false, &mut x[j * d0..(j + 1) * d0]);
+            }
+            let (zs, acts) = self.forward(&x, m);
+            softmax_rows(&zs[nl - 1], m, classes, &mut probs);
+            self.losses.push(nll_sum(&probs, &labels, classes) / m as f64);
+
+            // Output delta, then backprop and update layer by layer.
+            let mut delta = vec![0.0f32; m * classes];
+            for s in 0..m {
+                for j in 0..classes {
+                    let y = if labels[s] as usize == j { 1.0 } else { 0.0 };
+                    delta[s * classes + j] = probs[s * classes + j] - y;
+                }
+            }
+            let inv_m = 1.0f32 / m as f32;
+            for l in (0..nl).rev() {
+                let (k, n) = (self.dims[l], self.dims[l + 1]);
+                let a_in: &[f32] = if l == 0 { &x } else { &acts[l - 1] };
+                // Backprop through the pre-update weights first.
+                let prev = if l > 0 {
+                    let wl = &self.w[l];
+                    let zp = &zs[l - 1];
+                    let mut d = vec![0.0f32; m * k];
+                    for s in 0..m {
+                        for i in 0..k {
+                            let mut acc = 0.0f32;
+                            for j in 0..n {
+                                acc += delta[s * n + j] * wl[i * n + j];
+                            }
+                            d[s * k + i] =
+                                if zp[s * k + i] > 0.0 { acc } else { 0.0 };
+                        }
+                    }
+                    Some(d)
+                } else {
+                    None
+                };
+                let wl = &mut self.w[l];
+                for i in 0..k {
+                    for j in 0..n {
+                        let mut acc = 0.0f32;
+                        for s in 0..m {
+                            acc += a_in[s * k + i] * delta[s * n + j];
+                        }
+                        wl[i * n + j] -= lr * (acc * inv_m);
+                    }
+                }
+                if let Some(d) = prev {
+                    delta = d;
+                }
+            }
+            self.step += 1;
+        }
+    }
+
+    /// Mean cross-entropy and accuracy over the first `n` test samples.
+    pub fn evaluate(&self, data: &FeatureSource, n: usize,
+                    batch: usize) -> (f64, f64) {
+        let d0 = self.dims[0];
+        let classes = self.classes();
+        let nl = self.layers();
+        let mut hits = 0usize;
+        let mut loss_sum = 0.0f64;
+        let mut done = 0usize;
+        let mut x = vec![0.0f32; batch * d0];
+        let mut labels = vec![0u8; batch];
+        let mut probs = vec![0.0f32; batch * classes];
+        while done < n {
+            let mb = batch.min(n - done);
+            for j in 0..mb {
+                labels[j] = data.sample_into(
+                    done + j, true, &mut x[j * d0..(j + 1) * d0]);
+            }
+            let (zs, _) = self.forward(&x[..mb * d0], mb);
+            softmax_rows(&zs[nl - 1], mb, classes,
+                         &mut probs[..mb * classes]);
+            loss_sum += nll_sum(&probs[..mb * classes], &labels[..mb],
+                                classes);
+            for s in 0..mb {
+                let row = &probs[s * classes..(s + 1) * classes];
+                if argmax_row(row) == labels[s] as usize {
+                    hits += 1;
+                }
+            }
+            done += mb;
+        }
+        (loss_sum / n as f64, hits as f64 / n as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::features::BlobDataset;
+
+    #[test]
+    fn fp_net_learns_blobs() {
+        let data = FeatureSource::Blobs(
+            BlobDataset::new(3, 8, 4, 0.35, 400, 80));
+        let mut net = FpNet::new(&[8, 12, 8, 4], 2.0, 7);
+        let (_, acc0) = net.evaluate(&data, 80, 16);
+        net.train_steps(&data, 150, 16, 0.2);
+        let (loss, acc) = net.evaluate(&data, 80, 16);
+        assert!(acc > 0.9, "fp32 eval acc {acc} (from {acc0})");
+        assert!(acc > acc0);
+        assert!(loss < net.losses[0], "loss {loss} vs {}", net.losses[0]);
+        // Training loss trends down.
+        let early: f64 = net.losses[..10].iter().sum::<f64>() / 10.0;
+        let late: f64 =
+            net.losses[net.losses.len() - 10..].iter().sum::<f64>() / 10.0;
+        assert!(late < early * 0.7, "loss {early} -> {late}");
+    }
+
+    #[test]
+    fn model_bits_are_32_per_weight() {
+        let net = FpNet::new(&[6, 5, 3], 2.0, 1);
+        assert_eq!(net.inference_bits(), (6 * 5 + 5 * 3) * 32);
+    }
+}

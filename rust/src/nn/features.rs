@@ -1,0 +1,242 @@
+//! Feature sources feeding the on-grid network trainer.
+//!
+//! Two providers behind one [`FeatureSource`] enum:
+//!
+//! * [`PooledCifar`] — the existing `data` pipeline's structured
+//!   synthetic CIFAR ([`SyntheticDataset`]) reduced to a feature vector
+//!   by channel-preserving average pooling (`pool × pool` blocks).  The
+//!   default for training runs and the accuracy experiments: pooling
+//!   averages the per-pixel observation noise down by `pool` while the
+//!   low-frequency class prototypes survive, so a small MLP separates
+//!   the classes the way the full image pipeline does.  Sample
+//!   generation inherits the dataset's libm-based streams, so this
+//!   provider is **not** byte-stable across platforms — use it for
+//!   accuracy, not goldens.
+//! * [`BlobDataset`] — Gaussian blobs around per-class centroids drawn
+//!   from `Pcg64` uniforms, with sample noise from the batched
+//!   Box–Muller fill.  Every consumed op is portable f32/f64 arithmetic
+//!   (no libm), which is what lets the device-level fig4 golden
+//!   document pin the whole layered training loop byte-for-byte
+//!   (`rust/tests/golden/oracle.py` mirrors this generator op for op).
+//!
+//! Both providers are deterministic per `(seed, index, split)`: samples
+//! are generated on demand from counter-based streams (the synthetic
+//! CIFAR convention), so the trainer needs no stored dataset and the
+//! worker count can never affect the data.
+
+use crate::data::synthetic::SyntheticDataset;
+use crate::data::{IMG_C, IMG_H, IMG_W, NUM_CLASSES};
+use crate::util::rng::Pcg64;
+
+/// Stream tag of the blob centroid draws.
+const BLOB_CENTROID_STREAM: u64 = 0xB10B;
+/// Per-sample noise stream tags (split-dependent, synthetic-CIFAR
+/// convention: the index seeds, the stream selects the split).
+const BLOB_TRAIN_STREAM: u64 = 0xB1E4;
+const BLOB_TEST_STREAM: u64 = 0xB1E5;
+
+/// Gaussian blobs: class centroids uniform in `[-1, 1]^dim`, samples
+/// `centroid + σ·z` with `z` from `Pcg64::fill_gaussian` — fully
+/// portable arithmetic (see the module docs).
+pub struct BlobDataset {
+    pub dim: usize,
+    pub classes: usize,
+    /// per-feature sample noise σ
+    pub noise: f32,
+    pub seed: u64,
+    pub train_len: usize,
+    pub test_len: usize,
+    /// class-major centroid matrix, `[classes, dim]` row-major
+    centroids: Vec<f32>,
+}
+
+impl BlobDataset {
+    pub fn new(seed: u64, dim: usize, classes: usize, noise: f32,
+               train_len: usize, test_len: usize) -> Self {
+        let mut rng = Pcg64::new(seed, BLOB_CENTROID_STREAM);
+        let centroids = (0..classes * dim)
+            .map(|_| rng.uniform_in(-1.0, 1.0))
+            .collect();
+        BlobDataset { dim, classes, noise, seed, train_len, test_len,
+                      centroids }
+    }
+
+    /// Deterministic sample `i` of the train (or test) split into `x`;
+    /// returns the label.
+    pub fn sample_into(&self, i: usize, test: bool, x: &mut [f32]) -> u8 {
+        assert_eq!(x.len(), self.dim);
+        let stream =
+            if test { BLOB_TEST_STREAM } else { BLOB_TRAIN_STREAM };
+        let mut rng = Pcg64::new(i as u64, stream);
+        let class = (i % self.classes) as u8;
+        let c = &self.centroids
+            [class as usize * self.dim..(class as usize + 1) * self.dim];
+        rng.fill_gaussian(x, 0.0, self.noise);
+        for (v, &cv) in x.iter_mut().zip(c) {
+            *v = cv + *v;
+        }
+        class
+    }
+}
+
+/// Synthetic CIFAR images reduced to `(H/pool)·(W/pool)·C` features by
+/// block average pooling (channels kept separate).
+pub struct PooledCifar {
+    pub data: SyntheticDataset,
+    pub pool: usize,
+}
+
+impl PooledCifar {
+    pub fn new(seed: u64, pool: usize, train_len: usize,
+               test_len: usize) -> Self {
+        assert!(pool > 0 && IMG_H % pool == 0 && IMG_W % pool == 0,
+                "pool must divide the {IMG_H}x{IMG_W} image");
+        PooledCifar { data: SyntheticDataset::new(seed, train_len,
+                                                  test_len),
+                      pool }
+    }
+
+    pub fn dim(&self) -> usize {
+        (IMG_H / self.pool) * (IMG_W / self.pool) * IMG_C
+    }
+
+    pub fn sample_into(&self, i: usize, test: bool, x: &mut [f32]) -> u8 {
+        assert_eq!(x.len(), self.dim());
+        let (img, label) = self.data.sample(i, test);
+        let p = self.pool;
+        let (bh, bw) = (IMG_H / p, IMG_W / p);
+        let inv_area = 1.0f32 / (p * p) as f32;
+        for by in 0..bh {
+            for bx in 0..bw {
+                for c in 0..IMG_C {
+                    let mut acc = 0.0f32;
+                    for h in by * p..(by + 1) * p {
+                        for w in bx * p..(bx + 1) * p {
+                            acc += img[(h * IMG_W + w) * IMG_C + c];
+                        }
+                    }
+                    x[(by * bw + bx) * IMG_C + c] = acc * inv_area;
+                }
+            }
+        }
+        label
+    }
+}
+
+/// One interface over the feature providers (see the module docs for
+/// when to use which).
+pub enum FeatureSource {
+    Blobs(BlobDataset),
+    Cifar(PooledCifar),
+}
+
+impl FeatureSource {
+    pub fn dim(&self) -> usize {
+        match self {
+            FeatureSource::Blobs(b) => b.dim,
+            FeatureSource::Cifar(c) => c.dim(),
+        }
+    }
+
+    pub fn classes(&self) -> usize {
+        match self {
+            FeatureSource::Blobs(b) => b.classes,
+            FeatureSource::Cifar(_) => NUM_CLASSES,
+        }
+    }
+
+    pub fn train_len(&self) -> usize {
+        match self {
+            FeatureSource::Blobs(b) => b.train_len,
+            FeatureSource::Cifar(c) => c.data.train_len,
+        }
+    }
+
+    pub fn test_len(&self) -> usize {
+        match self {
+            FeatureSource::Blobs(b) => b.test_len,
+            FeatureSource::Cifar(c) => c.data.test_len,
+        }
+    }
+
+    /// Deterministic sample `i` of a split into `x`; returns the label.
+    pub fn sample_into(&self, i: usize, test: bool, x: &mut [f32]) -> u8 {
+        match self {
+            FeatureSource::Blobs(b) => b.sample_into(i, test, x),
+            FeatureSource::Cifar(c) => c.sample_into(i, test, x),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blob_samples_are_deterministic_and_split_dependent() {
+        let d = BlobDataset::new(5, 8, 3, 0.4, 90, 30);
+        let mut a = vec![0.0f32; 8];
+        let mut b = vec![0.0f32; 8];
+        let ya = d.sample_into(7, false, &mut a);
+        let yb = d.sample_into(7, false, &mut b);
+        assert_eq!(a, b);
+        assert_eq!(ya, yb);
+        assert_eq!(ya, (7 % 3) as u8);
+        let mut c = vec![0.0f32; 8];
+        d.sample_into(7, true, &mut c);
+        assert_ne!(a, c, "test split must use its own stream");
+    }
+
+    #[test]
+    fn blob_classes_cycle_and_cluster() {
+        let d = BlobDataset::new(9, 6, 3, 0.2, 300, 60);
+        // Labels cycle; samples sit nearer their own centroid than the
+        // global mean distance (low noise).
+        let mut x = vec![0.0f32; 6];
+        let mut correct = 0;
+        for i in 0..60 {
+            let y = d.sample_into(i, false, &mut x) as usize;
+            assert_eq!(y, i % 3);
+            let mut best = (f32::MAX, 0usize);
+            for cl in 0..3 {
+                let c = &d.centroids[cl * 6..(cl + 1) * 6];
+                let dist: f32 = x.iter().zip(c)
+                    .map(|(a, b)| (a - b) * (a - b)).sum();
+                if dist < best.0 {
+                    best = (dist, cl);
+                }
+            }
+            if best.1 == y {
+                correct += 1;
+            }
+        }
+        assert!(correct >= 55, "nearest-centroid acc {correct}/60");
+    }
+
+    #[test]
+    fn pooled_cifar_shapes_and_labels() {
+        let p = PooledCifar::new(1, 8, 100, 20);
+        assert_eq!(p.dim(), 4 * 4 * 3);
+        let mut x = vec![0.0f32; p.dim()];
+        let y = p.sample_into(13, false, &mut x);
+        assert_eq!(y, (13 % NUM_CLASSES) as u8);
+        // Pooling must average, not sum: features stay image-scaled.
+        assert!(x.iter().all(|v| v.abs() < 16.0));
+        // Deterministic.
+        let mut x2 = vec![0.0f32; p.dim()];
+        p.sample_into(13, false, &mut x2);
+        assert_eq!(x, x2);
+    }
+
+    #[test]
+    fn feature_source_dispatch() {
+        let s = FeatureSource::Blobs(BlobDataset::new(1, 4, 2, 0.3, 10, 4));
+        assert_eq!(s.dim(), 4);
+        assert_eq!(s.classes(), 2);
+        assert_eq!(s.train_len(), 10);
+        assert_eq!(s.test_len(), 4);
+        let c = FeatureSource::Cifar(PooledCifar::new(1, 16, 50, 10));
+        assert_eq!(c.dim(), 2 * 2 * 3);
+        assert_eq!(c.classes(), NUM_CLASSES);
+    }
+}

@@ -1,0 +1,35 @@
+//! On-grid multi-layer network training (the `nn` subsystem).
+//!
+//! The paper's headline result is multi-layer training on the hybrid
+//! in-memory architecture; this module brings that workload onto the
+//! **device-level** grid engine, no PJRT artifacts needed:
+//!
+//! * [`net::DeviceNet`] — a layered feed-forward network (hidden widths
+//!   scaled by the paper's width multiplier, ReLU activations, softmax
+//!   cross-entropy) where **every layer's weight matrix lives on its
+//!   own sharded [`crate::crossbar::CrossbarGrid`]** with the HIC
+//!   hybrid representation.  The forward pass is the analog batched
+//!   VMM; the backward pass is the **transposed** analog VMM
+//!   (`vmm_t_batch_into`) on the *same* crossbars — the mixed-precision
+//!   computational-memory training scheme (Nandakumar et al.), where
+//!   only the weight-gradient outer product and the nonlinearities run
+//!   digitally.
+//! * [`features`] — deterministic feature sources: pooled synthetic
+//!   CIFAR from the existing `data` pipeline (default for accuracy
+//!   runs) and portable Gaussian blobs (no libm; feeds the byte-stable
+//!   fig4 golden).
+//! * [`baseline::FpNet`] — the FP32 host MLP (32 bits/weight) the fig4
+//!   accuracy-vs-model-size sweep compares against.
+//!
+//! The training loop itself lives in
+//! [`crate::coordinator::nettrainer::NetTrainer`]; the fig4 sweep in
+//! `exp::gridexp::run_fig4`.  Everything inherits the grid determinism
+//! contract: bitwise identical for any worker count.
+
+pub mod baseline;
+pub mod features;
+pub mod net;
+
+pub use baseline::FpNet;
+pub use features::{BlobDataset, FeatureSource, PooledCifar};
+pub use net::{DeviceNet, NetSpec};

@@ -1,0 +1,251 @@
+//! The on-grid feed-forward network: per-layer crossbar grids + the
+//! portable digital glue (ReLU, softmax cross-entropy).
+//!
+//! [`DeviceNet`] holds one [`CrossbarGrid`] per layer — every weight
+//! matrix lives on its own sharded tile grid with the HIC hybrid
+//! representation (4-bit MSB differential pairs + LSB accumulators).
+//! Per-layer weight scaling follows the mixed-precision trainers: layer
+//! `l` maps its conductance window to `w_max = w_scale / √fan_in`, so a
+//! He-scaled initialization occupies several MSB quanta regardless of
+//! width, and activations stay O(1) through depth (the DAC/ADC ranges
+//! never re-calibrate per layer).
+//!
+//! Each layer derives its own grid seed ([`layer_seed`]) — combined
+//! with the grid's counter-based `(round, op, shard)` streams, a
+//! forward pass, a transposed backward pass and a hybrid update of any
+//! layer at any step draw fully independent noise, independent of the
+//! worker count.
+//!
+//! The digital nonlinearities ([`softmax_rows`], [`nll_sum`]) are pure
+//! f32 arithmetic on the `fastmath` polynomials (no libm), so the
+//! device-level fig4 documents are byte-stable and oracle-mirrored.
+
+use crate::crossbar::grid::CrossbarGrid;
+use crate::crossbar::{AdcSpec, DacSpec, GridScratch, TilingPolicy};
+use crate::hic::weight::HicGeometry;
+use crate::pcm::device::PcmParams;
+use crate::util::fastmath::{exp_fast, ln_fast};
+use crate::util::pool::WorkerPool;
+use crate::util::rng::Pcg64;
+
+/// Weyl constant deriving per-layer grid seeds from the net seed.
+const LAYER_SEED_MIX: u64 = 0xA24B_AED4_963E_E407;
+/// Stream tag of the per-layer weight-initialization draws.
+const INIT_STREAM: u64 = 0x1217;
+
+/// Grid seed of layer `l` (distinct per layer, stable across widths of
+/// *other* layers).
+#[inline]
+pub fn layer_seed(seed: u64, layer: usize) -> u64 {
+    seed ^ (layer as u64 + 1).wrapping_mul(LAYER_SEED_MIX)
+}
+
+/// Hidden width scaled by the paper's width multiplier (permille —
+/// integer so experiment documents stay byte-stable).  Half-away-from-
+/// zero rounding spelled out as `⌊x + 0.5⌋` so every implementation
+/// (Rust, oracle) agrees on ties.
+#[inline]
+pub fn scaled_width(base: usize, width_permille: u32) -> usize {
+    let x = base as f64 * width_permille as f64 / 1000.0;
+    ((x + 0.5).floor() as usize).max(1)
+}
+
+/// Architecture spec: input dim, base hidden widths, classes, and the
+/// width multiplier applied to the hidden stack.
+#[derive(Clone, Debug)]
+pub struct NetSpec {
+    pub input: usize,
+    pub hidden_base: Vec<usize>,
+    pub classes: usize,
+    pub width_permille: u32,
+}
+
+impl NetSpec {
+    /// Full layer-size chain `[input, hidden.., classes]`.
+    pub fn dims(&self) -> Vec<usize> {
+        let mut d = Vec::with_capacity(self.hidden_base.len() + 2);
+        d.push(self.input);
+        for &h in &self.hidden_base {
+            d.push(scaled_width(h, self.width_permille));
+        }
+        d.push(self.classes);
+        d
+    }
+}
+
+/// A feed-forward network whose every weight matrix lives on its own
+/// [`CrossbarGrid`].
+pub struct DeviceNet {
+    /// layer-size chain: layer `l` maps `dims[l] → dims[l+1]`
+    pub dims: Vec<usize>,
+    pub grids: Vec<CrossbarGrid>,
+    pub seed: u64,
+}
+
+impl DeviceNet {
+    /// Build and initialize the network: per-layer `w_max =
+    /// w_scale / √fan_in`, weights drawn uniform in `±w_max/2` from the
+    /// layer's init stream and programmed onto the grids
+    /// (MSB-quantized) at `t = 0`, `round = 0`.
+    pub fn new(params: PcmParams, dims: &[usize], policy: TilingPolicy,
+               w_scale: f32, seed: u64, pool: &WorkerPool) -> Self {
+        assert!(dims.len() >= 2, "need at least one layer");
+        let mut grids = Vec::with_capacity(dims.len() - 1);
+        for l in 0..dims.len() - 1 {
+            let (k, n) = (dims[l], dims[l + 1]);
+            let w_max = w_scale / (k as f32).sqrt();
+            let geom = HicGeometry { w_max, ..Default::default() };
+            let ls = layer_seed(seed, l);
+            let mut grid = CrossbarGrid::new(
+                params, geom, k, n, policy, DacSpec::default(),
+                AdcSpec::default(), ls);
+            let mut rng = Pcg64::new(ls, INIT_STREAM);
+            let half = 0.5 * w_max;
+            let w0: Vec<f32> =
+                (0..k * n).map(|_| rng.uniform_in(-half, half)).collect();
+            grid.program_init(&w0, 0.0, 0, pool);
+            grids.push(grid);
+        }
+        DeviceNet { dims: dims.to_vec(), grids, seed }
+    }
+
+    pub fn layers(&self) -> usize {
+        self.grids.len()
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.dims[0]
+    }
+
+    pub fn classes(&self) -> usize {
+        *self.dims.last().unwrap()
+    }
+
+    /// One reusable [`GridScratch`] per layer.
+    pub fn scratches(&self) -> Vec<GridScratch> {
+        self.grids.iter().map(|g| g.scratch()).collect()
+    }
+
+    /// Inference model bits across all layers (MSB arrays only — the
+    /// fig4 model-size axis).
+    pub fn inference_bits(&self) -> usize {
+        self.grids.iter().map(|g| g.inference_bits()).sum()
+    }
+}
+
+// -- portable digital glue (oracle-mirrored f32 op order) ----------------
+
+/// Row-wise softmax of logits `z: [m, classes]` into `p` — max-shifted,
+/// [`exp_fast`] exponentials, sequential f32 sum, one divide per
+/// element.
+pub fn softmax_rows(z: &[f32], m: usize, classes: usize, p: &mut [f32]) {
+    assert_eq!(z.len(), m * classes);
+    assert_eq!(p.len(), m * classes);
+    for s in 0..m {
+        let row = &z[s * classes..(s + 1) * classes];
+        let out = &mut p[s * classes..(s + 1) * classes];
+        let mut mx = row[0];
+        for &v in &row[1..] {
+            if v > mx {
+                mx = v;
+            }
+        }
+        let mut sum = 0.0f32;
+        for (o, &v) in out.iter_mut().zip(row) {
+            let e = exp_fast(v - mx);
+            *o = e;
+            sum += e;
+        }
+        for o in out.iter_mut() {
+            *o /= sum;
+        }
+    }
+}
+
+/// Summed negative log-likelihood `Σ_s −ln p[s, y_s]` over the batch
+/// (f64 accumulation of f32 logs; probabilities floored at 1e-30).
+pub fn nll_sum(p: &[f32], labels: &[u8], classes: usize) -> f64 {
+    let mut s = 0.0f64;
+    for (si, &y) in labels.iter().enumerate() {
+        let py = p[si * classes + y as usize].max(1e-30);
+        s -= ln_fast(py) as f64;
+    }
+    s
+}
+
+/// Index of the row maximum (first occurrence on ties).
+pub fn argmax_row(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (j, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = j;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_dims_scale_with_width() {
+        let spec = NetSpec { input: 48, hidden_base: vec![32, 16],
+                             classes: 10, width_permille: 500 };
+        assert_eq!(spec.dims(), vec![48, 16, 8, 10]);
+        let spec = NetSpec { width_permille: 1500, ..spec };
+        assert_eq!(spec.dims(), vec![48, 48, 24, 10]);
+        // Floor at 1, half-away rounding at .5 ties.
+        assert_eq!(scaled_width(1, 250), 1);
+        assert_eq!(scaled_width(5, 500), 3); // 2.5 -> 3
+        assert_eq!(scaled_width(3, 500), 2); // 1.5 -> 2
+    }
+
+    #[test]
+    fn device_net_builds_and_decodes_near_init() {
+        let pool = WorkerPool::serial();
+        let dims = [6, 5, 3];
+        let net = DeviceNet::new(
+            PcmParams::ideal(), &dims,
+            TilingPolicy { tile_rows: 4, tile_cols: 4 }, 2.0, 11, &pool);
+        assert_eq!(net.layers(), 2);
+        assert_eq!(net.inference_bits(), (6 * 5 + 5 * 3) * 4);
+        // Programmed weights stay within the layer's representable
+        // range and are not all zero (the init must survive MSB
+        // quantization — the whole point of per-layer w_max).
+        let mut scratch = net.grids[0].scratch();
+        let mut w = vec![0.0f32; 6 * 5];
+        net.grids[0].drift_into(0.0, &pool, &mut scratch, &mut w);
+        let w_max = 2.0 / (6.0f32).sqrt();
+        assert!(w.iter().any(|&v| v != 0.0), "init quantized to zero");
+        assert!(w.iter().all(|&v| v.abs() <= w_max + 0.13));
+    }
+
+    #[test]
+    fn layer_seeds_are_distinct() {
+        let s: Vec<u64> = (0..6).map(|l| layer_seed(42, l)).collect();
+        for i in 0..s.len() {
+            for j in i + 1..s.len() {
+                assert_ne!(s[i], s[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_rows_and_nll() {
+        let z = [1.0f32, 1.0, 1.0, 0.0, 0.0, 10.0];
+        let mut p = [0.0f32; 6];
+        softmax_rows(&z, 2, 3, &mut p);
+        for s in 0..2 {
+            let sum: f32 = p[s * 3..(s + 1) * 3].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "row {s} sums to {sum}");
+        }
+        assert!((p[0] - 1.0 / 3.0).abs() < 1e-5);
+        assert!(p[5] > 0.999);
+        assert_eq!(argmax_row(&p[3..6]), 2);
+        assert_eq!(argmax_row(&p[0..3]), 0); // tie -> first
+        // NLL of the confident row is tiny; of the uniform row, ln 3.
+        let l = nll_sum(&p, &[0, 2], 3);
+        assert!((l - (3.0f64).ln()).abs() < 1e-3, "nll {l}");
+    }
+}

@@ -65,6 +65,27 @@ pub fn pow_fast(x: f32, y: f32) -> f32 {
     exp2_fast(y * log2_fast(x))
 }
 
+/// `e^x` with the argument clamped to `[-80, 80]` — the softmax
+/// exponential of the `nn` subsystem.  Built on [`exp2_fast`]
+/// (`e^x = 2^(x·log2 e)`), so it is pure f32 arithmetic with no libm
+/// call: the layered-network documents stay byte-stable across
+/// platforms, and the golden oracle mirrors it op for op.  The clamp
+/// keeps the argument inside `exp2_fast`'s domain; softmax subtracts
+/// the row max first, so the clamp only fires on hopeless logits whose
+/// probability underflows anyway.
+#[inline]
+pub fn exp_fast(x: f32) -> f32 {
+    exp2_fast(x.clamp(-80.0, 80.0) * std::f32::consts::LOG2_E)
+}
+
+/// `ln x` for finite `x > 0` — the cross-entropy logarithm of the `nn`
+/// subsystem (`ln x = ln 2 · log2 x`, pure f32, no libm; see
+/// [`exp_fast`]).
+#[inline]
+pub fn ln_fast(x: f32) -> f32 {
+    std::f32::consts::LN_2 * log2_fast(x)
+}
+
 /// `(sin, cos)` of `2π·t` for a turn fraction `t ∈ [0, 1)` — the angular
 /// half of the batched Box–Muller transform (`util::rng::fill_gaussian`).
 ///
@@ -193,6 +214,27 @@ mod tests {
             let norm = s * s + c * c;
             assert!((norm - 1.0).abs() < 1e-5, "|sincos({t})|² = {norm}");
         }
+    }
+
+    #[test]
+    fn exp_ln_match_std() {
+        for i in -500..=500 {
+            let x = i as f32 / 50.0; // [-10, 10]
+            let got = exp_fast(x);
+            let want = x.exp();
+            let rel = (got - want).abs() / want;
+            assert!(rel < 5e-6, "exp({x}): {got} vs {want}");
+        }
+        // Clamp keeps hopeless logits finite (and monotone at the edge).
+        assert!(exp_fast(-1000.0) > 0.0);
+        assert!(exp_fast(-1000.0) <= exp_fast(-80.0));
+        for i in 1..2000 {
+            let x = i as f32 / 100.0; // (0, 20]
+            let got = ln_fast(x);
+            let want = x.ln();
+            assert!((got - want).abs() < 3e-6, "ln({x}): {got} vs {want}");
+        }
+        assert!(ln_fast(1.0).abs() < 1e-7);
     }
 
     #[test]

@@ -3,23 +3,31 @@
 
 Transliterates the Rust device math op for op into numpy float32 /
 Python float (IEEE binary64), and regenerates
-`fig3_grid.json` / `fig5_grid.json` — the goldens pinned by
-`rust/tests/golden_gridexp.rs`.  Every code path consumed by the golden
-configs is pure f32/f64 arithmetic (no libm), so the two
+`fig3_grid.json` / `fig5_grid.json` / `fig4_grid.json` — the goldens
+pinned by `rust/tests/golden_gridexp.rs`.  Every code path consumed by
+the golden configs is pure f32/f64 arithmetic (no libm), so the two
 implementations agree byte for byte on any IEEE-754 platform.
 
 Mirrored sources (keep in sync when the Rust changes):
   rust/src/util/rng.rs        Pcg64, uniform, fill_gaussian
-  rust/src/util/fastmath.rs   log2_fast, exp2_fast, pow_fast, sincos
+  rust/src/util/fastmath.rs   log2_fast, exp2_fast, pow_fast, sincos,
+                              exp_fast, ln_fast
   rust/src/crossbar/quant.rs  DAC/ADC quantize_uniform
-  rust/src/crossbar/grid.rs   op_rng, tiling, vmm, apply_update routing
+  rust/src/crossbar/tile.rs   read_noisy_weights sequence
+  rust/src/crossbar/grid.rs   op_rng, tiling, vmm, vmm_t, program_init,
+                              apply_update routing
   rust/src/pcm/{array,device}.rs  linear programming path, drift law
-  rust/src/hic/{weight,fixedpoint}.rs  hybrid update, accumulator
-  rust/src/coordinator/gridtrainer.rs  training loop, eval, metrics
+  rust/src/hic/{weight,fixedpoint}.rs  hybrid update, accumulator,
+                              per-layer w_max geometry
+  rust/src/nn/{features,net,baseline}.rs  blob data, layer seeds, init,
+                              softmax/NLL, FP32 baseline
+  rust/src/coordinator/gridtrainer.rs  linear-regression loop, eval
+  rust/src/coordinator/nettrainer.rs   multi-layer loop, eval
   rust/src/exp/gridexp.rs     documents and micro-unit quantization
 
 Run:  python3 rust/tests/golden/oracle.py          (writes the goldens)
 """
+import math
 import os
 import numpy as np
 
@@ -35,6 +43,7 @@ LOG2_E = f32(1.4426950408889634)
 SQRT_2 = f32(1.4142135623730951)
 
 OP_INIT, OP_PROGRAM, OP_UPDATE, OP_VMM, OP_REFRESH = 1, 2, 3, 4, 5
+OP_PROGRAM_INIT, OP_VMM_T = 6, 7
 
 
 # -- util::rng ---------------------------------------------------------------
@@ -147,6 +156,14 @@ def exp2_fast(x):
 
 def pow_fast(x, y):
     return exp2_fast(f32(f32(y) * log2_fast(x)))
+
+
+def exp_fast(x):
+    return exp2_fast(f32(clamp(f32(x), f32(-80.0), f32(80.0)) * LOG2_E))
+
+
+def ln_fast(x):
+    return f32(LN_2 * log2_fast(x))
 
 
 def sin_quadrant(x):
@@ -271,17 +288,55 @@ class Plane:
 
 
 class Tile:
-    """One grid tile: differential pair + LSB accumulator plane."""
+    """One grid tile: differential pair + LSB accumulator plane.
 
-    def __init__(self, rows, cols):
+    Parametrized by the layer's weight range `w_max` (HicGeometry):
+    the derived constants use the exact same f32 op sequence as the
+    Rust geometry, so `w_max = 1.0` reproduces the original globals
+    bit for bit.
+    """
+
+    def __init__(self, rows, cols, w_max=W_MAX):
         self.rows, self.cols = rows, cols
         n = rows * cols
         self.plus = Plane(n)
         self.minus = Plane(n)
         self.acc = np.zeros(n, dtype=np.int64)
+        self.w_max = f32(w_max)
+        self.w_to_g = f32(G_SPAN / self.w_max)
+        self.g_to_w = f32(self.w_max / G_SPAN)
+        self.msb_step = f32(f32(f32(2.0) * self.w_max)
+                            / f32(MSB_LEVELS))
+        self.lsb_step = f32(self.msb_step / f32(LSB_HALF))
+
+    def quantize_msb(self, w):
+        """HicGeometry::quantize_msb (15 levels, ±7 codes)."""
+        t = f32(f32(w) / self.msb_step)
+        q = clamp(rust_round_f32(t), f32(-7.0), f32(7.0))
+        return f32(q * self.msb_step)
+
+    def program_init(self, w0, t_now):
+        """HicWeight::program_init → DifferentialPair::program_weights
+        (linear, write-noise-off: no RNG consumed)."""
+        n = self.rows * self.cols
+        dgp = np.zeros(n, dtype=np.float32)
+        dgm = np.zeros(n, dtype=np.float32)
+        for i in range(n):
+            q = self.quantize_msb(w0[i])
+            g = f32(clamp(q, f32(-self.w_max), self.w_max) * self.w_to_g)
+            if g >= 0.0:
+                dgp[i] = g
+            else:
+                dgm[i] = f32(-g)
+        for i in range(n):
+            if dgp[i] > 0.0:
+                self.plus.program_increment_at(i, dgp[i], t_now)
+        for i in range(n):
+            if dgm[i] > 0.0:
+                self.minus.program_increment_at(i, dgm[i], t_now)
 
     def apply_increment(self, i, dw, t_now):
-        dg = f32(f32(abs(f32(dw))) * W_TO_G)
+        dg = f32(f32(abs(f32(dw))) * self.w_to_g)
         if dw > 0.0:
             return self.plus.program_increment_at(i, dg, t_now)
         if dw < 0.0:
@@ -293,7 +348,7 @@ class Tile:
         overflows = 0
         lr = f32(lr)
         for i, gi in enumerate(grad):
-            v = f32(f32(f32(-lr) * f32(gi)) / LSB_STEP)
+            v = f32(f32(f32(-lr) * f32(gi)) / self.lsb_step)
             dither = f32(rng.uniform())
             q = f32(np.floor(f32(v + dither)))
             q = clamp(q, f32(-127.0), f32(127.0))
@@ -305,19 +360,43 @@ class Tile:
             self.acc[i] = res
             if ovf != 0:
                 overflows += abs(ovf)
-                dw = f32(f32(float(ovf)) * MSB_STEP)
+                dw = f32(f32(float(ovf)) * self.msb_step)
                 self.apply_increment(i, dw, t_now)
         return overflows
 
     def decode_at(self, i, t_now, drift):
         return f32(f32(self.plus.drift_at(i, t_now, drift)
-                       - self.minus.drift_at(i, t_now, drift)) * G_TO_W)
+                       - self.minus.drift_at(i, t_now, drift))
+                   * self.g_to_w)
 
 
 # -- crossbar::grid ----------------------------------------------------------
 
+def read_noisy_weights(tile, gp, gm, nt, rng, params):
+    """crossbar::tile::read_noisy_weights — the shared noisy-read
+    sequence (G+ plane first, then G−, batched Box–Muller fill)."""
+    w = np.zeros(nt, dtype=np.float32)
+    if params.read_noise:
+        z = rng.fill_gaussian(nt)
+        for i in range(nt):
+            w[i] = clamp(f32(gp[i] + f32(READ_SIGMA * z[i])),
+                         f32(0.0), f32(1.0))
+        z = rng.fill_gaussian(nt)
+        for i in range(nt):
+            gmv = clamp(f32(gm[i] + f32(READ_SIGMA * z[i])),
+                        f32(0.0), f32(1.0))
+            w[i] = f32(f32(w[i] - gmv) * tile.g_to_w)
+    else:
+        for i in range(nt):
+            w[i] = clamp(f32(gp[i]), f32(0.0), f32(1.0))
+        for i in range(nt):
+            gmv = clamp(f32(gm[i]), f32(0.0), f32(1.0))
+            w[i] = f32(f32(w[i] - gmv) * tile.g_to_w)
+    return w
+
+
 class Grid:
-    def __init__(self, k, n, tile, seed, params):
+    def __init__(self, k, n, tile, seed, params, w_max=W_MAX):
         self.k, self.n, self.tsz, self.seed = k, n, tile, seed
         self.params = params
         self.grid_r = -(-k // tile)
@@ -328,8 +407,16 @@ class Grid:
             for gc in range(self.grid_c):
                 ur = min(k - gr * tile, tile)
                 uc = min(n - gc * tile, tile)
-                self.tiles.append(Tile(ur, uc))
+                self.tiles.append(Tile(ur, uc, w_max))
                 self.coords.append((gr * tile, gc * tile, ur, uc))
+
+    def program_init(self, w, t_now, rnd):
+        """CrossbarGrid::program_init (write-noise-off path: the
+        per-tile OP_PROGRAM_INIT streams are derived but unused)."""
+        subs = self.scatter(w)
+        for ti, tile in enumerate(self.tiles):
+            op_rng(self.seed, rnd, OP_PROGRAM_INIT, ti)
+            tile.program_init(subs[ti], t_now)
 
     def scatter(self, src):
         subs = []
@@ -379,26 +466,8 @@ class Grid:
                     tile = self.tiles[ti]
                     tr, tc = tile.rows, tile.cols
                     nt = tr * tc
-                    w = np.zeros(nt, dtype=np.float32)
-                    if self.params.read_noise:
-                        z = rng.fill_gaussian(nt)
-                        for i in range(nt):
-                            w[i] = clamp(
-                                f32(gps[ti][i] + f32(READ_SIGMA * z[i])),
-                                f32(0.0), f32(1.0))
-                        z = rng.fill_gaussian(nt)
-                        for i in range(nt):
-                            gm = clamp(
-                                f32(gms[ti][i] + f32(READ_SIGMA * z[i])),
-                                f32(0.0), f32(1.0))
-                            w[i] = f32(f32(w[i] - gm) * G_TO_W)
-                    else:
-                        for i in range(nt):
-                            w[i] = clamp(f32(gps[ti][i]), f32(0.0),
-                                         f32(1.0))
-                        for i in range(nt):
-                            gm = clamp(f32(gms[ti][i]), f32(0.0), f32(1.0))
-                            w[i] = f32(f32(w[i] - gm) * G_TO_W)
+                    w = read_noisy_weights(tile, gps[ti], gms[ti], nt,
+                                           rng, self.params)
                     r0 = self.coords[ti][0]
                     xq = np.zeros(tr, dtype=np.float32)
                     for r in range(tr):
@@ -411,6 +480,42 @@ class Grid:
                 for j in range(strip_cols):
                     y[j] = adc_convert(y[j])
                 out[s * n + c0:s * n + c0 + strip_cols] = y
+        return out
+
+    def vmm_t_batch(self, e, m, t_now, rnd):
+        """CrossbarGrid::vmm_t_batch_into — transposed VMM, row-strip
+        shards on the OP_VMM_T streams."""
+        k, n = self.k, self.n
+        gps = [t.plus.drift_into(t_now, self.params.drift)
+               for t in self.tiles]
+        gms = [t.minus.drift_into(t_now, self.params.drift)
+               for t in self.tiles]
+        out = np.zeros(m * k, dtype=np.float32)
+        for gr in range(self.grid_r):
+            strip_rows = self.coords[gr * self.grid_c][2]
+            r0 = self.coords[gr * self.grid_c][0]
+            rng = op_rng(self.seed, rnd, OP_VMM_T, gr)
+            for s in range(m):
+                y = np.zeros(strip_rows, dtype=np.float32)
+                for gc in range(self.grid_c):
+                    ti = gr * self.grid_c + gc
+                    tile = self.tiles[ti]
+                    tr, tc = tile.rows, tile.cols
+                    nt = tr * tc
+                    w = read_noisy_weights(tile, gps[ti], gms[ti], nt,
+                                           rng, self.params)
+                    c0 = self.coords[ti][1]
+                    eq = np.zeros(tc, dtype=np.float32)
+                    for c in range(tc):
+                        eq[c] = dac_convert(e[s * n + c0 + c])
+                    for c in range(tc):
+                        if eq[c] == 0.0:
+                            continue
+                        for r in range(tr):
+                            y[r] = f32(y[r] + f32(eq[c] * w[r * tc + c]))
+                for r in range(strip_rows):
+                    y[r] = adc_convert(y[r])
+                out[s * k + r0:s * k + r0 + strip_rows] = y
         return out
 
     def total_set_pulses(self):
@@ -512,6 +617,342 @@ class GridTrainer:
         return s / float(len(w))
 
 
+# -- nn subsystem (features, net, baseline) ----------------------------------
+
+LAYER_SEED_MIX = 0xA24B_AED4_963E_E407
+NN_INIT_STREAM = 0x1217
+FP_INIT_STREAM = 0xF32B
+BLOB_CENTROID_STREAM = 0xB10B
+BLOB_TRAIN_STREAM = 0xB1E4
+BLOB_TEST_STREAM = 0xB1E5
+F_MIN_P = f32(1e-30)
+
+
+def layer_seed(seed, layer):
+    return (seed ^ (((layer + 1) * LAYER_SEED_MIX) & M64)) & M64
+
+
+def scaled_width(base, permille):
+    return max(int(math.floor(base * permille / 1000.0 + 0.5)), 1)
+
+
+class Blobs:
+    """nn::features::BlobDataset (portable, no libm)."""
+
+    def __init__(self, seed, dim, classes, noise, train_len, test_len):
+        self.dim, self.classes, self.noise = dim, classes, f32(noise)
+        self.train_len, self.test_len = train_len, test_len
+        rng = Pcg64(seed, BLOB_CENTROID_STREAM)
+        self.centroids = np.array(
+            [rng.uniform_in(-1.0, 1.0) for _ in range(classes * dim)],
+            dtype=np.float32)
+
+    def sample(self, i, test):
+        stream = BLOB_TEST_STREAM if test else BLOB_TRAIN_STREAM
+        rng = Pcg64(i, stream)
+        cls = i % self.classes
+        x = rng.fill_gaussian(self.dim, 0.0, self.noise)
+        for j in range(self.dim):
+            x[j] = f32(self.centroids[cls * self.dim + j] + x[j])
+        return x, cls
+
+
+def softmax_rows(z, m, classes):
+    """nn::net::softmax_rows."""
+    p = np.zeros(m * classes, dtype=np.float32)
+    for s in range(m):
+        row = z[s * classes:(s + 1) * classes]
+        mx = row[0]
+        for v in row[1:]:
+            if v > mx:
+                mx = v
+        ssum = f32(0.0)
+        for j in range(classes):
+            e = exp_fast(f32(row[j] - mx))
+            p[s * classes + j] = e
+            ssum = f32(ssum + e)
+        for j in range(classes):
+            p[s * classes + j] = f32(p[s * classes + j] / ssum)
+    return p
+
+
+def nll_sum(p, labels, classes):
+    """nn::net::nll_sum (f64 accumulation of f32 logs)."""
+    s = 0.0
+    for si, y in enumerate(labels):
+        py = p[si * classes + y]
+        if not (py > F_MIN_P):
+            py = F_MIN_P
+        s -= float(ln_fast(py))
+    return s
+
+
+def argmax_row(row):
+    best = 0
+    for j in range(len(row)):
+        if row[j] > row[best]:
+            best = j
+    return best
+
+
+def relu(z):
+    return np.array([v if v > 0.0 else f32(0.0) for v in z],
+                    dtype=np.float32)
+
+
+def layer_w_max(w_scale, k):
+    return f32(f32(w_scale) / f32(np.sqrt(f32(k))))
+
+
+class NnTrainer:
+    """coordinator::nettrainer::NetTrainer on oracle Grids."""
+
+    def __init__(self, dims, tile, data, seed, batch, lr, params,
+                 w_scale=2.0, bwd_gain=4.0):
+        self.dims, self.data, self.batch = dims, data, batch
+        self.lr = f32(lr)
+        self.gain = f32(bwd_gain)
+        self.inv_gain = f32(f32(1.0) / self.gain)
+        self.grids = []
+        for l in range(len(dims) - 1):
+            k, n = dims[l], dims[l + 1]
+            w_max = layer_w_max(w_scale, k)
+            ls = layer_seed(seed, l)
+            g = Grid(k, n, tile, ls, params, w_max)
+            rng = Pcg64(ls, NN_INIT_STREAM)
+            half = f32(f32(0.5) * w_max)
+            w0 = np.array(
+                [rng.uniform_in(f32(-half), half) for _ in range(k * n)],
+                dtype=np.float32)
+            g.program_init(w0, f32(0.0), 0)
+            self.grids.append(g)
+        self.now = 0.0  # f64 drift clock
+        self.step = 0
+        self.losses = []
+        self.overflows = 0
+        self.eval_rounds = 0
+
+    def train_steps(self, steps):
+        nl = len(self.grids)
+        classes = self.dims[-1]
+        d0 = self.dims[0]
+        m = self.batch
+        for _ in range(steps):
+            self.now += 0.05
+            t_now = f32(self.now)
+            rnd = self.step
+            x = np.zeros(m * d0, dtype=np.float32)
+            labels = []
+            for j in range(m):
+                idx = (self.step * m + j) % self.data.train_len
+                xv, y = self.data.sample(idx, False)
+                x[j * d0:(j + 1) * d0] = xv
+                labels.append(y)
+            zs = []
+            acts = []
+            inp = x
+            for l in range(nl):
+                z = self.grids[l].vmm_batch(inp, m, t_now, rnd)
+                zs.append(z)
+                if l + 1 < nl:
+                    a = relu(z)
+                    acts.append(a)
+                    inp = a
+            probs = softmax_rows(zs[-1], m, classes)
+            self.losses.append(nll_sum(probs, labels, classes) / float(m))
+            deltas = [None] * nl
+            d_out = np.zeros(m * classes, dtype=np.float32)
+            for s in range(m):
+                for j in range(classes):
+                    yv = f32(1.0) if labels[s] == j else f32(0.0)
+                    d_out[s * classes + j] = f32(
+                        probs[s * classes + j] - yv)
+            deltas[nl - 1] = d_out
+            inv_m = f32(f32(1.0) / f32(float(m)))
+            grads = [None] * nl
+            for l in range(nl - 1, -1, -1):
+                k, n = self.dims[l], self.dims[l + 1]
+                a_in = x if l == 0 else acts[l - 1]
+                gbuf = np.zeros(k * n, dtype=np.float32)
+                for i in range(k):
+                    for j in range(n):
+                        acc = f32(0.0)
+                        for s in range(m):
+                            acc = f32(acc + f32(a_in[s * k + i]
+                                                * deltas[l][s * n + j]))
+                        gbuf[i * n + j] = f32(acc * inv_m)
+                grads[l] = gbuf
+                if l > 0:
+                    e = np.array([f32(v * self.gain) for v in deltas[l]],
+                                 dtype=np.float32)
+                    d_prev = self.grids[l].vmm_t_batch(e, m, t_now, rnd)
+                    zp = zs[l - 1]
+                    for i2 in range(m * k):
+                        if zp[i2] > 0.0:
+                            d_prev[i2] = f32(d_prev[i2] * self.inv_gain)
+                        else:
+                            d_prev[i2] = f32(0.0)
+                    deltas[l - 1] = d_prev
+            for l in range(nl):
+                self.overflows += self.grids[l].apply_update(
+                    grads[l], self.lr, t_now, rnd)
+            self.step += 1
+
+    def evaluate(self, n, t_eval):
+        nl = len(self.grids)
+        classes = self.dims[-1]
+        d0 = self.dims[0]
+        m = self.batch
+        hits = 0
+        loss_sum = 0.0
+        done = 0
+        while done < n:
+            mb = min(m, n - done)
+            rnd = EVAL_ROUND_BASE + self.eval_rounds
+            self.eval_rounds += 1
+            x = np.zeros(mb * d0, dtype=np.float32)
+            labels = []
+            for j in range(mb):
+                xv, y = self.data.sample(done + j, True)
+                x[j * d0:(j + 1) * d0] = xv
+                labels.append(y)
+            inp = x
+            z = None
+            for l in range(nl):
+                z = self.grids[l].vmm_batch(inp, mb, f32(t_eval), rnd)
+                if l + 1 < nl:
+                    inp = relu(z)
+            probs = softmax_rows(z, mb, classes)
+            loss_sum += nll_sum(probs, labels, classes)
+            for s in range(mb):
+                row = probs[s * classes:(s + 1) * classes]
+                if argmax_row(row) == labels[s]:
+                    hits += 1
+            done += mb
+        return loss_sum / float(n), hits / float(n)
+
+    def total_set_pulses(self):
+        return sum(g.total_set_pulses() for g in self.grids)
+
+
+class FpNetOracle:
+    """nn::baseline::FpNet."""
+
+    def __init__(self, dims, w_scale, seed):
+        self.dims = dims
+        self.w = []
+        for l in range(len(dims) - 1):
+            k, n = dims[l], dims[l + 1]
+            w_max = layer_w_max(w_scale, k)
+            half = f32(f32(0.5) * w_max)
+            rng = Pcg64(layer_seed(seed, l), FP_INIT_STREAM)
+            self.w.append(np.array(
+                [rng.uniform_in(f32(-half), half) for _ in range(k * n)],
+                dtype=np.float32))
+        self.losses = []
+        self.step = 0
+
+    def forward(self, x, m):
+        nl = len(self.w)
+        zs = []
+        acts = []
+        a_in = x
+        for l in range(nl):
+            k, n = self.dims[l], self.dims[l + 1]
+            wl = self.w[l]
+            z = np.zeros(m * n, dtype=np.float32)
+            for s in range(m):
+                for j in range(n):
+                    acc = f32(0.0)
+                    for i in range(k):
+                        acc = f32(acc + f32(a_in[s * k + i]
+                                            * wl[i * n + j]))
+                    z[s * n + j] = acc
+            if l + 1 < nl:
+                a = relu(z)
+                acts.append(a)
+                a_in = a
+            zs.append(z)
+        return zs, acts
+
+    def train_steps(self, data, steps, batch, lr):
+        lr = f32(lr)
+        d0 = self.dims[0]
+        classes = self.dims[-1]
+        nl = len(self.w)
+        m = batch
+        for _ in range(steps):
+            x = np.zeros(m * d0, dtype=np.float32)
+            labels = []
+            for j in range(m):
+                idx = (self.step * m + j) % data.train_len
+                xv, y = data.sample(idx, False)
+                x[j * d0:(j + 1) * d0] = xv
+                labels.append(y)
+            zs, acts = self.forward(x, m)
+            probs = softmax_rows(zs[-1], m, classes)
+            self.losses.append(nll_sum(probs, labels, classes) / float(m))
+            delta = np.zeros(m * classes, dtype=np.float32)
+            for s in range(m):
+                for j in range(classes):
+                    yv = f32(1.0) if labels[s] == j else f32(0.0)
+                    delta[s * classes + j] = f32(
+                        probs[s * classes + j] - yv)
+            inv_m = f32(f32(1.0) / f32(float(m)))
+            for l in range(nl - 1, -1, -1):
+                k, n = self.dims[l], self.dims[l + 1]
+                a_in = x if l == 0 else acts[l - 1]
+                prev = None
+                if l > 0:
+                    wl = self.w[l]
+                    zp = zs[l - 1]
+                    prev = np.zeros(m * k, dtype=np.float32)
+                    for s in range(m):
+                        for i in range(k):
+                            acc = f32(0.0)
+                            for j in range(n):
+                                acc = f32(acc + f32(delta[s * n + j]
+                                                    * wl[i * n + j]))
+                            prev[s * k + i] = (acc if zp[s * k + i] > 0.0
+                                               else f32(0.0))
+                wl = self.w[l]
+                for i in range(k):
+                    for j in range(n):
+                        acc = f32(0.0)
+                        for s in range(m):
+                            acc = f32(acc + f32(a_in[s * k + i]
+                                                * delta[s * n + j]))
+                        wl[i * n + j] = f32(
+                            wl[i * n + j] - f32(lr * f32(acc * inv_m)))
+                if prev is not None:
+                    delta = prev
+            self.step += 1
+
+    def evaluate(self, data, n, batch):
+        d0 = self.dims[0]
+        classes = self.dims[-1]
+        hits = 0
+        loss_sum = 0.0
+        done = 0
+        while done < n:
+            mb = min(batch, n - done)
+            x = np.zeros(mb * d0, dtype=np.float32)
+            labels = []
+            for j in range(mb):
+                xv, y = data.sample(done + j, True)
+                x[j * d0:(j + 1) * d0] = xv
+                labels.append(y)
+            zs, _ = self.forward(x, mb)
+            probs = softmax_rows(zs[-1], mb, classes)
+            loss_sum += nll_sum(probs, labels, classes)
+            for s in range(mb):
+                row = probs[s * classes:(s + 1) * classes]
+                if argmax_row(row) == labels[s]:
+                    hits += 1
+            done += mb
+        return loss_sum / float(n), hits / float(n)
+
+
 # -- exp::gridexp documents --------------------------------------------------
 
 EVAL_ROUND_BASE = 1 << 32
@@ -596,6 +1037,75 @@ def run_fig5(o):
     return doc
 
 
+# Mirror of the Rust golden_gridexp fig4 config (exp::gridexp tests).
+TINY_NN = dict(dim=6, classes=3, hidden_base=[4, 3], widths=[500, 1000],
+               steps=4, batch=3, tile=3, eval_n=6, train_len=30,
+               test_len=12, lr=0.05, noise=0.5, seed=42)
+
+
+def nn_dims(o, w):
+    return ([o["dim"]]
+            + [scaled_width(h, w) for h in o["hidden_base"]]
+            + [o["classes"]])
+
+
+def run_fig4(o):
+    params = Params(read_noise=True, drift=False)
+    rows = []
+    for w in o["widths"]:
+        dims = nn_dims(o, w)
+        data = Blobs(o["seed"], o["dim"], o["classes"], o["noise"],
+                     o["train_len"], o["test_len"])
+        t = NnTrainer(dims, o["tile"], data, o["seed"], o["batch"],
+                      o["lr"], params)
+        t.train_steps(o["steps"])
+        eval_loss, acc = t.evaluate(o["eval_n"], f32(t.now))
+        bits = sum(dims[l] * dims[l + 1]
+                   for l in range(len(dims) - 1)) * 4
+        rows.append({
+            "series": "hic",
+            "width_permille": w,
+            "model_bits": bits,
+            "eval_acc_u6": u6(acc),
+            "eval_loss_u6": u6(eval_loss),
+            "final_train_loss_u6": u6(t.losses[-1]),
+            "overflows": t.overflows,
+            "set_pulses": t.total_set_pulses(),
+        })
+    for w in o["widths"]:
+        dims = nn_dims(o, w)
+        data = Blobs(o["seed"], o["dim"], o["classes"], o["noise"],
+                     o["train_len"], o["test_len"])
+        net = FpNetOracle(dims, 2.0, o["seed"])
+        net.train_steps(data, o["steps"], o["batch"], o["lr"])
+        eval_loss, acc = net.evaluate(data, o["eval_n"], o["batch"])
+        bits = sum(dims[l] * dims[l + 1]
+                   for l in range(len(dims) - 1)) * 32
+        rows.append({
+            "series": "fp32",
+            "width_permille": w,
+            "model_bits": bits,
+            "eval_acc_u6": u6(acc),
+            "eval_loss_u6": u6(eval_loss),
+            "final_train_loss_u6": u6(net.losses[-1]),
+        })
+    return {
+        "experiment": "fig4_grid",
+        "data": "blobs",
+        "data_param": o["dim"],
+        "input": o["dim"],
+        "classes": o["classes"],
+        "hidden_base": o["hidden_base"],
+        "steps": o["steps"],
+        "batch": o["batch"],
+        "tile": o["tile"],
+        "eval_n": o["eval_n"],
+        "seed": o["seed"],
+        "widths_permille": o["widths"],
+        "rows": rows,
+    }
+
+
 if __name__ == "__main__":
     here = os.path.dirname(os.path.abspath(__file__))
     fig3 = jdump(run_fig3(TINY))
@@ -606,3 +1116,7 @@ if __name__ == "__main__":
     with open(os.path.join(here, "fig5_grid.json"), "w") as f:
         f.write(fig5)
     print("fig5_grid.json:", fig5)
+    fig4 = jdump(run_fig4(TINY_NN))
+    with open(os.path.join(here, "fig4_grid.json"), "w") as f:
+        f.write(fig4)
+    print("fig4_grid.json:", fig4)

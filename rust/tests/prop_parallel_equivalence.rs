@@ -3,22 +3,30 @@
 //!
 //! Contract pinned here (see the `crossbar::grid` module docs):
 //!
-//! * every grid kernel — `vmm_batch`, `program_increments`,
-//!   `apply_update`, `refresh`, `drift_into` — is **bitwise identical**
-//!   for worker counts {1, 2, 4}, with the full noisy device model on;
+//! * every grid kernel — `vmm_batch`, `vmm_t_batch`,
+//!   `program_increments`, `apply_update`, `refresh`, `drift_into` — is
+//!   **bitwise identical** for worker counts {1, 2, 4}, with the full
+//!   noisy device model on;
 //! * in the noise-free domain (read/write noise off, ν spread zero) the
 //!   grid is **bit-compatible with the serial single-tile path** on the
 //!   same logical matrix: same programmed state, same decode, same VMM
-//!   outputs — the column-strip sharding preserves the single tile's
-//!   f32 op order exactly;
+//!   outputs — the column-strip (forward) and row-strip (transposed)
+//!   sharding preserve the single tile's f32 op order exactly, and the
+//!   transposed kernel equals a plain transposed matmul through the
+//!   DAC/ADC on the decoded weights;
+//! * a full multi-layer `NetTrainer` step (forward VMMs, transposed-VMM
+//!   backprop, per-layer hybrid updates) is bitwise identical across
+//!   worker counts {1, 2, 4};
 //! * `fill_gaussian` streams differ from the scalar `normal()` sequence
 //!   by design, so its distribution is pinned by moments, tail masses
 //!   and per-seed reproducibility over ≥ 1e5 draws.
 
+use hic_train::coordinator::nettrainer::{NetTrainer, NetTrainerOptions};
 use hic_train::crossbar::grid::{op_rng, CrossbarGrid, OP_INIT,
                                 OP_PROGRAM, OP_PROGRAM_INIT};
 use hic_train::crossbar::{AdcSpec, CrossbarTile, DacSpec, TilingPolicy};
 use hic_train::hic::weight::{HicGeometry, HicWeight};
+use hic_train::nn::features::{BlobDataset, FeatureSource};
 use hic_train::pcm::device::PcmParams;
 use hic_train::testutil::prop;
 use hic_train::util::pool::WorkerPool;
@@ -83,6 +91,139 @@ fn prop_vmm_worker_invariant() {
     });
 }
 
+/// Grid transposed-VMM output is bitwise identical across worker
+/// counts {1, 2, 4} with the fully noisy device model.
+#[test]
+fn prop_vmm_t_worker_invariant() {
+    prop("grid vmm_t invariant across workers", 40, |g| {
+        let k = g.usize_in(3, 14);
+        let n = g.usize_in(2, 12);
+        let tr = g.usize_in(2, 6);
+        let tc = g.usize_in(2, 6);
+        let m = g.usize_in(1, 4);
+        let seed = g.u64_below(1 << 32);
+        let round = g.u64_below(1 << 16);
+        let mut gr = grid(full_params(), HicGeometry::default(), k, n,
+                          tr, tc, seed);
+        let w = g.vec_f32(k * n, -0.8, 0.8);
+        gr.program_init(&w, 0.0, u64::MAX, &WorkerPool::serial());
+        let e = g.vec_f32(m * n, -1.0, 1.0);
+        let y1 = gr.vmm_t_batch(&e, m, 3.0, round, &WorkerPool::new(1));
+        let y2 = gr.vmm_t_batch(&e, m, 3.0, round, &WorkerPool::new(2));
+        let y4 = gr.vmm_t_batch(&e, m, 3.0, round, &WorkerPool::new(4));
+        if y1 != y2 || y1 != y4 {
+            return Err(format!(
+                "vmm_t outputs diverge across workers (k={k} n={n} \
+                 tile={tr}x{tc} m={m})"));
+        }
+        Ok(())
+    });
+}
+
+/// Noise-free domain: the grid's transposed VMM is bit-compatible with
+/// the serial single-tile transposed kernel on the same logical matrix,
+/// and both equal a host transposed matmul through the DAC/ADC on the
+/// decoded weights — the backward kernel really computes `e · Wᵀ`.
+#[test]
+fn prop_vmm_t_matches_serial_transposed_reference() {
+    prop("grid vmm_t == single-tile serial == e·Wᵀ (noise-free)", 40,
+         |g| {
+        let params = deterministic_params(g.bool(), g.bool());
+        let geom =
+            HicGeometry { stochastic_rounding: false, ..Default::default() };
+        let k = g.usize_in(2, 12);
+        let n = g.usize_in(2, 10);
+        let tr = g.usize_in(1, 5);
+        let tc = g.usize_in(1, 5);
+        let m = g.usize_in(1, 3);
+        let seed = g.u64_below(1 << 32);
+        let pool = WorkerPool::new(4);
+
+        let mut gr = grid(params, geom, k, n, tr, tc, seed);
+        let mut rng_single = op_rng(seed, 0, OP_INIT, 0);
+        let mut hw = HicWeight::new(params, geom, k, n, &mut rng_single);
+        let w = g.vec_f32(k * n, -0.9, 0.9);
+        gr.program_init(&w, 0.0, 0, &pool);
+        hw.program_init(&w, 0.0, &mut op_rng(seed, 0, OP_PROGRAM_INIT, 0));
+
+        let e = g.vec_f32(m * n, -1.0, 1.0);
+        let t_now = 2.0;
+        let tile = CrossbarTile::new(hw, DacSpec::default(),
+                                     AdcSpec::default());
+        let mut rng_unused = Pcg64::new(0, 0);
+        let y_single = tile.vmm_t_batch(&e, m, t_now, &mut rng_unused);
+        let y_grid = gr.vmm_t_batch(&e, m, t_now, 9, &pool);
+        if y_single != y_grid {
+            return Err(format!(
+                "vmm_t diverges from single tile (k={k} n={n} \
+                 tile={tr}x{tc} m={m})"));
+        }
+
+        // Host reference: same accumulation order (c ascending per
+        // output row) over the drift-decoded weights, DAC'd errors,
+        // ADC'd row sums.
+        let wq = tile.weights.decode(t_now);
+        for s in 0..m {
+            for r in 0..k {
+                let mut acc = 0.0f32;
+                for c in 0..n {
+                    let eq = tile.dac.convert(e[s * n + c]);
+                    if eq == 0.0 {
+                        continue;
+                    }
+                    acc += eq * wq[r * n + c];
+                }
+                let expect = tile.adc.convert(acc);
+                let got = y_grid[s * k + r];
+                if got != expect {
+                    return Err(format!(
+                        "vmm_t[{s},{r}] = {got} != host {expect} \
+                         (k={k} n={n} tile={tr}x{tc})"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// A full multi-layer `NetTrainer` run — forward VMMs, transposed-VMM
+/// backprop, per-layer hybrid updates, refresh, evaluation — is
+/// bitwise identical for worker counts {1, 2, 4} on the full noisy
+/// device model.
+#[test]
+fn prop_net_trainer_step_worker_invariant() {
+    prop("NetTrainer step invariant across workers", 6, |g| {
+        let h1 = g.usize_in(4, 9);
+        let h2 = g.usize_in(3, 7);
+        let tile = g.usize_in(2, 5);
+        let batch = g.usize_in(2, 5);
+        let seed = g.u64_below(1 << 24);
+        let dims = [6, h1, h2, 3];
+        let run = |workers: usize| {
+            let data = FeatureSource::Blobs(
+                BlobDataset::new(seed, 6, 3, 0.4, 60, 24));
+            let mut t = NetTrainer::new(
+                PcmParams::default(), &dims,
+                TilingPolicy { tile_rows: tile, tile_cols: tile },
+                data, WorkerPool::new(workers),
+                NetTrainerOptions { seed, batch, refresh_every: 3,
+                                    ..Default::default() });
+            t.train_steps(5);
+            let ev = t.evaluate(10, t.clock.now_f32());
+            (t.losses.clone(), t.overflows, t.refreshed, ev)
+        };
+        let a = run(1);
+        let b = run(2);
+        let c = run(4);
+        if a != b || a != c {
+            return Err(format!(
+                "NetTrainer diverges across workers \
+                 (dims={dims:?} tile={tile} batch={batch})"));
+        }
+        Ok(())
+    });
+}
+
 /// `program_increments`, `apply_update` and `refresh` leave bitwise
 /// identical device state for worker counts {1, 2, 4}, noisy model on.
 #[test]
@@ -101,12 +242,15 @@ fn prop_state_kernels_worker_invariant() {
             let pool = WorkerPool::new(workers);
             let mut gr = grid(full_params(), HicGeometry::default(),
                               k, n, tr, tc, seed);
+            let mut scratch = gr.scratch();
             gr.program_init(&w0, 0.0, 0, &pool);
-            let pulses = gr.program_increments(&dw, 1.0, 1, &pool);
-            let ovf = gr.apply_update(&grad, 0.5, 2.0, 2, &pool);
+            let pulses =
+                gr.program_increments(&dw, 1.0, 1, &pool, &mut scratch);
+            let ovf =
+                gr.apply_update(&grad, 0.5, 2.0, 2, &pool, &mut scratch);
             let refreshed = gr.refresh(3.0, 3, &pool);
             let mut decoded = vec![0.0f32; k * n];
-            gr.drift_into(4.0, &pool, &mut decoded);
+            gr.drift_into(4.0, &pool, &mut scratch, &mut decoded);
             let states: Vec<_> =
                 gr.tiles.iter().map(tile_state).collect();
             (pulses, ovf, refreshed, decoded, states)
@@ -142,6 +286,7 @@ fn prop_grid_matches_single_tile_serial() {
 
         // Grid on small tiles vs one tile spanning the whole matrix.
         let mut gr = grid(params, geom, k, n, tr, tc, seed);
+        let mut scratch = gr.scratch();
         let mut rng_single = op_rng(seed, 0, OP_INIT, 0);
         let mut hw = HicWeight::new(params, geom, k, n, &mut rng_single);
 
@@ -151,7 +296,7 @@ fn prop_grid_matches_single_tile_serial() {
 
         // Programmed conductance state agrees element by element.
         let mut decoded_grid = vec![0.0f32; k * n];
-        gr.drift_into(0.5, &pool, &mut decoded_grid);
+        gr.drift_into(0.5, &pool, &mut scratch, &mut decoded_grid);
         let decoded_single = hw.decode(0.5);
         if decoded_grid != decoded_single {
             return Err("decode diverges from single tile".into());
@@ -159,7 +304,7 @@ fn prop_grid_matches_single_tile_serial() {
 
         // Signed increments agree too.
         let dw = g.vec_f32(k * n, -0.2, 0.2);
-        gr.program_increments(&dw, 1.0, 1, &pool);
+        gr.program_increments(&dw, 1.0, 1, &pool, &mut scratch);
         let mut rng_prog = op_rng(seed, 1, OP_PROGRAM, 0);
         for (i, &d) in dw.iter().enumerate() {
             if d != 0.0 {
@@ -167,7 +312,7 @@ fn prop_grid_matches_single_tile_serial() {
             }
         }
         let mut decoded_grid = vec![0.0f32; k * n];
-        gr.drift_into(2.0, &pool, &mut decoded_grid);
+        gr.drift_into(2.0, &pool, &mut scratch, &mut decoded_grid);
         if decoded_grid != hw.decode(2.0) {
             return Err("post-increment decode diverges".into());
         }
