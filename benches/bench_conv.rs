@@ -1,0 +1,75 @@
+//! Conv-on-grid training benches: full `NetTrainer` steps over the
+//! ResNet-style layer graph (im2col patch lowering, per-layer grids,
+//! transposed-VMM backprop, col2im scatter, hybrid updates) across
+//! width multipliers and worker counts.
+//!
+//! `BENCH_conv.json` records conv steps/sec per case plus the headline
+//! worker-scaling ratios — the evidence that the patch-strip sharding
+//! parallelizes the conv path like the dense one.
+
+use hic_train::bench::Bench;
+use hic_train::coordinator::nettrainer::{NetTrainer, NetTrainerOptions};
+use hic_train::crossbar::TilingPolicy;
+use hic_train::nn::features::{BlobDataset, FeatureSource};
+use hic_train::nn::graph::GraphSpec;
+use hic_train::pcm::device::PcmParams;
+use hic_train::util::pool::WorkerPool;
+
+const IMG: [usize; 3] = [8, 8, 3];
+const STAGES: [usize; 3] = [8, 12, 16];
+const CLASSES: usize = 10;
+const BATCH: usize = 8;
+const TILE: usize = 32;
+
+fn data() -> FeatureSource {
+    let [h, w, c] = IMG;
+    FeatureSource::Blobs(BlobDataset::with_shape(7, h, w, c, CLASSES,
+                                                 0.4, 4096, 512))
+}
+
+fn trainer(width_permille: u32, workers: usize) -> NetTrainer {
+    let spec = GraphSpec::resnet(IMG, STAGES, 1, CLASSES, width_permille);
+    NetTrainer::from_spec(
+        PcmParams::default(), &spec,
+        TilingPolicy { tile_rows: TILE, tile_cols: TILE }, data(),
+        WorkerPool::new(workers),
+        NetTrainerOptions { batch: BATCH, ..Default::default() })
+}
+
+fn main() {
+    let mut b = Bench::new("conv");
+    // One benched element = one trained sample (batch per step).
+    let elements = BATCH as f64;
+
+    // Width sweep, serial.
+    for w in [500u32, 1000, 1500] {
+        let mut t = trainer(w, 1);
+        b.bench_with_elements(
+            &format!("resnet_step_w{w}_workers1"), Some(elements),
+            || t.train_steps(1));
+    }
+
+    // Worker scaling at width 1.0.
+    for workers in [2usize, 4] {
+        let mut t = trainer(1000, workers);
+        b.bench_with_elements(
+            &format!("resnet_step_w1000_workers{workers}"),
+            Some(elements), || t.train_steps(1));
+    }
+
+    let mut speedups = Vec::new();
+    for (label, base, cont) in [
+        ("conv_w4_vs_w1",
+         "resnet_step_w1000_workers1", "resnet_step_w1000_workers4"),
+        ("conv_w2_vs_w1",
+         "resnet_step_w1000_workers1", "resnet_step_w1000_workers2"),
+    ] {
+        if let Some(s) = b.speedup(base, cont) {
+            println!("[conv] {label}: {s:.2}x");
+            speedups.push((label.to_string(), s));
+        }
+    }
+    b.write_json(std::path::Path::new("BENCH_conv.json"), &speedups)
+        .expect("writing BENCH_conv.json");
+    b.finish();
+}

@@ -17,9 +17,10 @@
 //! `crossbar::CrossbarGrid` device model (no artifacts/PJRT needed) —
 //! the engine behind the grid-routed fig3/fig5/fig6 sweeps; and
 //! [`nettrainer`] extends the device-level path to **multi-layer**
-//! networks (per-layer grids, transposed-VMM backprop, shared drift
-//! clock and refresh cadence) — the engine behind the grid-routed fig4
-//! width sweep.
+//! layer graphs (per-layer grids, transposed-VMM backprop with im2col
+//! patch lowering through conv/residual layers, shared drift clock and
+//! refresh cadence) — the engine behind the grid-routed fig4 width
+//! sweeps (dense `--arch mlp` and ResNet-style `--arch resnet`).
 
 pub mod baseline;
 pub mod gridtrainer;

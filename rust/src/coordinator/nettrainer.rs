@@ -1,31 +1,40 @@
-//! Multi-layer device-level training loop on per-layer crossbar grids.
+//! Multi-layer device-level training loop over the layer-graph IR.
 //!
-//! [`NetTrainer`] drives a [`DeviceNet`] end to end: analog forward
-//! VMMs layer by layer, softmax cross-entropy on the host, analog
-//! **transposed** VMMs (`CrossbarGrid::vmm_t_batch_into`) carrying the
-//! error back down the stack, digital weight-gradient outer products,
+//! [`NetTrainer`] drives a [`GraphNet`] end to end: analog forward VMMs
+//! layer by layer (conv layers through the im2col patch lowering),
+//! softmax cross-entropy on the host, analog **transposed** VMMs
+//! (`CrossbarGrid::vmm_t_batch_into`) carrying the error back down the
+//! graph (plus col2im scatters through conv layers and skip-adds
+//! through residual blocks), digital weight-gradient outer products,
 //! and the per-layer hybrid update (LSB accumulation, MSB overflow
 //! programming) — with one shared drift clock, one refresh cadence and
-//! the endurance ledgers folded across every layer's tiles.  This is
+//! the endurance ledgers folded across every grid's tiles.  This is
 //! the mixed-precision computational-memory training loop (Nandakumar
-//! et al. 1712.01192 / 2001.11773) run entirely on the device model.
+//! et al. 1712.01192 / 2001.11773) run entirely on the device model,
+//! now covering the paper's conv/residual topology class.
 //!
 //! Backward DAC headroom: backprop errors shrink as training converges,
-//! so the error batch is pre-scaled by `bwd_gain` before the transposed
-//! VMM and the result scaled back by `1/bwd_gain` — the ranged-scaling
-//! trick of the mixed-precision trainers, keeping the error inside the
-//! DAC's quantization range without per-batch calibration.
+//! so every error batch is pre-scaled by `bwd_gain` before its
+//! transposed VMM and the result scaled back by `1/bwd_gain` — the
+//! ranged-scaling trick of the mixed-precision trainers, keeping the
+//! error inside the DAC's quantization range without per-batch
+//! calibration.
 //!
 //! Determinism: data sampling is counter-based (sequential epoch
 //! order), every grid kernel uses the step index as its RNG `round`
 //! (evaluation probes use the disjoint [`EVAL_ROUND_BASE`] range), and
 //! per-layer grid seeds keep all layer streams independent — so a full
 //! training-plus-eval run is **bitwise identical for any worker
-//! count**, pinned by `rust/tests/prop_parallel_equivalence.rs`.
+//! count**, pinned by `rust/tests/prop_parallel_equivalence.rs` (dense)
+//! and `rust/tests/prop_conv_equivalence.rs` (conv/residual).  The
+//! dense path builds `GraphSpec::mlp(dims)`, whose grid seeds and
+//! kernel invocation order replay the PR-3 `DeviceNet` loop exactly —
+//! the dense fig4 golden pins this byte for byte.
 
-use crate::crossbar::{GridScratch, TilingPolicy};
+use crate::crossbar::TilingPolicy;
 use crate::nn::features::FeatureSource;
-use crate::nn::net::{argmax_row, nll_sum, softmax_rows, DeviceNet};
+use crate::nn::graph::{GraphNet, GraphSpec};
+use crate::nn::net::{argmax_row, nll_sum, softmax_rows};
 use crate::pcm::device::PcmParams;
 use crate::pcm::endurance::EnduranceLedger;
 use crate::util::pool::WorkerPool;
@@ -44,7 +53,7 @@ pub struct NetTrainerOptions {
     pub seconds_per_batch: f64,
     /// input batch size
     pub batch: usize,
-    /// backward error pre-scale before the transposed VMM's DAC
+    /// backward error pre-scale before each transposed VMM's DAC
     pub bwd_gain: f32,
     /// per-layer weight range scale: `w_max = w_scale / √fan_in`
     pub w_scale: f32,
@@ -65,14 +74,12 @@ impl Default for NetTrainerOptions {
 }
 
 pub struct NetTrainer {
-    pub net: DeviceNet,
+    pub net: GraphNet,
     pub data: FeatureSource,
     pub pool: WorkerPool,
     pub opts: NetTrainerOptions,
     pub clock: DriftClock,
     refresh: RefreshScheduler,
-    /// one reusable scratch per layer grid
-    scratches: Vec<GridScratch>,
     pub step: usize,
     /// per-step mean training cross-entropy
     pub losses: Vec<f64>,
@@ -82,60 +89,48 @@ pub struct NetTrainer {
     // reusable step buffers
     x: Vec<f32>,
     labels: Vec<u8>,
-    /// per-layer pre-activations `[m, dims[l+1]]`
-    zs: Vec<Vec<f32>>,
-    /// per-layer hidden ReLU outputs `[m, dims[l+1]]` (layers `0..L-1`)
-    acts: Vec<Vec<f32>>,
     probs: Vec<f32>,
-    /// per-layer backprop errors `[m, dims[l+1]]`
-    deltas: Vec<Vec<f32>>,
-    /// gain-scaled error staging buffer
-    escaled: Vec<f32>,
-    /// per-layer weight gradients `[dims[l] * dims[l+1]]`
-    grads: Vec<Vec<f32>>,
+    /// softmax − one-hot logits gradient `[m, classes]`
+    dlogits: Vec<f32>,
 }
 
 impl NetTrainer {
-    /// Build a trainer: the net is constructed and its init weights
-    /// programmed through `pool` (deterministic for any worker count).
+    /// Dense-stack trainer (the PR-3 entry point): `dims` becomes
+    /// `GraphSpec::mlp(dims)`.
     pub fn new(params: PcmParams, dims: &[usize], policy: TilingPolicy,
                data: FeatureSource, pool: WorkerPool,
                opts: NetTrainerOptions) -> Self {
-        assert_eq!(dims[0], data.dim(), "input dim != feature dim");
-        assert_eq!(*dims.last().unwrap(), data.classes(),
-                   "output dim != classes");
-        let net = DeviceNet::new(params, dims, policy, opts.w_scale,
-                                 opts.seed, &pool);
-        let scratches = net.scratches();
+        Self::from_spec(params, &GraphSpec::mlp(dims), policy, data,
+                        pool, opts)
+    }
+
+    /// Build a trainer over an arbitrary layer graph: the net is
+    /// constructed and its init weights programmed through `pool`
+    /// (deterministic for any worker count).
+    pub fn from_spec(params: PcmParams, spec: &GraphSpec,
+                     policy: TilingPolicy, data: FeatureSource,
+                     pool: WorkerPool, opts: NetTrainerOptions) -> Self {
+        assert_eq!(spec.input.len(), data.dim(),
+                   "graph input dim != feature dim");
+        let net = GraphNet::new(params, spec, policy, opts.w_scale,
+                                opts.seed, &pool);
+        assert_eq!(net.classes(), data.classes(),
+                   "graph head dim != classes");
         let m = opts.batch;
-        let nl = net.layers();
+        let d0 = net.input_dim();
         let classes = net.classes();
-        let zs: Vec<Vec<f32>> =
-            (0..nl).map(|l| vec![0.0; m * dims[l + 1]]).collect();
-        let acts: Vec<Vec<f32>> =
-            (0..nl - 1).map(|l| vec![0.0; m * dims[l + 1]]).collect();
-        let deltas: Vec<Vec<f32>> =
-            (0..nl).map(|l| vec![0.0; m * dims[l + 1]]).collect();
-        let grads: Vec<Vec<f32>> =
-            (0..nl).map(|l| vec![0.0; dims[l] * dims[l + 1]]).collect();
-        let wmax_dim = *dims.iter().max().unwrap();
         NetTrainer {
             clock: DriftClock::new(opts.seconds_per_batch),
             refresh: RefreshScheduler::new(opts.refresh_every),
-            scratches,
             step: 0,
             losses: Vec::new(),
             overflows: 0,
             refreshed: 0,
             eval_rounds: 0,
-            x: vec![0.0; m * dims[0]],
+            x: vec![0.0; m * d0],
             labels: vec![0; m],
-            zs,
-            acts,
             probs: vec![0.0; m * classes],
-            deltas,
-            escaled: vec![0.0; m * wmax_dim],
-            grads,
+            dlogits: vec![0.0; m * classes],
             net,
             data,
             pool,
@@ -147,7 +142,6 @@ impl NetTrainer {
     /// transposed VMMs → per-layer hybrid updates, drift clock and
     /// refresh cadence included.
     pub fn train_steps(&mut self, steps: usize) {
-        let nl = self.net.layers();
         let classes = self.net.classes();
         let d0 = self.net.input_dim();
         let m = self.opts.batch;
@@ -164,24 +158,13 @@ impl NetTrainer {
                     idx, false, &mut self.x[j * d0..(j + 1) * d0]);
             }
 
-            // Forward: analog VMM per layer, ReLU between layers.
-            for l in 0..nl {
-                let input: &[f32] =
-                    if l == 0 { &self.x } else { &self.acts[l - 1] };
-                self.net.grids[l].vmm_batch_into(
-                    input, m, t_now, round, &self.pool,
-                    &mut self.scratches[l], &mut self.zs[l]);
-                if l + 1 < nl {
-                    for (a, &z) in
-                        self.acts[l].iter_mut().zip(&self.zs[l])
-                    {
-                        *a = if z > 0.0 { z } else { 0.0 };
-                    }
-                }
-            }
+            // Forward walk: analog VMM per weighted layer, digital
+            // nonlinearities between (activations cached in the graph).
+            let logits =
+                self.net.forward(&self.x, m, t_now, round, &self.pool);
 
             // Loss and output error (softmax − one-hot).
-            softmax_rows(&self.zs[nl - 1], m, classes, &mut self.probs);
+            softmax_rows(logits, m, classes, &mut self.probs);
             self.losses.push(
                 nll_sum(&self.probs, &self.labels, classes) / m as f64);
             for s in 0..m {
@@ -191,62 +174,22 @@ impl NetTrainer {
                     } else {
                         0.0
                     };
-                    self.deltas[nl - 1][s * classes + j] =
+                    self.dlogits[s * classes + j] =
                         self.probs[s * classes + j] - y;
                 }
             }
 
-            // Backward: digital weight-gradient outer product per
-            // layer, then the analog transposed VMM carries the error
-            // to the layer below (pre-update weights: all updates are
-            // applied after the full backward pass).
-            let inv_m = 1.0f32 / m as f32;
-            for l in (0..nl).rev() {
-                let (k, n) = (self.net.dims[l], self.net.dims[l + 1]);
-                let a_in: &[f32] =
-                    if l == 0 { &self.x } else { &self.acts[l - 1] };
-                for i in 0..k {
-                    for j in 0..n {
-                        let mut acc = 0.0f32;
-                        for s in 0..m {
-                            acc += a_in[s * k + i]
-                                * self.deltas[l][s * n + j];
-                        }
-                        self.grads[l][i * n + j] = acc * inv_m;
-                    }
-                }
-                if l > 0 {
-                    let gain = self.opts.bwd_gain;
-                    for (ev, &dv) in self.escaled[..m * n]
-                        .iter_mut()
-                        .zip(&self.deltas[l][..m * n])
-                    {
-                        *ev = dv * gain;
-                    }
-                    self.net.grids[l].vmm_t_batch_into(
-                        &self.escaled[..m * n], m, t_now, round,
-                        &self.pool, &mut self.scratches[l],
-                        &mut self.deltas[l - 1]);
-                    let inv_gain = 1.0f32 / gain;
-                    for (d, &z) in
-                        self.deltas[l - 1].iter_mut().zip(&self.zs[l - 1])
-                    {
-                        *d = if z > 0.0 { *d * inv_gain } else { 0.0 };
-                    }
-                }
-            }
+            // Backward walk (pre-update weights throughout: all grid
+            // updates are applied after the full backward pass).
+            self.net.backward(&self.dlogits, m, t_now, round,
+                              &self.pool, self.opts.bwd_gain);
 
-            // Hybrid updates + refresh cadence across every layer.
-            for l in 0..nl {
-                self.overflows += self.net.grids[l].apply_update(
-                    &self.grads[l], lr, t_now, round, &self.pool,
-                    &mut self.scratches[l]);
-            }
+            // Hybrid updates + refresh cadence across every grid.
+            self.overflows +=
+                self.net.apply_updates(lr, t_now, round, &self.pool);
             if self.refresh.due(self.step) {
-                for l in 0..nl {
-                    self.refreshed += self.net.grids[l].refresh(
-                        t_now, round, &self.pool);
-                }
+                self.refreshed +=
+                    self.net.refresh(t_now, round, &self.pool);
             }
             self.step += 1;
         }
@@ -258,7 +201,6 @@ impl NetTrainer {
     /// rounds), so repeated probes draw fresh read noise and never
     /// replay training noise.
     pub fn evaluate(&mut self, n: usize, t_eval: f32) -> (f64, f64) {
-        let nl = self.net.layers();
         let classes = self.net.classes();
         let d0 = self.net.input_dim();
         let m = self.opts.batch;
@@ -273,27 +215,9 @@ impl NetTrainer {
                 self.labels[j] = self.data.sample_into(
                     done + j, true, &mut self.x[j * d0..(j + 1) * d0]);
             }
-            for l in 0..nl {
-                let (k, n_out) = (self.net.dims[l], self.net.dims[l + 1]);
-                let input: &[f32] = if l == 0 {
-                    &self.x[..mb * k]
-                } else {
-                    &self.acts[l - 1][..mb * k]
-                };
-                self.net.grids[l].vmm_batch_into(
-                    input, mb, t_eval, round, &self.pool,
-                    &mut self.scratches[l],
-                    &mut self.zs[l][..mb * n_out]);
-                if l + 1 < nl {
-                    for (a, &z) in self.acts[l][..mb * n_out]
-                        .iter_mut()
-                        .zip(&self.zs[l][..mb * n_out])
-                    {
-                        *a = if z > 0.0 { z } else { 0.0 };
-                    }
-                }
-            }
-            softmax_rows(&self.zs[nl - 1][..mb * classes], mb, classes,
+            let logits = self.net.forward(&self.x[..mb * d0], mb,
+                                          t_eval, round, &self.pool);
+            softmax_rows(logits, mb, classes,
                          &mut self.probs[..mb * classes]);
             loss_sum += nll_sum(&self.probs[..mb * classes],
                                 &self.labels[..mb], classes);
@@ -308,18 +232,16 @@ impl NetTrainer {
         (loss_sum / n as f64, hits as f64 / n as f64)
     }
 
-    /// Endurance snapshot folded over every layer's tiles.
+    /// Endurance snapshot folded over every grid's tiles.
     pub fn endurance(&self) -> EnduranceLedger {
         let mut ledger = EnduranceLedger::new();
-        for g in &self.net.grids {
-            g.record_endurance(&mut ledger);
-        }
+        self.net.record_endurance(&mut ledger);
         ledger
     }
 
-    /// Total SET pulses across all layers.
+    /// Total SET pulses across all grids.
     pub fn total_set_pulses(&self) -> u64 {
-        self.net.grids.iter().map(|g| g.total_set_pulses()).sum()
+        self.net.total_set_pulses()
     }
 }
 

@@ -1,0 +1,282 @@
+//! Patch lowering for convolution-on-grid (im2col / col2im).
+//!
+//! The standard mixed-precision-in-memory construction maps a 2-D
+//! convolution onto an analog crossbar by lowering each `[kh, kw, cin]`
+//! receptive field to one row of a patch matrix, so the whole layer
+//! becomes a single `[kh·kw·cin, cout]` VMM per patch (Nandakumar et
+//! al. 2020; Joshi et al. 2020).  This module is the deterministic data
+//! movement around that VMM:
+//!
+//! * [`PatchGeom`] — the lowering geometry (input `[h, w, c]` in HWC
+//!   layout, kernel size, stride, zero padding) and its derived output
+//!   extents;
+//! * [`im2col_into`] — gather input patches into a caller-owned
+//!   `[m·P, kh·kw·cin]` patch matrix (`P` output positions per sample);
+//! * [`col2im_into`] — the exact adjoint: scatter-add patch-space
+//!   gradients back to input-space activations.
+//!
+//! Both kernels shard by **sample** on the [`WorkerPool`]: every shard
+//! writes a disjoint slice of the output buffer and consumes no RNG, so
+//! they are trivially bitwise identical for any worker count — the grid
+//! determinism contract extends to the patch shards for free
+//! (`rust/tests/prop_conv_equivalence.rs` pins this).  Buffers are
+//! caller-owned and reused across invocations: the conv layers keep
+//! their patch matrices inside the layer state, so the training loop
+//! allocates nothing per batch.
+//!
+//! Determinism contract of the scatter: `col2im_into` accumulates f32
+//! partial sums in ascending patch-row order, then kernel-row, then
+//! kernel-column, then channel — a pinned op order mirrored by the
+//! golden oracle (`rust/tests/golden/oracle.py`).
+
+use crate::util::pool::WorkerPool;
+
+/// Geometry of one conv lowering: input `[in_h, in_w, cin]` (HWC,
+/// row-major), `kh×kw` kernels, `cout` output channels, square stride
+/// and symmetric zero padding.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PatchGeom {
+    pub in_h: usize,
+    pub in_w: usize,
+    pub cin: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub cout: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl PatchGeom {
+    /// Output height `⌊(h + 2·pad − kh)/stride⌋ + 1`.
+    pub fn out_h(&self) -> usize {
+        assert!(self.stride > 0, "stride must be >= 1");
+        assert!(self.in_h + 2 * self.pad >= self.kh,
+                "kernel taller than padded input");
+        (self.in_h + 2 * self.pad - self.kh) / self.stride + 1
+    }
+
+    /// Output width `⌊(w + 2·pad − kw)/stride⌋ + 1`.
+    pub fn out_w(&self) -> usize {
+        assert!(self.stride > 0, "stride must be >= 1");
+        assert!(self.in_w + 2 * self.pad >= self.kw,
+                "kernel wider than padded input");
+        (self.in_w + 2 * self.pad - self.kw) / self.stride + 1
+    }
+
+    /// Output positions per sample (`P = out_h · out_w`).
+    pub fn positions(&self) -> usize {
+        self.out_h() * self.out_w()
+    }
+
+    /// Lowered patch length (`K = kh · kw · cin` — the grid fan-in).
+    pub fn patch_len(&self) -> usize {
+        self.kh * self.kw * self.cin
+    }
+
+    /// Flat input activation length per sample.
+    pub fn in_len(&self) -> usize {
+        self.in_h * self.in_w * self.cin
+    }
+
+    /// Flat output activation length per sample (HWC).
+    pub fn out_len(&self) -> usize {
+        self.positions() * self.cout
+    }
+}
+
+/// Gather `m` samples' input activations (`x: [m, in_len]`, HWC) into
+/// the patch matrix `patches: [m·P, K]` — row `s·P + (oy·out_w + ox)`
+/// holds sample `s`'s receptive field at output position `(oy, ox)` in
+/// `(ky, kx, ci)` order; out-of-bounds taps are zero (padding).
+/// Sample-sharded on `pool`; bitwise identical for any worker count.
+pub fn im2col_into(g: &PatchGeom, x: &[f32], m: usize, pool: &WorkerPool,
+                   patches: &mut [f32]) {
+    let (p, k) = (g.positions(), g.patch_len());
+    assert_eq!(x.len(), m * g.in_len());
+    assert_eq!(patches.len(), m * p * k);
+    let mut shards: Vec<&mut [f32]> = patches.chunks_mut(p * k).collect();
+    pool.run(&mut shards, |s, sub| {
+        im2col_sample(g, &x[s * g.in_len()..(s + 1) * g.in_len()], sub);
+    });
+}
+
+/// One sample's patch gather (serial reference; the sharded kernel runs
+/// exactly this per sample).
+fn im2col_sample(g: &PatchGeom, x: &[f32], out: &mut [f32]) {
+    let (oh, ow) = (g.out_h(), g.out_w());
+    let k = g.patch_len();
+    let mut r = 0;
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let dst = &mut out[r * k..(r + 1) * k];
+            let mut idx = 0;
+            for ky in 0..g.kh {
+                let iy = (oy * g.stride + ky) as isize - g.pad as isize;
+                for kx in 0..g.kw {
+                    let ix = (ox * g.stride + kx) as isize - g.pad as isize;
+                    let seg = &mut dst[idx..idx + g.cin];
+                    if iy >= 0 && (iy as usize) < g.in_h
+                        && ix >= 0 && (ix as usize) < g.in_w
+                    {
+                        let src =
+                            ((iy as usize) * g.in_w + ix as usize) * g.cin;
+                        seg.copy_from_slice(&x[src..src + g.cin]);
+                    } else {
+                        seg.fill(0.0);
+                    }
+                    idx += g.cin;
+                }
+            }
+            r += 1;
+        }
+    }
+}
+
+/// Scatter-add patch-space gradients (`dpatches: [m·P, K]`) back to
+/// input space (`dx: [m, in_len]`, zeroed first) — the exact adjoint of
+/// [`im2col_into`]: overlapping receptive fields accumulate, padded
+/// taps are dropped.  Accumulation order per element is ascending patch
+/// row, then `(ky, kx, ci)` — pinned (oracle-mirrored) f32 op order.
+/// Sample-sharded on `pool`; bitwise identical for any worker count.
+pub fn col2im_into(g: &PatchGeom, dpatches: &[f32], m: usize,
+                   pool: &WorkerPool, dx: &mut [f32]) {
+    let (p, k) = (g.positions(), g.patch_len());
+    assert_eq!(dpatches.len(), m * p * k);
+    assert_eq!(dx.len(), m * g.in_len());
+    let mut shards: Vec<&mut [f32]> = dx.chunks_mut(g.in_len()).collect();
+    pool.run(&mut shards, |s, sub| {
+        col2im_sample(g, &dpatches[s * p * k..(s + 1) * p * k], sub);
+    });
+}
+
+/// One sample's adjoint scatter (serial reference).
+fn col2im_sample(g: &PatchGeom, dp: &[f32], dx: &mut [f32]) {
+    dx.fill(0.0);
+    let (oh, ow) = (g.out_h(), g.out_w());
+    let k = g.patch_len();
+    let mut r = 0;
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let src = &dp[r * k..(r + 1) * k];
+            let mut idx = 0;
+            for ky in 0..g.kh {
+                let iy = (oy * g.stride + ky) as isize - g.pad as isize;
+                for kx in 0..g.kw {
+                    let ix = (ox * g.stride + kx) as isize - g.pad as isize;
+                    if iy >= 0 && (iy as usize) < g.in_h
+                        && ix >= 0 && (ix as usize) < g.in_w
+                    {
+                        let dst =
+                            ((iy as usize) * g.in_w + ix as usize) * g.cin;
+                        for ci in 0..g.cin {
+                            dx[dst + ci] += src[idx + ci];
+                        }
+                    }
+                    idx += g.cin;
+                }
+            }
+            r += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geom(h: usize, w: usize, c: usize, kh: usize, kw: usize,
+            cout: usize, stride: usize, pad: usize) -> PatchGeom {
+        PatchGeom { in_h: h, in_w: w, cin: c, kh, kw, cout, stride, pad }
+    }
+
+    #[test]
+    fn output_extents() {
+        // 3×3 same-padded stride 1 preserves the spatial extent.
+        let g = geom(8, 8, 3, 3, 3, 16, 1, 1);
+        assert_eq!((g.out_h(), g.out_w()), (8, 8));
+        assert_eq!(g.patch_len(), 27);
+        assert_eq!(g.out_len(), 8 * 8 * 16);
+        // Stride-2 downsampling halves (floor) the extent.
+        let g = geom(8, 8, 16, 3, 3, 32, 2, 1);
+        assert_eq!((g.out_h(), g.out_w()), (4, 4));
+        // 1×1 stride-2 projection matches the 3×3 pad-1 stride-2 body.
+        let g = geom(8, 8, 16, 1, 1, 32, 2, 0);
+        assert_eq!((g.out_h(), g.out_w()), (4, 4));
+        // Odd extents floor.
+        let g = geom(5, 5, 1, 3, 3, 1, 2, 1);
+        assert_eq!((g.out_h(), g.out_w()), (3, 3));
+    }
+
+    #[test]
+    fn im2col_identity_kernel_is_a_copy() {
+        // 1×1 stride-1 no-pad lowering is the identity reshape.
+        let g = geom(3, 2, 2, 1, 1, 4, 1, 0);
+        let x: Vec<f32> = (0..2 * g.in_len()).map(|i| i as f32).collect();
+        let mut p = vec![0.0f32; 2 * g.positions() * g.patch_len()];
+        im2col_into(&g, &x, 2, &WorkerPool::serial(), &mut p);
+        assert_eq!(p, x);
+        // And the adjoint is the identity back.
+        let mut dx = vec![1.0f32; x.len()];
+        col2im_into(&g, &p, 2, &WorkerPool::serial(), &mut dx);
+        assert_eq!(dx, x);
+    }
+
+    #[test]
+    fn im2col_padding_and_neighborhood() {
+        // Single channel 2×2 image, 3×3 same-padded kernel: the patch at
+        // output (0,0) sees the image in its bottom-right quadrant.
+        let g = geom(2, 2, 1, 3, 3, 1, 1, 1);
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let mut p = vec![0.0f32; g.positions() * g.patch_len()];
+        im2col_into(&g, &x, 1, &WorkerPool::serial(), &mut p);
+        assert_eq!(&p[..9],
+                   &[0.0, 0.0, 0.0, 0.0, 1.0, 2.0, 0.0, 3.0, 4.0]);
+        // Patch at (1,1): image in the top-left quadrant.
+        assert_eq!(&p[3 * 9..4 * 9],
+                   &[1.0, 2.0, 0.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn col2im_is_the_adjoint_of_im2col() {
+        // <im2col(x), y> == <x, col2im(y)> for the linear pair.
+        let g = geom(4, 3, 2, 3, 3, 5, 2, 1);
+        let m = 2;
+        let (p, k) = (g.positions(), g.patch_len());
+        let x: Vec<f32> = (0..m * g.in_len())
+            .map(|i| (((i * 7) % 11) as f32 - 5.0) / 4.0)
+            .collect();
+        let y: Vec<f32> = (0..m * p * k)
+            .map(|i| (((i * 5) % 13) as f32 - 6.0) / 8.0)
+            .collect();
+        let mut px = vec![0.0f32; m * p * k];
+        im2col_into(&g, &x, m, &WorkerPool::serial(), &mut px);
+        let mut dy = vec![0.0f32; m * g.in_len()];
+        col2im_into(&g, &y, m, &WorkerPool::serial(), &mut dy);
+        let lhs: f64 = px.iter().zip(&y)
+            .map(|(&a, &b)| a as f64 * b as f64).sum();
+        let rhs: f64 = x.iter().zip(&dy)
+            .map(|(&a, &b)| a as f64 * b as f64).sum();
+        assert!((lhs - rhs).abs() < 1e-4, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn patch_kernels_are_worker_invariant() {
+        let g = geom(6, 5, 3, 3, 3, 4, 2, 1);
+        let m = 5;
+        let (p, k) = (g.positions(), g.patch_len());
+        let x: Vec<f32> = (0..m * g.in_len())
+            .map(|i| (((i * 3) % 17) as f32 - 8.0) / 8.0)
+            .collect();
+        let run = |workers: usize| {
+            let pool = WorkerPool::new(workers);
+            let mut px = vec![0.0f32; m * p * k];
+            im2col_into(&g, &x, m, &pool, &mut px);
+            let mut dx = vec![0.0f32; m * g.in_len()];
+            col2im_into(&g, &px, m, &pool, &mut dx);
+            (px, dx)
+        };
+        let a = run(1);
+        assert_eq!(a, run(2));
+        assert_eq!(a, run(4));
+    }
+}

@@ -24,16 +24,24 @@
 //!   counter-based per-shard RNG streams (bitwise identical for any
 //!   worker count; bit-compatible with the serial single-tile path in
 //!   the noise-free domain)
+//! * [`conv`] — im2col/col2im patch lowering for convolution-on-grid:
+//!   sample-sharded, RNG-free patch gather/scatter kernels around the
+//!   grid VMMs, so a conv layer is one `[kh·kw·cin, cout]` analog VMM
+//!   per patch (forward) and one transposed VMM plus adjoint scatter
+//!   (backward) — the worker-count determinism contract extends to the
+//!   patch shards
 //! * [`energy`] — energy / latency / area estimator with published-order
 //!   constants (ISAAC-class periphery), used for the architecture
 //!   comparisons in DESIGN.md and the `crossbar_explorer` example
 
+pub mod conv;
 pub mod energy;
 pub mod grid;
 pub mod mapper;
 pub mod quant;
 pub mod tile;
 
+pub use conv::PatchGeom;
 pub use energy::{EnergyModel, EnergyReport};
 pub use grid::{CrossbarGrid, GridScratch};
 pub use mapper::{LayerMapping, TileCoord, TilingPolicy};

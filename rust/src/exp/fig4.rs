@@ -15,11 +15,10 @@ use crate::runtime::Engine;
 use crate::util::csv::{CsvCell, CsvWriter};
 use crate::log_info;
 
+use super::widths::{bits_to_kb, permille_label, permille_tag,
+                    BASE_WIDTHS_PERMILLE, WIDTHS_PERMILLE};
 use super::{config_dir, ensure_out_dir, mean_std, print_row, run_hic,
             ExpOptions};
-
-pub const HIC_WIDTHS: [&str; 4] = ["0p5", "0p75", "1p0", "1p5"];
-pub const BASE_WIDTHS: [&str; 4] = ["0p25", "0p5", "0p75", "1p0"];
 
 #[derive(Debug, Clone)]
 pub struct Fig4Row {
@@ -34,23 +33,24 @@ pub fn run(opts: &ExpOptions) -> Result<Vec<Fig4Row>> {
     ensure_out_dir(&opts.out_dir)?;
     let mut rows = Vec::new();
 
-    for w in HIC_WIDTHS {
+    for wp in WIDTHS_PERMILLE {
+        let w = permille_tag(wp);
         let cfg = format!("fig4_hic_w{w}");
         let mut accs = Vec::new();
         let mut kb = 0.0;
         for &seed in &opts.seeds {
             let (t, acc) = run_hic(&cfg, opts, seed)?;
-            kb = t.engine.manifest.inference_model_bits(true) as f64
-                / 8.0 / 1024.0;
+            kb = bits_to_kb(t.engine.manifest.inference_model_bits(true));
             accs.push(acc);
         }
         let (m, s) = mean_std(&accs);
         log_info!("fig4 hic w={w}: {:.1} KB, acc {:.3} ± {:.3}", kb, m, s);
-        rows.push(Fig4Row { series: "hic", width: w.replace('p', "."),
+        rows.push(Fig4Row { series: "hic", width: permille_label(wp),
                             model_kb: kb, eval_acc: m, eval_std: s });
     }
 
-    for w in BASE_WIDTHS {
+    for wp in BASE_WIDTHS_PERMILLE {
+        let w = permille_tag(wp);
         let cfg = format!("fig4_base_w{w}");
         let dir = config_dir(&cfg)?;
         let mut accs = Vec::new();
@@ -62,12 +62,12 @@ pub fn run(opts: &ExpOptions) -> Result<Vec<Fig4Row>> {
                 0.1, 0.1, opts.steps);
             bt.train_steps(opts.steps)?;
             accs.push(bt.evaluate(opts.eval_batches)?.accuracy);
-            kb = bt.engine.manifest.inference_model_bits(false) as f64
-                / 8.0 / 1024.0;
+            kb = bits_to_kb(
+                bt.engine.manifest.inference_model_bits(false));
         }
         let (m, s) = mean_std(&accs);
         log_info!("fig4 base w={w}: {:.1} KB, acc {:.3} ± {:.3}", kb, m, s);
-        rows.push(Fig4Row { series: "fp32", width: w.replace('p', "."),
+        rows.push(Fig4Row { series: "fp32", width: permille_label(wp),
                             model_kb: kb, eval_acc: m, eval_std: s });
     }
 
@@ -79,7 +79,7 @@ pub fn run(opts: &ExpOptions) -> Result<Vec<Fig4Row>> {
 /// Model size (KB) of a config without training it — for reports.
 pub fn model_size_kb(config: &str, hic: bool) -> Result<f64> {
     let engine = Engine::load(&config_dir(config)?)?;
-    Ok(engine.manifest.inference_model_bits(hic) as f64 / 8.0 / 1024.0)
+    Ok(bits_to_kb(engine.manifest.inference_model_bits(hic)))
 }
 
 fn write_csv(opts: &ExpOptions, rows: &[Fig4Row]) -> Result<()> {

@@ -33,14 +33,16 @@ use crate::crossbar::TilingPolicy;
 use crate::data::{IMG_C, IMG_H, IMG_W, NUM_CLASSES};
 use crate::hic::weight::HicGeometry;
 use crate::nn::features::{BlobDataset, FeatureSource, PooledCifar};
+use crate::nn::graph::{ActShape, GraphSpec};
 use crate::nn::net::NetSpec;
-use crate::nn::FpNet;
+use crate::nn::{FpGraphNet, FpNet};
 use crate::pcm::device::PcmParams;
 use crate::util::json::Json;
 use crate::util::pool::WorkerPool;
 use crate::log_info;
 
 use super::ensure_out_dir;
+use super::widths::WIDTHS_PERMILLE;
 
 /// The fig3 variant subset whose device math is fully portable
 /// (no libm in any consumed path), used by the golden byte-regression
@@ -267,15 +269,42 @@ pub fn run_fig6(opts: &GridExpOptions) -> Result<Json> {
 pub enum NnExpData {
     /// portable Gaussian blobs (no libm — the golden-pinned source)
     Blobs { dim: usize },
+    /// image-shaped portable blobs (`[h, w, c]` HWC — the
+    /// golden-pinned source of the resnet arch)
+    BlobsImg { h: usize, w: usize, c: usize },
     /// pooled synthetic CIFAR from the `data` pipeline (default)
     Cifar { pool: usize },
+}
+
+/// Weight-window scale of the resnet arch (`w_max = w_scale/√fan_in`).
+/// The conv/residual graph is 4+ analog hops deep: with the dense
+/// default (2.0) the backprop errors attenuate below the ADC's
+/// quantization floor after ~2 transposed VMMs and the deep grids
+/// receive exactly-zero gradients; 4.0 keeps activations and errors
+/// O(1) through depth so the whole stack trains (validated against the
+/// oracle: 0.33 → 1.00 eval accuracy on the residual learning config).
+/// An AdaBS-style per-layer backward range calibration is the next
+/// modeling rung (see ROADMAP).
+pub const RESNET_W_SCALE: f32 = 4.0;
+
+/// Architecture of the fig4 device sweep.
+#[derive(Clone, Debug)]
+pub enum NnArch {
+    /// dense ReLU stack (`hidden_base` scaled per width — the PR-3
+    /// sweep, document layout unchanged)
+    Mlp,
+    /// ResNet-style conv/residual stages on the layer graph
+    /// (`GraphSpec::resnet`): per-stage channel bases scaled per
+    /// width, `blocks` residual blocks per stage
+    Resnet { stages: [usize; 3], blocks: usize },
 }
 
 /// Parameters of the grid-routed fig4 width sweep.
 #[derive(Clone, Debug)]
 pub struct NnExpOptions {
     pub data: NnExpData,
-    /// base hidden widths, scaled by each width multiplier
+    pub arch: NnArch,
+    /// base hidden widths, scaled by each width multiplier (mlp arch)
     pub hidden_base: Vec<usize>,
     /// width multipliers in permille (integers keep documents
     /// byte-stable)
@@ -303,8 +332,9 @@ impl Default for NnExpOptions {
     fn default() -> Self {
         NnExpOptions {
             data: NnExpData::Cifar { pool: 8 },
+            arch: NnArch::Mlp,
             hidden_base: vec![32, 16],
-            widths_permille: vec![500, 750, 1000, 1500],
+            widths_permille: WIDTHS_PERMILLE.to_vec(),
             classes: 10,
             steps: 150,
             batch: 16,
@@ -336,6 +366,10 @@ impl NnExpOptions {
                 BlobDataset::new(self.seed, dim, self.classes,
                                  self.blob_noise, self.train_len,
                                  self.test_len)),
+            NnExpData::BlobsImg { h, w, c } => FeatureSource::Blobs(
+                BlobDataset::with_shape(self.seed, h, w, c,
+                                        self.classes, self.blob_noise,
+                                        self.train_len, self.test_len)),
             NnExpData::Cifar { pool } => FeatureSource::Cifar(
                 PooledCifar::new(self.seed, pool, self.train_len,
                                  self.test_len)),
@@ -346,17 +380,26 @@ impl NnExpOptions {
     /// building a dataset (the CIFAR source generates its class
     /// prototypes at construction — don't pay that just for a shape).
     fn input_dim(&self) -> usize {
+        self.input_shape().len()
+    }
+
+    /// Activation shape of the configured source (same no-dataset
+    /// shortcut as [`NnExpOptions::input_dim`]).
+    fn input_shape(&self) -> ActShape {
         match self.data {
-            NnExpData::Blobs { dim } => dim,
-            NnExpData::Cifar { pool } => {
-                (IMG_H / pool) * (IMG_W / pool) * IMG_C
-            }
+            NnExpData::Blobs { dim } => ActShape::Flat(dim),
+            NnExpData::BlobsImg { h, w, c } => ActShape::Img { h, w, c },
+            NnExpData::Cifar { pool } => ActShape::Img {
+                h: IMG_H / pool, w: IMG_W / pool, c: IMG_C,
+            },
         }
     }
 
     fn data_classes(&self) -> usize {
         match self.data {
-            NnExpData::Blobs { .. } => self.classes,
+            NnExpData::Blobs { .. } | NnExpData::BlobsImg { .. } => {
+                self.classes
+            }
             NnExpData::Cifar { .. } => NUM_CLASSES,
         }
     }
@@ -370,35 +413,72 @@ impl NnExpOptions {
         }
     }
 
+    /// Layer graph of one width point under the configured arch.
+    fn graph_spec(&self, width_permille: u32) -> Result<GraphSpec> {
+        match self.arch {
+            NnArch::Mlp => Ok(GraphSpec::mlp(&self.spec(width_permille)
+                .dims())),
+            NnArch::Resnet { stages, blocks } => {
+                let ActShape::Img { h, w, c } = self.input_shape()
+                else {
+                    bail!("--arch resnet needs image-shaped data \
+                           (cifar or image blobs)");
+                };
+                Ok(GraphSpec::resnet([h, w, c], stages, blocks,
+                                     self.data_classes(),
+                                     width_permille))
+            }
+        }
+    }
+
     fn echo(&self) -> Vec<(&'static str, Json)> {
         let (data_tag, data_param) = match self.data {
             NnExpData::Blobs { dim } => ("blobs", dim),
+            NnExpData::BlobsImg { h, w, c } => ("blobs_img", h * w * c),
             NnExpData::Cifar { pool } => ("cifar_pooled", pool),
         };
-        vec![
+        let mut doc = vec![
             ("experiment", Json::str("fig4_grid")),
             ("data", Json::str(data_tag)),
             ("data_param", Json::Num(data_param as f64)),
             ("input", Json::Num(self.input_dim() as f64)),
             ("classes", Json::Num(self.data_classes() as f64)),
-            ("hidden_base", Json::Arr(
-                self.hidden_base.iter()
-                    .map(|&h| Json::Num(h as f64)).collect())),
+        ];
+        // Arch-specific keys; the mlp set is exactly the PR-3 document
+        // layout (the dense golden pins those bytes).
+        match self.arch {
+            NnArch::Mlp => {
+                doc.push(("hidden_base", Json::Arr(
+                    self.hidden_base.iter()
+                        .map(|&h| Json::Num(h as f64)).collect())));
+            }
+            NnArch::Resnet { stages, blocks } => {
+                doc.push(("arch", Json::str("resnet")));
+                doc.push(("stage_bases", Json::Arr(
+                    stages.iter()
+                        .map(|&s| Json::Num(s as f64)).collect())));
+                doc.push(("blocks_per_stage",
+                          Json::Num(blocks as f64)));
+            }
+        }
+        doc.extend([
             ("steps", Json::Num(self.steps as f64)),
             ("batch", Json::Num(self.batch as f64)),
             ("tile", Json::Num(self.tile as f64)),
             ("eval_n", Json::Num(self.eval_n as f64)),
             ("seed", Json::Num(self.seed as f64)),
-        ]
+        ]);
+        doc
     }
 }
 
 /// FIG4 (grid-routed): accuracy vs inference model size across width
 /// multipliers, multi-layer training **on the device grids** (forward
-/// analog VMM, transposed-VMM backprop, hybrid updates) against the
-/// FP32 host baseline of the same architecture.  Device model: linear,
-/// read noise on (every consumed op portable, so the document is
-/// byte-stable and golden-pinnable).
+/// analog VMM, transposed-VMM backprop — with im2col patch lowering
+/// through conv/residual layers under `--arch resnet` — and hybrid
+/// updates) against the FP32 host baseline of the same architecture.
+/// Device model: linear, read noise on (every consumed op portable, so
+/// the documents are byte-stable and golden-pinnable).
 pub fn run_fig4(opts: &NnExpOptions) -> Result<Json> {
     if opts.widths_permille.is_empty() {
         bail!("fig4 needs at least one width multiplier");
@@ -414,15 +494,21 @@ pub fn run_fig4(opts: &NnExpOptions) -> Result<Json> {
     let policy =
         TilingPolicy { tile_rows: opts.tile, tile_cols: opts.tile };
     let mut rows = Vec::new();
+    // Per-arch weight-window scale (see `RESNET_W_SCALE`).
+    let w_scale = match opts.arch {
+        NnArch::Mlp => NetTrainerOptions::default().w_scale,
+        NnArch::Resnet { .. } => RESNET_W_SCALE,
+    };
     for &w in &opts.widths_permille {
-        let dims = opts.spec(w).dims();
-        let mut t = NetTrainer::new(
-            params, &dims, policy, opts.feature_source(), opts.pool(),
+        let spec = opts.graph_spec(w)?;
+        let mut t = NetTrainer::from_spec(
+            params, &spec, policy, opts.feature_source(), opts.pool(),
             NetTrainerOptions {
                 seed: opts.seed,
                 lr: LrSchedule::constant(opts.lr),
                 refresh_every: 0,
                 batch: opts.batch,
+                w_scale,
                 ..Default::default()
             });
         t.train_steps(opts.steps);
@@ -430,9 +516,9 @@ pub fn run_fig4(opts: &NnExpOptions) -> Result<Json> {
         let train_loss = *t.losses.last().unwrap_or(&f64::NAN);
         let bits = t.net.inference_bits();
         log_info!(
-            "fig4-grid hic w={:.2}: dims {:?}, {} bits, eval acc \
+            "fig4-grid hic w={:.2}: {} grids, {} bits, eval acc \
              {acc:.3}, eval loss {eval_loss:.3}",
-            w as f64 / 1000.0, dims, bits);
+            w as f64 / 1000.0, t.net.weighted_layers(), bits);
         rows.push(Json::obj(vec![
             ("series", Json::str("hic")),
             ("width_permille", Json::Num(w as f64)),
@@ -445,18 +531,35 @@ pub fn run_fig4(opts: &NnExpOptions) -> Result<Json> {
         ]));
     }
     for &w in &opts.widths_permille {
-        let dims = opts.spec(w).dims();
         let data = opts.feature_source();
-        let mut net = FpNet::new(&dims, 2.0, opts.seed);
-        net.train_steps(&data, opts.steps, opts.batch, opts.lr);
-        let (eval_loss, acc) =
-            net.evaluate(&data, opts.eval_n, opts.batch);
-        let train_loss = *net.losses.last().unwrap_or(&f64::NAN);
-        let bits = net.inference_bits();
+        let (eval_loss, acc, train_loss, bits) = match opts.arch {
+            // The dense arch keeps the original `FpNet` baseline — its
+            // exact f32 op order is what the dense golden pins.
+            NnArch::Mlp => {
+                let dims = opts.spec(w).dims();
+                let mut net = FpNet::new(&dims, 2.0, opts.seed);
+                net.train_steps(&data, opts.steps, opts.batch, opts.lr);
+                let (el, acc) =
+                    net.evaluate(&data, opts.eval_n, opts.batch);
+                (el, acc, *net.losses.last().unwrap_or(&f64::NAN),
+                 net.inference_bits())
+            }
+            NnArch::Resnet { .. } => {
+                let spec = opts.graph_spec(w)?;
+                // Same init law as the device rows (w_scale included).
+                let mut net =
+                    FpGraphNet::new(&spec, RESNET_W_SCALE, opts.seed);
+                net.train_steps(&data, opts.steps, opts.batch, opts.lr);
+                let (el, acc) =
+                    net.evaluate(&data, opts.eval_n, opts.batch);
+                (el, acc, *net.losses.last().unwrap_or(&f64::NAN),
+                 net.inference_bits())
+            }
+        };
         log_info!(
-            "fig4-grid fp32 w={:.2}: dims {:?}, {} bits, eval acc \
-             {acc:.3}, eval loss {eval_loss:.3}",
-            w as f64 / 1000.0, dims, bits);
+            "fig4-grid fp32 w={:.2}: {} bits, eval acc {acc:.3}, \
+             eval loss {eval_loss:.3}",
+            w as f64 / 1000.0, bits);
         rows.push(Json::obj(vec![
             ("series", Json::str("fp32")),
             ("width_permille", Json::Num(w as f64)),
@@ -563,6 +666,83 @@ mod tests {
         let w4 = run_fig4(&NnExpOptions { workers: 4, ..tiny_nn() })
             .unwrap();
         assert_eq!(doc.to_string(), w4.to_string());
+    }
+
+    /// The golden/oracle RESNET_NN config: tiny image blobs, reduced
+    /// stage bases, one block per stage, four width multipliers.
+    fn tiny_resnet() -> NnExpOptions {
+        NnExpOptions {
+            data: NnExpData::BlobsImg { h: 4, w: 4, c: 3 },
+            arch: NnArch::Resnet { stages: [4, 6, 8], blocks: 1 },
+            widths_permille: vec![500, 750, 1000, 1500],
+            classes: 3,
+            steps: 3,
+            batch: 2,
+            tile: 4,
+            eval_n: 4,
+            train_len: 24,
+            test_len: 8,
+            lr: 0.08,
+            workers: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fig4_resnet_document_shape() {
+        let doc = run_fig4(&tiny_resnet()).unwrap();
+        assert_eq!(doc.get("experiment").unwrap().as_str().unwrap(),
+                   "fig4_grid");
+        assert_eq!(doc.get("arch").unwrap().as_str().unwrap(), "resnet");
+        let rows = doc.get("rows").unwrap().as_arr().unwrap();
+        // One HIC + one FP32 row per width, HIC first.
+        assert_eq!(rows.len(), 8);
+        for (i, r) in rows.iter().enumerate() {
+            let series = r.get("series").unwrap().as_str().unwrap();
+            assert_eq!(series, if i < 4 { "hic" } else { "fp32" });
+            for key in ["width_permille", "model_bits", "eval_acc_u6",
+                        "eval_loss_u6", "final_train_loss_u6"] {
+                let num = r.get(key).unwrap().as_f64().unwrap();
+                assert!(num.is_finite() && num.fract() == 0.0,
+                        "{key} = {num} not integral");
+            }
+        }
+        // Same architecture per width: FP32 holds 8× the bits.
+        for i in 0..4 {
+            let hic = rows[i].get("model_bits").unwrap().as_f64().unwrap();
+            let fp =
+                rows[i + 4].get("model_bits").unwrap().as_f64().unwrap();
+            assert_eq!(fp, 8.0 * hic);
+        }
+        // Wider nets hold more weights.
+        let b0 = rows[0].get("model_bits").unwrap().as_f64().unwrap();
+        let b3 = rows[3].get("model_bits").unwrap().as_f64().unwrap();
+        assert!(b3 > b0);
+    }
+
+    #[test]
+    fn fig4_resnet_is_worker_invariant() {
+        // One width point is enough here (the golden suite pins the
+        // full document): the conv/residual path must not depend on
+        // the worker count.
+        let opts = NnExpOptions {
+            widths_permille: vec![750],
+            ..tiny_resnet()
+        };
+        let a = run_fig4(&opts).unwrap().to_string();
+        let b = run_fig4(&NnExpOptions { workers: 4, ..opts })
+            .unwrap()
+            .to_string();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn resnet_arch_rejects_flat_data() {
+        let opts = NnExpOptions {
+            data: NnExpData::Blobs { dim: 48 },
+            ..tiny_resnet()
+        };
+        assert!(run_fig4(&opts).is_err());
     }
 
     #[test]

@@ -18,14 +18,18 @@
 //! the crate builds; byte-stable metric JSON pinned by the golden
 //! regression suite), and `gridexp::run_fig4` runs the fig4 width
 //! sweep as true **multi-layer on-grid training** (per-layer crossbar
-//! grids, transposed-VMM backprop, FP32 host baseline).  The CLI
-//! exposes all of it as `--device-grid`.
+//! grids, transposed-VMM backprop, FP32 host baseline) — dense stacks
+//! or, with `--arch resnet`, the paper's conv/residual topology via
+//! im2col patch lowering.  [`widths`] holds the shared
+//! width-multiplier table and model-size accounting.  The CLI exposes
+//! all of it as `--device-grid`.
 
 pub mod fig3;
 pub mod fig4;
 pub mod fig5;
 pub mod fig6;
 pub mod gridexp;
+pub mod widths;
 
 use std::path::{Path, PathBuf};
 

@@ -1,0 +1,70 @@
+//! The paper's width-multiplier table and model-size accounting —
+//! shared by the artifact-backed fig4 driver (`exp::fig4`) and the
+//! grid-routed device sweep (`exp::gridexp::run_fig4`), so the legacy
+//! and device-grid paths can never drift apart.
+//!
+//! Widths are permille integers (`500 = 0.5×`) everywhere; the legacy
+//! artifact configs encode them as `0p5`-style tags
+//! ([`permille_tag`]), reports as `0.5`-style labels
+//! ([`permille_label`]).
+
+/// The HIC width sweep of paper Fig. 4 (×0.5 … ×1.5).
+pub const WIDTHS_PERMILLE: [u32; 4] = [500, 750, 1000, 1500];
+
+/// The FP32 baseline sweep (×0.25 … ×1.0 — the paper compares smaller
+/// baselines because FP32 stores 8× the bits per weight).
+pub const BASE_WIDTHS_PERMILLE: [u32; 4] = [250, 500, 750, 1000];
+
+/// `"0.5"`-style display label of a permille width (trailing zeros of
+/// the fraction trimmed; integral widths keep one zero: `"1.0"`).
+pub fn permille_label(w: u32) -> String {
+    let ip = w / 1000;
+    let frac = w % 1000;
+    if frac == 0 {
+        return format!("{ip}.0");
+    }
+    let mut digits = format!("{frac:03}");
+    while digits.ends_with('0') {
+        digits.pop();
+    }
+    format!("{ip}.{digits}")
+}
+
+/// `"0p5"`-style artifact-config tag of a permille width (the label
+/// with `.` replaced, matching the `fig4_hic_w0p5` config names).
+pub fn permille_tag(w: u32) -> String {
+    permille_label(w).replace('.', "p")
+}
+
+/// Bits → KB (the fig4 report axis; also `hic-train info`'s model-size
+/// echo).  Per-weight bit counts stay with their owners — the grids'
+/// `inference_bits` (4-bit MSB arrays) and the FP32 nets' (32).
+pub fn bits_to_kb(bits: usize) -> f64 {
+    bits as f64 / 8.0 / 1024.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_and_tags_match_the_legacy_config_names() {
+        let tags: Vec<String> =
+            WIDTHS_PERMILLE.iter().map(|&w| permille_tag(w)).collect();
+        assert_eq!(tags, vec!["0p5", "0p75", "1p0", "1p5"]);
+        let base: Vec<String> = BASE_WIDTHS_PERMILLE
+            .iter()
+            .map(|&w| permille_tag(w))
+            .collect();
+        assert_eq!(base, vec!["0p25", "0p5", "0p75", "1p0"]);
+        assert_eq!(permille_label(1500), "1.5");
+        assert_eq!(permille_label(250), "0.25");
+        assert_eq!(permille_label(1000), "1.0");
+    }
+
+    #[test]
+    fn model_size_accounting() {
+        assert_eq!(bits_to_kb(8 * 1024), 1.0);
+        assert_eq!(bits_to_kb(0), 0.0);
+    }
+}

@@ -71,7 +71,9 @@ fn print_usage() {
          fig3/fig4/fig5/fig6 accept --device-grid to run on the sharded\n\
          crossbar grid device model (no artifacts needed); fig4's grid\n\
          path trains multi-layer networks with per-layer crossbar\n\
-         grids and transposed-VMM backprop.\n\
+         grids and transposed-VMM backprop — dense stacks (--arch mlp)\n\
+         or conv/residual ResNet stages via im2col patch lowering\n\
+         (--arch resnet).\n\
          run any subcommand with --help for its options"
     );
 }
@@ -253,12 +255,25 @@ fn cmd_fig4(args: &[String]) -> Result<()> {
         .flag("device-grid",
               "run the multi-layer sweep on the crossbar grid device \
                model (per-layer grids, transposed-VMM backprop)")
+        .opt("arch", "mlp",
+             "[device-grid] architecture: mlp (dense stack) or resnet \
+              (conv/residual stages on the layer graph)")
         .opt("nn-data", "cifar",
              "[device-grid] feature source: cifar (pooled synthetic) \
               or blobs (portable)")
-        .opt("nn-pool", "8", "[device-grid] CIFAR pooling factor")
-        .opt("nn-dim", "32", "[device-grid] blob feature dimension")
-        .opt("nn-hidden", "32,16", "[device-grid] base hidden widths")
+        .opt("nn-pool", "", "[device-grid] CIFAR pooling factor \
+              (default: 8; resnet default: 4 -> 8x8 images)")
+        .opt("nn-dim", "32", "[device-grid] blob feature dimension \
+              (mlp)")
+        .opt("nn-image", "8,8,3",
+             "[device-grid] blob image shape h,w,c (resnet)")
+        .opt("nn-hidden", "32,16",
+             "[device-grid] base hidden widths (mlp)")
+        .opt("nn-stages", "16,32,64",
+             "[device-grid] base stage channels (resnet)")
+        .opt("nn-blocks", "1",
+             "[device-grid] residual blocks per stage (resnet; \
+              ResNet-32 = 5)")
         .opt("widths", "0.5,0.75,1.0,1.5",
              "[device-grid] width multipliers")
         .opt("nn-steps", "150", "[device-grid] training steps")
@@ -271,8 +286,14 @@ fn cmd_fig4(args: &[String]) -> Result<()> {
     let m = spec.parse(args)?;
     if m.flag("device-grid") {
         let nopts = parse_nn_opts(&m)?;
+        let name = match nopts.arch {
+            hic_train::exp::gridexp::NnArch::Mlp => "fig4_grid.json",
+            hic_train::exp::gridexp::NnArch::Resnet { .. } => {
+                "fig4_resnet_grid.json"
+            }
+        };
         let doc = exp::gridexp::run_fig4(&nopts)?;
-        exp::gridexp::write_json(&nopts.out_dir, "fig4_grid.json", &doc)?;
+        exp::gridexp::write_json(&nopts.out_dir, name, &doc)?;
         return Ok(());
     }
     let opts = parse_exp(&m)?;
@@ -282,18 +303,58 @@ fn cmd_fig4(args: &[String]) -> Result<()> {
 
 fn parse_nn_opts(m: &hic_train::util::cli::Matches)
                  -> Result<hic_train::exp::gridexp::NnExpOptions> {
-    use hic_train::exp::gridexp::{NnExpData, NnExpOptions};
+    use hic_train::exp::gridexp::{NnArch, NnExpData, NnExpOptions};
     if m.flag("verbose") {
         set_level(Level::Debug);
     }
+    let arch = match m.str("arch")? {
+        "mlp" => NnArch::Mlp,
+        "resnet" => {
+            let stages = m
+                .list("nn-stages")
+                .iter()
+                .map(|s| s.parse::<usize>())
+                .collect::<std::result::Result<Vec<_>, _>>()?;
+            let [s1, s2, s3] = stages[..] else {
+                bail!("--nn-stages needs exactly three channel bases");
+            };
+            let blocks = m.usize("nn-blocks")?;
+            if blocks == 0 {
+                bail!("--nn-blocks must be >= 1");
+            }
+            NnArch::Resnet { stages: [s1, s2, s3], blocks }
+        }
+        other => bail!("unknown --arch '{other}' (mlp | resnet)"),
+    };
+    let resnet = matches!(arch, NnArch::Resnet { .. });
     let data = match m.str("nn-data")? {
         "cifar" => {
-            let pool = m.usize("nn-pool")?;
+            // The resnet arch wants spatial extent left to work with:
+            // default to 4×-pooled 8x8 images unless --nn-pool is given.
+            let pool = match m.get("nn-pool") {
+                Some(s) => s.parse::<usize>()?,
+                None if resnet => 4,
+                None => 8,
+            };
             if pool == 0 || 32 % pool != 0 {
                 bail!("--nn-pool must divide the 32x32 image \
                        (1, 2, 4, 8, 16 or 32)");
             }
             NnExpData::Cifar { pool }
+        }
+        "blobs" if resnet => {
+            let dims = m
+                .list("nn-image")
+                .iter()
+                .map(|s| s.parse::<usize>())
+                .collect::<std::result::Result<Vec<_>, _>>()?;
+            let [h, w, c] = dims[..] else {
+                bail!("--nn-image needs h,w,c");
+            };
+            if h == 0 || w == 0 || c == 0 {
+                bail!("--nn-image extents must be >= 1");
+            }
+            NnExpData::BlobsImg { h, w, c }
         }
         "blobs" => NnExpData::Blobs { dim: m.usize("nn-dim")? },
         other => bail!("unknown --nn-data '{other}' (cifar | blobs)"),
@@ -317,14 +378,15 @@ fn parse_nn_opts(m: &hic_train::util::cli::Matches)
     if hidden_base.is_empty() || widths_permille.is_empty() {
         bail!("--nn-hidden and --widths must be non-empty");
     }
-    for key in ["nn-pool", "nn-dim", "nn-steps", "nn-batch", "nn-tile",
-                "nn-eval"] {
+    // (--nn-pool and --nn-image are validated where they are parsed.)
+    for key in ["nn-dim", "nn-steps", "nn-batch", "nn-tile", "nn-eval"] {
         if m.usize(key)? == 0 {
             bail!("--{key} must be >= 1");
         }
     }
     Ok(NnExpOptions {
         data,
+        arch,
         hidden_base,
         widths_permille,
         steps: m.usize("nn-steps")?,
@@ -387,8 +449,10 @@ fn cmd_info(args: &[String]) -> Result<()> {
     println!("artifact set '{}' at {}", man.config_name, dir.display());
     println!("  weights: {}  (inference: {:.1} KB HIC vs {:.1} KB FP32)",
              man.num_weights,
-             man.inference_model_bits(true) as f64 / 8192.0,
-             man.inference_model_bits(false) as f64 / 8192.0);
+             hic_train::exp::widths::bits_to_kb(
+                 man.inference_model_bits(true)),
+             hic_train::exp::widths::bits_to_kb(
+                 man.inference_model_bits(false)));
     println!("  batch: {}  image: {}x{}", man.batch_size(),
              man.image_size(), man.image_size());
     println!("  layers:");

@@ -1,16 +1,32 @@
-//! FP32 host baseline of the on-grid network — the digital reference
-//! the device-level fig4 sweep compares model sizes against.
+//! FP32 host baselines of the on-grid networks — the digital reference
+//! the device-level fig4 sweeps compare model sizes against.
 //!
-//! Same architecture, initialization scale and loss as [`DeviceNet`]
-//! (ReLU MLP, softmax cross-entropy, plain SGD), but weights are plain
-//! f32 matrices updated exactly (32 bits/weight at inference vs the
-//! HIC grids' 4).  Every consumed op is portable f32/f64 arithmetic on
-//! the `fastmath` nonlinearities, deterministic in loop order, so the
-//! baseline rows of the fig4 document are byte-stable and
-//! oracle-mirrored like the device rows.
+//! Two baselines, same init law and loss as the device side (uniform
+//! `±(w_scale/√fan_in)/2` per weighted layer from its own
+//! `layer_seed` stream, softmax cross-entropy, plain SGD), weights as
+//! plain f32 matrices updated exactly (32 bits/weight at inference vs
+//! the HIC grids' 4):
+//!
+//! * [`FpNet`] — the original dense ReLU MLP (kept verbatim: the dense
+//!   fig4 golden pins its exact f32 op order);
+//! * [`FpGraphNet`] — the layer-graph twin of
+//!   [`crate::nn::graph::GraphNet`], growing the same layer set (conv
+//!   via the shared im2col lowering, residual skip-add with auto
+//!   projection, global average pooling), built from the same
+//!   [`GraphPlan`] so its weighted layers line up one to one with the
+//!   device grids.  Used by the fig4 `--arch resnet` sweep.
+//!
+//! Every consumed op is portable f32/f64 arithmetic on the `fastmath`
+//! nonlinearities, deterministic in loop order, so the baseline rows of
+//! the fig4 documents are byte-stable and oracle-mirrored like the
+//! device rows.
 
+use crate::crossbar::conv::{col2im_into, im2col_into, PatchGeom};
 use crate::nn::features::FeatureSource;
+use crate::nn::graph::{ensure, ActShape, GraphPlan, GraphSpec,
+                       PlanLayer};
 use crate::nn::net::{argmax_row, layer_seed, nll_sum, softmax_rows};
+use crate::util::pool::WorkerPool;
 use crate::util::rng::Pcg64;
 
 /// Stream tag of the baseline's weight-initialization draws (distinct
@@ -201,6 +217,462 @@ impl FpNet {
     }
 }
 
+// -- FP32 layer-graph baseline -------------------------------------------
+
+/// One FP32 graph layer (host twin of `nn::graph::Layer`).
+enum FpLayer {
+    Dense {
+        k: usize,
+        n: usize,
+        /// row-major `[k, n]`
+        w: Vec<f32>,
+        input: Vec<f32>,
+    },
+    Conv {
+        geom: PatchGeom,
+        /// row-major `[K, cout]`
+        w: Vec<f32>,
+        patches: Vec<f32>,
+        dpatches: Vec<f32>,
+    },
+    Relu { len: usize, z: Vec<f32> },
+    Gap { h: usize, w: usize, c: usize },
+    Residual {
+        body: Vec<FpLayer>,
+        proj: Option<Box<FpLayer>>,
+        in_len: usize,
+        out_len: usize,
+        bacts: Vec<Vec<f32>>,
+        skip: Vec<f32>,
+        dbody: Vec<f32>,
+        dtmp: Vec<f32>,
+        dskip: Vec<f32>,
+    },
+}
+
+/// Per-weighted-layer init draws — the [`FpNet`] law (`INIT_STREAM`
+/// is this module's FP32 stream tag, distinct from the device net's).
+fn init_weights(seed: u64, widx: usize, w_scale: f32, k: usize,
+                n: usize) -> Vec<f32> {
+    let w_max = w_scale / (k as f32).sqrt();
+    let half = 0.5 * w_max;
+    let mut rng = Pcg64::new(layer_seed(seed, widx), INIT_STREAM);
+    (0..k * n).map(|_| rng.uniform_in(-half, half)).collect()
+}
+
+fn build_fp_layer(pl: &PlanLayer, w_scale: f32, seed: u64) -> FpLayer {
+    match pl {
+        PlanLayer::Dense { widx, k, n } => FpLayer::Dense {
+            k: *k,
+            n: *n,
+            w: init_weights(seed, *widx, w_scale, *k, *n),
+            input: Vec::new(),
+        },
+        PlanLayer::Conv { widx, geom } => FpLayer::Conv {
+            geom: *geom,
+            w: init_weights(seed, *widx, w_scale, geom.patch_len(),
+                            geom.cout),
+            patches: Vec::new(),
+            dpatches: Vec::new(),
+        },
+        PlanLayer::Relu { len } => {
+            FpLayer::Relu { len: *len, z: Vec::new() }
+        }
+        PlanLayer::GlobalAvgPool { h, w, c } => {
+            FpLayer::Gap { h: *h, w: *w, c: *c }
+        }
+        PlanLayer::Residual { body, proj, in_len, out_len } => {
+            let b: Vec<FpLayer> = body
+                .iter()
+                .map(|l| build_fp_layer(l, w_scale, seed))
+                .collect();
+            let pj = proj
+                .as_ref()
+                .map(|p| Box::new(build_fp_layer(p, w_scale, seed)));
+            FpLayer::Residual {
+                bacts: vec![Vec::new(); b.len()],
+                body: b,
+                proj: pj,
+                in_len: *in_len,
+                out_len: *out_len,
+                skip: Vec::new(),
+                dbody: Vec::new(),
+                dtmp: Vec::new(),
+                dskip: Vec::new(),
+            }
+        }
+    }
+}
+
+impl FpLayer {
+    fn in_len(&self) -> usize {
+        match self {
+            FpLayer::Dense { k, .. } => *k,
+            FpLayer::Conv { geom, .. } => geom.in_len(),
+            FpLayer::Relu { len, .. } => *len,
+            FpLayer::Gap { h, w, c } => h * w * c,
+            FpLayer::Residual { in_len, .. } => *in_len,
+        }
+    }
+
+    fn out_len(&self) -> usize {
+        match self {
+            FpLayer::Dense { n, .. } => *n,
+            FpLayer::Conv { geom, .. } => geom.out_len(),
+            FpLayer::Relu { len, .. } => *len,
+            FpLayer::Gap { c, .. } => *c,
+            FpLayer::Residual { out_len, .. } => *out_len,
+        }
+    }
+
+    fn forward(&mut self, x: &[f32], m: usize, pool: &WorkerPool,
+               out: &mut Vec<f32>) {
+        match self {
+            FpLayer::Dense { k, n, w, input } => {
+                let (k, n) = (*k, *n);
+                ensure(input, m * k);
+                input[..m * k].copy_from_slice(&x[..m * k]);
+                ensure(out, m * n);
+                for s in 0..m {
+                    for j in 0..n {
+                        let mut acc = 0.0f32;
+                        for i in 0..k {
+                            acc += x[s * k + i] * w[i * n + j];
+                        }
+                        out[s * n + j] = acc;
+                    }
+                }
+            }
+            FpLayer::Conv { geom, w, patches, .. } => {
+                let (p, k, co) =
+                    (geom.positions(), geom.patch_len(), geom.cout);
+                let rows = m * p;
+                ensure(patches, rows * k);
+                im2col_into(geom, &x[..m * geom.in_len()], m, pool,
+                            &mut patches[..rows * k]);
+                ensure(out, rows * co);
+                for r in 0..rows {
+                    for j in 0..co {
+                        let mut acc = 0.0f32;
+                        for ki in 0..k {
+                            acc += patches[r * k + ki] * w[ki * co + j];
+                        }
+                        out[r * co + j] = acc;
+                    }
+                }
+            }
+            FpLayer::Relu { len, z } => {
+                let need = m * *len;
+                ensure(z, need);
+                z[..need].copy_from_slice(&x[..need]);
+                ensure(out, need);
+                for (o, &v) in out[..need].iter_mut().zip(&x[..need]) {
+                    *o = if v > 0.0 { v } else { 0.0 };
+                }
+            }
+            FpLayer::Gap { h, w, c } => {
+                let (pp, cc) = (*h * *w, *c);
+                let inv_area = 1.0f32 / pp as f32;
+                ensure(out, m * cc);
+                for s in 0..m {
+                    for j in 0..cc {
+                        let mut acc = 0.0f32;
+                        for p in 0..pp {
+                            acc += x[s * pp * cc + p * cc + j];
+                        }
+                        out[s * cc + j] = acc * inv_area;
+                    }
+                }
+            }
+            FpLayer::Residual { body, proj, out_len, bacts, skip, .. } => {
+                let nb = body.len();
+                for i in 0..nb {
+                    let il = body[i].in_len();
+                    let (done, rest) = bacts.split_at_mut(i);
+                    let input: &[f32] =
+                        if i == 0 { x } else { &done[i - 1][..m * il] };
+                    body[i].forward(input, m, pool, &mut rest[0]);
+                }
+                let need = m * *out_len;
+                ensure(out, need);
+                if let Some(pj) = proj.as_mut() {
+                    pj.forward(x, m, pool, skip);
+                    let body_out = &bacts[nb - 1];
+                    for i in 0..need {
+                        out[i] = body_out[i] + skip[i];
+                    }
+                } else {
+                    let body_out = &bacts[nb - 1];
+                    for i in 0..need {
+                        out[i] = body_out[i] + x[i];
+                    }
+                }
+            }
+        }
+    }
+
+    /// Backward through the **pre-update** weights (input gradient
+    /// first), then the fused SGD update `w -= lr · (gradᵀ·mean)` —
+    /// the [`FpNet`] discipline generalized to the graph.
+    fn backward(&mut self, d_out: &[f32], m: usize, lr: f32, inv_m: f32,
+                pool: &WorkerPool, d_in: &mut Vec<f32>,
+                need_input_grad: bool) {
+        match self {
+            FpLayer::Dense { k, n, w, input } => {
+                let (k, n) = (*k, *n);
+                if need_input_grad {
+                    ensure(d_in, m * k);
+                    for s in 0..m {
+                        for i in 0..k {
+                            let mut acc = 0.0f32;
+                            for j in 0..n {
+                                acc += d_out[s * n + j] * w[i * n + j];
+                            }
+                            d_in[s * k + i] = acc;
+                        }
+                    }
+                }
+                for i in 0..k {
+                    for j in 0..n {
+                        let mut acc = 0.0f32;
+                        for s in 0..m {
+                            acc += input[s * k + i] * d_out[s * n + j];
+                        }
+                        w[i * n + j] -= lr * (acc * inv_m);
+                    }
+                }
+            }
+            FpLayer::Conv { geom, w, patches, dpatches } => {
+                let (p, k, co) =
+                    (geom.positions(), geom.patch_len(), geom.cout);
+                let rows = m * p;
+                if need_input_grad {
+                    ensure(dpatches, rows * k);
+                    for r in 0..rows {
+                        for ki in 0..k {
+                            let mut acc = 0.0f32;
+                            for j in 0..co {
+                                acc += d_out[r * co + j] * w[ki * co + j];
+                            }
+                            dpatches[r * k + ki] = acc;
+                        }
+                    }
+                    let nin = m * geom.in_len();
+                    ensure(d_in, nin);
+                    col2im_into(geom, &dpatches[..rows * k], m, pool,
+                                &mut d_in[..nin]);
+                }
+                for ki in 0..k {
+                    for j in 0..co {
+                        let mut acc = 0.0f32;
+                        for r in 0..rows {
+                            acc += patches[r * k + ki] * d_out[r * co + j];
+                        }
+                        w[ki * co + j] -= lr * (acc * inv_m);
+                    }
+                }
+            }
+            FpLayer::Relu { len, z } => {
+                if need_input_grad {
+                    let need = m * *len;
+                    ensure(d_in, need);
+                    for i in 0..need {
+                        d_in[i] =
+                            if z[i] > 0.0 { d_out[i] } else { 0.0 };
+                    }
+                }
+            }
+            FpLayer::Gap { h, w, c } => {
+                if need_input_grad {
+                    let (pp, cc) = (*h * *w, *c);
+                    let inv_area = 1.0f32 / pp as f32;
+                    ensure(d_in, m * pp * cc);
+                    for s in 0..m {
+                        for p in 0..pp {
+                            for j in 0..cc {
+                                d_in[s * pp * cc + p * cc + j] =
+                                    d_out[s * cc + j] * inv_area;
+                            }
+                        }
+                    }
+                }
+            }
+            FpLayer::Residual { body, proj, in_len, out_len, dbody,
+                                dtmp, dskip, .. } => {
+                let nb = body.len();
+                let need_out = m * *out_len;
+                ensure(dbody, need_out);
+                dbody[..need_out].copy_from_slice(&d_out[..need_out]);
+                for i in (0..nb).rev() {
+                    let inner_need = i > 0 || need_input_grad;
+                    let ol = body[i].out_len();
+                    body[i].backward(&dbody[..m * ol], m, lr, inv_m,
+                                     pool, dtmp, inner_need);
+                    if inner_need {
+                        std::mem::swap(dbody, dtmp);
+                    }
+                }
+                if let Some(pj) = proj.as_mut() {
+                    pj.backward(d_out, m, lr, inv_m, pool, dskip,
+                                need_input_grad);
+                }
+                if need_input_grad {
+                    let nin = m * *in_len;
+                    ensure(d_in, nin);
+                    if proj.is_some() {
+                        for i in 0..nin {
+                            d_in[i] = dbody[i] + dskip[i];
+                        }
+                    } else {
+                        for i in 0..nin {
+                            d_in[i] = dbody[i] + d_out[i];
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// FP32 layer-graph network trained with SGD on the host — the
+/// apples-to-apples baseline of the fig4 `--arch resnet` sweep.
+pub struct FpGraphNet {
+    pub input: ActShape,
+    pub classes: usize,
+    pub seed: u64,
+    /// per-step mean training cross-entropy
+    pub losses: Vec<f64>,
+    layers: Vec<FpLayer>,
+    weights_total: usize,
+    step: usize,
+    acts: Vec<Vec<f32>>,
+    delta: Vec<f32>,
+    dtmp: Vec<f32>,
+}
+
+impl FpGraphNet {
+    pub fn new(spec: &GraphSpec, w_scale: f32, seed: u64) -> Self {
+        Self::from_plan(&spec.plan(), w_scale, seed)
+    }
+
+    pub fn from_plan(plan: &GraphPlan, w_scale: f32, seed: u64) -> Self {
+        let layers: Vec<FpLayer> = plan
+            .layers
+            .iter()
+            .map(|l| build_fp_layer(l, w_scale, seed))
+            .collect();
+        let acts = layers.iter().map(|_| Vec::new()).collect();
+        FpGraphNet {
+            input: plan.input,
+            classes: plan.classes,
+            seed,
+            losses: Vec::new(),
+            layers,
+            weights_total: plan.weights(),
+            step: 0,
+            acts,
+            delta: Vec::new(),
+            dtmp: Vec::new(),
+        }
+    }
+
+    /// Inference model bits (32 per weight).
+    pub fn inference_bits(&self) -> usize {
+        self.weights_total * 32
+    }
+
+    fn forward_pass(&mut self, x: &[f32], m: usize,
+                    pool: &WorkerPool) -> &[f32] {
+        let nl = self.layers.len();
+        for i in 0..nl {
+            let il = self.layers[i].in_len();
+            let (done, rest) = self.acts.split_at_mut(i);
+            let input: &[f32] =
+                if i == 0 { x } else { &done[i - 1][..m * il] };
+            self.layers[i].forward(input, m, pool, &mut rest[0]);
+        }
+        &self.acts[nl - 1][..m * self.classes]
+    }
+
+    /// Run `steps` SGD steps on the feature source (sequential epoch
+    /// order, the device trainer's batch discipline).
+    pub fn train_steps(&mut self, data: &FeatureSource, steps: usize,
+                       batch: usize, lr: f32) {
+        let d0 = self.input.len();
+        let classes = self.classes;
+        assert_eq!(d0, data.dim());
+        assert_eq!(classes, data.classes());
+        let pool = WorkerPool::serial();
+        let m = batch;
+        let mut x = vec![0.0f32; m * d0];
+        let mut labels = vec![0u8; m];
+        let mut probs = vec![0.0f32; m * classes];
+        for _ in 0..steps {
+            for j in 0..m {
+                let idx = (self.step * m + j) % data.train_len();
+                labels[j] = data.sample_into(
+                    idx, false, &mut x[j * d0..(j + 1) * d0]);
+            }
+            let logits = self.forward_pass(&x, m, &pool);
+            softmax_rows(logits, m, classes, &mut probs);
+            self.losses.push(nll_sum(&probs, &labels, classes) / m as f64);
+            ensure(&mut self.delta, m * classes);
+            for s in 0..m {
+                for j in 0..classes {
+                    let y = if labels[s] as usize == j { 1.0 } else { 0.0 };
+                    self.delta[s * classes + j] =
+                        probs[s * classes + j] - y;
+                }
+            }
+            let inv_m = 1.0f32 / m as f32;
+            for i in (0..self.layers.len()).rev() {
+                let need = i > 0;
+                let ol = self.layers[i].out_len();
+                self.layers[i].backward(&self.delta[..m * ol], m, lr,
+                                        inv_m, &pool, &mut self.dtmp,
+                                        need);
+                if need {
+                    std::mem::swap(&mut self.delta, &mut self.dtmp);
+                }
+            }
+            self.step += 1;
+        }
+    }
+
+    /// Mean cross-entropy and accuracy over the first `n` test samples.
+    pub fn evaluate(&mut self, data: &FeatureSource, n: usize,
+                    batch: usize) -> (f64, f64) {
+        let d0 = self.input.len();
+        let classes = self.classes;
+        let pool = WorkerPool::serial();
+        let mut hits = 0usize;
+        let mut loss_sum = 0.0f64;
+        let mut done = 0usize;
+        let mut x = vec![0.0f32; batch * d0];
+        let mut labels = vec![0u8; batch];
+        let mut probs = vec![0.0f32; batch * classes];
+        while done < n {
+            let mb = batch.min(n - done);
+            for j in 0..mb {
+                labels[j] = data.sample_into(
+                    done + j, true, &mut x[j * d0..(j + 1) * d0]);
+            }
+            let logits = self.forward_pass(&x[..mb * d0], mb, &pool);
+            softmax_rows(logits, mb, classes, &mut probs[..mb * classes]);
+            loss_sum += nll_sum(&probs[..mb * classes], &labels[..mb],
+                                classes);
+            for s in 0..mb {
+                let row = &probs[s * classes..(s + 1) * classes];
+                if argmax_row(row) == labels[s] as usize {
+                    hits += 1;
+                }
+            }
+            done += mb;
+        }
+        (loss_sum / n as f64, hits as f64 / n as f64)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -228,5 +700,42 @@ mod tests {
     fn model_bits_are_32_per_weight() {
         let net = FpNet::new(&[6, 5, 3], 2.0, 1);
         assert_eq!(net.inference_bits(), (6 * 5 + 5 * 3) * 32);
+    }
+
+    #[test]
+    fn fp_graph_net_learns_image_blobs() {
+        // Small conv net on image-shaped blobs: the FP32 graph baseline
+        // must train end to end through conv, relu, residual and GAP.
+        // Thresholds validated against the bit-exact oracle (FpGraph on
+        // this exact config): acc 0.167 -> 0.667, loss 1.100 -> 0.734.
+        let data = FeatureSource::Blobs(
+            BlobDataset::with_shape(3, 4, 4, 2, 3, 0.35, 120, 36));
+        let spec = GraphSpec::resnet([4, 4, 2], [3, 4, 5], 1, 3, 1000);
+        let mut net = FpGraphNet::new(&spec, 2.0, 7);
+        assert_eq!(net.classes, 3);
+        assert_eq!(net.inference_bits() % 32, 0);
+        let (_, acc0) = net.evaluate(&data, 36, 6);
+        net.train_steps(&data, 120, 6, 0.3);
+        let (loss, acc) = net.evaluate(&data, 36, 6);
+        assert!(acc0 < 0.5, "untrained graph already accurate? {acc0}");
+        assert!(acc > 0.55, "fp32 graph eval acc {acc} (from {acc0})");
+        assert!(acc > acc0 + 0.3, "no real learning: {acc0} -> {acc}");
+        assert!(loss < 0.9, "eval loss {loss}");
+        // Training loss trends down.
+        let early: f64 = net.losses[..10].iter().sum::<f64>() / 10.0;
+        let late: f64 =
+            net.losses[net.losses.len() - 10..].iter().sum::<f64>() / 10.0;
+        assert!(late < early * 0.8, "loss {early} -> {late}");
+    }
+
+    #[test]
+    fn fp_graph_mlp_matches_weight_count() {
+        // The graph MLP and the dense FpNet hold the same weight set.
+        let dims = [6, 5, 3];
+        let spec = GraphSpec::mlp(&dims);
+        let graph = FpGraphNet::new(&spec, 2.0, 1);
+        let dense = FpNet::new(&dims, 2.0, 1);
+        assert_eq!(graph.inference_bits(), dense.inference_bits());
+        assert_eq!(graph.input, ActShape::Flat(6));
     }
 }

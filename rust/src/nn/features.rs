@@ -26,6 +26,7 @@
 
 use crate::data::synthetic::SyntheticDataset;
 use crate::data::{IMG_C, IMG_H, IMG_W, NUM_CLASSES};
+use crate::nn::graph::ActShape;
 use crate::util::rng::Pcg64;
 
 /// Stream tag of the blob centroid draws.
@@ -46,6 +47,10 @@ pub struct BlobDataset {
     pub seed: u64,
     pub train_len: usize,
     pub test_len: usize,
+    /// optional spatial interpretation `[h, w, c]` of the flat feature
+    /// vector (HWC) — lets the conv graph consume blob data without
+    /// changing a single draw (the streams depend only on `dim`)
+    pub shape: Option<[usize; 3]>,
     /// class-major centroid matrix, `[classes, dim]` row-major
     centroids: Vec<f32>,
 }
@@ -58,7 +63,18 @@ impl BlobDataset {
             .map(|_| rng.uniform_in(-1.0, 1.0))
             .collect();
         BlobDataset { dim, classes, noise, seed, train_len, test_len,
-                      centroids }
+                      shape: None, centroids }
+    }
+
+    /// Image-shaped blobs: `dim = h·w·c`, identical draws to the flat
+    /// constructor at the same `dim` (the shape is pure metadata).
+    pub fn with_shape(seed: u64, h: usize, w: usize, c: usize,
+                      classes: usize, noise: f32, train_len: usize,
+                      test_len: usize) -> Self {
+        let mut d = BlobDataset::new(seed, h * w * c, classes, noise,
+                                     train_len, test_len);
+        d.shape = Some([h, w, c]);
+        d
     }
 
     /// Deterministic sample `i` of the train (or test) split into `x`;
@@ -96,8 +112,15 @@ impl PooledCifar {
                       pool }
     }
 
+    /// Pooled spatial extents `[h, w, c]` (HWC feature layout — the
+    /// explicit metadata conv layers consume; `dim` is its product).
+    pub fn shape(&self) -> [usize; 3] {
+        [IMG_H / self.pool, IMG_W / self.pool, IMG_C]
+    }
+
     pub fn dim(&self) -> usize {
-        (IMG_H / self.pool) * (IMG_W / self.pool) * IMG_C
+        let [h, w, c] = self.shape();
+        h * w * c
     }
 
     pub fn sample_into(&self, i: usize, test: bool, x: &mut [f32]) -> u8 {
@@ -142,6 +165,22 @@ impl FeatureSource {
         match self {
             FeatureSource::Blobs(b) => b.classes,
             FeatureSource::Cifar(_) => NUM_CLASSES,
+        }
+    }
+
+    /// Activation shape of one sample: pooled CIFAR is always an image
+    /// (`[h, w, c]` HWC); blobs are flat unless built with a spatial
+    /// interpretation ([`BlobDataset::with_shape`]).
+    pub fn shape(&self) -> ActShape {
+        match self {
+            FeatureSource::Blobs(b) => match b.shape {
+                Some([h, w, c]) => ActShape::Img { h, w, c },
+                None => ActShape::Flat(b.dim),
+            },
+            FeatureSource::Cifar(c) => {
+                let [h, w, ch] = c.shape();
+                ActShape::Img { h, w, c: ch }
+            }
         }
     }
 
@@ -235,8 +274,33 @@ mod tests {
         assert_eq!(s.classes(), 2);
         assert_eq!(s.train_len(), 10);
         assert_eq!(s.test_len(), 4);
+        assert_eq!(s.shape(), ActShape::Flat(4));
         let c = FeatureSource::Cifar(PooledCifar::new(1, 16, 50, 10));
         assert_eq!(c.dim(), 2 * 2 * 3);
         assert_eq!(c.classes(), NUM_CLASSES);
+        assert_eq!(c.shape(), ActShape::Img { h: 2, w: 2, c: 3 });
+    }
+
+    #[test]
+    fn shaped_blobs_draw_identically_to_flat() {
+        // The spatial interpretation is pure metadata: same seed and
+        // dim, bit-identical samples.
+        let flat = BlobDataset::new(9, 4 * 4 * 2, 3, 0.4, 30, 12);
+        let img = BlobDataset::with_shape(9, 4, 4, 2, 3, 0.4, 30, 12);
+        assert_eq!(img.dim, 32);
+        assert_eq!(img.shape, Some([4, 4, 2]));
+        let mut a = vec![0.0f32; 32];
+        let mut b = vec![0.0f32; 32];
+        for i in [0usize, 7, 19] {
+            for test in [false, true] {
+                let ya = flat.sample_into(i, test, &mut a);
+                let yb = img.sample_into(i, test, &mut b);
+                assert_eq!(ya, yb);
+                assert_eq!(a, b);
+            }
+        }
+        let s = FeatureSource::Blobs(
+            BlobDataset::with_shape(9, 4, 4, 2, 3, 0.4, 30, 12));
+        assert_eq!(s.shape(), ActShape::Img { h: 4, w: 4, c: 2 });
     }
 }

@@ -1,0 +1,1184 @@
+//! Layer-graph IR for on-grid networks: the device-side layer kinds the
+//! paper's ResNet topology needs, each weighted layer on its own
+//! [`CrossbarGrid`].
+//!
+//! Three levels:
+//!
+//! * [`GraphSpec`] / [`LayerSpec`] — the builder IR: `Dense`, `Conv2d`,
+//!   `Relu`, `GlobalAvgPool`, `Residual` (skip-add, auto 1×1 projection
+//!   when the body changes shape) and the trailing `Softmax` head, with
+//!   explicit activation shapes ([`ActShape`], HWC layout for images).
+//!   [`GraphSpec::mlp`] reproduces the PR-3 dense stack;
+//!   [`GraphSpec::resnet`] builds the paper's `3 → 16w → 32w → 64w`
+//!   stage structure with stride-2 downsampling residual stages
+//!   ([`resnet_spec`] for the paper's channel bases).
+//! * [`GraphPlan`] / [`PlanLayer`] — the resolved plan: shapes
+//!   inferred, projections materialized, weighted layers indexed in
+//!   DFS order (residual body first, then projection).  Shared by the
+//!   device graph and the FP32 baseline so both assign identical
+//!   per-layer seeds and `w_max` windows.
+//! * [`GraphNet`] / [`Layer`] — the device network.  Every weighted
+//!   layer owns a [`CrossbarGrid`] with `w_max = w_scale/√fan_in` and
+//!   its own grid seed (`layer_seed(seed, weighted_index)`); `Conv2d`
+//!   is lowered through the deterministic im2col/col2im patch kernels
+//!   (`crossbar::conv`), so each kernel becomes a `[kh·kw·cin, cout]`
+//!   analog VMM over `m·P` patch rows; backprop runs the transposed
+//!   analog VMM (`vmm_t_batch_into`) plus a col2im scatter, and weight
+//!   gradients are digital patch outer products accumulated into the
+//!   same hybrid LSB/MSB update.
+//!
+//! RNG op-stream assignment: the patch kernels consume no RNG, and the
+//! patch-matrix VMM is one grid invocation (shard = column strip /
+//! row strip on the grid's `OP_VMM` / `OP_VMM_T` streams), so the grid
+//! determinism contract — bitwise identical for any worker count —
+//! extends to the conv path unchanged
+//! (`rust/tests/prop_conv_equivalence.rs`).  All buffers (patch
+//! matrices, activation caches, deltas) live in the layer state and are
+//! reused across steps: the training loop allocates nothing per batch
+//! once warm.
+
+use crate::crossbar::conv::{col2im_into, im2col_into, PatchGeom};
+use crate::crossbar::grid::CrossbarGrid;
+use crate::crossbar::{AdcSpec, DacSpec, GridScratch, TilingPolicy};
+use crate::hic::weight::HicGeometry;
+use crate::pcm::device::PcmParams;
+use crate::pcm::endurance::EnduranceLedger;
+use crate::util::pool::WorkerPool;
+use crate::util::rng::Pcg64;
+
+use super::net::{layer_seed, scaled_width, INIT_STREAM};
+
+/// Activation shape flowing between layers.  Images are HWC row-major
+/// (`[h, w, c]`), matching the pooled-CIFAR feature layout, so
+/// flattening for a `Dense` layer is a no-op on the buffer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ActShape {
+    Flat(usize),
+    Img { h: usize, w: usize, c: usize },
+}
+
+impl ActShape {
+    /// Flat activation length per sample.
+    pub fn len(&self) -> usize {
+        match *self {
+            ActShape::Flat(n) => n,
+            ActShape::Img { h, w, c } => h * w * c,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Builder-level layer kinds (no device state).
+#[derive(Clone, Debug)]
+pub enum LayerSpec {
+    /// Fully connected `flat(in) → out` (image inputs flatten in place).
+    Dense { out: usize },
+    /// 2-D convolution, HWC, square stride, symmetric zero padding.
+    Conv2d { cout: usize, kh: usize, kw: usize, stride: usize, pad: usize },
+    Relu,
+    /// Spatial mean per channel: `[h, w, c] → c`.
+    GlobalAvgPool,
+    /// Skip-add residual block: `out = body(x) + skip(x)`.  When the
+    /// body changes shape, a 1×1 strided projection conv is inserted on
+    /// the skip automatically; identity otherwise.
+    Residual { body: Vec<LayerSpec> },
+    /// Classification head marker — must be the final layer.  The
+    /// trainer fuses softmax with the cross-entropy loss, so this layer
+    /// carries no device state.
+    Softmax,
+}
+
+/// An architecture: input shape plus the layer chain (ending in
+/// `Softmax`).
+#[derive(Clone, Debug)]
+pub struct GraphSpec {
+    pub input: ActShape,
+    pub layers: Vec<LayerSpec>,
+}
+
+impl GraphSpec {
+    /// The PR-3 dense stack as a graph: `dims = [input, hidden.., classes]`
+    /// becomes `Dense/Relu/…/Dense/Softmax`.  Weighted-layer indices
+    /// (and so per-layer grid seeds) match the original `DeviceNet`
+    /// layer numbering, which keeps the dense fig4 golden byte-stable
+    /// across the refactor.
+    pub fn mlp(dims: &[usize]) -> Self {
+        assert!(dims.len() >= 2, "need at least one layer");
+        let mut layers = Vec::with_capacity(2 * (dims.len() - 1));
+        for (l, &n) in dims[1..].iter().enumerate() {
+            layers.push(LayerSpec::Dense { out: n });
+            if l + 2 < dims.len() {
+                layers.push(LayerSpec::Relu);
+            }
+        }
+        layers.push(LayerSpec::Softmax);
+        GraphSpec { input: ActShape::Flat(dims[0]), layers }
+    }
+
+    /// ResNet-style stage structure on an `[h, w, c]` input: a 3×3 stem
+    /// into `stage_bases[0]` channels, then three stages of `blocks`
+    /// residual blocks each (two 3×3 convs per block, stride-2 first
+    /// block in stages 2 and 3, auto 1×1 projection on the skip when
+    /// shape changes), global average pooling and a dense softmax head.
+    /// Channel counts are `scaled_width(base, width_permille)` — the
+    /// paper's width-multiplier axis.
+    pub fn resnet(input: [usize; 3], stage_bases: [usize; 3],
+                  blocks: usize, classes: usize,
+                  width_permille: u32) -> Self {
+        assert!(blocks >= 1, "need at least one block per stage");
+        let [h, w, c] = input;
+        let chans: Vec<usize> = stage_bases
+            .iter()
+            .map(|&b| scaled_width(b, width_permille))
+            .collect();
+        let mut layers = Vec::new();
+        layers.push(LayerSpec::Conv2d {
+            cout: chans[0], kh: 3, kw: 3, stride: 1, pad: 1,
+        });
+        layers.push(LayerSpec::Relu);
+        for (si, &ch) in chans.iter().enumerate() {
+            for b in 0..blocks {
+                let stride = if si > 0 && b == 0 { 2 } else { 1 };
+                layers.push(LayerSpec::Residual {
+                    body: vec![
+                        LayerSpec::Conv2d {
+                            cout: ch, kh: 3, kw: 3, stride, pad: 1,
+                        },
+                        LayerSpec::Relu,
+                        LayerSpec::Conv2d {
+                            cout: ch, kh: 3, kw: 3, stride: 1, pad: 1,
+                        },
+                    ],
+                });
+                layers.push(LayerSpec::Relu);
+            }
+        }
+        layers.push(LayerSpec::GlobalAvgPool);
+        layers.push(LayerSpec::Dense { out: classes });
+        layers.push(LayerSpec::Softmax);
+        GraphSpec { input: ActShape::Img { h, w, c }, layers }
+    }
+
+    /// Resolve shapes, materialize skip projections and index the
+    /// weighted layers.  Panics on malformed specs (conv on flat input,
+    /// misplaced softmax, impossible residual shapes).
+    pub fn plan(&self) -> GraphPlan {
+        let nl = self.layers.len();
+        assert!(nl >= 2, "graph needs at least one layer plus Softmax");
+        assert!(matches!(self.layers[nl - 1], LayerSpec::Softmax),
+                "graph must end with the Softmax head");
+        let mut weighted = Vec::new();
+        let mut shape = self.input;
+        let layers =
+            plan_layers(&self.layers[..nl - 1], &mut shape, &mut weighted);
+        let classes = match shape {
+            ActShape::Flat(n) => n,
+            ActShape::Img { h: 1, w: 1, c } => c,
+            other => panic!("softmax head needs a flat input, got {other:?}"),
+        };
+        GraphPlan { input: self.input, classes, layers, weighted }
+    }
+}
+
+/// The paper's ResNet family on the device graph: channel bases
+/// `[16, 32, 64]`, `blocks` residual blocks per stage (ResNet-32 is
+/// `blocks = 5`: 6·5 + 2 weighted layers).
+pub fn resnet_spec(width_permille: u32, blocks: usize,
+                   input: [usize; 3], classes: usize) -> GraphSpec {
+    GraphSpec::resnet(input, [16, 32, 64], blocks, classes, width_permille)
+}
+
+/// One weighted layer resolved to its grid extents (`k` = fan-in rows,
+/// `n` = fan-out columns); `index` is the DFS weighted-layer index the
+/// per-layer seed derives from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WeightDesc {
+    pub index: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+/// Resolved layer plan (shapes inferred, projections explicit).
+#[derive(Clone, Debug)]
+pub enum PlanLayer {
+    Dense { widx: usize, k: usize, n: usize },
+    Conv { widx: usize, geom: PatchGeom },
+    Relu { len: usize },
+    GlobalAvgPool { h: usize, w: usize, c: usize },
+    Residual {
+        body: Vec<PlanLayer>,
+        /// always a `PlanLayer::Conv` (1×1 strided projection)
+        proj: Option<Box<PlanLayer>>,
+        in_len: usize,
+        out_len: usize,
+    },
+}
+
+/// A fully resolved graph: what both [`GraphNet`] and the FP32 baseline
+/// build from, so their weighted layers line up one to one.
+#[derive(Clone, Debug)]
+pub struct GraphPlan {
+    pub input: ActShape,
+    pub classes: usize,
+    pub layers: Vec<PlanLayer>,
+    pub weighted: Vec<WeightDesc>,
+}
+
+impl GraphPlan {
+    /// Total weight count across weighted layers.
+    pub fn weights(&self) -> usize {
+        self.weighted.iter().map(|d| d.k * d.n).sum()
+    }
+}
+
+fn push_weighted(weighted: &mut Vec<WeightDesc>, k: usize,
+                 n: usize) -> usize {
+    let index = weighted.len();
+    weighted.push(WeightDesc { index, k, n });
+    index
+}
+
+fn plan_layers(specs: &[LayerSpec], shape: &mut ActShape,
+               weighted: &mut Vec<WeightDesc>) -> Vec<PlanLayer> {
+    specs.iter().map(|s| plan_layer(s, shape, weighted)).collect()
+}
+
+fn plan_layer(spec: &LayerSpec, shape: &mut ActShape,
+              weighted: &mut Vec<WeightDesc>) -> PlanLayer {
+    match spec {
+        LayerSpec::Dense { out } => {
+            let k = shape.len();
+            assert!(k > 0 && *out > 0, "dense layer with empty extent");
+            let widx = push_weighted(weighted, k, *out);
+            *shape = ActShape::Flat(*out);
+            PlanLayer::Dense { widx, k, n: *out }
+        }
+        LayerSpec::Conv2d { cout, kh, kw, stride, pad } => {
+            let ActShape::Img { h, w, c } = *shape else {
+                panic!("Conv2d needs an image input, got {shape:?}");
+            };
+            let geom = PatchGeom {
+                in_h: h, in_w: w, cin: c,
+                kh: *kh, kw: *kw, cout: *cout,
+                stride: *stride, pad: *pad,
+            };
+            let widx = push_weighted(weighted, geom.patch_len(), *cout);
+            *shape = ActShape::Img {
+                h: geom.out_h(), w: geom.out_w(), c: *cout,
+            };
+            PlanLayer::Conv { widx, geom }
+        }
+        LayerSpec::Relu => PlanLayer::Relu { len: shape.len() },
+        LayerSpec::GlobalAvgPool => {
+            let ActShape::Img { h, w, c } = *shape else {
+                panic!("GlobalAvgPool needs an image input, got {shape:?}");
+            };
+            *shape = ActShape::Flat(c);
+            PlanLayer::GlobalAvgPool { h, w, c }
+        }
+        LayerSpec::Residual { body } => {
+            assert!(!body.is_empty(),
+                    "residual block needs a non-empty body");
+            let in_shape = *shape;
+            let mut bshape = in_shape;
+            let body_plan = plan_layers(body, &mut bshape, weighted);
+            let proj = if bshape == in_shape {
+                None
+            } else {
+                let (ActShape::Img { h: ih, w: iw, c: ic },
+                     ActShape::Img { h: oh, w: ow, c: oc }) =
+                    (in_shape, bshape)
+                else {
+                    panic!("residual shape change needs image shapes \
+                            ({in_shape:?} -> {bshape:?})");
+                };
+                // 1×1 projection with the body's downsampling stride.
+                assert!(oh > 0 && ow > 0, "residual body collapsed");
+                let stride = ih.div_ceil(oh);
+                let geom = PatchGeom {
+                    in_h: ih, in_w: iw, cin: ic,
+                    kh: 1, kw: 1, cout: oc,
+                    stride, pad: 0,
+                };
+                assert_eq!((geom.out_h(), geom.out_w()), (oh, ow),
+                           "no 1x1 projection matches the body's \
+                            {ih}x{iw} -> {oh}x{ow} downsampling");
+                let widx = push_weighted(weighted, ic, oc);
+                Some(Box::new(PlanLayer::Conv { widx, geom }))
+            };
+            *shape = bshape;
+            PlanLayer::Residual {
+                body: body_plan,
+                proj,
+                in_len: in_shape.len(),
+                out_len: bshape.len(),
+            }
+        }
+        LayerSpec::Softmax => {
+            panic!("Softmax must be the final layer of the graph")
+        }
+    }
+}
+
+// -- device layers -------------------------------------------------------
+
+/// Grow a reusable buffer to at least `need` elements (shared with the
+/// FP32 graph baseline — the two nets must grow buffers identically).
+#[inline]
+pub(crate) fn ensure(buf: &mut Vec<f32>, need: usize) {
+    if buf.len() < need {
+        buf.resize(need, 0.0);
+    }
+}
+
+/// Per-invocation forward context.
+struct FwdCtx<'a> {
+    t_now: f32,
+    round: u64,
+    pool: &'a WorkerPool,
+}
+
+/// Per-invocation backward context (`gain`/`inv_gain` is the backward
+/// DAC ranging of the transposed VMMs; `inv_m` the batch-mean factor of
+/// the digital weight gradients).
+struct BwdCtx<'a> {
+    t_now: f32,
+    round: u64,
+    pool: &'a WorkerPool,
+    gain: f32,
+    inv_gain: f32,
+    inv_m: f32,
+}
+
+/// Build one weighted layer's grid: `w_max = w_scale/√fan_in`, init
+/// weights uniform in `±w_max/2` from the layer's init stream,
+/// MSB-programmed at `t = 0`, `round = 0`.
+fn make_grid(params: PcmParams, policy: TilingPolicy, w_scale: f32,
+             seed: u64, widx: usize, k: usize, n: usize,
+             pool: &WorkerPool) -> CrossbarGrid {
+    let w_max = w_scale / (k as f32).sqrt();
+    let geom = HicGeometry { w_max, ..Default::default() };
+    let ls = layer_seed(seed, widx);
+    let mut grid = CrossbarGrid::new(params, geom, k, n, policy,
+                                     DacSpec::default(),
+                                     AdcSpec::default(), ls);
+    let mut rng = Pcg64::new(ls, INIT_STREAM);
+    let half = 0.5 * w_max;
+    let w0: Vec<f32> =
+        (0..k * n).map(|_| rng.uniform_in(-half, half)).collect();
+    grid.program_init(&w0, 0.0, 0, pool);
+    grid
+}
+
+/// Fully connected layer on its own grid.
+pub struct DenseLayer {
+    pub widx: usize,
+    pub k: usize,
+    pub n: usize,
+    pub grid: CrossbarGrid,
+    scratch: GridScratch,
+    /// cached input activations `[m, k]` (backward outer product)
+    input: Vec<f32>,
+    /// digital weight gradient `[k, n]`
+    grad: Vec<f32>,
+    /// gain-scaled error staging `[m, n]`
+    escaled: Vec<f32>,
+    /// transposed-VMM output staging `[m, k]`
+    dtmp: Vec<f32>,
+}
+
+impl DenseLayer {
+    fn new(widx: usize, k: usize, n: usize, params: PcmParams,
+           policy: TilingPolicy, w_scale: f32, seed: u64,
+           pool: &WorkerPool) -> Self {
+        let grid = make_grid(params, policy, w_scale, seed, widx, k, n,
+                             pool);
+        let scratch = grid.scratch();
+        DenseLayer {
+            widx, k, n, grid, scratch,
+            input: Vec::new(),
+            grad: vec![0.0; k * n],
+            escaled: Vec::new(),
+            dtmp: Vec::new(),
+        }
+    }
+
+    fn forward(&mut self, x: &[f32], m: usize, ctx: &FwdCtx,
+               out: &mut Vec<f32>) {
+        let (k, n) = (self.k, self.n);
+        ensure(&mut self.input, m * k);
+        self.input[..m * k].copy_from_slice(&x[..m * k]);
+        ensure(out, m * n);
+        self.grid.vmm_batch_into(&self.input[..m * k], m, ctx.t_now,
+                                 ctx.round, ctx.pool, &mut self.scratch,
+                                 &mut out[..m * n]);
+    }
+
+    fn backward(&mut self, d_out: &[f32], m: usize, ctx: &BwdCtx,
+                d_in: &mut Vec<f32>, need_input_grad: bool) {
+        let (k, n) = (self.k, self.n);
+        // Digital weight gradient: input outer product, batch-mean.
+        for i in 0..k {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for s in 0..m {
+                    acc += self.input[s * k + i] * d_out[s * n + j];
+                }
+                self.grad[i * n + j] = acc * ctx.inv_m;
+            }
+        }
+        if need_input_grad {
+            ensure(&mut self.escaled, m * n);
+            for (ev, &dv) in self.escaled[..m * n]
+                .iter_mut()
+                .zip(&d_out[..m * n])
+            {
+                *ev = dv * ctx.gain;
+            }
+            ensure(&mut self.dtmp, m * k);
+            self.grid.vmm_t_batch_into(&self.escaled[..m * n], m,
+                                       ctx.t_now, ctx.round, ctx.pool,
+                                       &mut self.scratch,
+                                       &mut self.dtmp[..m * k]);
+            ensure(d_in, m * k);
+            for (di, &dv) in d_in[..m * k]
+                .iter_mut()
+                .zip(&self.dtmp[..m * k])
+            {
+                *di = dv * ctx.inv_gain;
+            }
+        }
+    }
+}
+
+/// Convolution layer: im2col lowering onto one `[kh·kw·cin, cout]` grid.
+pub struct ConvLayer {
+    pub widx: usize,
+    pub geom: PatchGeom,
+    pub grid: CrossbarGrid,
+    scratch: GridScratch,
+    /// cached patch matrix `[m·P, K]` (forward input and backward
+    /// outer product)
+    patches: Vec<f32>,
+    /// digital weight gradient `[K, cout]`
+    grad: Vec<f32>,
+    /// gain-scaled error staging `[m·P, cout]`
+    escaled: Vec<f32>,
+    /// transposed-VMM patch-gradient staging `[m·P, K]`
+    dpatches: Vec<f32>,
+}
+
+impl ConvLayer {
+    fn new(widx: usize, geom: PatchGeom, params: PcmParams,
+           policy: TilingPolicy, w_scale: f32, seed: u64,
+           pool: &WorkerPool) -> Self {
+        let (k, n) = (geom.patch_len(), geom.cout);
+        let grid = make_grid(params, policy, w_scale, seed, widx, k, n,
+                             pool);
+        let scratch = grid.scratch();
+        ConvLayer {
+            widx, geom, grid, scratch,
+            patches: Vec::new(),
+            grad: vec![0.0; k * n],
+            escaled: Vec::new(),
+            dpatches: Vec::new(),
+        }
+    }
+
+    fn forward(&mut self, x: &[f32], m: usize, ctx: &FwdCtx,
+               out: &mut Vec<f32>) {
+        let (p, k) = (self.geom.positions(), self.geom.patch_len());
+        let rows = m * p;
+        ensure(&mut self.patches, rows * k);
+        im2col_into(&self.geom, &x[..m * self.geom.in_len()], m,
+                    ctx.pool, &mut self.patches[..rows * k]);
+        ensure(out, rows * self.geom.cout);
+        self.grid.vmm_batch_into(&self.patches[..rows * k], rows,
+                                 ctx.t_now, ctx.round, ctx.pool,
+                                 &mut self.scratch,
+                                 &mut out[..rows * self.geom.cout]);
+    }
+
+    fn backward(&mut self, d_out: &[f32], m: usize, ctx: &BwdCtx,
+                d_in: &mut Vec<f32>, need_input_grad: bool) {
+        let (p, k) = (self.geom.positions(), self.geom.patch_len());
+        let co = self.geom.cout;
+        let rows = m * p;
+        // Digital weight gradient: patch outer product summed over
+        // samples *and* positions, batch-mean (1/m, the dense
+        // convention — positions sum like the loss does).
+        for ki in 0..k {
+            for j in 0..co {
+                let mut acc = 0.0f32;
+                for r in 0..rows {
+                    acc += self.patches[r * k + ki] * d_out[r * co + j];
+                }
+                self.grad[ki * co + j] = acc * ctx.inv_m;
+            }
+        }
+        if need_input_grad {
+            ensure(&mut self.escaled, rows * co);
+            for (ev, &dv) in self.escaled[..rows * co]
+                .iter_mut()
+                .zip(&d_out[..rows * co])
+            {
+                *ev = dv * ctx.gain;
+            }
+            ensure(&mut self.dpatches, rows * k);
+            self.grid.vmm_t_batch_into(&self.escaled[..rows * co], rows,
+                                       ctx.t_now, ctx.round, ctx.pool,
+                                       &mut self.scratch,
+                                       &mut self.dpatches[..rows * k]);
+            let nin = m * self.geom.in_len();
+            ensure(d_in, nin);
+            col2im_into(&self.geom, &self.dpatches[..rows * k], m,
+                        ctx.pool, &mut d_in[..nin]);
+            for v in d_in[..nin].iter_mut() {
+                *v *= ctx.inv_gain;
+            }
+        }
+    }
+}
+
+/// Skip-add residual block with an optional 1×1 projection conv.
+pub struct ResBlock {
+    pub body: Vec<Layer>,
+    pub proj: Option<Box<ConvLayer>>,
+    in_len: usize,
+    out_len: usize,
+    /// per-body-layer output activations
+    bacts: Vec<Vec<f32>>,
+    /// projection output `[m, out_len]`
+    skip: Vec<f32>,
+    /// backward delta ping/pong through the body
+    dbody: Vec<f32>,
+    dtmp: Vec<f32>,
+    /// skip-path input gradient `[m, in_len]`
+    dskip: Vec<f32>,
+}
+
+/// One device-graph layer.
+pub enum Layer {
+    Dense(DenseLayer),
+    Conv(ConvLayer),
+    Relu {
+        len: usize,
+        /// cached pre-activation input `[m, len]`
+        z: Vec<f32>,
+    },
+    GlobalAvgPool { h: usize, w: usize, c: usize },
+    Residual(ResBlock),
+}
+
+impl Layer {
+    fn in_len(&self) -> usize {
+        match self {
+            Layer::Dense(d) => d.k,
+            Layer::Conv(cv) => cv.geom.in_len(),
+            Layer::Relu { len, .. } => *len,
+            Layer::GlobalAvgPool { h, w, c } => h * w * c,
+            Layer::Residual(r) => r.in_len,
+        }
+    }
+
+    fn out_len(&self) -> usize {
+        match self {
+            Layer::Dense(d) => d.n,
+            Layer::Conv(cv) => cv.geom.out_len(),
+            Layer::Relu { len, .. } => *len,
+            Layer::GlobalAvgPool { c, .. } => *c,
+            Layer::Residual(r) => r.out_len,
+        }
+    }
+
+    fn forward(&mut self, x: &[f32], m: usize, ctx: &FwdCtx,
+               out: &mut Vec<f32>) {
+        match self {
+            Layer::Dense(d) => d.forward(x, m, ctx, out),
+            Layer::Conv(cv) => cv.forward(x, m, ctx, out),
+            Layer::Relu { len, z } => {
+                let need = m * *len;
+                ensure(z, need);
+                z[..need].copy_from_slice(&x[..need]);
+                ensure(out, need);
+                for (o, &v) in out[..need].iter_mut().zip(&x[..need]) {
+                    *o = if v > 0.0 { v } else { 0.0 };
+                }
+            }
+            Layer::GlobalAvgPool { h, w, c } => {
+                let (pp, cc) = (*h * *w, *c);
+                let inv_area = 1.0f32 / pp as f32;
+                ensure(out, m * cc);
+                for s in 0..m {
+                    for j in 0..cc {
+                        let mut acc = 0.0f32;
+                        for p in 0..pp {
+                            acc += x[s * pp * cc + p * cc + j];
+                        }
+                        out[s * cc + j] = acc * inv_area;
+                    }
+                }
+            }
+            Layer::Residual(r) => r.forward(x, m, ctx, out),
+        }
+    }
+
+    fn backward(&mut self, d_out: &[f32], m: usize, ctx: &BwdCtx,
+                d_in: &mut Vec<f32>, need_input_grad: bool) {
+        match self {
+            Layer::Dense(d) => {
+                d.backward(d_out, m, ctx, d_in, need_input_grad)
+            }
+            Layer::Conv(cv) => {
+                cv.backward(d_out, m, ctx, d_in, need_input_grad)
+            }
+            Layer::Relu { len, z } => {
+                if need_input_grad {
+                    let need = m * *len;
+                    ensure(d_in, need);
+                    for i in 0..need {
+                        d_in[i] =
+                            if z[i] > 0.0 { d_out[i] } else { 0.0 };
+                    }
+                }
+            }
+            Layer::GlobalAvgPool { h, w, c } => {
+                if need_input_grad {
+                    let (pp, cc) = (*h * *w, *c);
+                    let inv_area = 1.0f32 / pp as f32;
+                    ensure(d_in, m * pp * cc);
+                    for s in 0..m {
+                        for p in 0..pp {
+                            for j in 0..cc {
+                                d_in[s * pp * cc + p * cc + j] =
+                                    d_out[s * cc + j] * inv_area;
+                            }
+                        }
+                    }
+                }
+            }
+            Layer::Residual(r) => {
+                r.backward(d_out, m, ctx, d_in, need_input_grad)
+            }
+        }
+    }
+
+    fn apply_update(&mut self, lr: f32, t_now: f32, round: u64,
+                    pool: &WorkerPool) -> usize {
+        match self {
+            Layer::Dense(d) => d.grid.apply_update(
+                &d.grad, lr, t_now, round, pool, &mut d.scratch),
+            Layer::Conv(cv) => cv.grid.apply_update(
+                &cv.grad, lr, t_now, round, pool, &mut cv.scratch),
+            Layer::Residual(r) => {
+                let mut total = 0;
+                for l in &mut r.body {
+                    total += l.apply_update(lr, t_now, round, pool);
+                }
+                if let Some(pj) = r.proj.as_mut() {
+                    total += pj.grid.apply_update(
+                        &pj.grad, lr, t_now, round, pool,
+                        &mut pj.scratch);
+                }
+                total
+            }
+            _ => 0,
+        }
+    }
+
+    fn refresh(&mut self, t_now: f32, round: u64,
+               pool: &WorkerPool) -> usize {
+        match self {
+            Layer::Dense(d) => d.grid.refresh(t_now, round, pool),
+            Layer::Conv(cv) => cv.grid.refresh(t_now, round, pool),
+            Layer::Residual(r) => {
+                let mut total = 0;
+                for l in &mut r.body {
+                    total += l.refresh(t_now, round, pool);
+                }
+                if let Some(pj) = r.proj.as_mut() {
+                    total += pj.grid.refresh(t_now, round, pool);
+                }
+                total
+            }
+            _ => 0,
+        }
+    }
+
+    fn record_endurance(&self, ledger: &mut EnduranceLedger) {
+        match self {
+            Layer::Dense(d) => d.grid.record_endurance(ledger),
+            Layer::Conv(cv) => cv.grid.record_endurance(ledger),
+            Layer::Residual(r) => {
+                for l in &r.body {
+                    l.record_endurance(ledger);
+                }
+                if let Some(pj) = r.proj.as_ref() {
+                    pj.grid.record_endurance(ledger);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn inference_bits(&self) -> usize {
+        match self {
+            Layer::Dense(d) => d.grid.inference_bits(),
+            Layer::Conv(cv) => cv.grid.inference_bits(),
+            Layer::Residual(r) => {
+                let mut total: usize =
+                    r.body.iter().map(|l| l.inference_bits()).sum();
+                if let Some(pj) = r.proj.as_ref() {
+                    total += pj.grid.inference_bits();
+                }
+                total
+            }
+            _ => 0,
+        }
+    }
+
+    fn total_set_pulses(&self) -> u64 {
+        match self {
+            Layer::Dense(d) => d.grid.total_set_pulses(),
+            Layer::Conv(cv) => cv.grid.total_set_pulses(),
+            Layer::Residual(r) => {
+                let mut total: u64 =
+                    r.body.iter().map(|l| l.total_set_pulses()).sum();
+                if let Some(pj) = r.proj.as_ref() {
+                    total += pj.grid.total_set_pulses();
+                }
+                total
+            }
+            _ => 0,
+        }
+    }
+}
+
+impl ResBlock {
+    fn forward(&mut self, x: &[f32], m: usize, ctx: &FwdCtx,
+               out: &mut Vec<f32>) {
+        let nb = self.body.len();
+        for i in 0..nb {
+            let il = self.body[i].in_len();
+            let (done, rest) = self.bacts.split_at_mut(i);
+            let input: &[f32] =
+                if i == 0 { x } else { &done[i - 1][..m * il] };
+            self.body[i].forward(input, m, ctx, &mut rest[0]);
+        }
+        let need = m * self.out_len;
+        ensure(out, need);
+        if let Some(pj) = self.proj.as_mut() {
+            pj.forward(x, m, ctx, &mut self.skip);
+            let body_out = &self.bacts[nb - 1];
+            for i in 0..need {
+                out[i] = body_out[i] + self.skip[i];
+            }
+        } else {
+            let body_out = &self.bacts[nb - 1];
+            for i in 0..need {
+                out[i] = body_out[i] + x[i];
+            }
+        }
+    }
+
+    fn backward(&mut self, d_out: &[f32], m: usize, ctx: &BwdCtx,
+                d_in: &mut Vec<f32>, need_input_grad: bool) {
+        let nb = self.body.len();
+        let need_out = m * self.out_len;
+        ensure(&mut self.dbody, need_out);
+        self.dbody[..need_out].copy_from_slice(&d_out[..need_out]);
+        for i in (0..nb).rev() {
+            let inner_need = i > 0 || need_input_grad;
+            let ol = self.body[i].out_len();
+            self.body[i].backward(&self.dbody[..m * ol], m, ctx,
+                                  &mut self.dtmp, inner_need);
+            if inner_need {
+                std::mem::swap(&mut self.dbody, &mut self.dtmp);
+            }
+        }
+        if let Some(pj) = self.proj.as_mut() {
+            pj.backward(d_out, m, ctx, &mut self.dskip,
+                        need_input_grad);
+        }
+        if need_input_grad {
+            let nin = m * self.in_len;
+            ensure(d_in, nin);
+            if self.proj.is_some() {
+                for i in 0..nin {
+                    d_in[i] = self.dbody[i] + self.dskip[i];
+                }
+            } else {
+                for i in 0..nin {
+                    d_in[i] = self.dbody[i] + d_out[i];
+                }
+            }
+        }
+    }
+}
+
+// -- the device graph ----------------------------------------------------
+
+/// A layer-graph network whose every weighted layer lives on its own
+/// [`CrossbarGrid`].
+pub struct GraphNet {
+    pub input: ActShape,
+    pub classes: usize,
+    pub layers: Vec<Layer>,
+    pub seed: u64,
+    weighted: Vec<WeightDesc>,
+    /// per-top-level-layer output activations
+    acts: Vec<Vec<f32>>,
+    /// backward delta ping/pong
+    delta: Vec<f32>,
+    dtmp: Vec<f32>,
+}
+
+fn build_layer(pl: &PlanLayer, params: PcmParams, policy: TilingPolicy,
+               w_scale: f32, seed: u64, pool: &WorkerPool) -> Layer {
+    match pl {
+        PlanLayer::Dense { widx, k, n } => Layer::Dense(DenseLayer::new(
+            *widx, *k, *n, params, policy, w_scale, seed, pool)),
+        PlanLayer::Conv { widx, geom } => Layer::Conv(ConvLayer::new(
+            *widx, *geom, params, policy, w_scale, seed, pool)),
+        PlanLayer::Relu { len } => {
+            Layer::Relu { len: *len, z: Vec::new() }
+        }
+        PlanLayer::GlobalAvgPool { h, w, c } => {
+            Layer::GlobalAvgPool { h: *h, w: *w, c: *c }
+        }
+        PlanLayer::Residual { body, proj, in_len, out_len } => {
+            let b: Vec<Layer> = body
+                .iter()
+                .map(|l| build_layer(l, params, policy, w_scale, seed,
+                                     pool))
+                .collect();
+            let pj = proj.as_ref().map(|p| {
+                let PlanLayer::Conv { widx, geom } = &**p else {
+                    unreachable!("projection is always a conv");
+                };
+                Box::new(ConvLayer::new(*widx, *geom, params, policy,
+                                        w_scale, seed, pool))
+            });
+            Layer::Residual(ResBlock {
+                bacts: vec![Vec::new(); b.len()],
+                body: b,
+                proj: pj,
+                in_len: *in_len,
+                out_len: *out_len,
+                skip: Vec::new(),
+                dbody: Vec::new(),
+                dtmp: Vec::new(),
+                dskip: Vec::new(),
+            })
+        }
+    }
+}
+
+impl GraphNet {
+    /// Build and initialize the device graph from a spec (weighted
+    /// layers in DFS order, per-layer grid seeds and `w_max` windows —
+    /// see the module docs).
+    pub fn new(params: PcmParams, spec: &GraphSpec, policy: TilingPolicy,
+               w_scale: f32, seed: u64, pool: &WorkerPool) -> Self {
+        Self::from_plan(params, &spec.plan(), policy, w_scale, seed, pool)
+    }
+
+    /// Build from an already resolved plan.
+    pub fn from_plan(params: PcmParams, plan: &GraphPlan,
+                     policy: TilingPolicy, w_scale: f32, seed: u64,
+                     pool: &WorkerPool) -> Self {
+        let layers: Vec<Layer> = plan
+            .layers
+            .iter()
+            .map(|l| build_layer(l, params, policy, w_scale, seed, pool))
+            .collect();
+        let acts = layers.iter().map(|_| Vec::new()).collect();
+        GraphNet {
+            input: plan.input,
+            classes: plan.classes,
+            layers,
+            seed,
+            weighted: plan.weighted.clone(),
+            acts,
+            delta: Vec::new(),
+            dtmp: Vec::new(),
+        }
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.input.len()
+    }
+
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    /// Number of weighted layers (each on its own grid).
+    pub fn weighted_layers(&self) -> usize {
+        self.weighted.len()
+    }
+
+    /// Total weight count across weighted layers.
+    pub fn weights(&self) -> usize {
+        self.weighted.iter().map(|d| d.k * d.n).sum()
+    }
+
+    /// Analog forward pass over `m` samples; returns the logits
+    /// `[m, classes]`.  Caches activations for a following
+    /// [`GraphNet::backward`].
+    pub fn forward(&mut self, x: &[f32], m: usize, t_now: f32,
+                   round: u64, pool: &WorkerPool) -> &[f32] {
+        assert_eq!(x.len(), m * self.input.len());
+        let ctx = FwdCtx { t_now, round, pool };
+        let nl = self.layers.len();
+        for i in 0..nl {
+            let il = self.layers[i].in_len();
+            let (done, rest) = self.acts.split_at_mut(i);
+            let input: &[f32] =
+                if i == 0 { x } else { &done[i - 1][..m * il] };
+            self.layers[i].forward(input, m, &ctx, &mut rest[0]);
+        }
+        &self.acts[nl - 1][..m * self.classes]
+    }
+
+    /// Backward pass from the logits gradient (`softmax − one-hot`):
+    /// digital weight gradients into each layer, transposed analog VMMs
+    /// carrying the error down the graph (pre-scaled by `bwd_gain`
+    /// around each analog hop).  Must follow a `forward` at the same
+    /// batch size.
+    pub fn backward(&mut self, dlogits: &[f32], m: usize, t_now: f32,
+                    round: u64, pool: &WorkerPool, bwd_gain: f32) {
+        assert_eq!(dlogits.len(), m * self.classes);
+        let ctx = BwdCtx {
+            t_now,
+            round,
+            pool,
+            gain: bwd_gain,
+            inv_gain: 1.0 / bwd_gain,
+            inv_m: 1.0 / m as f32,
+        };
+        ensure(&mut self.delta, dlogits.len());
+        self.delta[..dlogits.len()].copy_from_slice(dlogits);
+        for i in (0..self.layers.len()).rev() {
+            let need = i > 0;
+            let ol = self.layers[i].out_len();
+            self.layers[i].backward(&self.delta[..m * ol], m, &ctx,
+                                    &mut self.dtmp, need);
+            if need {
+                std::mem::swap(&mut self.delta, &mut self.dtmp);
+            }
+        }
+    }
+
+    /// Apply the per-layer hybrid updates (DFS order); returns total
+    /// LSB→MSB overflow events.
+    pub fn apply_updates(&mut self, lr: f32, t_now: f32, round: u64,
+                         pool: &WorkerPool) -> usize {
+        self.layers
+            .iter_mut()
+            .map(|l| l.apply_update(lr, t_now, round, pool))
+            .sum()
+    }
+
+    /// Selective saturation refresh across every grid; returns the
+    /// refreshed pair count.
+    pub fn refresh(&mut self, t_now: f32, round: u64,
+                   pool: &WorkerPool) -> usize {
+        self.layers
+            .iter_mut()
+            .map(|l| l.refresh(t_now, round, pool))
+            .sum()
+    }
+
+    /// Inference model bits across all grids (MSB arrays only — the
+    /// fig4 model-size axis).
+    pub fn inference_bits(&self) -> usize {
+        self.layers.iter().map(|l| l.inference_bits()).sum()
+    }
+
+    /// Fold every grid's device activity into an endurance ledger.
+    pub fn record_endurance(&self, ledger: &mut EnduranceLedger) {
+        for l in &self.layers {
+            l.record_endurance(ledger);
+        }
+    }
+
+    /// Total SET pulses across all grids.
+    pub fn total_set_pulses(&self) -> u64 {
+        self.layers.iter().map(|l| l.total_set_pulses()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mlp_plan_matches_device_net_layout() {
+        let spec = GraphSpec::mlp(&[8, 12, 8, 4]);
+        let plan = spec.plan();
+        assert_eq!(plan.classes, 4);
+        assert_eq!(plan.weighted.len(), 3);
+        assert_eq!(plan.weighted[0], WeightDesc { index: 0, k: 8, n: 12 });
+        assert_eq!(plan.weighted[1], WeightDesc { index: 1, k: 12, n: 8 });
+        assert_eq!(plan.weighted[2], WeightDesc { index: 2, k: 8, n: 4 });
+        assert_eq!(plan.weights(), 8 * 12 + 12 * 8 + 8 * 4);
+        // Dense / Relu alternation, no trailing Relu.
+        assert_eq!(plan.layers.len(), 5);
+        assert!(matches!(plan.layers[0], PlanLayer::Dense { .. }));
+        assert!(matches!(plan.layers[1], PlanLayer::Relu { len: 12 }));
+        assert!(matches!(plan.layers[4], PlanLayer::Dense { .. }));
+    }
+
+    #[test]
+    fn resnet_plan_shapes_and_projections() {
+        let spec = GraphSpec::resnet([8, 8, 3], [4, 6, 8], 1, 10, 1000);
+        let plan = spec.plan();
+        assert_eq!(plan.classes, 10);
+        // stem + 3 blocks × 2 convs + 2 projections + head = 10 grids.
+        assert_eq!(plan.weighted.len(), 10);
+        // Stem: 3×3×3 → 4.
+        assert_eq!(plan.weighted[0],
+                   WeightDesc { index: 0, k: 27, n: 4 });
+        // Stage-2 body: 3×3 convs 4→6 then 6→6 (DFS body first) …
+        assert_eq!(plan.weighted[3],
+                   WeightDesc { index: 3, k: 9 * 4, n: 6 });
+        assert_eq!(plan.weighted[4],
+                   WeightDesc { index: 4, k: 9 * 6, n: 6 });
+        // … then its 1×1 stride-2 skip projection, 4 → 6 channels.
+        assert_eq!(plan.weighted[5], WeightDesc { index: 5, k: 4, n: 6 });
+        // Head: GAP leaves 8 channels.
+        assert_eq!(plan.weighted[9], WeightDesc { index: 9, k: 8, n: 10 });
+        // Width multiplier scales the channel counts.
+        let half = GraphSpec::resnet([8, 8, 3], [4, 6, 8], 1, 10, 500);
+        let ph = half.plan();
+        assert_eq!(ph.weighted[0].n, 2);
+        assert!(ph.weights() < plan.weights());
+    }
+
+    #[test]
+    fn identity_residual_needs_no_projection() {
+        let spec = GraphSpec {
+            input: ActShape::Img { h: 4, w: 4, c: 3 },
+            layers: vec![
+                LayerSpec::Residual {
+                    body: vec![
+                        LayerSpec::Conv2d {
+                            cout: 3, kh: 3, kw: 3, stride: 1, pad: 1,
+                        },
+                        LayerSpec::Relu,
+                        LayerSpec::Conv2d {
+                            cout: 3, kh: 3, kw: 3, stride: 1, pad: 1,
+                        },
+                    ],
+                },
+                LayerSpec::GlobalAvgPool,
+                LayerSpec::Softmax,
+            ],
+        };
+        let plan = spec.plan();
+        assert_eq!(plan.weighted.len(), 2);
+        assert_eq!(plan.classes, 3);
+        let PlanLayer::Residual { proj, in_len, out_len, .. } =
+            &plan.layers[0]
+        else {
+            panic!("expected a residual block");
+        };
+        assert!(proj.is_none());
+        assert_eq!((*in_len, *out_len), (48, 48));
+    }
+
+    #[test]
+    fn graph_net_builds_and_runs_forward_backward() {
+        let pool = WorkerPool::serial();
+        let spec = GraphSpec::resnet([4, 4, 2], [3, 4, 5], 1, 3, 1000);
+        let mut net = GraphNet::new(
+            PcmParams::ideal(), &spec,
+            TilingPolicy { tile_rows: 8, tile_cols: 8 }, 2.0, 11, &pool);
+        assert_eq!(net.input_dim(), 32);
+        assert_eq!(net.classes(), 3);
+        assert_eq!(net.weighted_layers(), 10);
+        assert_eq!(net.inference_bits(), net.weights() * 4);
+        let m = 2;
+        let x: Vec<f32> = (0..m * 32)
+            .map(|i| (((i * 5) % 9) as f32 - 4.0) / 4.0)
+            .collect();
+        let logits = net.forward(&x, m, 0.0, 0, &pool).to_vec();
+        assert_eq!(logits.len(), m * 3);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        let dl: Vec<f32> =
+            (0..m * 3).map(|i| ((i % 3) as f32 - 1.0) / 4.0).collect();
+        net.backward(&dl, m, 0.0, 0, &pool, 4.0);
+        let ovf = net.apply_updates(0.1, 0.0, 0, &pool);
+        let _ = ovf; // overflow count is workload-dependent
+        assert!(net.total_set_pulses() > 0, "init never programmed");
+        let mut ledger = EnduranceLedger::new();
+        net.record_endurance(&mut ledger);
+        assert_eq!(ledger.msb.count as usize, 2 * net.weights());
+    }
+
+    #[test]
+    fn graph_mlp_init_survives_msb_quantization() {
+        let pool = WorkerPool::serial();
+        let spec = GraphSpec::mlp(&[6, 5, 3]);
+        let net = GraphNet::new(
+            PcmParams::ideal(), &spec,
+            TilingPolicy { tile_rows: 4, tile_cols: 4 }, 2.0, 11, &pool);
+        assert_eq!(net.weighted_layers(), 2);
+        assert_eq!(net.inference_bits(), (6 * 5 + 5 * 3) * 4);
+        // Programmed weights stay within the layer's representable
+        // range and are not all zero (the init must survive MSB
+        // quantization — the whole point of per-layer w_max).
+        let Layer::Dense(d) = &net.layers[0] else {
+            panic!("mlp graph must start with a dense layer");
+        };
+        let mut scratch = d.grid.scratch();
+        let mut w = vec![0.0f32; 6 * 5];
+        d.grid.drift_into(0.0, &pool, &mut scratch, &mut w);
+        let w_max = 2.0 / (6.0f32).sqrt();
+        assert!(w.iter().any(|&v| v != 0.0), "init quantized to zero");
+        assert!(w.iter().all(|&v| v.abs() <= w_max + 0.13));
+    }
+
+    #[test]
+    #[should_panic(expected = "residual block needs a non-empty body")]
+    fn empty_residual_body_is_rejected() {
+        let spec = GraphSpec {
+            input: ActShape::Img { h: 4, w: 4, c: 2 },
+            layers: vec![
+                LayerSpec::Residual { body: vec![] },
+                LayerSpec::GlobalAvgPool,
+                LayerSpec::Softmax,
+            ],
+        };
+        let _ = spec.plan();
+    }
+
+    #[test]
+    #[should_panic(expected = "Softmax must be the final layer")]
+    fn misplaced_softmax_is_rejected() {
+        let spec = GraphSpec {
+            input: ActShape::Flat(4),
+            layers: vec![LayerSpec::Softmax, LayerSpec::Dense { out: 2 },
+                         LayerSpec::Softmax],
+        };
+        let _ = spec.plan();
+    }
+
+    #[test]
+    #[should_panic(expected = "needs an image input")]
+    fn conv_on_flat_input_is_rejected() {
+        let spec = GraphSpec {
+            input: ActShape::Flat(9),
+            layers: vec![
+                LayerSpec::Conv2d { cout: 2, kh: 3, kw: 3, stride: 1,
+                                    pad: 1 },
+                LayerSpec::Softmax,
+            ],
+        };
+        let _ = spec.plan();
+    }
+}

@@ -4,32 +4,39 @@
 //! in-memory architecture; this module brings that workload onto the
 //! **device-level** grid engine, no PJRT artifacts needed:
 //!
-//! * [`net::DeviceNet`] — a layered feed-forward network (hidden widths
-//!   scaled by the paper's width multiplier, ReLU activations, softmax
-//!   cross-entropy) where **every layer's weight matrix lives on its
-//!   own sharded [`crate::crossbar::CrossbarGrid`]** with the HIC
-//!   hybrid representation.  The forward pass is the analog batched
-//!   VMM; the backward pass is the **transposed** analog VMM
-//!   (`vmm_t_batch_into`) on the *same* crossbars — the mixed-precision
-//!   computational-memory training scheme (Nandakumar et al.), where
-//!   only the weight-gradient outer product and the nonlinearities run
-//!   digitally.
-//! * [`features`] — deterministic feature sources: pooled synthetic
-//!   CIFAR from the existing `data` pipeline (default for accuracy
-//!   runs) and portable Gaussian blobs (no libm; feeds the byte-stable
-//!   fig4 golden).
-//! * [`baseline::FpNet`] — the FP32 host MLP (32 bits/weight) the fig4
-//!   accuracy-vs-model-size sweep compares against.
+//! * [`graph`] — the layer-graph IR ([`GraphSpec`] → [`GraphNet`]):
+//!   `Dense`, `Conv2d`, `Relu`, `GlobalAvgPool`, `Residual` skip-add
+//!   and the `Softmax` head, with explicit activation shapes.  **Every
+//!   weighted layer's matrix lives on its own sharded
+//!   [`crate::crossbar::CrossbarGrid`]** (per-layer
+//!   `w_max = w_scale/√fan_in`, per-layer seeds); convolutions are
+//!   lowered via the deterministic im2col/col2im patch kernels
+//!   (`crossbar::conv`), so each kernel is a `[kh·kw·cin, cout]` analog
+//!   VMM, its backprop the **transposed** analog VMM plus a col2im
+//!   scatter, its weight gradient a digital patch outer product into
+//!   the hybrid LSB/MSB update — the mixed-precision
+//!   computational-memory scheme (Nandakumar et al.) extended to the
+//!   paper's ResNet topology ([`graph::resnet_spec`]).
+//! * [`features`] — deterministic feature sources with explicit
+//!   `[h, w, c]` spatial metadata: pooled synthetic CIFAR from the
+//!   existing `data` pipeline (default for accuracy runs) and portable
+//!   Gaussian blobs, flat or image-shaped (no libm; feeds the
+//!   byte-stable fig4 goldens).
+//! * [`baseline`] — the FP32 host twins ([`FpNet`] dense,
+//!   [`baseline::FpGraphNet`] layer-graph) the fig4
+//!   accuracy-vs-model-size sweeps compare against.
 //!
-//! The training loop itself lives in
-//! [`crate::coordinator::nettrainer::NetTrainer`]; the fig4 sweep in
+//! The training loop lives in
+//! [`crate::coordinator::nettrainer::NetTrainer`]; the fig4 sweeps in
 //! `exp::gridexp::run_fig4`.  Everything inherits the grid determinism
 //! contract: bitwise identical for any worker count.
 
 pub mod baseline;
 pub mod features;
+pub mod graph;
 pub mod net;
 
-pub use baseline::FpNet;
+pub use baseline::{FpGraphNet, FpNet};
 pub use features::{BlobDataset, FeatureSource, PooledCifar};
-pub use net::{DeviceNet, NetSpec};
+pub use graph::{resnet_spec, ActShape, GraphNet, GraphSpec, LayerSpec};
+pub use net::NetSpec;

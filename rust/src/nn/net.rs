@@ -1,40 +1,33 @@
-//! The on-grid feed-forward network: per-layer crossbar grids + the
-//! portable digital glue (ReLU, softmax cross-entropy).
+//! Dense-stack spec and the portable digital glue (ReLU-free softmax
+//! cross-entropy helpers) shared by the on-grid graph and the FP32
+//! baseline.
 //!
-//! [`DeviceNet`] holds one [`CrossbarGrid`] per layer — every weight
-//! matrix lives on its own sharded tile grid with the HIC hybrid
-//! representation (4-bit MSB differential pairs + LSB accumulators).
-//! Per-layer weight scaling follows the mixed-precision trainers: layer
-//! `l` maps its conductance window to `w_max = w_scale / √fan_in`, so a
-//! He-scaled initialization occupies several MSB quanta regardless of
-//! width, and activations stay O(1) through depth (the DAC/ADC ranges
-//! never re-calibrate per layer).
+//! The on-grid network itself lives in [`crate::nn::graph`]: the PR-3
+//! `DeviceNet` dense stack is now the `GraphSpec::mlp` instance of the
+//! layer-graph IR (per-layer [`crate::crossbar::CrossbarGrid`]s,
+//! `w_max = w_scale/√fan_in` weight windows, per-layer seeds via
+//! [`layer_seed`]).  This module keeps what is architecture-independent:
 //!
-//! Each layer derives its own grid seed ([`layer_seed`]) — combined
-//! with the grid's counter-based `(round, op, shard)` streams, a
-//! forward pass, a transposed backward pass and a hybrid update of any
-//! layer at any step draw fully independent noise, independent of the
-//! worker count.
-//!
-//! The digital nonlinearities ([`softmax_rows`], [`nll_sum`]) are pure
-//! f32 arithmetic on the `fastmath` polynomials (no libm), so the
-//! device-level fig4 documents are byte-stable and oracle-mirrored.
+//! * [`NetSpec`] / [`scaled_width`] — the paper's width-multiplier axis
+//!   (permille integers so experiment documents stay byte-stable);
+//! * [`layer_seed`] — the per-weighted-layer grid-seed derivation
+//!   (stable across widths of *other* layers; combined with the grid's
+//!   counter-based `(round, op, shard)` streams, every layer at every
+//!   step draws independent noise for any worker count);
+//! * [`softmax_rows`], [`nll_sum`], [`argmax_row`] — pure f32/f64
+//!   arithmetic on the `fastmath` polynomials (no libm), so the
+//!   device-level fig4 documents are byte-stable and oracle-mirrored.
 
-use crate::crossbar::grid::CrossbarGrid;
-use crate::crossbar::{AdcSpec, DacSpec, GridScratch, TilingPolicy};
-use crate::hic::weight::HicGeometry;
-use crate::pcm::device::PcmParams;
 use crate::util::fastmath::{exp_fast, ln_fast};
-use crate::util::pool::WorkerPool;
-use crate::util::rng::Pcg64;
 
 /// Weyl constant deriving per-layer grid seeds from the net seed.
 const LAYER_SEED_MIX: u64 = 0xA24B_AED4_963E_E407;
-/// Stream tag of the per-layer weight-initialization draws.
-const INIT_STREAM: u64 = 0x1217;
+/// Stream tag of the per-layer weight-initialization draws (shared by
+/// every weighted layer kind of the device graph).
+pub(crate) const INIT_STREAM: u64 = 0x1217;
 
-/// Grid seed of layer `l` (distinct per layer, stable across widths of
-/// *other* layers).
+/// Grid seed of weighted layer `l` (distinct per layer, stable across
+/// widths of *other* layers).
 #[inline]
 pub fn layer_seed(seed: u64, layer: usize) -> u64 {
     seed ^ (layer as u64 + 1).wrapping_mul(LAYER_SEED_MIX)
@@ -50,8 +43,8 @@ pub fn scaled_width(base: usize, width_permille: u32) -> usize {
     ((x + 0.5).floor() as usize).max(1)
 }
 
-/// Architecture spec: input dim, base hidden widths, classes, and the
-/// width multiplier applied to the hidden stack.
+/// Dense-stack architecture spec: input dim, base hidden widths,
+/// classes, and the width multiplier applied to the hidden stack.
 #[derive(Clone, Debug)]
 pub struct NetSpec {
     pub input: usize,
@@ -70,66 +63,6 @@ impl NetSpec {
         }
         d.push(self.classes);
         d
-    }
-}
-
-/// A feed-forward network whose every weight matrix lives on its own
-/// [`CrossbarGrid`].
-pub struct DeviceNet {
-    /// layer-size chain: layer `l` maps `dims[l] → dims[l+1]`
-    pub dims: Vec<usize>,
-    pub grids: Vec<CrossbarGrid>,
-    pub seed: u64,
-}
-
-impl DeviceNet {
-    /// Build and initialize the network: per-layer `w_max =
-    /// w_scale / √fan_in`, weights drawn uniform in `±w_max/2` from the
-    /// layer's init stream and programmed onto the grids
-    /// (MSB-quantized) at `t = 0`, `round = 0`.
-    pub fn new(params: PcmParams, dims: &[usize], policy: TilingPolicy,
-               w_scale: f32, seed: u64, pool: &WorkerPool) -> Self {
-        assert!(dims.len() >= 2, "need at least one layer");
-        let mut grids = Vec::with_capacity(dims.len() - 1);
-        for l in 0..dims.len() - 1 {
-            let (k, n) = (dims[l], dims[l + 1]);
-            let w_max = w_scale / (k as f32).sqrt();
-            let geom = HicGeometry { w_max, ..Default::default() };
-            let ls = layer_seed(seed, l);
-            let mut grid = CrossbarGrid::new(
-                params, geom, k, n, policy, DacSpec::default(),
-                AdcSpec::default(), ls);
-            let mut rng = Pcg64::new(ls, INIT_STREAM);
-            let half = 0.5 * w_max;
-            let w0: Vec<f32> =
-                (0..k * n).map(|_| rng.uniform_in(-half, half)).collect();
-            grid.program_init(&w0, 0.0, 0, pool);
-            grids.push(grid);
-        }
-        DeviceNet { dims: dims.to_vec(), grids, seed }
-    }
-
-    pub fn layers(&self) -> usize {
-        self.grids.len()
-    }
-
-    pub fn input_dim(&self) -> usize {
-        self.dims[0]
-    }
-
-    pub fn classes(&self) -> usize {
-        *self.dims.last().unwrap()
-    }
-
-    /// One reusable [`GridScratch`] per layer.
-    pub fn scratches(&self) -> Vec<GridScratch> {
-        self.grids.iter().map(|g| g.scratch()).collect()
-    }
-
-    /// Inference model bits across all layers (MSB arrays only — the
-    /// fig4 model-size axis).
-    pub fn inference_bits(&self) -> usize {
-        self.grids.iter().map(|g| g.inference_bits()).sum()
     }
 }
 
@@ -199,26 +132,6 @@ mod tests {
         assert_eq!(scaled_width(1, 250), 1);
         assert_eq!(scaled_width(5, 500), 3); // 2.5 -> 3
         assert_eq!(scaled_width(3, 500), 2); // 1.5 -> 2
-    }
-
-    #[test]
-    fn device_net_builds_and_decodes_near_init() {
-        let pool = WorkerPool::serial();
-        let dims = [6, 5, 3];
-        let net = DeviceNet::new(
-            PcmParams::ideal(), &dims,
-            TilingPolicy { tile_rows: 4, tile_cols: 4 }, 2.0, 11, &pool);
-        assert_eq!(net.layers(), 2);
-        assert_eq!(net.inference_bits(), (6 * 5 + 5 * 3) * 4);
-        // Programmed weights stay within the layer's representable
-        // range and are not all zero (the init must survive MSB
-        // quantization — the whole point of per-layer w_max).
-        let mut scratch = net.grids[0].scratch();
-        let mut w = vec![0.0f32; 6 * 5];
-        net.grids[0].drift_into(0.0, &pool, &mut scratch, &mut w);
-        let w_max = 2.0 / (6.0f32).sqrt();
-        assert!(w.iter().any(|&v| v != 0.0), "init quantized to zero");
-        assert!(w.iter().all(|&v| v.abs() <= w_max + 0.13));
     }
 
     #[test]

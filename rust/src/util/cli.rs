@@ -60,7 +60,10 @@ impl Spec {
             let d = match (o.is_flag, o.default) {
                 (true, _) => String::new(),
                 (false, Some(d)) if !d.is_empty() => format!(" [default: {d}]"),
-                _ => " (required)".to_string(),
+                // empty default = optional with a context-dependent
+                // default described in the help text
+                (false, Some(_)) => String::new(),
+                (false, None) => " (required)".to_string(),
             };
             s.push_str(&format!("  --{:<22} {}{}\n", o.name, o.help, d));
         }

@@ -108,9 +108,16 @@ impl Pcg64 {
 
     /// Batched Gaussian fill: pairwise Box–Muller on the `fastmath`
     /// polynomials (`log2_fast` for the radius, `sincos_turns_fast` for
-    /// the angle), all in f32 — no libm calls, so the loop stays inline
-    /// and vectorizable.  This is the read-noise hot path of the crossbar
-    /// tile and grid kernels.
+    /// the angle), all in f32 — no libm calls.  This is the read-noise
+    /// hot path of the crossbar tile and grid kernels.
+    ///
+    /// Two-pass blocking: per block of up to 64 outputs, pass 1 runs the
+    /// inherently sequential generator chain into a raw `u64` buffer,
+    /// pass 2 applies the Box–Muller transform — whose lanes are fully
+    /// independent — over the buffer, so the transform loop carries no
+    /// loop-to-loop dependence and autovectorizes.  The draw order
+    /// (`a`, `b` per pair) and the per-element arithmetic are exactly
+    /// the pre-blocking sequence, so output is bit-identical.
     ///
     /// Stream contract: consumes exactly `2 * ceil(out.len() / 2)`
     /// `next_u64` draws (two per output pair; an odd tail costs one full
@@ -121,35 +128,28 @@ impl Pcg64 {
     /// moment/tail property suite in `rust/tests/prop_parallel_equivalence.rs`.
     pub fn fill_gaussian(&mut self, out: &mut [f32], mean: f32,
                          sigma: f32) {
-        let mut pairs = out.chunks_exact_mut(2);
-        for pair in &mut pairs {
-            let (z0, z1) = self.gauss_pair();
-            pair[0] = mean + sigma * z0;
-            pair[1] = mean + sigma * z1;
+        // Even block size: only the final block can hold an odd tail.
+        const BLOCK: usize = 64;
+        let mut raw = [0u64; BLOCK];
+        let n = out.len();
+        let mut i = 0;
+        while i < n {
+            let take = (n - i).min(BLOCK);
+            let pairs = take.div_ceil(2);
+            // Pass 1: the sequential draws (dependent generator chain).
+            for r in raw[..2 * pairs].iter_mut() {
+                *r = self.next_u64();
+            }
+            // Pass 2: independent per-pair transforms (vectorizable).
+            for p in 0..pairs {
+                let (z0, z1) = gauss_from_raw(raw[2 * p], raw[2 * p + 1]);
+                out[i + 2 * p] = mean + sigma * z0;
+                if i + 2 * p + 1 < n {
+                    out[i + 2 * p + 1] = mean + sigma * z1;
+                }
+            }
+            i += take;
         }
-        if let Some(last) = pairs.into_remainder().first_mut() {
-            let (z0, _) = self.gauss_pair();
-            *last = mean + sigma * z0;
-        }
-    }
-
-    /// One Box–Muller pair of standard normals in f32 (see
-    /// [`Pcg64::fill_gaussian`] for the stream contract).
-    #[inline]
-    fn gauss_pair(&mut self) -> (f32, f32) {
-        use crate::util::fastmath::{log2_fast, sincos_turns_fast};
-        let a = self.next_u64();
-        let b = self.next_u64();
-        // u1 ∈ (0, 1]: never zero (so the log is finite), and u1 = 1
-        // gives radius 0 — an 8.6σ tail from the 53-bit mantissa.
-        let u1 = (((a >> 11) + 1) as f64
-            * (1.0 / (1u64 << 53) as f64)) as f32;
-        // −2·ln u1 = −2·ln2·log2 u1, all non-negative.
-        let r = (-2.0 * std::f32::consts::LN_2 * log2_fast(u1)).sqrt();
-        // 24-bit turn fraction in [0, 1).
-        let t = (b >> 40) as f32 * (1.0 / (1u64 << 24) as f32);
-        let (s, c) = sincos_turns_fast(t);
-        (r * c, r * s)
     }
 
     /// Fisher–Yates shuffle.
@@ -164,6 +164,25 @@ impl Pcg64 {
     pub fn jax_key(&mut self) -> [u32; 2] {
         [self.next_u32(), self.next_u32()]
     }
+}
+
+/// One Box–Muller pair of standard normals in f32 from two raw `u64`
+/// draws — the pure-arithmetic half of [`Pcg64::fill_gaussian`]'s
+/// two-pass blocking (no generator state, so the transform loop carries
+/// no dependence between iterations).
+#[inline]
+fn gauss_from_raw(a: u64, b: u64) -> (f32, f32) {
+    use crate::util::fastmath::{log2_fast, sincos_turns_fast};
+    // u1 ∈ (0, 1]: never zero (so the log is finite), and u1 = 1
+    // gives radius 0 — an 8.6σ tail from the 53-bit mantissa.
+    let u1 = (((a >> 11) + 1) as f64
+        * (1.0 / (1u64 << 53) as f64)) as f32;
+    // −2·ln u1 = −2·ln2·log2 u1, all non-negative.
+    let r = (-2.0 * std::f32::consts::LN_2 * log2_fast(u1)).sqrt();
+    // 24-bit turn fraction in [0, 1).
+    let t = (b >> 40) as f32 * (1.0 / (1u64 << 24) as f32);
+    let (s, c) = sincos_turns_fast(t);
+    (r * c, r * s)
 }
 
 #[cfg(test)]

@@ -1106,6 +1106,743 @@ def run_fig4(o):
     }
 
 
+# -- layer-graph IR (nn::graph, crossbar::conv) ------------------------------
+
+class Geom:
+    """crossbar::conv::PatchGeom."""
+
+    def __init__(self, in_h, in_w, cin, kh, kw, cout, stride, pad):
+        self.in_h, self.in_w, self.cin = in_h, in_w, cin
+        self.kh, self.kw, self.cout = kh, kw, cout
+        self.stride, self.pad = stride, pad
+        self.oh = (in_h + 2 * pad - kh) // stride + 1
+        self.ow = (in_w + 2 * pad - kw) // stride + 1
+
+    def positions(self):
+        return self.oh * self.ow
+
+    def patch_len(self):
+        return self.kh * self.kw * self.cin
+
+    def in_len(self):
+        return self.in_h * self.in_w * self.cin
+
+    def out_len(self):
+        return self.positions() * self.cout
+
+
+def im2col(g, x, m):
+    """crossbar::conv::im2col_into (pure data movement, no RNG)."""
+    p, K = g.positions(), g.patch_len()
+    out = np.zeros(m * p * K, dtype=np.float32)
+    for s in range(m):
+        xoff = s * g.in_len()
+        r = s * p
+        for oy in range(g.oh):
+            for ox in range(g.ow):
+                base = r * K
+                idx = 0
+                for ky in range(g.kh):
+                    iy = oy * g.stride + ky - g.pad
+                    for kx in range(g.kw):
+                        ix = ox * g.stride + kx - g.pad
+                        if 0 <= iy < g.in_h and 0 <= ix < g.in_w:
+                            src = xoff + (iy * g.in_w + ix) * g.cin
+                            out[base + idx:base + idx + g.cin] = \
+                                x[src:src + g.cin]
+                        idx += g.cin
+                r += 1
+    return out
+
+
+def col2im(g, dp, m):
+    """crossbar::conv::col2im_into — adjoint scatter-add, f32 partial
+    sums in ascending patch-row then (ky, kx, ci) order."""
+    p, K = g.positions(), g.patch_len()
+    dx = np.zeros(m * g.in_len(), dtype=np.float32)
+    for s in range(m):
+        doff = s * g.in_len()
+        r = s * p
+        for oy in range(g.oh):
+            for ox in range(g.ow):
+                base = r * K
+                idx = 0
+                for ky in range(g.kh):
+                    iy = oy * g.stride + ky - g.pad
+                    for kx in range(g.kw):
+                        ix = ox * g.stride + kx - g.pad
+                        if 0 <= iy < g.in_h and 0 <= ix < g.in_w:
+                            dst = doff + (iy * g.in_w + ix) * g.cin
+                            for ci in range(g.cin):
+                                dx[dst + ci] = f32(
+                                    dx[dst + ci]
+                                    + dp[base + idx + ci])
+                        idx += g.cin
+                r += 1
+    return dx
+
+
+def resnet_spec_layers(bases, blocks, classes, permille):
+    """GraphSpec::resnet layer list (builder IR mirror)."""
+    chans = [scaled_width(b, permille) for b in bases]
+    L = [("conv", chans[0], 3, 3, 1, 1), ("relu",)]
+    for si, ch in enumerate(chans):
+        for b in range(blocks):
+            stride = 2 if (si > 0 and b == 0) else 1
+            L.append(("res", [("conv", ch, 3, 3, stride, 1), ("relu",),
+                              ("conv", ch, 3, 3, 1, 1)]))
+            L.append(("relu",))
+    L += [("gap",), ("dense", classes), ("softmax",)]
+    return L
+
+
+def shape_len(shape):
+    if shape[0] == "flat":
+        return shape[1]
+    _, h, w, c = shape
+    return h * w * c
+
+
+def plan_layer(spec, shape, weighted):
+    """GraphSpec::plan — shape inference, auto projections, DFS
+    weighted-layer indexing (body first, then projection).  Returns
+    (plan-dict, new shape)."""
+    kind = spec[0]
+    if kind == "dense":
+        k, n = shape_len(shape), spec[1]
+        widx = len(weighted)
+        weighted.append((k, n))
+        return {"t": "dense", "widx": widx, "k": k, "n": n}, ("flat", n)
+    if kind == "conv":
+        _, cout, kh, kw, stride, pad = spec
+        _, h, w, c = shape
+        g = Geom(h, w, c, kh, kw, cout, stride, pad)
+        widx = len(weighted)
+        weighted.append((g.patch_len(), cout))
+        return ({"t": "conv", "widx": widx, "g": g},
+                ("img", g.oh, g.ow, cout))
+    if kind == "relu":
+        return {"t": "relu", "len": shape_len(shape)}, shape
+    if kind == "gap":
+        _, h, w, c = shape
+        return {"t": "gap", "h": h, "w": w, "c": c}, ("flat", c)
+    if kind == "res":
+        assert spec[1], "residual block needs a non-empty body"
+        in_shape = shape
+        body = []
+        s2 = shape
+        for sp in spec[1]:
+            pl, s2 = plan_layer(sp, s2, weighted)
+            body.append(pl)
+        proj = None
+        if s2 != in_shape:
+            _, ih, iw, ic = in_shape
+            _, oh, ow, oc = s2
+            stride = -(-ih // oh)
+            g = Geom(ih, iw, ic, 1, 1, oc, stride, 0)
+            assert (g.oh, g.ow) == (oh, ow)
+            widx = len(weighted)
+            weighted.append((ic, oc))
+            proj = {"t": "conv", "widx": widx, "g": g}
+        return ({"t": "res", "body": body, "proj": proj,
+                 "in_len": shape_len(in_shape),
+                 "out_len": shape_len(s2)}, s2)
+    raise ValueError(kind)
+
+
+def plan_graph(input_shape, specs):
+    assert specs[-1][0] == "softmax"
+    weighted = []
+    shape = input_shape
+    plans = []
+    for sp in specs[:-1]:
+        pl, shape = plan_layer(sp, shape, weighted)
+        plans.append(pl)
+    if shape[0] == "flat":
+        classes = shape[1]
+    else:
+        _, h, w, c = shape
+        assert h == 1 and w == 1
+        classes = c
+    return plans, weighted, classes
+
+
+def layer_out_len(L):
+    t = L["t"]
+    if t == "dense":
+        return L["n"]
+    if t == "conv":
+        return L["g"].out_len()
+    if t == "relu":
+        return L["len"]
+    if t == "gap":
+        return L["c"]
+    return L["out_len"]
+
+
+def gap_bwd(L, d, m):
+    h, w, c = L["h"], L["w"], L["c"]
+    pp = h * w
+    inv_area = f32(f32(1.0) / f32(float(pp)))
+    dx = np.zeros(m * pp * c, dtype=np.float32)
+    for s in range(m):
+        for p_ in range(pp):
+            for j in range(c):
+                dx[s * pp * c + p_ * c + j] = f32(
+                    d[s * c + j] * inv_area)
+    return dx
+
+
+def gap_fwd(L, x, m):
+    h, w, c = L["h"], L["w"], L["c"]
+    pp = h * w
+    inv_area = f32(f32(1.0) / f32(float(pp)))
+    out = np.zeros(m * c, dtype=np.float32)
+    for s in range(m):
+        for j in range(c):
+            acc = f32(0.0)
+            for p_ in range(pp):
+                acc = f32(acc + x[s * pp * c + p_ * c + j])
+            out[s * c + j] = f32(acc * inv_area)
+    return out
+
+
+class GraphTrainer:
+    """coordinator::nettrainer::NetTrainer over nn::graph::GraphNet."""
+
+    def __init__(self, input_shape, specs, tile, data, seed, batch, lr,
+                 params, w_scale=2.0, bwd_gain=4.0):
+        plans, self.weighted, self.classes = plan_graph(input_shape,
+                                                        specs)
+        self.input_len = shape_len(input_shape)
+        self.data, self.batch = data, batch
+        self.lr = f32(lr)
+        self.gain = f32(bwd_gain)
+        self.inv_gain = f32(f32(1.0) / self.gain)
+        self.inv_m = f32(f32(1.0) / f32(float(batch)))
+        self.layers = [self._build(pl, tile, seed, params, w_scale)
+                       for pl in plans]
+        self.now = 0.0  # f64 drift clock
+        self.step = 0
+        self.losses = []
+        self.overflows = 0
+        self.eval_rounds = 0
+
+    def _build(self, pl, tile, seed, params, w_scale):
+        L = dict(pl)
+        if L["t"] in ("dense", "conv"):
+            if L["t"] == "dense":
+                k, n = L["k"], L["n"]
+            else:
+                k, n = L["g"].patch_len(), L["g"].cout
+            w_max = layer_w_max(w_scale, k)
+            ls = layer_seed(seed, L["widx"])
+            grid = Grid(k, n, tile, ls, params, w_max)
+            rng = Pcg64(ls, NN_INIT_STREAM)
+            half = f32(f32(0.5) * w_max)
+            w0 = np.array(
+                [rng.uniform_in(f32(-half), half) for _ in range(k * n)],
+                dtype=np.float32)
+            grid.program_init(w0, f32(0.0), 0)
+            L["grid"] = grid
+        elif L["t"] == "res":
+            L["body"] = [self._build(b, tile, seed, params, w_scale)
+                         for b in L["body"]]
+            if L["proj"] is not None:
+                L["proj"] = self._build(L["proj"], tile, seed, params,
+                                        w_scale)
+        return L
+
+    def weights(self):
+        return sum(k * n for (k, n) in self.weighted)
+
+    # -- forward / backward over one layer (GraphNet::forward/backward)
+
+    def fwd_layer(self, L, x, m, t_now, rnd):
+        t = L["t"]
+        if t == "dense":
+            L["input"] = np.array(x[:m * L["k"]], dtype=np.float32)
+            return L["grid"].vmm_batch(L["input"], m, t_now, rnd)
+        if t == "conv":
+            g = L["g"]
+            patches = im2col(g, x, m)
+            L["patches"] = patches
+            return L["grid"].vmm_batch(patches, m * g.positions(),
+                                       t_now, rnd)
+        if t == "relu":
+            L["z"] = np.array(x[:m * L["len"]], dtype=np.float32)
+            return np.where(L["z"] > 0.0, L["z"],
+                            f32(0.0)).astype(np.float32)
+        if t == "gap":
+            return gap_fwd(L, x, m)
+        # residual
+        cur = x
+        for bl in L["body"]:
+            cur = self.fwd_layer(bl, cur, m, t_now, rnd)
+        skip = x if L["proj"] is None else self.fwd_layer(
+            L["proj"], x, m, t_now, rnd)
+        need = m * L["out_len"]
+        return (cur[:need] + skip[:need]).astype(np.float32)
+
+    def bwd_layer(self, L, d, m, t_now, rnd, need):
+        t = L["t"]
+        if t == "dense":
+            k, n = L["k"], L["n"]
+            inp = L["input"]
+            grad = np.zeros(k * n, dtype=np.float32)
+            for i in range(k):
+                for j in range(n):
+                    acc = f32(0.0)
+                    for s in range(m):
+                        acc = f32(acc + f32(inp[s * k + i]
+                                            * d[s * n + j]))
+                    grad[i * n + j] = f32(acc * self.inv_m)
+            L["grad"] = grad
+            if need:
+                e = (d[:m * n] * self.gain).astype(np.float32)
+                dt = L["grid"].vmm_t_batch(e, m, t_now, rnd)
+                return (dt * self.inv_gain).astype(np.float32)
+            return None
+        if t == "conv":
+            g = L["g"]
+            K, co = g.patch_len(), g.cout
+            rows = m * g.positions()
+            patches = L["patches"]
+            grad = np.zeros(K * co, dtype=np.float32)
+            for ki in range(K):
+                for j in range(co):
+                    acc = f32(0.0)
+                    for r in range(rows):
+                        acc = f32(acc + f32(patches[r * K + ki]
+                                            * d[r * co + j]))
+                    grad[ki * co + j] = f32(acc * self.inv_m)
+            L["grad"] = grad
+            if need:
+                e = (d[:rows * co] * self.gain).astype(np.float32)
+                dp = L["grid"].vmm_t_batch(e, rows, t_now, rnd)
+                dx = col2im(g, dp, m)
+                return (dx * self.inv_gain).astype(np.float32)
+            return None
+        if t == "relu":
+            if need:
+                z = L["z"]
+                nlen = m * L["len"]
+                return np.where(z[:nlen] > 0.0, d[:nlen],
+                                f32(0.0)).astype(np.float32)
+            return None
+        if t == "gap":
+            if need:
+                return gap_bwd(L, d, m)
+            return None
+        # residual
+        nb = len(L["body"])
+        cur = np.array(d[:m * L["out_len"]], dtype=np.float32)
+        for i in range(nb - 1, -1, -1):
+            inner = (i > 0) or need
+            ol = layer_out_len(L["body"][i])
+            r = self.bwd_layer(L["body"][i], cur[:m * ol], m, t_now,
+                               rnd, inner)
+            if inner:
+                cur = r
+        dskip = None
+        if L["proj"] is not None:
+            dskip = self.bwd_layer(L["proj"], d, m, t_now, rnd, need)
+        if need:
+            nin = m * L["in_len"]
+            other = dskip if L["proj"] is not None else d
+            return (cur[:nin] + other[:nin]).astype(np.float32)
+        return None
+
+    def update_layer(self, L, lr, t_now, rnd):
+        if L["t"] in ("dense", "conv"):
+            self.overflows += L["grid"].apply_update(L["grad"], lr,
+                                                     t_now, rnd)
+        elif L["t"] == "res":
+            for bl in L["body"]:
+                self.update_layer(bl, lr, t_now, rnd)
+            if L["proj"] is not None:
+                self.update_layer(L["proj"], lr, t_now, rnd)
+
+    def forward(self, x, m, t_now, rnd):
+        cur = x
+        for L in self.layers:
+            cur = self.fwd_layer(L, cur, m, t_now, rnd)
+        return cur
+
+    def train_steps(self, steps):
+        classes = self.classes
+        d0 = self.input_len
+        m = self.batch
+        for _ in range(steps):
+            self.now += 0.05
+            t_now = f32(self.now)
+            rnd = self.step
+            x = np.zeros(m * d0, dtype=np.float32)
+            labels = []
+            for j in range(m):
+                idx = (self.step * m + j) % self.data.train_len
+                xv, y = self.data.sample(idx, False)
+                x[j * d0:(j + 1) * d0] = xv
+                labels.append(y)
+            logits = self.forward(x, m, t_now, rnd)
+            probs = softmax_rows(logits, m, classes)
+            self.losses.append(nll_sum(probs, labels, classes)
+                               / float(m))
+            d = np.zeros(m * classes, dtype=np.float32)
+            for s in range(m):
+                for j in range(classes):
+                    yv = f32(1.0) if labels[s] == j else f32(0.0)
+                    d[s * classes + j] = f32(probs[s * classes + j]
+                                             - yv)
+            nl = len(self.layers)
+            for i in range(nl - 1, -1, -1):
+                need = i > 0
+                ol = layer_out_len(self.layers[i])
+                r = self.bwd_layer(self.layers[i], d[:m * ol], m,
+                                   t_now, rnd, need)
+                if need:
+                    d = r
+            for L in self.layers:
+                self.update_layer(L, self.lr, t_now, rnd)
+            self.step += 1
+
+    def evaluate(self, n, t_eval):
+        classes = self.classes
+        d0 = self.input_len
+        m = self.batch
+        hits = 0
+        loss_sum = 0.0
+        done = 0
+        while done < n:
+            mb = min(m, n - done)
+            rnd = EVAL_ROUND_BASE + self.eval_rounds
+            self.eval_rounds += 1
+            x = np.zeros(mb * d0, dtype=np.float32)
+            labels = []
+            for j in range(mb):
+                xv, y = self.data.sample(done + j, True)
+                x[j * d0:(j + 1) * d0] = xv
+                labels.append(y)
+            logits = self.forward(x, mb, f32(t_eval), rnd)
+            probs = softmax_rows(logits, mb, classes)
+            loss_sum += nll_sum(probs, labels, classes)
+            for s in range(mb):
+                row = probs[s * classes:(s + 1) * classes]
+                if argmax_row(row) == labels[s]:
+                    hits += 1
+            done += mb
+        return loss_sum / float(n), hits / float(n)
+
+    def _pulses(self, L):
+        if L["t"] in ("dense", "conv"):
+            return L["grid"].total_set_pulses()
+        if L["t"] == "res":
+            total = sum(self._pulses(b) for b in L["body"])
+            if L["proj"] is not None:
+                total += self._pulses(L["proj"])
+            return total
+        return 0
+
+    def total_set_pulses(self):
+        return sum(self._pulses(L) for L in self.layers)
+
+
+class FpGraph:
+    """nn::baseline::FpGraphNet (host FP32 layer graph)."""
+
+    def __init__(self, input_shape, specs, w_scale, seed):
+        plans, self.weighted, self.classes = plan_graph(input_shape,
+                                                        specs)
+        self.input_len = shape_len(input_shape)
+        self.layers = [self._build(pl, w_scale, seed) for pl in plans]
+        self.losses = []
+        self.step = 0
+
+    def _build(self, pl, w_scale, seed):
+        L = dict(pl)
+        if L["t"] in ("dense", "conv"):
+            if L["t"] == "dense":
+                k, n = L["k"], L["n"]
+            else:
+                k, n = L["g"].patch_len(), L["g"].cout
+            w_max = layer_w_max(w_scale, k)
+            half = f32(f32(0.5) * w_max)
+            rng = Pcg64(layer_seed(seed, L["widx"]), FP_INIT_STREAM)
+            L["w"] = np.array(
+                [rng.uniform_in(f32(-half), half) for _ in range(k * n)],
+                dtype=np.float32)
+        elif L["t"] == "res":
+            L["body"] = [self._build(b, w_scale, seed)
+                         for b in L["body"]]
+            if L["proj"] is not None:
+                L["proj"] = self._build(L["proj"], w_scale, seed)
+        return L
+
+    def weights(self):
+        return sum(k * n for (k, n) in self.weighted)
+
+    def fwd_layer(self, L, x, m):
+        t = L["t"]
+        if t == "dense":
+            k, n = L["k"], L["n"]
+            L["input"] = np.array(x[:m * k], dtype=np.float32)
+            w = L["w"]
+            z = np.zeros(m * n, dtype=np.float32)
+            for s in range(m):
+                for j in range(n):
+                    acc = f32(0.0)
+                    for i in range(k):
+                        acc = f32(acc + f32(x[s * k + i] * w[i * n + j]))
+                    z[s * n + j] = acc
+            return z
+        if t == "conv":
+            g = L["g"]
+            K, co = g.patch_len(), g.cout
+            rows = m * g.positions()
+            patches = im2col(g, x, m)
+            L["patches"] = patches
+            w = L["w"]
+            z = np.zeros(rows * co, dtype=np.float32)
+            for r in range(rows):
+                for j in range(co):
+                    acc = f32(0.0)
+                    for ki in range(K):
+                        acc = f32(acc + f32(patches[r * K + ki]
+                                            * w[ki * co + j]))
+                    z[r * co + j] = acc
+            return z
+        if t == "relu":
+            L["z"] = np.array(x[:m * L["len"]], dtype=np.float32)
+            return np.where(L["z"] > 0.0, L["z"],
+                            f32(0.0)).astype(np.float32)
+        if t == "gap":
+            return gap_fwd(L, x, m)
+        cur = x
+        for bl in L["body"]:
+            cur = self.fwd_layer(bl, cur, m)
+        skip = x if L["proj"] is None else self.fwd_layer(L["proj"], x, m)
+        need = m * L["out_len"]
+        return (cur[:need] + skip[:need]).astype(np.float32)
+
+    def bwd_layer(self, L, d, m, lr, inv_m, need):
+        """Input gradient through the pre-update weights first, then
+        the fused SGD update (FpGraphNet::backward)."""
+        t = L["t"]
+        if t == "dense":
+            k, n = L["k"], L["n"]
+            w = L["w"]
+            prev = None
+            if need:
+                prev = np.zeros(m * k, dtype=np.float32)
+                for s in range(m):
+                    for i in range(k):
+                        acc = f32(0.0)
+                        for j in range(n):
+                            acc = f32(acc + f32(d[s * n + j]
+                                                * w[i * n + j]))
+                        prev[s * k + i] = acc
+            inp = L["input"]
+            for i in range(k):
+                for j in range(n):
+                    acc = f32(0.0)
+                    for s in range(m):
+                        acc = f32(acc + f32(inp[s * k + i]
+                                            * d[s * n + j]))
+                    w[i * n + j] = f32(
+                        w[i * n + j] - f32(lr * f32(acc * inv_m)))
+            return prev
+        if t == "conv":
+            g = L["g"]
+            K, co = g.patch_len(), g.cout
+            rows = m * g.positions()
+            w = L["w"]
+            prev = None
+            if need:
+                dp = np.zeros(rows * K, dtype=np.float32)
+                for r in range(rows):
+                    for ki in range(K):
+                        acc = f32(0.0)
+                        for j in range(co):
+                            acc = f32(acc + f32(d[r * co + j]
+                                                * w[ki * co + j]))
+                        dp[r * K + ki] = acc
+                prev = col2im(g, dp, m)
+            patches = L["patches"]
+            for ki in range(K):
+                for j in range(co):
+                    acc = f32(0.0)
+                    for r in range(rows):
+                        acc = f32(acc + f32(patches[r * K + ki]
+                                            * d[r * co + j]))
+                    w[ki * co + j] = f32(
+                        w[ki * co + j] - f32(lr * f32(acc * inv_m)))
+            return prev
+        if t == "relu":
+            if need:
+                z = L["z"]
+                nlen = m * L["len"]
+                return np.where(z[:nlen] > 0.0, d[:nlen],
+                                f32(0.0)).astype(np.float32)
+            return None
+        if t == "gap":
+            if need:
+                return gap_bwd(L, d, m)
+            return None
+        nb = len(L["body"])
+        cur = np.array(d[:m * L["out_len"]], dtype=np.float32)
+        for i in range(nb - 1, -1, -1):
+            inner = (i > 0) or need
+            ol = layer_out_len(L["body"][i])
+            r = self.bwd_layer(L["body"][i], cur[:m * ol], m, lr,
+                               inv_m, inner)
+            if inner:
+                cur = r
+        dskip = None
+        if L["proj"] is not None:
+            dskip = self.bwd_layer(L["proj"], d, m, lr, inv_m, need)
+        if need:
+            nin = m * L["in_len"]
+            other = dskip if L["proj"] is not None else d
+            return (cur[:nin] + other[:nin]).astype(np.float32)
+        return None
+
+    def forward(self, x, m):
+        cur = x
+        for L in self.layers:
+            cur = self.fwd_layer(L, cur, m)
+        return cur
+
+    def train_steps(self, data, steps, batch, lr):
+        lr = f32(lr)
+        d0 = self.input_len
+        classes = self.classes
+        m = batch
+        inv_m = f32(f32(1.0) / f32(float(m)))
+        for _ in range(steps):
+            x = np.zeros(m * d0, dtype=np.float32)
+            labels = []
+            for j in range(m):
+                idx = (self.step * m + j) % data.train_len
+                xv, y = data.sample(idx, False)
+                x[j * d0:(j + 1) * d0] = xv
+                labels.append(y)
+            logits = self.forward(x, m)
+            probs = softmax_rows(logits, m, classes)
+            self.losses.append(nll_sum(probs, labels, classes)
+                               / float(m))
+            d = np.zeros(m * classes, dtype=np.float32)
+            for s in range(m):
+                for j in range(classes):
+                    yv = f32(1.0) if labels[s] == j else f32(0.0)
+                    d[s * classes + j] = f32(probs[s * classes + j]
+                                             - yv)
+            nl = len(self.layers)
+            for i in range(nl - 1, -1, -1):
+                need = i > 0
+                ol = layer_out_len(self.layers[i])
+                r = self.bwd_layer(self.layers[i], d[:m * ol], m, lr,
+                                   inv_m, need)
+                if need:
+                    d = r
+            self.step += 1
+
+    def evaluate(self, data, n, batch):
+        d0 = self.input_len
+        classes = self.classes
+        hits = 0
+        loss_sum = 0.0
+        done = 0
+        while done < n:
+            mb = min(batch, n - done)
+            x = np.zeros(mb * d0, dtype=np.float32)
+            labels = []
+            for j in range(mb):
+                xv, y = data.sample(done + j, True)
+                x[j * d0:(j + 1) * d0] = xv
+                labels.append(y)
+            logits = self.forward(x, mb)
+            probs = softmax_rows(logits, mb, classes)
+            loss_sum += nll_sum(probs, labels, classes)
+            for s in range(mb):
+                row = probs[s * classes:(s + 1) * classes]
+                if argmax_row(row) == labels[s]:
+                    hits += 1
+            done += mb
+        return loss_sum / float(n), hits / float(n)
+
+
+# Mirror of the Rust golden_gridexp fig4 resnet config (tiny_resnet).
+RESNET_NN = dict(h=4, w=4, c=3, classes=3, stages=[4, 6, 8], blocks=1,
+                 widths=[500, 750, 1000, 1500], steps=3, batch=2,
+                 tile=4, eval_n=4, train_len=24, test_len=8, lr=0.08,
+                 noise=0.5, seed=42)
+
+
+# exp::gridexp::RESNET_W_SCALE — the resnet arch's weight-window scale
+# (deeper graphs need wider windows so backprop errors survive the ADC).
+RESNET_W_SCALE = 4.0
+
+
+def run_fig4_resnet(o):
+    params = Params(read_noise=True, drift=False)
+    input_shape = ("img", o["h"], o["w"], o["c"])
+    dim = o["h"] * o["w"] * o["c"]
+    rows = []
+    for wmult in o["widths"]:
+        specs = resnet_spec_layers(o["stages"], o["blocks"],
+                                   o["classes"], wmult)
+        data = Blobs(o["seed"], dim, o["classes"], o["noise"],
+                     o["train_len"], o["test_len"])
+        t = GraphTrainer(input_shape, specs, o["tile"], data, o["seed"],
+                         o["batch"], o["lr"], params,
+                         w_scale=RESNET_W_SCALE)
+        t.train_steps(o["steps"])
+        eval_loss, acc = t.evaluate(o["eval_n"], f32(t.now))
+        rows.append({
+            "series": "hic",
+            "width_permille": wmult,
+            "model_bits": t.weights() * 4,
+            "eval_acc_u6": u6(acc),
+            "eval_loss_u6": u6(eval_loss),
+            "final_train_loss_u6": u6(t.losses[-1]),
+            "overflows": t.overflows,
+            "set_pulses": t.total_set_pulses(),
+        })
+    for wmult in o["widths"]:
+        specs = resnet_spec_layers(o["stages"], o["blocks"],
+                                   o["classes"], wmult)
+        data = Blobs(o["seed"], dim, o["classes"], o["noise"],
+                     o["train_len"], o["test_len"])
+        net = FpGraph(input_shape, specs, RESNET_W_SCALE, o["seed"])
+        net.train_steps(data, o["steps"], o["batch"], o["lr"])
+        eval_loss, acc = net.evaluate(data, o["eval_n"], o["batch"])
+        rows.append({
+            "series": "fp32",
+            "width_permille": wmult,
+            "model_bits": net.weights() * 32,
+            "eval_acc_u6": u6(acc),
+            "eval_loss_u6": u6(eval_loss),
+            "final_train_loss_u6": u6(net.losses[-1]),
+        })
+    return {
+        "experiment": "fig4_grid",
+        "data": "blobs_img",
+        "data_param": dim,
+        "input": dim,
+        "classes": o["classes"],
+        "arch": "resnet",
+        "stage_bases": o["stages"],
+        "blocks_per_stage": o["blocks"],
+        "steps": o["steps"],
+        "batch": o["batch"],
+        "tile": o["tile"],
+        "eval_n": o["eval_n"],
+        "seed": o["seed"],
+        "widths_permille": o["widths"],
+        "rows": rows,
+    }
+
+
 if __name__ == "__main__":
     here = os.path.dirname(os.path.abspath(__file__))
     fig3 = jdump(run_fig3(TINY))
@@ -1120,3 +1857,7 @@ if __name__ == "__main__":
     with open(os.path.join(here, "fig4_grid.json"), "w") as f:
         f.write(fig4)
     print("fig4_grid.json:", fig4)
+    fig4r = jdump(run_fig4_resnet(RESNET_NN))
+    with open(os.path.join(here, "fig4_resnet_grid.json"), "w") as f:
+        f.write(fig4r)
+    print("fig4_resnet_grid.json:", fig4r)

@@ -17,11 +17,16 @@
 //! * a full multi-layer `NetTrainer` step (forward VMMs, transposed-VMM
 //!   backprop, per-layer hybrid updates) is bitwise identical across
 //!   worker counts {1, 2, 4};
+//! * the conv patch path — im2col gather feeding the grid VMM over
+//!   `m·P` patch rows — is bitwise identical across worker counts with
+//!   the full noisy model (the deeper conv/residual contracts live in
+//!   `rust/tests/prop_conv_equivalence.rs`);
 //! * `fill_gaussian` streams differ from the scalar `normal()` sequence
 //!   by design, so its distribution is pinned by moments, tail masses
 //!   and per-seed reproducibility over ≥ 1e5 draws.
 
 use hic_train::coordinator::nettrainer::{NetTrainer, NetTrainerOptions};
+use hic_train::crossbar::conv::{im2col_into, PatchGeom};
 use hic_train::crossbar::grid::{op_rng, CrossbarGrid, OP_INIT,
                                 OP_PROGRAM, OP_PROGRAM_INIT};
 use hic_train::crossbar::{AdcSpec, CrossbarTile, DacSpec, TilingPolicy};
@@ -219,6 +224,50 @@ fn prop_net_trainer_step_worker_invariant() {
             return Err(format!(
                 "NetTrainer diverges across workers \
                  (dims={dims:?} tile={tile} batch={batch})"));
+        }
+        Ok(())
+    });
+}
+
+/// The conv patch path: im2col (sample shards) + the patch-matrix VMM
+/// (column-strip shards over `m·P` rows) is bitwise identical across
+/// worker counts {1, 2, 4} with the full noisy device model.
+#[test]
+fn prop_patch_vmm_worker_invariant() {
+    prop("im2col + patch VMM invariant across workers", 25, |g| {
+        let geom = PatchGeom {
+            in_h: g.usize_in(3, 6),
+            in_w: g.usize_in(3, 6),
+            cin: g.usize_in(1, 3),
+            kh: 3,
+            kw: 3,
+            cout: g.usize_in(1, 4),
+            stride: g.usize_in(1, 2),
+            pad: 1,
+        };
+        let tile = g.usize_in(2, 6);
+        let m = g.usize_in(1, 3);
+        let seed = g.u64_below(1 << 32);
+        let round = g.u64_below(1 << 16);
+        let (kk, co, p) =
+            (geom.patch_len(), geom.cout, geom.positions());
+        let mut gr = grid(full_params(), HicGeometry::default(), kk, co,
+                          tile, tile, seed);
+        let w = g.vec_f32(kk * co, -0.8, 0.8);
+        gr.program_init(&w, 0.0, u64::MAX, &WorkerPool::serial());
+        let x = g.vec_f32(m * geom.in_len(), -1.0, 1.0);
+        let run = |workers: usize| {
+            let pool = WorkerPool::new(workers);
+            let mut patches = vec![0.0f32; m * p * kk];
+            im2col_into(&geom, &x, m, &pool, &mut patches);
+            let y = gr.vmm_batch(&patches, m * p, 2.0, round, &pool);
+            (patches, y)
+        };
+        let a = run(1);
+        if a != run(2) || a != run(4) {
+            return Err(format!(
+                "patch path diverges across workers (geom={geom:?} \
+                 tile={tile} m={m})"));
         }
         Ok(())
     });
