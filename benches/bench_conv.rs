@@ -1,15 +1,22 @@
 //! Conv-on-grid training benches: full `NetTrainer` steps over the
 //! ResNet-style layer graph (im2col patch lowering, per-layer grids,
 //! transposed-VMM backprop, col2im scatter, hybrid updates) across
-//! width multipliers and worker counts.
+//! width multipliers and worker counts, plus the **blocked
+//! tile-stationary patch-VMM kernels against the retained PR-4
+//! sample-major reference** on this bench's stage-1 conv shape.
 //!
-//! `BENCH_conv.json` records conv steps/sec per case plus the headline
-//! worker-scaling ratios — the evidence that the patch-strip sharding
-//! parallelizes the conv path like the dense one.
+//! `BENCH_conv.json` records conv steps/sec per case, the headline
+//! worker-scaling ratios, and the blocked-vs-sample-major patch-VMM
+//! series — the evidence that sample blocking turned the single-strip
+//! conv patch VMM into a parallel, cache-resident kernel.
 
 use hic_train::bench::Bench;
 use hic_train::coordinator::nettrainer::{NetTrainer, NetTrainerOptions};
+use hic_train::crossbar::conv::{im2col_into, PatchGeom};
+use hic_train::crossbar::grid::CrossbarGrid;
+use hic_train::crossbar::quant::{AdcSpec, DacSpec};
 use hic_train::crossbar::TilingPolicy;
+use hic_train::hic::weight::HicGeometry;
 use hic_train::nn::features::{BlobDataset, FeatureSource};
 use hic_train::nn::graph::GraphSpec;
 use hic_train::pcm::device::PcmParams;
@@ -36,6 +43,10 @@ fn trainer(width_permille: u32, workers: usize) -> NetTrainer {
         NetTrainerOptions { batch: BATCH, ..Default::default() })
 }
 
+fn pattern(len: usize) -> Vec<f32> {
+    (0..len).map(|i| (((i * 3) % 15) as f32 - 7.0) / 7.0).collect()
+}
+
 fn main() {
     let mut b = Bench::new("conv");
     // One benched element = one trained sample (batch per step).
@@ -57,12 +68,69 @@ fn main() {
             Some(elements), || t.train_steps(1));
     }
 
+    // The stage-1 body conv's patch VMM in isolation: a real im2col
+    // patch matrix (this bench's 8x8 stride-1 shape at width 1.0, cin =
+    // cout = STAGES[0]) driven through the blocked tile-stationary
+    // kernel vs the PR-4 sample-major reference.  At TILE = 32 the
+    // grid is one column strip, so the sample-major kernel serializes
+    // and the blocked one shards the m·P patch-row axis.
+    let geom = PatchGeom {
+        in_h: IMG[0], in_w: IMG[1], cin: STAGES[0],
+        kh: 3, kw: 3, cout: STAGES[0], stride: 1, pad: 1,
+    };
+    let (kk, co) = (geom.patch_len(), geom.cout);
+    let rows = geom.patch_rows(BATCH);
+    let mut grid = CrossbarGrid::new(
+        PcmParams::default(), HicGeometry::default(), kk, co,
+        TilingPolicy { tile_rows: TILE, tile_cols: TILE },
+        DacSpec::default(), AdcSpec::default(), 11);
+    grid.program_init(&pattern(kk * co), 0.0, 0, &WorkerPool::serial());
+    let x = pattern(BATCH * geom.in_len());
+    let mut patches = vec![0.0f32; rows * kk];
+    im2col_into(&geom, &x, BATCH, &WorkerPool::serial(), &mut patches);
+    let mut scratch = grid.scratch();
+    let mut out = vec![0.0f32; rows * co];
+    let pelements = (rows * kk * co) as f64;
+    let mut round = 1u64;
+    for workers in [1usize, 4] {
+        let pool = WorkerPool::new(workers);
+        b.bench_with_elements(
+            &format!("patchvmm_sample_major_{kk}x{co}_w{workers}"),
+            Some(pelements),
+            || {
+                grid.vmm_batch_sample_major_into(
+                    &patches, rows, 1.0, round, &pool, &mut scratch,
+                    &mut out);
+                round += 1;
+                std::hint::black_box(&out);
+            },
+        );
+        b.bench_with_elements(
+            &format!("patchvmm_blocked_{kk}x{co}_w{workers}"),
+            Some(pelements),
+            || {
+                grid.vmm_batch_into(&patches, rows, 1.0, round, &pool,
+                                    &mut scratch, &mut out);
+                round += 1;
+                std::hint::black_box(&out);
+            },
+        );
+    }
+
     let mut speedups = Vec::new();
+    let sm_w1 = format!("patchvmm_sample_major_{kk}x{co}_w1");
+    let bl_w1 = format!("patchvmm_blocked_{kk}x{co}_w1");
+    let sm_w4 = format!("patchvmm_sample_major_{kk}x{co}_w4");
+    let bl_w4 = format!("patchvmm_blocked_{kk}x{co}_w4");
     for (label, base, cont) in [
         ("conv_w4_vs_w1",
          "resnet_step_w1000_workers1", "resnet_step_w1000_workers4"),
         ("conv_w2_vs_w1",
          "resnet_step_w1000_workers1", "resnet_step_w1000_workers2"),
+        ("patch_blocked_vs_sample_major_w1", sm_w1.as_str(),
+         bl_w1.as_str()),
+        ("patch_blocked_vs_sample_major_w4", sm_w4.as_str(),
+         bl_w4.as_str()),
     ] {
         if let Some(s) = b.speedup(base, cont) {
             println!("[conv] {label}: {s:.2}x");

@@ -1,13 +1,18 @@
 //! Grid-engine benches: multi-tile VMM scaling across worker counts
-//! against the serial single-tile path, plus the batched Box–Muller
-//! noise fill against the scalar Box–Muller loop.
+//! against the serial single-tile path, the batched Box–Muller noise
+//! fill against the scalar Box–Muller loop, and the **blocked
+//! tile-stationary strip kernels against the retained PR-4
+//! sample-major reference** on the resnet conv patch-VMM shape
+//! (`[kh·kw·cin, cout]` grid, `m·P` patch rows — the shape where the
+//! sample-major kernel serialized on one column strip).
 //!
 //! `tile_vmm_batch16_serial_ref` replays the pre-grid cost model — one
 //! whole-matrix `CrossbarTile` with the scalar per-element `normal()`
 //! read-noise draw — on the same logical workload the 4×4 grid shards
 //! across workers.  `BENCH_grid.json` records the cases plus the
 //! headline speedups (grid@4 workers vs the serial single-tile path,
-//! and the noise-fill win).
+//! the noise-fill win, and the blocked-vs-sample-major patch-VMM
+//! series at 1 and 4 workers).
 
 use hic_train::bench::Bench;
 use hic_train::crossbar::grid::CrossbarGrid;
@@ -131,6 +136,76 @@ fn main() {
         );
     }
 
+    // The resnet conv patch-VMM shape: a [3·3·16, 16] grid driven over
+    // m·P = 8·64 patch rows (the 8x8 stride-1 stem shape of the conv
+    // bench).  One column strip -> the sample-major kernel serializes;
+    // the blocked kernel shards the patch-row axis.
+    const PK: usize = 3 * 3 * 16;
+    const PN: usize = 16;
+    const PROWS: usize = 8 * 64;
+    let pw = pattern(PK * PN);
+    let px = pattern(PROWS * PK);
+    let mut pgrid = CrossbarGrid::new(
+        params, geom, PK, PN,
+        TilingPolicy { tile_rows: TILE, tile_cols: TILE },
+        DacSpec::default(), AdcSpec::default(), 9);
+    pgrid.program_init(&pw, 0.0, 0, &WorkerPool::serial());
+    let mut pscratch = pgrid.scratch();
+    let mut pout = vec![0.0f32; PROWS * PN];
+    let pelements = (PROWS * PK * PN) as f64;
+    for workers in [1usize, 4] {
+        let pool = WorkerPool::new(workers);
+        b.bench_with_elements(
+            &format!("patchvmm_sample_major_{PK}x{PN}_w{workers}"),
+            Some(pelements),
+            || {
+                pgrid.vmm_batch_sample_major_into(
+                    &px, PROWS, 1.0, round, &pool, &mut pscratch,
+                    &mut pout);
+                round += 1;
+                std::hint::black_box(&pout);
+            },
+        );
+        b.bench_with_elements(
+            &format!("patchvmm_blocked_{PK}x{PN}_w{workers}"),
+            Some(pelements),
+            || {
+                pgrid.vmm_batch_into(&px, PROWS, 1.0, round, &pool,
+                                     &mut pscratch, &mut pout);
+                round += 1;
+                std::hint::black_box(&pout);
+            },
+        );
+    }
+    // The transposed direction on the same shape (the conv backward
+    // patch-gradient kernel).
+    let pe = pattern(PROWS * PN);
+    let mut pout_t = vec![0.0f32; PROWS * PK];
+    {
+        let pool = WorkerPool::new(4);
+        b.bench_with_elements(
+            &format!("patchvmm_t_sample_major_{PK}x{PN}_w4"),
+            Some(pelements),
+            || {
+                pgrid.vmm_t_batch_sample_major_into(
+                    &pe, PROWS, 1.0, round, &pool, &mut pscratch,
+                    &mut pout_t);
+                round += 1;
+                std::hint::black_box(&pout_t);
+            },
+        );
+        b.bench_with_elements(
+            &format!("patchvmm_t_blocked_{PK}x{PN}_w4"),
+            Some(pelements),
+            || {
+                pgrid.vmm_t_batch_into(&pe, PROWS, 1.0, round, &pool,
+                                       &mut pscratch, &mut pout_t);
+                round += 1;
+                std::hint::black_box(&pout_t);
+            },
+        );
+    }
+
     // Noise fill: scalar Box–Muller loop vs the batched fill.
     let mut noise = vec![0.0f32; 65_536];
     let mut r = Pcg64::new(3, 0);
@@ -151,6 +226,17 @@ fn main() {
         ("grid_w4_vs_w1",
          format!("grid_vmm_batch{M}_4x4_w1"),
          format!("grid_vmm_batch{M}_4x4_w4")),
+        // The acceptance series: blocked tile-stationary strips vs the
+        // PR-4 sample-major kernel on the conv patch-VMM shape.
+        ("patch_blocked_vs_sample_major_w1",
+         format!("patchvmm_sample_major_{PK}x{PN}_w1"),
+         format!("patchvmm_blocked_{PK}x{PN}_w1")),
+        ("patch_blocked_vs_sample_major_w4",
+         format!("patchvmm_sample_major_{PK}x{PN}_w4"),
+         format!("patchvmm_blocked_{PK}x{PN}_w4")),
+        ("patch_t_blocked_vs_sample_major_w4",
+         format!("patchvmm_t_sample_major_{PK}x{PN}_w4"),
+         format!("patchvmm_t_blocked_{PK}x{PN}_w4")),
         ("fill_gaussian_vs_scalar",
          "fill_normal_scalar_65536".to_string(),
          "fill_gaussian_65536".to_string()),

@@ -1,0 +1,128 @@
+#!/usr/bin/env python3
+"""Compare two in-tree bench artifacts (``BENCH_*.json``) case by case.
+
+The bench harness (``rust/src/bench``) writes one JSON document per
+suite: ``{"suite": ..., "cases": {name: {median_ns, ...}}, "speedups":
+{label: ratio}}``.  This tool prints a per-case table of the old vs new
+median wall time and the resulting speedup (``old / new`` — > 1 means
+the new run is faster), plus the delta of any named speedup series both
+artifacts share.  CI uses it to post the perf trajectory of a branch
+against the latest main-branch artifact in the job summary
+(``--markdown``).
+
+Usage:
+    python3 python/bench_diff.py OLD.json NEW.json [--markdown]
+
+Exit code 0 always (reporting tool, not a gate): regressions are for
+humans to read, goldens and property suites are the correctness gates.
+"""
+import argparse
+import json
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        doc = json.load(f)
+    for key in ("suite", "cases"):
+        if key not in doc:
+            raise ValueError(f"{path}: not a bench artifact "
+                             f"(missing '{key}')")
+    return doc
+
+
+def fmt_ns(ns):
+    if ns >= 1e9:
+        return "%.2f s" % (ns / 1e9)
+    if ns >= 1e6:
+        return "%.2f ms" % (ns / 1e6)
+    if ns >= 1e3:
+        return "%.2f us" % (ns / 1e3)
+    return "%.0f ns" % ns
+
+
+def diff_rows(old, new):
+    """(name, old_median, new_median, ratio) for shared cases, plus
+    names only one side has."""
+    shared, only_old, only_new = [], [], []
+    ocases, ncases = old["cases"], new["cases"]
+    for name in sorted(set(ocases) | set(ncases)):
+        if name in ocases and name in ncases:
+            om = float(ocases[name]["median_ns"])
+            nm = float(ncases[name]["median_ns"])
+            ratio = om / nm if nm > 0 else float("inf")
+            shared.append((name, om, nm, ratio))
+        elif name in ocases:
+            only_old.append(name)
+        else:
+            only_new.append(name)
+    return shared, only_old, only_new
+
+
+def render_text(old, new, shared, only_old, only_new):
+    lines = ["bench diff [%s]: old=%d cases, new=%d cases"
+             % (new["suite"], len(old["cases"]), len(new["cases"]))]
+    if shared:
+        width = max(len(n) for n, *_ in shared)
+        lines.append("%-*s %12s %12s %9s" % (width, "case", "old median",
+                                             "new median", "speedup"))
+        for name, om, nm, ratio in shared:
+            lines.append("%-*s %12s %12s %8.2fx"
+                         % (width, name, fmt_ns(om), fmt_ns(nm), ratio))
+    for name in only_old:
+        lines.append("only in old: %s" % name)
+    for name in only_new:
+        lines.append("only in new: %s" % name)
+    for label in sorted(set(old.get("speedups", {}))
+                        & set(new.get("speedups", {}))):
+        lines.append("series %-38s %8.2fx -> %.2fx"
+                     % (label, old["speedups"][label],
+                        new["speedups"][label]))
+    return "\n".join(lines)
+
+
+def render_markdown(old, new, shared, only_old, only_new):
+    lines = ["### Bench diff — `%s`" % new["suite"], "",
+             "| case | old median | new median | speedup |",
+             "|---|---:|---:|---:|"]
+    for name, om, nm, ratio in shared:
+        flag = "" if 0.95 <= ratio <= 1.05 else \
+            (" 🟢" if ratio > 1.05 else " 🔴")
+        lines.append("| `%s` | %s | %s | %.2fx%s |"
+                     % (name, fmt_ns(om), fmt_ns(nm), ratio, flag))
+    for name in only_old:
+        lines.append("| `%s` | — | *(removed)* | |" % name)
+    for name in only_new:
+        lines.append("| `%s` | — | *(new)* | |" % name)
+    series = sorted(set(old.get("speedups", {}))
+                    & set(new.get("speedups", {})))
+    if series:
+        lines += ["", "| speedup series | old | new |", "|---|---:|---:|"]
+        for label in series:
+            lines.append("| `%s` | %.2fx | %.2fx |"
+                         % (label, old["speedups"][label],
+                            new["speedups"][label]))
+    lines.append("")
+    return "\n".join(lines)
+
+
+def main(argv):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("old", help="baseline BENCH_*.json")
+    ap.add_argument("new", help="contender BENCH_*.json")
+    ap.add_argument("--markdown", action="store_true",
+                    help="emit a GitHub-flavored markdown table "
+                         "(for $GITHUB_STEP_SUMMARY)")
+    args = ap.parse_args(argv)
+    old, new = load(args.old), load(args.new)
+    if old["suite"] != new["suite"]:
+        print("warning: comparing different suites (%s vs %s)"
+              % (old["suite"], new["suite"]), file=sys.stderr)
+    shared, only_old, only_new = diff_rows(old, new)
+    render = render_markdown if args.markdown else render_text
+    print(render(old, new, shared, only_old, only_new))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

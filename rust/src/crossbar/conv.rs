@@ -24,6 +24,15 @@
 //! their patch matrices inside the layer state, so the training loop
 //! allocates nothing per batch.
 //!
+//! The patch matrix is where the grid's sample axis explodes: one conv
+//! layer's VMM runs over [`PatchGeom::patch_rows`]` = m·P` rows, each a
+//! "sample" of the blocked grid kernels.  The tile-stationary
+//! sample-blocked VMM strips (`crossbar::grid`) block exactly this
+//! axis — per (tile, block) the read noise of a whole block of patch
+//! rows is drawn in one fused Box–Muller pass, with each row on its own
+//! `(op, tile, sample)` RNG sub-stream, so the conv path inherits the
+//! bitwise worker-count and block-size invariance unchanged.
+//!
 //! Determinism contract of the scatter: `col2im_into` accumulates f32
 //! partial sums in ascending patch-row order, then kernel-row, then
 //! kernel-column, then channel — a pinned op order mirrored by the
@@ -71,6 +80,12 @@ impl PatchGeom {
     /// Lowered patch length (`K = kh · kw · cin` — the grid fan-in).
     pub fn patch_len(&self) -> usize {
         self.kh * self.kw * self.cin
+    }
+
+    /// Patch-matrix rows of an `m`-sample batch (`m·P` — the sample
+    /// axis the blocked grid VMM kernels block over).
+    pub fn patch_rows(&self, m: usize) -> usize {
+        m * self.positions()
     }
 
     /// Flat input activation length per sample.
@@ -196,6 +211,7 @@ mod tests {
         assert_eq!((g.out_h(), g.out_w()), (8, 8));
         assert_eq!(g.patch_len(), 27);
         assert_eq!(g.out_len(), 8 * 8 * 16);
+        assert_eq!(g.patch_rows(4), 4 * 64);
         // Stride-2 downsampling halves (floor) the extent.
         let g = geom(8, 8, 16, 3, 3, 32, 2, 1);
         assert_eq!((g.out_h(), g.out_w()), (4, 4));

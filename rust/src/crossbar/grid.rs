@@ -16,51 +16,69 @@
 //!   its tile's planes, so shards never alias; integer side-totals
 //!   (pulses, overflows, refresh counts) fold through an atomic adder
 //!   (exact: `u64` addition is commutative).
-//! * **`vmm_batch_into`** (forward): two phases.  Phase 1 evaluates
-//!   drift once per batch, one shard per tile.  Phase 2 shards by
-//!   **column strip** (all tiles of one grid column): a strip owns a
-//!   disjoint slice of output columns, walks its row-tiles top-down per
-//!   sample accumulating partial sums into the same running output, and
-//!   applies the ADC once per logical column after the last row-tile.
-//!   Row-tiles accumulating *into* the running sum (instead of
-//!   reducing independent partials) keeps the f32 addition sequence
-//!   identical to a single tile spanning the whole matrix — which is
-//!   what makes the grid bit-compatible with the serial single-tile
+//! * **`vmm_batch_into`** (forward) is **tile-stationary and
+//!   sample-blocked**: phase 1 evaluates drift once per batch, one
+//!   shard per tile; phase 2 shards by *(column strip × sample
+//!   block)* — a shard owns a disjoint `[B, strip_cols]` slice of the
+//!   output (`B =` [`CrossbarGrid::sample_block`]).  Within a shard the
+//!   loop is tile-outer: each row-tile's drifted `gp`/`gm` planes are
+//!   hoisted once, the whole block's read noise is drawn in one fused
+//!   Box–Muller pass ([`fill_gaussian_block`]: one even `2·rows·cols`
+//!   segment per sample), and a `[B, tr] × [tr, tc]` micro-kernel
+//!   accumulates the block's partial sums — so the conductance planes
+//!   cross the cache hierarchy once per (tile, block) instead of once
+//!   per (tile, sample), and the noise fill is amortized over the
+//!   block.  Per output element the f32 addition sequence is still
+//!   ascending row-tile then row (full-precision cross-row-tile
+//!   accumulation, ADC once per logical column after the last
+//!   row-tile), identical to a single tile spanning the whole matrix —
+//!   which keeps the grid bit-compatible with the serial single-tile
 //!   path in the noise-free domain.
 //! * **`vmm_t_batch_into`** (transposed, the error-backpropagation
-//!   pass): the mirror image.  Phase 1 is the same per-tile drift
-//!   evaluation; phase 2 shards by **row strip** (all tiles of one grid
-//!   row): a strip owns a disjoint slice of output *rows*, walks its
-//!   column-tiles left-to-right per sample accumulating the transposed
-//!   partial sums into the running row outputs, and applies the ADC
-//!   once per logical row after the last column-tile.  Per output row
-//!   the f32 term order is ascending logical column — identical to a
-//!   whole-matrix single tile's `vmm_t_batch_into`, so the noise-free
-//!   bit-compatibility contract extends to the backward pass.
+//!   pass): the mirror image — shard = *(row strip × sample block)*,
+//!   tile-outer over the strip's column-tiles, per output row the f32
+//!   term order is ascending logical column, ADC once per logical row
+//!   after the last column-tile.
 //! * **`drift_into`**: one shard per tile, serial deterministic gather.
+//!
+//! Both VMM kernels also hoist the input DAC: the batch's inputs
+//! (forward `x`, transposed `e`) are quantized **once** into a shared
+//! read-only scratch buffer instead of once per (sample, tile) inside
+//! every strip — `DacSpec::convert` is a pure function, so the hoist is
+//! value-neutral.
 //!
 //! # RNG stream discipline
 //!
-//! Shards never share a generator.  Every kernel invocation derives one
-//! counter-based stream per shard:
-//! `Pcg64::new(seed ⊕ round·φ, (op_tag << 32) | shard_id)` — `seed` is
-//! the grid's, `round` is a caller-supplied invocation counter (training
-//! step, probe index, …), `op_tag` separates kernel families, and
-//! `shard_id` is the tile index (state kernels), the grid column
-//! (forward VMM) or the grid **row** (transposed VMM — its own
-//! `OP_VMM_T` op stream, so a forward and a backward pass at the same
-//! `round` draw independent read noise).  Reusing a `(seed, round, op)`
-//! triple replays the same noise, so callers advance `round` between
-//! invocations.  Because a shard's stream depends only on these values
-//! — never on the worker that runs it — **all grid kernels are bitwise
-//! identical for any worker count**;
-//! `rust/tests/prop_parallel_equivalence.rs` pins this, and the
-//! noise-free equivalence against the single-tile serial path.
+//! Shards never share a generator; every stream is counter-based (see
+//! `util::rng`'s op-stream derivation):
 //!
-//! Read noise inside both VMM kernels uses the shared noisy-weight-read
-//! helper (`crossbar::tile::read_noisy_weights`: batched Box–Muller
-//! fill, G+ plane first then G−), the same sequence as
-//! `CrossbarTile::vmm_batch_into`.
+//! * state kernels draw one [`op_rng`]`(seed, round, op_tag, tile)`
+//!   stream per tile;
+//! * the blocked VMM kernels draw one
+//!   [`op_sample_rng`]`(seed, round, op_tag, tile, sample)`
+//!   **sub-stream per (op, tile, sample)** — `OP_VMM` forward,
+//!   `OP_VMM_T` transposed, so a forward and a backward pass at the
+//!   same `round` draw independent read noise.  One sample's noise for
+//!   one tile is a single even `2·rows·cols` Gaussian segment (G+
+//!   plane deviates first, then G−), applied through
+//!   `tile::read_noisy_weights_prefilled`.
+//!
+//! Because a stream depends only on these stable ids — never on the
+//! worker, the shard decomposition or the sample-block size — **all
+//! grid kernels are bitwise identical for any worker count and any
+//! `sample_block`**; `rust/tests/prop_parallel_equivalence.rs` pins
+//! both invariances plus the noise-free equivalence against the
+//! single-tile serial path.  Reusing a `(seed, round, op)` triple
+//! replays the same noise, so callers advance `round` between
+//! invocations.
+//!
+//! The pre-blocking **sample-major** kernels
+//! (`vmm_batch_sample_major_into` / `vmm_t_batch_sample_major_into`,
+//! one `op_rng` stream per strip, per-sample re-reads) are retained as
+//! the bench baseline (`BENCH_grid.json` / `BENCH_conv.json`
+//! blocked-vs-sample-major series) and as a noise-free equivalence
+//! reference; their noise streams differ from the blocked kernels by
+//! design.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -68,11 +86,14 @@ use crate::hic::weight::{HicGeometry, HicWeight};
 use crate::pcm::device::PcmParams;
 use crate::pcm::endurance::EnduranceLedger;
 use crate::util::pool::WorkerPool;
-use crate::util::rng::Pcg64;
+use crate::util::rng::{fill_gaussian_block, Pcg64};
+
+pub use crate::util::rng::{op_rng, op_sample_rng};
 
 use super::mapper::{LayerMapping, TilingPolicy};
 use super::quant::{AdcSpec, DacSpec};
-use super::tile::{read_noisy_weights, CrossbarTile};
+use super::tile::{read_noisy_weights, read_noisy_weights_prefilled,
+                  CrossbarTile};
 
 /// Kernel-family tags baked into the high bits of each shard's RNG
 /// stream id (see the module docs).
@@ -84,15 +105,11 @@ pub const OP_REFRESH: u64 = 5;
 pub const OP_PROGRAM_INIT: u64 = 6;
 pub const OP_VMM_T: u64 = 7;
 
-/// Weyl constant mixing the invocation counter into the stream seed.
-const ROUND_MIX: u64 = 0x9E37_79B9_7F4A_7C15;
-
-/// The per-shard generator: counter-based, scheduling-independent.
-#[inline]
-pub fn op_rng(seed: u64, round: u64, op: u64, shard: usize) -> Pcg64 {
-    Pcg64::new(seed ^ round.wrapping_mul(ROUND_MIX),
-               (op << 32) | shard as u64)
-}
+/// Default [`CrossbarGrid::sample_block`]: small enough that a block's
+/// noise segments stay cache-resident against common tile sizes, large
+/// enough to amortize the per-tile plane traffic and expose
+/// sample-block parallelism on single-strip (conv patch) grids.
+pub const DEFAULT_SAMPLE_BLOCK: usize = 8;
 
 /// One logical weight matrix sharded onto an R×C grid of
 /// [`CrossbarTile`]s (edge tiles sized to their used extent, so the
@@ -104,6 +121,11 @@ pub struct CrossbarGrid {
     pub dac: DacSpec,
     pub adc: AdcSpec,
     pub seed: u64,
+    /// Sample-block size `B` of the blocked VMM kernels — pure
+    /// scheduling: outputs are bitwise identical for any value ≥ 1
+    /// (per-(tile, sample) RNG sub-streams), so this is a cache/
+    /// parallelism knob, never a correctness one.
+    pub sample_block: usize,
 }
 
 /// Per-tile drifted-conductance planes (valid for one `t_now`).
@@ -112,31 +134,58 @@ struct TileDrift {
     gm: Vec<f32>,
 }
 
-/// Per-column-strip working buffers for the forward VMM shards.
-struct StripScratch {
+/// Per-shard working buffers of the VMM kernels (one per
+/// strip × sample-block shard; all buffers grow on demand and are
+/// reused across invocations).
+struct VmmShardScratch {
+    /// per-sample noisy effective-weight read of the current tile
     w: Vec<f32>,
+    /// the block's Gaussian deviates (`B` segments of `2·rows·cols`)
     noise: Vec<f32>,
-    xq: Vec<f32>,
+    /// per-sample sub-streams of the current (tile, block)
+    rngs: Vec<Pcg64>,
+    /// the shard's `[B, strip_cols]` / `[B, strip_rows]` output slice
     out: Vec<f32>,
+    /// per-tile quantized input staging (sample-major reference
+    /// kernels only — the blocked kernels read the hoisted batch DAC)
+    qbuf: Vec<f32>,
 }
 
-/// Per-row-strip working buffers for the transposed VMM shards.
-struct RowStripScratch {
-    w: Vec<f32>,
-    noise: Vec<f32>,
-    eq: Vec<f32>,
-    out: Vec<f32>,
+impl VmmShardScratch {
+    fn new() -> Self {
+        VmmShardScratch {
+            w: Vec::new(),
+            noise: Vec::new(),
+            rngs: Vec::new(),
+            out: Vec::new(),
+            qbuf: Vec::new(),
+        }
+    }
 }
 
-/// Reusable grid buffers: drift planes per tile, forward column-strip
-/// and transposed row-strip scratch, plus the per-tile scatter buffers
-/// the state kernels (`program_increments` / `apply_update`) and
-/// `drift_into` reuse — with a long-lived `GridScratch`, none of the
-/// training-loop kernels allocate per call.
+/// Grow a reusable buffer to at least `need` elements.
+#[inline]
+fn grow(buf: &mut Vec<f32>, need: usize) {
+    if buf.len() < need {
+        buf.resize(need, 0.0);
+    }
+}
+
+/// Reusable grid buffers: drift planes per tile, the strip × block
+/// shard pool of both VMM kernels, the hoisted batch DAC staging, plus
+/// the per-tile scatter buffers the state kernels
+/// (`program_increments` / `apply_update`) and `drift_into` reuse —
+/// with a long-lived `GridScratch`, none of the training-loop kernels
+/// allocate per call once warm.
 pub struct GridScratch {
     drift: Vec<TileDrift>,
-    strips: Vec<StripScratch>,
-    rstrips: Vec<RowStripScratch>,
+    /// VMM shard pool, grown to `strips × ⌈m/B⌉` on demand (shared by
+    /// the forward and transposed kernels — they never run
+    /// concurrently on one scratch)
+    shards: Vec<VmmShardScratch>,
+    /// hoisted DAC'd batch inputs (`[m, k]` forward / `[m, n]`
+    /// transposed), read-only during phase 2
+    qin: Vec<f32>,
     /// per-tile row-major submatrix buffers (scatter targets for the
     /// state kernels, decode targets for `drift_into` — tiles are
     /// sized to their used extent, so one buffer serves both roles)
@@ -158,7 +207,14 @@ impl CrossbarGrid {
                                     t.used_cols, &mut rng);
             tiles.push(CrossbarTile::new(hw, dac, adc));
         }
-        CrossbarGrid { mapping, tiles, dac, adc, seed }
+        CrossbarGrid {
+            mapping,
+            tiles,
+            dac,
+            adc,
+            seed,
+            sample_block: DEFAULT_SAMPLE_BLOCK,
+        }
     }
 
     pub fn k(&self) -> usize {
@@ -178,7 +234,9 @@ impl CrossbarGrid {
         &self.tiles[self.mapping.tile_index(gr, gc)]
     }
 
-    /// Allocate reusable buffers sized for this grid.
+    /// Allocate reusable buffers sized for this grid (the VMM shard
+    /// pool and DAC staging grow on first use — their extents depend on
+    /// the batch size).
     pub fn scratch(&self) -> GridScratch {
         let drift = self
             .tiles
@@ -188,38 +246,17 @@ impl CrossbarGrid {
                 TileDrift { gp: vec![0.0; nt], gm: vec![0.0; nt] }
             })
             .collect();
-        let tr_max = self.mapping.policy.tile_rows.min(self.mapping.k);
-        let mut strips = Vec::with_capacity(self.mapping.grid_cols());
-        for c in 0..self.mapping.grid_cols() {
-            let strip_cols =
-                self.mapping.tiles[self.mapping.tile_index(0, c)].used_cols;
-            let nmax = tr_max * strip_cols;
-            strips.push(StripScratch {
-                w: vec![0.0; nmax],
-                noise: vec![0.0; nmax],
-                xq: vec![0.0; tr_max],
-                out: Vec::new(),
-            });
-        }
-        let tc_max = self.mapping.policy.tile_cols.min(self.mapping.n);
-        let mut rstrips = Vec::with_capacity(self.mapping.grid_rows());
-        for r in 0..self.mapping.grid_rows() {
-            let strip_rows =
-                self.mapping.tiles[self.mapping.tile_index(r, 0)].used_rows;
-            let nmax = strip_rows * tc_max;
-            rstrips.push(RowStripScratch {
-                w: vec![0.0; nmax],
-                noise: vec![0.0; nmax],
-                eq: vec![0.0; tc_max],
-                out: Vec::new(),
-            });
-        }
         let subs = self
             .tiles
             .iter()
             .map(|t| vec![0.0f32; t.rows() * t.cols()])
             .collect();
-        GridScratch { drift, strips, rstrips, subs }
+        GridScratch {
+            drift,
+            shards: Vec::new(),
+            qin: Vec::new(),
+            subs,
+        }
     }
 
     // -- logical <-> tile layout ------------------------------------------
@@ -360,10 +397,23 @@ impl CrossbarGrid {
         self.gather(&scratch.subs, out);
     }
 
+    /// Evaluate both drifted conductance planes once for the batch,
+    /// tile-parallel (no RNG) — phase 1 of every VMM kernel.
+    fn drift_phase(&self, t_now: f32, pool: &WorkerPool,
+                   drift: &mut [TileDrift]) {
+        let tiles = &self.tiles;
+        pool.run(drift, |ti, d| {
+            let msb = &tiles[ti].weights.msb;
+            msb.plus.drift_into(t_now, &mut d.gp);
+            msb.minus.drift_into(t_now, &mut d.gm);
+        });
+    }
+
     /// Batched analog VMM over the whole grid (`x: [m, k]` row-major
     /// logical inputs, `out: [m, n]`), drift once per batch, fresh
-    /// per-sample read noise per tile.  See the module docs for the
-    /// sharding and RNG scheme.
+    /// per-sample read noise per tile — **tile-stationary,
+    /// sample-blocked** (see the module docs for the sharding, RNG and
+    /// bit-compatibility contracts).
     pub fn vmm_batch_into(&self, x: &[f32], m: usize, t_now: f32,
                           round: u64, pool: &WorkerPool,
                           scratch: &mut GridScratch, out: &mut [f32]) {
@@ -373,61 +423,94 @@ impl CrossbarGrid {
         assert_eq!(out.len(), m * n);
         assert_eq!(scratch.drift.len(), self.tiles.len(),
                    "scratch does not match this grid");
-        assert_eq!(scratch.strips.len(), self.mapping.grid_cols());
 
-        let GridScratch { drift, strips, .. } = scratch;
+        let GridScratch { drift, shards, qin, .. } = scratch;
         let tiles = &self.tiles;
 
-        // Phase 1: drift both conductance planes once per batch,
-        // tile-parallel (no RNG).
-        pool.run(&mut drift[..], |ti, d| {
-            let msb = &tiles[ti].weights.msb;
-            msb.plus.drift_into(t_now, &mut d.gp);
-            msb.minus.drift_into(t_now, &mut d.gm);
-        });
+        // Phase 1: drift both conductance planes once per batch.
+        self.drift_phase(t_now, pool, drift);
 
-        // Phase 2: column strips (shard = grid column).
+        // Hoisted input DAC: quantize the whole batch once (pure
+        // function of x, value-identical to the per-strip conversions
+        // it replaces).
+        grow(qin, m * k);
+        let dac = self.dac;
+        for (q, &v) in qin[..m * k].iter_mut().zip(x) {
+            *q = dac.convert(v);
+        }
+
+        // Phase 2: tile-stationary sample-blocked strips
+        // (shard = column strip × sample block).
+        let block = self.sample_block.max(1);
+        let nblocks = m.div_ceil(block);
+        let grid_c = self.mapping.grid_cols();
         let grid_r = self.mapping.grid_rows();
+        let nshards = grid_c * nblocks;
+        if shards.len() < nshards {
+            shards.resize_with(nshards, VmmShardScratch::new);
+        }
         let seed = self.seed;
         let mapping = &self.mapping;
-        let dac = self.dac;
         let adc = self.adc;
         let drift_ro: &[TileDrift] = &drift[..];
-        pool.run(&mut strips[..], |c, strip| {
+        let qin_ro: &[f32] = &qin[..m * k];
+        pool.run(&mut shards[..nshards], |sh, strip| {
+            let c = sh / nblocks;
+            let b = sh % nblocks;
+            let s0 = b * block;
+            let bs = block.min(m - s0);
             let strip_cols =
                 mapping.tiles[mapping.tile_index(0, c)].used_cols;
-            let need = m * strip_cols;
-            if strip.out.len() < need {
-                strip.out.resize(need, 0.0);
-            }
-            let mut rng = op_rng(seed, round, OP_VMM, c);
-            for s in 0..m {
-                let y = &mut strip.out
-                    [s * strip_cols..(s + 1) * strip_cols];
-                y.fill(0.0);
-                for gr in 0..grid_r {
-                    let ti = mapping.tile_index(gr, c);
-                    let tile = &tiles[ti];
-                    let (tr, tc) = (tile.rows(), tile.cols());
-                    let nt = tr * tc;
-                    let d = &drift_ro[ti];
-
-                    // Fresh stochastic read of this tile (shared
-                    // sequence: G+ plane first, then G−).
-                    read_noisy_weights(&tile.weights.msb, &d.gp, &d.gm,
-                                       &mut rng, &mut strip.noise[..nt],
-                                       &mut strip.w[..nt]);
-                    let w = &strip.w[..nt];
-
-                    // DAC this row block's inputs, accumulate row-major
-                    // into the running column sums.
-                    let (r0, _) = mapping.origin(&mapping.tiles[ti]);
-                    let xs = &x[s * k + r0..s * k + r0 + tr];
-                    let xq = &mut strip.xq[..tr];
-                    for (q, &v) in xq.iter_mut().zip(xs) {
-                        *q = dac.convert(v);
+            grow(&mut strip.out, bs * strip_cols);
+            strip.out[..bs * strip_cols].fill(0.0);
+            for gr in 0..grid_r {
+                let ti = mapping.tile_index(gr, c);
+                let tile = &tiles[ti];
+                let (tr, tc) = (tile.rows(), tile.cols());
+                let nt = tr * tc;
+                let d = &drift_ro[ti];
+                let msb = &tile.weights.msb;
+                // One fused Box–Muller pass draws the whole block's
+                // read noise for this tile: an even 2·nt segment per
+                // sample (G+ plane deviates first, then G−) from its
+                // own (op, tile, sample) sub-stream.
+                let noisy = msb.plus.params.read_noise
+                    || msb.minus.params.read_noise;
+                if noisy {
+                    grow(&mut strip.noise, bs * 2 * nt);
+                    strip.rngs.clear();
+                    strip.rngs.extend((s0..s0 + bs).map(|s| {
+                        op_sample_rng(seed, round, OP_VMM, ti, s as u64)
+                    }));
+                    fill_gaussian_block(&mut strip.rngs, 2 * nt,
+                                        &mut strip.noise[..bs * 2 * nt],
+                                        0.0, 1.0);
+                }
+                grow(&mut strip.w, nt);
+                if !noisy {
+                    // Noise-free read: identical for every sample —
+                    // materialize the plane once per (tile, shard).
+                    read_noisy_weights_prefilled(msb, &d.gp, &d.gm,
+                                                 &[],
+                                                 &mut strip.w[..nt]);
+                }
+                let (r0, _) = mapping.origin(&mapping.tiles[ti]);
+                // [B, tr] × [tr, tc] micro-kernel: per sample a fresh
+                // stochastic read, then row-major accumulation into
+                // the running column sums.
+                for i in 0..bs {
+                    let s = s0 + i;
+                    if noisy {
+                        read_noisy_weights_prefilled(
+                            msb, &d.gp, &d.gm,
+                            &strip.noise[i * 2 * nt..(i + 1) * 2 * nt],
+                            &mut strip.w[..nt]);
                     }
-                    for (r, &xv) in xq.iter().enumerate() {
+                    let w = &strip.w[..nt];
+                    let xs = &qin_ro[s * k + r0..s * k + r0 + tr];
+                    let y = &mut strip.out
+                        [i * strip_cols..(i + 1) * strip_cols];
+                    for (r, &xv) in xs.iter().enumerate() {
                         if xv == 0.0 {
                             continue;
                         }
@@ -437,25 +520,29 @@ impl CrossbarGrid {
                         }
                     }
                 }
-                // ADC once per logical column, after the last row-tile
-                // (digital accumulation at full precision across
-                // row-tiles — the modeling choice that keeps the grid
-                // bit-compatible with a whole-matrix single tile; a
-                // per-row-tile ADC is a future knob).
-                for yc in y.iter_mut() {
-                    *yc = adc.convert(*yc);
-                }
+            }
+            // ADC once per logical column per sample, after the last
+            // row-tile (digital accumulation at full precision across
+            // row-tiles — the modeling choice that keeps the grid
+            // bit-compatible with a whole-matrix single tile; a
+            // per-row-tile ADC is a future knob).
+            for yc in strip.out[..bs * strip_cols].iter_mut() {
+                *yc = adc.convert(*yc);
             }
         });
 
-        // Serial deterministic gather: strip outputs → logical [m, n].
-        for (c, strip) in strips.iter().enumerate() {
+        // Serial deterministic gather: shard outputs → logical [m, n].
+        for (sh, strip) in shards[..nshards].iter().enumerate() {
+            let c = sh / nblocks;
+            let s0 = (sh % nblocks) * block;
+            let bs = block.min(m - s0);
             let t0 = &self.mapping.tiles[self.mapping.tile_index(0, c)];
             let (_, c0) = self.mapping.origin(t0);
             let strip_cols = t0.used_cols;
-            for s in 0..m {
+            for i in 0..bs {
+                let s = s0 + i;
                 out[s * n + c0..s * n + c0 + strip_cols].copy_from_slice(
-                    &strip.out[s * strip_cols..(s + 1) * strip_cols]);
+                    &strip.out[i * strip_cols..(i + 1) * strip_cols]);
             }
         }
     }
@@ -475,9 +562,10 @@ impl CrossbarGrid {
     /// the error-backpropagation kernel: the same crossbars are driven
     /// from their columns and read out on their rows, so
     /// `out = ADC(DAC(e) @ Wᵀ)` under the full device model (drift once
-    /// per batch, fresh per-sample read noise per tile).  Sharded by
-    /// **row strip** on its own `OP_VMM_T` RNG op stream (shard id =
-    /// grid row); see the module docs for the determinism contract.
+    /// per batch, fresh per-sample read noise per tile).
+    /// Tile-stationary and sample-blocked like the forward kernel —
+    /// shard = (row strip × sample block), per-(op, tile, sample)
+    /// `OP_VMM_T` sub-streams; see the module docs.
     pub fn vmm_t_batch_into(&self, e: &[f32], m: usize, t_now: f32,
                             round: u64, pool: &WorkerPool,
                             scratch: &mut GridScratch, out: &mut [f32]) {
@@ -487,68 +575,92 @@ impl CrossbarGrid {
         assert_eq!(out.len(), m * k);
         assert_eq!(scratch.drift.len(), self.tiles.len(),
                    "scratch does not match this grid");
-        assert_eq!(scratch.rstrips.len(), self.mapping.grid_rows());
 
-        let GridScratch { drift, rstrips, .. } = scratch;
+        let GridScratch { drift, shards, qin, .. } = scratch;
         let tiles = &self.tiles;
 
-        // Phase 1: drift both conductance planes once per batch,
-        // tile-parallel (no RNG) — same pass as the forward kernel.
-        pool.run(&mut drift[..], |ti, d| {
-            let msb = &tiles[ti].weights.msb;
-            msb.plus.drift_into(t_now, &mut d.gp);
-            msb.minus.drift_into(t_now, &mut d.gm);
-        });
+        // Phase 1: drift both conductance planes once per batch.
+        self.drift_phase(t_now, pool, drift);
 
-        // Phase 2: row strips (shard = grid row).
+        // Hoisted error DAC (the backward twin of the forward hoist).
+        grow(qin, m * n);
+        let dac = self.dac;
+        for (q, &v) in qin[..m * n].iter_mut().zip(e) {
+            *q = dac.convert(v);
+        }
+
+        // Phase 2: tile-stationary sample-blocked row strips
+        // (shard = row strip × sample block).
+        let block = self.sample_block.max(1);
+        let nblocks = m.div_ceil(block);
         let grid_c = self.mapping.grid_cols();
+        let grid_r = self.mapping.grid_rows();
+        let nshards = grid_r * nblocks;
+        if shards.len() < nshards {
+            shards.resize_with(nshards, VmmShardScratch::new);
+        }
         let seed = self.seed;
         let mapping = &self.mapping;
-        let dac = self.dac;
         let adc = self.adc;
         let drift_ro: &[TileDrift] = &drift[..];
-        pool.run(&mut rstrips[..], |gr, strip| {
+        let qin_ro: &[f32] = &qin[..m * n];
+        pool.run(&mut shards[..nshards], |sh, strip| {
+            let gr = sh / nblocks;
+            let b = sh % nblocks;
+            let s0 = b * block;
+            let bs = block.min(m - s0);
             let strip_rows =
                 mapping.tiles[mapping.tile_index(gr, 0)].used_rows;
-            let need = m * strip_rows;
-            if strip.out.len() < need {
-                strip.out.resize(need, 0.0);
-            }
-            let mut rng = op_rng(seed, round, OP_VMM_T, gr);
-            for s in 0..m {
-                let y = &mut strip.out
-                    [s * strip_rows..(s + 1) * strip_rows];
-                y.fill(0.0);
-                for gc in 0..grid_c {
-                    let ti = mapping.tile_index(gr, gc);
-                    let tile = &tiles[ti];
-                    let (tr, tc) = (tile.rows(), tile.cols());
-                    let nt = tr * tc;
-                    let d = &drift_ro[ti];
-
-                    // Fresh stochastic read of this tile (shared
-                    // sequence: G+ plane first, then G−).
-                    read_noisy_weights(&tile.weights.msb, &d.gp, &d.gm,
-                                       &mut rng, &mut strip.noise[..nt],
-                                       &mut strip.w[..nt]);
-                    let w = &strip.w[..nt];
-
-                    // DAC this column block's errors, accumulate the
-                    // transposed partial sums into the running row
-                    // outputs.  Per output row the term order is
-                    // ascending logical column (gc ascending, local c
-                    // ascending) — identical to a whole-matrix single
-                    // tile, which keeps the backward pass
-                    // bit-compatible with the serial path in the
-                    // noise-free domain.
-                    let (_, c0) = mapping.origin(&mapping.tiles[ti]);
-                    let es = &e[s * n + c0..s * n + c0 + tc];
-                    let eq = &mut strip.eq[..tc];
-                    for (q, &v) in eq.iter_mut().zip(es) {
-                        *q = dac.convert(v);
+            grow(&mut strip.out, bs * strip_rows);
+            strip.out[..bs * strip_rows].fill(0.0);
+            for gc in 0..grid_c {
+                let ti = mapping.tile_index(gr, gc);
+                let tile = &tiles[ti];
+                let (tr, tc) = (tile.rows(), tile.cols());
+                let nt = tr * tc;
+                let d = &drift_ro[ti];
+                let msb = &tile.weights.msb;
+                let noisy = msb.plus.params.read_noise
+                    || msb.minus.params.read_noise;
+                if noisy {
+                    grow(&mut strip.noise, bs * 2 * nt);
+                    strip.rngs.clear();
+                    strip.rngs.extend((s0..s0 + bs).map(|s| {
+                        op_sample_rng(seed, round, OP_VMM_T, ti,
+                                      s as u64)
+                    }));
+                    fill_gaussian_block(&mut strip.rngs, 2 * nt,
+                                        &mut strip.noise[..bs * 2 * nt],
+                                        0.0, 1.0);
+                }
+                grow(&mut strip.w, nt);
+                if !noisy {
+                    // Noise-free read: identical for every sample —
+                    // materialize the plane once per (tile, shard).
+                    read_noisy_weights_prefilled(msb, &d.gp, &d.gm,
+                                                 &[],
+                                                 &mut strip.w[..nt]);
+                }
+                let (_, c0) = mapping.origin(&mapping.tiles[ti]);
+                debug_assert_eq!(tr, strip_rows);
+                // Per output row the f32 term order is ascending
+                // logical column (gc ascending, local c ascending) —
+                // identical to a whole-matrix single tile, which keeps
+                // the backward pass bit-compatible with the serial
+                // path in the noise-free domain.
+                for i in 0..bs {
+                    let s = s0 + i;
+                    if noisy {
+                        read_noisy_weights_prefilled(
+                            msb, &d.gp, &d.gm,
+                            &strip.noise[i * 2 * nt..(i + 1) * 2 * nt],
+                            &mut strip.w[..nt]);
                     }
-                    debug_assert_eq!(tr, strip_rows);
-                    for (c, &ev) in eq.iter().enumerate() {
+                    let w = &strip.w[..nt];
+                    let es = &qin_ro[s * n + c0..s * n + c0 + tc];
+                    let y = &mut strip.out
+                        [i * strip_rows..(i + 1) * strip_rows];
+                    for (c, &ev) in es.iter().enumerate() {
                         if ev == 0.0 {
                             continue;
                         }
@@ -557,24 +669,27 @@ impl CrossbarGrid {
                         }
                     }
                 }
-                // ADC once per logical row, after the last column-tile
-                // (digital accumulation at full precision across
-                // column-tiles, mirroring the forward kernel's
-                // once-per-column ADC).
-                for yr in y.iter_mut() {
-                    *yr = adc.convert(*yr);
-                }
+            }
+            // ADC once per logical row per sample, after the last
+            // column-tile (mirroring the forward kernel's
+            // once-per-column ADC).
+            for yr in strip.out[..bs * strip_rows].iter_mut() {
+                *yr = adc.convert(*yr);
             }
         });
 
-        // Serial deterministic gather: strip outputs → logical [m, k].
-        for (gr, strip) in rstrips.iter().enumerate() {
+        // Serial deterministic gather: shard outputs → logical [m, k].
+        for (sh, strip) in shards[..nshards].iter().enumerate() {
+            let gr = sh / nblocks;
+            let s0 = (sh % nblocks) * block;
+            let bs = block.min(m - s0);
             let t0 = &self.mapping.tiles[self.mapping.tile_index(gr, 0)];
             let (r0, _) = self.mapping.origin(t0);
             let strip_rows = t0.used_rows;
-            for s in 0..m {
+            for i in 0..bs {
+                let s = s0 + i;
                 out[s * k + r0..s * k + r0 + strip_rows].copy_from_slice(
-                    &strip.out[s * strip_rows..(s + 1) * strip_rows]);
+                    &strip.out[i * strip_rows..(i + 1) * strip_rows]);
             }
         }
     }
@@ -587,6 +702,179 @@ impl CrossbarGrid {
         self.vmm_t_batch_into(e, m, t_now, round, pool, &mut scratch,
                               &mut out);
         out
+    }
+
+    // -- sample-major reference kernels ------------------------------------
+
+    /// The PR-4 **sample-major** forward kernel, retained as the bench
+    /// baseline of the blocked-vs-sample-major comparison series and as
+    /// a noise-free equivalence reference: one `op_rng` stream per
+    /// column strip, per-sample re-draw of every tile's read noise
+    /// through the streaming `read_noisy_weights`, per-(sample, tile)
+    /// input DAC.  Noise streams differ from the blocked kernel by
+    /// design; in the noise-free domain outputs are bit-identical.
+    pub fn vmm_batch_sample_major_into(&self, x: &[f32], m: usize,
+                                       t_now: f32, round: u64,
+                                       pool: &WorkerPool,
+                                       scratch: &mut GridScratch,
+                                       out: &mut [f32]) {
+        let k = self.k();
+        let n = self.n();
+        assert_eq!(x.len(), m * k);
+        assert_eq!(out.len(), m * n);
+        assert_eq!(scratch.drift.len(), self.tiles.len(),
+                   "scratch does not match this grid");
+
+        let GridScratch { drift, shards, .. } = scratch;
+        let tiles = &self.tiles;
+        self.drift_phase(t_now, pool, drift);
+
+        let grid_c = self.mapping.grid_cols();
+        let grid_r = self.mapping.grid_rows();
+        if shards.len() < grid_c {
+            shards.resize_with(grid_c, VmmShardScratch::new);
+        }
+        let seed = self.seed;
+        let mapping = &self.mapping;
+        let dac = self.dac;
+        let adc = self.adc;
+        let drift_ro: &[TileDrift] = &drift[..];
+        pool.run(&mut shards[..grid_c], |c, strip| {
+            let strip_cols =
+                mapping.tiles[mapping.tile_index(0, c)].used_cols;
+            grow(&mut strip.out, m * strip_cols);
+            let mut rng = op_rng(seed, round, OP_VMM, c);
+            for s in 0..m {
+                let y = &mut strip.out
+                    [s * strip_cols..(s + 1) * strip_cols];
+                y.fill(0.0);
+                for gr in 0..grid_r {
+                    let ti = mapping.tile_index(gr, c);
+                    let tile = &tiles[ti];
+                    let (tr, tc) = (tile.rows(), tile.cols());
+                    let nt = tr * tc;
+                    let d = &drift_ro[ti];
+                    grow(&mut strip.w, nt);
+                    grow(&mut strip.noise, nt);
+                    read_noisy_weights(&tile.weights.msb, &d.gp, &d.gm,
+                                       &mut rng, &mut strip.noise[..nt],
+                                       &mut strip.w[..nt]);
+                    let (r0, _) = mapping.origin(&mapping.tiles[ti]);
+                    let xs = &x[s * k + r0..s * k + r0 + tr];
+                    grow(&mut strip.qbuf, tr);
+                    for (q, &v) in strip.qbuf[..tr].iter_mut().zip(xs) {
+                        *q = dac.convert(v);
+                    }
+                    let w = &strip.w[..nt];
+                    for (r, &xv) in strip.qbuf[..tr].iter().enumerate() {
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        let row = &w[r * tc..(r + 1) * tc];
+                        for (yc, &wc) in y.iter_mut().zip(row) {
+                            *yc += xv * wc;
+                        }
+                    }
+                }
+                for yc in y.iter_mut() {
+                    *yc = adc.convert(*yc);
+                }
+            }
+        });
+
+        for (c, strip) in shards[..grid_c].iter().enumerate() {
+            let t0 = &self.mapping.tiles[self.mapping.tile_index(0, c)];
+            let (_, c0) = self.mapping.origin(t0);
+            let strip_cols = t0.used_cols;
+            for s in 0..m {
+                out[s * n + c0..s * n + c0 + strip_cols].copy_from_slice(
+                    &strip.out[s * strip_cols..(s + 1) * strip_cols]);
+            }
+        }
+    }
+
+    /// The PR-4 **sample-major** transposed kernel (see
+    /// [`CrossbarGrid::vmm_batch_sample_major_into`]): one `op_rng`
+    /// stream per row strip, per-sample re-reads, per-(sample, tile)
+    /// error DAC.
+    pub fn vmm_t_batch_sample_major_into(&self, e: &[f32], m: usize,
+                                         t_now: f32, round: u64,
+                                         pool: &WorkerPool,
+                                         scratch: &mut GridScratch,
+                                         out: &mut [f32]) {
+        let k = self.k();
+        let n = self.n();
+        assert_eq!(e.len(), m * n);
+        assert_eq!(out.len(), m * k);
+        assert_eq!(scratch.drift.len(), self.tiles.len(),
+                   "scratch does not match this grid");
+
+        let GridScratch { drift, shards, .. } = scratch;
+        let tiles = &self.tiles;
+        self.drift_phase(t_now, pool, drift);
+
+        let grid_c = self.mapping.grid_cols();
+        let grid_r = self.mapping.grid_rows();
+        if shards.len() < grid_r {
+            shards.resize_with(grid_r, VmmShardScratch::new);
+        }
+        let seed = self.seed;
+        let mapping = &self.mapping;
+        let dac = self.dac;
+        let adc = self.adc;
+        let drift_ro: &[TileDrift] = &drift[..];
+        pool.run(&mut shards[..grid_r], |gr, strip| {
+            let strip_rows =
+                mapping.tiles[mapping.tile_index(gr, 0)].used_rows;
+            grow(&mut strip.out, m * strip_rows);
+            let mut rng = op_rng(seed, round, OP_VMM_T, gr);
+            for s in 0..m {
+                let y = &mut strip.out
+                    [s * strip_rows..(s + 1) * strip_rows];
+                y.fill(0.0);
+                for gc in 0..grid_c {
+                    let ti = mapping.tile_index(gr, gc);
+                    let tile = &tiles[ti];
+                    let (tr, tc) = (tile.rows(), tile.cols());
+                    let nt = tr * tc;
+                    let d = &drift_ro[ti];
+                    grow(&mut strip.w, nt);
+                    grow(&mut strip.noise, nt);
+                    read_noisy_weights(&tile.weights.msb, &d.gp, &d.gm,
+                                       &mut rng, &mut strip.noise[..nt],
+                                       &mut strip.w[..nt]);
+                    let (_, c0) = mapping.origin(&mapping.tiles[ti]);
+                    let es = &e[s * n + c0..s * n + c0 + tc];
+                    grow(&mut strip.qbuf, tc);
+                    for (q, &v) in strip.qbuf[..tc].iter_mut().zip(es) {
+                        *q = dac.convert(v);
+                    }
+                    debug_assert_eq!(tr, strip_rows);
+                    let w = &strip.w[..nt];
+                    for (c, &ev) in strip.qbuf[..tc].iter().enumerate() {
+                        if ev == 0.0 {
+                            continue;
+                        }
+                        for (r, yr) in y.iter_mut().enumerate() {
+                            *yr += ev * w[r * tc + c];
+                        }
+                    }
+                }
+                for yr in y.iter_mut() {
+                    *yr = adc.convert(*yr);
+                }
+            }
+        });
+
+        for (gr, strip) in shards[..grid_r].iter().enumerate() {
+            let t0 = &self.mapping.tiles[self.mapping.tile_index(gr, 0)];
+            let (r0, _) = self.mapping.origin(t0);
+            let strip_rows = t0.used_rows;
+            for s in 0..m {
+                out[s * k + r0..s * k + r0 + strip_rows].copy_from_slice(
+                    &strip.out[s * strip_rows..(s + 1) * strip_rows]);
+            }
+        }
     }
 
     // -- accounting --------------------------------------------------------
@@ -665,17 +953,18 @@ mod tests {
         }
     }
 
+    fn noisy_grid() -> CrossbarGrid {
+        let mut g = CrossbarGrid::new(
+            PcmParams::default(), HicGeometry::default(), 12, 9,
+            TilingPolicy { tile_rows: 5, tile_cols: 4 },
+            DacSpec::default(), AdcSpec::default(), 21);
+        g.program_init(&pattern(12, 9), 0.0, 7, &WorkerPool::serial());
+        g
+    }
+
     #[test]
     fn vmm_t_worker_invariant_smoke() {
-        let params = PcmParams::default();
-        let g = {
-            let mut g = CrossbarGrid::new(
-                params, HicGeometry::default(), 12, 9,
-                TilingPolicy { tile_rows: 5, tile_cols: 4 },
-                DacSpec::default(), AdcSpec::default(), 21);
-            g.program_init(&pattern(12, 9), 0.0, 7, &WorkerPool::serial());
-            g
-        };
+        let g = noisy_grid();
         let m = 3;
         let e: Vec<f32> =
             (0..m * 9).map(|i| ((i % 7) as f32 - 3.0) / 4.0).collect();
@@ -692,15 +981,7 @@ mod tests {
     #[test]
     fn vmm_worker_invariant_smoke() {
         // Full noisy params: the parallel schedule must not change a bit.
-        let params = PcmParams::default();
-        let g = {
-            let mut g = CrossbarGrid::new(
-                params, HicGeometry::default(), 12, 9,
-                TilingPolicy { tile_rows: 5, tile_cols: 4 },
-                DacSpec::default(), AdcSpec::default(), 21);
-            g.program_init(&pattern(12, 9), 0.0, 7, &WorkerPool::serial());
-            g
-        };
+        let g = noisy_grid();
         let m = 3;
         let x: Vec<f32> =
             (0..m * 12).map(|i| ((i % 9) as f32 - 4.0) / 4.0).collect();
@@ -710,6 +991,70 @@ mod tests {
         // A different round draws different noise.
         let y3 = g.vmm_batch(&x, m, 2.0, 6, &WorkerPool::new(1));
         assert_ne!(y1, y3);
+    }
+
+    #[test]
+    fn vmm_block_size_invariant_smoke() {
+        // The sample-block size is pure scheduling: any B produces the
+        // same bits, in both VMM directions, at any worker count.
+        let mut g = noisy_grid();
+        let m = 5;
+        let x: Vec<f32> =
+            (0..m * 12).map(|i| ((i % 9) as f32 - 4.0) / 4.0).collect();
+        let e: Vec<f32> =
+            (0..m * 9).map(|i| ((i % 7) as f32 - 3.0) / 4.0).collect();
+        g.sample_block = 1;
+        let y_fwd = g.vmm_batch(&x, m, 2.0, 5, &WorkerPool::new(2));
+        let y_bwd = g.vmm_t_batch(&e, m, 2.0, 5, &WorkerPool::new(2));
+        for b in [2usize, 3, 8, 64] {
+            g.sample_block = b;
+            for workers in [1usize, 4] {
+                let pool = WorkerPool::new(workers);
+                assert_eq!(g.vmm_batch(&x, m, 2.0, 5, &pool), y_fwd,
+                           "fwd B={b} workers={workers}");
+                assert_eq!(g.vmm_t_batch(&e, m, 2.0, 5, &pool), y_bwd,
+                           "bwd B={b} workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn sample_major_reference_matches_blocked_noise_free() {
+        // With read noise off neither kernel consumes RNG, so the
+        // retained PR-4 reference and the blocked kernel agree bit for
+        // bit in both directions.
+        let params = PcmParams {
+            nonlinear: false,
+            write_noise: false,
+            read_noise: false,
+            drift: true,
+            drift_nu_sigma: 0.0,
+            ..Default::default()
+        };
+        let mut g = CrossbarGrid::new(
+            params, ideal_geom(), 11, 7,
+            TilingPolicy { tile_rows: 4, tile_cols: 3 },
+            DacSpec::default(), AdcSpec::default(), 13);
+        let pool = WorkerPool::new(4);
+        g.program_init(&pattern(11, 7), 0.0, 0, &pool);
+        let mut scratch = g.scratch();
+        let m = 4;
+        let x: Vec<f32> =
+            (0..m * 11).map(|i| ((i % 9) as f32 - 4.0) / 4.0).collect();
+        let e: Vec<f32> =
+            (0..m * 7).map(|i| ((i % 5) as f32 - 2.0) / 3.0).collect();
+        let mut a = vec![0.0f32; m * 7];
+        let mut b = vec![0.0f32; m * 7];
+        g.vmm_batch_into(&x, m, 2.0, 3, &pool, &mut scratch, &mut a);
+        g.vmm_batch_sample_major_into(&x, m, 2.0, 3, &pool,
+                                      &mut scratch, &mut b);
+        assert_eq!(a, b);
+        let mut at = vec![0.0f32; m * 11];
+        let mut bt = vec![0.0f32; m * 11];
+        g.vmm_t_batch_into(&e, m, 2.0, 3, &pool, &mut scratch, &mut at);
+        g.vmm_t_batch_sample_major_into(&e, m, 2.0, 3, &pool,
+                                        &mut scratch, &mut bt);
+        assert_eq!(at, bt);
     }
 
     #[test]

@@ -18,12 +18,14 @@
 //!   noisy-weight-read helper, the single in-tree copy of the
 //!   DAC/read/MAC/ADC weight-read sequence.
 //! * [`grid`] — the sharded multi-tile engine: one logical weight matrix
-//!   on an R×C grid of tiles, kernels run tile- / column-strip-parallel
-//!   (forward VMM) / row-strip-parallel (transposed VMM, the
-//!   error-backpropagation pass) on a `util::pool::WorkerPool` with
-//!   counter-based per-shard RNG streams (bitwise identical for any
-//!   worker count; bit-compatible with the serial single-tile path in
-//!   the noise-free domain)
+//!   on an R×C grid of tiles.  State kernels run tile-parallel; the
+//!   forward and transposed VMMs are **tile-stationary, sample-blocked**
+//!   strip kernels (shard = column/row strip × sample block, drift
+//!   planes hoisted per (tile, block), one fused Box–Muller noise fill
+//!   per block, hoisted batch DAC) with counter-based per-shard and
+//!   per-(op, tile, sample) RNG streams — bitwise identical for any
+//!   worker count and any sample-block size, bit-compatible with the
+//!   serial single-tile path in the noise-free domain
 //! * [`conv`] — im2col/col2im patch lowering for convolution-on-grid:
 //!   sample-sharded, RNG-free patch gather/scatter kernels around the
 //!   grid VMMs, so a conv layer is one `[kh·kw·cin, cout]` analog VMM

@@ -61,12 +61,16 @@ pub struct TileScratch {
 /// conductance planes (valid for the invocation's `t_now`); `noise` is a
 /// same-length deviate buffer.
 ///
-/// This is the **single in-tree copy** of the noisy-weight-read sequence
-/// shared by [`CrossbarTile::vmm_batch_into`], the grid's column-strip
-/// forward kernel and the row-strip transposed kernel
-/// (`CrossbarGrid::{vmm_batch_into, vmm_t_batch_into}`) — the RNG draw
-/// order (G+ plane, then G−, per sample) is part of the grid determinism
-/// contract and of the golden oracle mirror, so keep them in sync.
+/// This draw-a-plane-then-apply sequence is shared by
+/// [`CrossbarTile::vmm_batch_into`], [`CrossbarTile::vmm_t_batch_into`]
+/// and the grid's sample-major reference kernels; the blocked
+/// tile-stationary grid kernels draw the same deviates up front (one
+/// fused fill per sample block, see
+/// [`crate::util::rng::fill_gaussian_block`]) and apply them through
+/// [`read_noisy_weights_prefilled`].  The per-plane arithmetic (G+
+/// first, then G−, clamp, differential scale) is part of the grid
+/// determinism contract and of the golden oracle mirror, so keep all
+/// three in sync.
 pub(crate) fn read_noisy_weights(msb: &DifferentialPair, gp: &[f32],
                                  gm: &[f32], rng: &mut Pcg64,
                                  noise: &mut [f32], w: &mut [f32]) {
@@ -88,6 +92,48 @@ pub(crate) fn read_noisy_weights(msb: &DifferentialPair, gp: &[f32],
     if noise_m {
         rng.fill_gaussian(noise, 0.0, 1.0);
         for ((wv, &g), &z) in w.iter_mut().zip(gm).zip(noise.iter()) {
+            *wv = (*wv - (g + sigma_m * z).clamp(0.0, 1.0)) * scale;
+        }
+    } else {
+        for (wv, &g) in w.iter_mut().zip(gm) {
+            *wv = (*wv - g.clamp(0.0, 1.0)) * scale;
+        }
+    }
+}
+
+/// Multi-sample variant of the noisy read: apply **pre-drawn** deviates
+/// to the drifted planes.  `noise` holds this sample's even-length
+/// `2·len` segment — G+ plane deviates first (`noise[..len]`), then G−
+/// (`noise[len..]`) — drawn by the caller from the sample's
+/// `(op, tile, sample)` sub-stream, typically as one fused
+/// [`crate::util::rng::fill_gaussian_block`] pass over a whole sample
+/// block.  The per-element arithmetic is exactly
+/// [`read_noisy_weights`]'s, so blocked and sample-major reads agree on
+/// identical deviates; with read noise off `noise` may be empty (no
+/// deviates are consumed, matching the noise-free RNG contract).
+pub(crate) fn read_noisy_weights_prefilled(msb: &DifferentialPair,
+                                           gp: &[f32], gm: &[f32],
+                                           noise: &[f32],
+                                           w: &mut [f32]) {
+    let nt = w.len();
+    let (noise_p, sigma_p) =
+        (msb.plus.params.read_noise, msb.plus.params.read_sigma);
+    let (noise_m, sigma_m) =
+        (msb.minus.params.read_noise, msb.minus.params.read_sigma);
+    let scale = msb.g_to_w(1.0);
+    if noise_p {
+        for ((wv, &g), &z) in w.iter_mut().zip(gp).zip(&noise[..nt]) {
+            *wv = (g + sigma_p * z).clamp(0.0, 1.0);
+        }
+    } else {
+        for (wv, &g) in w.iter_mut().zip(gp) {
+            *wv = g.clamp(0.0, 1.0);
+        }
+    }
+    if noise_m {
+        for ((wv, &g), &z) in
+            w.iter_mut().zip(gm).zip(&noise[nt..2 * nt])
+        {
             *wv = (*wv - (g + sigma_m * z).clamp(0.0, 1.0)) * scale;
         }
     } else {
@@ -401,6 +447,41 @@ mod tests {
         tile.vmm_batch(&x, m, 0.0, &mut ra);
         tile.vmm_t_batch(&e, m, 0.0, &mut rb);
         assert_eq!(ra.next_u64(), rb.next_u64());
+    }
+
+    #[test]
+    fn prefilled_read_matches_streaming_read_on_even_tiles() {
+        // For even tile sizes one 2·nt fill equals two nt fills from
+        // the same stream (Box–Muller pairing never crosses the plane
+        // boundary), so the prefilled and streaming reads must agree
+        // bit for bit on identical deviates.
+        let rows = 4;
+        let cols = 4;
+        let nt = rows * cols;
+        let mut rng = Pcg64::new(31, 0);
+        let geom = HicGeometry { stochastic_rounding: false,
+                                 ..Default::default() };
+        let params = PcmParams { nonlinear: false, drift: false,
+                                 ..Default::default() };
+        let mut hw = HicWeight::new(params, geom, rows, cols, &mut rng);
+        hw.program_init(&vec![0.3; nt], 0.0, &mut rng);
+        let mut gp = vec![0.0f32; nt];
+        let mut gm = vec![0.0f32; nt];
+        hw.msb.plus.drift_into(0.0, &mut gp);
+        hw.msb.minus.drift_into(0.0, &mut gm);
+
+        let mut deviates = vec![0.0f32; 2 * nt];
+        Pcg64::new(77, 5).fill_gaussian(&mut deviates, 0.0, 1.0);
+        let mut w_pre = vec![0.0f32; nt];
+        read_noisy_weights_prefilled(&hw.msb, &gp, &gm, &deviates,
+                                     &mut w_pre);
+
+        let mut stream = Pcg64::new(77, 5);
+        let mut noise = vec![0.0f32; nt];
+        let mut w_seq = vec![0.0f32; nt];
+        read_noisy_weights(&hw.msb, &gp, &gm, &mut stream, &mut noise,
+                           &mut w_seq);
+        assert_eq!(w_pre, w_seq);
     }
 
     #[test]

@@ -352,6 +352,24 @@ impl Default for NnExpOptions {
 }
 
 impl NnExpOptions {
+    /// Scale the resnet sweep to the paper's full ResNet-32 / CIFAR-10
+    /// shape (CLI `--long-run`): 5 residual blocks per stage (the
+    /// paper's 6·5 + 2 weighted layers, plus the 1×1 skip projections)
+    /// on unpooled 32×32×3 synthetic CIFAR inputs.  Stage channel
+    /// bases, widths, steps and batch stay caller-controlled — the
+    /// flag pins the *shape*, the smoke configs pin the budget.
+    /// Errors unless the resnet arch is selected.
+    pub fn apply_long_run(&mut self) -> Result<()> {
+        match self.arch {
+            NnArch::Resnet { stages, .. } => {
+                self.arch = NnArch::Resnet { stages, blocks: 5 };
+                self.data = NnExpData::Cifar { pool: 1 };
+                Ok(())
+            }
+            NnArch::Mlp => bail!("--long-run needs --arch resnet"),
+        }
+    }
+
     pub fn pool(&self) -> WorkerPool {
         if self.workers == 0 {
             WorkerPool::from_env()
@@ -734,6 +752,30 @@ mod tests {
             .unwrap()
             .to_string();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn long_run_scales_to_the_paper_shape() {
+        // Mlp arch: refused.
+        let mut mlp = tiny_nn();
+        assert!(mlp.apply_long_run().is_err());
+        // Resnet arch: 5 blocks per stage on unpooled 32x32x3 CIFAR.
+        let mut opts = NnExpOptions {
+            arch: NnArch::Resnet { stages: [16, 32, 64], blocks: 1 },
+            data: NnExpData::Cifar { pool: 4 },
+            ..NnExpOptions::default()
+        };
+        opts.apply_long_run().unwrap();
+        assert!(matches!(opts.arch,
+                         NnArch::Resnet { blocks: 5,
+                                          stages: [16, 32, 64] }));
+        assert!(matches!(opts.data, NnExpData::Cifar { pool: 1 }));
+        assert_eq!(opts.input_shape(),
+                   ActShape::Img { h: 32, w: 32, c: 3 });
+        // ResNet-32: stem + 6·5 body convs + dense head = the paper's
+        // 32 weighted layers, plus the two 1x1 skip projections.
+        let plan = opts.graph_spec(1000).unwrap().plan();
+        assert_eq!(plan.weighted.len(), 34);
     }
 
     #[test]

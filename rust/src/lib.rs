@@ -27,8 +27,10 @@
 //! once-per-batch drift evaluation and fresh per-sample read noise
 //! (batched Box–Muller fill); [`crossbar::CrossbarGrid`] shards one
 //! logical weight matrix across an R×C tile grid and runs the kernels
-//! tile-parallel on a [`util::pool::WorkerPool`] with counter-based
-//! per-shard RNG streams (bitwise identical for any worker count); the
+//! tile-parallel on a [`util::pool::WorkerPool`] — the VMMs as blocked
+//! tile-stationary strip kernels — with counter-based per-shard and
+//! per-(op, tile, sample) RNG streams (bitwise identical for any
+//! worker count and any sample-block size); the
 //! [`coordinator`] and [`exp`] analyses consume the same planes for
 //! endurance/refresh accounting.  The scalar [`pcm::PcmDevice`] model
 //! remains the statistical reference path, pinned against the planar

@@ -73,7 +73,8 @@ fn print_usage() {
          path trains multi-layer networks with per-layer crossbar\n\
          grids and transposed-VMM backprop — dense stacks (--arch mlp)\n\
          or conv/residual ResNet stages via im2col patch lowering\n\
-         (--arch resnet).\n\
+         (--arch resnet; --long-run = the paper's full ResNet-32 /\n\
+         CIFAR-10 shape).\n\
          run any subcommand with --help for its options"
     );
 }
@@ -274,6 +275,10 @@ fn cmd_fig4(args: &[String]) -> Result<()> {
         .opt("nn-blocks", "1",
              "[device-grid] residual blocks per stage (resnet; \
               ResNet-32 = 5)")
+        .flag("long-run",
+              "[device-grid] scale --arch resnet to the paper's full \
+               ResNet-32 / CIFAR-10 shape (5 blocks per stage, \
+               unpooled 32x32x3 inputs)")
         .opt("widths", "0.5,0.75,1.0,1.5",
              "[device-grid] width multipliers")
         .opt("nn-steps", "150", "[device-grid] training steps")
@@ -384,7 +389,7 @@ fn parse_nn_opts(m: &hic_train::util::cli::Matches)
             bail!("--{key} must be >= 1");
         }
     }
-    Ok(NnExpOptions {
+    let mut opts = NnExpOptions {
         data,
         arch,
         hidden_base,
@@ -403,7 +408,11 @@ fn parse_nn_opts(m: &hic_train::util::cli::Matches)
         workers: m.usize("workers")?,
         out_dir: PathBuf::from(m.str("out")?),
         ..Default::default()
-    })
+    };
+    if m.flag("long-run") {
+        opts.apply_long_run()?;
+    }
+    Ok(opts)
 }
 
 fn cmd_fig5(args: &[String]) -> Result<()> {

@@ -28,10 +28,12 @@
 //!   same hybrid LSB/MSB update.
 //!
 //! RNG op-stream assignment: the patch kernels consume no RNG, and the
-//! patch-matrix VMM is one grid invocation (shard = column strip /
-//! row strip on the grid's `OP_VMM` / `OP_VMM_T` streams), so the grid
-//! determinism contract — bitwise identical for any worker count —
-//! extends to the conv path unchanged
+//! patch-matrix VMM is one grid invocation of the tile-stationary
+//! sample-blocked strips (shard = column/row strip × sample block, one
+//! `(op, tile, sample)` read-noise sub-stream per patch row on the
+//! grid's `OP_VMM` / `OP_VMM_T` op tags), so the grid determinism
+//! contract — bitwise identical for any worker count and any
+//! sample-block size — extends to the conv path unchanged
 //! (`rust/tests/prop_conv_equivalence.rs`).  All buffers (patch
 //! matrices, activation caches, deltas) live in the layer state and are
 //! reused across steps: the training loop allocates nothing per batch
@@ -490,8 +492,9 @@ impl ConvLayer {
 
     fn forward(&mut self, x: &[f32], m: usize, ctx: &FwdCtx,
                out: &mut Vec<f32>) {
-        let (p, k) = (self.geom.positions(), self.geom.patch_len());
-        let rows = m * p;
+        let k = self.geom.patch_len();
+        // The blocked grid kernel treats every patch row as a sample.
+        let rows = self.geom.patch_rows(m);
         ensure(&mut self.patches, rows * k);
         im2col_into(&self.geom, &x[..m * self.geom.in_len()], m,
                     ctx.pool, &mut self.patches[..rows * k]);
@@ -504,9 +507,9 @@ impl ConvLayer {
 
     fn backward(&mut self, d_out: &[f32], m: usize, ctx: &BwdCtx,
                 d_in: &mut Vec<f32>, need_input_grad: bool) {
-        let (p, k) = (self.geom.positions(), self.geom.patch_len());
+        let k = self.geom.patch_len();
         let co = self.geom.cout;
-        let rows = m * p;
+        let rows = self.geom.patch_rows(m);
         // Digital weight gradient: patch outer product summed over
         // samples *and* positions, batch-mean (1/m, the dense
         // convention — positions sum like the loss does).

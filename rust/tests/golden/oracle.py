@@ -9,12 +9,14 @@ the golden configs is pure f32/f64 arithmetic (no libm), so the two
 implementations agree byte for byte on any IEEE-754 platform.
 
 Mirrored sources (keep in sync when the Rust changes):
-  rust/src/util/rng.rs        Pcg64, uniform, fill_gaussian
+  rust/src/util/rng.rs        Pcg64, uniform, fill_gaussian, op_rng,
+                              op_sample_rng (the per-(op, tile, sample)
+                              sub-streams of the blocked VMM kernels)
   rust/src/util/fastmath.rs   log2_fast, exp2_fast, pow_fast, sincos,
                               exp_fast, ln_fast
   rust/src/crossbar/quant.rs  DAC/ADC quantize_uniform
-  rust/src/crossbar/tile.rs   read_noisy_weights sequence
-  rust/src/crossbar/grid.rs   op_rng, tiling, vmm, vmm_t, program_init,
+  rust/src/crossbar/tile.rs   read_noisy_weights(_prefilled) sequence
+  rust/src/crossbar/grid.rs   tiling, blocked vmm/vmm_t, program_init,
                               apply_update routing
   rust/src/pcm/{array,device}.rs  linear programming path, drift law
   rust/src/hic/{weight,fixedpoint}.rs  hybrid update, accumulator,
@@ -36,6 +38,7 @@ M64 = (1 << 64) - 1
 M128 = (1 << 128) - 1
 MULTIPLIER = 0x2360_ED05_1FC6_5DA4_4385_DF64_9FCC_F645
 ROUND_MIX = 0x9E37_79B9_7F4A_7C15
+SAMPLE_MIX = 0xBF58_476D_1CE4_E5B9
 
 LN_2 = f32(0.6931471805599453)
 FRAC_PI_2 = f32(1.5707963267948966)
@@ -101,6 +104,14 @@ class Pcg64:
 
 def op_rng(seed, rnd, op, shard):
     return Pcg64(seed ^ ((rnd * ROUND_MIX) & M64), ((op << 32) | shard) & M64)
+
+
+def op_sample_rng(seed, rnd, op, tile, sample):
+    """util::rng::op_sample_rng — the per-(op, tile, sample) sub-stream
+    of the blocked tile-stationary VMM kernels."""
+    return Pcg64(seed ^ ((rnd * ROUND_MIX) & M64)
+                 ^ ((sample * SAMPLE_MIX) & M64),
+                 ((op << 32) | tile) & M64)
 
 
 # -- util::fastmath ----------------------------------------------------------
@@ -373,17 +384,19 @@ class Tile:
 # -- crossbar::grid ----------------------------------------------------------
 
 def read_noisy_weights(tile, gp, gm, nt, rng, params):
-    """crossbar::tile::read_noisy_weights — the shared noisy-read
-    sequence (G+ plane first, then G−, batched Box–Muller fill)."""
+    """crossbar::tile::read_noisy_weights_prefilled fed by one even
+    2·nt Gaussian segment from the sample's (op, tile, sample)
+    sub-stream — G+ plane deviates first (z[:nt]), then G− (z[nt:]);
+    the fused fill_gaussian_block pass is bit-identical to this
+    per-sample fill."""
     w = np.zeros(nt, dtype=np.float32)
     if params.read_noise:
-        z = rng.fill_gaussian(nt)
+        z = rng.fill_gaussian(2 * nt)
         for i in range(nt):
             w[i] = clamp(f32(gp[i] + f32(READ_SIGMA * z[i])),
                          f32(0.0), f32(1.0))
-        z = rng.fill_gaussian(nt)
         for i in range(nt):
-            gmv = clamp(f32(gm[i] + f32(READ_SIGMA * z[i])),
+            gmv = clamp(f32(gm[i] + f32(READ_SIGMA * z[nt + i])),
                         f32(0.0), f32(1.0))
             w[i] = f32(f32(w[i] - gmv) * tile.g_to_w)
     else:
@@ -447,6 +460,10 @@ class Grid:
         return out
 
     def vmm_batch(self, x, m, t_now, rnd):
+        """CrossbarGrid::vmm_batch_into — the blocked tile-stationary
+        forward kernel.  Sample blocking is pure scheduling (each
+        (tile, sample) pair owns its own OP_VMM sub-stream), so the
+        sample-major loop below is bit-identical to any block size."""
         k, n = self.k, self.n
         # Phase 1: drift planes per tile.
         gps = [t.plus.drift_into(t_now, self.params.drift)
@@ -454,11 +471,10 @@ class Grid:
         gms = [t.minus.drift_into(t_now, self.params.drift)
                for t in self.tiles]
         out = np.zeros(m * n, dtype=np.float32)
-        # Phase 2: column strips.
+        # Phase 2: column strips × sample blocks.
         for c in range(self.grid_c):
             strip_cols = self.coords[c][3]
             c0 = self.coords[c][1]
-            rng = op_rng(self.seed, rnd, OP_VMM, c)
             for s in range(m):
                 y = np.zeros(strip_cols, dtype=np.float32)
                 for gr in range(self.grid_r):
@@ -466,6 +482,7 @@ class Grid:
                     tile = self.tiles[ti]
                     tr, tc = tile.rows, tile.cols
                     nt = tr * tc
+                    rng = op_sample_rng(self.seed, rnd, OP_VMM, ti, s)
                     w = read_noisy_weights(tile, gps[ti], gms[ti], nt,
                                            rng, self.params)
                     r0 = self.coords[ti][0]
@@ -483,8 +500,9 @@ class Grid:
         return out
 
     def vmm_t_batch(self, e, m, t_now, rnd):
-        """CrossbarGrid::vmm_t_batch_into — transposed VMM, row-strip
-        shards on the OP_VMM_T streams."""
+        """CrossbarGrid::vmm_t_batch_into — the blocked tile-stationary
+        transposed VMM (row strips × sample blocks, per-(tile, sample)
+        OP_VMM_T sub-streams)."""
         k, n = self.k, self.n
         gps = [t.plus.drift_into(t_now, self.params.drift)
                for t in self.tiles]
@@ -494,7 +512,6 @@ class Grid:
         for gr in range(self.grid_r):
             strip_rows = self.coords[gr * self.grid_c][2]
             r0 = self.coords[gr * self.grid_c][0]
-            rng = op_rng(self.seed, rnd, OP_VMM_T, gr)
             for s in range(m):
                 y = np.zeros(strip_rows, dtype=np.float32)
                 for gc in range(self.grid_c):
@@ -502,6 +519,7 @@ class Grid:
                     tile = self.tiles[ti]
                     tr, tc = tile.rows, tile.cols
                     nt = tr * tc
+                    rng = op_sample_rng(self.seed, rnd, OP_VMM_T, ti, s)
                     w = read_noisy_weights(tile, gps[ti], gms[ti], nt,
                                            rng, self.params)
                     c0 = self.coords[ti][1]

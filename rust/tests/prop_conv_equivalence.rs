@@ -286,12 +286,18 @@ fn prop_resnet_trainer_worker_invariant() {
 
 /// A reduced-depth residual network learns image blobs on the device
 /// model.  Thresholds validated against the bit-exact oracle
-/// (`rust/tests/golden/oracle.py` GraphTrainer on this exact config):
-/// acc 0.333 -> 1.000 after 40 steps, eval loss 0.019, train loss
-/// 0.905 -> 0.020.  `w_scale = 4.0` is load-bearing: at the dense
-/// default (2.0) the deep grids' backprop errors fall below the ADC
-/// quantization floor and their gradients are exactly zero (the same
-/// finding behind `exp::gridexp::RESNET_W_SCALE`).
+/// (`rust/tests/golden/oracle.py` GraphTrainer on this exact config,
+/// re-run for the PR-5 per-(op, tile, sample) read-noise sub-streams):
+/// acc 0.333 -> 1.000 after 40 steps; the train loss collapses to
+/// 0.02 by step ~25, then an LSB->MSB overflow burst around step 30
+/// kicks it back up before it re-settles (~0.79 over the last 5
+/// steps, eval loss 0.489) — a real behavior of the hybrid update at
+/// this lr, so the loss assertions pin the collapse (minimum) and the
+/// overall decrease, not a monotone tail.  `w_scale = 4.0` is
+/// load-bearing: at the dense default (2.0) the deep grids' backprop
+/// errors fall below the ADC quantization floor and their gradients
+/// are exactly zero (the same finding behind
+/// `exp::gridexp::RESNET_W_SCALE`).
 #[test]
 fn residual_net_learns_image_blobs() {
     let params = PcmParams {
@@ -316,12 +322,15 @@ fn residual_net_learns_image_blobs() {
     assert!(acc0 < 0.6, "untrained resnet already accurate? {acc0}");
     assert!(acc > 0.85, "device resnet eval acc {acc} (from {acc0})");
     assert!(acc > acc0 + 0.3, "no real learning: {acc0} -> {acc}");
-    assert!(loss < 0.3, "eval loss {loss}");
+    assert!(loss < 0.7, "eval loss {loss}");
     assert!(t.overflows > 0, "no LSB->MSB overflow ever fired");
     assert!(t.total_set_pulses() > 0);
-    // Training loss collapses.
+    // Training loss collapses (oracle: min 0.02 by step ~25), and the
+    // post-overflow-burst tail still sits below the start.
+    let min_loss = t.losses.iter().cloned().fold(f64::INFINITY, f64::min);
+    assert!(min_loss < 0.1, "train loss never collapsed: min {min_loss}");
     let early: f64 = t.losses[..5].iter().sum::<f64>() / 5.0;
     let late: f64 =
         t.losses[t.losses.len() - 5..].iter().sum::<f64>() / 5.0;
-    assert!(late < early * 0.3, "train loss {early} -> {late}");
+    assert!(late < early, "train loss {early} -> {late}");
 }

@@ -21,6 +21,13 @@
 //!   `m·P` patch rows — is bitwise identical across worker counts with
 //!   the full noisy model (the deeper conv/residual contracts live in
 //!   `rust/tests/prop_conv_equivalence.rs`);
+//! * the **sample-block size** of the blocked tile-stationary VMM
+//!   kernels is pure scheduling: `B ∈ {1, 3, 8, m}` produce bitwise
+//!   identical outputs in both VMM directions at any worker count
+//!   (per-(op, tile, sample) RNG sub-streams), and in the noise-free
+//!   domain the blocked kernels are bit-compatible with both the
+//!   retained sample-major reference kernels and the serial
+//!   single-tile path;
 //! * `fill_gaussian` streams differ from the scalar `normal()` sequence
 //!   by design, so its distribution is pinned by moments, tail masses
 //!   and per-seed reproducibility over ≥ 1e5 draws.
@@ -268,6 +275,115 @@ fn prop_patch_vmm_worker_invariant() {
             return Err(format!(
                 "patch path diverges across workers (geom={geom:?} \
                  tile={tile} m={m})"));
+        }
+        Ok(())
+    });
+}
+
+/// The sample-block size of the blocked VMM kernels is pure
+/// scheduling: `B ∈ {1, 3, 8, m}` produce bitwise identical outputs in
+/// **both** VMM directions, at any worker count, with the full noisy
+/// device model on.
+#[test]
+fn prop_vmm_block_size_invariant() {
+    prop("blocked vmm invariant across sample-block sizes", 25, |g| {
+        let k = g.usize_in(3, 14);
+        let n = g.usize_in(2, 12);
+        let tr = g.usize_in(2, 6);
+        let tc = g.usize_in(2, 6);
+        let m = g.usize_in(2, 9);
+        let seed = g.u64_below(1 << 32);
+        let round = g.u64_below(1 << 16);
+        let mut gr = grid(full_params(), HicGeometry::default(), k, n,
+                          tr, tc, seed);
+        let w = g.vec_f32(k * n, -0.8, 0.8);
+        gr.program_init(&w, 0.0, u64::MAX, &WorkerPool::serial());
+        let x = g.vec_f32(m * k, -1.0, 1.0);
+        let e = g.vec_f32(m * n, -1.0, 1.0);
+        gr.sample_block = 1;
+        let y_fwd = gr.vmm_batch(&x, m, 3.0, round, &WorkerPool::new(2));
+        let y_bwd =
+            gr.vmm_t_batch(&e, m, 3.0, round, &WorkerPool::new(2));
+        for b in [3usize, 8, m] {
+            gr.sample_block = b;
+            for workers in [1usize, 4] {
+                let pool = WorkerPool::new(workers);
+                if gr.vmm_batch(&x, m, 3.0, round, &pool) != y_fwd {
+                    return Err(format!(
+                        "fwd vmm differs at B={b} workers={workers} \
+                         (k={k} n={n} tile={tr}x{tc} m={m})"));
+                }
+                if gr.vmm_t_batch(&e, m, 3.0, round, &pool) != y_bwd {
+                    return Err(format!(
+                        "bwd vmm differs at B={b} workers={workers} \
+                         (k={k} n={n} tile={tr}x{tc} m={m})"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Noise-free domain: the blocked tile-stationary kernels are
+/// bit-compatible with the retained PR-4 sample-major reference
+/// kernels and with the serial single-tile path, in both VMM
+/// directions (none of the three consumes RNG without read noise, so
+/// all agree exactly).
+#[test]
+fn prop_blocked_matches_sample_major_noise_free() {
+    prop("blocked == sample-major == single tile (noise-free)", 30,
+         |g| {
+        let params = deterministic_params(g.bool(), g.bool());
+        let geom =
+            HicGeometry { stochastic_rounding: false, ..Default::default() };
+        let k = g.usize_in(2, 12);
+        let n = g.usize_in(2, 10);
+        let tr = g.usize_in(1, 5);
+        let tc = g.usize_in(1, 5);
+        let m = g.usize_in(1, 5);
+        let seed = g.u64_below(1 << 32);
+        let pool = WorkerPool::new(4);
+
+        let mut gr = grid(params, geom, k, n, tr, tc, seed);
+        gr.sample_block = 1 + g.usize_in(0, m);
+        let mut rng_single = op_rng(seed, 0, OP_INIT, 0);
+        let mut hw = HicWeight::new(params, geom, k, n, &mut rng_single);
+        let w = g.vec_f32(k * n, -0.9, 0.9);
+        gr.program_init(&w, 0.0, 0, &pool);
+        hw.program_init(&w, 0.0, &mut op_rng(seed, 0, OP_PROGRAM_INIT, 0));
+        let tile = CrossbarTile::new(hw, DacSpec::default(),
+                                     AdcSpec::default());
+        let mut scratch = gr.scratch();
+        let t_now = 2.0;
+
+        let x = g.vec_f32(m * k, -1.0, 1.0);
+        let mut blocked = vec![0.0f32; m * n];
+        let mut sample_major = vec![0.0f32; m * n];
+        gr.vmm_batch_into(&x, m, t_now, 9, &pool, &mut scratch,
+                          &mut blocked);
+        gr.vmm_batch_sample_major_into(&x, m, t_now, 9, &pool,
+                                       &mut scratch, &mut sample_major);
+        let mut rng_unused = Pcg64::new(0, 0);
+        let serial = tile.vmm_batch(&x, m, t_now, &mut rng_unused);
+        if blocked != sample_major || blocked != serial {
+            return Err(format!(
+                "fwd kernels diverge noise-free (k={k} n={n} \
+                 tile={tr}x{tc} m={m} B={})", gr.sample_block));
+        }
+
+        let e = g.vec_f32(m * n, -1.0, 1.0);
+        let mut blocked_t = vec![0.0f32; m * k];
+        let mut sample_major_t = vec![0.0f32; m * k];
+        gr.vmm_t_batch_into(&e, m, t_now, 9, &pool, &mut scratch,
+                            &mut blocked_t);
+        gr.vmm_t_batch_sample_major_into(&e, m, t_now, 9, &pool,
+                                         &mut scratch,
+                                         &mut sample_major_t);
+        let serial_t = tile.vmm_t_batch(&e, m, t_now, &mut rng_unused);
+        if blocked_t != sample_major_t || blocked_t != serial_t {
+            return Err(format!(
+                "bwd kernels diverge noise-free (k={k} n={n} \
+                 tile={tr}x{tc} m={m} B={})", gr.sample_block));
         }
         Ok(())
     });
