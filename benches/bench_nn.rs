@@ -1,13 +1,21 @@
 //! Multi-layer device-training benches: full `NetTrainer` steps
 //! (forward VMMs + transposed-VMM backprop + hybrid updates) across
-//! layer counts, width multipliers and worker counts.
+//! layer counts, width multipliers, worker counts and backward/update
+//! schedules.
 //!
 //! `BENCH_nn.json` records steps/sec per case plus the headline
-//! worker-scaling ratios — the evidence that the backward pass shards
-//! like the forward pass does.
+//! worker-scaling and pipelined-vs-phase-serial ratios — the evidence
+//! that the backward pass shards like the forward pass does, and that
+//! overlapping per-layer gradient/update chains with the backward VMM
+//! walk ([`TrainMode::Pipelined`]) pushes step time toward VMM-only
+//! time.  The historical series pin [`TrainMode::PhaseSerial`]
+//! explicitly so their deltas stay comparable across PRs; the
+//! `_pipelined_` / `_serial_` pairs are the overlap measurement, run
+//! at the CI matrix worker counts {1, 4, 8}.
 
 use hic_train::bench::Bench;
-use hic_train::coordinator::nettrainer::{NetTrainer, NetTrainerOptions};
+use hic_train::coordinator::nettrainer::{NetTrainer, NetTrainerOptions,
+                                         TrainMode};
 use hic_train::crossbar::TilingPolicy;
 use hic_train::nn::features::{BlobDataset, FeatureSource};
 use hic_train::nn::net::NetSpec;
@@ -23,8 +31,8 @@ fn data() -> FeatureSource {
     FeatureSource::Blobs(BlobDataset::new(7, DIM, CLASSES, 0.4, 4096, 512))
 }
 
-fn trainer(hidden: &[usize], width_permille: u32,
-           workers: usize) -> NetTrainer {
+fn trainer(hidden: &[usize], width_permille: u32, workers: usize,
+           mode: TrainMode) -> NetTrainer {
     let spec = NetSpec {
         input: DIM,
         hidden_base: hidden.to_vec(),
@@ -35,7 +43,7 @@ fn trainer(hidden: &[usize], width_permille: u32,
         PcmParams::default(), &spec.dims(),
         TilingPolicy { tile_rows: TILE, tile_cols: TILE }, data(),
         WorkerPool::new(workers),
-        NetTrainerOptions { batch: BATCH, ..Default::default() })
+        NetTrainerOptions { batch: BATCH, mode, ..Default::default() })
 }
 
 fn main() {
@@ -45,7 +53,7 @@ fn main() {
 
     // Depth sweep at width 1.0, serial.
     for hidden in [&[128][..], &[128, 64][..], &[128, 96, 64][..]] {
-        let mut t = trainer(hidden, 1000, 1);
+        let mut t = trainer(hidden, 1000, 1, TrainMode::PhaseSerial);
         let layers = hidden.len() + 1;
         b.bench_with_elements(
             &format!("net_step_l{layers}_w1000_workers1"), Some(elements),
@@ -54,18 +62,33 @@ fn main() {
 
     // Width sweep on the 3-layer net, serial.
     for w in [500u32, 1500] {
-        let mut t = trainer(&[128, 64], w, 1);
+        let mut t = trainer(&[128, 64], w, 1, TrainMode::PhaseSerial);
         b.bench_with_elements(
             &format!("net_step_l3_w{w}_workers1"), Some(elements),
             || t.train_steps(1));
     }
 
-    // Worker scaling on the deepest config.
+    // Worker scaling on the deepest config (phase-serial: the
+    // historical flat fan-out numbers).
     for workers in [1usize, 2, 4] {
-        let mut t = trainer(&[128, 96, 64], 1000, workers);
+        let mut t =
+            trainer(&[128, 96, 64], 1000, workers, TrainMode::PhaseSerial);
         b.bench_with_elements(
             &format!("net_step_l4_w1000_workers{workers}"),
             Some(elements), || t.train_steps(1));
+    }
+
+    // Pipelined vs. phase-serial on the deepest config at the CI
+    // matrix worker counts: the overlap measurement.  Identical
+    // numerics by construction, so any delta is pure scheduling.
+    for workers in [1usize, 4, 8] {
+        for (tag, mode) in [("serial", TrainMode::PhaseSerial),
+                            ("pipelined", TrainMode::Pipelined)] {
+            let mut t = trainer(&[128, 96, 64], 1000, workers, mode);
+            b.bench_with_elements(
+                &format!("net_step_l4_w1000_{tag}_workers{workers}"),
+                Some(elements), || t.train_steps(1));
+        }
     }
 
     let mut speedups = Vec::new();
@@ -74,6 +97,15 @@ fn main() {
          "net_step_l4_w1000_workers1", "net_step_l4_w1000_workers4"),
         ("net_l4_w2_vs_w1",
          "net_step_l4_w1000_workers1", "net_step_l4_w1000_workers2"),
+        ("net_l4_pipe_vs_serial_w1",
+         "net_step_l4_w1000_serial_workers1",
+         "net_step_l4_w1000_pipelined_workers1"),
+        ("net_l4_pipe_vs_serial_w4",
+         "net_step_l4_w1000_serial_workers4",
+         "net_step_l4_w1000_pipelined_workers4"),
+        ("net_l4_pipe_vs_serial_w8",
+         "net_step_l4_w1000_serial_workers8",
+         "net_step_l4_w1000_pipelined_workers8"),
     ] {
         if let Some(s) = b.speedup(base, cont) {
             println!("[nn] {label}: {s:.2}x");

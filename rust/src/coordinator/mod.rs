@@ -20,7 +20,11 @@
 //! layer graphs (per-layer grids, transposed-VMM backprop with im2col
 //! patch lowering through conv/residual layers, shared drift clock and
 //! refresh cadence) — the engine behind the grid-routed fig4 width
-//! sweeps (dense `--arch mlp` and ResNet-style `--arch resnet`).
+//! sweeps (dense `--arch mlp` and ResNet-style `--arch resnet`).  On
+//! multi-worker pools the net trainer defaults to the **pipelined**
+//! schedule ([`TrainMode::Pipelined`]): per-layer gradient/update
+//! chains overlap the backward VMM walk on an adaptively split pool,
+//! bitwise identical to the phase-serial reference.
 
 pub mod baseline;
 pub mod gridtrainer;
@@ -32,6 +36,6 @@ pub mod trainer;
 pub use baseline::BaselineTrainer;
 pub use gridtrainer::{GridTrainer, GridTrainerOptions};
 pub use metrics::{EvalResult, MetricsRecorder, StepMetrics};
-pub use nettrainer::{NetTrainer, NetTrainerOptions};
+pub use nettrainer::{KSplit, NetTrainer, NetTrainerOptions, TrainMode};
 pub use schedule::{DriftClock, LrSchedule, RefreshScheduler};
 pub use trainer::{Trainer, TrainerOptions};

@@ -33,10 +33,45 @@
 //! dense path builds `GraphSpec::mlp(dims)`, whose grid seeds and
 //! kernel invocation order replay the PR-3 `DeviceNet` loop exactly —
 //! the dense fig4 golden pins this byte for byte.
+//!
+//! # Pipelined training ([`TrainMode::Pipelined`], the default)
+//!
+//! The phase-serial loop leaves workers idle during every non-VMM
+//! stage: full backward, then all updates, then refresh — three
+//! barriers.  The pipelined mode splits the pool into a **foreground**
+//! lane (the calling thread + `W − B` workers driving the backward
+//! transposed-VMM chain) and a **background** lane (`B` workers on a
+//! [`PipelineScope`](crate::util::pool::PipelineScope)): the moment
+//! layer `i`'s backward VMM completes,
+//! its digital outer-product gradient and hybrid LSB/MSB update (and
+//! the refresh, when due) are enqueued as a completion-dependency chain
+//! that overlaps layer `i−1`'s VMM — the HyTrainDNN overlap schedule.
+//!
+//! The lane split `B` and the per-step eager budget follow an adaptive
+//! `k`-fraction ([`KSplit`]): the controller watches the share of step
+//! time spent in the end-of-step drain (deferred + unfinished eager
+//! chains) and nudges `k` up when the background lane is starved (big
+//! drain share) or down when it over-claims workers the VMM chain
+//! needs.  `k` only moves *scheduling* knobs — worker counts and
+//! eager-vs-deferred placement — so it is free to adapt on wall-clock
+//! time without touching numerics.
+//!
+//! **Why overlap is numerics-free:** every stochastic kernel draws from
+//! counter-based per-`(op, tile[, sample])` RNG sub-streams keyed only
+//! on `(layer seed, round)`; weighted layers own disjoint grids; the
+//! overflow/refresh totals are commutative sums.  Scheduling therefore
+//! moves *when* work runs, never *what* it computes: the pipelined
+//! trainer is **bitwise identical** to the phase-serial one at any
+//! worker count and any `k` trajectory, pinned by
+//! `rust/tests/prop_pipeline_equivalence.rs` and the byte-identical
+//! fig4 goldens.  With one worker (or [`TrainMode::PhaseSerial`]) the
+//! loop runs the original phase-serial path.
+
+use std::time::Instant;
 
 use crate::crossbar::TilingPolicy;
 use crate::nn::features::FeatureSource;
-use crate::nn::graph::{GraphNet, GraphSpec};
+use crate::nn::graph::{GraphNet, GraphSpec, StepTotals};
 use crate::nn::net::{argmax_row, nll_sum, softmax_rows};
 use crate::pcm::device::PcmParams;
 use crate::pcm::endurance::EnduranceLedger;
@@ -44,6 +79,20 @@ use crate::util::pool::WorkerPool;
 
 use super::gridtrainer::EVAL_ROUND_BASE;
 use super::schedule::{DriftClock, LrSchedule, RefreshScheduler};
+
+/// Scheduling mode of the training loop.  Purely a scheduling choice:
+/// both modes produce bitwise-identical nets, losses and counters (see
+/// the module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrainMode {
+    /// Full backward → all updates → refresh, each phase a barrier
+    /// (the reference schedule; also used whenever the pool has a
+    /// single worker).
+    PhaseSerial,
+    /// Per-layer gradient/update chains overlap the backward VMM walk
+    /// on a split worker pool.
+    Pipelined,
+}
 
 /// Options of one net-trainer run.
 #[derive(Clone, Debug)]
@@ -60,6 +109,8 @@ pub struct NetTrainerOptions {
     pub bwd_gain: f32,
     /// per-layer weight range scale: `w_max = w_scale / √fan_in`
     pub w_scale: f32,
+    /// backward/update scheduling (numerics-identical either way)
+    pub mode: TrainMode,
 }
 
 impl Default for NetTrainerOptions {
@@ -72,7 +123,77 @@ impl Default for NetTrainerOptions {
             batch: 8,
             bwd_gain: 4.0,
             w_scale: 2.0,
+            mode: TrainMode::Pipelined,
         }
+    }
+}
+
+// -- adaptive k-fraction split -------------------------------------------
+
+/// Smallest / largest `k` the controller will pick (permille of the
+/// pool handed to the background update lane).
+pub const K_MIN_PERMILLE: u32 = 125;
+pub const K_MAX_PERMILLE: u32 = 875;
+/// Controller step per observation.
+const K_STEP_PERMILLE: u32 = 125;
+/// Hysteresis band on the observed drain share (permille of step
+/// time): above `HIGH` the background lane is starved → raise `k`;
+/// below `LOW` it over-claims workers → lower `k`; in between, hold.
+const DRAIN_HIGH_PERMILLE: u32 = 150;
+const DRAIN_LOW_PERMILLE: u32 = 50;
+
+/// Adaptive split of the worker pool between the backward-VMM
+/// foreground lane and the gradient/update background lane —
+/// HyTrainDNN's `k`-fraction.  The observed signal is the share of
+/// step time spent in the end-of-step drain: a big share means update
+/// work queued up faster than the background lane could chew it.
+///
+/// `k` only ever selects worker counts and eager-vs-deferred
+/// placement, so the controller may react to wall-clock noise freely —
+/// the trained net is bitwise identical for every `k` trajectory.
+#[derive(Clone, Copy, Debug)]
+pub struct KSplit {
+    k_permille: u32,
+}
+
+impl KSplit {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Self {
+        KSplit { k_permille: 500 }
+    }
+
+    /// Current `k` in permille.
+    pub fn k_permille(&self) -> u32 {
+        self.k_permille
+    }
+
+    /// Feed one step's observed drain share (permille of step time).
+    pub fn observe(&mut self, drain_permille: u32) {
+        if drain_permille > DRAIN_HIGH_PERMILLE {
+            self.k_permille =
+                (self.k_permille + K_STEP_PERMILLE).min(K_MAX_PERMILLE);
+        } else if drain_permille < DRAIN_LOW_PERMILLE {
+            self.k_permille = self
+                .k_permille
+                .saturating_sub(K_STEP_PERMILLE)
+                .max(K_MIN_PERMILLE);
+        }
+    }
+
+    /// Background-lane width for a `w`-worker pool: `round(w·k)`,
+    /// always leaving at least one worker per lane.
+    pub fn bg_workers(&self, w: usize) -> usize {
+        debug_assert!(w >= 2, "split needs at least two workers");
+        let b = (w as u32 * self.k_permille + 500) / 1000;
+        (b as usize).clamp(1, w - 1)
+    }
+
+    /// How many of this step's `jobs` gradient/update chains run
+    /// eagerly in the background lane (the rest are deferred to the
+    /// end-of-step drain).  Ceiling so `k > 0` always pipelines at
+    /// least one chain.
+    pub fn eager_budget(&self, jobs: usize) -> usize {
+        ((jobs as u64 * self.k_permille as u64).div_ceil(1000)) as usize
     }
 }
 
@@ -88,6 +209,8 @@ pub struct NetTrainer {
     pub losses: Vec<f64>,
     pub overflows: usize,
     pub refreshed: usize,
+    /// adaptive foreground/background split (pipelined mode)
+    ksplit: KSplit,
     eval_rounds: u64,
     // reusable step buffers
     x: Vec<f32>,
@@ -129,6 +252,7 @@ impl NetTrainer {
             losses: Vec::new(),
             overflows: 0,
             refreshed: 0,
+            ksplit: KSplit::new(),
             eval_rounds: 0,
             x: vec![0.0; m * d0],
             labels: vec![0; m],
@@ -143,59 +267,118 @@ impl NetTrainer {
 
     /// Run `steps` training steps: forward VMMs → softmax CE → backward
     /// transposed VMMs → per-layer hybrid updates, drift clock and
-    /// refresh cadence included.
+    /// refresh cadence included.  With [`TrainMode::Pipelined`] and a
+    /// multi-worker pool, each layer's gradient/update overlaps the
+    /// next layer's backward VMM (bitwise identical either way — see
+    /// the module docs).
     pub fn train_steps(&mut self, steps: usize) {
+        for _ in 0..steps {
+            self.train_step_once();
+        }
+    }
+
+    /// Current adaptive `k` (permille of the pool on the background
+    /// lane) — observability for benches and the convergence test.
+    pub fn k_permille(&self) -> u32 {
+        self.ksplit.k_permille()
+    }
+
+    fn train_step_once(&mut self) {
         let classes = self.net.classes();
         let d0 = self.net.input_dim();
         let m = self.opts.batch;
-        for _ in 0..steps {
-            let t_now = self.clock.tick();
-            let lr = self.opts.lr.at(self.step);
-            let round = self.step as u64;
+        let t_now = self.clock.tick();
+        let lr = self.opts.lr.at(self.step);
+        let round = self.step as u64;
 
-            // Input batch: sequential epoch order (counter-based, so
-            // the data stream is schedule-independent by construction).
-            for j in 0..m {
-                let idx = (self.step * m + j) % self.data.train_len();
-                self.labels[j] = self.data.sample_into(
-                    idx, false, &mut self.x[j * d0..(j + 1) * d0]);
-            }
-
-            // Forward walk: analog VMM per weighted layer, digital
-            // nonlinearities between (activations cached in the graph).
-            let logits =
-                self.net.forward(&self.x, m, t_now, round, &self.pool);
-
-            // Loss and output error (softmax − one-hot).
-            softmax_rows(logits, m, classes, &mut self.probs);
-            self.losses.push(
-                nll_sum(&self.probs, &self.labels, classes) / m as f64);
-            for s in 0..m {
-                for j in 0..classes {
-                    let y = if self.labels[s] as usize == j {
-                        1.0
-                    } else {
-                        0.0
-                    };
-                    self.dlogits[s * classes + j] =
-                        self.probs[s * classes + j] - y;
-                }
-            }
-
-            // Backward walk (pre-update weights throughout: all grid
-            // updates are applied after the full backward pass).
-            self.net.backward(&self.dlogits, m, t_now, round,
-                              &self.pool, self.opts.bwd_gain);
-
-            // Hybrid updates + refresh cadence across every grid.
-            self.overflows +=
-                self.net.apply_updates(lr, t_now, round, &self.pool);
-            if self.refresh.due(self.step) {
-                self.refreshed +=
-                    self.net.refresh(t_now, round, &self.pool);
-            }
-            self.step += 1;
+        // Input batch: sequential epoch order (counter-based, so
+        // the data stream is schedule-independent by construction).
+        for j in 0..m {
+            let idx = (self.step * m + j) % self.data.train_len();
+            self.labels[j] = self.data.sample_into(
+                idx, false, &mut self.x[j * d0..(j + 1) * d0]);
         }
+
+        // Forward walk: analog VMM per weighted layer, digital
+        // nonlinearities between (activations cached in the graph).
+        let logits =
+            self.net.forward(&self.x, m, t_now, round, &self.pool);
+
+        // Loss and output error (softmax − one-hot).
+        softmax_rows(logits, m, classes, &mut self.probs);
+        self.losses.push(
+            nll_sum(&self.probs, &self.labels, classes) / m as f64);
+        for s in 0..m {
+            for j in 0..classes {
+                let y = if self.labels[s] as usize == j {
+                    1.0
+                } else {
+                    0.0
+                };
+                self.dlogits[s * classes + j] =
+                    self.probs[s * classes + j] - y;
+            }
+        }
+
+        let w = self.pool.workers();
+        if self.opts.mode == TrainMode::PhaseSerial || w < 2 {
+            self.backward_update_phase_serial(m, t_now, lr, round);
+        } else {
+            self.backward_update_pipelined(m, t_now, lr, round, w);
+        }
+        self.step += 1;
+    }
+
+    /// The reference schedule: full backward walk (pre-update weights
+    /// throughout), then all hybrid updates, then the due refresh —
+    /// three barriers on the full pool.
+    fn backward_update_phase_serial(&mut self, m: usize, t_now: f32,
+                                    lr: f32, round: u64) {
+        self.net.backward(&self.dlogits, m, t_now, round, &self.pool,
+                          self.opts.bwd_gain);
+        self.overflows +=
+            self.net.apply_updates(lr, t_now, round, &self.pool);
+        if self.refresh.due(self.step) {
+            self.refreshed +=
+                self.net.refresh(t_now, round, &self.pool);
+        }
+    }
+
+    /// The overlapped schedule: the pool splits into a foreground VMM
+    /// lane (`w − b` workers, driven by this thread) and a background
+    /// gradient/update lane (`b` scoped workers); per-layer chains are
+    /// enqueued as their backward VMMs complete and everything joins at
+    /// the end-of-step drain, whose share of step time feeds the
+    /// [`KSplit`] controller.  Weights read by the backward VMMs are
+    /// still the pre-update weights — each layer's update is enqueued
+    /// only *after* that layer's (sole) transposed VMM of the step.
+    fn backward_update_pipelined(&mut self, m: usize, t_now: f32,
+                                 lr: f32, round: u64, w: usize) {
+        let b = self.ksplit.bg_workers(w);
+        let fg = WorkerPool::new(w - b);
+        let bg = WorkerPool::new(b);
+        let refresh_due = self.refresh.due(self.step);
+        let eager_budget =
+            self.ksplit.eager_budget(self.net.weighted_layers());
+        let bwd_gain = self.opts.bwd_gain;
+        let totals = StepTotals::new();
+        let step_start = Instant::now();
+        let net = &mut self.net;
+        let dlogits = &self.dlogits;
+        let drain_time = bg.pipeline(|scope| {
+            net.backward_update_pipelined(
+                dlogits, m, t_now, round, &fg, scope, bwd_gain, lr,
+                refresh_due, eager_budget, &totals);
+            let drain_start = Instant::now();
+            scope.drain();
+            drain_start.elapsed()
+        });
+        let step_time = step_start.elapsed().as_nanos().max(1);
+        let drain_permille =
+            (drain_time.as_nanos() * 1000 / step_time) as u32;
+        self.ksplit.observe(drain_permille);
+        self.overflows += totals.overflows();
+        self.refreshed += totals.refreshed();
     }
 
     /// Mean cross-entropy and accuracy of the analog forward pass over
@@ -344,6 +527,10 @@ mod tests {
 
     #[test]
     fn run_is_worker_count_invariant() {
+        // Default mode is Pipelined, so workers 2/4 take the
+        // overlapped schedule while workers=1 falls back to the
+        // phase-serial reference — this pins both worker-count
+        // invariance AND pipelined-vs-serial bit-equality in one go.
         let run = |workers: usize| {
             let mut t = NetTrainer::new(
                 PcmParams::default(), &[8, 12, 8, 4], policy(5),
@@ -357,5 +544,54 @@ mod tests {
         let a = run(1);
         assert_eq!(a, run(2));
         assert_eq!(a, run(4));
+    }
+
+    #[test]
+    fn pipelined_matches_phase_serial_smoke() {
+        // Full-noise params, refresh cadence on: the two schedules
+        // must agree bit for bit on the same multi-worker pool.  (The
+        // heavier sweep lives in
+        // rust/tests/prop_pipeline_equivalence.rs.)
+        let run = |mode: TrainMode| {
+            let mut t = NetTrainer::new(
+                PcmParams::default(), &[8, 12, 8, 4], policy(5),
+                blob_data(), WorkerPool::new(4),
+                NetTrainerOptions { batch: 6, refresh_every: 3, mode,
+                                    ..Default::default() });
+            t.train_steps(9);
+            let ev = t.evaluate(24, t.clock.now_f32());
+            (t.losses.clone(), t.overflows, t.refreshed, ev,
+             t.total_set_pulses())
+        };
+        assert_eq!(run(TrainMode::PhaseSerial),
+                   run(TrainMode::Pipelined));
+    }
+
+    #[test]
+    fn adaptive_k_split_converges() {
+        // Starved background lane (big drain share) → k climbs to the
+        // ceiling and sticks; idle drain → k falls to the floor; the
+        // hysteresis band holds k in place.
+        let mut k = KSplit::new();
+        assert_eq!(k.k_permille(), 500);
+        for _ in 0..10 {
+            k.observe(400);
+        }
+        assert_eq!(k.k_permille(), K_MAX_PERMILLE);
+        let before = k.k_permille();
+        k.observe(100); // inside [50, 150] band: hold
+        assert_eq!(k.k_permille(), before);
+        for _ in 0..10 {
+            k.observe(0);
+        }
+        assert_eq!(k.k_permille(), K_MIN_PERMILLE);
+        // Lane split honors the bounds at every k.
+        for w in 2..=16 {
+            let b = k.bg_workers(w);
+            assert!(b >= 1 && b <= w - 1, "w {w} b {b}");
+        }
+        // k > 0 always pipelines at least one chain.
+        assert!(k.eager_budget(3) >= 1);
+        assert!(k.eager_budget(3) <= 3);
     }
 }

@@ -105,11 +105,41 @@ pub const OP_REFRESH: u64 = 5;
 pub const OP_PROGRAM_INIT: u64 = 6;
 pub const OP_VMM_T: u64 = 7;
 
-/// Default [`CrossbarGrid::sample_block`]: small enough that a block's
-/// noise segments stay cache-resident against common tile sizes, large
-/// enough to amortize the per-tile plane traffic and expose
-/// sample-block parallelism on single-strip (conv patch) grids.
-pub const DEFAULT_SAMPLE_BLOCK: usize = 8;
+/// Cache budget the auto-tuned sample block targets: one block's read
+/// noise for one tile is `B` even segments of `2·rows·cols` f32
+/// deviates, and the blocked micro-kernel streams those segments while
+/// the tile's two drifted conductance planes stay hot — so `B` is
+/// chosen to keep the block's noise footprint inside a per-core
+/// L2-ish budget for the grid's **largest** tile.
+pub const SAMPLE_BLOCK_BUDGET_BYTES: usize = 128 * 1024;
+
+/// Ceiling on the auto-tuned block (beyond this, bigger blocks only
+/// reduce shard-level parallelism); the floor of 2 keeps at least some
+/// plane-hoist amortization even for giant tiles.
+pub const MAX_SAMPLE_BLOCK: usize = 64;
+
+/// Auto-tuned sample block for a grid whose largest tile is
+/// `tile_rows × tile_cols`: the largest `B ∈ [2, 64]` whose per-tile
+/// noise segments (`B · 2·rows·cols` f32) fit
+/// [`SAMPLE_BLOCK_BUDGET_BYTES`].  Pure scheduling — outputs are
+/// bitwise identical for any value (`prop_vmm_block_size_invariant`),
+/// so this is a cache/parallelism default, never a correctness knob.
+pub fn sample_block_for(tile_rows: usize, tile_cols: usize) -> usize {
+    let per_sample =
+        2 * tile_rows.max(1) * tile_cols.max(1) * std::mem::size_of::<f32>();
+    (SAMPLE_BLOCK_BUDGET_BYTES / per_sample).clamp(2, MAX_SAMPLE_BLOCK)
+}
+
+/// [`sample_block_for`] with the `HIC_SAMPLE_BLOCK` environment
+/// override (any value ≥ 1) — the escape hatch for cache-shape
+/// experiments; invalid or unset values fall back to the auto-tune.
+pub fn sample_block_from_env(tile_rows: usize, tile_cols: usize) -> usize {
+    std::env::var("HIC_SAMPLE_BLOCK")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&b| b >= 1)
+        .unwrap_or_else(|| sample_block_for(tile_rows, tile_cols))
+}
 
 /// One logical weight matrix sharded onto an R×C grid of
 /// [`CrossbarTile`]s (edge tiles sized to their used extent, so the
@@ -192,6 +222,36 @@ pub struct GridScratch {
     subs: Vec<Vec<f32>>,
 }
 
+/// One grid's hybrid update packaged as a self-contained, `Send`
+/// work item (see [`CrossbarGrid::update_item`]): borrows the tiles
+/// exclusively and the already-scattered per-tile gradients, so it can
+/// be moved into a background task and executed whenever the scheduler
+/// reaches it — bitwise identical to running
+/// [`CrossbarGrid::apply_update`] on a serial pool at the same `round`.
+pub struct GridUpdateItem<'a> {
+    tiles: &'a mut Vec<CrossbarTile>,
+    subs: &'a [Vec<f32>],
+    seed: u64,
+    lr: f32,
+    t_now: f32,
+    round: u64,
+}
+
+impl GridUpdateItem<'_> {
+    /// Execute the update (tile order, one `OP_UPDATE` stream per
+    /// tile); returns total LSB→MSB overflow events.
+    pub fn run(self) -> usize {
+        let mut total = 0u64;
+        for (ti, tile) in self.tiles.iter_mut().enumerate() {
+            let mut rng = op_rng(self.seed, self.round, OP_UPDATE, ti);
+            total += tile.weights.apply_update(
+                &self.subs[ti], self.lr, self.t_now, &mut rng)
+                as u64;
+        }
+        total as usize
+    }
+}
+
 impl CrossbarGrid {
     /// Build the grid: tiles are constructed in row-major order, each
     /// from its own `(seed, OP_INIT, tile)` stream, so construction is
@@ -201,11 +261,14 @@ impl CrossbarGrid {
                seed: u64) -> Self {
         let mapping = LayerMapping::new("grid", k, n, policy);
         let mut tiles = Vec::with_capacity(mapping.tile_count());
+        let (mut max_r, mut max_c) = (1usize, 1usize);
         for (ti, t) in mapping.tiles.iter().enumerate() {
             let mut rng = op_rng(seed, 0, OP_INIT, ti);
             let hw = HicWeight::new(params, geom, t.used_rows,
                                     t.used_cols, &mut rng);
             tiles.push(CrossbarTile::new(hw, dac, adc));
+            max_r = max_r.max(t.used_rows);
+            max_c = max_c.max(t.used_cols);
         }
         CrossbarGrid {
             mapping,
@@ -213,7 +276,7 @@ impl CrossbarGrid {
             dac,
             adc,
             seed,
-            sample_block: DEFAULT_SAMPLE_BLOCK,
+            sample_block: sample_block_from_env(max_r, max_c),
         }
     }
 
@@ -365,6 +428,31 @@ impl CrossbarGrid {
             total.fetch_add(ovf, Ordering::Relaxed);
         });
         total.into_inner() as usize
+    }
+
+    /// Package one hybrid training update as an **enqueueable work
+    /// item**: the gradient is scattered into the scratch's per-tile
+    /// buffers immediately (so the caller's `grad` borrow can end), and
+    /// the returned [`GridUpdateItem`] owns everything the update needs
+    /// — move it into a [`crate::util::pool::PipelineScope`] task and
+    /// [`GridUpdateItem::run`] it there.  Per-tile RNG streams
+    /// (`op_rng(seed, round, OP_UPDATE, tile)`) and tile order are
+    /// identical to [`CrossbarGrid::apply_update`] on a serial pool, so
+    /// where the item runs is pure scheduling: results are bitwise
+    /// identical.
+    pub fn update_item<'a>(&'a mut self, grad: &[f32], lr: f32,
+                           t_now: f32, round: u64,
+                           scratch: &'a mut GridScratch)
+                           -> GridUpdateItem<'a> {
+        self.scatter_into(grad, &mut scratch.subs);
+        GridUpdateItem {
+            tiles: &mut self.tiles,
+            subs: &scratch.subs,
+            seed: self.seed,
+            lr,
+            t_now,
+            round,
+        }
     }
 
     /// Selective saturation refresh, tile-parallel; returns refreshed
@@ -1055,6 +1143,54 @@ mod tests {
         g.vmm_t_batch_sample_major_into(&e, m, 2.0, 3, &pool,
                                         &mut scratch, &mut bt);
         assert_eq!(at, bt);
+    }
+
+    #[test]
+    fn update_item_matches_apply_update_bitwise() {
+        // The enqueueable work item must replay apply_update exactly:
+        // same per-tile streams, same tile order, same overflow total.
+        let run_item = |via_item: bool| {
+            let mut g = noisy_grid();
+            let mut scratch = g.scratch();
+            let grad: Vec<f32> = (0..12 * 9)
+                .map(|i| (((i * 7) % 11) as f32 - 5.0) / 20.0)
+                .collect();
+            let ovf = if via_item {
+                g.update_item(&grad, 0.3, 1.5, 4, &mut scratch).run()
+            } else {
+                g.apply_update(&grad, 0.3, 1.5, 4,
+                               &WorkerPool::serial(), &mut scratch)
+            };
+            let mut w = vec![0.0f32; 12 * 9];
+            g.drift_into(1.5, &WorkerPool::serial(), &mut scratch,
+                         &mut w);
+            (ovf, w, g.total_set_pulses())
+        };
+        assert_eq!(run_item(true), run_item(false));
+    }
+
+    #[test]
+    fn sample_block_auto_tune_tracks_tile_footprint() {
+        // Small tiles fit many samples in the budget; giant tiles fall
+        // to the floor — and the chosen block is always in [2, 64].
+        assert_eq!(sample_block_for(8, 8), MAX_SAMPLE_BLOCK);
+        assert_eq!(sample_block_for(32, 32), 16);
+        assert_eq!(sample_block_for(256, 256), 2);
+        let mut prev = usize::MAX;
+        for t in [4usize, 16, 32, 64, 128, 512] {
+            let b = sample_block_for(t, t);
+            assert!((2..=MAX_SAMPLE_BLOCK).contains(&b));
+            assert!(b <= prev, "block must shrink with tile size");
+            prev = b;
+        }
+        // The grid picks its block from its *largest* tile extent.
+        let g = CrossbarGrid::new(
+            PcmParams::ideal(), ideal_geom(), 10, 7,
+            TilingPolicy { tile_rows: 4, tile_cols: 3 },
+            DacSpec::default(), AdcSpec::default(), 9);
+        if std::env::var("HIC_SAMPLE_BLOCK").is_err() {
+            assert_eq!(g.sample_block, sample_block_for(4, 3));
+        }
     }
 
     #[test]

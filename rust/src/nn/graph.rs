@@ -38,6 +38,23 @@
 //! matrices, activation caches, deltas) live in the layer state and are
 //! reused across steps: the training loop allocates nothing per batch
 //! once warm.
+//!
+//! Pipelined backward ([`GraphNet::backward_update_pipelined`]): the
+//! backward walk is split per weighted layer into a **foreground** half
+//! (error snapshot + transposed VMM, on the calling thread's pool) and
+//! a **background** chain (digital outer-product gradient → hybrid
+//! update → due refresh, on a [`PipelineScope`] lane) so layer `i`'s
+//! gradient/update overlaps layer `i−1`'s VMM.  The per-layer `dout`
+//! snapshot exists because the shared delta ping/pong buffers are
+//! recycled as the walk descends; a memcpy is bitwise-neutral where
+//! recomputation would not be.  Since every stochastic kernel draws
+//! from counter-based `(op, tile[, sample])` sub-streams keyed only on
+//! `(seed, round)` and weighted layers own disjoint grids, the overlap
+//! is pure scheduling — outputs are bitwise identical to the
+//! phase-serial `backward` + `apply_updates` + `refresh` sequence at
+//! any worker count (`rust/tests/prop_pipeline_equivalence.rs`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::crossbar::conv::{col2im_into, im2col_into, PatchGeom};
 use crate::crossbar::grid::CrossbarGrid;
@@ -45,7 +62,7 @@ use crate::crossbar::{AdcSpec, DacSpec, GridScratch, TilingPolicy};
 use crate::hic::weight::HicGeometry;
 use crate::pcm::device::PcmParams;
 use crate::pcm::endurance::EnduranceLedger;
-use crate::util::pool::WorkerPool;
+use crate::util::pool::{PipelineScope, WorkerPool};
 use crate::util::rng::Pcg64;
 
 use super::net::{layer_seed, scaled_width, INIT_STREAM};
@@ -336,6 +353,23 @@ pub(crate) fn ensure(buf: &mut Vec<f32>, need: usize) {
     }
 }
 
+/// Digital weight gradient: input outer product over `rows` sample (or
+/// patch) rows, batch-mean — `grad[i, j] = inv_m · Σ_r in[r, i]·d[r, j]`.
+/// One shared kernel so the phase-serial backward and the pipelined
+/// gradient stage are the same f32 op sequence, bit for bit.
+fn outer_product_grad(input: &[f32], d_out: &[f32], grad: &mut [f32],
+                      rows: usize, k: usize, n: usize, inv_m: f32) {
+    for i in 0..k {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for r in 0..rows {
+                acc += input[r * k + i] * d_out[r * n + j];
+            }
+            grad[i * n + j] = acc * inv_m;
+        }
+    }
+}
+
 /// Per-invocation forward context.
 struct FwdCtx<'a> {
     t_now: f32,
@@ -390,6 +424,10 @@ pub struct DenseLayer {
     escaled: Vec<f32>,
     /// transposed-VMM output staging `[m, k]`
     dtmp: Vec<f32>,
+    /// pipelined-backward error snapshot `[m, n]`: the shared delta
+    /// ping/pong buffers are overwritten as the backward walk descends,
+    /// so the layer keeps its own copy for the deferred gradient stage
+    dout: Vec<f32>,
 }
 
 impl DenseLayer {
@@ -405,6 +443,7 @@ impl DenseLayer {
             grad: vec![0.0; k * n],
             escaled: Vec::new(),
             dtmp: Vec::new(),
+            dout: Vec::new(),
         }
     }
 
@@ -422,36 +461,51 @@ impl DenseLayer {
     fn backward(&mut self, d_out: &[f32], m: usize, ctx: &BwdCtx,
                 d_in: &mut Vec<f32>, need_input_grad: bool) {
         let (k, n) = (self.k, self.n);
-        // Digital weight gradient: input outer product, batch-mean.
-        for i in 0..k {
-            for j in 0..n {
-                let mut acc = 0.0f32;
-                for s in 0..m {
-                    acc += self.input[s * k + i] * d_out[s * n + j];
-                }
-                self.grad[i * n + j] = acc * ctx.inv_m;
-            }
-        }
+        outer_product_grad(&self.input, d_out, &mut self.grad, m, k, n,
+                           ctx.inv_m);
         if need_input_grad {
-            ensure(&mut self.escaled, m * n);
-            for (ev, &dv) in self.escaled[..m * n]
-                .iter_mut()
-                .zip(&d_out[..m * n])
-            {
-                *ev = dv * ctx.gain;
-            }
-            ensure(&mut self.dtmp, m * k);
-            self.grid.vmm_t_batch_into(&self.escaled[..m * n], m,
-                                       ctx.t_now, ctx.round, ctx.pool,
-                                       &mut self.scratch,
-                                       &mut self.dtmp[..m * k]);
-            ensure(d_in, m * k);
-            for (di, &dv) in d_in[..m * k]
-                .iter_mut()
-                .zip(&self.dtmp[..m * k])
-            {
-                *di = dv * ctx.inv_gain;
-            }
+            self.backward_err_vmm(d_out, m, ctx, d_in);
+        }
+    }
+
+    /// The transposed-VMM half of the backward pass (shared verbatim by
+    /// the phase-serial and pipelined walks — same buffers, same f32
+    /// ops, same RNG streams).
+    fn backward_err_vmm(&mut self, d_out: &[f32], m: usize,
+                        ctx: &BwdCtx, d_in: &mut Vec<f32>) {
+        let (k, n) = (self.k, self.n);
+        ensure(&mut self.escaled, m * n);
+        for (ev, &dv) in self.escaled[..m * n]
+            .iter_mut()
+            .zip(&d_out[..m * n])
+        {
+            *ev = dv * ctx.gain;
+        }
+        ensure(&mut self.dtmp, m * k);
+        self.grid.vmm_t_batch_into(&self.escaled[..m * n], m,
+                                   ctx.t_now, ctx.round, ctx.pool,
+                                   &mut self.scratch,
+                                   &mut self.dtmp[..m * k]);
+        ensure(d_in, m * k);
+        for (di, &dv) in d_in[..m * k]
+            .iter_mut()
+            .zip(&self.dtmp[..m * k])
+        {
+            *di = dv * ctx.inv_gain;
+        }
+    }
+
+    /// Pipelined-backward foreground half: snapshot the error (the
+    /// shared delta buffer is recycled as the walk descends) and run
+    /// the transposed VMM; the digital gradient + hybrid update run in
+    /// the background stages ([`GradUpdate`]).
+    fn backward_vmm(&mut self, d_out: &[f32], m: usize, ctx: &BwdCtx,
+                    d_in: &mut Vec<f32>, need_input_grad: bool) {
+        let n = self.n;
+        ensure(&mut self.dout, m * n);
+        self.dout[..m * n].copy_from_slice(&d_out[..m * n]);
+        if need_input_grad {
+            self.backward_err_vmm(d_out, m, ctx, d_in);
         }
     }
 }
@@ -471,6 +525,9 @@ pub struct ConvLayer {
     escaled: Vec<f32>,
     /// transposed-VMM patch-gradient staging `[m·P, K]`
     dpatches: Vec<f32>,
+    /// pipelined-backward error snapshot `[m·P, cout]` (see
+    /// [`DenseLayer`]'s `dout`)
+    dout: Vec<f32>,
 }
 
 impl ConvLayer {
@@ -487,6 +544,7 @@ impl ConvLayer {
             grad: vec![0.0; k * n],
             escaled: Vec::new(),
             dpatches: Vec::new(),
+            dout: Vec::new(),
         }
     }
 
@@ -513,35 +571,51 @@ impl ConvLayer {
         // Digital weight gradient: patch outer product summed over
         // samples *and* positions, batch-mean (1/m, the dense
         // convention — positions sum like the loss does).
-        for ki in 0..k {
-            for j in 0..co {
-                let mut acc = 0.0f32;
-                for r in 0..rows {
-                    acc += self.patches[r * k + ki] * d_out[r * co + j];
-                }
-                self.grad[ki * co + j] = acc * ctx.inv_m;
-            }
-        }
+        outer_product_grad(&self.patches, d_out, &mut self.grad, rows,
+                           k, co, ctx.inv_m);
         if need_input_grad {
-            ensure(&mut self.escaled, rows * co);
-            for (ev, &dv) in self.escaled[..rows * co]
-                .iter_mut()
-                .zip(&d_out[..rows * co])
-            {
-                *ev = dv * ctx.gain;
-            }
-            ensure(&mut self.dpatches, rows * k);
-            self.grid.vmm_t_batch_into(&self.escaled[..rows * co], rows,
-                                       ctx.t_now, ctx.round, ctx.pool,
-                                       &mut self.scratch,
-                                       &mut self.dpatches[..rows * k]);
-            let nin = m * self.geom.in_len();
-            ensure(d_in, nin);
-            col2im_into(&self.geom, &self.dpatches[..rows * k], m,
-                        ctx.pool, &mut d_in[..nin]);
-            for v in d_in[..nin].iter_mut() {
-                *v *= ctx.inv_gain;
-            }
+            self.backward_err_vmm(d_out, m, ctx, d_in);
+        }
+    }
+
+    /// Transposed patch VMM + col2im adjoint scatter (shared verbatim
+    /// by the phase-serial and pipelined walks).
+    fn backward_err_vmm(&mut self, d_out: &[f32], m: usize,
+                        ctx: &BwdCtx, d_in: &mut Vec<f32>) {
+        let k = self.geom.patch_len();
+        let co = self.geom.cout;
+        let rows = self.geom.patch_rows(m);
+        ensure(&mut self.escaled, rows * co);
+        for (ev, &dv) in self.escaled[..rows * co]
+            .iter_mut()
+            .zip(&d_out[..rows * co])
+        {
+            *ev = dv * ctx.gain;
+        }
+        ensure(&mut self.dpatches, rows * k);
+        self.grid.vmm_t_batch_into(&self.escaled[..rows * co], rows,
+                                   ctx.t_now, ctx.round, ctx.pool,
+                                   &mut self.scratch,
+                                   &mut self.dpatches[..rows * k]);
+        let nin = m * self.geom.in_len();
+        ensure(d_in, nin);
+        col2im_into(&self.geom, &self.dpatches[..rows * k], m,
+                    ctx.pool, &mut d_in[..nin]);
+        for v in d_in[..nin].iter_mut() {
+            *v *= ctx.inv_gain;
+        }
+    }
+
+    /// Pipelined-backward foreground half (see
+    /// [`DenseLayer::backward_vmm`]).
+    fn backward_vmm(&mut self, d_out: &[f32], m: usize, ctx: &BwdCtx,
+                    d_in: &mut Vec<f32>, need_input_grad: bool) {
+        let co = self.geom.cout;
+        let rows = self.geom.patch_rows(m);
+        ensure(&mut self.dout, rows * co);
+        self.dout[..rows * co].copy_from_slice(&d_out[..rows * co]);
+        if need_input_grad {
+            self.backward_err_vmm(d_out, m, ctx, d_in);
         }
     }
 }
@@ -822,6 +896,234 @@ impl ResBlock {
     }
 }
 
+// -- pipelined backward/update walk --------------------------------------
+
+/// Commutative step totals folded by the background update stages
+/// (u64-style atomic adds — order-independent, so completion order is
+/// pure scheduling).
+pub struct StepTotals {
+    overflows: AtomicUsize,
+    refreshed: AtomicUsize,
+}
+
+impl StepTotals {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Self {
+        StepTotals {
+            overflows: AtomicUsize::new(0),
+            refreshed: AtomicUsize::new(0),
+        }
+    }
+
+    fn add(&self, ovf: usize, refr: usize) {
+        self.overflows.fetch_add(ovf, Ordering::Relaxed);
+        self.refreshed.fetch_add(refr, Ordering::Relaxed);
+    }
+
+    /// Total LSB→MSB overflow events.
+    pub fn overflows(&self) -> usize {
+        self.overflows.load(Ordering::Relaxed)
+    }
+
+    /// Total refreshed pairs (0 unless the step's refresh was due).
+    pub fn refreshed(&self) -> usize {
+        self.refreshed.load(Ordering::Relaxed)
+    }
+}
+
+/// Per-step update parameters carried into the background stages.
+#[derive(Clone, Copy)]
+struct UpdateArgs {
+    lr: f32,
+    t_now: f32,
+    round: u64,
+    refresh_due: bool,
+}
+
+/// The background half of a weighted layer's backward step, split at
+/// the completion dependency: the **gradient stage** (digital outer
+/// product from the layer's cached activations and error snapshot)
+/// must finish before the **update stage** (hybrid LSB/MSB
+/// `apply_update`, then the due refresh) starts.  Both touch only
+/// layer-owned state and per-layer RNG streams, so stages of different
+/// layers interleave freely without changing a bit.
+trait GradUpdate {
+    fn grad_stage(&mut self, m: usize, inv_m: f32);
+    fn update_stage(&mut self, up: UpdateArgs) -> (usize, usize);
+}
+
+impl GradUpdate for DenseLayer {
+    fn grad_stage(&mut self, m: usize, inv_m: f32) {
+        let (k, n) = (self.k, self.n);
+        outer_product_grad(&self.input, &self.dout, &mut self.grad, m,
+                           k, n, inv_m);
+    }
+
+    fn update_stage(&mut self, up: UpdateArgs) -> (usize, usize) {
+        let ovf = self
+            .grid
+            .update_item(&self.grad, up.lr, up.t_now, up.round,
+                         &mut self.scratch)
+            .run();
+        let refr = if up.refresh_due {
+            self.grid.refresh(up.t_now, up.round, &WorkerPool::serial())
+        } else {
+            0
+        };
+        (ovf, refr)
+    }
+}
+
+impl GradUpdate for ConvLayer {
+    fn grad_stage(&mut self, m: usize, inv_m: f32) {
+        let k = self.geom.patch_len();
+        let co = self.geom.cout;
+        let rows = self.geom.patch_rows(m);
+        outer_product_grad(&self.patches, &self.dout, &mut self.grad,
+                           rows, k, co, inv_m);
+    }
+
+    fn update_stage(&mut self, up: UpdateArgs) -> (usize, usize) {
+        let ovf = self
+            .grid
+            .update_item(&self.grad, up.lr, up.t_now, up.round,
+                         &mut self.scratch)
+            .run();
+        let refr = if up.refresh_due {
+            self.grid.refresh(up.t_now, up.round, &WorkerPool::serial())
+        } else {
+            0
+        };
+        (ovf, refr)
+    }
+}
+
+/// Scheduling state threaded through the pipelined backward walk: the
+/// background lane handle, the step totals, and the adaptive
+/// eager/deferred budget (HyTrainDNN's `k`-fraction) with queue-depth
+/// backpressure.
+struct PipeCtx<'env, 'a> {
+    scope: &'a PipelineScope<'env>,
+    totals: &'env StepTotals,
+    up: UpdateArgs,
+    inv_m: f32,
+    /// gradient/update chains still allowed to run eagerly in the
+    /// background lane this step
+    eager_left: usize,
+    /// defer once the queue backs up past this depth, whatever the
+    /// budget says — the lane is starved for workers
+    depth_cap: usize,
+}
+
+impl<'env> PipeCtx<'env, '_> {
+    /// Hand one weighted layer's gradient + update to the scheduler:
+    /// eagerly as a completion-dependency chain in the background lane
+    /// while the budget and queue depth allow, else parked for the
+    /// end-of-step drain on the calling thread.  Either way the same
+    /// closures run — the split is pure scheduling.
+    fn dispatch<L>(&mut self, layer: &'env mut L, m: usize)
+    where
+        L: GradUpdate + Send + 'env,
+    {
+        let inv_m = self.inv_m;
+        let up = self.up;
+        let totals = self.totals;
+        if self.eager_left > 0
+            && self.scope.queue_depth() < self.depth_cap
+        {
+            self.eager_left -= 1;
+            self.scope.spawn_then(
+                move || {
+                    layer.grad_stage(m, inv_m);
+                    layer
+                },
+                move |layer: &'env mut L| {
+                    let (ovf, refr) = layer.update_stage(up);
+                    totals.add(ovf, refr);
+                },
+            );
+        } else {
+            self.scope.defer(move || {
+                layer.grad_stage(m, inv_m);
+                let (ovf, refr) = layer.update_stage(up);
+                totals.add(ovf, refr);
+            });
+        }
+    }
+}
+
+/// One layer of the pipelined backward walk: weighted layers run their
+/// foreground transposed VMM, then their `&mut` state moves into the
+/// background gradient/update stages; stateless layers backprop inline.
+fn backward_layer_pipelined<'env>(
+    layer: &'env mut Layer, d_out: &[f32], m: usize, ctx: &BwdCtx,
+    d_in: &mut Vec<f32>, need_input_grad: bool,
+    pc: &mut PipeCtx<'env, '_>) {
+    match layer {
+        Layer::Dense(d) => {
+            d.backward_vmm(d_out, m, ctx, d_in, need_input_grad);
+            pc.dispatch(d, m);
+        }
+        Layer::Conv(cv) => {
+            cv.backward_vmm(d_out, m, ctx, d_in, need_input_grad);
+            pc.dispatch(cv, m);
+        }
+        Layer::Residual(r) => {
+            backward_res_pipelined(r, d_out, m, ctx, d_in,
+                                   need_input_grad, pc);
+        }
+        stateless => {
+            stateless.backward(d_out, m, ctx, d_in, need_input_grad);
+        }
+    }
+}
+
+/// Pipelined mirror of [`ResBlock::backward`]: same delta ping/pong
+/// through the body, same projection/skip combine, but every weighted
+/// sublayer is handed to the background lane the moment its foreground
+/// VMM completes.
+fn backward_res_pipelined<'env>(
+    r: &'env mut ResBlock, d_out: &[f32], m: usize, ctx: &BwdCtx,
+    d_in: &mut Vec<f32>, need_input_grad: bool,
+    pc: &mut PipeCtx<'env, '_>) {
+    let ResBlock { body, proj, in_len, out_len, dbody, dtmp, dskip, .. } = r;
+    let (in_len, out_len) = (*in_len, *out_len);
+    let nb = body.len();
+    let need_out = m * out_len;
+    ensure(dbody, need_out);
+    dbody[..need_out].copy_from_slice(&d_out[..need_out]);
+    let mut slots: Vec<Option<&mut Layer>> =
+        body.iter_mut().map(Some).collect();
+    for i in (0..nb).rev() {
+        let inner_need = i > 0 || need_input_grad;
+        let bl = slots[i].take().expect("body layer visited once");
+        let ol = bl.out_len();
+        backward_layer_pipelined(bl, &dbody[..m * ol], m, ctx, dtmp,
+                                 inner_need, pc);
+        if inner_need {
+            std::mem::swap(dbody, dtmp);
+        }
+    }
+    let has_proj = proj.is_some();
+    if let Some(pj) = proj.as_deref_mut() {
+        pj.backward_vmm(d_out, m, ctx, dskip, need_input_grad);
+        pc.dispatch(pj, m);
+    }
+    if need_input_grad {
+        let nin = m * in_len;
+        ensure(d_in, nin);
+        if has_proj {
+            for i in 0..nin {
+                d_in[i] = dbody[i] + dskip[i];
+            }
+        } else {
+            for i in 0..nin {
+                d_in[i] = dbody[i] + d_out[i];
+            }
+        }
+    }
+}
+
 // -- the device graph ----------------------------------------------------
 
 /// A layer-graph network whose every weighted layer lives on its own
@@ -972,6 +1274,67 @@ impl GraphNet {
                                     &mut self.dtmp, need);
             if need {
                 std::mem::swap(&mut self.delta, &mut self.dtmp);
+            }
+        }
+    }
+
+    /// Pipelined backward **and** update: the foreground (calling)
+    /// thread walks the graph top-down exactly like
+    /// [`GraphNet::backward`] — same delta ping/pong, same transposed
+    /// VMMs on the `fg` pool — but the moment a weighted layer's
+    /// backward VMM completes, its digital outer-product gradient and
+    /// hybrid LSB/MSB update (plus the due refresh) are handed to the
+    /// background lane (`scope`) as a completion-dependency chain,
+    /// overlapping with the next layer's VMM.  At most `eager_budget`
+    /// chains run eagerly (HyTrainDNN's `k`-fraction); the rest are
+    /// parked for `scope.drain()` on the caller.  Overflow/refresh
+    /// counts fold into `totals`.
+    ///
+    /// Bitwise identical to `backward` + `apply_updates` (+ `refresh`
+    /// when due) at any worker count: every kernel draws from
+    /// per-(op, tile, sample) counter streams keyed only on
+    /// `(seed, round)`, layers own disjoint grids, and the totals are
+    /// commutative sums — scheduling moves *when* work runs, never
+    /// *what* it computes.  The caller must `scope.drain()` before the
+    /// next forward so updates land before they are read.
+    #[allow(clippy::too_many_arguments)]
+    pub fn backward_update_pipelined<'env>(
+        &'env mut self, dlogits: &[f32], m: usize, t_now: f32,
+        round: u64, fg: &WorkerPool, scope: &PipelineScope<'env>,
+        bwd_gain: f32, lr: f32, refresh_due: bool, eager_budget: usize,
+        totals: &'env StepTotals) {
+        assert_eq!(dlogits.len(), m * self.classes);
+        let GraphNet { layers, delta, dtmp, .. } = self;
+        let ctx = BwdCtx {
+            t_now,
+            round,
+            pool: fg,
+            gain: bwd_gain,
+            inv_gain: 1.0 / bwd_gain,
+            inv_m: 1.0 / m as f32,
+        };
+        ensure(delta, dlogits.len());
+        delta[..dlogits.len()].copy_from_slice(dlogits);
+        let up = UpdateArgs { lr, t_now, round, refresh_due };
+        let mut pc = PipeCtx {
+            scope,
+            totals,
+            up,
+            inv_m: ctx.inv_m,
+            eager_left: eager_budget,
+            depth_cap: 2 * scope.workers().max(1),
+        };
+        let nl = layers.len();
+        let mut slots: Vec<Option<&mut Layer>> =
+            layers.iter_mut().map(Some).collect();
+        for i in (0..nl).rev() {
+            let need = i > 0;
+            let layer = slots[i].take().expect("layer visited once");
+            let ol = layer.out_len();
+            backward_layer_pipelined(layer, &delta[..m * ol], m, &ctx,
+                                     dtmp, need, &mut pc);
+            if need {
+                std::mem::swap(delta, dtmp);
             }
         }
     }

@@ -29,7 +29,11 @@
 //! The training loop lives in
 //! [`crate::coordinator::nettrainer::NetTrainer`]; the fig4 sweeps in
 //! `exp::gridexp::run_fig4`.  Everything inherits the grid determinism
-//! contract: bitwise identical for any worker count.
+//! contract: bitwise identical for any worker count — which is what
+//! lets the pipelined trainer overlap each layer's gradient/update
+//! chain with the backward VMM walk
+//! ([`GraphNet::backward_update_pipelined`]) without changing a single
+//! bit of the result.
 
 pub mod baseline;
 pub mod features;
@@ -38,5 +42,6 @@ pub mod net;
 
 pub use baseline::{FpGraphNet, FpNet};
 pub use features::{BlobDataset, FeatureSource, PooledCifar};
-pub use graph::{resnet_spec, ActShape, GraphNet, GraphSpec, LayerSpec};
+pub use graph::{resnet_spec, ActShape, GraphNet, GraphSpec, LayerSpec,
+                StepTotals};
 pub use net::NetSpec;

@@ -15,9 +15,44 @@
 //! each mutex is locked exactly once, so there is no contention, only a
 //! borrow-checker-friendly way to move `&mut` access across threads.
 //! No dependencies beyond `std` (the tree builds offline).
+//!
+//! # Pipeline scope (task-graph submission)
+//!
+//! [`WorkerPool::run`] is a flat fan-out with a barrier: every shard of
+//! one kernel finishes before the caller proceeds.  The pipelined
+//! trainer (`coordinator::nettrainer`) needs the complementary shape —
+//! a **background lane** that chews per-layer gradient/update tasks
+//! *while* the calling thread keeps driving the backward VMM chain.
+//! [`WorkerPool::pipeline`] provides it: the pool's workers become a
+//! scoped background executor fed through a [`PipelineScope`] handle.
+//!
+//! * [`PipelineScope::spawn`] — enqueue an independent task.
+//! * [`PipelineScope::spawn_then`] — **completion-dependency
+//!   submission**: a two-stage chain where stage 1's completion
+//!   enqueues stage 2, handing its return value across (for the
+//!   trainer: the gradient stage passes the layer's `&mut` state on to
+//!   the update stage).  Stage 2 re-enters the shared queue, so other
+//!   chains interleave between the stages — a tiny task graph, not a
+//!   serial closure.
+//! * [`PipelineScope::defer`] — park a task for the end-of-step
+//!   [`PipelineScope::drain`], which runs deferred tasks **on the
+//!   calling thread** (and then helps empty the queue) while the
+//!   background lane finishes its eager tasks.  This is the
+//!   backpressure half of the adaptive eager/deferred split.
+//!
+//! Every task must obey the same determinism contract as `run` shards:
+//! own state, own counter-based RNG streams, commutative side-totals.
+//! Then eager vs. deferred vs. worker count is pure scheduling and the
+//! outputs stay bitwise identical — which is what lets the pipelined
+//! trainer reuse the phase-serial goldens unchanged.
+//!
+//! `pipeline` joins its workers before returning (it drains first), so
+//! tasks may safely borrow `&mut` state from the caller's environment
+//! (`'env`), exactly like `std::thread::scope`.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
 
 /// A fixed-width worker pool.  Cheap to construct (threads are spawned
 /// per [`WorkerPool::run`] call and joined before it returns, so no
@@ -99,6 +134,231 @@ impl WorkerPool {
             }
         });
     }
+
+    /// Run `f` with a [`PipelineScope`] whose background lane has this
+    /// pool's worker count.  All tasks spawned into the scope complete
+    /// before `pipeline` returns (an implicit [`PipelineScope::drain`]
+    /// runs after `f`), so tasks may borrow from the caller's
+    /// environment, `std::thread::scope`-style.
+    pub fn pipeline<'env, F, R>(&self, f: F) -> R
+    where
+        F: FnOnce(&PipelineScope<'env>) -> R,
+    {
+        let scope = PipelineScope::new(self.workers);
+        std::thread::scope(|s| {
+            for _ in 0..self.workers {
+                s.spawn(|| scope.worker_loop());
+            }
+            let r = f(&scope);
+            scope.drain();
+            scope.close();
+            r
+        })
+    }
+}
+
+// -- pipeline scope ------------------------------------------------------
+
+type Job<'env> = Box<dyn FnOnce() + Send + 'env>;
+
+/// A queued unit of work.  `Chain` tasks return an optional follow-up
+/// that the finishing worker re-enqueues — completion-dependency
+/// submission without the queue ever borrowing itself.
+enum Task<'env> {
+    Run(Job<'env>),
+    Chain(Box<dyn FnOnce() -> Option<Task<'env>> + Send + 'env>),
+}
+
+struct PipeState<'env> {
+    queue: VecDeque<Task<'env>>,
+    /// tasks parked for the end-of-step drain (run on the caller)
+    deferred: Vec<Job<'env>>,
+    /// tasks enqueued or running, not yet finished; a chain stage that
+    /// finishes with a follow-up hands its slot to the follow-up
+    pending: usize,
+    closed: bool,
+}
+
+/// Counters of one pipeline run (scheduling telemetry only — the task
+/// outputs are invariant to how work was split).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PipelineStats {
+    /// tasks executed on the background workers
+    pub eager: usize,
+    /// deferred jobs executed on the calling thread during `drain`
+    pub deferred: usize,
+}
+
+/// Handle to the background lane of [`WorkerPool::pipeline`]: spawn
+/// eager tasks and task chains, park deferred jobs, and drain.  Tasks
+/// are `FnOnce() + Send + 'env` closures; the scope joins before
+/// `pipeline` returns, so they may capture `&mut` borrows of disjoint
+/// caller state.
+pub struct PipelineScope<'env> {
+    state: Mutex<PipeState<'env>>,
+    /// workers wait here for tasks
+    work_cv: Condvar,
+    /// `drain` waits here for in-flight tasks
+    done_cv: Condvar,
+    workers: usize,
+    ran_eager: AtomicUsize,
+    ran_deferred: AtomicUsize,
+}
+
+impl<'env> PipelineScope<'env> {
+    fn new(workers: usize) -> Self {
+        PipelineScope {
+            state: Mutex::new(PipeState {
+                queue: VecDeque::new(),
+                deferred: Vec::new(),
+                pending: 0,
+                closed: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            workers,
+            ran_eager: AtomicUsize::new(0),
+            ran_deferred: AtomicUsize::new(0),
+        }
+    }
+
+    /// Width of the background lane.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Tasks currently queued (not yet picked up) — the backpressure
+    /// signal the adaptive eager/deferred split reads.
+    pub fn queue_depth(&self) -> usize {
+        self.state.lock().unwrap().queue.len()
+    }
+
+    /// Scheduling counters so far (eager tasks count chain stages
+    /// individually).
+    pub fn stats(&self) -> PipelineStats {
+        PipelineStats {
+            eager: self.ran_eager.load(Ordering::Relaxed),
+            deferred: self.ran_deferred.load(Ordering::Relaxed),
+        }
+    }
+
+    fn push(&self, task: Task<'env>) {
+        let mut st = self.state.lock().unwrap();
+        st.pending += 1;
+        st.queue.push_back(task);
+        drop(st);
+        self.work_cv.notify_one();
+    }
+
+    /// Enqueue an independent task for the background lane.
+    pub fn spawn(&self, job: impl FnOnce() + Send + 'env) {
+        self.push(Task::Run(Box::new(job)));
+    }
+
+    /// Enqueue a two-stage chain: `first` runs, and its **completion**
+    /// enqueues `then(first())` as a fresh task — other tasks interleave
+    /// between the stages.  The payload hand-off is how exclusive
+    /// (`&mut`) state moves from a producing stage to its dependent
+    /// consumer.
+    pub fn spawn_then<T, F1, F2>(&self, first: F1, then: F2)
+    where
+        T: Send + 'env,
+        F1: FnOnce() -> T + Send + 'env,
+        F2: FnOnce(T) + Send + 'env,
+    {
+        self.push(Task::Chain(Box::new(move || {
+            let mid = first();
+            Some(Task::Run(Box::new(move || then(mid))))
+        })));
+    }
+
+    /// Park a job for [`PipelineScope::drain`], where it runs on the
+    /// calling thread — the "deferred" half of the adaptive split, used
+    /// when the background lane is already saturated.
+    pub fn defer(&self, job: impl FnOnce() + Send + 'env) {
+        self.state.lock().unwrap().deferred.push(Box::new(job));
+    }
+
+    /// Execute one task and settle its accounting; shared by the
+    /// background workers and the caller's help loop in `drain`.
+    fn run_task(&self, task: Task<'env>) {
+        let follow = match task {
+            Task::Run(job) => {
+                job();
+                None
+            }
+            Task::Chain(stage) => stage(),
+        };
+        self.ran_eager.fetch_add(1, Ordering::Relaxed);
+        let mut st = self.state.lock().unwrap();
+        match follow {
+            Some(next) => {
+                // The finished stage hands its pending slot to its
+                // follow-up: push without touching the count.
+                st.queue.push_back(next);
+                drop(st);
+                self.work_cv.notify_one();
+            }
+            None => {
+                st.pending -= 1;
+                if st.pending == 0 {
+                    drop(st);
+                    self.done_cv.notify_all();
+                }
+            }
+        }
+    }
+
+    fn worker_loop(&self) {
+        loop {
+            let task = {
+                let mut st = self.state.lock().unwrap();
+                loop {
+                    if let Some(t) = st.queue.pop_front() {
+                        break t;
+                    }
+                    if st.closed {
+                        return;
+                    }
+                    st = self.work_cv.wait(st).unwrap();
+                }
+            };
+            self.run_task(task);
+        }
+    }
+
+    /// Run every deferred job on the calling thread, help the workers
+    /// empty the queue, then block until all in-flight tasks finish.
+    /// After `drain` returns, every effect of every spawned/deferred
+    /// task is visible to the caller.
+    pub fn drain(&self) {
+        loop {
+            let job = self.state.lock().unwrap().deferred.pop();
+            match job {
+                Some(j) => {
+                    j();
+                    self.ran_deferred.fetch_add(1, Ordering::Relaxed);
+                }
+                None => break,
+            }
+        }
+        loop {
+            let task = self.state.lock().unwrap().queue.pop_front();
+            match task {
+                Some(t) => self.run_task(t),
+                None => break,
+            }
+        }
+        let mut st = self.state.lock().unwrap();
+        while st.pending != 0 {
+            st = self.done_cv.wait(st).unwrap();
+        }
+    }
+
+    fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.work_cv.notify_all();
+    }
 }
 
 #[cfg(test)]
@@ -153,5 +413,101 @@ mod tests {
     fn clamps_to_at_least_one_worker() {
         assert_eq!(WorkerPool::new(0).workers(), 1);
         assert!(WorkerPool::from_env().workers() >= 1);
+    }
+
+    #[test]
+    fn pipeline_runs_spawned_and_deferred_tasks() {
+        for workers in [1, 2, 4] {
+            let pool = WorkerPool::new(workers);
+            let hits = AtomicUsize::new(0);
+            let stats = pool.pipeline(|scope| {
+                for _ in 0..7 {
+                    scope.spawn(|| {
+                        hits.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+                for _ in 0..3 {
+                    scope.defer(|| {
+                        hits.fetch_add(10, Ordering::Relaxed);
+                    });
+                }
+                scope.stats()
+            });
+            // pipeline drains before returning: all effects visible.
+            assert_eq!(hits.load(Ordering::Relaxed), 37,
+                       "workers={workers}");
+            let _ = stats; // counters race with the final drain; the
+                           // post-drain assertion below is the real pin
+        }
+    }
+
+    #[test]
+    fn pipeline_tasks_can_own_disjoint_mut_borrows() {
+        // The trainer's pattern: per-item `&mut` borrows move into
+        // tasks (slot/take), the scope joins before the borrows end.
+        let mut items = vec![0u64; 16];
+        let pool = WorkerPool::new(3);
+        pool.pipeline(|scope| {
+            for (i, item) in items.iter_mut().enumerate() {
+                scope.spawn(move || {
+                    *item = (i as u64 + 1) * 3;
+                });
+            }
+        });
+        let want: Vec<u64> = (1..=16).map(|v| v * 3).collect();
+        assert_eq!(items, want);
+    }
+
+    #[test]
+    fn spawn_then_hands_payload_to_dependent_stage() {
+        // Chains: stage 2 only runs after stage 1 completes, and the
+        // payload (here an exclusive borrow) crosses the dependency.
+        let mut cells = vec![0u32; 8];
+        let order = Mutex::new(Vec::new());
+        let pool = WorkerPool::new(2);
+        pool.pipeline(|scope| {
+            for (i, cell) in cells.iter_mut().enumerate() {
+                let order = &order;
+                scope.spawn_then(
+                    move || {
+                        *cell = i as u32 + 1;
+                        order.lock().unwrap().push((i, 1));
+                        cell
+                    },
+                    move |cell| {
+                        *cell *= 10;
+                        order.lock().unwrap().push((i, 2));
+                    },
+                );
+            }
+        });
+        let want: Vec<u32> = (1..=8).map(|v| v * 10).collect();
+        assert_eq!(cells, want);
+        // Per chain, stage 1 strictly precedes stage 2.
+        let log = order.into_inner().unwrap();
+        for i in 0..8 {
+            let p1 = log.iter().position(|&e| e == (i, 1)).unwrap();
+            let p2 = log.iter().position(|&e| e == (i, 2)).unwrap();
+            assert!(p1 < p2, "chain {i} stages out of order");
+        }
+    }
+
+    #[test]
+    fn explicit_drain_makes_effects_visible_mid_scope() {
+        let pool = WorkerPool::new(2);
+        let flag = AtomicUsize::new(0);
+        pool.pipeline(|scope| {
+            scope.spawn(|| {
+                flag.fetch_add(1, Ordering::Relaxed);
+            });
+            scope.defer(|| {
+                flag.fetch_add(1, Ordering::Relaxed);
+            });
+            scope.drain();
+            assert_eq!(flag.load(Ordering::Relaxed), 2);
+            let st = scope.stats();
+            assert_eq!((st.eager, st.deferred), (1, 1));
+            assert_eq!(scope.queue_depth(), 0);
+        });
     }
 }

@@ -1,0 +1,146 @@
+//! Pipelined-trainer equivalence suite (`coordinator::nettrainer`
+//! [`TrainMode::Pipelined`] vs. the phase-serial reference).
+//!
+//! Contract pinned here (see the `coordinator::nettrainer` and
+//! `util::pool` module docs):
+//!
+//! * a full `NetTrainer` run in **pipelined** mode — per-layer
+//!   gradient/update chains overlapping the backward transposed-VMM
+//!   walk on an adaptively split pool — is **bitwise identical** to
+//!   the phase-serial schedule on the same pool, for worker counts
+//!   {1, 4, 8}, with the full noisy device model on: losses, overflow
+//!   and refresh counters, evaluation results and total SET pulses all
+//!   match exactly, on both dense MLP stacks and conv/residual
+//!   (resnet) graphs;
+//! * the pipelined trainer is itself **worker-count invariant**: any
+//!   multi-worker pipelined run equals the single-worker run bit for
+//!   bit, whatever eager/deferred placement the adaptive `k`
+//!   controller happens to pick (wall-clock noise moves `k`, `k` only
+//!   moves scheduling).
+//!
+//! Both facts follow from the grid determinism contract — every
+//! stochastic kernel draws from counter-based per-(op, tile[, sample])
+//! RNG sub-streams keyed only on (layer seed, round), weighted layers
+//! own disjoint grids, and side-totals are commutative sums — so the
+//! overlap is pure scheduling.  These properties are what let the
+//! fig4 goldens stay byte-identical while the default trainer mode
+//! switched to `Pipelined`.
+
+use hic_train::coordinator::nettrainer::{NetTrainer, NetTrainerOptions,
+                                         TrainMode};
+use hic_train::crossbar::TilingPolicy;
+use hic_train::nn::features::{BlobDataset, FeatureSource};
+use hic_train::nn::graph::GraphSpec;
+use hic_train::pcm::device::PcmParams;
+use hic_train::testutil::prop;
+use hic_train::util::pool::WorkerPool;
+
+/// Everything a training-plus-eval run observes: per-step losses,
+/// overflow/refresh counters, eval (loss, acc), total SET pulses.
+type RunSig = (Vec<f64>, usize, usize, (f64, f64), u64);
+
+fn mlp_run(dims: &[usize], tile: usize, batch: usize, seed: u64,
+           steps: usize, workers: usize, mode: TrainMode) -> RunSig {
+    let data = FeatureSource::Blobs(BlobDataset::new(
+        seed, dims[0], *dims.last().unwrap(), 0.4, 60, 24));
+    let mut t = NetTrainer::new(
+        PcmParams::default(), dims,
+        TilingPolicy { tile_rows: tile, tile_cols: tile }, data,
+        WorkerPool::new(workers),
+        NetTrainerOptions { seed, batch, refresh_every: 3, mode,
+                            ..Default::default() });
+    t.train_steps(steps);
+    let ev = t.evaluate(12, t.clock.now_f32());
+    (t.losses.clone(), t.overflows, t.refreshed, ev,
+     t.total_set_pulses())
+}
+
+fn resnet_run(workers: usize, mode: TrainMode) -> RunSig {
+    // Fixed tiny resnet: stem conv, stride-2 residual stages with a
+    // projection, GAP, dense head — every pipelined layer kind.
+    let seed = 7u64;
+    let spec = GraphSpec::resnet([4, 4, 2], [3, 4, 5], 1, 3, 1000);
+    let data = FeatureSource::Blobs(
+        BlobDataset::with_shape(seed, 4, 4, 2, 3, 0.4, 60, 24));
+    let mut t = NetTrainer::from_spec(
+        PcmParams::default(), &spec,
+        TilingPolicy { tile_rows: 4, tile_cols: 4 }, data,
+        WorkerPool::new(workers),
+        NetTrainerOptions { seed, batch: 3, refresh_every: 2, mode,
+                            ..Default::default() });
+    t.train_steps(3);
+    let ev = t.evaluate(8, t.clock.now_f32());
+    (t.losses.clone(), t.overflows, t.refreshed, ev,
+     t.total_set_pulses())
+}
+
+/// Pipelined == phase-serial, bit for bit, at workers {1, 4, 8}, on
+/// randomized dense stacks with the full noisy device model.
+#[test]
+fn prop_pipelined_matches_phase_serial() {
+    prop("pipelined == phase-serial (MLP)", 4, |g| {
+        let h1 = g.usize_in(4, 9);
+        let h2 = g.usize_in(3, 7);
+        let tile = g.usize_in(2, 5);
+        let batch = g.usize_in(2, 5);
+        let seed = g.u64_below(1 << 24);
+        let dims = [6, h1, h2, 3];
+        for workers in [1usize, 4, 8] {
+            let serial = mlp_run(&dims, tile, batch, seed, 5, workers,
+                                 TrainMode::PhaseSerial);
+            let piped = mlp_run(&dims, tile, batch, seed, 5, workers,
+                                TrainMode::Pipelined);
+            if serial != piped {
+                return Err(format!(
+                    "pipelined diverges from phase-serial at \
+                     workers={workers} (dims={dims:?} tile={tile} \
+                     batch={batch})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Pipelined == phase-serial on the conv/residual graph too — the
+/// residual walk dispatches body layers and the 1×1 projection into
+/// the background lane, and must still match the serial schedule
+/// exactly at workers {1, 4, 8}.
+#[test]
+fn pipelined_matches_phase_serial_resnet() {
+    let reference = resnet_run(1, TrainMode::PhaseSerial);
+    for workers in [1usize, 4, 8] {
+        for mode in [TrainMode::PhaseSerial, TrainMode::Pipelined] {
+            assert_eq!(reference, resnet_run(workers, mode),
+                       "resnet run diverges at workers={workers} \
+                        mode={mode:?}");
+        }
+    }
+}
+
+/// Worker-count invariance of the pipelined trainer itself: however
+/// the adaptive `k` split carves the pool, the run equals the
+/// single-worker run bit for bit.
+#[test]
+fn prop_pipelined_worker_count_invariant() {
+    prop("pipelined trainer invariant across workers", 4, |g| {
+        let h1 = g.usize_in(4, 9);
+        let h2 = g.usize_in(3, 7);
+        let tile = g.usize_in(2, 5);
+        let batch = g.usize_in(2, 5);
+        let seed = g.u64_below(1 << 24);
+        let dims = [6, h1, h2, 3];
+        let run = |workers: usize| {
+            mlp_run(&dims, tile, batch, seed, 5, workers,
+                    TrainMode::Pipelined)
+        };
+        let a = run(1);
+        for workers in [4usize, 8] {
+            if a != run(workers) {
+                return Err(format!(
+                    "pipelined trainer diverges at workers={workers} \
+                     (dims={dims:?} tile={tile} batch={batch})"));
+            }
+        }
+        Ok(())
+    });
+}
