@@ -1,0 +1,122 @@
+//! Serving-path benches: full coalesced trace replays against a frozen
+//! [`ModelSnapshot`] across coalescing windows and worker counts.
+//!
+//! `BENCH_serve.json` records requests/sec per case (one benched
+//! element = one served request) plus, in the speedups map, the
+//! **simulated** coalescing-latency quantiles per window
+//! (`sim_p50_latency_us_*` / `sim_p99_latency_us_*`, microseconds of
+//! simulated queue wait — deterministic, worker-invariant numbers
+//! straight from the discrete-event replay) and the worker-scaling and
+//! batching-leverage ratios.  Wall-clock throughput and simulated wait
+//! are the two halves of the serving latency story: the scheduler
+//! trades queue wait (grows with the window) for VMM batching leverage
+//! (throughput grows with the window).
+
+use hic_train::bench::Bench;
+use hic_train::coordinator::nettrainer::{NetTrainer, NetTrainerOptions};
+use hic_train::crossbar::TilingPolicy;
+use hic_train::nn::features::{BlobDataset, FeatureSource};
+use hic_train::pcm::device::PcmParams;
+use hic_train::serve::{gen_trace, serve_trace, CoalescePolicy,
+                       ModelSnapshot, Request};
+use hic_train::util::pool::WorkerPool;
+
+const DIM: usize = 64;
+const CLASSES: usize = 10;
+const TILE: usize = 32;
+const TEST_LEN: usize = 512;
+const REQUESTS: usize = 256;
+const MEAN_GAP: f64 = 1e-3;
+const MAX_BATCH: usize = 32;
+const QUEUE_CAP: usize = 64;
+
+/// (tag, window seconds) sweep — 0 = no coalescing, then 2×/8×/32× the
+/// mean inter-arrival gap.
+const WINDOWS: [(&str, f64); 4] =
+    [("0us", 0.0), ("2ms", 2e-3), ("8ms", 8e-3), ("32ms", 32e-3)];
+
+fn snapshot(workers: usize) -> ModelSnapshot {
+    let params = PcmParams {
+        nonlinear: false,
+        write_noise: false,
+        read_noise: true,
+        drift: true,
+        drift_nu_sigma: 0.0,
+        ..Default::default()
+    };
+    let data = FeatureSource::Blobs(
+        BlobDataset::new(7, DIM, CLASSES, 0.4, 4096, TEST_LEN));
+    let mut t = NetTrainer::new(
+        params, &[DIM, 128, 64, CLASSES],
+        TilingPolicy { tile_rows: TILE, tile_cols: TILE }, data,
+        WorkerPool::new(workers),
+        NetTrainerOptions { batch: 16, ..Default::default() });
+    t.train_steps(4);
+    ModelSnapshot::freeze(t, 64)
+}
+
+fn policy(window: f64) -> CoalescePolicy {
+    CoalescePolicy { window, max_batch: MAX_BATCH, queue_cap: QUEUE_CAP }
+}
+
+fn main() {
+    let mut b = Bench::new("serve");
+    let trace: Vec<Request> =
+        gen_trace(7, 0, REQUESTS, MEAN_GAP, TEST_LEN);
+    let elements = REQUESTS as f64;
+    let mut preds = Vec::new();
+    // Simulated queue-wait quantiles ride along in the speedups map
+    // (deterministic replay numbers, not wall-clock measurements).
+    let mut extras: Vec<(String, f64)> = Vec::new();
+
+    // Coalescing-window sweep at 4 workers: batching leverage.
+    let pool = WorkerPool::new(4);
+    let mut snap = snapshot(4);
+    for (tag, window) in WINDOWS {
+        let stats = serve_trace(&mut snap, &trace, &policy(window), 1e5,
+                                true, &pool, &mut preds);
+        extras.push((format!("sim_p50_latency_us_{tag}"),
+                     stats.p50_latency * 1e6));
+        extras.push((format!("sim_p99_latency_us_{tag}"),
+                     stats.p99_latency * 1e6));
+        b.bench_with_elements(
+            &format!("serve_trace_{tag}_workers4"), Some(elements),
+            || {
+                serve_trace(&mut snap, &trace, &policy(window), 1e5,
+                            true, &pool, &mut preds);
+            });
+    }
+
+    // Worker scaling at the widest window (largest coalesced batches —
+    // the case with parallelism to exploit; the 4-worker point is the
+    // window sweep's last case above).
+    for workers in [1usize, 8] {
+        let pool = WorkerPool::new(workers);
+        let mut snap = snapshot(workers);
+        b.bench_with_elements(
+            &format!("serve_trace_32ms_workers{workers}"),
+            Some(elements),
+            || {
+                serve_trace(&mut snap, &trace, &policy(32e-3), 1e5,
+                            true, &pool, &mut preds);
+            });
+    }
+
+    let mut speedups = extras;
+    for (label, base, cont) in [
+        ("serve_coalesce_32ms_vs_0us",
+         "serve_trace_0us_workers4", "serve_trace_32ms_workers4"),
+        ("serve_w4_vs_w1",
+         "serve_trace_32ms_workers1", "serve_trace_32ms_workers4"),
+        ("serve_w8_vs_w1",
+         "serve_trace_32ms_workers1", "serve_trace_32ms_workers8"),
+    ] {
+        if let Some(s) = b.speedup(base, cont) {
+            println!("[serve] {label}: {s:.2}x");
+            speedups.push((label.to_string(), s));
+        }
+    }
+    b.write_json(std::path::Path::new("BENCH_serve.json"), &speedups)
+        .expect("writing BENCH_serve.json");
+    b.finish();
+}

@@ -418,6 +418,18 @@ impl NetTrainer {
         (loss_sum / n as f64, hits as f64 / n as f64)
     }
 
+    /// Train→freeze handoff to the serving layer
+    /// ([`crate::serve::ModelSnapshot::freeze`] is the caller): consume
+    /// the trainer and hand over the trained net (its conductance
+    /// planes are sealed behind the snapshot's read-only API from here
+    /// on), the feature source (train split = calibration set, test
+    /// split = request corpus) and the drift clock's current time —
+    /// the shared clock keeps ticking in the snapshot, training just
+    /// stops advancing it.
+    pub fn freeze(self) -> (GraphNet, FeatureSource, f64) {
+        (self.net, self.data, self.clock.now)
+    }
+
     /// Endurance snapshot folded over every grid's tiles.
     pub fn endurance(&self) -> EnduranceLedger {
         let mut ledger = EnduranceLedger::new();

@@ -63,6 +63,16 @@
 //!   plane deviates first, then G−), applied through
 //!   `tile::read_noisy_weights_prefilled`.
 //!
+//! The forward kernel additionally takes a **sample-base offset**
+//! ([`CrossbarGrid::vmm_batch_base_into`]): the per-sample stream id
+//! becomes `sample_base + s`, so a caller that assigns globally unique
+//! ids to its rows (the serving scheduler's request trace, the conv
+//! patch rows of a coalesced inference batch) gets per-row outputs
+//! that depend only on `(seed, round, global id)` — never on how rows
+//! were coalesced into batches.  [`CrossbarGrid::vmm_batch_into`] is
+//! the `sample_base = 0` case, so every training path is byte-
+//! identical to before the offset existed.
+//!
 //! Because a stream depends only on these stable ids — never on the
 //! worker, the shard decomposition or the sample-block size — **all
 //! grid kernels are bitwise identical for any worker count and any
@@ -505,6 +515,26 @@ impl CrossbarGrid {
     pub fn vmm_batch_into(&self, x: &[f32], m: usize, t_now: f32,
                           round: u64, pool: &WorkerPool,
                           scratch: &mut GridScratch, out: &mut [f32]) {
+        self.vmm_batch_base_into(x, m, t_now, round, 0, pool, scratch,
+                                 out);
+    }
+
+    /// [`CrossbarGrid::vmm_batch_into`] with a **sample-base offset**:
+    /// row `s` of the batch draws its read noise from the
+    /// `(OP_VMM, tile, sample_base + s)` sub-stream.  Because every
+    /// per-row quantity (noise segment, micro-kernel row, ADC) is
+    /// computed independently of the other rows in the batch, output
+    /// row `s` depends only on `(seed, round, sample_base + s)` — a
+    /// batch of rows with globally unique ids is bit-equal to the
+    /// concatenation of any other batching of the same rows at the
+    /// same `round` (the serving scheduler's coalescing-invariance
+    /// contract; `rust/tests/prop_serve_equivalence.rs`).
+    /// `sample_base = 0` reproduces `vmm_batch_into` exactly.
+    pub fn vmm_batch_base_into(&self, x: &[f32], m: usize, t_now: f32,
+                               round: u64, sample_base: u64,
+                               pool: &WorkerPool,
+                               scratch: &mut GridScratch,
+                               out: &mut [f32]) {
         let k = self.k();
         let n = self.n();
         assert_eq!(x.len(), m * k);
@@ -568,7 +598,8 @@ impl CrossbarGrid {
                     grow(&mut strip.noise, bs * 2 * nt);
                     strip.rngs.clear();
                     strip.rngs.extend((s0..s0 + bs).map(|s| {
-                        op_sample_rng(seed, round, OP_VMM, ti, s as u64)
+                        op_sample_rng(seed, round, OP_VMM, ti,
+                                      sample_base.wrapping_add(s as u64))
                     }));
                     fill_gaussian_block(&mut strip.rngs, 2 * nt,
                                         &mut strip.noise[..bs * 2 * nt],
@@ -992,6 +1023,55 @@ impl CrossbarGrid {
             })
             .sum()
     }
+
+    /// Read-only serving view of this grid (see [`GridView`]): the
+    /// conductance planes are sealed behind a shared borrow — only the
+    /// RNG-pure read kernels are reachable — and `gain` is the digital
+    /// post-ADC calibration multiplier of the drift-compensated
+    /// inference path (`serve::ModelSnapshot`).
+    pub fn view(&self, gain: f32) -> GridView<'_> {
+        GridView { grid: self, gain }
+    }
+}
+
+/// A sealed, read-only view of a [`CrossbarGrid`] with a digital
+/// calibration gain hook — the grid-level half of the serving
+/// snapshot contract:
+///
+/// * the shared borrow makes mutation (programming, updates, refresh)
+///   unrepresentable while the view is alive — the drift clock keeps
+///   ticking through `t_now`, but the programmed state is frozen;
+/// * `gain` multiplies every ADC output when (and only when) it is not
+///   exactly `1.0`, so a freshly-frozen view (`gain == 1.0`) is
+///   **bitwise identical** to the underlying grid's forward kernel,
+///   and a recalibrated view applies one f32 multiply per output
+///   element — the "global gain recalibration" compensation of
+///   Joshi et al. 2019 as a pure post-processing stage.
+pub struct GridView<'a> {
+    pub grid: &'a CrossbarGrid,
+    pub gain: f32,
+}
+
+impl GridView<'_> {
+    /// Forward VMM through the sealed grid (sample-base offset as in
+    /// [`CrossbarGrid::vmm_batch_base_into`]), then the calibration
+    /// gain.  The gain multiply preserves the per-row independence
+    /// contract: it is elementwise, so coalescing invariance carries
+    /// over to calibrated serving unchanged.
+    #[allow(clippy::too_many_arguments)]
+    pub fn vmm_batch_base_into(&self, x: &[f32], m: usize, t_now: f32,
+                               round: u64, sample_base: u64,
+                               pool: &WorkerPool,
+                               scratch: &mut GridScratch,
+                               out: &mut [f32]) {
+        self.grid.vmm_batch_base_into(x, m, t_now, round, sample_base,
+                                      pool, scratch, out);
+        if self.gain != 1.0 {
+            for v in out[..m * self.grid.n()].iter_mut() {
+                *v *= self.gain;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -1104,6 +1184,65 @@ mod tests {
                            "bwd B={b} workers={workers}");
             }
         }
+    }
+
+    #[test]
+    fn sample_base_zero_matches_vmm_batch_and_offsets_reseed() {
+        // base = 0 must reproduce vmm_batch_into bit for bit; a
+        // nonzero base shifts every row onto a different noise
+        // sub-stream; and a batch is the concatenation of its rows run
+        // one at a time with the same global ids (the serving
+        // coalescing contract).
+        let g = noisy_grid();
+        let m = 4;
+        let x: Vec<f32> =
+            (0..m * 12).map(|i| ((i % 9) as f32 - 4.0) / 4.0).collect();
+        let pool = WorkerPool::new(2);
+        let mut scratch = g.scratch();
+        let base = vec![0.0f32; m * 9];
+        let mut a = base.clone();
+        let mut b = base.clone();
+        g.vmm_batch_into(&x, m, 2.0, 5, &pool, &mut scratch, &mut a);
+        g.vmm_batch_base_into(&x, m, 2.0, 5, 0, &pool, &mut scratch,
+                              &mut b);
+        assert_eq!(a, b);
+        let mut c = base.clone();
+        g.vmm_batch_base_into(&x, m, 2.0, 5, 100, &pool, &mut scratch,
+                              &mut c);
+        assert_ne!(a, c);
+        // Row r of the offset batch == a single-sample run at
+        // sample_base = 100 + r.
+        for r in 0..m {
+            let mut row = vec![0.0f32; 9];
+            g.vmm_batch_base_into(&x[r * 12..(r + 1) * 12], 1, 2.0, 5,
+                                  100 + r as u64, &pool, &mut scratch,
+                                  &mut row);
+            assert_eq!(&c[r * 9..(r + 1) * 9], &row[..], "row {r}");
+        }
+    }
+
+    #[test]
+    fn grid_view_gain_hook() {
+        // gain == 1.0 is bitwise transparent; any other gain is one
+        // f32 multiply per output element.
+        let g = noisy_grid();
+        let m = 3;
+        let x: Vec<f32> =
+            (0..m * 12).map(|i| ((i % 9) as f32 - 4.0) / 4.0).collect();
+        let pool = WorkerPool::serial();
+        let mut scratch = g.scratch();
+        let mut raw = vec![0.0f32; m * 9];
+        g.vmm_batch_base_into(&x, m, 2.0, 5, 7, &pool, &mut scratch,
+                              &mut raw);
+        let mut a = vec![0.0f32; m * 9];
+        g.view(1.0).vmm_batch_base_into(&x, m, 2.0, 5, 7, &pool,
+                                        &mut scratch, &mut a);
+        assert_eq!(a, raw);
+        let mut b = vec![0.0f32; m * 9];
+        g.view(1.25).vmm_batch_base_into(&x, m, 2.0, 5, 7, &pool,
+                                         &mut scratch, &mut b);
+        let want: Vec<f32> = raw.iter().map(|&v| v * 1.25).collect();
+        assert_eq!(b, want);
     }
 
     #[test]

@@ -45,7 +45,7 @@ pub mod tile;
 
 pub use conv::PatchGeom;
 pub use energy::{EnergyModel, EnergyReport};
-pub use grid::{CrossbarGrid, GridScratch};
+pub use grid::{CrossbarGrid, GridScratch, GridView};
 pub use mapper::{LayerMapping, TileCoord, TilingPolicy};
 pub use quant::{AdcSpec, DacSpec};
 pub use tile::{CrossbarTile, TileScratch};

@@ -32,7 +32,7 @@ use crate::coordinator::schedule::LrSchedule;
 use crate::crossbar::TilingPolicy;
 use crate::data::{IMG_C, IMG_H, IMG_W, NUM_CLASSES};
 use crate::hic::weight::HicGeometry;
-use crate::nn::features::{BlobDataset, FeatureSource, PooledCifar};
+use crate::nn::features::{BlobDataset, FeatureSource};
 use crate::nn::graph::{ActShape, GraphSpec};
 use crate::nn::net::NetSpec;
 use crate::nn::{FpGraphNet, FpNet};
@@ -173,7 +173,7 @@ pub fn variant_params(tag: &str) -> Result<PcmParams> {
 /// Quantize a float metric to integer micro-units (round half away from
 /// zero, like `f64::round`) — every number in the documents is integral,
 /// which keeps serialization byte-stable across formatters.
-fn u6(v: f64) -> Json {
+pub(crate) fn u6(v: f64) -> Json {
     Json::Num((v * 1e6).round())
 }
 
@@ -388,9 +388,12 @@ impl NnExpOptions {
                 BlobDataset::with_shape(self.seed, h, w, c,
                                         self.classes, self.blob_noise,
                                         self.train_len, self.test_len)),
-            NnExpData::Cifar { pool } => FeatureSource::Cifar(
-                PooledCifar::new(self.seed, pool, self.train_len,
-                                 self.test_len)),
+            // Real CIFAR-10 bytes when a dataset directory is present
+            // (serve / `fig4 --long-run` pick them up automatically);
+            // the synthetic provider stays the fallback, so CI and the
+            // goldens never see the real path.
+            NnExpData::Cifar { pool } => FeatureSource::pooled_cifar_auto(
+                self.seed, pool, self.train_len, self.test_len),
         }
     }
 

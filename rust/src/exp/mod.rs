@@ -22,13 +22,17 @@
 //! or, with `--arch resnet`, the paper's conv/residual topology via
 //! im2col patch lowering.  [`widths`] holds the shared
 //! width-multiplier table and model-size accounting.  The CLI exposes
-//! all of it as `--device-grid`.
+//! all of it as `--device-grid`.  [`serve`] re-measures the fig5 axis
+//! through the drift-aware serving stack (`crate::serve`): frozen
+//! snapshot, coalesced synthetic load, per-probe gain recalibration —
+//! the `serve` CLI command.
 
 pub mod fig3;
 pub mod fig4;
 pub mod fig5;
 pub mod fig6;
 pub mod gridexp;
+pub mod serve;
 pub mod widths;
 
 use std::path::{Path, PathBuf};

@@ -1,0 +1,338 @@
+//! FIG5-SERVE — drifted inference accuracy **through the serving
+//! stack** (paper Fig. 5's axis, measured under load instead of via
+//! the trainer's eval path).
+//!
+//! Train a dense MLP on the device grids, freeze it into a
+//! [`ModelSnapshot`], then at each fig5 probe time replay a
+//! deterministic synthetic request trace through the coalescing
+//! scheduler twice — uncalibrated, then gain-recalibrated — and report
+//! per-probe accuracy, coalescing counters and simulated-latency
+//! quantiles as a byte-stable metric JSON document (same `u6`
+//! quantization and determinism contract as the other grid sweeps:
+//! the document depends only on the options, never on the worker
+//! count or the coalescing schedule's execution order).
+//!
+//! Both serving passes of a probe replay the *same* trace, so they
+//! consume identical `(SERVE_ROUND_BASE, request id)` read-noise
+//! streams: the calibrated-vs-uncalibrated accuracy delta isolates
+//! the gain compensation exactly (a paired comparison, like
+//! `run_fig5`'s `eval_mse_pair`).
+//!
+//! Recalibration runs as a **low-priority background task** on the
+//! PR-6 pipeline lane ([`crate::util::pool::PipelineScope::spawn`]),
+//! joining before the calibrated pass — lane placement is pure
+//! scheduling and cannot change a served bit (the snapshot's
+//! calibration streams are counter-based, like everything else).
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::coordinator::nettrainer::{NetTrainer, NetTrainerOptions};
+use crate::coordinator::schedule::LrSchedule;
+use crate::crossbar::TilingPolicy;
+use crate::data::{IMG_C, IMG_H, IMG_W, NUM_CLASSES};
+use crate::log_info;
+use crate::nn::features::{BlobDataset, FeatureSource};
+use crate::nn::graph::GraphSpec;
+use crate::pcm::device::PcmParams;
+use crate::serve::{gen_trace, serve_trace, CoalescePolicy, ModelSnapshot};
+use crate::util::json::Json;
+use crate::util::pool::WorkerPool;
+
+use super::gridexp::u6;
+
+/// Feature source of the serving sweep (the blobs source is the
+/// golden-pinned one; CIFAR auto-routes to real bytes when present).
+#[derive(Clone, Debug)]
+pub enum ServeData {
+    Blobs { dim: usize },
+    Cifar { pool: usize },
+}
+
+/// Parameters of the fig5-serve run: a training config (dense MLP on
+/// the device grids), a snapshot config (calibration-set size) and a
+/// serving config (trace and coalescing knobs).
+#[derive(Clone, Debug)]
+pub struct ServeExpOptions {
+    pub data: ServeData,
+    /// hidden widths of the dense stack
+    pub hidden: Vec<usize>,
+    /// classes (blobs; the CIFAR source is always 10)
+    pub classes: usize,
+    pub steps: usize,
+    pub batch: usize,
+    /// square physical tile size
+    pub tile: usize,
+    pub train_len: usize,
+    pub test_len: usize,
+    pub lr: f32,
+    /// blob per-feature noise σ
+    pub blob_noise: f32,
+    pub seed: u64,
+    /// requests per probe trace
+    pub requests: usize,
+    /// mean inter-arrival gap (simulated seconds)
+    pub mean_gap: f64,
+    /// coalescing window (simulated seconds)
+    pub window: f64,
+    pub max_batch: usize,
+    pub queue_cap: usize,
+    /// held-out calibration samples (first `calib_n` of the train split)
+    pub calib_n: usize,
+    /// worker threads (0 = `HIC_WORKERS` / machine default)
+    pub workers: usize,
+    pub out_dir: PathBuf,
+}
+
+impl Default for ServeExpOptions {
+    fn default() -> Self {
+        ServeExpOptions {
+            data: ServeData::Cifar { pool: 8 },
+            hidden: vec![32, 16],
+            classes: 10,
+            steps: 150,
+            batch: 16,
+            tile: 32,
+            train_len: 2000,
+            test_len: 500,
+            lr: 0.1,
+            blob_noise: 0.5,
+            seed: 42,
+            requests: 256,
+            mean_gap: 0.01,
+            window: 0.05,
+            max_batch: 16,
+            queue_cap: 64,
+            calib_n: 64,
+            workers: 0,
+            out_dir: PathBuf::from("results"),
+        }
+    }
+}
+
+impl ServeExpOptions {
+    pub fn pool(&self) -> WorkerPool {
+        if self.workers == 0 {
+            WorkerPool::from_env()
+        } else {
+            WorkerPool::new(self.workers)
+        }
+    }
+
+    fn feature_source(&self) -> FeatureSource {
+        match self.data {
+            ServeData::Blobs { dim } => FeatureSource::Blobs(
+                BlobDataset::new(self.seed, dim, self.classes,
+                                 self.blob_noise, self.train_len,
+                                 self.test_len)),
+            ServeData::Cifar { pool } => FeatureSource::pooled_cifar_auto(
+                self.seed, pool, self.train_len, self.test_len),
+        }
+    }
+
+    fn input_dim(&self) -> usize {
+        match self.data {
+            ServeData::Blobs { dim } => dim,
+            ServeData::Cifar { pool } => {
+                (IMG_H / pool) * (IMG_W / pool) * IMG_C
+            }
+        }
+    }
+
+    fn data_classes(&self) -> usize {
+        match self.data {
+            ServeData::Blobs { .. } => self.classes,
+            ServeData::Cifar { .. } => NUM_CLASSES,
+        }
+    }
+
+    fn dims(&self) -> Vec<usize> {
+        let mut dims = vec![self.input_dim()];
+        dims.extend(self.hidden.iter().copied());
+        dims.push(self.data_classes());
+        dims
+    }
+
+    /// Config echo (workers deliberately excluded: documents must be
+    /// worker-count invariant; float knobs enter as micro-units).
+    fn echo(&self) -> Vec<(&'static str, Json)> {
+        let (data_tag, data_param) = match self.data {
+            ServeData::Blobs { dim } => ("blobs", dim),
+            ServeData::Cifar { pool } => ("cifar_pooled", pool),
+        };
+        vec![
+            ("experiment", Json::str("fig5_serve")),
+            ("data", Json::str(data_tag)),
+            ("data_param", Json::Num(data_param as f64)),
+            ("input", Json::Num(self.input_dim() as f64)),
+            ("classes", Json::Num(self.data_classes() as f64)),
+            ("hidden", Json::Arr(
+                self.hidden.iter().map(|&h| Json::Num(h as f64))
+                    .collect())),
+            ("steps", Json::Num(self.steps as f64)),
+            ("batch", Json::Num(self.batch as f64)),
+            ("tile", Json::Num(self.tile as f64)),
+            ("train_len", Json::Num(self.train_len as f64)),
+            ("test_len", Json::Num(self.test_len as f64)),
+            ("lr_u6", u6(self.lr as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("requests", Json::Num(self.requests as f64)),
+            ("mean_gap_u6", u6(self.mean_gap)),
+            ("window_u6", u6(self.window)),
+            ("max_batch", Json::Num(self.max_batch as f64)),
+            ("queue_cap", Json::Num(self.queue_cap as f64)),
+            ("calib_n", Json::Num(self.calib_n as f64)),
+        ]
+    }
+}
+
+/// Train → freeze → serve each fig5 probe time under synthetic load,
+/// uncalibrated and recalibrated (see the module docs).
+pub fn run_fig5_serve(opts: &ServeExpOptions) -> Result<Json> {
+    // Same device model as the grid fig5: linear, read noise on,
+    // drift on, ν spread off (stream determinism).
+    let params = PcmParams {
+        nonlinear: false,
+        write_noise: false,
+        read_noise: true,
+        drift: true,
+        drift_nu_sigma: 0.0,
+        ..Default::default()
+    };
+    let policy =
+        TilingPolicy { tile_rows: opts.tile, tile_cols: opts.tile };
+    let spec = GraphSpec::mlp(&opts.dims());
+    let pool = opts.pool();
+    let mut t = NetTrainer::from_spec(
+        params, &spec, policy, opts.feature_source(), pool,
+        NetTrainerOptions {
+            seed: opts.seed,
+            lr: LrSchedule::constant(opts.lr),
+            refresh_every: 0,
+            batch: opts.batch,
+            ..Default::default()
+        });
+    t.train_steps(opts.steps);
+    let train_loss = *t.losses.last().unwrap_or(&0.0);
+    log_info!("fig5-serve: trained {} steps, final loss {train_loss:.4}",
+              opts.steps);
+
+    let mut snap = ModelSnapshot::freeze(t, opts.calib_n);
+    let cpolicy = CoalescePolicy {
+        window: opts.window,
+        max_batch: opts.max_batch,
+        queue_cap: opts.queue_cap,
+    };
+    let test_len = snap.data.test_len();
+
+    let mut probes = Vec::new();
+    let mut preds = Vec::new();
+    for (i, &probe_t) in super::fig5::probe_times().iter().enumerate() {
+        // Disjoint id range per probe: every request in the run owns a
+        // globally unique read-noise stream.
+        let trace = gen_trace(opts.seed, (i * opts.requests) as u64,
+                              opts.requests, opts.mean_gap, test_len);
+        let tf = probe_t as f32;
+        let nocal = serve_trace(&mut snap, &trace, &cpolicy, tf, false,
+                                &pool, &mut preds);
+        // Low-priority drift compensation on the pipeline's background
+        // lane; the scope joins before the calibrated pass reads the
+        // gains.
+        pool.pipeline(|scope| {
+            let snap = &mut snap;
+            scope.spawn(move || snap.recalibrate(tf, &pool));
+        });
+        let cal = serve_trace(&mut snap, &trace, &cpolicy, tf, true,
+                              &pool, &mut preds);
+        let acc_nocal = nocal.hits as f64 / nocal.requests as f64;
+        let acc_cal = cal.hits as f64 / cal.requests as f64;
+        log_info!(
+            "fig5-serve t={probe_t:.0e}s: acc nocal {acc_nocal:.3}, \
+             cal {acc_cal:.3} ({} batches, max coalesce {}, p99 wait \
+             {:.4}s)",
+            nocal.batches, nocal.max_coalesced, nocal.p99_latency);
+        probes.push(Json::obj(vec![
+            ("t_seconds", Json::Num(probe_t)),
+            ("acc_nocal_u6", u6(acc_nocal)),
+            ("acc_cal_u6", u6(acc_cal)),
+            ("batches", Json::Num(nocal.batches as f64)),
+            ("max_coalesced", Json::Num(nocal.max_coalesced as f64)),
+            ("p50_latency_u6", u6(nocal.p50_latency)),
+            ("p99_latency_u6", u6(nocal.p99_latency)),
+            ("gains_u6", Json::Arr(
+                snap.gains().iter().map(|&g| u6(g as f64)).collect())),
+        ]));
+    }
+
+    let mut doc = opts.echo();
+    doc.push(("final_train_loss_u6", u6(train_loss)));
+    doc.push(("recalibrations",
+              Json::Num(snap.recalibrations as f64)));
+    doc.push(("probes", Json::Arr(probes)));
+    Ok(Json::obj(doc))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn tiny_serve() -> ServeExpOptions {
+        ServeExpOptions {
+            data: ServeData::Blobs { dim: 6 },
+            hidden: vec![4, 3],
+            classes: 3,
+            steps: 4,
+            batch: 3,
+            tile: 3,
+            train_len: 30,
+            test_len: 12,
+            lr: 0.05,
+            blob_noise: 0.5,
+            seed: 42,
+            requests: 24,
+            mean_gap: 0.05,
+            window: 0.2,
+            max_batch: 6,
+            queue_cap: 8,
+            calib_n: 6,
+            workers: 1,
+            out_dir: PathBuf::from("/tmp"),
+        }
+    }
+
+    #[test]
+    fn fig5_serve_document_shape() {
+        let doc = run_fig5_serve(&tiny_serve()).unwrap();
+        assert_eq!(doc.get("experiment").unwrap().as_str().unwrap(),
+                   "fig5_serve");
+        let probes = doc.get("probes").unwrap().as_arr().unwrap();
+        assert_eq!(probes.len(), super::super::fig5::probe_times().len());
+        // One recalibration per probe.
+        assert_eq!(doc.get("recalibrations").unwrap().as_f64().unwrap(),
+                   probes.len() as f64);
+        for p in probes {
+            for key in ["acc_nocal_u6", "acc_cal_u6", "batches",
+                        "max_coalesced", "p50_latency_u6",
+                        "p99_latency_u6"] {
+                let num = p.get(key).unwrap().as_f64().unwrap();
+                assert!(num.is_finite() && num.fract() == 0.0,
+                        "{key} must be an integral metric");
+            }
+            let gains =
+                p.get("gains_u6").unwrap().as_arr().unwrap();
+            assert_eq!(gains.len(), 3); // one per weighted layer
+        }
+    }
+
+    #[test]
+    fn fig5_serve_document_is_worker_invariant() {
+        let mut a = tiny_serve();
+        a.workers = 1;
+        let mut b = tiny_serve();
+        b.workers = 4;
+        let da = run_fig5_serve(&a).unwrap().to_string();
+        let db = run_fig5_serve(&b).unwrap().to_string();
+        assert_eq!(da, db);
+    }
+}

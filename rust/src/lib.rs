@@ -48,7 +48,11 @@
 //! [`coordinator::nettrainer::NetTrainer`]: the device-level
 //! multi-layer training path behind the grid-routed fig4 width sweeps
 //! (`--arch mlp` dense stacks, `--arch resnet` the paper's ResNet
-//! topology).
+//! topology).  Trained nets freeze into read-only [`serve`] snapshots:
+//! a batch-coalescing request scheduler serves them under synthetic
+//! load with periodic AdaBS-style gain recalibration against drift —
+//! served outputs bitwise invariant across worker counts and
+//! coalescing schedules (the `serve` CLI and the fig5-serve golden).
 
 // Numeric-kernel style allowances: the device kernels and their host
 // references spell out index loops and long argument lists because the
@@ -70,6 +74,7 @@ pub mod hic;
 pub mod nn;
 pub mod pcm;
 pub mod runtime;
+pub mod serve;
 pub mod testutil;
 pub mod util;
 

@@ -7,6 +7,7 @@
 //!   fig4      regenerate the width-multiplier sweep (paper Fig. 4)
 //!   fig5      regenerate the drift/AdaBS study (paper Fig. 5)
 //!   fig6      regenerate the write–erase-cycle histograms (paper Fig. 6)
+//!   serve     drift-aware inference serving under synthetic load
 //!   info      inspect an artifact set (entries, sizes, config echo)
 //!
 //! All compute runs through AOT-compiled HLO artifacts on PJRT; Python is
@@ -46,6 +47,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "fig4" => cmd_fig4(rest),
         "fig5" => cmd_fig5(rest),
         "fig6" | "endurance" => cmd_fig6(rest),
+        "serve" => cmd_serve(rest),
         "info" => cmd_info(rest),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -67,6 +69,7 @@ fn print_usage() {
          \x20 fig4       width sweep: acc vs model size (paper Fig. 4)\n\
          \x20 fig5       drift + AdaBS study            (paper Fig. 5)\n\
          \x20 fig6       write–erase cycle histograms   (paper Fig. 6)\n\
+         \x20 serve      drift-aware serving under load (fig5 axis)\n\
          \x20 info       inspect an artifact set\n\n\
          fig3/fig4/fig5/fig6 accept --device-grid to run on the sharded\n\
          crossbar grid device model (no artifacts needed); fig4's grid\n\
@@ -444,6 +447,107 @@ fn cmd_fig6(args: &[String]) -> Result<()> {
     }
     let opts = parse_exp(&m)?;
     exp::fig6::run(&opts, m.str("config")?)?;
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    use hic_train::exp::serve::{ServeData, ServeExpOptions};
+    let spec = Spec::new(
+        "serve",
+        "drift-aware inference serving under synthetic load: train a \
+         dense MLP on the crossbar grids, freeze it into a read-only \
+         snapshot, then replay a deterministic request trace through \
+         the batch-coalescing scheduler at each fig5 drift probe, \
+         uncalibrated and gain-recalibrated; writes \
+         <out>/fig5_serve.json")
+        .opt("data", "cifar",
+             "feature source: cifar (real bytes when present, synthetic \
+              fallback) or blobs (portable)")
+        .opt("nn-pool", "8", "CIFAR pooling factor")
+        .opt("nn-dim", "32", "blob feature dimension")
+        .opt("nn-hidden", "32,16", "hidden widths of the dense stack")
+        .opt("nn-classes", "10", "classes (blobs; CIFAR is always 10)")
+        .opt("nn-steps", "150", "training steps before the freeze")
+        .opt("nn-batch", "16", "training batch size")
+        .opt("nn-tile", "32", "physical tile size")
+        .opt("nn-lr", "0.1", "learning rate")
+        .opt("train-len", "2000", "train-split size (synthetic sources)")
+        .opt("test-len", "500", "test-split size (synthetic sources)")
+        .opt("seeds", "42", "comma-separated seeds (first one is used)")
+        .opt("requests", "256", "requests per probe trace")
+        .opt("mean-gap", "0.01",
+             "mean request inter-arrival gap (simulated seconds)")
+        .opt("window", "0.05",
+             "coalescing window (simulated seconds)")
+        .opt("max-batch", "16", "max requests per coalesced batch")
+        .opt("queue-cap", "64", "bounded request-channel capacity")
+        .opt("calib", "64",
+             "held-out calibration samples for gain recalibration")
+        .opt("workers", "0", "worker threads (0 = HIC_WORKERS/auto)")
+        .opt("out", "results", "output directory")
+        .flag("verbose", "debug logging");
+    let m = spec.parse(args)?;
+    if m.flag("verbose") {
+        set_level(Level::Debug);
+    }
+    let data = match m.str("data")? {
+        "cifar" => {
+            let pool = m.usize("nn-pool")?;
+            if pool == 0 || 32 % pool != 0 {
+                bail!("--nn-pool must divide the 32x32 image \
+                       (1, 2, 4, 8, 16 or 32)");
+            }
+            ServeData::Cifar { pool }
+        }
+        "blobs" => ServeData::Blobs { dim: m.usize("nn-dim")? },
+        other => bail!("unknown --data '{other}' (cifar | blobs)"),
+    };
+    let hidden = m
+        .list("nn-hidden")
+        .iter()
+        .map(|s| s.parse::<usize>())
+        .collect::<std::result::Result<Vec<_>, _>>()?;
+    for key in ["nn-dim", "nn-classes", "nn-steps", "nn-batch",
+                "nn-tile", "train-len", "test-len", "requests",
+                "max-batch", "queue-cap", "calib"] {
+        if m.usize(key)? == 0 {
+            bail!("--{key} must be >= 1");
+        }
+    }
+    if m.f64("mean-gap")? <= 0.0 {
+        bail!("--mean-gap must be > 0");
+    }
+    if m.f64("window")? < 0.0 {
+        bail!("--window must be >= 0");
+    }
+    let opts = ServeExpOptions {
+        data,
+        hidden,
+        classes: m.usize("nn-classes")?,
+        steps: m.usize("nn-steps")?,
+        batch: m.usize("nn-batch")?,
+        tile: m.usize("nn-tile")?,
+        train_len: m.usize("train-len")?,
+        test_len: m.usize("test-len")?,
+        lr: m.f32("nn-lr")?,
+        seed: m
+            .list("seeds")
+            .first()
+            .map(|s| s.parse::<u64>())
+            .transpose()?
+            .unwrap_or(42),
+        requests: m.usize("requests")?,
+        mean_gap: m.f64("mean-gap")?,
+        window: m.f64("window")?,
+        max_batch: m.usize("max-batch")?,
+        queue_cap: m.usize("queue-cap")?,
+        calib_n: m.usize("calib")?,
+        workers: m.usize("workers")?,
+        out_dir: PathBuf::from(m.str("out")?),
+        ..Default::default()
+    };
+    let doc = exp::serve::run_fig5_serve(&opts)?;
+    exp::gridexp::write_json(&opts.out_dir, "fig5_serve.json", &doc)?;
     Ok(())
 }
 

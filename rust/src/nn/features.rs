@@ -1,6 +1,6 @@
 //! Feature sources feeding the on-grid network trainer.
 //!
-//! Two providers behind one [`FeatureSource`] enum:
+//! Three providers behind one [`FeatureSource`] enum:
 //!
 //! * [`PooledCifar`] — the existing `data` pipeline's structured
 //!   synthetic CIFAR ([`SyntheticDataset`]) reduced to a feature vector
@@ -12,6 +12,11 @@
 //!   generation inherits the dataset's libm-based streams, so this
 //!   provider is **not** byte-stable across platforms — use it for
 //!   accuracy, not goldens.
+//! * [`RealCifar`] — the same pooling over **real CIFAR-10 bytes**
+//!   ([`CifarDataset`]), used automatically by the CLI paths
+//!   (`serve`, `fig4 --long-run`) when a dataset directory is present
+//!   ([`FeatureSource::pooled_cifar_auto`]); the synthetic provider
+//!   stays the fallback and the golden path.
 //! * [`BlobDataset`] — Gaussian blobs around per-class centroids drawn
 //!   from `Pcg64` uniforms, with sample noise from the batched
 //!   Box–Muller fill.  Every consumed op is portable f32/f64 arithmetic
@@ -19,13 +24,16 @@
 //!   document pin the whole layered training loop byte-for-byte
 //!   (`rust/tests/golden/oracle.py` mirrors this generator op for op).
 //!
-//! Both providers are deterministic per `(seed, index, split)`: samples
-//! are generated on demand from counter-based streams (the synthetic
-//! CIFAR convention), so the trainer needs no stored dataset and the
-//! worker count can never affect the data.
+//! The synthetic providers are deterministic per `(seed, index,
+//! split)`: samples are generated on demand from counter-based streams
+//! (the synthetic CIFAR convention), so the trainer needs no stored
+//! dataset and the worker count can never affect the data.  The real
+//! loader is deterministic trivially — stored bytes.
 
+use crate::data::cifar::CifarDataset;
 use crate::data::synthetic::SyntheticDataset;
 use crate::data::{IMG_C, IMG_H, IMG_W, NUM_CLASSES};
+use crate::log_info;
 use crate::nn::graph::ActShape;
 use crate::util::rng::Pcg64;
 
@@ -126,23 +134,64 @@ impl PooledCifar {
     pub fn sample_into(&self, i: usize, test: bool, x: &mut [f32]) -> u8 {
         assert_eq!(x.len(), self.dim());
         let (img, label) = self.data.sample(i, test);
-        let p = self.pool;
-        let (bh, bw) = (IMG_H / p, IMG_W / p);
-        let inv_area = 1.0f32 / (p * p) as f32;
-        for by in 0..bh {
-            for bx in 0..bw {
-                for c in 0..IMG_C {
-                    let mut acc = 0.0f32;
-                    for h in by * p..(by + 1) * p {
-                        for w in bx * p..(bx + 1) * p {
-                            acc += img[(h * IMG_W + w) * IMG_C + c];
-                        }
+        pool_blocks_into(&img, self.pool, x);
+        label
+    }
+}
+
+/// Channel-preserving `p × p` block average pooling of one HWC image —
+/// the single in-tree copy of the pooling loop, shared by the
+/// synthetic and real CIFAR providers (identical f32 accumulation
+/// order, so the synthetic provider's streams are untouched by the
+/// refactor).
+fn pool_blocks_into(img: &[f32], p: usize, x: &mut [f32]) {
+    let (bh, bw) = (IMG_H / p, IMG_W / p);
+    let inv_area = 1.0f32 / (p * p) as f32;
+    for by in 0..bh {
+        for bx in 0..bw {
+            for c in 0..IMG_C {
+                let mut acc = 0.0f32;
+                for h in by * p..(by + 1) * p {
+                    for w in bx * p..(bx + 1) * p {
+                        acc += img[(h * IMG_W + w) * IMG_C + c];
                     }
-                    x[(by * bw + bx) * IMG_C + c] = acc * inv_area;
                 }
+                x[(by * bw + bx) * IMG_C + c] = acc * inv_area;
             }
         }
-        label
+    }
+}
+
+/// Real CIFAR-10 bytes ([`CifarDataset`]) behind the same pooled
+/// feature interface as [`PooledCifar`]: `pool = 1` passes the
+/// loader's normalized NHWC pixels straight through, larger pools
+/// average `pool × pool` blocks per channel.
+pub struct RealCifar {
+    pub data: CifarDataset,
+    pub pool: usize,
+}
+
+impl RealCifar {
+    pub fn new(data: CifarDataset, pool: usize) -> Self {
+        assert!(pool > 0 && IMG_H % pool == 0 && IMG_W % pool == 0,
+                "pool must divide the {IMG_H}x{IMG_W} image");
+        RealCifar { data, pool }
+    }
+
+    /// Pooled spatial extents `[h, w, c]` (HWC feature layout).
+    pub fn shape(&self) -> [usize; 3] {
+        [IMG_H / self.pool, IMG_W / self.pool, IMG_C]
+    }
+
+    pub fn dim(&self) -> usize {
+        let [h, w, c] = self.shape();
+        h * w * c
+    }
+
+    pub fn sample_into(&self, i: usize, test: bool, x: &mut [f32]) -> u8 {
+        assert_eq!(x.len(), self.dim());
+        pool_blocks_into(self.data.image(i, test), self.pool, x);
+        self.data.label(i, test)
     }
 }
 
@@ -151,20 +200,56 @@ impl PooledCifar {
 pub enum FeatureSource {
     Blobs(BlobDataset),
     Cifar(PooledCifar),
+    RealCifar(RealCifar),
 }
 
 impl FeatureSource {
+    /// Pooled CIFAR features from **real CIFAR-10 bytes** when a
+    /// dataset directory is present ([`CifarDataset::discover`] —
+    /// `$HIC_CIFAR10` or `data/cifar-10*`), falling back to the
+    /// synthetic pipeline otherwise.  The real provider serves the
+    /// full downloaded splits; `train_len`/`test_len` size the
+    /// synthetic fallback only (the golden path, byte-for-byte
+    /// unchanged by this routing).
+    pub fn pooled_cifar_auto(seed: u64, pool: usize, train_len: usize,
+                             test_len: usize) -> FeatureSource {
+        if let Some(dir) = CifarDataset::discover() {
+            match CifarDataset::load(&dir) {
+                Ok(data) => {
+                    log_info!(
+                        "using real CIFAR-10 from {} ({} train / {} \
+                         test)",
+                        dir.display(), data.train_len(),
+                        data.test_len());
+                    return FeatureSource::RealCifar(
+                        RealCifar::new(data, pool));
+                }
+                Err(e) => {
+                    log_info!(
+                        "CIFAR-10 dir {} unreadable ({e:#}); using \
+                         the synthetic pipeline",
+                        dir.display());
+                }
+            }
+        }
+        FeatureSource::Cifar(
+            PooledCifar::new(seed, pool, train_len, test_len))
+    }
+
     pub fn dim(&self) -> usize {
         match self {
             FeatureSource::Blobs(b) => b.dim,
             FeatureSource::Cifar(c) => c.dim(),
+            FeatureSource::RealCifar(c) => c.dim(),
         }
     }
 
     pub fn classes(&self) -> usize {
         match self {
             FeatureSource::Blobs(b) => b.classes,
-            FeatureSource::Cifar(_) => NUM_CLASSES,
+            FeatureSource::Cifar(_) | FeatureSource::RealCifar(_) => {
+                NUM_CLASSES
+            }
         }
     }
 
@@ -181,6 +266,10 @@ impl FeatureSource {
                 let [h, w, ch] = c.shape();
                 ActShape::Img { h, w, c: ch }
             }
+            FeatureSource::RealCifar(c) => {
+                let [h, w, ch] = c.shape();
+                ActShape::Img { h, w, c: ch }
+            }
         }
     }
 
@@ -188,6 +277,7 @@ impl FeatureSource {
         match self {
             FeatureSource::Blobs(b) => b.train_len,
             FeatureSource::Cifar(c) => c.data.train_len,
+            FeatureSource::RealCifar(c) => c.data.train_len(),
         }
     }
 
@@ -195,6 +285,7 @@ impl FeatureSource {
         match self {
             FeatureSource::Blobs(b) => b.test_len,
             FeatureSource::Cifar(c) => c.data.test_len,
+            FeatureSource::RealCifar(c) => c.data.test_len(),
         }
     }
 
@@ -203,6 +294,7 @@ impl FeatureSource {
         match self {
             FeatureSource::Blobs(b) => b.sample_into(i, test, x),
             FeatureSource::Cifar(c) => c.sample_into(i, test, x),
+            FeatureSource::RealCifar(c) => c.sample_into(i, test, x),
         }
     }
 }
@@ -279,6 +371,72 @@ mod tests {
         assert_eq!(c.dim(), 2 * 2 * 3);
         assert_eq!(c.classes(), NUM_CLASSES);
         assert_eq!(c.shape(), ActShape::Img { h: 2, w: 2, c: 3 });
+    }
+
+    #[test]
+    fn real_cifar_fixture_round_trip() {
+        use crate::data::cifar::{CifarDataset, RECORD_BYTES};
+        use crate::data::IMG_ELEMS;
+
+        // 3-image on-disk fixture: 2 train records + 1 test record in
+        // the binary batch format, through the real loader and both
+        // pooling configurations.
+        fn record(label: u8) -> Vec<u8> {
+            let mut rec = vec![label];
+            for c in 0..3u32 {
+                for i in 0..1024u32 {
+                    rec.push(((i + c * 37) % 256) as u8);
+                }
+            }
+            rec
+        }
+        let dir = std::env::temp_dir()
+            .join(format!("hic_cifar_fixture_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut train = record(3);
+        train.extend(record(7));
+        assert_eq!(train.len(), 2 * RECORD_BYTES);
+        std::fs::write(dir.join("data_batch_1.bin"), &train).unwrap();
+        std::fs::write(dir.join("test_batch.bin"), record(1)).unwrap();
+
+        let data = CifarDataset::load(&dir).unwrap();
+        assert_eq!(data.train_len(), 2);
+        assert_eq!(data.test_len(), 1);
+
+        // pool = 1 is a pure pass-through of the loader's pixels.
+        let rc = RealCifar::new(data, 1);
+        assert_eq!(rc.dim(), IMG_ELEMS);
+        let mut x = vec![0.0f32; rc.dim()];
+        assert_eq!(rc.sample_into(1, false, &mut x), 7);
+        assert_eq!(&x[..], rc.data.image(1, false));
+        assert_eq!(rc.sample_into(0, true, &mut x), 1);
+        assert_eq!(&x[..], rc.data.image(0, true));
+
+        // pool = 2 averages each 2x2 block per channel.
+        let rc2 = RealCifar::new(rc.data, 2);
+        assert_eq!(rc2.shape(), [16, 16, 3]);
+        let mut p = vec![0.0f32; rc2.dim()];
+        assert_eq!(rc2.sample_into(0, false, &mut p), 3);
+        let img = rc2.data.image(0, false);
+        let want = (img[0] // (h=0, w=0, c=0)
+            + img[IMG_C] // (0, 1, 0)
+            + img[IMG_W * IMG_C] // (1, 0, 0)
+            + img[(IMG_W + 1) * IMG_C]) // (1, 1, 0)
+            * 0.25;
+        assert_eq!(p[0], want);
+
+        // And through the FeatureSource dispatch.
+        let fs = FeatureSource::RealCifar(rc2);
+        assert_eq!(fs.dim(), 16 * 16 * 3);
+        assert_eq!(fs.classes(), NUM_CLASSES);
+        assert_eq!(fs.train_len(), 2);
+        assert_eq!(fs.test_len(), 1);
+        assert_eq!(fs.shape(), ActShape::Img { h: 16, w: 16, c: 3 });
+        let mut q = vec![0.0f32; fs.dim()];
+        assert_eq!(fs.sample_into(0, false, &mut q), 3);
+        assert_eq!(q, p);
+
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

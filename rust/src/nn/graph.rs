@@ -370,11 +370,87 @@ fn outer_product_grad(input: &[f32], d_out: &[f32], grad: &mut [f32],
     }
 }
 
-/// Per-invocation forward context.
+/// Per-layer calibration-gain context of a forward pass — the
+/// AdaBS-style statistics hook of the drift-compensated serving path
+/// (`serve::ModelSnapshot`).  All slices are indexed by weighted-layer
+/// index (`widx`); stateless layers never touch it.
+pub enum GainCtx<'a> {
+    /// Training/eval forward: no gain work at all (the historical
+    /// byte-identical path).
+    Off,
+    /// Serving forward: multiply each weighted layer's output by its
+    /// calibration gain.  A gain of exactly `1.0` skips the multiply,
+    /// so a freshly-frozen snapshot (all gains `1.0`) is bitwise
+    /// identical to `Off`.
+    Apply(&'a [f32]),
+    /// Freeze-time calibration pass: record each weighted layer's
+    /// mean-absolute output as the reference statistic (gains stay
+    /// `1.0`, outputs untouched).
+    MeasureRefs(&'a mut [f32]),
+    /// Recalibration pass at serving time: re-measure each weighted
+    /// layer's statistic on the drifted device, set
+    /// `gain = ref / current` and apply it immediately — so deeper
+    /// layers are measured on already-compensated activations, exactly
+    /// like the freeze-time pass saw them (layerwise AdaBS, Joshi et
+    /// al. 2019).
+    Recalibrate { refs: &'a [f32], gains: &'a mut [f32] },
+}
+
+/// Mean absolute value of one weighted layer's output — the AdaBS-ish
+/// per-layer statistic of the calibration passes.  f64 accumulation in
+/// index order, rounded to f32 once; mirrored op for op by the oracle
+/// (sequential Python `float` loop), so recalibrated gains are
+/// bit-stable.
+fn mean_abs(v: &[f32]) -> f32 {
+    let mut acc = 0f64;
+    for &x in v {
+        acc += x.abs() as f64;
+    }
+    (acc / v.len() as f64) as f32
+}
+
+/// The post-VMM gain hook every weighted layer's forward runs (see
+/// [`GainCtx`]).
+fn weighted_out(gain: &mut GainCtx<'_>, widx: usize, out: &mut [f32]) {
+    match gain {
+        GainCtx::Off => {}
+        GainCtx::Apply(gains) => {
+            let g = gains[widx];
+            if g != 1.0 {
+                for v in out.iter_mut() {
+                    *v *= g;
+                }
+            }
+        }
+        GainCtx::MeasureRefs(refs) => {
+            refs[widx] = mean_abs(out);
+        }
+        GainCtx::Recalibrate { refs, gains } => {
+            let cur = mean_abs(out);
+            let g = if cur == 0.0 { 1.0 } else { refs[widx] / cur };
+            gains[widx] = g;
+            if g != 1.0 {
+                for v in out.iter_mut() {
+                    *v *= g;
+                }
+            }
+        }
+    }
+}
+
+/// Per-invocation forward context.  `sample_base` is the global id of
+/// the batch's first sample (0 on every training/eval path): weighted
+/// layers pass it through to the grid's per-(op, tile, sample) RNG
+/// sub-streams, so served outputs depend on a request's global trace
+/// id, never on how requests were coalesced.  Conv layers scale it by
+/// their patch count (patch row `p` of global sample `g` draws stream
+/// id `g·P + p` — contiguous and disjoint across samples).
 struct FwdCtx<'a> {
     t_now: f32,
     round: u64,
     pool: &'a WorkerPool,
+    sample_base: u64,
+    gain: GainCtx<'a>,
 }
 
 /// Per-invocation backward context (`gain`/`inv_gain` is the backward
@@ -447,15 +523,18 @@ impl DenseLayer {
         }
     }
 
-    fn forward(&mut self, x: &[f32], m: usize, ctx: &FwdCtx,
+    fn forward(&mut self, x: &[f32], m: usize, ctx: &mut FwdCtx,
                out: &mut Vec<f32>) {
         let (k, n) = (self.k, self.n);
         ensure(&mut self.input, m * k);
         self.input[..m * k].copy_from_slice(&x[..m * k]);
         ensure(out, m * n);
-        self.grid.vmm_batch_into(&self.input[..m * k], m, ctx.t_now,
-                                 ctx.round, ctx.pool, &mut self.scratch,
-                                 &mut out[..m * n]);
+        self.grid.vmm_batch_base_into(&self.input[..m * k], m,
+                                      ctx.t_now, ctx.round,
+                                      ctx.sample_base, ctx.pool,
+                                      &mut self.scratch,
+                                      &mut out[..m * n]);
+        weighted_out(&mut ctx.gain, self.widx, &mut out[..m * n]);
     }
 
     fn backward(&mut self, d_out: &[f32], m: usize, ctx: &BwdCtx,
@@ -548,19 +627,24 @@ impl ConvLayer {
         }
     }
 
-    fn forward(&mut self, x: &[f32], m: usize, ctx: &FwdCtx,
+    fn forward(&mut self, x: &[f32], m: usize, ctx: &mut FwdCtx,
                out: &mut Vec<f32>) {
         let k = self.geom.patch_len();
-        // The blocked grid kernel treats every patch row as a sample.
+        // The blocked grid kernel treats every patch row as a sample;
+        // the sample-base offset scales by the patch count so patch p
+        // of global sample g draws stream id g·P + p (see FwdCtx).
         let rows = self.geom.patch_rows(m);
+        let positions = self.geom.patch_rows(1) as u64;
         ensure(&mut self.patches, rows * k);
         im2col_into(&self.geom, &x[..m * self.geom.in_len()], m,
                     ctx.pool, &mut self.patches[..rows * k]);
         ensure(out, rows * self.geom.cout);
-        self.grid.vmm_batch_into(&self.patches[..rows * k], rows,
-                                 ctx.t_now, ctx.round, ctx.pool,
-                                 &mut self.scratch,
-                                 &mut out[..rows * self.geom.cout]);
+        self.grid.vmm_batch_base_into(
+            &self.patches[..rows * k], rows, ctx.t_now, ctx.round,
+            ctx.sample_base.wrapping_mul(positions), ctx.pool,
+            &mut self.scratch, &mut out[..rows * self.geom.cout]);
+        weighted_out(&mut ctx.gain, self.widx,
+                     &mut out[..rows * self.geom.cout]);
     }
 
     fn backward(&mut self, d_out: &[f32], m: usize, ctx: &BwdCtx,
@@ -671,7 +755,7 @@ impl Layer {
         }
     }
 
-    fn forward(&mut self, x: &[f32], m: usize, ctx: &FwdCtx,
+    fn forward(&mut self, x: &[f32], m: usize, ctx: &mut FwdCtx,
                out: &mut Vec<f32>) {
         match self {
             Layer::Dense(d) => d.forward(x, m, ctx, out),
@@ -835,7 +919,7 @@ impl Layer {
 }
 
 impl ResBlock {
-    fn forward(&mut self, x: &[f32], m: usize, ctx: &FwdCtx,
+    fn forward(&mut self, x: &[f32], m: usize, ctx: &mut FwdCtx,
                out: &mut Vec<f32>) {
         let nb = self.body.len();
         for i in 0..nb {
@@ -1236,15 +1320,28 @@ impl GraphNet {
     /// [`GraphNet::backward`].
     pub fn forward(&mut self, x: &[f32], m: usize, t_now: f32,
                    round: u64, pool: &WorkerPool) -> &[f32] {
+        self.forward_with(x, m, t_now, round, 0, GainCtx::Off, pool)
+    }
+
+    /// [`GraphNet::forward`] with the serving knobs exposed:
+    /// `sample_base` is the global id of the batch's first sample
+    /// (threaded into every weighted layer's per-sample RNG
+    /// sub-streams — see [`FwdCtx`]) and `gain` is the per-layer
+    /// calibration context ([`GainCtx`]).  `(0, GainCtx::Off)`
+    /// reproduces `forward` exactly, bit for bit.
+    pub fn forward_with(&mut self, x: &[f32], m: usize, t_now: f32,
+                        round: u64, sample_base: u64,
+                        gain: GainCtx<'_>, pool: &WorkerPool)
+                        -> &[f32] {
         assert_eq!(x.len(), m * self.input.len());
-        let ctx = FwdCtx { t_now, round, pool };
+        let mut ctx = FwdCtx { t_now, round, pool, sample_base, gain };
         let nl = self.layers.len();
         for i in 0..nl {
             let il = self.layers[i].in_len();
             let (done, rest) = self.acts.split_at_mut(i);
             let input: &[f32] =
                 if i == 0 { x } else { &done[i - 1][..m * il] };
-            self.layers[i].forward(input, m, &ctx, &mut rest[0]);
+            self.layers[i].forward(input, m, &mut ctx, &mut rest[0]);
         }
         &self.acts[nl - 1][..m * self.classes]
     }

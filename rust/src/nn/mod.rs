@@ -42,6 +42,6 @@ pub mod net;
 
 pub use baseline::{FpGraphNet, FpNet};
 pub use features::{BlobDataset, FeatureSource, PooledCifar};
-pub use graph::{resnet_spec, ActShape, GraphNet, GraphSpec, LayerSpec,
-                StepTotals};
+pub use graph::{resnet_spec, ActShape, GainCtx, GraphNet, GraphSpec,
+                LayerSpec, StepTotals};
 pub use net::NetSpec;

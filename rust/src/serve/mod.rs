@@ -1,0 +1,54 @@
+//! Drift-aware inference serving (the deployment story of the paper's
+//! year-scale PCM inference claim).
+//!
+//! A trained [`crate::coordinator::nettrainer::NetTrainer`] freezes
+//! into a read-only [`ModelSnapshot`] — conductance planes sealed, the
+//! shared drift clock keeps ticking — and a batch-coalescing request
+//! scheduler ([`scheduler`]) serves single-sample requests against it,
+//! with periodic drift compensation (per-layer gain recalibration on a
+//! held-out calibration set, the AdaBS-style scheme of Joshi et al.
+//! 2019, arxiv 1906.03138) keeping drifted-inference accuracy near the
+//! freeze-time baseline.
+//!
+//! * [`snapshot`] — snapshot lifecycle: freeze → serve → recalibrate
+//!   (reference statistics, calibration gains, the read-only contract)
+//! * [`scheduler`] — the coalescing policy (window / max-batch /
+//!   bounded-queue backpressure), the discrete-event replay and the
+//!   latency accounting
+//! * [`loadgen`] — deterministic synthetic request traces (bounded
+//!   arrival jitter, contiguous globally unique ids)
+//!
+//! # Calibration cadence
+//!
+//! Compensation is **event-driven, low-priority work**: the fig5-serve
+//! driver (`exp::serve`) recalibrates once per drift probe, submitted
+//! to the background lane the PR-6 pipeline split carved out
+//! ([`crate::util::pool::PipelineScope::spawn`]) and joined before the
+//! probe's calibrated serving pass reads the gains.  Because every
+//! kernel is schedule-independent, lane placement is pure scheduling:
+//! cadence and lane choice cannot change a single served bit.
+//!
+//! # RNG stream assignment
+//!
+//! | path | round | per-sample stream id |
+//! |------|-------|----------------------|
+//! | training | step index | batch row (`sample_base = 0`) |
+//! | evaluation | `EVAL_ROUND_BASE + probe` | batch row |
+//! | serving | [`SERVE_ROUND_BASE`] (fixed) | **global request id** |
+//! | calibration | [`CALIB_ROUND_BASE`] `+ r` | calib-set row |
+//!
+//! Serving keeps one fixed round and moves uniqueness into the ids:
+//! request `id`'s read noise is `op_sample_rng(seed,
+//! SERVE_ROUND_BASE, OP_VMM, tile, id)` regardless of which batch it
+//! rode in — the whole determinism contract of the subsystem (served
+//! outputs bitwise invariant across worker counts and coalescing
+//! schedules for a fixed trace) reduces to this table plus the PR-5
+//! per-(op, tile, sample) kernel discipline.
+
+pub mod loadgen;
+pub mod scheduler;
+pub mod snapshot;
+
+pub use loadgen::{gen_trace, Request};
+pub use scheduler::{serve_trace, CoalescePolicy, ServeStats};
+pub use snapshot::{ModelSnapshot, CALIB_ROUND_BASE, SERVE_ROUND_BASE};

@@ -1,0 +1,267 @@
+//! Batch-coalescing request scheduler: a deterministic discrete-event
+//! replay of a bounded serving queue.
+//!
+//! # Coalescing policy
+//!
+//! Single-sample requests queue FIFO into a bounded channel
+//! ([`CoalescePolicy::queue_cap`]) and coalesce into one sample-blocked
+//! grid batch under two triggers:
+//!
+//! * **fill**: the pending batch reaches
+//!   `min(max_batch, queue_cap)` requests — dispatch immediately, at
+//!   the filling request's arrival time (`queue_cap` is the channel
+//!   bound; a full channel back-pressures by flushing, so it caps the
+//!   coalesce size exactly like `max_batch` does);
+//! * **window**: the next arrival falls after
+//!   `first_pending_arrival + window` — dispatch the pending batch at
+//!   that deadline (a request never waits longer than `window`).
+//!
+//! A trailing partial batch flushes at its deadline after the last
+//! arrival.  Dispatch = one [`ModelSnapshot::infer`] call over the
+//! coalesced inputs: the PR-5 sample-blocked VMM strip kernels are the
+//! batching substrate, and the snapshot's `sample_base` contract (ids
+//! contiguous across a FIFO batch) makes per-request outputs
+//! **independent of the coalescing schedule** — any window, any
+//! max-batch, any worker count, bit for bit (pinned by
+//! `rust/tests/prop_serve_equivalence.rs`).
+//!
+//! # Latency accounting
+//!
+//! The replay is simulated-time: a request's latency is its coalescing
+//! delay `dispatch_time − arrival` (the deterministic part of serving
+//! latency — compute time is hardware-dependent and reported by
+//! `benches/bench_serve.rs` instead).  Quantiles use rank indices
+//! `(n−1)/2` (p50) and `99·(n−1)/100` (p99) over the sorted latency
+//! vector, integer floor division — exactly mirrorable in the oracle.
+
+use crate::nn::net::argmax_row;
+use crate::util::pool::WorkerPool;
+
+use super::loadgen::Request;
+use super::snapshot::ModelSnapshot;
+
+/// Knobs of the coalescing scheduler (see the module docs).
+#[derive(Clone, Copy, Debug)]
+pub struct CoalescePolicy {
+    /// max seconds a request may wait for batch-mates
+    pub window: f64,
+    /// max requests per coalesced batch
+    pub max_batch: usize,
+    /// bounded-channel capacity (flush-on-full backpressure)
+    pub queue_cap: usize,
+}
+
+impl CoalescePolicy {
+    /// Largest batch the policy can actually coalesce.
+    pub fn effective_batch(&self) -> usize {
+        self.max_batch.min(self.queue_cap).max(1)
+    }
+}
+
+/// Counters and latency quantiles of one served trace.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeStats {
+    pub requests: usize,
+    /// dispatched batches (requests / batches = mean coalesce factor)
+    pub batches: usize,
+    /// largest batch actually coalesced
+    pub max_coalesced: usize,
+    /// correctly classified requests (labels from the test split)
+    pub hits: usize,
+    /// median coalescing delay, simulated seconds
+    pub p50_latency: f64,
+    /// 99th-percentile coalescing delay, simulated seconds
+    pub p99_latency: f64,
+}
+
+/// Replay `trace` through the coalescing scheduler against a frozen
+/// snapshot at drift time `t_now`; per-request predicted classes land
+/// in `preds` (trace order).  Deterministic: the output depends only
+/// on `(snapshot state, trace, policy, t_now, calibrated)` — never on
+/// the worker count or the coalescing schedule (see the module docs).
+pub fn serve_trace(snap: &mut ModelSnapshot, trace: &[Request],
+                   policy: &CoalescePolicy, t_now: f32,
+                   calibrated: bool, pool: &WorkerPool,
+                   preds: &mut Vec<u8>) -> ServeStats {
+    assert!(policy.window >= 0.0);
+    let cap = policy.effective_batch();
+    let d0 = snap.input_dim();
+    let classes = snap.classes();
+    preds.clear();
+    preds.resize(trace.len(), 0);
+    let mut x = vec![0.0f32; cap * d0];
+    let mut labels = vec![0u8; cap];
+    let mut lat: Vec<f64> = Vec::with_capacity(trace.len());
+    let mut pending: Vec<usize> = Vec::with_capacity(cap);
+    let mut stats = ServeStats {
+        requests: trace.len(),
+        batches: 0,
+        max_coalesced: 0,
+        hits: 0,
+        p50_latency: 0.0,
+        p99_latency: 0.0,
+    };
+
+    let mut flush = |pending: &mut Vec<usize>, dispatch_t: f64,
+                     snap: &mut ModelSnapshot| {
+        let m = pending.len();
+        debug_assert!(m > 0 && m <= cap);
+        for (j, &ti) in pending.iter().enumerate() {
+            let r = &trace[ti];
+            debug_assert_eq!(r.id, trace[pending[0]].id + j as u64,
+                             "coalesced ids must be contiguous");
+            labels[j] = snap.data.sample_into(
+                r.sample, true, &mut x[j * d0..(j + 1) * d0]);
+        }
+        let base = trace[pending[0]].id;
+        let logits =
+            snap.infer(&x[..m * d0], m, t_now, base, calibrated, pool);
+        for (j, &ti) in pending.iter().enumerate() {
+            let row = &logits[j * classes..(j + 1) * classes];
+            let p = argmax_row(row) as u8;
+            preds[ti] = p;
+            if p == labels[j] {
+                stats.hits += 1;
+            }
+            lat.push(dispatch_t - trace[ti].arrival);
+        }
+        stats.batches += 1;
+        stats.max_coalesced = stats.max_coalesced.max(m);
+        pending.clear();
+    };
+
+    for i in 0..trace.len() {
+        let arrival = trace[i].arrival;
+        if !pending.is_empty() {
+            let deadline = trace[pending[0]].arrival + policy.window;
+            if arrival > deadline {
+                flush(&mut pending, deadline, snap);
+            }
+        }
+        pending.push(i);
+        if pending.len() >= cap {
+            flush(&mut pending, arrival, snap);
+        }
+    }
+    if !pending.is_empty() {
+        let deadline = trace[pending[0]].arrival + policy.window;
+        flush(&mut pending, deadline, snap);
+    }
+
+    lat.sort_by(|a, b| a.total_cmp(b));
+    if !lat.is_empty() {
+        let n = lat.len();
+        stats.p50_latency = lat[(n - 1) / 2];
+        stats.p99_latency = lat[99 * (n - 1) / 100];
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::nettrainer::{NetTrainer, NetTrainerOptions};
+    use crate::crossbar::TilingPolicy;
+    use crate::nn::features::{BlobDataset, FeatureSource};
+    use crate::pcm::device::PcmParams;
+    use crate::serve::loadgen::gen_trace;
+
+    fn snapshot(workers: usize) -> ModelSnapshot {
+        let params = PcmParams {
+            nonlinear: false,
+            write_noise: false,
+            read_noise: true,
+            drift: true,
+            drift_nu_sigma: 0.0,
+            ..Default::default()
+        };
+        let data = FeatureSource::Blobs(
+            BlobDataset::new(11, 6, 3, 0.35, 30, 12));
+        let mut t = NetTrainer::new(
+            params, &[6, 5, 3],
+            TilingPolicy { tile_rows: 4, tile_cols: 4 }, data,
+            WorkerPool::new(workers),
+            NetTrainerOptions { batch: 5, ..Default::default() });
+        t.train_steps(5);
+        ModelSnapshot::freeze(t, 6)
+    }
+
+    #[test]
+    fn coalescing_triggers_fill_and_window() {
+        let pool = WorkerPool::new(2);
+        let mut snap = snapshot(2);
+        let trace = gen_trace(5, 0, 40, 0.1, 12);
+        let mut preds = Vec::new();
+        // Huge window: everything coalesces to max_batch-sized
+        // batches, dispatched on fill.
+        let wide = serve_trace(
+            &mut snap,
+            &trace,
+            &CoalescePolicy { window: 1e9, max_batch: 8, queue_cap: 64 },
+            1e5, false, &pool, &mut preds);
+        assert_eq!(wide.requests, 40);
+        assert_eq!(wide.batches, 5);
+        assert_eq!(wide.max_coalesced, 8);
+        // Zero window: every request is its own batch, zero latency.
+        let tight = serve_trace(
+            &mut snap,
+            &trace,
+            &CoalescePolicy { window: 0.0, max_batch: 8, queue_cap: 64 },
+            1e5, false, &pool, &mut preds);
+        assert_eq!(tight.batches, 40);
+        assert_eq!(tight.max_coalesced, 1);
+        assert_eq!(tight.p50_latency, 0.0);
+        assert_eq!(tight.p99_latency, 0.0);
+        // queue_cap back-pressures exactly like max_batch.
+        let capped = serve_trace(
+            &mut snap,
+            &trace,
+            &CoalescePolicy { window: 1e9, max_batch: 64, queue_cap: 4 },
+            1e5, false, &pool, &mut preds);
+        assert_eq!(capped.batches, 10);
+        assert_eq!(capped.max_coalesced, 4);
+    }
+
+    #[test]
+    fn served_outputs_are_schedule_invariant() {
+        // The tentpole determinism contract, in-module smoke form: the
+        // per-request predictions must not depend on the coalescing
+        // policy or the worker count (the full sweep lives in
+        // rust/tests/prop_serve_equivalence.rs).
+        let trace = gen_trace(9, 1000, 24, 0.05, 12);
+        let mut run = |workers: usize, policy: CoalescePolicy| {
+            let pool = WorkerPool::new(workers);
+            let mut snap = snapshot(workers);
+            snap.recalibrate(2e6, &pool); // non-unit gains
+            let mut preds = Vec::new();
+            let stats = serve_trace(&mut snap, &trace, &policy, 2e6,
+                                    true, &pool, &mut preds);
+            (preds, stats.hits)
+        };
+        let a = run(1, CoalescePolicy {
+            window: 0.0, max_batch: 1, queue_cap: 8 });
+        let b = run(2, CoalescePolicy {
+            window: 0.2, max_batch: 6, queue_cap: 8 });
+        let c = run(4, CoalescePolicy {
+            window: 1e9, max_batch: 24, queue_cap: 24 });
+        assert_eq!(a, b);
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn latency_quantiles_are_ordered_and_window_bounded() {
+        let pool = WorkerPool::new(1);
+        let mut snap = snapshot(1);
+        let trace = gen_trace(2, 0, 50, 0.02, 12);
+        let mut preds = Vec::new();
+        let policy =
+            CoalescePolicy { window: 0.06, max_batch: 4, queue_cap: 16 };
+        let s = serve_trace(&mut snap, &trace, &policy, 1e4, false,
+                            &pool, &mut preds);
+        assert!(s.p50_latency <= s.p99_latency);
+        assert!(s.p99_latency <= policy.window + 1e-12,
+                "no request may wait past the window: {}",
+                s.p99_latency);
+        assert!(s.batches >= 50 / 4);
+    }
+}

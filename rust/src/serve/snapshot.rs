@@ -1,0 +1,281 @@
+//! Frozen model snapshots: the read-only serving view of a trained
+//! [`GraphNet`], plus the drift-compensation state (per-layer reference
+//! statistics and calibration gains).
+//!
+//! # Lifecycle
+//!
+//! 1. **Freeze** ([`ModelSnapshot::freeze`]): consume a trained
+//!    [`NetTrainer`].  The conductance planes are sealed — nothing on
+//!    the serving path ever programs a device again; the only mutable
+//!    state left is activation scratch and the gain vector.  The
+//!    calibration set (the first `calib_n` training inputs) is copied
+//!    out, and one **measure pass** records each weighted layer's
+//!    mean-absolute output at freeze time ([`GainCtx::MeasureRefs`],
+//!    RNG round [`CALIB_ROUND_BASE`]) as the reference statistic.
+//!    Gains start at exactly `1.0`, so a fresh snapshot serves
+//!    bit-identically to the raw net.
+//! 2. **Serve** ([`ModelSnapshot::infer`]): forward passes at RNG round
+//!    [`SERVE_ROUND_BASE`] with the caller's globally unique
+//!    `sample_base`; `calibrated` selects [`GainCtx::Apply`] (the
+//!    drift-compensated path) or [`GainCtx::Off`] (the uncompensated
+//!    reference).  Both consume identical noise streams — the
+//!    accuracy delta between them is purely the gains.
+//! 3. **Recalibrate** ([`ModelSnapshot::recalibrate`]): re-run the
+//!    calibration set on the drifted device and set each layer's gain
+//!    to `ref / current` ([`GainCtx::Recalibrate`]; round
+//!    `CALIB_ROUND_BASE + r` for the r-th recalibration) — the global
+//!    gain recalibration of Joshi et al. 2019 (arxiv 1906.03138)
+//!    applied per weighted layer, AdaBS-style: gains apply during the
+//!    pass itself, so deeper layers are measured on
+//!    already-compensated activations, exactly like the freeze-time
+//!    pass saw them.
+//!
+//! Drift keeps ticking throughout: every entry point takes the current
+//! simulated time `t_now`, and the sealed planes decay under it just
+//! as they did in training — freezing stops *programming*, not
+//! physics.
+
+use crate::coordinator::nettrainer::NetTrainer;
+use crate::nn::features::FeatureSource;
+use crate::nn::graph::{GainCtx, GraphNet};
+use crate::util::pool::WorkerPool;
+
+/// RNG round of every served forward pass.  Serving keeps the round
+/// **fixed** and distinguishes requests by their globally unique trace
+/// ids instead (`sample_base` + offset into the batch), so a request's
+/// read-noise draw depends only on `(seed, SERVE_ROUND_BASE, id)` —
+/// never on how requests were coalesced into batches.  Disjoint from
+/// training rounds (small integers) and evaluation rounds
+/// (`EVAL_ROUND_BASE = 1 << 32`).
+pub const SERVE_ROUND_BASE: u64 = 1 << 33;
+
+/// RNG round base of the calibration passes: the freeze-time measure
+/// pass runs at `CALIB_ROUND_BASE`, the r-th recalibration at
+/// `CALIB_ROUND_BASE + r` (r ≥ 1) — every calibration pass draws fresh
+/// noise, disjoint from training, evaluation and serving rounds.
+pub const CALIB_ROUND_BASE: u64 = 1 << 34;
+
+/// A trained [`GraphNet`] sealed for inference serving (see the module
+/// docs for the lifecycle).  The net is private: the only entry points
+/// are read-only forward passes — by construction no serving-path code
+/// can program a device, which is what makes the snapshot→request
+/// mapping pure and the whole subsystem property-testable.
+pub struct ModelSnapshot {
+    net: GraphNet,
+    /// the frozen model's feature source: train split = calibration
+    /// corpus, test split = request corpus
+    pub data: FeatureSource,
+    /// drift time at which the net was frozen and the reference
+    /// statistics were measured
+    pub frozen_at: f64,
+    /// per-weighted-layer mean-absolute output at freeze time
+    refs: Vec<f32>,
+    /// current per-weighted-layer calibration gains (all `1.0` until
+    /// the first recalibration)
+    gains: Vec<f32>,
+    /// calibration inputs `[calib_n, input_dim]` (first `calib_n`
+    /// training samples, copied at freeze so serving never re-derives
+    /// them)
+    calib: Vec<f32>,
+    calib_n: usize,
+    /// completed recalibration count (also the round offset of the
+    /// next one)
+    pub recalibrations: u64,
+}
+
+impl ModelSnapshot {
+    /// Freeze a trained [`NetTrainer`] (see
+    /// [`NetTrainer::freeze`]): runs the freeze-time measure pass on
+    /// the first `calib_n` training inputs at the trainer's current
+    /// drift time.
+    pub fn freeze(trainer: NetTrainer, calib_n: usize) -> Self {
+        let pool = trainer.pool;
+        let (net, data, frozen_at) = trainer.freeze();
+        Self::from_net(net, data, frozen_at, calib_n, &pool)
+    }
+
+    /// Freeze an already-extracted net (the [`ModelSnapshot::freeze`]
+    /// body, exposed for tests that build nets directly).
+    pub fn from_net(mut net: GraphNet, data: FeatureSource,
+                    frozen_at: f64, calib_n: usize, pool: &WorkerPool)
+                    -> Self {
+        assert!(calib_n > 0 && calib_n <= data.train_len(),
+                "calibration set must be a non-empty train prefix");
+        let d0 = net.input_dim();
+        let mut calib = vec![0.0f32; calib_n * d0];
+        for j in 0..calib_n {
+            data.sample_into(j, false, &mut calib[j * d0..(j + 1) * d0]);
+        }
+        let wl = net.weighted_layers();
+        let mut refs = vec![0.0f32; wl];
+        net.forward_with(&calib, calib_n, frozen_at as f32,
+                         CALIB_ROUND_BASE, 0,
+                         GainCtx::MeasureRefs(&mut refs), pool);
+        ModelSnapshot {
+            net,
+            data,
+            frozen_at,
+            refs,
+            gains: vec![1.0; wl],
+            calib,
+            calib_n,
+            recalibrations: 0,
+        }
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.net.input_dim()
+    }
+
+    pub fn classes(&self) -> usize {
+        self.net.classes()
+    }
+
+    /// Current per-weighted-layer calibration gains.
+    pub fn gains(&self) -> &[f32] {
+        &self.gains
+    }
+
+    /// Freeze-time per-weighted-layer reference statistics.
+    pub fn refs(&self) -> &[f32] {
+        &self.refs
+    }
+
+    /// Serve one coalesced batch: logits `[m, classes]` at drift time
+    /// `t_now`.  `sample_base` is the globally unique id of the
+    /// batch's first request (ids ascend by 1 across the batch), so
+    /// per-request outputs are independent of the coalescing schedule
+    /// and the worker count.  `calibrated` toggles the gain
+    /// compensation; both settings replay the same noise streams (see
+    /// the module docs).
+    pub fn infer(&mut self, x: &[f32], m: usize, t_now: f32,
+                 sample_base: u64, calibrated: bool, pool: &WorkerPool)
+                 -> &[f32] {
+        let gain = if calibrated {
+            GainCtx::Apply(&self.gains)
+        } else {
+            GainCtx::Off
+        };
+        self.net.forward_with(x, m, t_now, SERVE_ROUND_BASE, sample_base,
+                              gain, pool)
+    }
+
+    /// Drift compensation: one AdaBS-style recalibration pass over the
+    /// calibration set at drift time `t_now`, setting each weighted
+    /// layer's gain to `ref / current` (see the module docs).  Pure
+    /// gain state update — conductances untouched.
+    pub fn recalibrate(&mut self, t_now: f32, pool: &WorkerPool) {
+        self.recalibrations += 1;
+        let round = CALIB_ROUND_BASE + self.recalibrations;
+        self.net.forward_with(&self.calib, self.calib_n, t_now, round, 0,
+                              GainCtx::Recalibrate {
+                                  refs: &self.refs,
+                                  gains: &mut self.gains,
+                              },
+                              pool);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::nettrainer::NetTrainerOptions;
+    use crate::crossbar::TilingPolicy;
+    use crate::nn::features::BlobDataset;
+    use crate::pcm::device::PcmParams;
+
+    fn drift_params() -> PcmParams {
+        PcmParams {
+            nonlinear: false,
+            write_noise: false,
+            read_noise: true,
+            drift: true,
+            drift_nu_sigma: 0.0,
+            ..Default::default()
+        }
+    }
+
+    fn trained(workers: usize) -> NetTrainer {
+        let data = FeatureSource::Blobs(
+            BlobDataset::new(3, 8, 4, 0.35, 60, 24));
+        let mut t = NetTrainer::new(
+            drift_params(), &[8, 10, 4],
+            TilingPolicy { tile_rows: 5, tile_cols: 5 }, data,
+            WorkerPool::new(workers),
+            NetTrainerOptions { batch: 6, ..Default::default() });
+        t.train_steps(6);
+        t
+    }
+
+    #[test]
+    fn fresh_snapshot_serves_like_the_raw_net() {
+        // Freezing (including the measure pass) must not perturb the
+        // net: snapshot inference with all-1.0 gains is bit-identical
+        // to the raw net's forward at the same (t, round, base), both
+        // calibrated and not.
+        let pool = WorkerPool::new(2);
+        let mut t = trained(2);
+        let d0 = 8;
+        let mut x = vec![0.0f32; 3 * d0];
+        for j in 0..3 {
+            t.data.sample_into(j, true, &mut x[j * d0..(j + 1) * d0]);
+        }
+        let t_eval = 5e4f32;
+        let (net, _, _) = trained(2).freeze();
+        let mut raw = net;
+        let want = raw
+            .forward_with(&x, 3, t_eval, SERVE_ROUND_BASE, 77,
+                          GainCtx::Off, &pool)
+            .to_vec();
+        let mut snap = ModelSnapshot::freeze(t, 5);
+        assert_eq!(snap.gains(), &[1.0, 1.0]);
+        assert!(snap.refs().iter().all(|r| r.is_finite()));
+        let got = snap.infer(&x, 3, t_eval, 77, false, &pool).to_vec();
+        assert_eq!(got, want);
+        // gains all 1.0: the calibrated path is bitwise transparent.
+        let cal = snap.infer(&x, 3, t_eval, 77, true, &pool).to_vec();
+        assert_eq!(cal, want);
+    }
+
+    #[test]
+    fn recalibration_counters_and_gain_motion() {
+        let pool = WorkerPool::new(2);
+        let mut snap = ModelSnapshot::freeze(trained(2), 5);
+        assert_eq!(snap.recalibrations, 0);
+        // At (almost) freeze time the device has barely drifted:
+        // gains land near 1.  At 1 year they compensate real decay,
+        // so they move away from 1 (upward: conductances shrink).
+        snap.recalibrate(snap.frozen_at as f32 + 1.0, &pool);
+        assert_eq!(snap.recalibrations, 1);
+        let near: Vec<f32> = snap.gains().to_vec();
+        assert!(near.iter().all(|g| (g - 1.0).abs() < 0.2),
+                "near-freeze gains {near:?}");
+        snap.recalibrate(4e7, &pool);
+        assert_eq!(snap.recalibrations, 2);
+        let far = snap.gains();
+        assert!(far.iter().all(|g| g.is_finite() && *g > 0.0),
+                "gains {far:?}");
+        assert!(far.iter().any(|g| (g - 1.0).abs() > 0.05),
+                "1-year drift should move the gains: {far:?}");
+    }
+
+    #[test]
+    fn snapshot_is_worker_count_invariant() {
+        let d0 = 8;
+        let mut x = vec![0.0f32; 4 * d0];
+        let mut run = |workers: usize| {
+            let pool = WorkerPool::new(workers);
+            let t = trained(workers);
+            for j in 0..4 {
+                t.data.sample_into(j, true,
+                                   &mut x[j * d0..(j + 1) * d0]);
+            }
+            let mut snap = ModelSnapshot::freeze(t, 5);
+            snap.recalibrate(1e6, &pool);
+            let out = snap.infer(&x, 4, 1e6, 123, true, &pool).to_vec();
+            (snap.gains().to_vec(), out)
+        };
+        let a = run(1);
+        assert_eq!(a, run(4));
+    }
+}

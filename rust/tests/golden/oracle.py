@@ -3,8 +3,9 @@
 
 Transliterates the Rust device math op for op into numpy float32 /
 Python float (IEEE binary64), and regenerates
-`fig3_grid.json` / `fig5_grid.json` / `fig4_grid.json` — the goldens
-pinned by `rust/tests/golden_gridexp.rs`.  Every code path consumed by
+`fig3_grid.json` / `fig5_grid.json` / `fig4_grid.json` /
+`fig4_resnet_grid.json` / `fig5_serve.json` — the goldens pinned by
+`rust/tests/golden_gridexp.rs`.  Every code path consumed by
 the golden configs is pure f32/f64 arithmetic (no libm), so the two
 implementations agree byte for byte on any IEEE-754 platform.
 
@@ -25,7 +26,11 @@ Mirrored sources (keep in sync when the Rust changes):
                               softmax/NLL, FP32 baseline
   rust/src/coordinator/gridtrainer.rs  linear-regression loop, eval
   rust/src/coordinator/nettrainer.rs   multi-layer loop, eval
+  rust/src/serve/{snapshot,scheduler,loadgen}.rs  frozen snapshots,
+                              gain recalibration, coalescing replay,
+                              synthetic request traces
   rust/src/exp/gridexp.rs     documents and micro-unit quantization
+  rust/src/exp/serve.rs       the fig5-serve document
 
 Run:  python3 rust/tests/golden/oracle.py          (writes the goldens)
 """
@@ -459,11 +464,14 @@ class Grid:
                         r * uc + c, t_now, self.params.drift)
         return out
 
-    def vmm_batch(self, x, m, t_now, rnd):
-        """CrossbarGrid::vmm_batch_into — the blocked tile-stationary
-        forward kernel.  Sample blocking is pure scheduling (each
-        (tile, sample) pair owns its own OP_VMM sub-stream), so the
-        sample-major loop below is bit-identical to any block size."""
+    def vmm_batch(self, x, m, t_now, rnd, base=0):
+        """CrossbarGrid::vmm_batch_base_into — the blocked
+        tile-stationary forward kernel.  Sample blocking is pure
+        scheduling (each (tile, sample) pair owns its own OP_VMM
+        sub-stream), so the sample-major loop below is bit-identical to
+        any block size.  `base` offsets the per-sample stream ids
+        (wrapping u64 add) — the serving path's globally-unique request
+        ids; every training/eval call leaves it 0."""
         k, n = self.k, self.n
         # Phase 1: drift planes per tile.
         gps = [t.plus.drift_into(t_now, self.params.drift)
@@ -482,7 +490,8 @@ class Grid:
                     tile = self.tiles[ti]
                     tr, tc = tile.rows, tile.cols
                     nt = tr * tc
-                    rng = op_sample_rng(self.seed, rnd, OP_VMM, ti, s)
+                    rng = op_sample_rng(self.seed, rnd, OP_VMM, ti,
+                                        (base + s) & M64)
                     w = read_noisy_weights(tile, gps[ti], gms[ti], nt,
                                            rng, self.params)
                     r0 = self.coords[ti][0]
@@ -1861,6 +1870,217 @@ def run_fig4_resnet(o):
     }
 
 
+# -- serve::{snapshot, scheduler, loadgen} and exp::serve --------------------
+
+SERVE_ROUND_BASE = 1 << 33
+CALIB_ROUND_BASE = 1 << 34
+LOADGEN_STREAM = 0x10AD
+
+
+def mean_abs(v):
+    """nn::graph::mean_abs — f64 accumulation in index order, one
+    rounding to f32 at the end.  Sequential loop, never np.sum (numpy's
+    pairwise summation would change the bits)."""
+    acc = 0.0
+    for x in v:
+        acc += float(abs(x))
+    return f32(acc / float(len(v)))
+
+
+def gen_trace(seed, base_id, requests, mean_gap, test_len):
+    """serve::loadgen::gen_trace — bounded-jitter arrivals
+    (`mean_gap * (0.5 + u)` per gap, pure f64), contiguous ids, samples
+    cycling the test split."""
+    rng = Pcg64(seed, LOADGEN_STREAM)
+    t = 0.0
+    out = []
+    for i in range(requests):
+        u = rng.uniform()
+        t += mean_gap * (0.5 + u)
+        out.append({"id": base_id + i, "arrival": t,
+                    "sample": i % test_len})
+    return out
+
+
+class ServeOracle:
+    """serve::snapshot::ModelSnapshot over a trained NnTrainer's sealed
+    grids.  The golden serve config is a dense MLP, where the graph-IR
+    net and the flat NnTrainer mirror are bit-identical — so the flat
+    forward below plus the per-layer gain hook (nn::graph::weighted_out)
+    mirrors GraphNet::forward_with exactly."""
+
+    def __init__(self, t, calib_n):
+        self.grids = t.grids
+        self.dims = t.dims
+        self.data = t.data
+        self.frozen_at = t.now
+        d0 = t.dims[0]
+        self.calib = np.zeros(calib_n * d0, dtype=np.float32)
+        for j in range(calib_n):
+            xv, _ = t.data.sample(j, False)
+            self.calib[j * d0:(j + 1) * d0] = xv
+        self.calib_n = calib_n
+        nl = len(t.grids)
+        self.refs = [f32(0.0)] * nl
+        self.gains = [f32(1.0)] * nl
+        self.recalibrations = 0
+        self._forward(self.calib, calib_n, f32(self.frozen_at),
+                      CALIB_ROUND_BASE, 0, "measure")
+
+    def _forward(self, x, m, t_now, rnd, base, mode):
+        """GraphNet::forward_with — each weighted layer's post-ADC
+        output runs the gain hook, then relu between layers."""
+        nl = len(self.grids)
+        inp = x
+        z = None
+        for l in range(nl):
+            z = self.grids[l].vmm_batch(inp, m, t_now, rnd, base)
+            if mode == "apply":
+                g = self.gains[l]
+                if g != 1.0:
+                    z = np.array([f32(v * g) for v in z],
+                                 dtype=np.float32)
+            elif mode == "measure":
+                self.refs[l] = mean_abs(z)
+            elif mode == "recal":
+                cur = mean_abs(z)
+                g = f32(1.0) if cur == 0.0 else f32(self.refs[l] / cur)
+                self.gains[l] = g
+                if g != 1.0:
+                    z = np.array([f32(v * g) for v in z],
+                                 dtype=np.float32)
+            if l + 1 < nl:
+                inp = relu(z)
+        return z
+
+    def infer(self, x, m, t_now, base, calibrated):
+        return self._forward(x, m, t_now, SERVE_ROUND_BASE, base,
+                             "apply" if calibrated else "off")
+
+    def recalibrate(self, t_now):
+        self.recalibrations += 1
+        rnd = CALIB_ROUND_BASE + self.recalibrations
+        self._forward(self.calib, self.calib_n, t_now, rnd, 0, "recal")
+
+
+def serve_trace(snap, trace, window, max_batch, queue_cap, t_now,
+                calibrated):
+    """serve::scheduler::serve_trace — deterministic discrete-event
+    replay of the bounded coalescing queue.  Returns (stats, preds)."""
+    cap = max(1, min(max_batch, queue_cap))
+    d0 = snap.dims[0]
+    classes = snap.dims[-1]
+    preds = [0] * len(trace)
+    lat = []
+    pending = []
+    stats = {"requests": len(trace), "batches": 0, "max_coalesced": 0,
+             "hits": 0}
+
+    def flush(dispatch_t):
+        m = len(pending)
+        x = np.zeros(m * d0, dtype=np.float32)
+        labels = []
+        for j, ti in enumerate(pending):
+            xv, y = snap.data.sample(trace[ti]["sample"], True)
+            x[j * d0:(j + 1) * d0] = xv
+            labels.append(y)
+        base = trace[pending[0]]["id"]
+        logits = snap.infer(x, m, t_now, base, calibrated)
+        for j, ti in enumerate(pending):
+            row = logits[j * classes:(j + 1) * classes]
+            p = argmax_row(row)
+            preds[ti] = p
+            if p == labels[j]:
+                stats["hits"] += 1
+            lat.append(dispatch_t - trace[ti]["arrival"])
+        stats["batches"] += 1
+        stats["max_coalesced"] = max(stats["max_coalesced"], m)
+        pending.clear()
+
+    for i in range(len(trace)):
+        arrival = trace[i]["arrival"]
+        if pending:
+            deadline = trace[pending[0]]["arrival"] + window
+            if arrival > deadline:
+                flush(deadline)
+        pending.append(i)
+        if len(pending) >= cap:
+            flush(arrival)
+    if pending:
+        flush(trace[pending[0]]["arrival"] + window)
+
+    lat.sort()
+    n = len(lat)
+    stats["p50_latency"] = lat[(n - 1) // 2] if n else 0.0
+    stats["p99_latency"] = lat[99 * (n - 1) // 100] if n else 0.0
+    return stats, preds
+
+
+# Mirror of the Rust golden fig5-serve config
+# (exp::serve::tests::tiny_serve).
+TINY_SERVE = dict(dim=6, classes=3, hidden=[4, 3], steps=4, batch=3,
+                  tile=3, train_len=30, test_len=12, lr=0.05, noise=0.5,
+                  seed=42, requests=24, mean_gap=0.05, window=0.2,
+                  max_batch=6, queue_cap=8, calib_n=6)
+
+
+def run_fig5_serve(o):
+    params = Params(read_noise=True, drift=True)
+    dims = [o["dim"]] + o["hidden"] + [o["classes"]]
+    data = Blobs(o["seed"], o["dim"], o["classes"], o["noise"],
+                 o["train_len"], o["test_len"])
+    t = NnTrainer(dims, o["tile"], data, o["seed"], o["batch"],
+                  o["lr"], params)
+    t.train_steps(o["steps"])
+    train_loss = t.losses[-1]
+    snap = ServeOracle(t, o["calib_n"])
+    probes = []
+    for i, pt in enumerate([1e2, 1e3, 1e4, 1e5, 1e6, 1e7, 4e7]):
+        trace = gen_trace(o["seed"], i * o["requests"], o["requests"],
+                          o["mean_gap"], o["test_len"])
+        tf = f32(pt)
+        nocal, _ = serve_trace(snap, trace, o["window"], o["max_batch"],
+                               o["queue_cap"], tf, False)
+        snap.recalibrate(tf)
+        cal, _ = serve_trace(snap, trace, o["window"], o["max_batch"],
+                             o["queue_cap"], tf, True)
+        probes.append({
+            "t_seconds": pt,
+            "acc_nocal_u6": u6(nocal["hits"]
+                               / float(nocal["requests"])),
+            "acc_cal_u6": u6(cal["hits"] / float(cal["requests"])),
+            "batches": nocal["batches"],
+            "max_coalesced": nocal["max_coalesced"],
+            "p50_latency_u6": u6(nocal["p50_latency"]),
+            "p99_latency_u6": u6(nocal["p99_latency"]),
+            "gains_u6": [u6(float(g)) for g in snap.gains],
+        })
+    return {
+        "experiment": "fig5_serve",
+        "data": "blobs",
+        "data_param": o["dim"],
+        "input": o["dim"],
+        "classes": o["classes"],
+        "hidden": o["hidden"],
+        "steps": o["steps"],
+        "batch": o["batch"],
+        "tile": o["tile"],
+        "train_len": o["train_len"],
+        "test_len": o["test_len"],
+        "lr_u6": u6(float(f32(o["lr"]))),
+        "seed": o["seed"],
+        "requests": o["requests"],
+        "mean_gap_u6": u6(o["mean_gap"]),
+        "window_u6": u6(o["window"]),
+        "max_batch": o["max_batch"],
+        "queue_cap": o["queue_cap"],
+        "calib_n": o["calib_n"],
+        "final_train_loss_u6": u6(train_loss),
+        "recalibrations": snap.recalibrations,
+        "probes": probes,
+    }
+
+
 if __name__ == "__main__":
     here = os.path.dirname(os.path.abspath(__file__))
     fig3 = jdump(run_fig3(TINY))
@@ -1879,3 +2099,7 @@ if __name__ == "__main__":
     with open(os.path.join(here, "fig4_resnet_grid.json"), "w") as f:
         f.write(fig4r)
     print("fig4_resnet_grid.json:", fig4r)
+    fig5s = jdump(run_fig5_serve(TINY_SERVE))
+    with open(os.path.join(here, "fig5_serve.json"), "w") as f:
+        f.write(fig5s)
+    print("fig5_serve.json:", fig5s)

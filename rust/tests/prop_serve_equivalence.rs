@@ -1,0 +1,216 @@
+//! Serving-stack equivalence suite (`serve::{snapshot, scheduler}`).
+//!
+//! Contract pinned here (see the `serve` module docs):
+//!
+//! * **freeze transparency** — a freshly frozen [`ModelSnapshot`]
+//!   (gains all `1.0`) serves bit-identically to the raw
+//!   [`GraphNet`]'s forward at the same `(t, round, sample_base)`,
+//!   calibrated or not: freezing (including the freeze-time measure
+//!   pass) perturbs nothing;
+//! * **schedule + worker invariance** — for a fixed request trace, the
+//!   per-request served predictions are bitwise identical across
+//!   worker counts {1, 4, 8} and across coalescing policies (window 0
+//!   / mid / unbounded, different max-batch and queue caps), with
+//!   non-unit recalibrated gains in play.  Counters and latency
+//!   quantiles are worker-invariant for a fixed policy;
+//! * **recalibration monotonicity** — on the golden fig5-serve config
+//!   (oracle-validated bytes: `rust/tests/golden/fig5_serve.json`),
+//!   calibrated accuracy ≥ uncalibrated at every drift probe, strictly
+//!   better at 1-year drift, with gains drifted well above 1.
+//!
+//! All three follow from the RNG stream table in `serve`: a request's
+//! read noise is keyed by its globally unique trace id, never by its
+//! batch placement.
+
+use hic_train::exp::serve::{run_fig5_serve, ServeData, ServeExpOptions};
+use hic_train::coordinator::nettrainer::{NetTrainer, NetTrainerOptions};
+use hic_train::crossbar::TilingPolicy;
+use hic_train::nn::features::{BlobDataset, FeatureSource};
+use hic_train::nn::graph::GainCtx;
+use hic_train::pcm::device::PcmParams;
+use hic_train::serve::{gen_trace, serve_trace, CoalescePolicy,
+                       ModelSnapshot, ServeStats, SERVE_ROUND_BASE};
+use hic_train::testutil::prop;
+use hic_train::util::pool::WorkerPool;
+
+fn drift_params() -> PcmParams {
+    PcmParams {
+        nonlinear: false,
+        write_noise: false,
+        read_noise: true,
+        drift: true,
+        drift_nu_sigma: 0.0,
+        ..Default::default()
+    }
+}
+
+/// Deterministic trained trainer (rebuilt per run — training is
+/// worker-invariant, so every rebuild is bit-identical).
+fn trained(dims: &[usize], tile: usize, batch: usize, seed: u64,
+           steps: usize, workers: usize) -> NetTrainer {
+    let data = FeatureSource::Blobs(BlobDataset::new(
+        seed, dims[0], *dims.last().unwrap(), 0.4, 40, 16));
+    let mut t = NetTrainer::new(
+        drift_params(), dims,
+        TilingPolicy { tile_rows: tile, tile_cols: tile }, data,
+        WorkerPool::new(workers),
+        NetTrainerOptions { seed, batch, ..Default::default() });
+    t.train_steps(steps);
+    t
+}
+
+/// Freezing is transparent: snapshot inference (all gains `1.0`)
+/// matches the raw net's forward bit for bit at the same
+/// `(t, SERVE_ROUND_BASE, sample_base)` — with and without the
+/// calibrated-path gain hook — on randomized dense stacks.
+#[test]
+fn prop_snapshot_forward_matches_raw_net() {
+    prop("snapshot forward == raw GraphNet forward", 4, |g| {
+        let h1 = g.usize_in(4, 9);
+        let h2 = g.usize_in(3, 7);
+        let tile = g.usize_in(2, 5);
+        let batch = g.usize_in(2, 5);
+        let seed = g.u64_below(1 << 24);
+        let base = g.u64_below(1 << 20);
+        let dims = [6, h1, h2, 3];
+        let pool = WorkerPool::new(2);
+        let m = 3usize;
+        let d0 = dims[0];
+
+        let t = trained(&dims, tile, batch, seed, 4, 2);
+        let mut x = vec![0.0f32; m * d0];
+        for j in 0..m {
+            t.data.sample_into(j, true, &mut x[j * d0..(j + 1) * d0]);
+        }
+        let t_eval = 3e4f32;
+        let (mut raw, _, _) =
+            trained(&dims, tile, batch, seed, 4, 2).freeze();
+        let want = raw
+            .forward_with(&x, m, t_eval, SERVE_ROUND_BASE, base,
+                          GainCtx::Off, &pool)
+            .to_vec();
+        let mut snap = ModelSnapshot::freeze(t, 4);
+        if snap.gains().iter().any(|&g0| g0 != 1.0) {
+            return Err("fresh snapshot gains must be exactly 1.0"
+                .to_string());
+        }
+        for calibrated in [false, true] {
+            let got = snap
+                .infer(&x, m, t_eval, base, calibrated, &pool)
+                .to_vec();
+            if got != want {
+                return Err(format!(
+                    "snapshot(calibrated={calibrated}) diverges from \
+                     the raw net (dims={dims:?} tile={tile} \
+                     batch={batch} base={base})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The tentpole determinism contract: served per-request predictions
+/// (and hit counts) are bitwise invariant across worker counts
+/// {1, 4, 8} and coalescing schedules, with non-unit gains.  For a
+/// fixed policy, the full stats (counters + latency quantiles) are
+/// worker-invariant too.
+#[test]
+fn prop_served_outputs_schedule_and_worker_invariant() {
+    prop("served outputs invariant across schedules", 3, |g| {
+        let h1 = g.usize_in(4, 9);
+        let tile = g.usize_in(2, 5);
+        let seed = g.u64_below(1 << 24);
+        let requests = g.usize_in(12, 30);
+        let dims = [6, h1, 3];
+        let trace = gen_trace(seed, 500, requests, 0.05, 16);
+        let policies = [
+            CoalescePolicy { window: 0.0, max_batch: 1, queue_cap: 8 },
+            CoalescePolicy { window: 0.2, max_batch: 5, queue_cap: 8 },
+            CoalescePolicy { window: 1e9, max_batch: 64, queue_cap: 7 },
+        ];
+        let mut run = |workers: usize, policy: &CoalescePolicy|
+                       -> (Vec<u8>, ServeStats) {
+            let pool = WorkerPool::new(workers);
+            let mut snap =
+                ModelSnapshot::freeze(trained(&dims, tile, 3, seed, 4,
+                                              workers), 5);
+            snap.recalibrate(2e6, &pool); // non-unit gains
+            let mut preds = Vec::new();
+            let stats = serve_trace(&mut snap, &trace, policy, 2e6,
+                                    true, &pool, &mut preds);
+            (preds, stats)
+        };
+        let reference = run(1, &policies[0]);
+        for policy in &policies {
+            let (p1, s1) = run(1, policy);
+            if p1 != reference.0 || s1.hits != reference.1.hits {
+                return Err(format!(
+                    "predictions depend on the coalescing policy \
+                     (window={})", policy.window));
+            }
+            for workers in [4usize, 8] {
+                let (pw, sw) = run(workers, policy);
+                if (pw, sw) != (p1.clone(), s1.clone()) {
+                    return Err(format!(
+                        "served trace diverges at workers={workers} \
+                         window={} (dims={dims:?} tile={tile})",
+                        policy.window));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Gain recalibration recovers drifted accuracy on the golden config:
+/// the assertions run against the same document the byte-golden pins,
+/// so every threshold here is oracle-validated
+/// (`rust/tests/golden/oracle.py`, `run_fig5_serve(TINY_SERVE)`).
+#[test]
+fn recalibration_monotonicity_on_golden_config() {
+    let opts = ServeExpOptions {
+        data: ServeData::Blobs { dim: 6 },
+        hidden: vec![4, 3],
+        classes: 3,
+        steps: 4,
+        batch: 3,
+        tile: 3,
+        train_len: 30,
+        test_len: 12,
+        lr: 0.05,
+        seed: 42,
+        requests: 24,
+        mean_gap: 0.05,
+        window: 0.2,
+        max_batch: 6,
+        queue_cap: 8,
+        calib_n: 6,
+        workers: 2,
+        ..Default::default()
+    };
+    let doc = run_fig5_serve(&opts).unwrap();
+    let probes = doc.get("probes").unwrap().as_arr().unwrap();
+    assert_eq!(probes.len(), 7);
+    for p in probes {
+        let nocal = p.get("acc_nocal_u6").unwrap().as_f64().unwrap();
+        let cal = p.get("acc_cal_u6").unwrap().as_f64().unwrap();
+        let t = p.get("t_seconds").unwrap().as_f64().unwrap();
+        assert!(cal >= nocal,
+                "calibration must never hurt accuracy (t={t}: \
+                 cal {cal} < nocal {nocal})");
+    }
+    // 1-year drift (the last probe, 4e7 s): compensation strictly
+    // recovers accuracy, and the gains have drifted well above 1
+    // (conductances decay, AdaBS gains push back).
+    let last = &probes[probes.len() - 1];
+    let nocal = last.get("acc_nocal_u6").unwrap().as_f64().unwrap();
+    let cal = last.get("acc_cal_u6").unwrap().as_f64().unwrap();
+    assert!(cal > nocal,
+            "1-year drift must be strictly recovered: cal {cal} vs \
+             nocal {nocal}");
+    for gain in last.get("gains_u6").unwrap().as_arr().unwrap() {
+        let gu6 = gain.as_f64().unwrap();
+        assert!(gu6 > 1_300_000.0,
+                "1-year gains should sit well above 1.0: {gu6}");
+    }
+}
