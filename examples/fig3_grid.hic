@@ -1,0 +1,23 @@
+# PCM non-ideality ablation (paper Fig. 3) on the crossbar grid
+# device model — the golden-pinned tiny configuration: running
+#
+#   hic-train run examples/fig3_grid.hic
+#
+# writes results/fig3_grid.json with exactly the bytes pinned in
+# rust/tests/golden/fig3_grid.json.  The variant list is the portable
+# golden subset; drop the `variants` line to sweep all eight ablation
+# tags.
+
+experiment fig3 {
+  grid {
+    k = 10      # logical weight-matrix rows
+    n = 6       # logical weight-matrix cols
+    tile = 4    # physical tile size (3x2 tile grid)
+  }
+  train {
+    steps = 8
+    batch = 4
+  }
+  variants = [linear, linear_read, linear_drift]
+  seed = 7
+}

@@ -1,0 +1,30 @@
+# Width-multiplier sweep (paper Fig. 4), MLP on portable blob data —
+# the golden-pinned tiny configuration: running
+#
+#   hic-train run examples/fig4_grid.hic
+#
+# writes results/fig4_grid.json with exactly the bytes pinned in
+# rust/tests/golden/fig4_grid.json (the CI smoke leg byte-compares
+# them).  Each width multiplier scales the hidden stack; the device
+# net (per-layer crossbar grids, transposed-VMM backprop) runs against
+# the FP32 software baseline at every width.
+
+experiment fig4 {
+  data {
+    blobs { dim = 6 }   # portable synthetic features
+    classes = 3
+    train_len = 30
+    test_len = 12
+  }
+  model {
+    hidden = [4, 3]         # base hidden widths (arch = mlp inferred)
+    widths = [0.5, 1.0]     # multipliers; 0.5 -> 500 permille
+    tile = 3
+  }
+  train {
+    steps = 4
+    batch = 3
+    lr = 0.05
+    eval_n = 6
+  }
+}

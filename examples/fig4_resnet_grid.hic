@@ -1,0 +1,32 @@
+# Width-multiplier sweep (paper Fig. 4) over the conv/residual graph —
+# the golden-pinned tiny ResNet configuration: running
+#
+#   hic-train run examples/fig4_resnet_grid.hic
+#
+# writes results/fig4_resnet_grid.json with exactly the bytes pinned
+# in rust/tests/golden/fig4_resnet_grid.json.  `stages` gives the
+# three stage channel bases (one residual block each, stride-2 stage
+# transitions with 1x1 skip projections); image blobs keep the config
+# portable.
+
+experiment fig4 {
+  data {
+    blobs { image = [4, 4, 3] }   # h, w, c
+    classes = 3
+    train_len = 24
+    test_len = 8
+  }
+  model {
+    arch = resnet
+    stages = [4, 6, 8]
+    blocks = 1
+    widths = [0.5, 0.75, 1.0, 1.5]
+    tile = 4
+  }
+  train {
+    steps = 3
+    batch = 2
+    lr = 0.08
+    eval_n = 4
+  }
+}

@@ -1,0 +1,21 @@
+# Drift + AdaBS inference study (paper Fig. 5) on the crossbar grid
+# device model — the golden-pinned tiny configuration: running
+#
+#   hic-train run examples/fig5_grid.hic
+#
+# writes results/fig5_grid.json with exactly the bytes pinned in
+# rust/tests/golden/fig5_grid.json: accuracy vs drift time,
+# uncalibrated and AdaBS gain-recalibrated, over the fixed probe axis.
+
+experiment fig5 {
+  grid {
+    k = 10
+    n = 6
+    tile = 4
+  }
+  train {
+    steps = 8
+    batch = 4
+  }
+  seed = 7
+}

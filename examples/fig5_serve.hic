@@ -1,0 +1,36 @@
+# Drift-aware inference serving under synthetic load — the
+# golden-pinned tiny configuration: running
+#
+#   hic-train run examples/fig5_serve.hic
+#
+# trains a dense MLP on the crossbar grids, freezes it into a
+# read-only snapshot, then replays a deterministic request trace
+# through the batch-coalescing scheduler at each fig5 drift probe
+# (uncalibrated and gain-recalibrated), writing results/fig5_serve.json
+# with exactly the bytes pinned in rust/tests/golden/fig5_serve.json.
+
+experiment serve {
+  data {
+    blobs { dim = 6 }
+    classes = 3
+    train_len = 30
+    test_len = 12
+  }
+  model {
+    hidden = [4, 3]
+    tile = 3
+  }
+  train {
+    steps = 4
+    batch = 3
+    lr = 0.05
+  }
+  serve {
+    requests = 24     # per probe trace
+    mean_gap = 0.05   # mean inter-arrival gap (simulated seconds)
+    window = 0.2      # coalescing window
+    max_batch = 6
+    queue_cap = 8
+    calib = 6         # AdaBS recalibration samples
+  }
+}

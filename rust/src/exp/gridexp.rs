@@ -33,7 +33,8 @@ use crate::crossbar::TilingPolicy;
 use crate::data::{IMG_C, IMG_H, IMG_W, NUM_CLASSES};
 use crate::hic::weight::HicGeometry;
 use crate::nn::features::{BlobDataset, FeatureSource};
-use crate::nn::graph::{ActShape, GraphSpec};
+use crate::nn::graph::{has_conv, scale_widths, ActShape, GraphSpec,
+                       LayerSpec};
 use crate::nn::net::NetSpec;
 use crate::nn::{FpGraphNet, FpNet};
 use crate::pcm::device::PcmParams;
@@ -162,6 +163,12 @@ pub fn variant_params(tag: &str) -> Result<PcmParams> {
         "full" => {
             p.nonlinear = true;
             p.write_noise = true;
+            p.read_noise = true;
+            p.drift = true;
+        }
+        // The serving device model (fig5/fig5-serve): read noise plus
+        // drift on an otherwise linear device.
+        "linear_read_drift" => {
             p.read_noise = true;
             p.drift = true;
         }
@@ -297,7 +304,16 @@ pub enum NnArch {
     /// (`GraphSpec::resnet`): per-stage channel bases scaled per
     /// width, `blocks` residual blocks per stage
     Resnet { stages: [usize; 3], blocks: usize },
+    /// Explicit layer list (the experiment-spec DSL's `layers { … }`
+    /// block): the base extents of every weighted layer except the
+    /// classifier head are scaled per width
+    /// ([`crate::nn::graph::scale_widths`]).
+    Custom { layers: Vec<LayerSpec> },
 }
+
+/// Default device variant of the fig4 sweep (see [`variant_params`]):
+/// linear device, read noise on — the golden-pinned model.
+pub const FIG4_DEFAULT_VARIANT: &str = "linear_read";
 
 /// Parameters of the grid-routed fig4 width sweep.
 #[derive(Clone, Debug)]
@@ -326,6 +342,14 @@ pub struct NnExpOptions {
     /// worker threads (0 = `HIC_WORKERS` / machine default)
     pub workers: usize,
     pub out_dir: PathBuf,
+    /// device variant tag ([`variant_params`]); the default
+    /// ([`FIG4_DEFAULT_VARIANT`]) is the golden-pinned model
+    pub device_variant: String,
+    /// batches between MSB refreshes (0 = never — the golden default)
+    pub refresh_every: usize,
+    /// explicit CIFAR-10 directory (overrides `$HIC_CIFAR10` and the
+    /// `data/` discovery; `None` = auto-discover)
+    pub cifar_dir: Option<PathBuf>,
 }
 
 impl Default for NnExpOptions {
@@ -347,6 +371,9 @@ impl Default for NnExpOptions {
             seed: 42,
             workers: 0,
             out_dir: PathBuf::from("results"),
+            device_variant: FIG4_DEFAULT_VARIANT.to_string(),
+            refresh_every: 0,
+            cifar_dir: None,
         }
     }
 }
@@ -366,7 +393,9 @@ impl NnExpOptions {
                 self.data = NnExpData::Cifar { pool: 1 };
                 Ok(())
             }
-            NnArch::Mlp => bail!("--long-run needs --arch resnet"),
+            NnArch::Mlp | NnArch::Custom { .. } => {
+                bail!("--long-run needs --arch resnet")
+            }
         }
     }
 
@@ -389,11 +418,12 @@ impl NnExpOptions {
                                         self.classes, self.blob_noise,
                                         self.train_len, self.test_len)),
             // Real CIFAR-10 bytes when a dataset directory is present
-            // (serve / `fig4 --long-run` pick them up automatically);
-            // the synthetic provider stays the fallback, so CI and the
-            // goldens never see the real path.
-            NnExpData::Cifar { pool } => FeatureSource::pooled_cifar_auto(
-                self.seed, pool, self.train_len, self.test_len),
+            // (explicit `cifar_dir` first, then `$HIC_CIFAR10` /
+            // `data/` discovery); the synthetic provider stays the
+            // fallback, so CI and the goldens never see the real path.
+            NnExpData::Cifar { pool } => FeatureSource::pooled_cifar_from(
+                self.cifar_dir.as_deref(), self.seed, pool,
+                self.train_len, self.test_len),
         }
     }
 
@@ -449,6 +479,18 @@ impl NnExpOptions {
                                      self.data_classes(),
                                      width_permille))
             }
+            NnArch::Custom { ref layers } => {
+                let mut scaled = layers.clone();
+                scale_widths(&mut scaled, width_permille);
+                let spec = GraphSpec {
+                    input: self.input_shape(),
+                    layers: scaled,
+                };
+                if let Err(e) = spec.shape_check() {
+                    bail!("custom arch at width {width_permille}: {e}");
+                }
+                Ok(spec)
+            }
         }
     }
 
@@ -481,6 +523,11 @@ impl NnExpOptions {
                 doc.push(("blocks_per_stage",
                           Json::Num(blocks as f64)));
             }
+            NnArch::Custom { ref layers } => {
+                doc.push(("arch", Json::str("custom")));
+                doc.push(("custom_layers",
+                          Json::Num(layers.len() as f64)));
+            }
         }
         doc.extend([
             ("steps", Json::Num(self.steps as f64)),
@@ -489,6 +536,16 @@ impl NnExpOptions {
             ("eval_n", Json::Num(self.eval_n as f64)),
             ("seed", Json::Num(self.seed as f64)),
         ]);
+        // Non-default knobs only: the pinned golden documents predate
+        // these keys, and their configs leave them at the defaults.
+        if self.device_variant != FIG4_DEFAULT_VARIANT {
+            doc.push(("device_variant",
+                      Json::Str(self.device_variant.clone())));
+        }
+        if self.refresh_every != 0 {
+            doc.push(("refresh_every",
+                      Json::Num(self.refresh_every as f64)));
+        }
         doc
     }
 }
@@ -504,21 +561,24 @@ pub fn run_fig4(opts: &NnExpOptions) -> Result<Json> {
     if opts.widths_permille.is_empty() {
         bail!("fig4 needs at least one width multiplier");
     }
-    let params = PcmParams {
-        nonlinear: false,
-        write_noise: false,
-        read_noise: true,
-        drift: false,
-        drift_nu_sigma: 0.0,
-        ..Default::default()
-    };
+    // Default variant "linear_read" reproduces the historical
+    // hard-coded model (linear device, read noise on) byte for byte.
+    let params = variant_params(&opts.device_variant)?;
     let policy =
         TilingPolicy { tile_rows: opts.tile, tile_cols: opts.tile };
     let mut rows = Vec::new();
-    // Per-arch weight-window scale (see `RESNET_W_SCALE`).
+    // Per-arch weight-window scale (see `RESNET_W_SCALE`); custom
+    // graphs take the conv scale iff they go through conv depth.
     let w_scale = match opts.arch {
         NnArch::Mlp => NetTrainerOptions::default().w_scale,
         NnArch::Resnet { .. } => RESNET_W_SCALE,
+        NnArch::Custom { ref layers } => {
+            if has_conv(layers) {
+                RESNET_W_SCALE
+            } else {
+                NetTrainerOptions::default().w_scale
+            }
+        }
     };
     for &w in &opts.widths_permille {
         let spec = opts.graph_spec(w)?;
@@ -527,7 +587,7 @@ pub fn run_fig4(opts: &NnExpOptions) -> Result<Json> {
             NetTrainerOptions {
                 seed: opts.seed,
                 lr: LrSchedule::constant(opts.lr),
-                refresh_every: 0,
+                refresh_every: opts.refresh_every,
                 batch: opts.batch,
                 w_scale,
                 ..Default::default()
@@ -565,11 +625,11 @@ pub fn run_fig4(opts: &NnExpOptions) -> Result<Json> {
                 (el, acc, *net.losses.last().unwrap_or(&f64::NAN),
                  net.inference_bits())
             }
-            NnArch::Resnet { .. } => {
+            NnArch::Resnet { .. } | NnArch::Custom { .. } => {
                 let spec = opts.graph_spec(w)?;
                 // Same init law as the device rows (w_scale included).
                 let mut net =
-                    FpGraphNet::new(&spec, RESNET_W_SCALE, opts.seed);
+                    FpGraphNet::new(&spec, w_scale, opts.seed);
                 net.train_steps(&data, opts.steps, opts.batch, opts.lr);
                 let (el, acc) =
                     net.evaluate(&data, opts.eval_n, opts.batch);

@@ -28,6 +28,8 @@ use std::path::PathBuf;
 
 use anyhow::Result;
 
+use super::gridexp::variant_params;
+
 use crate::coordinator::nettrainer::{NetTrainer, NetTrainerOptions};
 use crate::coordinator::schedule::LrSchedule;
 use crate::crossbar::TilingPolicy;
@@ -35,7 +37,6 @@ use crate::data::{IMG_C, IMG_H, IMG_W, NUM_CLASSES};
 use crate::log_info;
 use crate::nn::features::{BlobDataset, FeatureSource};
 use crate::nn::graph::GraphSpec;
-use crate::pcm::device::PcmParams;
 use crate::serve::{gen_trace, serve_trace, CoalescePolicy, ModelSnapshot};
 use crate::util::json::Json;
 use crate::util::pool::WorkerPool;
@@ -83,7 +84,21 @@ pub struct ServeExpOptions {
     /// worker threads (0 = `HIC_WORKERS` / machine default)
     pub workers: usize,
     pub out_dir: PathBuf,
+    /// device variant tag ([`variant_params`]); the default
+    /// ([`SERVE_DEFAULT_VARIANT`]) is the golden-pinned fig5 model
+    pub device_variant: String,
+    /// batches between MSB refreshes during training (0 = never)
+    pub refresh_every: usize,
+    /// drift probe times in simulated seconds (default: the fig5 axis,
+    /// [`super::fig5::probe_times`])
+    pub probes: Vec<f64>,
+    /// explicit CIFAR-10 directory (overrides discovery; `None` = auto)
+    pub cifar_dir: Option<PathBuf>,
 }
+
+/// Default device variant of the serving sweep: linear device, read
+/// noise and drift on — the same model `run_fig5` hard-codes.
+pub const SERVE_DEFAULT_VARIANT: &str = "linear_read_drift";
 
 impl Default for ServeExpOptions {
     fn default() -> Self {
@@ -107,6 +122,10 @@ impl Default for ServeExpOptions {
             calib_n: 64,
             workers: 0,
             out_dir: PathBuf::from("results"),
+            device_variant: SERVE_DEFAULT_VARIANT.to_string(),
+            refresh_every: 0,
+            probes: super::fig5::probe_times(),
+            cifar_dir: None,
         }
     }
 }
@@ -126,8 +145,9 @@ impl ServeExpOptions {
                 BlobDataset::new(self.seed, dim, self.classes,
                                  self.blob_noise, self.train_len,
                                  self.test_len)),
-            ServeData::Cifar { pool } => FeatureSource::pooled_cifar_auto(
-                self.seed, pool, self.train_len, self.test_len),
+            ServeData::Cifar { pool } => FeatureSource::pooled_cifar_from(
+                self.cifar_dir.as_deref(), self.seed, pool,
+                self.train_len, self.test_len),
         }
     }
 
@@ -161,7 +181,7 @@ impl ServeExpOptions {
             ServeData::Blobs { dim } => ("blobs", dim),
             ServeData::Cifar { pool } => ("cifar_pooled", pool),
         };
-        vec![
+        let mut doc = vec![
             ("experiment", Json::str("fig5_serve")),
             ("data", Json::str(data_tag)),
             ("data_param", Json::Num(data_param as f64)),
@@ -183,23 +203,28 @@ impl ServeExpOptions {
             ("max_batch", Json::Num(self.max_batch as f64)),
             ("queue_cap", Json::Num(self.queue_cap as f64)),
             ("calib_n", Json::Num(self.calib_n as f64)),
-        ]
+        ];
+        // Non-default knobs only: the pinned golden document predates
+        // these keys, and its config leaves them at the defaults.
+        if self.device_variant != SERVE_DEFAULT_VARIANT {
+            doc.push(("device_variant",
+                      Json::Str(self.device_variant.clone())));
+        }
+        if self.refresh_every != 0 {
+            doc.push(("refresh_every",
+                      Json::Num(self.refresh_every as f64)));
+        }
+        doc
     }
 }
 
 /// Train → freeze → serve each fig5 probe time under synthetic load,
 /// uncalibrated and recalibrated (see the module docs).
 pub fn run_fig5_serve(opts: &ServeExpOptions) -> Result<Json> {
-    // Same device model as the grid fig5: linear, read noise on,
-    // drift on, ν spread off (stream determinism).
-    let params = PcmParams {
-        nonlinear: false,
-        write_noise: false,
-        read_noise: true,
-        drift: true,
-        drift_nu_sigma: 0.0,
-        ..Default::default()
-    };
+    // Default variant "linear_read_drift" is the grid fig5 device
+    // model: linear, read noise on, drift on, ν spread off (stream
+    // determinism — variant_params zeroes drift_nu_sigma throughout).
+    let params = variant_params(&opts.device_variant)?;
     let policy =
         TilingPolicy { tile_rows: opts.tile, tile_cols: opts.tile };
     let spec = GraphSpec::mlp(&opts.dims());
@@ -209,7 +234,7 @@ pub fn run_fig5_serve(opts: &ServeExpOptions) -> Result<Json> {
         NetTrainerOptions {
             seed: opts.seed,
             lr: LrSchedule::constant(opts.lr),
-            refresh_every: 0,
+            refresh_every: opts.refresh_every,
             batch: opts.batch,
             ..Default::default()
         });
@@ -228,7 +253,7 @@ pub fn run_fig5_serve(opts: &ServeExpOptions) -> Result<Json> {
 
     let mut probes = Vec::new();
     let mut preds = Vec::new();
-    for (i, &probe_t) in super::fig5::probe_times().iter().enumerate() {
+    for (i, &probe_t) in opts.probes.iter().enumerate() {
         // Disjoint id range per probe: every request in the run owns a
         // globally unique read-noise stream.
         let trace = gen_trace(opts.seed, (i * opts.requests) as u64,
@@ -288,8 +313,6 @@ mod tests {
             train_len: 30,
             test_len: 12,
             lr: 0.05,
-            blob_noise: 0.5,
-            seed: 42,
             requests: 24,
             mean_gap: 0.05,
             window: 0.2,
@@ -297,7 +320,7 @@ mod tests {
             queue_cap: 8,
             calib_n: 6,
             workers: 1,
-            out_dir: PathBuf::from("/tmp"),
+            ..Default::default()
         }
     }
 

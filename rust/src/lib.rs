@@ -53,6 +53,33 @@
 //! load with periodic AdaBS-style gain recalibration against drift —
 //! served outputs bitwise invariant across worker counts and
 //! coalescing schedules (the `serve` CLI and the fig5-serve golden).
+//!
+//! ## Experiment specs
+//!
+//! The whole experiment surface is also scriptable from declarative
+//! `.hic` text files via the zero-dependency [`spec`] pipeline
+//! (lexer → parser → validated lowering) and the `run` subcommand —
+//! `hic-train run examples/fig4_grid.hic` writes the same bytes the
+//! flag-driven `fig4` subcommand does.  A spec reads like:
+//!
+//! ```text
+//! experiment fig4 {
+//!   data  { blobs { dim = 6 }  classes = 3 }
+//!   model { hidden = [4, 3]  widths = [0.5, 1.0] }
+//!   train { steps = 4  batch = 3  lr = 0.05 }
+//! }
+//! ```
+//!
+//! ```
+//! let spec = hic_train::spec::load_str(
+//!     "experiment fig4 {\n  data { blobs { dim = 6 } classes = 3 }\n  \
+//!      model { hidden = [4, 3] widths = [0.5, 1.0] }\n}").unwrap();
+//! assert_eq!(spec.out_name(), "fig4_grid.json");
+//! ```
+//!
+//! Every diagnostic carries a 1-based line/col span
+//! (`spec.hic:7:3: unknown key 'stepz' in 'train' (…)`); the grammar
+//! and the full key reference live in the [`spec`] module docs.
 
 // Numeric-kernel style allowances: the device kernels and their host
 // references spell out index loops and long argument lists because the
@@ -75,6 +102,7 @@ pub mod nn;
 pub mod pcm;
 pub mod runtime;
 pub mod serve;
+pub mod spec;
 pub mod testutil;
 pub mod util;
 

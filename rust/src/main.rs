@@ -8,6 +8,7 @@
 //!   fig5      regenerate the drift/AdaBS study (paper Fig. 5)
 //!   fig6      regenerate the write–erase-cycle histograms (paper Fig. 6)
 //!   serve     drift-aware inference serving under synthetic load
+//!   run       run an experiment described by a .hic spec file
 //!   info      inspect an artifact set (entries, sizes, config echo)
 //!
 //! All compute runs through AOT-compiled HLO artifacts on PJRT; Python is
@@ -48,6 +49,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "fig5" => cmd_fig5(rest),
         "fig6" | "endurance" => cmd_fig6(rest),
         "serve" => cmd_serve(rest),
+        "run" => cmd_run(rest),
         "info" => cmd_info(rest),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -70,6 +72,7 @@ fn print_usage() {
          \x20 fig5       drift + AdaBS study            (paper Fig. 5)\n\
          \x20 fig6       write–erase cycle histograms   (paper Fig. 6)\n\
          \x20 serve      drift-aware serving under load (fig5 axis)\n\
+         \x20 run        run an experiment from a .hic spec file\n\
          \x20 info       inspect an artifact set\n\n\
          fig3/fig4/fig5/fig6 accept --device-grid to run on the sharded\n\
          crossbar grid device model (no artifacts needed); fig4's grid\n\
@@ -298,6 +301,9 @@ fn cmd_fig4(args: &[String]) -> Result<()> {
             hic_train::exp::gridexp::NnArch::Mlp => "fig4_grid.json",
             hic_train::exp::gridexp::NnArch::Resnet { .. } => {
                 "fig4_resnet_grid.json"
+            }
+            hic_train::exp::gridexp::NnArch::Custom { .. } => {
+                "fig4_custom_grid.json"
             }
         };
         let doc = exp::gridexp::run_fig4(&nopts)?;
@@ -548,6 +554,51 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     };
     let doc = exp::serve::run_fig5_serve(&opts)?;
     exp::gridexp::write_json(&opts.out_dir, "fig5_serve.json", &doc)?;
+    Ok(())
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let spec = Spec::new(
+        "run",
+        "run an experiment described by a .hic spec file: parse, \
+         validate and lower the spec into the matching experiment \
+         options, run it on the crossbar grid device model, and write \
+         the same JSON document the flag-driven subcommand would \
+         (see the library's `spec` module docs for the grammar and \
+         the full key reference; examples live in examples/*.hic)")
+        .pos("spec-file", "path to the .hic experiment spec")
+        .opt("out", "", "output directory (overrides the spec's `out`)")
+        .flag("check",
+              "parse, validate and echo the canonical form, then exit \
+               without running")
+        .flag("verbose", "debug logging");
+    let m = spec.parse(args)?;
+    if m.flag("verbose") {
+        set_level(Level::Debug);
+    }
+    let Some(path) = m.positional(0) else {
+        bail!("missing spec file (usage: hic-train run <spec-file> \
+               [--out DIR])");
+    };
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    // Spec diagnostics render as `file:line:col: message`.
+    let ast = hic_train::spec::parse(&text)
+        .map_err(|e| anyhow::anyhow!("{path}:{e}"))?;
+    let mut lowered = hic_train::spec::lower(&ast)
+        .map_err(|e| anyhow::anyhow!("{path}:{e}"))?;
+    if m.flag("check") {
+        print!("{}", hic_train::spec::print(&ast));
+        return Ok(());
+    }
+    if let Some(out) = m.get("out") {
+        if !out.is_empty() {
+            lowered.set_out_dir(PathBuf::from(out));
+        }
+    }
+    let doc = lowered.run()?;
+    exp::gridexp::write_json(lowered.out_dir(), lowered.out_name(),
+                             &doc)?;
     Ok(())
 }
 

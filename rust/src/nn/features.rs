@@ -30,6 +30,8 @@
 //! dataset and the worker count can never affect the data.  The real
 //! loader is deterministic trivially — stored bytes.
 
+use std::path::Path;
+
 use crate::data::cifar::CifarDataset;
 use crate::data::synthetic::SyntheticDataset;
 use crate::data::{IMG_C, IMG_H, IMG_W, NUM_CLASSES};
@@ -213,7 +215,21 @@ impl FeatureSource {
     /// unchanged by this routing).
     pub fn pooled_cifar_auto(seed: u64, pool: usize, train_len: usize,
                              test_len: usize) -> FeatureSource {
-        if let Some(dir) = CifarDataset::discover() {
+        FeatureSource::pooled_cifar_from(None, seed, pool, train_len,
+                                         test_len)
+    }
+
+    /// [`pooled_cifar_auto`](FeatureSource::pooled_cifar_auto) with an
+    /// optional **explicit** dataset directory: when `dir` is given
+    /// (the experiment-spec `data { cifar { dir = "…" } }` route), it
+    /// wins over discovery unconditionally; `None` falls back to
+    /// [`CifarDataset::discover`] and then the synthetic pipeline.
+    pub fn pooled_cifar_from(dir: Option<&Path>, seed: u64, pool: usize,
+                             train_len: usize, test_len: usize)
+                             -> FeatureSource {
+        let dir = dir.map(Path::to_path_buf)
+            .or_else(CifarDataset::discover);
+        if let Some(dir) = dir {
             match CifarDataset::load(&dir) {
                 Ok(data) => {
                     log_info!(
@@ -435,6 +451,46 @@ mod tests {
         let mut q = vec![0.0f32; fs.dim()];
         assert_eq!(fs.sample_into(0, false, &mut q), 3);
         assert_eq!(q, p);
+
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn explicit_cifar_dir_beats_discovery() {
+        use crate::data::cifar::RECORD_BYTES;
+
+        fn record(label: u8) -> Vec<u8> {
+            let mut rec = vec![label];
+            rec.resize(RECORD_BYTES, 0x40);
+            rec
+        }
+        let dir = std::env::temp_dir().join(format!(
+            "hic_cifar_explicit_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut train = record(3);
+        train.extend(record(7));
+        std::fs::write(dir.join("data_batch_1.bin"), &train).unwrap();
+        std::fs::write(dir.join("test_batch.bin"), record(1)).unwrap();
+
+        // An explicit directory is loaded without consulting
+        // discovery…
+        let fs = FeatureSource::pooled_cifar_from(
+            Some(&dir), 1, 2, 50, 10);
+        let FeatureSource::RealCifar(rc) = &fs else {
+            panic!("explicit dir must route to the real loader");
+        };
+        assert_eq!(rc.data.train_len(), 2);
+        assert_eq!(rc.data.test_len(), 1);
+        assert_eq!(rc.pool, 2);
+
+        // …and an explicit-but-unreadable directory falls back to the
+        // synthetic pipeline instead of trying discovery: the explicit
+        // path always wins.
+        let bogus = dir.join("definitely_missing");
+        let fs = FeatureSource::pooled_cifar_from(
+            Some(&bogus), 1, 2, 50, 10);
+        assert!(matches!(fs, FeatureSource::Cifar(_)),
+                "unreadable explicit dir must fall back to synthetic");
 
         std::fs::remove_dir_all(&dir).unwrap();
     }

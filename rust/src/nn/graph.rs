@@ -181,6 +181,33 @@ impl GraphSpec {
         GraphSpec { input: ActShape::Img { h, w, c }, layers }
     }
 
+    /// Non-panicking mirror of [`GraphSpec::plan`]'s shape inference:
+    /// walk the layer chain, propagate activation shapes, and return
+    /// the pre-softmax shape — or a human-readable description of the
+    /// first inconsistency.  The experiment-spec DSL validates custom
+    /// graphs through this (so a bad spec is a spanned diagnostic, not
+    /// a panic); `plan` keeps its assertions as the internal contract.
+    pub fn shape_check(&self) -> std::result::Result<ActShape, String> {
+        let nl = self.layers.len();
+        if nl < 2 {
+            return Err("graph needs at least one layer plus the \
+                        softmax head"
+                .to_string());
+        }
+        if !matches!(self.layers[nl - 1], LayerSpec::Softmax) {
+            return Err("graph must end with the softmax head"
+                .to_string());
+        }
+        let mut shape = self.input;
+        check_layers(&self.layers[..nl - 1], &mut shape)?;
+        match shape {
+            ActShape::Flat(n) if n > 0 => Ok(shape),
+            ActShape::Img { h: 1, w: 1, c } if c > 0 => Ok(shape),
+            other => Err(format!(
+                "the softmax head needs a flat input, got {other:?}")),
+        }
+    }
+
     /// Resolve shapes, materialize skip projections and index the
     /// weighted layers.  Panics on malformed specs (conv on flat input,
     /// misplaced softmax, impossible residual shapes).
@@ -338,6 +365,163 @@ fn plan_layer(spec: &LayerSpec, shape: &mut ActShape,
         }
         LayerSpec::Softmax => {
             panic!("Softmax must be the final layer of the graph")
+        }
+    }
+}
+
+fn check_layers(specs: &[LayerSpec], shape: &mut ActShape)
+                -> std::result::Result<(), String> {
+    for s in specs {
+        check_layer(s, shape)?;
+    }
+    Ok(())
+}
+
+fn check_layer(spec: &LayerSpec, shape: &mut ActShape)
+               -> std::result::Result<(), String> {
+    match spec {
+        LayerSpec::Dense { out } => {
+            if shape.is_empty() || *out == 0 {
+                return Err(format!(
+                    "dense layer with empty extent \
+                     ({} -> {out} units)", shape.len()));
+            }
+            *shape = ActShape::Flat(*out);
+        }
+        LayerSpec::Conv2d { cout, kh, kw, stride, pad } => {
+            let ActShape::Img { h, w, c } = *shape else {
+                return Err(format!(
+                    "conv needs an image input, got a flat vector of \
+                     {} values", shape.len()));
+            };
+            if *cout == 0 || *kh == 0 || *kw == 0 || c == 0 {
+                return Err("conv layer with empty extent".to_string());
+            }
+            if *stride == 0 {
+                return Err("conv stride must be at least 1".to_string());
+            }
+            if h + 2 * pad < *kh || w + 2 * pad < *kw {
+                return Err(format!(
+                    "conv kernel {kh}x{kw} does not fit the padded \
+                     {h}x{w} input (pad {pad})"));
+            }
+            let geom = PatchGeom {
+                in_h: h, in_w: w, cin: c,
+                kh: *kh, kw: *kw, cout: *cout,
+                stride: *stride, pad: *pad,
+            };
+            *shape = ActShape::Img {
+                h: geom.out_h(), w: geom.out_w(), c: *cout,
+            };
+        }
+        LayerSpec::Relu => {}
+        LayerSpec::GlobalAvgPool => {
+            let ActShape::Img { c, .. } = *shape else {
+                return Err(format!(
+                    "gap needs an image input, got a flat vector of \
+                     {} values", shape.len()));
+            };
+            *shape = ActShape::Flat(c);
+        }
+        LayerSpec::Residual { body } => {
+            if body.is_empty() {
+                return Err("residual block needs a non-empty body"
+                    .to_string());
+            }
+            let in_shape = *shape;
+            let mut bshape = in_shape;
+            check_layers(body, &mut bshape)?;
+            if bshape != in_shape {
+                let (ActShape::Img { h: ih, w: iw, c: ic },
+                     ActShape::Img { h: oh, w: ow, c: oc }) =
+                    (in_shape, bshape)
+                else {
+                    return Err(format!(
+                        "residual shape change needs image shapes \
+                         ({in_shape:?} -> {bshape:?})"));
+                };
+                if oh == 0 || ow == 0 || oc == 0 {
+                    return Err("residual body collapsed to an empty \
+                                shape".to_string());
+                }
+                let stride = ih.div_ceil(oh);
+                let geom = PatchGeom {
+                    in_h: ih, in_w: iw, cin: ic,
+                    kh: 1, kw: 1, cout: oc,
+                    stride, pad: 0,
+                };
+                if (geom.out_h(), geom.out_w()) != (oh, ow) {
+                    return Err(format!(
+                        "no 1x1 projection matches the residual \
+                         body's {ih}x{iw} -> {oh}x{ow} downsampling"));
+                }
+            }
+            *shape = bshape;
+        }
+        LayerSpec::Softmax => {
+            return Err("softmax must be the final layer of the graph"
+                .to_string());
+        }
+    }
+    Ok(())
+}
+
+/// Whether any layer in the chain (residual bodies included) is a
+/// convolution — decides the default `w_scale` the experiment runner
+/// picks for custom graphs (conv nets train with the wider ResNet
+/// window).
+pub fn has_conv(layers: &[LayerSpec]) -> bool {
+    layers.iter().any(|l| match l {
+        LayerSpec::Conv2d { .. } => true,
+        LayerSpec::Residual { body } => has_conv(body),
+        _ => false,
+    })
+}
+
+/// Number of weighted (grid-backed) layers a spec list declares —
+/// `Dense` and `Conv2d`, residual bodies included.  Auto-inserted skip
+/// projections are not counted: they inherit the body's already-scaled
+/// channel count at plan time.
+pub fn count_weighted(layers: &[LayerSpec]) -> usize {
+    layers.iter().map(|l| match l {
+        LayerSpec::Dense { .. } | LayerSpec::Conv2d { .. } => 1,
+        LayerSpec::Residual { body } => count_weighted(body),
+        _ => 0,
+    }).sum()
+}
+
+/// Apply the paper's width-multiplier axis to a custom layer chain:
+/// scale every weighted layer's fan-out (`Dense.out` / `Conv2d.cout`)
+/// through [`scaled_width`] — except the last weighted layer, the
+/// classifier head, whose width is the class count.  Mirrors what
+/// [`GraphSpec::mlp`]-via-`scaled_dims` and [`GraphSpec::resnet`] do
+/// for the built-in architectures.
+pub fn scale_widths(layers: &mut [LayerSpec], width_permille: u32) {
+    let total = count_weighted(layers);
+    let mut idx = 0usize;
+    scale_walk(layers, width_permille, total, &mut idx);
+}
+
+fn scale_walk(layers: &mut [LayerSpec], width_permille: u32,
+              total: usize, idx: &mut usize) {
+    for l in layers.iter_mut() {
+        match l {
+            LayerSpec::Dense { out } => {
+                if *idx + 1 < total {
+                    *out = scaled_width(*out, width_permille);
+                }
+                *idx += 1;
+            }
+            LayerSpec::Conv2d { cout, .. } => {
+                if *idx + 1 < total {
+                    *cout = scaled_width(*cout, width_permille);
+                }
+                *idx += 1;
+            }
+            LayerSpec::Residual { body } => {
+                scale_walk(body, width_permille, total, idx);
+            }
+            _ => {}
         }
     }
 }
@@ -1643,5 +1827,104 @@ mod tests {
             ],
         };
         let _ = spec.plan();
+    }
+
+    #[test]
+    fn shape_check_accepts_what_plan_accepts() {
+        let mlp = GraphSpec::mlp(&[8, 12, 8, 4]);
+        assert_eq!(mlp.shape_check(), Ok(ActShape::Flat(4)));
+        let rn = GraphSpec::resnet([8, 8, 3], [4, 6, 8], 1, 10, 1000);
+        assert_eq!(rn.shape_check(), Ok(ActShape::Flat(10)));
+    }
+
+    #[test]
+    fn shape_check_reports_instead_of_panicking() {
+        let flat_conv = GraphSpec {
+            input: ActShape::Flat(9),
+            layers: vec![
+                LayerSpec::Conv2d { cout: 2, kh: 3, kw: 3, stride: 1,
+                                    pad: 1 },
+                LayerSpec::Softmax,
+            ],
+        };
+        let e = flat_conv.shape_check().unwrap_err();
+        assert!(e.contains("conv needs an image input"), "{e}");
+
+        let no_head = GraphSpec {
+            input: ActShape::Flat(4),
+            layers: vec![LayerSpec::Dense { out: 2 }, LayerSpec::Relu],
+        };
+        let e = no_head.shape_check().unwrap_err();
+        assert!(e.contains("softmax head"), "{e}");
+
+        let big_kernel = GraphSpec {
+            input: ActShape::Img { h: 2, w: 2, c: 1 },
+            layers: vec![
+                LayerSpec::Conv2d { cout: 2, kh: 5, kw: 5, stride: 1,
+                                    pad: 0 },
+                LayerSpec::GlobalAvgPool,
+                LayerSpec::Softmax,
+            ],
+        };
+        let e = big_kernel.shape_check().unwrap_err();
+        assert!(e.contains("does not fit"), "{e}");
+
+        let empty_body = GraphSpec {
+            input: ActShape::Img { h: 4, w: 4, c: 2 },
+            layers: vec![
+                LayerSpec::Residual { body: vec![] },
+                LayerSpec::GlobalAvgPool,
+                LayerSpec::Softmax,
+            ],
+        };
+        let e = empty_body.shape_check().unwrap_err();
+        assert!(e.contains("non-empty body"), "{e}");
+
+        let img_head = GraphSpec {
+            input: ActShape::Img { h: 4, w: 4, c: 2 },
+            layers: vec![LayerSpec::Relu, LayerSpec::Softmax],
+        };
+        let e = img_head.shape_check().unwrap_err();
+        assert!(e.contains("softmax head needs a flat input"), "{e}");
+    }
+
+    #[test]
+    fn scale_widths_spares_the_classifier_head() {
+        let mut layers = vec![
+            LayerSpec::Dense { out: 8 },
+            LayerSpec::Relu,
+            LayerSpec::Residual {
+                body: vec![LayerSpec::Dense { out: 8 }],
+            },
+            LayerSpec::Dense { out: 3 },
+            LayerSpec::Softmax,
+        ];
+        assert_eq!(count_weighted(&layers), 3);
+        assert!(!has_conv(&layers));
+        scale_widths(&mut layers, 500);
+        let LayerSpec::Dense { out } = layers[0] else { panic!() };
+        assert_eq!(out, 4);
+        let LayerSpec::Residual { ref body } = layers[2] else { panic!() };
+        let LayerSpec::Dense { out } = body[0] else { panic!() };
+        assert_eq!(out, 4);
+        // Head keeps the class count.
+        let LayerSpec::Dense { out } = layers[3] else { panic!() };
+        assert_eq!(out, 3);
+    }
+
+    #[test]
+    fn has_conv_sees_through_residual_bodies() {
+        let layers = vec![
+            LayerSpec::Residual {
+                body: vec![LayerSpec::Conv2d {
+                    cout: 2, kh: 3, kw: 3, stride: 1, pad: 1,
+                }],
+            },
+            LayerSpec::GlobalAvgPool,
+            LayerSpec::Dense { out: 3 },
+            LayerSpec::Softmax,
+        ];
+        assert!(has_conv(&layers));
+        assert_eq!(count_weighted(&layers), 2);
     }
 }

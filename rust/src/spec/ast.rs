@@ -1,0 +1,224 @@
+//! AST of the `.hic` experiment-spec format.
+//!
+//! The tree is deliberately **generic** — keys, blocks and values with
+//! no schema baked in — so the parser and printer know nothing about
+//! experiments; all schema knowledge (which keys exist where, their
+//! types and defaults) lives in `spec::lower`.  That split keeps the
+//! grammar a single page and lets new experiment axes land as lowering
+//! changes only.
+//!
+//! Equality (`PartialEq`) ignores spans and compares number literals
+//! by **text**: the printer emits number literals verbatim, so
+//! `parse(print(ast)) == ast` holds exactly (the round-trip property
+//! the test suite pins).
+
+use super::diag::Span;
+
+/// A bare word with its position: keys, block names, enum-ish values
+/// (`mlp`, `linear_read`, `true`).
+#[derive(Clone, Debug)]
+pub struct Ident {
+    pub text: String,
+    pub span: Span,
+}
+
+impl PartialEq for Ident {
+    fn eq(&self, other: &Self) -> bool {
+        self.text == other.text
+    }
+}
+
+/// A number literal: the source text is kept verbatim (what the
+/// printer re-emits), the value is the parsed `f64`.
+#[derive(Clone, Debug)]
+pub struct NumLit {
+    pub text: String,
+    pub value: f64,
+    pub span: Span,
+}
+
+impl PartialEq for NumLit {
+    fn eq(&self, other: &Self) -> bool {
+        self.text == other.text
+    }
+}
+
+/// A string literal (decoded — escapes resolved).
+#[derive(Clone, Debug)]
+pub struct StrLit {
+    pub value: String,
+    pub span: Span,
+}
+
+impl PartialEq for StrLit {
+    fn eq(&self, other: &Self) -> bool {
+        self.value == other.value
+    }
+}
+
+/// A scalar value: number, string, or bare word.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Scalar {
+    Num(NumLit),
+    Str(StrLit),
+    Word(Ident),
+}
+
+impl Scalar {
+    pub fn span(&self) -> Span {
+        match self {
+            Scalar::Num(n) => n.span,
+            Scalar::Str(s) => s.span,
+            Scalar::Word(w) => w.span,
+        }
+    }
+
+    /// Value-kind name for type-mismatch diagnostics.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Scalar::Num(_) => "number",
+            Scalar::Str(_) => "string",
+            Scalar::Word(_) => "word",
+        }
+    }
+}
+
+/// A right-hand-side value: one scalar or a flat list of scalars
+/// (lists do not nest — no knob needs it, and flat lists keep the
+/// printer single-line).
+#[derive(Clone, Debug)]
+pub enum Value {
+    Scalar(Scalar),
+    List { items: Vec<Scalar>, span: Span },
+}
+
+impl PartialEq for Value {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (Value::Scalar(a), Value::Scalar(b)) => a == b,
+            (Value::List { items: a, .. },
+             Value::List { items: b, .. }) => a == b,
+            _ => false,
+        }
+    }
+}
+
+impl Value {
+    pub fn span(&self) -> Span {
+        match self {
+            Value::Scalar(s) => s.span(),
+            Value::List { span, .. } => *span,
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Value::Scalar(s) => s.kind(),
+            Value::List { .. } => "list",
+        }
+    }
+}
+
+/// One `key = value` assignment.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Assign {
+    pub key: Ident,
+    pub value: Value,
+}
+
+/// One named `key { … }` block.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NamedBlock {
+    pub name: Ident,
+    pub body: Block,
+}
+
+/// One entry of a block body, in source order.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Entry {
+    /// `key = value`
+    Assign(Assign),
+    /// `key { … }`
+    Block(NamedBlock),
+    /// a bare word on its own — layer markers like `relu`, `gap`,
+    /// `softmax`
+    Marker(Ident),
+}
+
+impl Entry {
+    /// The entry's key/name ident (every entry form has one).
+    pub fn ident(&self) -> &Ident {
+        match self {
+            Entry::Assign(a) => &a.key,
+            Entry::Block(b) => &b.name,
+            Entry::Marker(m) => m,
+        }
+    }
+}
+
+/// A brace-delimited entry sequence.  The span points at the opening
+/// brace (missing-required-field diagnostics anchor here).
+#[derive(Clone, Debug)]
+pub struct Block {
+    pub entries: Vec<Entry>,
+    pub span: Span,
+}
+
+impl PartialEq for Block {
+    fn eq(&self, other: &Self) -> bool {
+        self.entries == other.entries
+    }
+}
+
+/// A whole spec document: `experiment <kind> { … }`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpecAst {
+    pub kind: Ident,
+    pub body: Block,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn id(text: &str, line: u32, col: u32) -> Ident {
+        Ident { text: text.to_string(), span: Span::new(line, col) }
+    }
+
+    #[test]
+    fn equality_ignores_spans() {
+        let a = SpecAst {
+            kind: id("fig4", 1, 12),
+            body: Block {
+                entries: vec![Entry::Assign(Assign {
+                    key: id("seed", 2, 3),
+                    value: Value::Scalar(Scalar::Num(NumLit {
+                        text: "42".into(),
+                        value: 42.0,
+                        span: Span::new(2, 10),
+                    })),
+                })],
+                span: Span::new(1, 17),
+            },
+        };
+        let mut b = a.clone();
+        b.kind.span = Span::new(9, 9);
+        b.body.span = Span::new(9, 9);
+        if let Entry::Assign(asn) = &mut b.body.entries[0] {
+            asn.key.span = Span::new(9, 9);
+            if let Value::Scalar(Scalar::Num(n)) = &mut asn.value {
+                n.span = Span::new(9, 9);
+            }
+        }
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn number_equality_is_textual() {
+        let n1 = NumLit { text: "1.0".into(), value: 1.0,
+                          span: Span::new(1, 1) };
+        let n2 = NumLit { text: "1.00".into(), value: 1.0,
+                          span: Span::new(1, 1) };
+        assert_ne!(n1, n2, "same value, different literal text");
+    }
+}

@@ -1,0 +1,77 @@
+//! Spanned diagnostics of the experiment-spec pipeline.
+//!
+//! Every stage (lexer, parser, lowering) reports failures as a
+//! [`SpecError`]: one message anchored at a 1-based line/column
+//! [`Span`] of the source text.  The CLI prefixes the file path, so a
+//! rendered diagnostic reads `examples/fig4_grid.hic:7:3: unknown key
+//! 'stepz' in 'train' (expected one of: batch, eval_n, lr,
+//! refresh_every, steps)` — grep-able and editor-clickable.
+
+use std::fmt;
+
+/// A 1-based source position.  Spans deliberately stay points (not
+/// ranges): every token and block the grammar produces is short enough
+/// that the start position locates it unambiguously, and a point span
+/// keeps the lexer allocation-free.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Span {
+    pub line: u32,
+    pub col: u32,
+}
+
+impl Span {
+    pub fn new(line: u32, col: u32) -> Self {
+        Span { line, col }
+    }
+}
+
+impl fmt::Display for Span {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}", self.line, self.col)
+    }
+}
+
+/// One spec diagnostic: a message at a source position.
+///
+/// Renders as `LINE:COL: MESSAGE` (the caller prepends the file path).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SpecError {
+    pub span: Span,
+    pub msg: String,
+}
+
+impl SpecError {
+    pub fn new(span: Span, msg: impl Into<String>) -> Self {
+        SpecError { span, msg: msg.into() }
+    }
+}
+
+impl fmt::Display for SpecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.span, self.msg)
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+/// Shorthand constructor used across the parser and lowering.
+pub fn err<T>(span: Span, msg: impl Into<String>) -> Result<T, SpecError> {
+    Err(SpecError::new(span, msg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_line_col_and_message() {
+        let e = SpecError::new(Span::new(3, 14), "unknown key 'x'");
+        assert_eq!(e.to_string(), "3:14: unknown key 'x'");
+    }
+
+    #[test]
+    fn err_helper_propagates() {
+        let r: Result<(), SpecError> = err(Span::new(1, 1), "boom");
+        assert_eq!(r.unwrap_err().span, Span::new(1, 1));
+    }
+}

@@ -1,0 +1,360 @@
+//! Hand-rolled lexer for the `.hic` experiment-spec format.
+//!
+//! Tokenizes the whole source up front (the grammar is LL(1), but a
+//! token vector keeps the parser's lookahead trivial).  Every token
+//! carries the 1-based line/column [`Span`] of its first character;
+//! numbers additionally keep their **literal text**, which is what the
+//! pretty-printer emits — so `parse → print → parse` cannot lose
+//! precision to float formatting.
+//!
+//! Lexical rules:
+//!
+//! * whitespace (space, tab, CR, LF) separates tokens and is otherwise
+//!   insignificant;
+//! * `#` starts a comment running to the end of the line;
+//! * idents are `[A-Za-z_][A-Za-z0-9_]*` (keys, bare words, the
+//!   `experiment` keyword);
+//! * numbers are `-?digits[.digits][e|E[+|-]digits]` (JSON-style, no
+//!   leading `.`);
+//! * strings are double-quoted, single-line, with escapes `\"`, `\\`,
+//!   `\n`, `\t`, `\r`;
+//! * punctuation: `{` `}` `[` `]` `,` `=`.
+
+use super::diag::{err, Span, SpecError};
+
+/// One lexed token kind.  `Num` keeps the literal text alongside the
+/// parsed value (see the module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tok {
+    Ident(String),
+    Num { text: String, value: f64 },
+    Str(String),
+    LBrace,
+    RBrace,
+    LBracket,
+    RBracket,
+    Comma,
+    Eq,
+    Eof,
+}
+
+impl Tok {
+    /// Human-readable token description for diagnostics.
+    pub fn describe(&self) -> String {
+        match self {
+            Tok::Ident(s) => format!("word '{s}'"),
+            Tok::Num { text, .. } => format!("number {text}"),
+            Tok::Str(s) => format!("string \"{s}\""),
+            Tok::LBrace => "'{'".to_string(),
+            Tok::RBrace => "'}'".to_string(),
+            Tok::LBracket => "'['".to_string(),
+            Tok::RBracket => "']'".to_string(),
+            Tok::Comma => "','".to_string(),
+            Tok::Eq => "'='".to_string(),
+            Tok::Eof => "end of file".to_string(),
+        }
+    }
+}
+
+/// A token with its source position.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Token {
+    pub tok: Tok,
+    pub span: Span,
+}
+
+struct Lexer<'a> {
+    b: &'a [u8],
+    i: usize,
+    line: u32,
+    col: u32,
+}
+
+impl<'a> Lexer<'a> {
+    fn span(&self) -> Span {
+        Span::new(self.line, self.col)
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    /// Consume one byte, maintaining the line/column counters.
+    fn bump(&mut self) -> Option<u8> {
+        let c = self.peek()?;
+        self.i += 1;
+        if c == b'\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        Some(c)
+    }
+
+    fn skip_ws_and_comments(&mut self) {
+        while let Some(c) = self.peek() {
+            match c {
+                b' ' | b'\t' | b'\r' | b'\n' => {
+                    self.bump();
+                }
+                b'#' => {
+                    while let Some(c) = self.peek() {
+                        if c == b'\n' {
+                            break;
+                        }
+                        self.bump();
+                    }
+                }
+                _ => break,
+            }
+        }
+    }
+
+    fn ident(&mut self) -> Token {
+        let span = self.span();
+        let start = self.i;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_alphanumeric() || c == b'_' {
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        let text =
+            String::from_utf8_lossy(&self.b[start..self.i]).into_owned();
+        Token { tok: Tok::Ident(text), span }
+    }
+
+    fn number(&mut self) -> Result<Token, SpecError> {
+        let span = self.span();
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.bump();
+        }
+        let digits_start = self.i;
+        while matches!(self.peek(), Some(b'0'..=b'9')) {
+            self.bump();
+        }
+        if self.i == digits_start {
+            return err(span, "expected digits after '-'".to_string());
+        }
+        if self.peek() == Some(b'.') {
+            self.bump();
+            let frac_start = self.i;
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.bump();
+            }
+            if self.i == frac_start {
+                return err(span, "expected digits after '.'".to_string());
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.bump();
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.bump();
+            }
+            let exp_start = self.i;
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.bump();
+            }
+            if self.i == exp_start {
+                return err(span,
+                           "expected digits in the exponent".to_string());
+            }
+        }
+        let text =
+            String::from_utf8_lossy(&self.b[start..self.i]).into_owned();
+        let value = text.parse::<f64>().map_err(|e| {
+            SpecError::new(span, format!("invalid number '{text}': {e}"))
+        })?;
+        Ok(Token { tok: Tok::Num { text, value }, span })
+    }
+
+    fn string(&mut self) -> Result<Token, SpecError> {
+        let span = self.span();
+        self.bump(); // opening quote
+        let mut s = String::new();
+        loop {
+            match self.peek() {
+                None | Some(b'\n') => {
+                    return err(span, format!(
+                        "unterminated string (opened at {span})"));
+                }
+                Some(b'"') => {
+                    self.bump();
+                    return Ok(Token { tok: Tok::Str(s), span });
+                }
+                Some(b'\\') => {
+                    let esc_span = self.span();
+                    self.bump();
+                    match self.bump() {
+                        Some(b'"') => s.push('"'),
+                        Some(b'\\') => s.push('\\'),
+                        Some(b'n') => s.push('\n'),
+                        Some(b't') => s.push('\t'),
+                        Some(b'r') => s.push('\r'),
+                        Some(c) => {
+                            return err(esc_span, format!(
+                                "invalid escape '\\{}' (expected \\\" \
+                                 \\\\ \\n \\t \\r)",
+                                c as char));
+                        }
+                        None => {
+                            return err(span, format!(
+                                "unterminated string (opened at {span})"));
+                        }
+                    }
+                }
+                Some(_) => {
+                    // Raw byte, UTF-8 passes through untouched.
+                    let start = self.i;
+                    self.bump();
+                    while let Some(c) = self.peek() {
+                        // Continuation bytes of a multibyte char.
+                        if c & 0xC0 == 0x80 {
+                            self.bump();
+                        } else {
+                            break;
+                        }
+                    }
+                    s.push_str(&String::from_utf8_lossy(
+                        &self.b[start..self.i]));
+                }
+            }
+        }
+    }
+}
+
+/// Tokenize a whole spec source (trailing [`Tok::Eof`] included).
+pub fn lex(text: &str) -> Result<Vec<Token>, SpecError> {
+    let mut lx = Lexer { b: text.as_bytes(), i: 0, line: 1, col: 1 };
+    let mut out = Vec::new();
+    loop {
+        lx.skip_ws_and_comments();
+        let span = lx.span();
+        let Some(c) = lx.peek() else {
+            out.push(Token { tok: Tok::Eof, span });
+            return Ok(out);
+        };
+        let token = match c {
+            b'{' => {
+                lx.bump();
+                Token { tok: Tok::LBrace, span }
+            }
+            b'}' => {
+                lx.bump();
+                Token { tok: Tok::RBrace, span }
+            }
+            b'[' => {
+                lx.bump();
+                Token { tok: Tok::LBracket, span }
+            }
+            b']' => {
+                lx.bump();
+                Token { tok: Tok::RBracket, span }
+            }
+            b',' => {
+                lx.bump();
+                Token { tok: Tok::Comma, span }
+            }
+            b'=' => {
+                lx.bump();
+                Token { tok: Tok::Eq, span }
+            }
+            b'"' => lx.string()?,
+            b'-' | b'0'..=b'9' => lx.number()?,
+            c if c.is_ascii_alphabetic() || c == b'_' => lx.ident(),
+            c => {
+                return err(span, format!(
+                    "unexpected character '{}'", c as char));
+            }
+        };
+        out.push(token);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(text: &str) -> Vec<Tok> {
+        lex(text).unwrap().into_iter().map(|t| t.tok).collect()
+    }
+
+    #[test]
+    fn basic_tokens_and_spans() {
+        let toks = lex("a = 1\nb { }").unwrap();
+        assert_eq!(toks.len(), 7); // a = 1 b { } EOF
+        assert_eq!(toks[0].span, Span::new(1, 1));
+        assert_eq!(toks[1].span, Span::new(1, 3));
+        assert_eq!(toks[2].span, Span::new(1, 5));
+        assert_eq!(toks[3].span, Span::new(2, 1)); // b
+        assert_eq!(toks[4].span, Span::new(2, 3)); // {
+        assert_eq!(toks[5].span, Span::new(2, 5)); // }
+        assert_eq!(toks[6].tok, Tok::Eof);
+    }
+
+    #[test]
+    fn comments_are_skipped() {
+        let toks = kinds("# header\nx = 2 # trailing\n# tail");
+        assert_eq!(toks, vec![
+            Tok::Ident("x".into()),
+            Tok::Eq,
+            Tok::Num { text: "2".into(), value: 2.0 },
+            Tok::Eof,
+        ]);
+    }
+
+    #[test]
+    fn numbers_keep_literal_text() {
+        let toks = kinds("a = -0.25 b = 1e2 c = 4e7 d = 1.5E-3");
+        let nums: Vec<(String, f64)> = toks
+            .into_iter()
+            .filter_map(|t| match t {
+                Tok::Num { text, value } => Some((text, value)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(nums, vec![
+            ("-0.25".to_string(), -0.25),
+            ("1e2".to_string(), 100.0),
+            ("4e7".to_string(), 4e7),
+            ("1.5E-3".to_string(), 1.5e-3),
+        ]);
+    }
+
+    #[test]
+    fn strings_escape_and_pass_utf8() {
+        let toks = kinds(r#"s = "a\n\"q\" → done""#);
+        assert!(matches!(&toks[2], Tok::Str(s) if s == "a\n\"q\" → done"));
+    }
+
+    #[test]
+    fn unterminated_string_is_spanned() {
+        let e = lex("x = \"oops").unwrap_err();
+        assert_eq!(e.span, Span::new(1, 5));
+        assert!(e.msg.contains("unterminated string"), "{e}");
+        let e2 = lex("x = \"oops\nnext").unwrap_err();
+        assert_eq!(e2.span, Span::new(1, 5));
+    }
+
+    #[test]
+    fn bad_number_and_bad_char_are_spanned() {
+        let e = lex("x = 1.e3").unwrap_err();
+        assert_eq!(e.span, Span::new(1, 5));
+        assert!(e.msg.contains("digits after '.'"), "{e}");
+        let e = lex("y = @").unwrap_err();
+        assert_eq!(e.span, Span::new(1, 5));
+        assert!(e.msg.contains("unexpected character '@'"), "{e}");
+        let e = lex("z = -x").unwrap_err();
+        assert!(e.msg.contains("digits after '-'"), "{e}");
+    }
+
+    #[test]
+    fn invalid_escape_is_spanned() {
+        let e = lex("s = \"a\\qb\"").unwrap_err();
+        assert_eq!(e.span, Span::new(1, 7));
+        assert!(e.msg.contains("invalid escape"), "{e}");
+    }
+}

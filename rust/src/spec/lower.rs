@@ -1,0 +1,1110 @@
+//! Validated lowering: generic [`SpecAst`] → runnable experiment
+//! options.
+//!
+//! All schema knowledge lives here — which keys exist in which block,
+//! their types, defaults and cross-field constraints.  Every check
+//! failure is a spanned [`SpecError`] (unknown key, duplicate key,
+//! type mismatch, missing required key, out-of-range value, and — for
+//! custom layer graphs — shape-inference failures surfaced per width
+//! multiplier *before* anything runs).  The lowered options are the
+//! exact structs the CLI subcommands build (`GridExpOptions`,
+//! `NnExpOptions`, `ServeExpOptions`), so a spec run and the
+//! equivalent flag invocation produce byte-identical documents.
+//!
+//! See the `spec` module docs for the complete key reference.
+
+use std::path::{Path, PathBuf};
+
+use crate::data::{IMG_C, IMG_H, IMG_W, NUM_CLASSES};
+use crate::exp::fig3;
+use crate::exp::gridexp::{
+    run_fig3, run_fig4, run_fig5, run_fig6, variant_params,
+    GridExpOptions, NnArch, NnExpData, NnExpOptions,
+};
+use crate::exp::serve::{run_fig5_serve, ServeData, ServeExpOptions};
+use crate::nn::graph::{scale_widths, ActShape, GraphSpec, LayerSpec};
+use crate::util::json::Json;
+
+use super::ast::{Assign, Block, Entry, NamedBlock, NumLit, Scalar,
+                 SpecAst, Value};
+use super::diag::{err, Span, SpecError};
+
+/// A spec lowered to runnable experiment options.
+#[derive(Clone, Debug)]
+pub enum LoweredSpec {
+    Fig3 { opts: GridExpOptions, variants: Vec<String> },
+    Fig4(Box<NnExpOptions>),
+    Fig5(GridExpOptions),
+    Fig6(GridExpOptions),
+    Serve(Box<ServeExpOptions>),
+}
+
+impl LoweredSpec {
+    /// Output file name under the out dir — same names the CLI
+    /// subcommands write, so specs and flags are interchangeable.
+    pub fn out_name(&self) -> &'static str {
+        match self {
+            LoweredSpec::Fig3 { .. } => "fig3_grid.json",
+            LoweredSpec::Fig4(o) => match o.arch {
+                NnArch::Mlp => "fig4_grid.json",
+                NnArch::Resnet { .. } => "fig4_resnet_grid.json",
+                NnArch::Custom { .. } => "fig4_custom_grid.json",
+            },
+            LoweredSpec::Fig5(_) => "fig5_grid.json",
+            LoweredSpec::Fig6(_) => "fig6_grid.json",
+            LoweredSpec::Serve(_) => "fig5_serve.json",
+        }
+    }
+
+    pub fn out_dir(&self) -> &Path {
+        match self {
+            LoweredSpec::Fig3 { opts, .. } => &opts.out_dir,
+            LoweredSpec::Fig4(o) => &o.out_dir,
+            LoweredSpec::Fig5(o) | LoweredSpec::Fig6(o) => &o.out_dir,
+            LoweredSpec::Serve(o) => &o.out_dir,
+        }
+    }
+
+    /// Override the spec's `out = …` (the CLI's `--out` flag wins).
+    pub fn set_out_dir(&mut self, dir: PathBuf) {
+        match self {
+            LoweredSpec::Fig3 { opts, .. } => opts.out_dir = dir,
+            LoweredSpec::Fig4(o) => o.out_dir = dir,
+            LoweredSpec::Fig5(o) | LoweredSpec::Fig6(o) => {
+                o.out_dir = dir;
+            }
+            LoweredSpec::Serve(o) => o.out_dir = dir,
+        }
+    }
+
+    /// Run the experiment and return its metric document.
+    pub fn run(&self) -> anyhow::Result<Json> {
+        match self {
+            LoweredSpec::Fig3 { opts, variants } => {
+                let v: Vec<&str> =
+                    variants.iter().map(String::as_str).collect();
+                run_fig3(opts, &v)
+            }
+            LoweredSpec::Fig4(o) => run_fig4(o),
+            LoweredSpec::Fig5(o) => run_fig5(o),
+            LoweredSpec::Fig6(o) => run_fig6(o),
+            LoweredSpec::Serve(o) => run_fig5_serve(o),
+        }
+    }
+}
+
+/// Lower a parsed spec into runnable options (see the module docs for
+/// the diagnostics contract).
+pub fn lower(ast: &SpecAst) -> Result<LoweredSpec, SpecError> {
+    match ast.kind.text.as_str() {
+        "fig3" => {
+            let (opts, variants) = lower_grid(ast, true)?;
+            Ok(LoweredSpec::Fig3 {
+                opts,
+                variants: variants.unwrap_or_else(|| {
+                    fig3::VARIANTS.iter().map(|s| s.to_string()).collect()
+                }),
+            })
+        }
+        "fig4" => Ok(LoweredSpec::Fig4(Box::new(lower_fig4(ast)?))),
+        "fig5" => Ok(LoweredSpec::Fig5(lower_grid(ast, false)?.0)),
+        "fig6" => Ok(LoweredSpec::Fig6(lower_grid(ast, false)?.0)),
+        "serve" => Ok(LoweredSpec::Serve(Box::new(lower_serve(ast)?))),
+        other => err(ast.kind.span, format!(
+            "unknown experiment kind '{other}' (expected fig3, fig4, \
+             fig5, fig6 or serve)")),
+    }
+}
+
+// -- generic block accessors ---------------------------------------------
+
+/// Reject unknown and duplicate keys in a block.  `ctx` names the
+/// block in diagnostics.
+fn vet(block: &Block, ctx: &str, allowed: &[&str])
+       -> Result<(), SpecError> {
+    let mut seen: Vec<&str> = Vec::new();
+    for e in &block.entries {
+        let id = e.ident();
+        if !allowed.contains(&id.text.as_str()) {
+            return err(id.span, format!(
+                "unknown key '{}' in '{ctx}' (expected one of: {})",
+                id.text, allowed.join(", ")));
+        }
+        if seen.contains(&id.text.as_str()) {
+            return err(id.span, format!(
+                "duplicate key '{}' in '{ctx}'", id.text));
+        }
+        seen.push(&id.text);
+    }
+    Ok(())
+}
+
+/// Find a `key = value` entry; error if the key exists as a block or
+/// marker instead.
+fn assign<'a>(b: &'a Block, key: &str)
+              -> Result<Option<&'a Assign>, SpecError> {
+    for e in &b.entries {
+        if e.ident().text == key {
+            return match e {
+                Entry::Assign(a) => Ok(Some(a)),
+                other => err(other.ident().span, format!(
+                    "'{key}' must be written as `{key} = …`")),
+            };
+        }
+    }
+    Ok(None)
+}
+
+/// Find a `key { … }` entry; error if the key exists as an assignment
+/// or marker instead.
+fn sub<'a>(b: &'a Block, key: &str)
+           -> Result<Option<&'a NamedBlock>, SpecError> {
+    for e in &b.entries {
+        if e.ident().text == key {
+            return match e {
+                Entry::Block(nb) => Ok(Some(nb)),
+                other => err(other.ident().span, format!(
+                    "'{key}' must be written as a `{key} {{ … }}` \
+                     block")),
+            };
+        }
+    }
+    Ok(None)
+}
+
+fn num_of<'a>(a: &'a Assign) -> Result<&'a NumLit, SpecError> {
+    match &a.value {
+        Value::Scalar(Scalar::Num(n)) => Ok(n),
+        v => err(v.span(), format!(
+            "'{}' needs a number, found a {}", a.key.text, v.kind())),
+    }
+}
+
+fn to_int(n: &NumLit, key: &str, min: usize) -> Result<usize, SpecError> {
+    if n.value.fract() != 0.0 || !(0.0..=9.0e15).contains(&n.value) {
+        return err(n.span, format!(
+            "'{key}' must be a non-negative integer, got {}", n.text));
+    }
+    let v = n.value as usize;
+    if v < min {
+        return err(n.span, format!("'{key}' must be >= {min}"));
+    }
+    Ok(v)
+}
+
+fn get_int(b: &Block, key: &str, min: usize)
+           -> Result<Option<usize>, SpecError> {
+    match assign(b, key)? {
+        Some(a) => Ok(Some(to_int(num_of(a)?, key, min)?)),
+        None => Ok(None),
+    }
+}
+
+/// f32 knobs narrow the lexed `f64` with `as f32` — the exact op the
+/// CLI's flag parser performs (`Matches::f32`), so spec-lowered
+/// learning rates hit the same bits as `--nn-lr` (the goldens pin
+/// those bits).
+fn get_f32(b: &Block, key: &str) -> Result<Option<f32>, SpecError> {
+    match assign(b, key)? {
+        Some(a) => Ok(Some(num_of(a)?.value as f32)),
+        None => Ok(None),
+    }
+}
+
+fn get_str(b: &Block, key: &str) -> Result<Option<String>, SpecError> {
+    match assign(b, key)? {
+        Some(a) => match &a.value {
+            Value::Scalar(Scalar::Str(s)) => Ok(Some(s.value.clone())),
+            v => err(v.span(), format!(
+                "'{key}' needs a quoted string, found a {}", v.kind())),
+        },
+        None => Ok(None),
+    }
+}
+
+fn get_word<'a>(b: &'a Block, key: &str)
+                -> Result<Option<&'a super::ast::Ident>, SpecError> {
+    match assign(b, key)? {
+        Some(a) => match &a.value {
+            Value::Scalar(Scalar::Word(w)) => Ok(Some(w)),
+            v => err(v.span(), format!(
+                "'{key}' needs a bare word, found a {}", v.kind())),
+        },
+        None => Ok(None),
+    }
+}
+
+/// A `key = [n, n, …]` list of number literals (with the list's span).
+fn num_list<'a>(b: &'a Block, key: &str)
+                -> Result<Option<(Vec<&'a NumLit>, Span)>, SpecError> {
+    match assign(b, key)? {
+        None => Ok(None),
+        Some(a) => match &a.value {
+            Value::List { items, span } => {
+                let mut out = Vec::with_capacity(items.len());
+                for s in items {
+                    match s {
+                        Scalar::Num(n) => out.push(n),
+                        other => {
+                            return err(other.span(), format!(
+                                "'{key}' needs a list of numbers, \
+                                 found a {}", other.kind()));
+                        }
+                    }
+                }
+                Ok(Some((out, *span)))
+            }
+            v => err(v.span(), format!(
+                "'{key}' needs a list (like [1, 2]), found a {}",
+                v.kind())),
+        },
+    }
+}
+
+fn int_list(b: &Block, key: &str, min: usize)
+            -> Result<Option<(Vec<usize>, Span)>, SpecError> {
+    match num_list(b, key)? {
+        None => Ok(None),
+        Some((nums, span)) => {
+            let mut out = Vec::with_capacity(nums.len());
+            for n in nums {
+                out.push(to_int(n, key, min)?);
+            }
+            Ok(Some((out, span)))
+        }
+    }
+}
+
+/// A `key = [word, word, …]` list of bare words.
+fn word_list<'a>(b: &'a Block, key: &str)
+                 -> Result<Option<Vec<&'a super::ast::Ident>>, SpecError> {
+    match assign(b, key)? {
+        None => Ok(None),
+        Some(a) => match &a.value {
+            Value::List { items, .. } => {
+                let mut out = Vec::with_capacity(items.len());
+                for s in items {
+                    match s {
+                        Scalar::Word(w) => out.push(w),
+                        other => {
+                            return err(other.span(), format!(
+                                "'{key}' needs a list of bare words, \
+                                 found a {}", other.kind()));
+                        }
+                    }
+                }
+                Ok(Some(out))
+            }
+            v => err(v.span(), format!(
+                "'{key}' needs a list (like [linear, full]), found \
+                 a {}", v.kind())),
+        },
+    }
+}
+
+/// Width multipliers → permille, the CLI's exact conversion (`0.5` →
+/// `500`), with the CLI's range check.
+fn widths_permille(nums: &[&NumLit]) -> Result<Vec<u32>, SpecError> {
+    let mut out = Vec::with_capacity(nums.len());
+    for n in nums {
+        if !(0.001..=64.0).contains(&n.value) {
+            return err(n.span, format!(
+                "width multiplier {} out of range (0.001..=64)",
+                n.text));
+        }
+        out.push((n.value * 1000.0 + 0.5).floor() as u32);
+    }
+    Ok(out)
+}
+
+// -- shared sub-lowerings ------------------------------------------------
+
+/// Top-level keys every experiment kind shares.
+fn common_top(body: &Block, seed: &mut u64, workers: &mut usize,
+              out_dir: &mut PathBuf) -> Result<(), SpecError> {
+    if let Some(v) = get_int(body, "seed", 0)? {
+        *seed = v as u64;
+    }
+    if let Some(v) = get_int(body, "workers", 0)? {
+        *workers = v;
+    }
+    if let Some(s) = get_str(body, "out")? {
+        *out_dir = PathBuf::from(s);
+    }
+    Ok(())
+}
+
+/// Validate a device-variant word through the real tag table, so the
+/// diagnostic points at the spec instead of failing at run time.
+fn device_variant(body: &Block) -> Result<Option<String>, SpecError> {
+    match sub(body, "device")? {
+        None => Ok(None),
+        Some(d) => {
+            vet(&d.body, "device", &["variant"])?;
+            match get_word(&d.body, "variant")? {
+                None => Ok(None),
+                Some(w) => match variant_params(&w.text) {
+                    Ok(_) => Ok(Some(w.text.clone())),
+                    Err(e) => err(w.span, format!("{e:#}")),
+                },
+            }
+        }
+    }
+}
+
+/// `data { … }` lowering shared by fig4 and serve.  Returns the
+/// source (if a `blobs`/`cifar` sub-block was given), the explicit
+/// CIFAR dir, and scalar knobs.
+struct DataCfg {
+    source: Option<NnExpData>,
+    cifar_dir: Option<PathBuf>,
+    classes: Option<usize>,
+    noise: Option<f32>,
+    train_len: Option<usize>,
+    test_len: Option<usize>,
+}
+
+fn lower_data(body: &Block, allow_image: bool)
+              -> Result<DataCfg, SpecError> {
+    let mut cfg = DataCfg {
+        source: None,
+        cifar_dir: None,
+        classes: None,
+        noise: None,
+        train_len: None,
+        test_len: None,
+    };
+    let Some(d) = sub(body, "data")? else {
+        return Ok(cfg);
+    };
+    vet(&d.body, "data",
+        &["blobs", "cifar", "classes", "noise", "train_len",
+          "test_len"])?;
+    let blobs = sub(&d.body, "blobs")?;
+    let cifar = sub(&d.body, "cifar")?;
+    if let (Some(_), Some(c)) = (blobs, cifar) {
+        return err(c.name.span,
+                   "pick one data source: 'blobs' or 'cifar', not \
+                    both".to_string());
+    }
+    if let Some(b) = blobs {
+        let keys: &[&str] =
+            if allow_image { &["dim", "image"] } else { &["dim"] };
+        vet(&b.body, "blobs", keys)?;
+        let dim = get_int(&b.body, "dim", 1)?;
+        let image = if allow_image {
+            int_list(&b.body, "image", 1)?
+        } else {
+            None
+        };
+        cfg.source = Some(match (dim, image) {
+            (Some(_), Some((_, span))) => {
+                return err(span,
+                           "give 'dim' or 'image', not both"
+                               .to_string());
+            }
+            (Some(dim), None) => NnExpData::Blobs { dim },
+            (None, Some((v, span))) => {
+                let [h, w, c] = v[..] else {
+                    return err(span,
+                               "'image' needs exactly [h, w, c]"
+                                   .to_string());
+                };
+                NnExpData::BlobsImg { h, w, c }
+            }
+            (None, None) => {
+                return err(b.body.span, format!(
+                    "missing required key 'dim'{} in 'blobs'",
+                    if allow_image { " (or 'image')" } else { "" }));
+            }
+        });
+    }
+    if let Some(c) = cifar {
+        vet(&c.body, "cifar", &["pool", "dir"])?;
+        let mut pool = 8usize;
+        if let Some(a) = assign(&c.body, "pool")? {
+            let n = num_of(a)?;
+            pool = to_int(n, "pool", 1)?;
+            if 32 % pool != 0 {
+                return err(n.span, format!(
+                    "'pool' must divide the 32x32 image (1, 2, 4, 8, \
+                     16 or 32), got {pool}"));
+            }
+        }
+        cfg.cifar_dir = get_str(&c.body, "dir")?.map(PathBuf::from);
+        cfg.source = Some(NnExpData::Cifar { pool });
+    }
+    cfg.classes = get_int(&d.body, "classes", 1)?;
+    cfg.noise = get_f32(&d.body, "noise")?;
+    cfg.train_len = get_int(&d.body, "train_len", 1)?;
+    cfg.test_len = get_int(&d.body, "test_len", 1)?;
+    Ok(cfg)
+}
+
+// -- fig3 / fig5 / fig6 --------------------------------------------------
+
+#[allow(clippy::type_complexity)]
+fn lower_grid(ast: &SpecAst, fig3_variants: bool)
+              -> Result<(GridExpOptions, Option<Vec<String>>), SpecError> {
+    let allowed: &[&str] = if fig3_variants {
+        &["grid", "train", "variants", "seed", "workers", "out"]
+    } else {
+        &["grid", "train", "seed", "workers", "out"]
+    };
+    vet(&ast.body, "experiment", allowed)?;
+    let mut o = GridExpOptions::default();
+    common_top(&ast.body, &mut o.seed, &mut o.workers, &mut o.out_dir)?;
+    if let Some(g) = sub(&ast.body, "grid")? {
+        vet(&g.body, "grid", &["k", "n", "tile"])?;
+        if let Some(v) = get_int(&g.body, "k", 1)? {
+            o.k = v;
+        }
+        if let Some(v) = get_int(&g.body, "n", 1)? {
+            o.n = v;
+        }
+        if let Some(v) = get_int(&g.body, "tile", 1)? {
+            o.tile = v;
+        }
+    }
+    if let Some(t) = sub(&ast.body, "train")? {
+        vet(&t.body, "train", &["steps", "batch"])?;
+        if let Some(v) = get_int(&t.body, "steps", 1)? {
+            o.steps = v;
+        }
+        if let Some(v) = get_int(&t.body, "batch", 1)? {
+            o.batch = v;
+        }
+    }
+    let variants = if fig3_variants {
+        match word_list(&ast.body, "variants")? {
+            None => None,
+            Some(words) => {
+                let mut out = Vec::with_capacity(words.len());
+                for w in words {
+                    if let Err(e) = variant_params(&w.text) {
+                        return err(w.span, format!("{e:#}"));
+                    }
+                    out.push(w.text.clone());
+                }
+                if out.is_empty() {
+                    return err(ast.body.span,
+                               "'variants' must not be empty"
+                                   .to_string());
+                }
+                Some(out)
+            }
+        }
+    } else {
+        None
+    };
+    Ok((o, variants))
+}
+
+// -- fig4 ----------------------------------------------------------------
+
+fn lower_fig4(ast: &SpecAst) -> Result<NnExpOptions, SpecError> {
+    vet(&ast.body, "experiment",
+        &["model", "data", "train", "device", "seed", "workers",
+          "out"])?;
+    let mut o = NnExpOptions::default();
+    common_top(&ast.body, &mut o.seed, &mut o.workers, &mut o.out_dir)?;
+
+    let data = lower_data(&ast.body, true)?;
+    if let Some(src) = data.source {
+        o.data = src;
+    }
+    o.cifar_dir = data.cifar_dir;
+    if let Some(v) = data.classes {
+        o.classes = v;
+    }
+    if let Some(v) = data.noise {
+        o.blob_noise = v;
+    }
+    if let Some(v) = data.train_len {
+        o.train_len = v;
+    }
+    if let Some(v) = data.test_len {
+        o.test_len = v;
+    }
+
+    // The custom layer list keeps its block span for shape-inference
+    // diagnostics below.
+    let mut custom: Option<(Vec<LayerSpec>, Span)> = None;
+    if let Some(m) = sub(&ast.body, "model")? {
+        vet(&m.body, "model",
+            &["arch", "hidden", "stages", "blocks", "layers", "widths",
+              "tile"])?;
+        if let Some((h, span)) = int_list(&m.body, "hidden", 1)? {
+            if h.is_empty() {
+                return err(span,
+                           "'hidden' must not be empty".to_string());
+            }
+            o.hidden_base = h;
+        }
+        if let Some((nums, span)) = num_list(&m.body, "widths")? {
+            if nums.is_empty() {
+                return err(span,
+                           "'widths' must not be empty".to_string());
+            }
+            o.widths_permille = widths_permille(&nums)?;
+        }
+        if let Some(v) = get_int(&m.body, "tile", 1)? {
+            o.tile = v;
+        }
+        let stages = int_list(&m.body, "stages", 1)?;
+        let blocks = get_int(&m.body, "blocks", 1)?;
+        let layers_blk = sub(&m.body, "layers")?;
+        let arch_word = get_word(&m.body, "arch")?;
+        let arch_name = match arch_word {
+            Some(w) => w.text.as_str(),
+            None if layers_blk.is_some() => "custom",
+            None if stages.is_some() || blocks.is_some() => "resnet",
+            None => "mlp",
+        };
+        match arch_name {
+            "mlp" => {
+                if let Some(lb) = layers_blk {
+                    return err(lb.name.span,
+                               "a 'layers' block needs arch = custom"
+                                   .to_string());
+                }
+                if let Some((_, span)) = stages {
+                    return err(span,
+                               "'stages' needs arch = resnet"
+                                   .to_string());
+                }
+                o.arch = NnArch::Mlp;
+            }
+            "resnet" => {
+                if let Some(lb) = layers_blk {
+                    return err(lb.name.span,
+                               "a 'layers' block needs arch = custom"
+                                   .to_string());
+                }
+                let stage_bases = match stages {
+                    None => [16, 32, 64],
+                    Some((v, span)) => {
+                        let [s1, s2, s3] = v[..] else {
+                            return err(span,
+                                       "'stages' needs exactly three \
+                                        channel bases".to_string());
+                        };
+                        [s1, s2, s3]
+                    }
+                };
+                o.arch = NnArch::Resnet {
+                    stages: stage_bases,
+                    blocks: blocks.unwrap_or(1),
+                };
+            }
+            "custom" => {
+                if let Some((_, span)) = stages {
+                    return err(span,
+                               "'stages' needs arch = resnet"
+                                   .to_string());
+                }
+                let Some(lb) = layers_blk else {
+                    return err(m.body.span,
+                               "arch = custom needs a 'layers' block"
+                                   .to_string());
+                };
+                let layers = lower_layers(&lb.body)?;
+                custom = Some((layers.clone(), lb.body.span));
+                o.arch = NnArch::Custom { layers };
+            }
+            other => {
+                // `arch_word` is always Some here: the inferred names
+                // are matched above.
+                return err(arch_word.unwrap().span, format!(
+                    "unknown arch '{other}' (mlp, resnet or custom)"));
+            }
+        }
+    }
+
+    if let Some(t) = sub(&ast.body, "train")? {
+        vet(&t.body, "train",
+            &["steps", "batch", "lr", "eval_n", "refresh_every"])?;
+        if let Some(v) = get_int(&t.body, "steps", 1)? {
+            o.steps = v;
+        }
+        if let Some(v) = get_int(&t.body, "batch", 1)? {
+            o.batch = v;
+        }
+        if let Some(v) = get_f32(&t.body, "lr")? {
+            o.lr = v;
+        }
+        if let Some(v) = get_int(&t.body, "eval_n", 1)? {
+            o.eval_n = v;
+        }
+        if let Some(v) = get_int(&t.body, "refresh_every", 0)? {
+            o.refresh_every = v;
+        }
+    }
+    if let Some(v) = device_variant(&ast.body)? {
+        o.device_variant = v;
+    }
+
+    // Shape-check the custom graph per width **now**, so a bad spec is
+    // a spanned diagnostic instead of a run-time failure deep in the
+    // sweep.
+    if let Some((layers, span)) = custom {
+        let input = match o.data {
+            NnExpData::Blobs { dim } => ActShape::Flat(dim),
+            NnExpData::BlobsImg { h, w, c } => ActShape::Img { h, w, c },
+            NnExpData::Cifar { pool } => ActShape::Img {
+                h: IMG_H / pool, w: IMG_W / pool, c: IMG_C,
+            },
+        };
+        let classes = match o.data {
+            NnExpData::Cifar { .. } => NUM_CLASSES,
+            _ => o.classes,
+        };
+        for &w in &o.widths_permille {
+            let mut scaled = layers.clone();
+            scale_widths(&mut scaled, w);
+            let gs = GraphSpec { input, layers: scaled };
+            match gs.shape_check() {
+                Err(e) => {
+                    return err(span, format!(
+                        "custom graph fails shape inference at width \
+                         {w} permille: {e}"));
+                }
+                Ok(shape) => {
+                    if shape.len() != classes {
+                        return err(span, format!(
+                            "custom graph ends with {} units but the \
+                             data has {classes} classes", shape.len()));
+                    }
+                }
+            }
+        }
+    }
+    Ok(o)
+}
+
+/// Lower a `layers { … }` block.  A trailing `softmax` marker is
+/// optional — it is appended when absent (every graph ends with the
+/// softmax head).
+fn lower_layers(block: &Block) -> Result<Vec<LayerSpec>, SpecError> {
+    let mut out = lower_layer_seq(block)?;
+    if !matches!(out.last(), Some(LayerSpec::Softmax)) {
+        out.push(LayerSpec::Softmax);
+    }
+    if out.len() < 2 {
+        return err(block.span,
+                   "a layers block needs at least one layer"
+                       .to_string());
+    }
+    Ok(out)
+}
+
+fn lower_layer_seq(block: &Block) -> Result<Vec<LayerSpec>, SpecError> {
+    let mut out = Vec::new();
+    for e in &block.entries {
+        match e {
+            Entry::Marker(m) => match m.text.as_str() {
+                "relu" => out.push(LayerSpec::Relu),
+                "gap" => out.push(LayerSpec::GlobalAvgPool),
+                "softmax" => out.push(LayerSpec::Softmax),
+                other => {
+                    return err(m.span, format!(
+                        "unknown layer marker '{other}' (expected \
+                         relu, gap or softmax)"));
+                }
+            },
+            Entry::Block(b) => match b.name.text.as_str() {
+                "dense" => {
+                    vet(&b.body, "dense", &["out"])?;
+                    let Some(n) = get_int(&b.body, "out", 1)? else {
+                        return err(b.body.span,
+                                   "missing required key 'out' in \
+                                    'dense'".to_string());
+                    };
+                    out.push(LayerSpec::Dense { out: n });
+                }
+                "conv" => {
+                    vet(&b.body, "conv",
+                        &["out", "k", "stride", "pad"])?;
+                    let Some(cout) = get_int(&b.body, "out", 1)? else {
+                        return err(b.body.span,
+                                   "missing required key 'out' in \
+                                    'conv'".to_string());
+                    };
+                    let Some(k) = get_int(&b.body, "k", 1)? else {
+                        return err(b.body.span,
+                                   "missing required key 'k' in \
+                                    'conv'".to_string());
+                    };
+                    let stride =
+                        get_int(&b.body, "stride", 1)?.unwrap_or(1);
+                    let pad = get_int(&b.body, "pad", 0)?.unwrap_or(0);
+                    out.push(LayerSpec::Conv2d {
+                        cout, kh: k, kw: k, stride, pad,
+                    });
+                }
+                "residual" => {
+                    let body = lower_layer_seq(&b.body)?;
+                    out.push(LayerSpec::Residual { body });
+                }
+                other => {
+                    return err(b.name.span, format!(
+                        "unknown layer '{other}' (expected dense, \
+                         conv or residual)"));
+                }
+            },
+            Entry::Assign(a) => {
+                return err(a.key.span, format!(
+                    "unexpected assignment '{}' in a layers block \
+                     (entries are layer blocks or markers)",
+                    a.key.text));
+            }
+        }
+    }
+    Ok(out)
+}
+
+// -- serve ---------------------------------------------------------------
+
+fn lower_serve(ast: &SpecAst) -> Result<ServeExpOptions, SpecError> {
+    vet(&ast.body, "experiment",
+        &["model", "data", "train", "serve", "device", "seed",
+          "workers", "out"])?;
+    let mut o = ServeExpOptions::default();
+    common_top(&ast.body, &mut o.seed, &mut o.workers, &mut o.out_dir)?;
+
+    let data = lower_data(&ast.body, false)?;
+    if let Some(src) = data.source {
+        o.data = match src {
+            NnExpData::Blobs { dim } => ServeData::Blobs { dim },
+            NnExpData::Cifar { pool } => ServeData::Cifar { pool },
+            // `allow_image = false` forbids the image form above.
+            NnExpData::BlobsImg { .. } => unreachable!(),
+        };
+    }
+    o.cifar_dir = data.cifar_dir;
+    if let Some(v) = data.classes {
+        o.classes = v;
+    }
+    if let Some(v) = data.noise {
+        o.blob_noise = v;
+    }
+    if let Some(v) = data.train_len {
+        o.train_len = v;
+    }
+    if let Some(v) = data.test_len {
+        o.test_len = v;
+    }
+
+    if let Some(m) = sub(&ast.body, "model")? {
+        vet(&m.body, "model", &["hidden", "tile"])?;
+        if let Some((h, span)) = int_list(&m.body, "hidden", 1)? {
+            if h.is_empty() {
+                return err(span,
+                           "'hidden' must not be empty".to_string());
+            }
+            o.hidden = h;
+        }
+        if let Some(v) = get_int(&m.body, "tile", 1)? {
+            o.tile = v;
+        }
+    }
+    if let Some(t) = sub(&ast.body, "train")? {
+        vet(&t.body, "train",
+            &["steps", "batch", "lr", "refresh_every"])?;
+        if let Some(v) = get_int(&t.body, "steps", 1)? {
+            o.steps = v;
+        }
+        if let Some(v) = get_int(&t.body, "batch", 1)? {
+            o.batch = v;
+        }
+        if let Some(v) = get_f32(&t.body, "lr")? {
+            o.lr = v;
+        }
+        if let Some(v) = get_int(&t.body, "refresh_every", 0)? {
+            o.refresh_every = v;
+        }
+    }
+    if let Some(s) = sub(&ast.body, "serve")? {
+        vet(&s.body, "serve",
+            &["requests", "mean_gap", "window", "max_batch",
+              "queue_cap", "calib", "probes"])?;
+        if let Some(v) = get_int(&s.body, "requests", 1)? {
+            o.requests = v;
+        }
+        if let Some(a) = assign(&s.body, "mean_gap")? {
+            let n = num_of(a)?;
+            if n.value <= 0.0 {
+                return err(n.span,
+                           "'mean_gap' must be > 0".to_string());
+            }
+            o.mean_gap = n.value;
+        }
+        if let Some(a) = assign(&s.body, "window")? {
+            let n = num_of(a)?;
+            if n.value < 0.0 {
+                return err(n.span,
+                           "'window' must be >= 0".to_string());
+            }
+            o.window = n.value;
+        }
+        if let Some(v) = get_int(&s.body, "max_batch", 1)? {
+            o.max_batch = v;
+        }
+        if let Some(v) = get_int(&s.body, "queue_cap", 1)? {
+            o.queue_cap = v;
+        }
+        if let Some(v) = get_int(&s.body, "calib", 1)? {
+            o.calib_n = v;
+        }
+        if let Some((nums, span)) = num_list(&s.body, "probes")? {
+            if nums.is_empty() {
+                return err(span,
+                           "'probes' must not be empty".to_string());
+            }
+            let mut probes = Vec::with_capacity(nums.len());
+            for n in nums {
+                if n.value <= 0.0 {
+                    return err(n.span,
+                               "probe times must be > 0 seconds"
+                                   .to_string());
+                }
+                probes.push(n.value);
+            }
+            o.probes = probes;
+        }
+    }
+    if let Some(v) = device_variant(&ast.body)? {
+        o.device_variant = v;
+    }
+    Ok(o)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::parser::parse;
+
+    fn low(src: &str) -> Result<LoweredSpec, SpecError> {
+        lower(&parse(src).unwrap())
+    }
+
+    #[test]
+    fn fig3_defaults_and_overrides() {
+        let l = low("experiment fig3 {\n  grid { k = 10 n = 6 tile = 4 }\n  \
+                     train { steps = 8 batch = 4 }\n  seed = 7\n}")
+            .unwrap();
+        let LoweredSpec::Fig3 { opts, variants } = l else { panic!() };
+        assert_eq!((opts.k, opts.n, opts.tile), (10, 6, 4));
+        assert_eq!((opts.steps, opts.batch, opts.seed), (8, 4, 7));
+        // Default variant set: the full fig3 ablation.
+        assert_eq!(variants.len(), fig3::VARIANTS.len());
+        assert_eq!(low("experiment fig3 {}").unwrap().out_name(),
+                   "fig3_grid.json");
+    }
+
+    #[test]
+    fn fig3_variant_subset_is_validated() {
+        let l = low("experiment fig3 { variants = [linear, full] }")
+            .unwrap();
+        let LoweredSpec::Fig3 { variants, .. } = l else { panic!() };
+        assert_eq!(variants, vec!["linear", "full"]);
+        let e = low("experiment fig3 {\n  variants = [linear, \
+                     warp_drive]\n}")
+            .unwrap_err();
+        assert_eq!(e.span, Span::new(2, 23));
+        assert!(e.msg.contains("unknown fig3 variant"), "{e}");
+    }
+
+    #[test]
+    fn unknown_key_is_spanned() {
+        let e = low("experiment fig5 {\n  grid { k = 4 rows = 9 }\n}")
+            .unwrap_err();
+        assert_eq!(e.span, Span::new(2, 16));
+        assert!(e.msg.contains("unknown key 'rows' in 'grid'"), "{e}");
+        assert!(e.msg.contains("expected one of: k, n, tile"), "{e}");
+    }
+
+    #[test]
+    fn duplicate_key_is_spanned() {
+        let e = low("experiment fig6 {\n  seed = 1\n  seed = 2\n}")
+            .unwrap_err();
+        assert_eq!(e.span, Span::new(3, 3));
+        assert!(e.msg.contains("duplicate key 'seed'"), "{e}");
+    }
+
+    #[test]
+    fn type_mismatch_is_spanned() {
+        let e = low("experiment fig5 {\n  seed = \"lots\"\n}")
+            .unwrap_err();
+        assert_eq!(e.span, Span::new(2, 10));
+        assert!(e.msg.contains("'seed' needs a number, found a \
+                                string"), "{e}");
+        let e = low("experiment fig4 {\n  train { lr = fast }\n}")
+            .unwrap_err();
+        assert!(e.msg.contains("'lr' needs a number, found a word"),
+                "{e}");
+    }
+
+    #[test]
+    fn missing_required_key_points_at_the_block() {
+        let e = low("experiment fig4 {\n  model { layers {\n    dense \
+                     { }\n  } }\n}")
+            .unwrap_err();
+        // The dense block's opening brace.
+        assert_eq!(e.span, Span::new(3, 11));
+        assert!(e.msg.contains("missing required key 'out' in \
+                                'dense'"), "{e}");
+    }
+
+    #[test]
+    fn fig4_mlp_lowering_matches_the_golden_config() {
+        let l = low("experiment fig4 {\n  \
+                     data { blobs { dim = 6 } classes = 3 \
+                     train_len = 30 test_len = 12 }\n  \
+                     model { hidden = [4, 3] widths = [0.5, 1.0] \
+                     tile = 3 }\n  \
+                     train { steps = 4 batch = 3 lr = 0.05 \
+                     eval_n = 6 }\n}")
+            .unwrap();
+        let LoweredSpec::Fig4(o) = l else { panic!() };
+        assert!(matches!(o.data, NnExpData::Blobs { dim: 6 }));
+        assert!(matches!(o.arch, NnArch::Mlp));
+        assert_eq!(o.hidden_base, vec![4, 3]);
+        assert_eq!(o.widths_permille, vec![500, 1000]);
+        assert_eq!((o.classes, o.steps, o.batch, o.tile), (3, 4, 3, 3));
+        assert_eq!((o.eval_n, o.train_len, o.test_len), (6, 30, 12));
+        assert_eq!(o.lr, 0.05);
+        assert_eq!(o.seed, 42); // default
+    }
+
+    #[test]
+    fn fig4_arch_is_inferred_from_the_blocks() {
+        let l = low("experiment fig4 {\n  \
+                     data { blobs { image = [4, 4, 3] } classes = 3 }\n  \
+                     model { stages = [4, 6, 8] blocks = 1 \
+                     widths = [1.0] }\n}")
+            .unwrap();
+        let LoweredSpec::Fig4(o) = &l else { panic!() };
+        assert!(matches!(o.arch, NnArch::Resnet { stages: [4, 6, 8],
+                                                  blocks: 1 }));
+        assert_eq!(l.out_name(), "fig4_resnet_grid.json");
+    }
+
+    #[test]
+    fn custom_graph_shape_failure_is_spanned() {
+        // conv on flat blob data: caught at lower time, anchored at
+        // the layers block.
+        let e = low("experiment fig4 {\n  \
+                     data { blobs { dim = 9 } classes = 3 }\n  \
+                     model { widths = [1.0] layers {\n    \
+                     conv { out = 4 k = 3 }\n  } }\n}")
+            .unwrap_err();
+        assert_eq!(e.span, Span::new(3, 33));
+        assert!(e.msg.contains("shape inference"), "{e}");
+        assert!(e.msg.contains("conv needs an image input"), "{e}");
+    }
+
+    #[test]
+    fn custom_graph_head_must_match_the_classes() {
+        let e = low("experiment fig4 {\n  \
+                     data { blobs { dim = 6 } classes = 3 }\n  \
+                     model { widths = [1.0] layers {\n    \
+                     dense { out = 4 }\n  } }\n}")
+            .unwrap_err();
+        assert!(e.msg.contains("ends with 4 units but the data has 3 \
+                                classes"), "{e}");
+    }
+
+    #[test]
+    fn custom_graph_lowering_appends_softmax_and_scales() {
+        let l = low("experiment fig4 {\n  \
+                     data { blobs { image = [4, 4, 3] } classes = 3 }\n  \
+                     model { widths = [0.5, 1.0] layers {\n    \
+                     conv { out = 4 k = 3 pad = 1 }\n    relu\n    \
+                     residual { conv { out = 4 k = 3 pad = 1 } }\n    \
+                     gap\n    dense { out = 3 }\n  } }\n}")
+            .unwrap();
+        let LoweredSpec::Fig4(o) = &l else { panic!() };
+        let NnArch::Custom { layers } = &o.arch else { panic!() };
+        assert_eq!(layers.len(), 6); // softmax auto-appended
+        assert!(matches!(layers.last(), Some(LayerSpec::Softmax)));
+        assert_eq!(l.out_name(), "fig4_custom_grid.json");
+    }
+
+    #[test]
+    fn serve_lowering_matches_the_golden_config() {
+        let l = low("experiment serve {\n  \
+                     data { blobs { dim = 6 } classes = 3 \
+                     train_len = 30 test_len = 12 }\n  \
+                     model { hidden = [4, 3] tile = 3 }\n  \
+                     train { steps = 4 batch = 3 lr = 0.05 }\n  \
+                     serve { requests = 24 mean_gap = 0.05 \
+                     window = 0.2 max_batch = 6 queue_cap = 8 \
+                     calib = 6 }\n}")
+            .unwrap();
+        let LoweredSpec::Serve(o) = l else { panic!() };
+        assert!(matches!(o.data, ServeData::Blobs { dim: 6 }));
+        assert_eq!(o.hidden, vec![4, 3]);
+        assert_eq!((o.steps, o.batch, o.tile), (4, 3, 3));
+        assert_eq!((o.requests, o.max_batch, o.queue_cap, o.calib_n),
+                   (24, 6, 8, 6));
+        assert_eq!((o.mean_gap, o.window), (0.05, 0.2));
+        assert_eq!(o.lr, 0.05);
+        // Defaults: fig5 probe axis, golden device variant.
+        assert_eq!(o.probes, crate::exp::fig5::probe_times());
+        assert_eq!(o.device_variant, "linear_read_drift");
+    }
+
+    #[test]
+    fn device_variant_and_cifar_dir_route_through() {
+        let l = low("experiment fig4 {\n  \
+                     data { cifar { pool = 8 dir = \"/tmp/c10\" } }\n  \
+                     device { variant = full }\n  \
+                     train { refresh_every = 5 }\n}")
+            .unwrap();
+        let LoweredSpec::Fig4(o) = l else { panic!() };
+        assert!(matches!(o.data, NnExpData::Cifar { pool: 8 }));
+        assert_eq!(o.cifar_dir, Some(PathBuf::from("/tmp/c10")));
+        assert_eq!(o.device_variant, "full");
+        assert_eq!(o.refresh_every, 5);
+        let e = low("experiment serve {\n  device { variant = \
+                     warp_drive }\n}")
+            .unwrap_err();
+        assert_eq!(e.span, Span::new(2, 22));
+        assert!(e.msg.contains("unknown fig3 variant"), "{e}");
+    }
+
+    #[test]
+    fn range_checks_are_spanned() {
+        let e = low("experiment fig5 { grid { k = 0 } }").unwrap_err();
+        assert!(e.msg.contains("'k' must be >= 1"), "{e}");
+        let e = low("experiment fig4 { model { widths = [100.0] } }")
+            .unwrap_err();
+        assert!(e.msg.contains("out of range"), "{e}");
+        let e = low("experiment serve { serve { mean_gap = 0 } }")
+            .unwrap_err();
+        assert!(e.msg.contains("'mean_gap' must be > 0"), "{e}");
+        let e = low("experiment fig4 { data { cifar { pool = 5 } } }")
+            .unwrap_err();
+        assert!(e.msg.contains("divide the 32x32 image"), "{e}");
+        let e = low("experiment fig4 { seed = 1.5 }").unwrap_err();
+        assert!(e.msg.contains("non-negative integer"), "{e}");
+    }
+
+    #[test]
+    fn unknown_experiment_kind_is_spanned() {
+        let e = low("experiment fig7 {}").unwrap_err();
+        assert_eq!(e.span, Span::new(1, 12));
+        assert!(e.msg.contains("unknown experiment kind 'fig7'"), "{e}");
+    }
+
+    #[test]
+    fn out_dir_override() {
+        let mut l = low("experiment fig6 { out = \"results_x\" }")
+            .unwrap();
+        assert_eq!(l.out_dir(), Path::new("results_x"));
+        l.set_out_dir(PathBuf::from("elsewhere"));
+        assert_eq!(l.out_dir(), Path::new("elsewhere"));
+        assert_eq!(l.out_name(), "fig6_grid.json");
+    }
+}

@@ -1,0 +1,162 @@
+//! `.hic` experiment specs: a zero-dependency text format that drives
+//! the whole experiment surface from one declarative file.
+//!
+//! The pipeline is three tiny stages, each a submodule:
+//!
+//! * [`lexer`] — hand-rolled tokenizer with 1-based line/col spans,
+//! * [`parser`] — recursive-descent over an LL(1) grammar into the
+//!   generic [`ast`],
+//! * [`lower`] — schema validation + defaulting into the exact option
+//!   structs the CLI subcommands build ([`lower::LoweredSpec`]), so
+//!   `hic-train run spec.hic` and the equivalent flag invocation write
+//!   **byte-identical** documents.
+//!
+//! [`printer`] renders an AST back to canonical text; number literals
+//! round-trip verbatim, so `parse(print(ast)) == ast` exactly (pinned
+//! by the round-trip property tests).  Every failure in any stage is a
+//! [`SpecError`] — one message anchored at a source [`Span`], rendered
+//! as `LINE:COL: message` (the CLI prepends the file path).
+//!
+//! # Grammar
+//!
+//! ```text
+//! spec    := "experiment" WORD block EOF
+//! block   := "{" entry* "}"
+//! entry   := WORD "=" value        # assignment
+//!          | WORD block            # named sub-block
+//!          | WORD                  # bare marker (layer list only)
+//! value   := scalar | "[" scalar ("," scalar)* [","] "]"
+//! scalar  := NUMBER | STRING | WORD
+//! ```
+//!
+//! `#` starts a comment running to end of line.  Strings are
+//! double-quoted with `\" \\ \n \t \r` escapes.  Numbers are decimal
+//! literals with optional sign, fraction and exponent (`42`, `0.05`,
+//! `1e6`).  Newlines are insignificant — entries separate by
+//! whitespace.
+//!
+//! # Key reference
+//!
+//! Every key is optional unless marked **required**; the default is
+//! the corresponding CLI default, so an empty block runs the same
+//! experiment the bare subcommand does.
+//!
+//! **Top level, all kinds** — `seed` (int, 42), `workers` (int, 0 =
+//! `HIC_WORKERS`/machine), `out` (string, `"results"`).
+//!
+//! **`experiment fig3|fig5|fig6`** — the single-layer grid sweeps:
+//!
+//! | block | key | type | default |
+//! |---|---|---|---|
+//! | `grid` | `k` | int ≥ 1 | 64 (matrix rows) |
+//! | `grid` | `n` | int ≥ 1 | 32 (matrix cols) |
+//! | `grid` | `tile` | int ≥ 1 | 16 (physical tile) |
+//! | `train` | `steps` | int ≥ 1 | 60 |
+//! | `train` | `batch` | int ≥ 1 | 8 |
+//!
+//! fig3 additionally takes `variants = [word, …]` — a subset of the
+//! ablation tags (`linear`, `linear_write`, `linear_read`,
+//! `linear_drift`, `nonlinear`, `nonlinear_write`, `nonlinear_read`,
+//! `full`; default: all eight).
+//!
+//! **`experiment fig4`** — the network width sweeps:
+//!
+//! | block | key | type | default |
+//! |---|---|---|---|
+//! | `model` | `arch` | `mlp` \| `resnet` \| `custom` | inferred¹ |
+//! | `model` | `hidden` | int list | `[32, 16]` (mlp stack) |
+//! | `model` | `stages` | 3 ints | `[16, 32, 64]` (resnet bases) |
+//! | `model` | `blocks` | int ≥ 1 | 1 (residual blocks per stage) |
+//! | `model` | `layers` | block | — (custom graph, see below) |
+//! | `model` | `widths` | number list | `[0.25 … 4.0]` multipliers² |
+//! | `model` | `tile` | int ≥ 1 | 32 |
+//! | `data` | `blobs` | block: `dim` or `image = [h, w, c]` | — |
+//! | `data` | `cifar` | block: `pool` (divides 32), `dir` (string) | pool 8³ |
+//! | `data` | `classes` | int ≥ 1 | 10 (blobs only) |
+//! | `data` | `noise` | number | 0.5 (blob feature σ) |
+//! | `data` | `train_len` | int ≥ 1 | 2000 |
+//! | `data` | `test_len` | int ≥ 1 | 500 |
+//! | `train` | `steps` | int ≥ 1 | 150 |
+//! | `train` | `batch` | int ≥ 1 | 16 |
+//! | `train` | `lr` | number | 0.1 |
+//! | `train` | `eval_n` | int ≥ 1 | 200 |
+//! | `train` | `refresh_every` | int | 0 (batches; 0 = never) |
+//! | `device` | `variant` | word | `linear_read` (any fig3 tag, plus `linear_read_drift`) |
+//!
+//! ¹ `layers` ⇒ `custom`, `stages`/`blocks` ⇒ `resnet`, else `mlp`.
+//! ² multipliers are converted to permille exactly like the CLI
+//!   (`0.5` → 500), range `0.001..=64`.
+//! ³ `dir` pins the CIFAR-10 binary directory, overriding
+//!   `$HIC_CIFAR10` and the `data/` auto-discovery; without a `data`
+//!   block fig4 uses the pooled-CIFAR source (synthetic fallback when
+//!   no real data is present).
+//!
+//! The custom `layers { … }` block lists layers in order: `dense {
+//! out = N }`, `conv { out = N  k = K  stride = S  pad = P }` (stride
+//! defaults 1, pad 0), `residual { … }` (nested layer list), and the
+//! bare markers `relu`, `gap`, `softmax`.  A trailing `softmax` is
+//! appended when absent.  Width multipliers scale every weighted layer
+//! except the classifier head; the lowered graph is shape-checked per
+//! width at load time, and the head's unit count must equal the data's
+//! class count.
+//!
+//! **`experiment serve`** — the drift-aware serving benchmark: `model
+//! { hidden tile }`, `data { … }` (as fig4, flat `blobs { dim }`
+//! only), `train { steps batch lr refresh_every }`, `device {
+//! variant }` (default `linear_read_drift`), and
+//!
+//! | block | key | type | default |
+//! |---|---|---|---|
+//! | `serve` | `requests` | int ≥ 1 | 256 |
+//! | `serve` | `mean_gap` | number > 0 | 0.01 (sim seconds) |
+//! | `serve` | `window` | number ≥ 0 | 0.05 (coalescing) |
+//! | `serve` | `max_batch` | int ≥ 1 | 16 |
+//! | `serve` | `queue_cap` | int ≥ 1 | 64 |
+//! | `serve` | `calib` | int ≥ 1 | 64 (AdaBS samples) |
+//! | `serve` | `probes` | number list > 0 | fig5 drift axis |
+//!
+//! Shipped example specs live in `examples/*.hic`; the CI smoke leg
+//! runs one through `hic-train run` and byte-compares the output
+//! against the pinned golden.
+
+pub mod ast;
+pub mod diag;
+pub mod lexer;
+pub mod lower;
+pub mod parser;
+pub mod printer;
+
+pub use ast::SpecAst;
+pub use diag::{Span, SpecError};
+pub use lower::{lower, LoweredSpec};
+pub use parser::parse;
+pub use printer::print;
+
+/// Parse + lower a spec source string into runnable options.
+pub fn load_str(text: &str) -> Result<LoweredSpec, SpecError> {
+    lower(&parse(text)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_str_spans_cover_both_stages() {
+        // Parser-stage failure…
+        let e = load_str("experiment fig5 { k = }").unwrap_err();
+        assert_eq!(e.span.line, 1);
+        // …and lowering-stage failure, same error type.
+        let e = load_str("experiment fig5 { k = 4 }").unwrap_err();
+        assert!(e.msg.contains("unknown key 'k'"), "{e}");
+    }
+
+    #[test]
+    fn load_str_round_trips_through_the_printer() {
+        let src = "experiment fig4 {\n  model {\n    hidden = [4, 3]\n  \
+                   }\n}\n";
+        let ast = parse(src).unwrap();
+        assert_eq!(parse(&print(&ast)).unwrap(), ast);
+        assert!(load_str(src).is_ok());
+    }
+}

@@ -1,0 +1,253 @@
+//! Recursive-descent parser for the `.hic` experiment-spec format.
+//!
+//! Grammar (see `spec` module docs for the key schema):
+//!
+//! ```text
+//! spec    := "experiment" WORD block EOF
+//! block   := "{" entry* "}"
+//! entry   := WORD "=" value        # assignment
+//!          | WORD block            # named sub-block
+//!          | WORD                  # bare marker (relu, gap, softmax)
+//! value   := scalar | list
+//! scalar  := NUMBER | STRING | WORD
+//! list    := "[" [ scalar ("," scalar)* [","] ] "]"
+//! ```
+//!
+//! The grammar is LL(1): after a key word, one token of lookahead
+//! (`=` / `{` / anything else) decides the entry form.  All errors are
+//! spanned [`SpecError`]s naming both what was found and what was
+//! expected.
+
+use super::ast::{Assign, Block, Entry, Ident, NamedBlock, NumLit,
+                 Scalar, SpecAst, StrLit, Value};
+use super::diag::{err, SpecError};
+use super::lexer::{lex, Tok, Token};
+
+/// Parse one spec document from source text.
+pub fn parse(text: &str) -> Result<SpecAst, SpecError> {
+    let toks = lex(text)?;
+    let mut p = Parser { toks, i: 0 };
+    let kw = p.ident("expected the 'experiment' header")?;
+    if kw.text != "experiment" {
+        return err(kw.span, format!(
+            "expected 'experiment', found '{}'", kw.text));
+    }
+    let kind = p.ident("expected an experiment kind after 'experiment'")?;
+    let body = p.block()?;
+    let t = p.peek();
+    if t.tok != Tok::Eof {
+        return err(t.span, format!(
+            "expected end of file after the experiment block, found {}",
+            t.tok.describe()));
+    }
+    Ok(SpecAst { kind, body })
+}
+
+struct Parser {
+    toks: Vec<Token>,
+    i: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> &Token {
+        // The token vector always ends with Eof, which is never
+        // consumed.
+        &self.toks[self.i.min(self.toks.len() - 1)]
+    }
+
+    fn bump(&mut self) -> Token {
+        let t = self.peek().clone();
+        if self.i + 1 < self.toks.len() {
+            self.i += 1;
+        }
+        t
+    }
+
+    fn ident(&mut self, what: &str) -> Result<Ident, SpecError> {
+        let t = self.bump();
+        match t.tok {
+            Tok::Ident(text) => Ok(Ident { text, span: t.span }),
+            other => err(t.span, format!(
+                "{what}, found {}", other.describe())),
+        }
+    }
+
+    fn expect(&mut self, want: Tok, what: &str) -> Result<Token, SpecError> {
+        let t = self.bump();
+        if t.tok == want {
+            Ok(t)
+        } else {
+            err(t.span, format!("{what}, found {}", t.tok.describe()))
+        }
+    }
+
+    fn block(&mut self) -> Result<Block, SpecError> {
+        let open = self.expect(Tok::LBrace, "expected '{'")?;
+        let mut entries = Vec::new();
+        loop {
+            let t = self.peek().clone();
+            match t.tok {
+                Tok::RBrace => {
+                    self.bump();
+                    return Ok(Block { entries, span: open.span });
+                }
+                Tok::Eof => {
+                    return err(t.span, format!(
+                        "unclosed block (opened at {})", open.span));
+                }
+                Tok::Ident(_) => entries.push(self.entry()?),
+                other => {
+                    return err(t.span, format!(
+                        "expected a key or '}}', found {}",
+                        other.describe()));
+                }
+            }
+        }
+    }
+
+    fn entry(&mut self) -> Result<Entry, SpecError> {
+        let key = self.ident("expected a key")?;
+        match self.peek().tok {
+            Tok::Eq => {
+                self.bump();
+                let value = self.value()?;
+                Ok(Entry::Assign(Assign { key, value }))
+            }
+            Tok::LBrace => {
+                let body = self.block()?;
+                Ok(Entry::Block(NamedBlock { name: key, body }))
+            }
+            // Next token starts another entry or closes the block: the
+            // key stands alone as a marker.
+            _ => Ok(Entry::Marker(key)),
+        }
+    }
+
+    fn value(&mut self) -> Result<Value, SpecError> {
+        if self.peek().tok == Tok::LBracket {
+            let open = self.bump();
+            let mut items = Vec::new();
+            loop {
+                if self.peek().tok == Tok::RBracket {
+                    self.bump();
+                    return Ok(Value::List { items, span: open.span });
+                }
+                items.push(self.scalar()?);
+                match self.peek().tok {
+                    Tok::Comma => {
+                        self.bump();
+                    }
+                    Tok::RBracket => {}
+                    _ => {
+                        let t = self.peek();
+                        return err(t.span, format!(
+                            "expected ',' or ']' in the list, found {}",
+                            t.tok.describe()));
+                    }
+                }
+            }
+        }
+        Ok(Value::Scalar(self.scalar()?))
+    }
+
+    fn scalar(&mut self) -> Result<Scalar, SpecError> {
+        let t = self.bump();
+        match t.tok {
+            Tok::Num { text, value } => {
+                Ok(Scalar::Num(NumLit { text, value, span: t.span }))
+            }
+            Tok::Str(value) => Ok(Scalar::Str(StrLit { value, span: t.span })),
+            Tok::Ident(text) => Ok(Scalar::Word(Ident { text, span: t.span })),
+            other => err(t.span, format!(
+                "expected a value (number, string, word or list), \
+                 found {}",
+                other.describe())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::diag::Span;
+
+    #[test]
+    fn parses_nested_blocks_and_all_value_kinds() {
+        let src = "\
+experiment fig4 {
+  seed = 42
+  out = \"results\"
+  model {
+    arch = mlp
+    widths = [0.5, 1.0]
+    layers {
+      dense { out = 4 }
+      relu
+    }
+  }
+}
+";
+        let ast = parse(src).unwrap();
+        assert_eq!(ast.kind.text, "fig4");
+        assert_eq!(ast.body.entries.len(), 3);
+        let Entry::Block(model) = &ast.body.entries[2] else {
+            panic!("expected model block");
+        };
+        assert_eq!(model.name.text, "model");
+        assert_eq!(model.body.entries.len(), 3);
+        let Entry::Assign(widths) = &model.body.entries[1] else {
+            panic!("expected widths assign");
+        };
+        let Value::List { items, .. } = &widths.value else {
+            panic!("expected list");
+        };
+        assert_eq!(items.len(), 2);
+        let Entry::Block(layers) = &model.body.entries[2] else {
+            panic!("expected layers block");
+        };
+        assert!(matches!(&layers.body.entries[1],
+                         Entry::Marker(m) if m.text == "relu"));
+    }
+
+    #[test]
+    fn trailing_comma_in_list_is_fine() {
+        let ast = parse("experiment fig4 { widths = [1, 2,] }").unwrap();
+        let Entry::Assign(a) = &ast.body.entries[0] else { panic!() };
+        let Value::List { items, .. } = &a.value else { panic!() };
+        assert_eq!(items.len(), 2);
+    }
+
+    #[test]
+    fn missing_experiment_header() {
+        let e = parse("fig4 { }").unwrap_err();
+        assert_eq!(e.span, Span::new(1, 1));
+        assert!(e.msg.contains("expected 'experiment'"), "{e}");
+    }
+
+    #[test]
+    fn unclosed_block_points_at_the_open_brace() {
+        let e = parse("experiment fig4 {\n  seed = 1\n").unwrap_err();
+        assert!(e.msg.contains("unclosed block (opened at 1:17)"), "{e}");
+    }
+
+    #[test]
+    fn stray_value_token_is_spanned() {
+        let e = parse("experiment fig4 { seed = }").unwrap_err();
+        assert_eq!(e.span, Span::new(1, 26));
+        assert!(e.msg.contains("expected a value"), "{e}");
+    }
+
+    #[test]
+    fn trailing_garbage_is_rejected() {
+        let e = parse("experiment fig4 { } extra").unwrap_err();
+        assert_eq!(e.span, Span::new(1, 21));
+        assert!(e.msg.contains("expected end of file"), "{e}");
+    }
+
+    #[test]
+    fn list_separator_error_is_spanned() {
+        let e = parse("experiment fig4 { w = [1 2] }").unwrap_err();
+        assert!(e.msg.contains("expected ',' or ']'"), "{e}");
+        assert_eq!(e.span, Span::new(1, 26));
+    }
+}

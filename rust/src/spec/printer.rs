@@ -1,0 +1,135 @@
+//! Pretty-printer for the `.hic` experiment-spec format.
+//!
+//! Deterministic canonical layout: two-space indentation, one entry
+//! per line, single-line lists, number literals emitted **verbatim**
+//! (the lexer keeps their source text) and strings re-escaped with the
+//! exact escape set the lexer accepts.  Comments do not survive a
+//! round trip (the parser drops them), but structure and values do:
+//! `parse(print(parse(src))) == parse(src)` for every valid source —
+//! the round-trip identity `rust/tests/spec_dsl.rs` pins over the
+//! shipped examples and generated specs.
+
+use std::fmt::Write as _;
+
+use super::ast::{Block, Entry, Scalar, SpecAst, Value};
+
+/// Render a spec document in canonical layout (trailing newline
+/// included).
+pub fn print(ast: &SpecAst) -> String {
+    let mut out = String::new();
+    let _ = write!(out, "experiment {} ", ast.kind.text);
+    print_block(&mut out, &ast.body, 0);
+    out.push('\n');
+    out
+}
+
+fn indent(out: &mut String, depth: usize) {
+    for _ in 0..depth {
+        out.push_str("  ");
+    }
+}
+
+fn print_block(out: &mut String, block: &Block, depth: usize) {
+    if block.entries.is_empty() {
+        out.push_str("{}");
+        return;
+    }
+    out.push_str("{\n");
+    for e in &block.entries {
+        indent(out, depth + 1);
+        match e {
+            Entry::Assign(a) => {
+                let _ = write!(out, "{} = ", a.key.text);
+                print_value(out, &a.value);
+            }
+            Entry::Block(b) => {
+                let _ = write!(out, "{} ", b.name.text);
+                print_block(out, &b.body, depth + 1);
+            }
+            Entry::Marker(m) => out.push_str(&m.text),
+        }
+        out.push('\n');
+    }
+    indent(out, depth);
+    out.push('}');
+}
+
+fn print_value(out: &mut String, v: &Value) {
+    match v {
+        Value::Scalar(s) => print_scalar(out, s),
+        Value::List { items, .. } => {
+            out.push('[');
+            for (i, s) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(", ");
+                }
+                print_scalar(out, s);
+            }
+            out.push(']');
+        }
+    }
+}
+
+fn print_scalar(out: &mut String, s: &Scalar) {
+    match s {
+        Scalar::Num(n) => out.push_str(&n.text),
+        Scalar::Word(w) => out.push_str(&w.text),
+        Scalar::Str(st) => {
+            out.push('"');
+            for c in st.value.chars() {
+                match c {
+                    '"' => out.push_str("\\\""),
+                    '\\' => out.push_str("\\\\"),
+                    '\n' => out.push_str("\\n"),
+                    '\t' => out.push_str("\\t"),
+                    '\r' => out.push_str("\\r"),
+                    c => out.push(c),
+                }
+            }
+            out.push('"');
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::parser::parse;
+
+    #[test]
+    fn canonical_layout() {
+        let src = "experiment fig4{seed=42 # c\n model{arch=mlp \
+                   widths=[0.5,1e2] layers{relu dense{out=3}}} \
+                   out=\"a\\nb\"}";
+        let ast = parse(src).unwrap();
+        let printed = print(&ast);
+        assert_eq!(printed, "\
+experiment fig4 {
+  seed = 42
+  model {
+    arch = mlp
+    widths = [0.5, 1e2]
+    layers {
+      relu
+      dense {
+        out = 3
+      }
+    }
+  }
+  out = \"a\\nb\"
+}
+");
+    }
+
+    #[test]
+    fn round_trip_is_identity() {
+        let src = "experiment serve {\n  data { blobs { dim = 6 } }\n  \
+                   serve { probes = [1e2, 4e7] window = 0.2 }\n  \
+                   empty {}\n}\n";
+        let a = parse(src).unwrap();
+        let printed = print(&a);
+        let b = parse(&printed).unwrap();
+        assert_eq!(a, b, "parse -> print -> parse must be identity");
+        assert_eq!(print(&b), printed, "printing is idempotent");
+    }
+}

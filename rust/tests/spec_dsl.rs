@@ -1,0 +1,317 @@
+//! Integration suite of the `.hic` experiment-spec DSL.
+//!
+//! Four pillars:
+//!
+//! 1. **Golden reproduction** — every shipped example spec
+//!    (`examples/*.hic`) lowers and runs to the exact pinned golden
+//!    bytes (`rust/tests/golden/*.json`), proving the spec path and
+//!    the flag path are interchangeable.
+//! 2. **Round-trip property** — `parse → print → parse` is the
+//!    identity over the shipped examples and a generated spec
+//!    population, and `print` is canonical (`print(parse(print(x))) ==
+//!    print(x)`).
+//! 3. **Spanned diagnostics** — each diagnostic class (lex error,
+//!    parse error, unknown key, type mismatch, missing required key,
+//!    shape-inference failure) reports the right line:col through the
+//!    public `load_str` entry point.
+//! 4. **Spec-driven data routing** — `data { cifar { dir = "…" } }`
+//!    reaches the real CIFAR loader end-to-end, with an explicit dir
+//!    overriding discovery and an unreadable dir falling back to the
+//!    synthetic pipeline.
+
+use std::fs;
+use std::path::Path;
+
+use hic_train::data::cifar::{CifarDataset, RECORD_BYTES};
+use hic_train::spec::ast::{Assign, Block, Entry, Ident, NamedBlock,
+                           NumLit, Scalar, SpecAst, StrLit, Value};
+use hic_train::spec::{load_str, parse, print, Span};
+use hic_train::util::rng::Pcg64;
+
+// -- 1. golden reproduction ----------------------------------------------
+
+fn run_spec(src: &str) -> String {
+    load_str(src)
+        .unwrap_or_else(|e| panic!("spec failed to load: {e}"))
+        .run()
+        .unwrap()
+        .to_string()
+}
+
+#[test]
+fn example_fig3_reproduces_the_golden_bytes() {
+    let got = run_spec(include_str!("../../examples/fig3_grid.hic"));
+    assert_eq!(got, include_str!("golden/fig3_grid.json").trim_end());
+}
+
+#[test]
+fn example_fig4_reproduces_the_golden_bytes() {
+    let got = run_spec(include_str!("../../examples/fig4_grid.hic"));
+    assert_eq!(got, include_str!("golden/fig4_grid.json").trim_end());
+}
+
+#[test]
+fn example_fig4_resnet_reproduces_the_golden_bytes() {
+    let got =
+        run_spec(include_str!("../../examples/fig4_resnet_grid.hic"));
+    assert_eq!(got,
+               include_str!("golden/fig4_resnet_grid.json").trim_end());
+}
+
+#[test]
+fn example_fig5_reproduces_the_golden_bytes() {
+    let got = run_spec(include_str!("../../examples/fig5_grid.hic"));
+    assert_eq!(got, include_str!("golden/fig5_grid.json").trim_end());
+}
+
+#[test]
+fn example_fig5_serve_reproduces_the_golden_bytes() {
+    let got = run_spec(include_str!("../../examples/fig5_serve.hic"));
+    assert_eq!(got, include_str!("golden/fig5_serve.json").trim_end());
+}
+
+#[test]
+fn example_out_names_match_the_golden_files() {
+    for (src, name) in [
+        (include_str!("../../examples/fig3_grid.hic"),
+         "fig3_grid.json"),
+        (include_str!("../../examples/fig4_grid.hic"),
+         "fig4_grid.json"),
+        (include_str!("../../examples/fig4_resnet_grid.hic"),
+         "fig4_resnet_grid.json"),
+        (include_str!("../../examples/fig5_grid.hic"),
+         "fig5_grid.json"),
+        (include_str!("../../examples/fig5_serve.hic"),
+         "fig5_serve.json"),
+    ] {
+        assert_eq!(load_str(src).unwrap().out_name(), name);
+    }
+}
+
+// -- 2. round-trip property ----------------------------------------------
+
+const EXAMPLES: [(&str, &str); 5] = [
+    ("fig3_grid.hic", include_str!("../../examples/fig3_grid.hic")),
+    ("fig4_grid.hic", include_str!("../../examples/fig4_grid.hic")),
+    ("fig4_resnet_grid.hic",
+     include_str!("../../examples/fig4_resnet_grid.hic")),
+    ("fig5_grid.hic", include_str!("../../examples/fig5_grid.hic")),
+    ("fig5_serve.hic", include_str!("../../examples/fig5_serve.hic")),
+];
+
+#[test]
+fn shipped_examples_round_trip_through_the_printer() {
+    for (name, src) in EXAMPLES {
+        let ast = parse(src).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let printed = print(&ast);
+        let back =
+            parse(&printed).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(back, ast, "{name}: round-trip changed the AST");
+        assert_eq!(print(&back), printed,
+                   "{name}: printer is not canonical");
+    }
+}
+
+/// Grammar-directed spec generator.  Spans are dummies (AST equality
+/// ignores them); number literals come from a fixed pool so the
+/// parse-value of every printed literal is exact.
+fn gen_spec(rng: &mut Pcg64) -> SpecAst {
+    let kinds = ["fig3", "fig4", "serve", "anything_goes", "x"];
+    SpecAst {
+        kind: ident(pick(rng, &kinds)),
+        body: gen_block(rng, 0),
+    }
+}
+
+const ZERO: Span = Span { line: 0, col: 0 };
+
+fn ident(text: &str) -> Ident {
+    Ident { text: text.to_string(), span: ZERO }
+}
+
+fn pick<'a, T: ?Sized>(rng: &mut Pcg64, items: &'a [&'a T]) -> &'a T {
+    items[(rng.next_u64() % items.len() as u64) as usize]
+}
+
+fn gen_scalar(rng: &mut Pcg64) -> Scalar {
+    let nums = ["0", "1", "42", "-7", "0.5", "1.0", "0.001", "-0.25",
+                "1e2", "4e7", "1.5E-3", "1234567890", "0.000001"];
+    let words = ["alpha", "beta_2", "_lead", "x", "relu", "linear_read"];
+    let strs = ["", "plain", "sp ace", "q\"uote", "back\\slash",
+                "new\nline", "tab\tcr\r", "h\u{e9}llo \u{2192} ok"];
+    match rng.next_u64() % 3 {
+        0 => {
+            let text = pick(rng, &nums);
+            Scalar::Num(NumLit {
+                text: text.to_string(),
+                value: text.parse().unwrap(),
+                span: ZERO,
+            })
+        }
+        1 => Scalar::Str(StrLit {
+            value: pick(rng, &strs).to_string(),
+            span: ZERO,
+        }),
+        _ => Scalar::Word(ident(pick(rng, &words))),
+    }
+}
+
+fn gen_value(rng: &mut Pcg64) -> Value {
+    if rng.next_u64() % 4 == 0 {
+        let n = 1 + (rng.next_u64() % 4) as usize;
+        Value::List {
+            items: (0..n).map(|_| gen_scalar(rng)).collect(),
+            span: ZERO,
+        }
+    } else {
+        Value::Scalar(gen_scalar(rng))
+    }
+}
+
+fn gen_block(rng: &mut Pcg64, depth: usize) -> Block {
+    let keys = ["grid", "train", "steps", "widths", "dense", "gap",
+                "k", "seed", "layer_9", "out"];
+    let n = (rng.next_u64() % 5) as usize;
+    let entries = (0..n)
+        .map(|_| match rng.next_u64() % 5 {
+            0 | 1 | 2 => Entry::Assign(Assign {
+                key: ident(pick(rng, &keys)),
+                value: gen_value(rng),
+            }),
+            3 if depth < 2 => Entry::Block(NamedBlock {
+                name: ident(pick(rng, &keys)),
+                body: gen_block(rng, depth + 1),
+            }),
+            _ => Entry::Marker(ident(pick(rng, &keys))),
+        })
+        .collect();
+    Block { entries, span: ZERO }
+}
+
+#[test]
+fn generated_specs_round_trip_through_the_printer() {
+    let mut rng = Pcg64::new(0xD51_5EED, 8);
+    for i in 0..300 {
+        let ast = gen_spec(&mut rng);
+        let text = print(&ast);
+        let back = parse(&text)
+            .unwrap_or_else(|e| panic!("gen #{i}: {e}\n---\n{text}"));
+        assert_eq!(back, ast, "gen #{i}: round-trip changed the AST\n\
+                               ---\n{text}");
+        assert_eq!(print(&back), text,
+                   "gen #{i}: printer is not canonical\n---\n{text}");
+    }
+}
+
+// -- 3. spanned diagnostics ----------------------------------------------
+
+#[test]
+fn each_diagnostic_class_reports_line_and_column() {
+    // Lex error: unterminated string.
+    let e = load_str("experiment fig4 {\n  out = \"oops\n}").unwrap_err();
+    assert_eq!(e.span, Span::new(2, 9));
+    assert!(e.msg.contains("unterminated string"), "{e}");
+
+    // Parse error: assignment without a value.
+    let e = load_str("experiment fig5 {\n  grid { k = }\n}").unwrap_err();
+    assert_eq!(e.span.line, 2);
+    assert!(e.to_string().starts_with("2:"), "{e}");
+
+    // Unknown key, with the allowed set spelled out.
+    let e = load_str("experiment fig4 {\n  train { stepz = 9 }\n}")
+        .unwrap_err();
+    assert_eq!(e.span, Span::new(2, 11));
+    assert!(e.msg.contains("unknown key 'stepz' in 'train'"), "{e}");
+    assert!(e.msg.contains("steps"), "{e}");
+
+    // Type mismatch, anchored at the offending value.
+    let e = load_str("experiment serve {\n  serve { requests = \"9\" }\n}")
+        .unwrap_err();
+    assert_eq!(e.span, Span::new(2, 22));
+    assert!(e.msg.contains("'requests' needs a number, found a \
+                            string"), "{e}");
+
+    // Missing required key, anchored at the enclosing block's brace.
+    let e = load_str(
+        "experiment fig4 {\n  model {\n    layers { conv { out = 2 } \
+         }\n  }\n}")
+        .unwrap_err();
+    assert_eq!(e.span, Span::new(3, 19));
+    assert!(e.msg.contains("missing required key 'k' in 'conv'"),
+            "{e}");
+
+    // Shape-inference failure, anchored at the layers block.
+    let e = load_str(
+        "experiment fig4 {\n  data { blobs { dim = 5 } }\n  model {\n    \
+         widths = [1.0]\n    layers {\n      gap\n      dense { out = \
+         10 }\n    }\n  }\n}")
+        .unwrap_err();
+    assert_eq!(e.span, Span::new(5, 12));
+    assert!(e.msg.contains("shape inference"), "{e}");
+    assert!(e.msg.contains("gap needs an image input"), "{e}");
+}
+
+// -- 4. spec-driven data routing -----------------------------------------
+
+/// Minimal valid CIFAR-10 binary fixture: every record is one label
+/// byte + 3072 copies of `pixel`.
+fn write_fixture(dir: &Path, pixel: u8) {
+    fs::create_dir_all(dir).unwrap();
+    let rec = |label: u8| {
+        let mut v = vec![label];
+        v.resize(RECORD_BYTES, pixel);
+        v
+    };
+    let mut train = Vec::new();
+    for l in 0..6u8 {
+        train.extend(rec(l));
+    }
+    fs::write(dir.join("data_batch_1.bin"), &train).unwrap();
+    let mut test = Vec::new();
+    for l in 0..3u8 {
+        test.extend(rec(l));
+    }
+    fs::write(dir.join("test_batch.bin"), &test).unwrap();
+}
+
+#[test]
+fn spec_cifar_dir_routes_to_the_real_loader() {
+    let base = std::env::temp_dir()
+        .join(format!("hic_spec_cifar_{}", std::process::id()));
+    let dir_a = base.join("a");
+    let dir_b = base.join("b");
+    write_fixture(&dir_a, 0x40);
+    write_fixture(&dir_b, 0xC0);
+
+    let spec_with_dir = |dir: &str| format!(
+        "experiment fig4 {{\n  data {{ cifar {{ pool = 8 dir = \
+         \"{dir}\" }} }}\n  model {{ hidden = [2] widths = [1.0] \
+         tile = 8 }}\n  train {{ steps = 2 batch = 2 lr = 0.05 \
+         eval_n = 2 }}\n}}");
+
+    // Two fixtures with different pixel bytes must produce different
+    // documents — the spec's `dir` reached the real loader.
+    let doc_a = run_spec(&spec_with_dir(dir_a.to_str().unwrap()));
+    let doc_a2 = run_spec(&spec_with_dir(dir_a.to_str().unwrap()));
+    let doc_b = run_spec(&spec_with_dir(dir_b.to_str().unwrap()));
+    assert_eq!(doc_a, doc_a2, "spec-driven cifar run is deterministic");
+    assert_ne!(doc_a, doc_b,
+               "different fixture bytes must change the document — \
+                the explicit dir was not routed to the loader");
+
+    // An unreadable explicit dir falls back to the synthetic pipeline:
+    // identical bytes to a dir-less spec (skipped when the machine has
+    // a discoverable real dataset, which a dir-less spec would use).
+    if CifarDataset::discover().is_none() {
+        let bogus = base.join("definitely_missing");
+        let doc_bogus = run_spec(&spec_with_dir(bogus.to_str().unwrap()));
+        let plain = spec_with_dir("")
+            .replace(" dir = \"\"", "");
+        let doc_plain = run_spec(&plain);
+        assert_eq!(doc_bogus, doc_plain,
+                   "unreadable explicit dir must fall back to the \
+                    synthetic pipeline");
+    }
+
+    fs::remove_dir_all(&base).unwrap();
+}
