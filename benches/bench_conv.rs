@@ -1,24 +1,27 @@
 //! Conv-on-grid training benches: full `NetTrainer` steps over the
-//! ResNet-style layer graph (im2col patch lowering, per-layer grids,
-//! transposed-VMM backprop, col2im scatter, hybrid updates) across
-//! width multipliers and worker counts, plus the **blocked
-//! tile-stationary patch-VMM kernels against the retained PR-4
-//! sample-major reference** on this bench's stage-1 conv shape.
+//! ResNet-style layer graph across width multipliers, worker counts
+//! and **conv lowerings** — the weight-stationary streaming path
+//! (default: on-demand patch segments, fused col2im drain) against the
+//! retained materialized im2col path — plus the patch-VMM kernels in
+//! isolation (streamed vs blocked-materialized vs the PR-4
+//! sample-major reference) on this bench's stage-1 conv shape.
 //!
 //! `BENCH_conv.json` records conv steps/sec per case, the headline
-//! worker-scaling ratios, and the blocked-vs-sample-major patch-VMM
-//! series — the evidence that sample blocking turned the single-strip
-//! conv patch VMM into a parallel, cache-resident kernel.
+//! worker-scaling and streamed-vs-materialized ratios, and —
+//! piggybacked on the `speedups` map under `mem_` labels — the peak
+//! patch-staging buffer bytes per lowering, the evidence that the
+//! streaming rework removed the `[m·P, k²·cin]` patch matrices.
 
 use hic_train::bench::Bench;
 use hic_train::coordinator::nettrainer::{NetTrainer, NetTrainerOptions};
-use hic_train::crossbar::conv::{im2col_into, PatchGeom};
+use hic_train::crossbar::conv::{im2col_into, ConvPatchSource, PatchGeom,
+                                PatchPlan};
 use hic_train::crossbar::grid::CrossbarGrid;
 use hic_train::crossbar::quant::{AdcSpec, DacSpec};
 use hic_train::crossbar::TilingPolicy;
 use hic_train::hic::weight::HicGeometry;
 use hic_train::nn::features::{BlobDataset, FeatureSource};
-use hic_train::nn::graph::GraphSpec;
+use hic_train::nn::graph::{ConvLowering, GraphSpec};
 use hic_train::pcm::device::PcmParams;
 use hic_train::util::pool::WorkerPool;
 
@@ -34,13 +37,16 @@ fn data() -> FeatureSource {
                                                  0.4, 4096, 512))
 }
 
-fn trainer(width_permille: u32, workers: usize) -> NetTrainer {
+fn trainer(width_permille: u32, workers: usize,
+           lowering: ConvLowering) -> NetTrainer {
     let spec = GraphSpec::resnet(IMG, STAGES, 1, CLASSES, width_permille);
-    NetTrainer::from_spec(
+    let mut t = NetTrainer::from_spec(
         PcmParams::default(), &spec,
         TilingPolicy { tile_rows: TILE, tile_cols: TILE }, data(),
         WorkerPool::new(workers),
-        NetTrainerOptions { batch: BATCH, ..Default::default() })
+        NetTrainerOptions { batch: BATCH, ..Default::default() });
+    t.net.set_conv_lowering(lowering);
+    t
 }
 
 fn pattern(len: usize) -> Vec<f32> {
@@ -52,34 +58,58 @@ fn main() {
     // One benched element = one trained sample (batch per step).
     let elements = BATCH as f64;
 
-    // Width sweep, serial.
+    // Width sweep, serial, streamed lowering (the default).
     for w in [500u32, 1000, 1500] {
-        let mut t = trainer(w, 1);
+        let mut t = trainer(w, 1, ConvLowering::Streamed);
         b.bench_with_elements(
             &format!("resnet_step_w{w}_workers1"), Some(elements),
             || t.train_steps(1));
     }
 
-    // Worker scaling at width 1.0.
+    // Worker scaling at width 1.0, plus the materialized-lowering
+    // twins at workers {1, 4} — same graph, same seeds, bit-identical
+    // results, different staging strategy.  The trainers are kept
+    // alive so their post-run patch-staging footprints can be read
+    // back below.
+    let mut mem = Vec::new();
+    {
+        let mut t = trainer(1000, 1, ConvLowering::Materialized);
+        b.bench_with_elements(
+            "resnet_step_w1000_workers1_materialized", Some(elements),
+            || t.train_steps(1));
+        mem.push(("mem_patch_bytes_resnet_w1000_materialized".to_string(),
+                  t.net.patch_buf_bytes() as f64));
+    }
     for workers in [2usize, 4] {
-        let mut t = trainer(1000, workers);
+        let mut t = trainer(1000, workers, ConvLowering::Streamed);
         b.bench_with_elements(
             &format!("resnet_step_w1000_workers{workers}"),
             Some(elements), || t.train_steps(1));
+        if workers == 4 {
+            mem.push(("mem_patch_bytes_resnet_w1000_streamed".to_string(),
+                      t.net.patch_buf_bytes() as f64));
+        }
+    }
+    {
+        let mut t = trainer(1000, 4, ConvLowering::Materialized);
+        b.bench_with_elements(
+            "resnet_step_w1000_workers4_materialized", Some(elements),
+            || t.train_steps(1));
     }
 
-    // The stage-1 body conv's patch VMM in isolation: a real im2col
-    // patch matrix (this bench's 8x8 stride-1 shape at width 1.0, cin =
-    // cout = STAGES[0]) driven through the blocked tile-stationary
-    // kernel vs the PR-4 sample-major reference.  At TILE = 32 the
-    // grid is one column strip, so the sample-major kernel serializes
-    // and the blocked one shards the m·P patch-row axis.
+    // The stage-1 body conv's patch VMM in isolation: this bench's 8x8
+    // stride-1 3x3 shape at width 1.0 (cin = cout = STAGES[0]) driven
+    // three ways — the PR-4 sample-major reference, the blocked
+    // tile-stationary kernel over a materialized im2col matrix, and
+    // the weight-stationary streamed kernel generating the same
+    // segments on the fly from the once-DAC'd image.
     let geom = PatchGeom {
         in_h: IMG[0], in_w: IMG[1], cin: STAGES[0],
         kh: 3, kw: 3, cout: STAGES[0], stride: 1, pad: 1,
     };
     let (kk, co) = (geom.patch_len(), geom.cout);
     let rows = geom.patch_rows(BATCH);
+    let plan = PatchPlan::new(geom);
     let mut grid = CrossbarGrid::new(
         PcmParams::default(), HicGeometry::default(), kk, co,
         TilingPolicy { tile_rows: TILE, tile_cols: TILE },
@@ -88,6 +118,10 @@ fn main() {
     let x = pattern(BATCH * geom.in_len());
     let mut patches = vec![0.0f32; rows * kk];
     im2col_into(&geom, &x, BATCH, &WorkerPool::serial(), &mut patches);
+    let mut qimg = x.clone();
+    for v in &mut qimg {
+        *v = grid.dac.convert(*v);
+    }
     let mut scratch = grid.scratch();
     let mut out = vec![0.0f32; rows * co];
     let pelements = (rows * kk * co) as f64;
@@ -115,27 +149,63 @@ fn main() {
                 std::hint::black_box(&out);
             },
         );
+        b.bench_with_elements(
+            &format!("patchvmm_streamed_{kk}x{co}_w{workers}"),
+            Some(pelements),
+            || {
+                let src = ConvPatchSource::new(&plan, &qimg);
+                grid.vmm_batch_src_into(&src, rows, 1.0, round, 0,
+                                        &pool, &mut scratch, &mut out);
+                round += 1;
+                std::hint::black_box(&out);
+            },
+        );
     }
+    // Isolated-kernel patch staging: the materialized path holds the
+    // full [m·P, k²·cin] matrix; the streamed path holds only the
+    // DAC'd image it reads segments from.
+    mem.push((format!("mem_patch_bytes_isolated_{kk}x{co}_materialized"),
+              (patches.len() * std::mem::size_of::<f32>()) as f64));
+    mem.push((format!("mem_patch_bytes_isolated_{kk}x{co}_streamed"),
+              (qimg.len() * std::mem::size_of::<f32>()) as f64));
 
     let mut speedups = Vec::new();
     let sm_w1 = format!("patchvmm_sample_major_{kk}x{co}_w1");
     let bl_w1 = format!("patchvmm_blocked_{kk}x{co}_w1");
     let sm_w4 = format!("patchvmm_sample_major_{kk}x{co}_w4");
     let bl_w4 = format!("patchvmm_blocked_{kk}x{co}_w4");
+    let st_w1 = format!("patchvmm_streamed_{kk}x{co}_w1");
+    let st_w4 = format!("patchvmm_streamed_{kk}x{co}_w4");
     for (label, base, cont) in [
         ("conv_w4_vs_w1",
          "resnet_step_w1000_workers1", "resnet_step_w1000_workers4"),
         ("conv_w2_vs_w1",
          "resnet_step_w1000_workers1", "resnet_step_w1000_workers2"),
+        ("conv_streamed_vs_materialized_w1",
+         "resnet_step_w1000_workers1_materialized",
+         "resnet_step_w1000_workers1"),
+        ("conv_streamed_vs_materialized_w4",
+         "resnet_step_w1000_workers4_materialized",
+         "resnet_step_w1000_workers4"),
         ("patch_blocked_vs_sample_major_w1", sm_w1.as_str(),
          bl_w1.as_str()),
         ("patch_blocked_vs_sample_major_w4", sm_w4.as_str(),
          bl_w4.as_str()),
+        ("patch_streamed_vs_materialized_w1", bl_w1.as_str(),
+         st_w1.as_str()),
+        ("patch_streamed_vs_materialized_w4", bl_w4.as_str(),
+         st_w4.as_str()),
     ] {
         if let Some(s) = b.speedup(base, cont) {
             println!("[conv] {label}: {s:.2}x");
             speedups.push((label.to_string(), s));
         }
+    }
+    // Memory series ride in the same map under `mem_` labels (bytes,
+    // lower is better) — `python/bench_diff.py` renders them as sizes.
+    for (label, bytes) in mem {
+        println!("[conv] {label}: {bytes:.0} B");
+        speedups.push((label, bytes));
     }
     b.write_json(std::path::Path::new("BENCH_conv.json"), &speedups)
         .expect("writing BENCH_conv.json");

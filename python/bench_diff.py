@@ -6,7 +6,11 @@ suite: ``{"suite": ..., "cases": {name: {median_ns, ...}}, "speedups":
 {label: ratio}}``.  This tool prints a per-case table of the old vs new
 median wall time and the resulting speedup (``old / new`` — > 1 means
 the new run is faster), plus the delta of any named speedup series both
-artifacts share.  CI uses it to post the perf trajectory of a branch
+artifacts share.  Series labels starting with ``mem_`` are memory
+datapoints (bytes, lower is better — e.g. the conv patch-staging
+footprint per lowering) and are rendered as sizes with an ``old / new``
+reduction factor instead of a speedup.  CI uses it to post the perf
+trajectory of a branch
 against the latest main-branch artifact in the job summary
 (``--markdown``).
 
@@ -39,6 +43,31 @@ def fmt_ns(ns):
     if ns >= 1e3:
         return "%.2f us" % (ns / 1e3)
     return "%.0f ns" % ns
+
+
+def fmt_bytes(n):
+    if n >= 1 << 30:
+        return "%.2f GiB" % (n / (1 << 30))
+    if n >= 1 << 20:
+        return "%.2f MiB" % (n / (1 << 20))
+    if n >= 1 << 10:
+        return "%.2f KiB" % (n / (1 << 10))
+    return "%.0f B" % n
+
+
+def series_cells(label, old_v, new_v):
+    """(old, new, delta) strings for one speedup-map entry — ``mem_``
+    labels are bytes (lower is better), everything else a ratio."""
+    if label.startswith("mem_"):
+        reduction = old_v / new_v if new_v > 0 else float("inf")
+        if 0.995 <= reduction <= 1.005:
+            extra = "unchanged"
+        elif reduction >= 1:
+            extra = "%.2fx smaller" % reduction
+        else:
+            extra = "%.2fx larger" % (1 / reduction)
+        return fmt_bytes(old_v), fmt_bytes(new_v), extra
+    return "%.2fx" % old_v, "%.2fx" % new_v, ""
 
 
 def diff_rows(old, new):
@@ -75,9 +104,12 @@ def render_text(old, new, shared, only_old, only_new):
         lines.append("only in new: %s" % name)
     for label in sorted(set(old.get("speedups", {}))
                         & set(new.get("speedups", {}))):
-        lines.append("series %-38s %8.2fx -> %.2fx"
-                     % (label, old["speedups"][label],
-                        new["speedups"][label]))
+        ov, nv, extra = series_cells(label, old["speedups"][label],
+                                     new["speedups"][label])
+        line = "series %-38s %10s -> %s" % (label, ov, nv)
+        if extra:
+            line += " (%s)" % extra
+        lines.append(line)
     return "\n".join(lines)
 
 
@@ -97,11 +129,13 @@ def render_markdown(old, new, shared, only_old, only_new):
     series = sorted(set(old.get("speedups", {}))
                     & set(new.get("speedups", {})))
     if series:
-        lines += ["", "| speedup series | old | new |", "|---|---:|---:|"]
+        lines += ["", "| series | old | new | delta |",
+                  "|---|---:|---:|---|"]
         for label in series:
-            lines.append("| `%s` | %.2fx | %.2fx |"
-                         % (label, old["speedups"][label],
-                            new["speedups"][label]))
+            ov, nv, extra = series_cells(label, old["speedups"][label],
+                                         new["speedups"][label])
+            lines.append("| `%s` | %s | %s | %s |"
+                         % (label, ov, nv, extra))
     lines.append("")
     return "\n".join(lines)
 

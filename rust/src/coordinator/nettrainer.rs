@@ -1,17 +1,22 @@
 //! Multi-layer device-level training loop over the layer-graph IR.
 //!
 //! [`NetTrainer`] drives a [`GraphNet`] end to end: analog forward VMMs
-//! layer by layer (conv layers through the im2col patch lowering),
-//! softmax cross-entropy on the host, analog **transposed** VMMs
-//! (`CrossbarGrid::vmm_t_batch_into`) carrying the error back down the
-//! graph (plus col2im scatters through conv layers and skip-adds
-//! through residual blocks), digital weight-gradient outer products,
-//! and the per-layer hybrid update (LSB accumulation, MSB overflow
-//! programming) — with one shared drift clock, one refresh cadence and
-//! the endurance ledgers folded across every grid's tiles.  This is
-//! the mixed-precision computational-memory training loop (Nandakumar
-//! et al. 1712.01192 / 2001.11773) run entirely on the device model,
-//! now covering the paper's conv/residual topology class.
+//! layer by layer (conv layers through the **weight-stationary
+//! streaming** patch lowering — patch segments generated on demand
+//! from the once-DAC'd image, no materialized im2col matrix; see
+//! `nn::graph::ConvLowering`), softmax cross-entropy on the host,
+//! analog **transposed** VMMs carrying the error back down the graph
+//! (conv layers drain theirs straight through the fused col2im
+//! scatter, residual blocks through skip-adds), digital
+//! weight-gradient outer products, and the per-layer hybrid update
+//! (LSB accumulation, MSB overflow programming) — with one shared
+//! drift clock, one refresh cadence and the endurance ledgers folded
+//! across every grid's tiles.  This is the mixed-precision
+//! computational-memory training loop (Nandakumar et al. 1712.01192 /
+//! 2001.11773) run entirely on the device model, now covering the
+//! paper's conv/residual topology class.  The streamed and
+//! materialized conv lowerings are bit-identical, so everything below
+//! — goldens included — holds for either.
 //!
 //! Backward DAC headroom: backprop errors shrink as training converges,
 //! so every error batch is pre-scaled by `bwd_gain` before its

@@ -1,43 +1,99 @@
-//! Patch lowering for convolution-on-grid (im2col / col2im).
+//! Patch lowering for convolution-on-grid: weight-stationary streaming
+//! (patch sources + fused adjoint drain) over the classic im2col /
+//! col2im pair.
 //!
 //! The standard mixed-precision-in-memory construction maps a 2-D
 //! convolution onto an analog crossbar by lowering each `[kh, kw, cin]`
 //! receptive field to one row of a patch matrix, so the whole layer
 //! becomes a single `[kh·kw·cin, cout]` VMM per patch (Nandakumar et
-//! al. 2020; Joshi et al. 2020).  This module is the deterministic data
-//! movement around that VMM:
+//! al. 2020; Joshi et al. 2020).  Through PR 8 the lowering
+//! *materialized* that `[m·P, kh·kw·cin]` matrix per layer per step —
+//! stride-1 3×3 windows copy 8/9 of every patch out of rows that were
+//! already staged, and the patch buffers dominated the footprint of the
+//! long-run ResNet path.  The conv weights never move between steps
+//! (they live on the crossbar), so the right shape is
+//! **weight-stationary streaming**: keep the weights on the grid and
+//! stream activations through it, generating each patch segment on
+//! demand.
 //!
-//! * [`PatchGeom`] — the lowering geometry (input `[h, w, c]` in HWC
-//!   layout, kernel size, stride, zero padding) and its derived output
-//!   extents;
-//! * [`im2col_into`] — gather input patches into a caller-owned
-//!   `[m·P, kh·kw·cin]` patch matrix (`P` output positions per sample);
-//! * [`col2im_into`] — the exact adjoint: scatter-add patch-space
-//!   gradients back to input-space activations.
+//! # Streaming lowering
 //!
-//! Both kernels shard by **sample** on the [`WorkerPool`]: every shard
-//! writes a disjoint slice of the output buffer and consumes no RNG, so
-//! they are trivially bitwise identical for any worker count — the grid
-//! determinism contract extends to the patch shards for free
-//! (`rust/tests/prop_conv_equivalence.rs` pins this).  Buffers are
-//! caller-owned and reused across invocations: the conv layers keep
-//! their patch matrices inside the layer state, so the training loop
+//! * [`PatchPlan`] — a [`PatchGeom`] with every derived extent
+//!   (`out_h/out_w`, `positions`, `patch_len`, `in_len`, `out_len`)
+//!   computed once; conv layers cache it at build time instead of
+//!   re-deriving extents every forward/backward call.
+//! * [`ConvPatchSource`] — the forward patch generator: a
+//!   [`PatchSource`] over the **once-DAC'd** input image (HWC).  The
+//!   blocked grid kernel asks for one `[r0, r0+len)` patch-row segment
+//!   at a time ([`CrossbarGrid::vmm_batch_src_into`]); the source
+//!   decomposes the request into contiguous channel runs and copies
+//!   them straight out of the staged image rows — the whole image *is*
+//!   the halo buffer, so overlapping stride-1 windows reuse staged
+//!   rows instead of re-gathering them, and the input DAC runs once
+//!   per pixel instead of up to `kh·kw` times.  Because the grid's
+//!   hoisted DAC maps `0.0 → 0.0` exactly (mid-rise quantizer),
+//!   `DAC ∘ im2col == im2col ∘ DAC`: gathering from the pre-quantized
+//!   image is bit-equal to quantizing a materialized patch matrix,
+//!   padding included.
+//! * [`col2im_stream_into`] — the backward fusion: consumes the
+//!   transposed VMM's per-(strip, sample) outputs through the
+//!   read-only [`TvmmOut`] view ([`CrossbarGrid::vmm_t_batch_with`])
+//!   and scatter-adds them into input space directly, so the
+//!   `[m·P, kh·kw·cin]` adjoint patch matrix never exists.
+//! * [`conv_grad_into`] — the digital weight gradient without the
+//!   patch matrix: stages one patch *column* at a time (`[m·P]` — the
+//!   k-axis twin of the row streaming) and accumulates the outer
+//!   product in exactly the materialized kernel's op order.
+//! * [`im2col_into`] / [`col2im_into`] — the materialized pair,
+//!   retained as the equivalence reference and the
+//!   `HIC_CONV_LOWERING=materialized` fallback.
+//!
+//! Patch staging drops from `O(m·P·k²·cin)` to `O(sample_block ·
+//! tile_rows)` per shard (each generating read stages at most one
+//! `tile_rows` segment in the shard's scratch).
+//!
+//! # Determinism contract
+//!
+//! The streamed path is **bit-identical** to the materialized one —
+//! the executable proof that streaming only changed where patch
+//! elements come from, not the arithmetic
+//! (`rust/tests/prop_conv_equivalence.rs` pins it; the fig4 resnet
+//! golden is unchanged):
+//!
+//! * **RNG stream assignment** is untouched: the forward VMM draws
+//!   per-(`OP_VMM`, tile, `sample_base + patch_row`) sub-streams and
+//!   the transposed VMM per-(`OP_VMM_T`, tile, patch_row) sub-streams
+//!   exactly as before — patch rows *are* the grid's sample axis, and
+//!   the conv layer still offsets `sample_base` by `batch_base · P`.
+//! * **Forward op order** is untouched: same shard decomposition, same
+//!   fused Box–Muller noise fills, same zero-skip micro-kernel, same
+//!   once-per-column ADC; only the origin of the quantized row
+//!   segments differs.
+//! * **Scatter op order** is pinned per input element: for a fixed
+//!   `dx` element and patch row there is at most one contributing tap
+//!   (for fixed `(oy, ox)` and input pixel, `(ky, kx)` is unique), so
+//!   the per-element accumulation order of [`col2im_into`] — ascending
+//!   patch row — is replayed exactly by the fused drain's
+//!   row-major-outer walk, whatever order strips complete in.
+//! * **Gradient op order**: [`conv_grad_into`] keeps the shared
+//!   outer-product kernel's `i`-outer / `j` / ascending-`r` loop nest,
+//!   including multiply-adds of exact-zero padding taps.
+//!
+//! Both materialized kernels shard by **sample** on the
+//! [`WorkerPool`]; every shard writes a disjoint slice and consumes no
+//! RNG, so they are trivially bitwise identical for any worker count.
+//! The streamed scatter inherits the same sharding (one shard per
+//! sample's `dx` slice reading the shared [`TvmmOut`] view).  Buffers
+//! are caller-owned and reused across invocations: the conv layers
+//! keep their staging inside the layer state, so the training loop
 //! allocates nothing per batch.
 //!
-//! The patch matrix is where the grid's sample axis explodes: one conv
-//! layer's VMM runs over [`PatchGeom::patch_rows`]` = m·P` rows, each a
-//! "sample" of the blocked grid kernels.  The tile-stationary
-//! sample-blocked VMM strips (`crossbar::grid`) block exactly this
-//! axis — per (tile, block) the read noise of a whole block of patch
-//! rows is drawn in one fused Box–Muller pass, with each row on its own
-//! `(op, tile, sample)` RNG sub-stream, so the conv path inherits the
-//! bitwise worker-count and block-size invariance unchanged.
-//!
-//! Determinism contract of the scatter: `col2im_into` accumulates f32
-//! partial sums in ascending patch-row order, then kernel-row, then
-//! kernel-column, then channel — a pinned op order mirrored by the
-//! golden oracle (`rust/tests/golden/oracle.py`).
+//! [`CrossbarGrid::vmm_batch_src_into`]:
+//! crate::crossbar::grid::CrossbarGrid::vmm_batch_src_into
+//! [`CrossbarGrid::vmm_t_batch_with`]:
+//! crate::crossbar::grid::CrossbarGrid::vmm_t_batch_with
 
+use crate::crossbar::grid::{PatchSource, TvmmOut};
 use crate::util::pool::WorkerPool;
 
 /// Geometry of one conv lowering: input `[in_h, in_w, cin]` (HWC,
@@ -99,11 +155,116 @@ impl PatchGeom {
     }
 }
 
+/// A [`PatchGeom`] with every derived extent computed once — the
+/// cached per-layer lowering plan.  The geometry accessors recompute
+/// (and re-assert) their extents on every call; conv layers build one
+/// `PatchPlan` at construction and index these fields on the hot path
+/// instead.
+#[derive(Clone, Copy, Debug)]
+pub struct PatchPlan {
+    pub geom: PatchGeom,
+    pub out_h: usize,
+    pub out_w: usize,
+    /// Output positions per sample (`P = out_h · out_w`).
+    pub positions: usize,
+    /// Lowered patch length (`K = kh · kw · cin`).
+    pub patch_len: usize,
+    /// Flat input activation length per sample.
+    pub in_len: usize,
+    /// Flat output activation length per sample.
+    pub out_len: usize,
+}
+
+impl PatchPlan {
+    pub fn new(geom: PatchGeom) -> Self {
+        PatchPlan {
+            geom,
+            out_h: geom.out_h(),
+            out_w: geom.out_w(),
+            positions: geom.positions(),
+            patch_len: geom.patch_len(),
+            in_len: geom.in_len(),
+            out_len: geom.out_len(),
+        }
+    }
+
+    /// Patch-matrix rows of an `m`-sample batch.
+    pub fn patch_rows(&self, m: usize) -> usize {
+        m * self.positions
+    }
+}
+
+/// The streaming forward patch generator: a [`PatchSource`] over the
+/// once-DAC'd input batch (`qimg: [m, in_len]`, HWC, already through
+/// [`DacSpec::convert`]).  `segment(s, r0, len, buf)` stages patch row
+/// `s`'s columns `[r0, r0+len)` — sample `s / P`, output position
+/// `s % P` — by copying contiguous `(ky, kx)` channel runs out of the
+/// staged image (padding taps fill `0.0`, which is exactly what the
+/// DAC maps padding to — see the module docs for why that makes the
+/// source bit-equal to a quantized materialized patch matrix).
+///
+/// [`DacSpec::convert`]: crate::crossbar::quant::DacSpec::convert
+pub struct ConvPatchSource<'a> {
+    plan: &'a PatchPlan,
+    qimg: &'a [f32],
+}
+
+impl<'a> ConvPatchSource<'a> {
+    pub fn new(plan: &'a PatchPlan, qimg: &'a [f32]) -> Self {
+        assert!(plan.in_len > 0 && qimg.len() % plan.in_len == 0,
+                "qimg is not a whole number of [in_len] samples");
+        ConvPatchSource { plan, qimg }
+    }
+}
+
+impl PatchSource for ConvPatchSource<'_> {
+    fn segment<'a>(&'a self, s: usize, r0: usize, len: usize,
+                   buf: &'a mut [f32]) -> &'a [f32] {
+        let p = self.plan;
+        let g = &p.geom;
+        let sample = s / p.positions;
+        let rr = s % p.positions;
+        let (oy, ox) = (rr / p.out_w, rr % p.out_w);
+        let img =
+            &self.qimg[sample * p.in_len..(sample + 1) * p.in_len];
+        let out = &mut buf[..len];
+        // Walk the requested patch columns as contiguous channel runs:
+        // column q = (ky·kw + kx)·cin + ci, so each (ky, kx) tap
+        // contributes one ≤ cin run that is contiguous in the image
+        // row too (HWC).
+        let mut q = r0;
+        let mut filled = 0;
+        while filled < len {
+            let tap = q / g.cin;
+            let ci0 = q % g.cin;
+            let take = (g.cin - ci0).min(len - filled);
+            let (ky, kx) = (tap / g.kw, tap % g.kw);
+            let iy = (oy * g.stride + ky) as isize - g.pad as isize;
+            let ix = (ox * g.stride + kx) as isize - g.pad as isize;
+            let dst = &mut out[filled..filled + take];
+            if iy >= 0 && (iy as usize) < g.in_h
+                && ix >= 0 && (ix as usize) < g.in_w
+            {
+                let src =
+                    ((iy as usize) * g.in_w + ix as usize) * g.cin + ci0;
+                dst.copy_from_slice(&img[src..src + take]);
+            } else {
+                dst.fill(0.0);
+            }
+            q += take;
+            filled += take;
+        }
+        out
+    }
+}
+
 /// Gather `m` samples' input activations (`x: [m, in_len]`, HWC) into
 /// the patch matrix `patches: [m·P, K]` — row `s·P + (oy·out_w + ox)`
 /// holds sample `s`'s receptive field at output position `(oy, ox)` in
 /// `(ky, kx, ci)` order; out-of-bounds taps are zero (padding).
 /// Sample-sharded on `pool`; bitwise identical for any worker count.
+/// The materialized half of the equivalence pair — the streamed
+/// forward ([`ConvPatchSource`]) never calls this.
 pub fn im2col_into(g: &PatchGeom, x: &[f32], m: usize, pool: &WorkerPool,
                    patches: &mut [f32]) {
     let (p, k) = (g.positions(), g.patch_len());
@@ -153,6 +314,9 @@ fn im2col_sample(g: &PatchGeom, x: &[f32], out: &mut [f32]) {
 /// taps are dropped.  Accumulation order per element is ascending patch
 /// row, then `(ky, kx, ci)` — pinned (oracle-mirrored) f32 op order.
 /// Sample-sharded on `pool`; bitwise identical for any worker count.
+/// The materialized half of the adjoint pair — the streamed backward
+/// ([`col2im_stream_into`]) replays the same per-element order without
+/// the `dpatches` intermediate.
 pub fn col2im_into(g: &PatchGeom, dpatches: &[f32], m: usize,
                    pool: &WorkerPool, dx: &mut [f32]) {
     let (p, k) = (g.positions(), g.patch_len());
@@ -195,6 +359,128 @@ fn col2im_sample(g: &PatchGeom, dp: &[f32], dx: &mut [f32]) {
     }
 }
 
+/// The fused backward drain: scatter-add the transposed VMM's
+/// per-(strip, sample) outputs (the [`TvmmOut`] view of
+/// [`CrossbarGrid::vmm_t_batch_with`]) straight into input space
+/// (`dx: [m, in_len]`, zeroed here) — [`col2im_into`] without the
+/// `[m·P, K]` adjoint patch matrix ever existing.
+///
+/// Bit-identity with the materialized pair: for a fixed `dx` element
+/// and patch row `rr` there is at most one contributing tap, so the
+/// per-element f32 accumulation order of `col2im_into` is just
+/// *ascending patch row*.  This drain walks `rr` ascending in the
+/// outer loop (row strips inner), replaying that order exactly; which
+/// strip a tap lives on cannot matter per element.
+///
+/// Sample-sharded on `pool` (each shard owns one sample's `dx` slice
+/// and reads the shared view); bitwise identical for any worker count.
+///
+/// [`CrossbarGrid::vmm_t_batch_with`]:
+/// crate::crossbar::grid::CrossbarGrid::vmm_t_batch_with
+pub fn col2im_stream_into(plan: &PatchPlan, res: &TvmmOut, m: usize,
+                          pool: &WorkerPool, dx: &mut [f32]) {
+    assert_eq!(dx.len(), m * plan.in_len);
+    let mut shards: Vec<&mut [f32]> =
+        dx.chunks_mut(plan.in_len).collect();
+    pool.run(&mut shards, |s, sub| {
+        let g = &plan.geom;
+        sub.fill(0.0);
+        for rr in 0..plan.positions {
+            let row = s * plan.positions + rr;
+            let (oy, ox) = (rr / plan.out_w, rr % plan.out_w);
+            for gr in 0..res.strips() {
+                let (r0, rows) = res.strip_extent(gr);
+                let seg = res.row_segment(gr, row);
+                // Decompose this strip's patch columns [r0, r0+rows)
+                // into contiguous channel runs, exactly like the
+                // forward source; padded runs are dropped (adjoint of
+                // zero-fill).
+                let mut q = r0;
+                let mut off = 0;
+                while off < rows {
+                    let tap = q / g.cin;
+                    let ci0 = q % g.cin;
+                    let take = (g.cin - ci0).min(rows - off);
+                    let (ky, kx) = (tap / g.kw, tap % g.kw);
+                    let iy =
+                        (oy * g.stride + ky) as isize - g.pad as isize;
+                    let ix =
+                        (ox * g.stride + kx) as isize - g.pad as isize;
+                    if iy >= 0 && (iy as usize) < g.in_h
+                        && ix >= 0 && (ix as usize) < g.in_w
+                    {
+                        let dst = ((iy as usize) * g.in_w + ix as usize)
+                            * g.cin + ci0;
+                        for t in 0..take {
+                            sub[dst + t] += seg[off + t];
+                        }
+                    }
+                    q += take;
+                    off += take;
+                }
+            }
+        }
+    });
+}
+
+/// Digital conv weight gradient without the patch matrix:
+/// `grad[i, j] = inv_m · Σ_r patch[r, i] · d_out[r, j]` over the
+/// `rows = m·P` patch rows, staging one patch *column* `i` at a time
+/// into the caller's `col` scratch (`O(m·P)` instead of `O(m·P·K)`).
+/// Keeps the shared outer-product kernel's exact loop nest — `i`
+/// outer, then `j`, then ascending `r` — including multiply-adds of
+/// exact-zero padding taps, so it is bit-identical to running
+/// `outer_product_grad` on a materialized `im2col` matrix.
+pub fn conv_grad_into(plan: &PatchPlan, x: &[f32], d_out: &[f32],
+                      m: usize, inv_m: f32, col: &mut Vec<f32>,
+                      grad: &mut [f32]) {
+    let g = &plan.geom;
+    let (k, n, rows) = (plan.patch_len, g.cout, plan.patch_rows(m));
+    assert_eq!(x.len(), m * plan.in_len);
+    assert!(d_out.len() >= rows * n);
+    assert_eq!(grad.len(), k * n);
+    if col.len() < rows {
+        col.resize(rows, 0.0);
+    }
+    let col = &mut col[..rows];
+    for i in 0..k {
+        // Stage patch column i: the (ky, kx, ci) tap of every patch
+        // row, ascending r (sample, then oy, then ox) — raw input
+        // values, zeros on padding, same as the materialized rows.
+        let tap = i / g.cin;
+        let ci = i % g.cin;
+        let (ky, kx) = (tap / g.kw, tap % g.kw);
+        let mut r = 0;
+        for s in 0..m {
+            let img = &x[s * plan.in_len..(s + 1) * plan.in_len];
+            for oy in 0..plan.out_h {
+                let iy = (oy * g.stride + ky) as isize - g.pad as isize;
+                let row_ok = iy >= 0 && (iy as usize) < g.in_h;
+                for ox in 0..plan.out_w {
+                    let ix =
+                        (ox * g.stride + kx) as isize - g.pad as isize;
+                    col[r] = if row_ok
+                        && ix >= 0 && (ix as usize) < g.in_w
+                    {
+                        img[((iy as usize) * g.in_w + ix as usize)
+                            * g.cin + ci]
+                    } else {
+                        0.0
+                    };
+                    r += 1;
+                }
+            }
+        }
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for (r, &cv) in col.iter().enumerate() {
+                acc += cv * d_out[r * n + j];
+            }
+            grad[i * n + j] = acc * inv_m;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -221,6 +507,15 @@ mod tests {
         // Odd extents floor.
         let g = geom(5, 5, 1, 3, 3, 1, 2, 1);
         assert_eq!((g.out_h(), g.out_w()), (3, 3));
+        // The cached plan mirrors every accessor.
+        let g = geom(8, 8, 3, 3, 3, 16, 2, 1);
+        let p = PatchPlan::new(g);
+        assert_eq!((p.out_h, p.out_w), (g.out_h(), g.out_w()));
+        assert_eq!(p.positions, g.positions());
+        assert_eq!(p.patch_len, g.patch_len());
+        assert_eq!(p.in_len, g.in_len());
+        assert_eq!(p.out_len, g.out_len());
+        assert_eq!(p.patch_rows(3), g.patch_rows(3));
     }
 
     #[test]
@@ -294,5 +589,81 @@ mod tests {
         let a = run(1);
         assert_eq!(a, run(2));
         assert_eq!(a, run(4));
+    }
+
+    #[test]
+    fn patch_source_segments_match_materialized_rows() {
+        // Every (row, segment) read of the streaming source must
+        // reproduce the materialized patch matrix bytes — including
+        // segments that straddle tap and padding boundaries.
+        for (stride, pad) in [(1usize, 1usize), (2, 1), (1, 0)] {
+            let g = geom(4, 5, 3, 3, 3, 2, stride, pad);
+            let plan = PatchPlan::new(g);
+            let m = 2;
+            let x: Vec<f32> = (0..m * plan.in_len)
+                .map(|i| (((i * 7) % 19) as f32 - 9.0) / 8.0)
+                .collect();
+            let mut px =
+                vec![0.0f32; plan.patch_rows(m) * plan.patch_len];
+            im2col_into(&g, &x, m, &WorkerPool::serial(), &mut px);
+            let src = ConvPatchSource::new(&plan, &x);
+            let k = plan.patch_len;
+            let mut buf = vec![0.0f32; k];
+            for row in 0..plan.patch_rows(m) {
+                // Tile-shaped reads at several strip widths, ragged
+                // tails included.
+                for tile_rows in [1usize, 4, 7, k] {
+                    let mut r0 = 0;
+                    while r0 < k {
+                        let len = tile_rows.min(k - r0);
+                        let seg = src.segment(row, r0, len, &mut buf);
+                        assert_eq!(seg,
+                                   &px[row * k + r0..row * k + r0 + len],
+                                   "stride={stride} pad={pad} \
+                                    row={row} r0={r0} len={len}");
+                        r0 += len;
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn conv_grad_matches_outer_product_on_materialized_patches() {
+        // Column-streamed gradient == the shared outer-product kernel
+        // on the materialized patch matrix, bit for bit.
+        for (stride, pad) in [(1usize, 1usize), (2, 1)] {
+            let g = geom(4, 4, 2, 3, 3, 3, stride, pad);
+            let plan = PatchPlan::new(g);
+            let m = 2;
+            let rows = plan.patch_rows(m);
+            let (k, n) = (plan.patch_len, g.cout);
+            let x: Vec<f32> = (0..m * plan.in_len)
+                .map(|i| (((i * 5) % 13) as f32 - 6.0) / 8.0)
+                .collect();
+            let d: Vec<f32> = (0..rows * n)
+                .map(|i| (((i * 11) % 17) as f32 - 8.0) / 16.0)
+                .collect();
+            let mut px = vec![0.0f32; rows * k];
+            im2col_into(&g, &x, m, &WorkerPool::serial(), &mut px);
+            let inv_m = 1.0 / rows as f32;
+            // Reference: the exact loop nest of the shared
+            // outer-product kernel (nn::graph::outer_product_grad).
+            let mut want = vec![0.0f32; k * n];
+            for i in 0..k {
+                for j in 0..n {
+                    let mut acc = 0.0f32;
+                    for r in 0..rows {
+                        acc += px[r * k + i] * d[r * n + j];
+                    }
+                    want[i * n + j] = acc * inv_m;
+                }
+            }
+            let mut col = Vec::new();
+            let mut got = vec![0.0f32; k * n];
+            conv_grad_into(&plan, &x, &d, m, inv_m, &mut col,
+                           &mut got);
+            assert_eq!(got, want, "stride={stride} pad={pad}");
+        }
     }
 }

@@ -47,6 +47,26 @@
 //! every strip — `DacSpec::convert` is a pure function, so the hoist is
 //! value-neutral.
 //!
+//! # Streaming entry points (weight-stationary conv lowering)
+//!
+//! The forward micro-kernel only ever touches one `[r0, r0 + tile_rows)`
+//! segment of one input row at a time, so it does not actually need the
+//! whole `[m, k]` matrix staged: [`CrossbarGrid::vmm_batch_src_into`]
+//! runs the identical phase structure against a [`PatchSource`] that
+//! produces each quantized segment on demand.  The dense path's hoisted
+//! DAC is itself a `PatchSource` (borrowed slices, zero copy), and the
+//! conv lowering's patch generator (`crossbar::conv::ConvPatchSource`)
+//! gathers segments from a once-DAC'd image instead of a materialized
+//! im2col matrix.  Symmetrically, [`CrossbarGrid::vmm_t_batch_with`]
+//! exposes the transposed kernel's per-(strip, sample) ADC'd outputs
+//! through a read-only [`TvmmOut`] view *before* the logical gather, so
+//! a caller can drain them straight into its own layout (the conv
+//! lowering's fused col2im scatter) — `vmm_t_batch_into` is the
+//! copy-gather drain.  Neither hook moves an RNG call or reorders an
+//! f32 op: sources/drains only change where values come from and go to,
+//! which is why the streamed conv path is bit-identical to the
+//! materialized one.
+//!
 //! # RNG stream discipline
 //!
 //! Shards never share a generator; every stream is counter-based (see
@@ -186,8 +206,11 @@ struct VmmShardScratch {
     rngs: Vec<Pcg64>,
     /// the shard's `[B, strip_cols]` / `[B, strip_rows]` output slice
     out: Vec<f32>,
-    /// per-tile quantized input staging (sample-major reference
-    /// kernels only — the blocked kernels read the hoisted batch DAC)
+    /// per-tile quantized input staging: the sample-major reference
+    /// kernels' DAC buffer, and the blocked forward kernel's
+    /// [`PatchSource::segment`] scratch (a generating source stages at
+    /// most one `tile_rows` segment here per read; the dense source
+    /// returns borrows and never touches it)
     qbuf: Vec<f32>,
 }
 
@@ -230,6 +253,85 @@ pub struct GridScratch {
     /// state kernels, decode targets for `drift_into` — tiles are
     /// sized to their used extent, so one buffer serves both roles)
     subs: Vec<Vec<f32>>,
+}
+
+/// A provider of **quantized** (post-DAC) input-row segments for the
+/// blocked forward VMM ([`CrossbarGrid::vmm_batch_src_into`]).  The
+/// micro-kernel asks for exactly the `[r0, r0 + len)` slice of logical
+/// row `s` that the current row-tile consumes; an implementation either
+/// returns a borrow of already-staged storage (the dense path's hoisted
+/// batch DAC — zero copy) or generates the segment into `buf` on the
+/// fly (the conv patch path, which gathers from a once-DAC'd image so
+/// the `[m·P, kh·kw·cin]` patch matrix never exists).
+///
+/// Contract: the returned values must be **exactly** what a staged
+/// `[m, k]` matrix would hold at those positions (`DacSpec::convert`
+/// applied elementwise) — the kernel's RNG streams and f32 op order
+/// never depend on the source, so a value-faithful source is
+/// bit-identical to staging.  Sources must be `Sync` (segments are
+/// pulled concurrently from strip shards) and pure: the same
+/// `(s, r0, len)` yields the same values in any call order.
+pub trait PatchSource: Sync {
+    /// Quantized elements `[r0, r0 + len)` of logical input row `s`,
+    /// either borrowed from `self` or staged into `buf[..len]`
+    /// (`buf.len() >= len`, per-shard scratch owned by the kernel).
+    fn segment<'a>(&'a self, s: usize, r0: usize, len: usize,
+                   buf: &'a mut [f32]) -> &'a [f32];
+}
+
+/// The staged dense case: segments are borrowed slices of the hoisted
+/// batch-DAC buffer, so `vmm_batch_base_into` through the generic
+/// kernel is the pre-streaming code path, zero-copy.
+struct DenseRows<'a> {
+    qin: &'a [f32],
+    k: usize,
+}
+
+impl PatchSource for DenseRows<'_> {
+    #[inline]
+    fn segment<'a>(&'a self, s: usize, r0: usize, len: usize,
+                   _buf: &'a mut [f32]) -> &'a [f32] {
+        &self.qin[s * self.k + r0..s * self.k + r0 + len]
+    }
+}
+
+/// Read-only view of one transposed VMM's shard outputs, handed to the
+/// drain closure of [`CrossbarGrid::vmm_t_batch_with`] before anything
+/// is gathered: [`TvmmOut::row_segment`]`(gr, s)` is sample `s`'s ADC'd
+/// output segment for row-strip `gr`, covering the logical rows
+/// [`TvmmOut::strip_extent`]`(gr)`.  The conv lowering's fused col2im
+/// drain scatters straight from these segments into input space, so the
+/// `[m·P, kh·kw·cin]` patch-gradient intermediate never exists; the
+/// standard drain copies them into the logical `[m, k]` matrix.  The
+/// view is `Sync` — drains may shard over it on a [`WorkerPool`].
+pub struct TvmmOut<'a> {
+    shards: &'a [VmmShardScratch],
+    mapping: &'a LayerMapping,
+    block: usize,
+    nblocks: usize,
+}
+
+impl TvmmOut<'_> {
+    /// Number of row strips (`⌈k / tile_rows⌉`).
+    pub fn strips(&self) -> usize {
+        self.mapping.grid_rows()
+    }
+
+    /// `(first logical row, row count)` covered by strip `gr`.
+    pub fn strip_extent(&self, gr: usize) -> (usize, usize) {
+        let t = &self.mapping.tiles[self.mapping.tile_index(gr, 0)];
+        (self.mapping.origin(t).0, t.used_rows)
+    }
+
+    /// Sample `s`'s ADC'd output segment for row-strip `gr` (length
+    /// `strip_extent(gr).1`).
+    pub fn row_segment(&self, gr: usize, s: usize) -> &[f32] {
+        let rows = self.mapping.tiles[self.mapping.tile_index(gr, 0)]
+            .used_rows;
+        let (b, i) = (s / self.block, s % self.block);
+        let strip = &self.shards[gr * self.nblocks + b];
+        &strip.out[i * rows..(i + 1) * rows]
+    }
 }
 
 /// One grid's hybrid update packaged as a self-contained, `Send`
@@ -543,7 +645,6 @@ impl CrossbarGrid {
                    "scratch does not match this grid");
 
         let GridScratch { drift, shards, qin, .. } = scratch;
-        let tiles = &self.tiles;
 
         // Phase 1: drift both conductance planes once per batch.
         self.drift_phase(t_now, pool, drift);
@@ -556,6 +657,43 @@ impl CrossbarGrid {
         for (q, &v) in qin[..m * k].iter_mut().zip(x) {
             *q = dac.convert(v);
         }
+
+        let src = DenseRows { qin: &qin[..m * k], k };
+        self.vmm_fwd_blocked(&src, m, round, sample_base, pool, drift,
+                             shards, out);
+    }
+
+    /// Forward VMM fed by a [`PatchSource`] instead of a staged
+    /// `[m, k]` input matrix — the weight-stationary streaming entry
+    /// point of the conv lowering (`m` logical rows, `out: [m, n]`).
+    /// Identical phase structure, shard decomposition, RNG streams and
+    /// f32 op order to [`CrossbarGrid::vmm_batch_base_into`]; only
+    /// where the quantized row segments come from changes, so a source
+    /// that reproduces the staged values is **bit-identical** to
+    /// staging (`rust/tests/prop_conv_equivalence.rs` pins this for
+    /// the conv patch source).
+    pub fn vmm_batch_src_into<S: PatchSource>(
+        &self, src: &S, m: usize, t_now: f32, round: u64,
+        sample_base: u64, pool: &WorkerPool, scratch: &mut GridScratch,
+        out: &mut [f32]) {
+        assert_eq!(out.len(), m * self.n());
+        assert_eq!(scratch.drift.len(), self.tiles.len(),
+                   "scratch does not match this grid");
+        let GridScratch { drift, shards, .. } = scratch;
+        self.drift_phase(t_now, pool, drift);
+        self.vmm_fwd_blocked(src, m, round, sample_base, pool, drift,
+                             shards, out);
+    }
+
+    /// Phase 2 + gather of the blocked forward kernel, generic over the
+    /// row-segment source (monomorphized, so the dense instantiation is
+    /// the pre-streaming codegen).  Phase 1 (drift) must have run.
+    fn vmm_fwd_blocked<S: PatchSource>(
+        &self, src: &S, m: usize, round: u64, sample_base: u64,
+        pool: &WorkerPool, drift: &[TileDrift],
+        shards: &mut Vec<VmmShardScratch>, out: &mut [f32]) {
+        let n = self.n();
+        let tiles = &self.tiles;
 
         // Phase 2: tile-stationary sample-blocked strips
         // (shard = column strip × sample block).
@@ -570,8 +708,6 @@ impl CrossbarGrid {
         let seed = self.seed;
         let mapping = &self.mapping;
         let adc = self.adc;
-        let drift_ro: &[TileDrift] = &drift[..];
-        let qin_ro: &[f32] = &qin[..m * k];
         pool.run(&mut shards[..nshards], |sh, strip| {
             let c = sh / nblocks;
             let b = sh % nblocks;
@@ -579,14 +715,16 @@ impl CrossbarGrid {
             let bs = block.min(m - s0);
             let strip_cols =
                 mapping.tiles[mapping.tile_index(0, c)].used_cols;
-            grow(&mut strip.out, bs * strip_cols);
-            strip.out[..bs * strip_cols].fill(0.0);
+            let VmmShardScratch { w, noise, rngs, out: sout, qbuf } =
+                strip;
+            grow(sout, bs * strip_cols);
+            sout[..bs * strip_cols].fill(0.0);
             for gr in 0..grid_r {
                 let ti = mapping.tile_index(gr, c);
                 let tile = &tiles[ti];
                 let (tr, tc) = (tile.rows(), tile.cols());
                 let nt = tr * tc;
-                let d = &drift_ro[ti];
+                let d = &drift[ti];
                 let msb = &tile.weights.msb;
                 // One fused Box–Muller pass draws the whole block's
                 // read noise for this tile: an even 2·nt segment per
@@ -595,24 +733,24 @@ impl CrossbarGrid {
                 let noisy = msb.plus.params.read_noise
                     || msb.minus.params.read_noise;
                 if noisy {
-                    grow(&mut strip.noise, bs * 2 * nt);
-                    strip.rngs.clear();
-                    strip.rngs.extend((s0..s0 + bs).map(|s| {
+                    grow(noise, bs * 2 * nt);
+                    rngs.clear();
+                    rngs.extend((s0..s0 + bs).map(|s| {
                         op_sample_rng(seed, round, OP_VMM, ti,
                                       sample_base.wrapping_add(s as u64))
                     }));
-                    fill_gaussian_block(&mut strip.rngs, 2 * nt,
-                                        &mut strip.noise[..bs * 2 * nt],
+                    fill_gaussian_block(rngs, 2 * nt,
+                                        &mut noise[..bs * 2 * nt],
                                         0.0, 1.0);
                 }
-                grow(&mut strip.w, nt);
+                grow(w, nt);
                 if !noisy {
                     // Noise-free read: identical for every sample —
                     // materialize the plane once per (tile, shard).
                     read_noisy_weights_prefilled(msb, &d.gp, &d.gm,
-                                                 &[],
-                                                 &mut strip.w[..nt]);
+                                                 &[], &mut w[..nt]);
                 }
+                grow(qbuf, tr);
                 let (r0, _) = mapping.origin(&mapping.tiles[ti]);
                 // [B, tr] × [tr, tc] micro-kernel: per sample a fresh
                 // stochastic read, then row-major accumulation into
@@ -622,12 +760,11 @@ impl CrossbarGrid {
                     if noisy {
                         read_noisy_weights_prefilled(
                             msb, &d.gp, &d.gm,
-                            &strip.noise[i * 2 * nt..(i + 1) * 2 * nt],
-                            &mut strip.w[..nt]);
+                            &noise[i * 2 * nt..(i + 1) * 2 * nt],
+                            &mut w[..nt]);
                     }
-                    let w = &strip.w[..nt];
-                    let xs = &qin_ro[s * k + r0..s * k + r0 + tr];
-                    let y = &mut strip.out
+                    let xs = src.segment(s, r0, tr, qbuf);
+                    let y = &mut sout
                         [i * strip_cols..(i + 1) * strip_cols];
                     for (r, &xv) in xs.iter().enumerate() {
                         if xv == 0.0 {
@@ -645,7 +782,7 @@ impl CrossbarGrid {
             // row-tiles — the modeling choice that keeps the grid
             // bit-compatible with a whole-matrix single tile; a
             // per-row-tile ADC is a future knob).
-            for yc in strip.out[..bs * strip_cols].iter_mut() {
+            for yc in sout[..bs * strip_cols].iter_mut() {
                 *yc = adc.convert(*yc);
             }
         });
@@ -689,9 +826,37 @@ impl CrossbarGrid {
                             round: u64, pool: &WorkerPool,
                             scratch: &mut GridScratch, out: &mut [f32]) {
         let k = self.k();
+        assert_eq!(out.len(), m * k);
+        self.vmm_t_batch_with(e, m, t_now, round, pool, scratch, |res| {
+            // The default drain is the logical gather: strip-major
+            // disjoint row-segment copies into `[m, k]` — byte-equal
+            // to gathering in shard enumeration order because every
+            // (strip, sample) writes a distinct segment.
+            for gr in 0..res.strips() {
+                let (r0, rows) = res.strip_extent(gr);
+                for s in 0..m {
+                    out[s * k + r0..s * k + r0 + rows]
+                        .copy_from_slice(res.row_segment(gr, s));
+                }
+            }
+        });
+    }
+
+    /// Transposed batched VMM that hands its per-(strip, sample) ADC'd
+    /// outputs to a caller-supplied `drain` **instead of** gathering
+    /// them into a `[m, k]` matrix — the streaming backward entry point
+    /// of the conv lowering, whose fused col2im scatter consumes the
+    /// [`TvmmOut`] view directly so the `[m·P, k²·cin]` adjoint patch
+    /// matrix never exists.  Phases 1–2 (drift, DAC hoist, sharded
+    /// transposed micro-kernel, per-row ADC) are byte-identical to
+    /// [`CrossbarGrid::vmm_t_batch_into`]; only what happens to the
+    /// finished shard outputs differs.
+    pub fn vmm_t_batch_with(&self, e: &[f32], m: usize, t_now: f32,
+                            round: u64, pool: &WorkerPool,
+                            scratch: &mut GridScratch,
+                            drain: impl FnOnce(&TvmmOut)) {
         let n = self.n();
         assert_eq!(e.len(), m * n);
-        assert_eq!(out.len(), m * k);
         assert_eq!(scratch.drift.len(), self.tiles.len(),
                    "scratch does not match this grid");
 
@@ -797,20 +962,17 @@ impl CrossbarGrid {
             }
         });
 
-        // Serial deterministic gather: shard outputs → logical [m, k].
-        for (sh, strip) in shards[..nshards].iter().enumerate() {
-            let gr = sh / nblocks;
-            let s0 = (sh % nblocks) * block;
-            let bs = block.min(m - s0);
-            let t0 = &self.mapping.tiles[self.mapping.tile_index(gr, 0)];
-            let (r0, _) = self.mapping.origin(t0);
-            let strip_rows = t0.used_rows;
-            for i in 0..bs {
-                let s = s0 + i;
-                out[s * k + r0..s * k + r0 + strip_rows].copy_from_slice(
-                    &strip.out[i * strip_rows..(i + 1) * strip_rows]);
-            }
-        }
+        // Serial deterministic drain: the caller reads the finished
+        // shard outputs through the read-only view (the gather of
+        // `vmm_t_batch_into`, or the conv lowering's fused col2im
+        // scatter).
+        let res = TvmmOut {
+            shards: &shards[..nshards],
+            mapping: &self.mapping,
+            block,
+            nblocks,
+        };
+        drain(&res);
     }
 
     /// Allocating wrapper of [`CrossbarGrid::vmm_t_batch_into`].
@@ -1219,6 +1381,70 @@ mod tests {
                                   &mut row);
             assert_eq!(&c[r * 9..(r + 1) * 9], &row[..], "row {r}");
         }
+    }
+
+    #[test]
+    fn patch_source_matches_staged_input_noisy() {
+        // A generating PatchSource that reproduces the staged DAC'd
+        // values is bit-identical to the dense staged path — with full
+        // read noise on, so the RNG stream assignment is pinned too.
+        struct CopySrc<'a> {
+            qin: &'a [f32],
+            k: usize,
+        }
+        impl PatchSource for CopySrc<'_> {
+            fn segment<'a>(&'a self, s: usize, r0: usize, len: usize,
+                           buf: &'a mut [f32]) -> &'a [f32] {
+                buf[..len].copy_from_slice(
+                    &self.qin[s * self.k + r0..s * self.k + r0 + len]);
+                &buf[..len]
+            }
+        }
+        let g = noisy_grid();
+        let m = 4;
+        let x: Vec<f32> =
+            (0..m * 12).map(|i| ((i % 9) as f32 - 4.0) / 4.0).collect();
+        let qin: Vec<f32> =
+            x.iter().map(|&v| g.dac.convert(v)).collect();
+        let src = CopySrc { qin: &qin, k: 12 };
+        for workers in [1usize, 4] {
+            let pool = WorkerPool::new(workers);
+            let mut scratch = g.scratch();
+            let mut a = vec![0.0f32; m * 9];
+            let mut b = vec![0.0f32; m * 9];
+            g.vmm_batch_base_into(&x, m, 2.0, 5, 7, &pool,
+                                  &mut scratch, &mut a);
+            g.vmm_batch_src_into(&src, m, 2.0, 5, 7, &pool,
+                                 &mut scratch, &mut b);
+            assert_eq!(a, b, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn tvmm_drain_view_matches_gather() {
+        // Reconstructing [m, k] from the TvmmOut view — in a different
+        // iteration order than the built-in gather — produces the same
+        // bytes: the view exposes finished per-(strip, sample)
+        // segments, so drain order cannot matter.
+        let g = noisy_grid();
+        let m = 5;
+        let e: Vec<f32> =
+            (0..m * 9).map(|i| ((i % 7) as f32 - 3.0) / 4.0).collect();
+        let pool = WorkerPool::new(4);
+        let mut scratch = g.scratch();
+        let mut at = vec![0.0f32; m * 12];
+        g.vmm_t_batch_into(&e, m, 2.0, 3, &pool, &mut scratch, &mut at);
+        let mut bt = vec![0.0f32; m * 12];
+        g.vmm_t_batch_with(&e, m, 2.0, 3, &pool, &mut scratch, |res| {
+            for s in (0..m).rev() {
+                for gr in (0..res.strips()).rev() {
+                    let (r0, rows) = res.strip_extent(gr);
+                    bt[s * 12 + r0..s * 12 + r0 + rows]
+                        .copy_from_slice(res.row_segment(gr, s));
+                }
+            }
+        });
+        assert_eq!(at, bt);
     }
 
     #[test]

@@ -26,12 +26,16 @@
 //!   per-(op, tile, sample) RNG streams — bitwise identical for any
 //!   worker count and any sample-block size, bit-compatible with the
 //!   serial single-tile path in the noise-free domain
-//! * [`conv`] — im2col/col2im patch lowering for convolution-on-grid:
-//!   sample-sharded, RNG-free patch gather/scatter kernels around the
-//!   grid VMMs, so a conv layer is one `[kh·kw·cin, cout]` analog VMM
-//!   per patch (forward) and one transposed VMM plus adjoint scatter
-//!   (backward) — the worker-count determinism contract extends to the
-//!   patch shards
+//! * [`conv`] — weight-stationary streaming patch lowering for
+//!   convolution-on-grid: the forward VMM pulls patch segments on
+//!   demand from a once-DAC'd image (`ConvPatchSource`, a grid
+//!   [`grid::PatchSource`]) and the backward adjoint scatter drains
+//!   the transposed VMM's strip outputs directly
+//!   (`col2im_stream_into` over [`grid::TvmmOut`]), so a conv layer is
+//!   one `[kh·kw·cin, cout]` analog VMM per patch with no
+//!   materialized patch matrix — bit-identical to the retained
+//!   im2col/col2im reference pair, and the worker-count determinism
+//!   contract extends to the patch shards
 //! * [`energy`] — energy / latency / area estimator with published-order
 //!   constants (ISAAC-class periphery), used for the architecture
 //!   comparisons in DESIGN.md and the `crossbar_explorer` example
@@ -43,9 +47,9 @@ pub mod mapper;
 pub mod quant;
 pub mod tile;
 
-pub use conv::PatchGeom;
+pub use conv::{ConvPatchSource, PatchGeom, PatchPlan};
 pub use energy::{EnergyModel, EnergyReport};
-pub use grid::{CrossbarGrid, GridScratch, GridView};
+pub use grid::{CrossbarGrid, GridScratch, GridView, PatchSource, TvmmOut};
 pub use mapper::{LayerMapping, TileCoord, TilingPolicy};
 pub use quant::{AdcSpec, DacSpec};
 pub use tile::{CrossbarTile, TileScratch};

@@ -111,6 +111,12 @@ pub(crate) fn read_noisy_weights(msb: &DifferentialPair, gp: &[f32],
 /// [`read_noisy_weights`]'s, so blocked and sample-major reads agree on
 /// identical deviates; with read noise off `noise` may be empty (no
 /// deviates are consumed, matching the noise-free RNG contract).
+/// The weight-stationary streaming conv path rides on this too: the
+/// grid's generic forward kernel performs the identical prefilled
+/// reads whether its input segments were staged
+/// (`vmm_batch_base_into`) or generated by a patch source
+/// (`vmm_batch_src_into`) — the read sequence never sees the
+/// difference.
 pub(crate) fn read_noisy_weights_prefilled(msb: &DifferentialPair,
                                            gp: &[f32], gm: &[f32],
                                            noise: &[f32],

@@ -20,22 +20,29 @@
 //! * [`GraphNet`] / [`Layer`] — the device network.  Every weighted
 //!   layer owns a [`CrossbarGrid`] with `w_max = w_scale/√fan_in` and
 //!   its own grid seed (`layer_seed(seed, weighted_index)`); `Conv2d`
-//!   is lowered through the deterministic im2col/col2im patch kernels
-//!   (`crossbar::conv`), so each kernel becomes a `[kh·kw·cin, cout]`
-//!   analog VMM over `m·P` patch rows; backprop runs the transposed
-//!   analog VMM (`vmm_t_batch_into`) plus a col2im scatter, and weight
-//!   gradients are digital patch outer products accumulated into the
-//!   same hybrid LSB/MSB update.
+//!   is lowered **weight-stationary** onto one `[kh·kw·cin, cout]`
+//!   grid (`crossbar::conv`): the forward VMM streams patch segments
+//!   on demand from the layer's once-DAC'd input image
+//!   ([`ConvPatchSource`] through `vmm_batch_src_into`), backprop
+//!   drains the transposed analog VMM (`vmm_t_batch_with`) straight
+//!   through the fused col2im scatter, and the digital weight gradient
+//!   streams one patch column at a time — no `[m·P, K]` patch matrix
+//!   exists on the default path.  [`ConvLowering`] keeps the PR-4
+//!   materialized im2col/col2im pair selectable
+//!   (`HIC_CONV_LOWERING=materialized`); the two are **bit-identical**
+//!   — a pure perf knob.  Each conv layer caches its [`PatchPlan`]
+//!   (all derived lowering extents) at build time instead of
+//!   re-deriving geometry every forward/backward call.
 //!
 //! RNG op-stream assignment: the patch kernels consume no RNG, and the
-//! patch-matrix VMM is one grid invocation of the tile-stationary
+//! patch VMM is one grid invocation of the tile-stationary
 //! sample-blocked strips (shard = column/row strip × sample block, one
 //! `(op, tile, sample)` read-noise sub-stream per patch row on the
-//! grid's `OP_VMM` / `OP_VMM_T` op tags), so the grid determinism
-//! contract — bitwise identical for any worker count and any
-//! sample-block size — extends to the conv path unchanged
-//! (`rust/tests/prop_conv_equivalence.rs`).  All buffers (patch
-//! matrices, activation caches, deltas) live in the layer state and are
+//! grid's `OP_VMM` / `OP_VMM_T` op tags) whatever the lowering, so the
+//! grid determinism contract — bitwise identical for any worker count
+//! and any sample-block size — extends to the conv path unchanged
+//! (`rust/tests/prop_conv_equivalence.rs`).  All buffers (image/column
+//! staging, activation caches, deltas) live in the layer state and are
 //! reused across steps: the training loop allocates nothing per batch
 //! once warm.
 //!
@@ -56,7 +63,9 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use crate::crossbar::conv::{col2im_into, im2col_into, PatchGeom};
+use crate::crossbar::conv::{col2im_into, col2im_stream_into,
+                            conv_grad_into, im2col_into,
+                            ConvPatchSource, PatchGeom, PatchPlan};
 use crate::crossbar::grid::CrossbarGrid;
 use crate::crossbar::{AdcSpec, DacSpec, GridScratch, TilingPolicy};
 use crate::hic::weight::HicGeometry;
@@ -773,21 +782,63 @@ impl DenseLayer {
     }
 }
 
-/// Convolution layer: im2col lowering onto one `[kh·kw·cin, cout]` grid.
+/// How a [`ConvLayer`] lowers its patches onto the grid.  Both paths
+/// are **bit-identical** (`rust/tests/prop_conv_equivalence.rs`) —
+/// this is a performance knob, never a correctness one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConvLowering {
+    /// Weight-stationary streaming (the default): forward patch
+    /// segments generated on demand from the once-DAC'd input image
+    /// ([`ConvPatchSource`]), backward col2im fused into the
+    /// transposed-VMM drain, weight gradient streamed one patch
+    /// column at a time — the `[m·P, K]` patch matrix never exists.
+    Streamed,
+    /// The PR-4 materialize-then-VMM path (im2col / col2im), retained
+    /// as the equivalence reference and bench baseline.
+    Materialized,
+}
+
+impl ConvLowering {
+    /// `HIC_CONV_LOWERING=materialized` selects the materialized
+    /// path; anything else (including unset) streams.
+    pub fn from_env() -> Self {
+        match std::env::var("HIC_CONV_LOWERING") {
+            Ok(v) if v == "materialized" => ConvLowering::Materialized,
+            _ => ConvLowering::Streamed,
+        }
+    }
+}
+
+/// Convolution layer: weight-stationary lowering onto one
+/// `[kh·kw·cin, cout]` grid (see [`ConvLowering`] for the two
+/// bit-identical patch paths).
 pub struct ConvLayer {
     pub widx: usize,
     pub geom: PatchGeom,
+    /// cached lowering plan — every derived extent computed once at
+    /// build time (out_h/out_w, positions, patch_len, in/out_len)
+    plan: PatchPlan,
+    lowering: ConvLowering,
     pub grid: CrossbarGrid,
     scratch: GridScratch,
-    /// cached patch matrix `[m·P, K]` (forward input and backward
-    /// outer product)
+    /// streamed path: cached raw input `[m, in_len]` (the gradient
+    /// stage's patch-column staging source)
+    xin: Vec<f32>,
+    /// streamed path: once-DAC'd input image `[m, in_len]` (the
+    /// forward patch source — each pixel quantized once, not per tap)
+    qimg: Vec<f32>,
+    /// streamed path: one patch-column staging buffer `[m·P]`
+    gcol: Vec<f32>,
+    /// materialized path: cached patch matrix `[m·P, K]` (forward
+    /// input and backward outer product)
     patches: Vec<f32>,
+    /// materialized path: transposed-VMM patch-gradient staging
+    /// `[m·P, K]`
+    dpatches: Vec<f32>,
     /// digital weight gradient `[K, cout]`
     grad: Vec<f32>,
     /// gain-scaled error staging `[m·P, cout]`
     escaled: Vec<f32>,
-    /// transposed-VMM patch-gradient staging `[m·P, K]`
-    dpatches: Vec<f32>,
     /// pipelined-backward error snapshot `[m·P, cout]` (see
     /// [`DenseLayer`]'s `dout`)
     dout: Vec<f32>,
@@ -797,62 +848,134 @@ impl ConvLayer {
     fn new(widx: usize, geom: PatchGeom, params: PcmParams,
            policy: TilingPolicy, w_scale: f32, seed: u64,
            pool: &WorkerPool) -> Self {
-        let (k, n) = (geom.patch_len(), geom.cout);
+        let plan = PatchPlan::new(geom);
+        let (k, n) = (plan.patch_len, geom.cout);
         let grid = make_grid(params, policy, w_scale, seed, widx, k, n,
                              pool);
         let scratch = grid.scratch();
         ConvLayer {
-            widx, geom, grid, scratch,
+            widx, geom, plan,
+            lowering: ConvLowering::from_env(),
+            grid, scratch,
+            xin: Vec::new(),
+            qimg: Vec::new(),
+            gcol: Vec::new(),
             patches: Vec::new(),
+            dpatches: Vec::new(),
             grad: vec![0.0; k * n],
             escaled: Vec::new(),
-            dpatches: Vec::new(),
             dout: Vec::new(),
         }
     }
 
+    /// Select the patch lowering (bit-identical paths — a perf knob).
+    pub fn set_lowering(&mut self, lowering: ConvLowering) {
+        self.lowering = lowering;
+    }
+
+    /// Bytes currently held by this layer's patch-lowering staging
+    /// buffers (patch matrices on the materialized path; image/column
+    /// staging on the streamed path).  Error/output buffers common to
+    /// both paths are excluded so the metric isolates the footprint
+    /// the streaming rework removes — the memory axis of
+    /// `benches/bench_conv.rs`.
+    pub fn patch_buf_bytes(&self) -> usize {
+        (self.patches.capacity()
+            + self.dpatches.capacity()
+            + self.xin.capacity()
+            + self.qimg.capacity()
+            + self.gcol.capacity())
+            * std::mem::size_of::<f32>()
+    }
+
     fn forward(&mut self, x: &[f32], m: usize, ctx: &mut FwdCtx,
                out: &mut Vec<f32>) {
-        let k = self.geom.patch_len();
         // The blocked grid kernel treats every patch row as a sample;
         // the sample-base offset scales by the patch count so patch p
         // of global sample g draws stream id g·P + p (see FwdCtx).
-        let rows = self.geom.patch_rows(m);
-        let positions = self.geom.patch_rows(1) as u64;
-        ensure(&mut self.patches, rows * k);
-        im2col_into(&self.geom, &x[..m * self.geom.in_len()], m,
-                    ctx.pool, &mut self.patches[..rows * k]);
-        ensure(out, rows * self.geom.cout);
-        self.grid.vmm_batch_base_into(
-            &self.patches[..rows * k], rows, ctx.t_now, ctx.round,
-            ctx.sample_base.wrapping_mul(positions), ctx.pool,
-            &mut self.scratch, &mut out[..rows * self.geom.cout]);
-        weighted_out(&mut ctx.gain, self.widx,
-                     &mut out[..rows * self.geom.cout]);
+        let rows = self.plan.patch_rows(m);
+        let co = self.plan.geom.cout;
+        let nin = m * self.plan.in_len;
+        let base =
+            ctx.sample_base.wrapping_mul(self.plan.positions as u64);
+        ensure(out, rows * co);
+        match self.lowering {
+            ConvLowering::Streamed => {
+                ensure(&mut self.xin, nin);
+                self.xin[..nin].copy_from_slice(&x[..nin]);
+                // DAC the image once per pixel; the patch source then
+                // gathers quantized segments on demand.  Bit-equal to
+                // quantizing a materialized patch matrix because the
+                // DAC maps 0.0 (padding) to exactly 0.0.
+                ensure(&mut self.qimg, nin);
+                let dac = self.grid.dac;
+                for (q, &v) in self.qimg[..nin]
+                    .iter_mut()
+                    .zip(&self.xin[..nin])
+                {
+                    *q = dac.convert(v);
+                }
+                let plan = self.plan;
+                let src =
+                    ConvPatchSource::new(&plan, &self.qimg[..nin]);
+                self.grid.vmm_batch_src_into(
+                    &src, rows, ctx.t_now, ctx.round, base, ctx.pool,
+                    &mut self.scratch, &mut out[..rows * co]);
+            }
+            ConvLowering::Materialized => {
+                let k = self.plan.patch_len;
+                ensure(&mut self.patches, rows * k);
+                im2col_into(&self.geom, &x[..nin], m, ctx.pool,
+                            &mut self.patches[..rows * k]);
+                self.grid.vmm_batch_base_into(
+                    &self.patches[..rows * k], rows, ctx.t_now,
+                    ctx.round, base, ctx.pool, &mut self.scratch,
+                    &mut out[..rows * co]);
+            }
+        }
+        weighted_out(&mut ctx.gain, self.widx, &mut out[..rows * co]);
+    }
+
+    /// Digital weight gradient: patch outer product summed over
+    /// samples *and* positions, batch-mean (1/m, the dense convention
+    /// — positions sum like the loss does).  Streamed and
+    /// materialized paths share the exact f32 op order
+    /// ([`conv_grad_into`]).
+    fn grad_from(&mut self, d_out: &[f32], m: usize, inv_m: f32) {
+        let co = self.plan.geom.cout;
+        let rows = self.plan.patch_rows(m);
+        match self.lowering {
+            ConvLowering::Streamed => {
+                let plan = self.plan;
+                conv_grad_into(&plan, &self.xin[..m * plan.in_len],
+                               &d_out[..rows * co], m, inv_m,
+                               &mut self.gcol, &mut self.grad);
+            }
+            ConvLowering::Materialized => {
+                let k = self.plan.patch_len;
+                outer_product_grad(&self.patches, d_out,
+                                   &mut self.grad, rows, k, co, inv_m);
+            }
+        }
     }
 
     fn backward(&mut self, d_out: &[f32], m: usize, ctx: &BwdCtx,
                 d_in: &mut Vec<f32>, need_input_grad: bool) {
-        let k = self.geom.patch_len();
-        let co = self.geom.cout;
-        let rows = self.geom.patch_rows(m);
-        // Digital weight gradient: patch outer product summed over
-        // samples *and* positions, batch-mean (1/m, the dense
-        // convention — positions sum like the loss does).
-        outer_product_grad(&self.patches, d_out, &mut self.grad, rows,
-                           k, co, ctx.inv_m);
+        self.grad_from(d_out, m, ctx.inv_m);
         if need_input_grad {
             self.backward_err_vmm(d_out, m, ctx, d_in);
         }
     }
 
     /// Transposed patch VMM + col2im adjoint scatter (shared verbatim
-    /// by the phase-serial and pipelined walks).
+    /// by the phase-serial and pipelined walks).  Streamed lowering
+    /// drains the VMM's strip outputs straight through the fused
+    /// scatter ([`col2im_stream_into`]); materialized stages the
+    /// `[m·P, K]` patch gradient and scatters it after.
     fn backward_err_vmm(&mut self, d_out: &[f32], m: usize,
                         ctx: &BwdCtx, d_in: &mut Vec<f32>) {
-        let k = self.geom.patch_len();
-        let co = self.geom.cout;
-        let rows = self.geom.patch_rows(m);
+        let co = self.plan.geom.cout;
+        let rows = self.plan.patch_rows(m);
         ensure(&mut self.escaled, rows * co);
         for (ev, &dv) in self.escaled[..rows * co]
             .iter_mut()
@@ -860,15 +983,29 @@ impl ConvLayer {
         {
             *ev = dv * ctx.gain;
         }
-        ensure(&mut self.dpatches, rows * k);
-        self.grid.vmm_t_batch_into(&self.escaled[..rows * co], rows,
-                                   ctx.t_now, ctx.round, ctx.pool,
-                                   &mut self.scratch,
-                                   &mut self.dpatches[..rows * k]);
-        let nin = m * self.geom.in_len();
+        let nin = m * self.plan.in_len;
         ensure(d_in, nin);
-        col2im_into(&self.geom, &self.dpatches[..rows * k], m,
-                    ctx.pool, &mut d_in[..nin]);
+        match self.lowering {
+            ConvLowering::Streamed => {
+                let plan = self.plan;
+                let pool = ctx.pool;
+                let dst = &mut d_in[..nin];
+                self.grid.vmm_t_batch_with(
+                    &self.escaled[..rows * co], rows, ctx.t_now,
+                    ctx.round, pool, &mut self.scratch,
+                    |res| col2im_stream_into(&plan, res, m, pool, dst));
+            }
+            ConvLowering::Materialized => {
+                let k = self.plan.patch_len;
+                ensure(&mut self.dpatches, rows * k);
+                self.grid.vmm_t_batch_into(
+                    &self.escaled[..rows * co], rows, ctx.t_now,
+                    ctx.round, ctx.pool, &mut self.scratch,
+                    &mut self.dpatches[..rows * k]);
+                col2im_into(&self.geom, &self.dpatches[..rows * k], m,
+                            ctx.pool, &mut d_in[..nin]);
+            }
+        }
         for v in d_in[..nin].iter_mut() {
             *v *= ctx.inv_gain;
         }
@@ -878,8 +1015,8 @@ impl ConvLayer {
     /// [`DenseLayer::backward_vmm`]).
     fn backward_vmm(&mut self, d_out: &[f32], m: usize, ctx: &BwdCtx,
                     d_in: &mut Vec<f32>, need_input_grad: bool) {
-        let co = self.geom.cout;
-        let rows = self.geom.patch_rows(m);
+        let co = self.plan.geom.cout;
+        let rows = self.plan.patch_rows(m);
         ensure(&mut self.dout, rows * co);
         self.dout[..rows * co].copy_from_slice(&d_out[..rows * co]);
         if need_input_grad {
@@ -922,7 +1059,7 @@ impl Layer {
     fn in_len(&self) -> usize {
         match self {
             Layer::Dense(d) => d.k,
-            Layer::Conv(cv) => cv.geom.in_len(),
+            Layer::Conv(cv) => cv.plan.in_len,
             Layer::Relu { len, .. } => *len,
             Layer::GlobalAvgPool { h, w, c } => h * w * c,
             Layer::Residual(r) => r.in_len,
@@ -932,7 +1069,7 @@ impl Layer {
     fn out_len(&self) -> usize {
         match self {
             Layer::Dense(d) => d.n,
-            Layer::Conv(cv) => cv.geom.out_len(),
+            Layer::Conv(cv) => cv.plan.out_len,
             Layer::Relu { len, .. } => *len,
             Layer::GlobalAvgPool { c, .. } => *c,
             Layer::Residual(r) => r.out_len,
@@ -1100,6 +1237,36 @@ impl Layer {
             _ => 0,
         }
     }
+
+    fn set_conv_lowering(&mut self, lowering: ConvLowering) {
+        match self {
+            Layer::Conv(cv) => cv.set_lowering(lowering),
+            Layer::Residual(r) => {
+                for l in &mut r.body {
+                    l.set_conv_lowering(lowering);
+                }
+                if let Some(pj) = r.proj.as_mut() {
+                    pj.set_lowering(lowering);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn patch_buf_bytes(&self) -> usize {
+        match self {
+            Layer::Conv(cv) => cv.patch_buf_bytes(),
+            Layer::Residual(r) => {
+                let mut total: usize =
+                    r.body.iter().map(|l| l.patch_buf_bytes()).sum();
+                if let Some(pj) = r.proj.as_ref() {
+                    total += pj.patch_buf_bytes();
+                }
+                total
+            }
+            _ => 0,
+        }
+    }
 }
 
 impl ResBlock {
@@ -1244,11 +1411,12 @@ impl GradUpdate for DenseLayer {
 
 impl GradUpdate for ConvLayer {
     fn grad_stage(&mut self, m: usize, inv_m: f32) {
-        let k = self.geom.patch_len();
-        let co = self.geom.cout;
-        let rows = self.geom.patch_rows(m);
-        outer_product_grad(&self.patches, &self.dout, &mut self.grad,
-                           rows, k, co, inv_m);
+        // Temporarily move the error snapshot out so the shared
+        // gradient kernel can borrow the rest of the layer mutably —
+        // a Vec move, no copy.
+        let dout = std::mem::take(&mut self.dout);
+        self.grad_from(&dout, m, inv_m);
+        self.dout = dout;
     }
 
     fn update_stage(&mut self, up: UpdateArgs) -> (usize, usize) {
@@ -1656,6 +1824,24 @@ impl GraphNet {
     /// Total SET pulses across all grids.
     pub fn total_set_pulses(&self) -> u64 {
         self.layers.iter().map(|l| l.total_set_pulses()).sum()
+    }
+
+    /// Select every conv layer's patch lowering (residual bodies and
+    /// projections included).  Both paths are bit-identical — this
+    /// switches performance characteristics only; see
+    /// [`ConvLowering`].
+    pub fn set_conv_lowering(&mut self, lowering: ConvLowering) {
+        for l in &mut self.layers {
+            l.set_conv_lowering(lowering);
+        }
+    }
+
+    /// Bytes currently held by conv patch-lowering staging buffers
+    /// across the whole graph (see [`ConvLayer::patch_buf_bytes`]) —
+    /// the streamed-vs-materialized memory axis of
+    /// `benches/bench_conv.rs`.
+    pub fn patch_buf_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.patch_buf_bytes()).sum()
     }
 }
 

@@ -10,13 +10,17 @@
 //!   weighted layer's matrix lives on its own sharded
 //!   [`crate::crossbar::CrossbarGrid`]** (per-layer
 //!   `w_max = w_scale/√fan_in`, per-layer seeds); convolutions are
-//!   lowered via the deterministic im2col/col2im patch kernels
-//!   (`crossbar::conv`), so each kernel is a `[kh·kw·cin, cout]` analog
-//!   VMM, its backprop the **transposed** analog VMM plus a col2im
-//!   scatter, its weight gradient a digital patch outer product into
-//!   the hybrid LSB/MSB update — the mixed-precision
-//!   computational-memory scheme (Nandakumar et al.) extended to the
-//!   paper's ResNet topology ([`graph::resnet_spec`]).
+//!   lowered **weight-stationary** through the streaming patch kernels
+//!   (`crossbar::conv`): each kernel is a `[kh·kw·cin, cout]` analog
+//!   VMM fed patch segments on demand from the once-DAC'd image, its
+//!   backprop the **transposed** analog VMM drained through the fused
+//!   col2im scatter, its weight gradient a column-streamed digital
+//!   patch outer product into the hybrid LSB/MSB update — the
+//!   mixed-precision computational-memory scheme (Nandakumar et al.)
+//!   extended to the paper's ResNet topology
+//!   ([`graph::resnet_spec`]), with the materialized im2col/col2im
+//!   path retained as a bit-identical fallback
+//!   ([`graph::ConvLowering`]).
 //! * [`features`] — deterministic feature sources with explicit
 //!   `[h, w, c]` spatial metadata: pooled synthetic CIFAR from the
 //!   existing `data` pipeline (default for accuracy runs) and portable
@@ -42,6 +46,6 @@ pub mod net;
 
 pub use baseline::{FpGraphNet, FpNet};
 pub use features::{BlobDataset, FeatureSource, PooledCifar};
-pub use graph::{resnet_spec, ActShape, GainCtx, GraphNet, GraphSpec,
-                LayerSpec, StepTotals};
+pub use graph::{resnet_spec, ActShape, ConvLowering, GainCtx, GraphNet,
+                GraphSpec, LayerSpec, StepTotals};
 pub use net::NetSpec;

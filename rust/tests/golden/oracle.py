@@ -1159,7 +1159,15 @@ class Geom:
 
 
 def im2col(g, x, m):
-    """crossbar::conv::im2col_into (pure data movement, no RNG)."""
+    """crossbar::conv::im2col_into (pure data movement, no RNG).
+
+    The Rust side's default conv lowering is now weight-stationary
+    streaming (ConvPatchSource / col2im_stream_into): patch segments
+    are generated on demand and never materialized.  The streamed path
+    is bit-identical to materialize-then-VMM by construction (pinned
+    in rust/tests/prop_conv_equivalence.rs), so this value-level
+    mirror keeps modeling the materialized form — same values, same
+    f32 op order per element."""
     p, K = g.positions(), g.patch_len()
     out = np.zeros(m * p * K, dtype=np.float32)
     for s in range(m):

@@ -11,6 +11,12 @@
 //! * the backward path — transposed grid VMM + col2im scatter — is
 //!   bit-compatible with a host transposed convolution (adjoint gather
 //!   with the same pinned accumulation order);
+//! * the **weight-stationary streaming lowering** (on-demand patch
+//!   segments + fused col2im drain) is bit-identical to the retained
+//!   materialized im2col path — forward and backward, noise on and
+//!   off, across worker counts {1, 4, 8} — both at the kernel level
+//!   and through a full resnet trainer run
+//!   ([`hic_train::nn::graph::ConvLowering`]);
 //! * a full conv/residual `NetTrainer` run (stem conv, stride-2
 //!   residual stages with 1×1 skip projections, global average pool,
 //!   dense head) is **bitwise identical for worker counts {1, 2, 4}**
@@ -21,7 +27,10 @@
 
 use hic_train::coordinator::nettrainer::{NetTrainer, NetTrainerOptions};
 use hic_train::coordinator::schedule::LrSchedule;
-use hic_train::crossbar::conv::{col2im_into, im2col_into, PatchGeom};
+use hic_train::crossbar::conv::{col2im_into, col2im_stream_into,
+                                im2col_into, ConvPatchSource, PatchGeom,
+                                PatchPlan};
+use hic_train::nn::graph::ConvLowering;
 use hic_train::crossbar::grid::CrossbarGrid;
 use hic_train::crossbar::{AdcSpec, DacSpec, TilingPolicy};
 use hic_train::hic::weight::HicGeometry;
@@ -240,6 +249,127 @@ fn prop_conv_backward_matches_host_adjoint() {
                     }
                 }
             }
+        }
+        Ok(())
+    });
+}
+
+/// The streaming conv kernels are **bit-identical** to the retained
+/// materialized im2col path: forward (`vmm_batch_src_into` over a
+/// [`ConvPatchSource`] vs `im2col_into` + `vmm_batch_base_into` with
+/// the same `sample_base`) and backward (`vmm_t_batch_with` +
+/// [`col2im_stream_into`] vs `vmm_t_batch_into` + `col2im_into`),
+/// noise on and off, across worker counts {1, 4, 8}.
+#[test]
+fn prop_streamed_lowering_matches_materialized() {
+    prop("streamed conv kernels == materialized im2col path", 24, |g| {
+        // Half the cases run the full noise model: the RNG stream
+        // assignment (same `(op, tile, sample)` keys whether the
+        // segment was staged or generated) is part of the contract.
+        let params = if g.bool() {
+            PcmParams::default()
+        } else {
+            deterministic_params(g.bool(), g.bool())
+        };
+        let geom = gen_geom(g);
+        let tile = g.usize_in(2, 6);
+        let m = g.usize_in(1, 3);
+        let seed = g.u64_below(1 << 32);
+        let base = g.u64_below(1 << 20);
+        let (kk, co) = (geom.patch_len(), geom.cout);
+        let plan = PatchPlan::new(geom);
+        let rows = plan.patch_rows(m);
+
+        let setup = WorkerPool::new(1);
+        let mut grid = conv_grid(params, &geom, tile, seed);
+        let w = g.vec_f32(kk * co, -0.9, 0.9);
+        grid.program_init(&w, 0.0, 0, &setup);
+        let t_now = 2.0;
+
+        let x = g.vec_f32(m * geom.in_len(), -1.0, 1.0);
+        let e = g.vec_f32(rows * co, -1.0, 1.0);
+        // The streamed path DACs the image once; DAC ∘ im2col ==
+        // im2col ∘ DAC because padding taps quantize to exactly 0.
+        let mut qimg = vec![0.0f32; x.len()];
+        for (q, &v) in qimg.iter_mut().zip(&x) {
+            *q = grid.dac.convert(v);
+        }
+
+        // Reference: the materialized path at a single worker.
+        let mut scratch = grid.scratch();
+        let mut patches = vec![0.0f32; rows * kk];
+        im2col_into(&geom, &x, m, &setup, &mut patches);
+        let mut y_ref = vec![0.0f32; rows * co];
+        grid.vmm_batch_base_into(&patches, rows, t_now, 9, base, &setup,
+                                 &mut scratch, &mut y_ref);
+        let mut dp = vec![0.0f32; rows * kk];
+        grid.vmm_t_batch_into(&e, rows, t_now, 5, &setup, &mut scratch,
+                              &mut dp);
+        let mut dx_ref = vec![0.0f32; m * geom.in_len()];
+        col2im_into(&geom, &dp, m, &setup, &mut dx_ref);
+
+        for workers in [1usize, 4, 8] {
+            let pool = WorkerPool::new(workers);
+            let mut scratch = grid.scratch();
+            let src = ConvPatchSource::new(&plan, &qimg);
+            let mut y = vec![0.0f32; rows * co];
+            grid.vmm_batch_src_into(&src, rows, t_now, 9, base, &pool,
+                                    &mut scratch, &mut y);
+            if y != y_ref {
+                return Err(format!(
+                    "streamed forward diverges at {workers} workers \
+                     ({geom:?})"));
+            }
+            let mut dx = vec![0.0f32; m * geom.in_len()];
+            grid.vmm_t_batch_with(&e, rows, t_now, 5, &pool,
+                                  &mut scratch, |res| {
+                col2im_stream_into(&plan, res, m, &pool, &mut dx);
+            });
+            if dx != dx_ref {
+                return Err(format!(
+                    "fused col2im drain diverges at {workers} workers \
+                     ({geom:?})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// A full resnet `NetTrainer` run — losses, overflow/refresh counters,
+/// eval, total SET pulses — is bitwise identical under the streamed
+/// and materialized conv lowerings on the full noisy device model.
+#[test]
+fn prop_streamed_trainer_matches_materialized() {
+    prop("resnet trainer: streamed == materialized lowering", 3, |g| {
+        let c1 = g.usize_in(2, 4);
+        let c2 = g.usize_in(3, 5);
+        let tile = g.usize_in(3, 6);
+        let batch = g.usize_in(2, 4);
+        let seed = g.u64_below(1 << 24);
+        let spec = GraphSpec::resnet([4, 4, 2], [c1, c2, c2 + 1], 1, 3,
+                                     1000);
+        let run = |lowering: ConvLowering| {
+            let data = FeatureSource::Blobs(
+                BlobDataset::with_shape(seed, 4, 4, 2, 3, 0.4, 60, 24));
+            let mut t = NetTrainer::from_spec(
+                PcmParams::default(), &spec,
+                TilingPolicy { tile_rows: tile, tile_cols: tile },
+                data, WorkerPool::new(4),
+                NetTrainerOptions { seed, batch, refresh_every: 2,
+                                    ..Default::default() });
+            t.net.set_conv_lowering(lowering);
+            t.train_steps(3);
+            let ev = t.evaluate(8, t.clock.now_f32());
+            (t.losses.clone(), t.overflows, t.refreshed, ev,
+             t.total_set_pulses())
+        };
+        let a = run(ConvLowering::Streamed);
+        let b = run(ConvLowering::Materialized);
+        if a != b {
+            return Err(format!(
+                "conv lowerings diverge \
+                 (stages=[{c1},{c2},{}] tile={tile} batch={batch})",
+                c2 + 1));
         }
         Ok(())
     });
