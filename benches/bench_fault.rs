@@ -1,0 +1,113 @@
+//! Fault-model overhead benches: the device fault plane is woven into
+//! every hot kernel (reads freeze faulty cells, writes draw prog-fail
+//! uniforms, verify re-pulses short writes), so this suite measures
+//! what the machinery costs when it is on — and pins that the fault-off
+//! path stays free (every fault branch is gated on an empty plane).
+//!
+//! Emits `BENCH_fault.json` with the fault-on/fault-off runtime ratios
+//! of the grid's three hot kernels (VMM read, hybrid update, drifted
+//! decode).
+
+use hic_train::bench::Bench;
+use hic_train::crossbar::grid::CrossbarGrid;
+use hic_train::crossbar::{AdcSpec, DacSpec, TilingPolicy};
+use hic_train::hic::weight::HicGeometry;
+use hic_train::pcm::device::PcmParams;
+use hic_train::pcm::FaultSpec;
+use hic_train::util::pool::WorkerPool;
+
+fn grid(fault: FaultSpec, k: usize, n: usize, seed: u64) -> CrossbarGrid {
+    let params = PcmParams { fault, ..Default::default() };
+    CrossbarGrid::new(params, HicGeometry::default(), k, n,
+                      TilingPolicy { tile_rows: 16, tile_cols: 16 },
+                      DacSpec::default(), AdcSpec::default(), seed)
+}
+
+fn main() {
+    let mut b = Bench::new("fault");
+    let (k, n, m) = (64usize, 64usize, 8usize);
+    let pool = WorkerPool::new(1);
+    let faulted = FaultSpec {
+        stuck_set: 0.01,
+        stuck_reset: 0.01,
+        stuck_open: 0.01,
+        prog_fail: 0.02,
+        endurance_limit: 100_000,
+        write_verify: true,
+        max_retries: 3,
+        remap: true,
+    };
+
+    // Fabrication seeding cost (construction-time, off the hot path).
+    b.bench("grid_construct_seeded_64x64", || {
+        std::hint::black_box(grid(faulted, k, n, 7));
+    });
+
+    let w0: Vec<f32> = (0..k * n)
+        .map(|i| ((i % 13) as f32 - 6.0) / 8.0)
+        .collect();
+    let x: Vec<f32> = (0..m * k)
+        .map(|i| ((i % 7) as f32 - 3.0) / 3.0)
+        .collect();
+    let grad: Vec<f32> = (0..k * n)
+        .map(|i| ((i % 11) as f32 - 5.0) / 2.0)
+        .collect();
+    let elems = (k * n) as f64;
+
+    for (tag, fault) in [("off", FaultSpec::default()),
+                         ("on", faulted)] {
+        let mut gr = grid(fault, k, n, 7);
+        let mut scratch = gr.scratch();
+        gr.program_init(&w0, 0.0, 0, &pool);
+
+        let mut y = vec![0.0f32; m * n];
+        b.bench_with_elements(&format!("vmm_batch_fault_{tag}"),
+                              Some(elems), || {
+            gr.vmm_batch_into(&x, m, 1.0, 5, &pool, &mut scratch,
+                              &mut y);
+            std::hint::black_box(&y);
+        });
+
+        let mut round = 100u64;
+        b.bench_with_elements(&format!("apply_update_fault_{tag}"),
+                              Some(elems), || {
+            round += 1;
+            std::hint::black_box(gr.apply_update(
+                &grad, 0.05, 2.0, round, &pool, &mut scratch));
+        });
+
+        let mut decoded = vec![0.0f32; k * n];
+        b.bench_with_elements(&format!("drift_decode_fault_{tag}"),
+                              Some(elems), || {
+            gr.drift_into(3.0, &pool, &mut scratch, &mut decoded);
+            std::hint::black_box(&decoded);
+        });
+
+        if tag == "on" {
+            let map = gr.fault_summary();
+            println!("[fault] dead {} / {} devices, prog_failures {}, \
+                      verify_retries {}",
+                     map.dead(), 2 * k * n, map.prog_failures,
+                     map.verify_retries);
+        }
+    }
+
+    // Fault-on/fault-off ratios (a ratio near 1.0 = the machinery is
+    // cheap; the off path is pinned bitwise-free by prop_fault).
+    let mut ratios = Vec::new();
+    for kernel in ["vmm_batch", "apply_update", "drift_decode"] {
+        let on = format!("{kernel}_fault_on");
+        let off = format!("{kernel}_fault_off");
+        if let Some(s) = b.speedup(&on, &off) {
+            println!("[fault] {kernel}: fault-off {s:.2}x over fault-on");
+            ratios.push((kernel.to_string(), s));
+        }
+    }
+    if let Err(e) = b.write_json(
+        std::path::Path::new("BENCH_fault.json"), &ratios)
+    {
+        eprintln!("[fault] could not write BENCH_fault.json: {e}");
+    }
+
+    b.finish();
+}

@@ -1,19 +1,39 @@
 //! Endurance audit (the Fig. 6 story as a deployment check): train, then
-//! report the write–erase-cycle distribution of every PCM device and the
-//! projected array lifetime at a given retraining cadence.
+//! report the write–erase-cycle distribution of every PCM device, the
+//! projected array lifetime at a given retraining cadence, and the
+//! per-tile wear-out margin of a grid run against a configurable
+//! endurance limit (the `pcm::fault` wear-out model).
 //!
 //! ```bash
-//! cargo run --release --example endurance_report
+//! cargo run --release --example endurance_report [endurance_limit]
 //! ```
+//!
+//! `endurance_limit` (default 1000) is the per-device write–erase
+//! budget the margin report audits against; it also arms the fault
+//! model's wear-out mechanism, so devices that cross it mid-training
+//! freeze and show up in the `worn` column.
 
 use anyhow::Result;
 
+use hic_train::coordinator::gridtrainer::{GridTrainer,
+                                          GridTrainerOptions};
 use hic_train::coordinator::schedule::LrSchedule;
 use hic_train::coordinator::{Trainer, TrainerOptions};
+use hic_train::crossbar::TilingPolicy;
 use hic_train::exp::config_dir;
+use hic_train::hic::weight::HicGeometry;
+use hic_train::pcm::device::PcmParams;
 use hic_train::pcm::endurance::ENDURANCE_LIMIT;
+use hic_train::pcm::FaultSpec;
+use hic_train::util::pool::WorkerPool;
 
 fn main() -> Result<()> {
+    let endurance_limit: u64 = std::env::args()
+        .nth(1)
+        .map(|a| a.parse())
+        .transpose()?
+        .unwrap_or(1000);
+
     let steps = 150;
     let dir = config_dir("tiny")?;
     let mut t = Trainer::new(&dir, TrainerOptions {
@@ -50,5 +70,64 @@ fn main() -> Result<()> {
          multi-level RESET+SET cycle)",
         total_lsb_flips / total_msb_sets.max(1.0)
     );
+
+    // -- per-tile wear-out margin (grid run, wear-out armed) -----------
+    //
+    // A grid-routed training run with the fault model's endurance
+    // mechanism live: each tile reports its worst device's write–erase
+    // traffic against the budget, the headroom left, and how many
+    // devices already froze (`worn`).
+    let (k, n, tile, grid_steps) = (32usize, 16usize, 8usize, 60usize);
+    let params = PcmParams {
+        fault: FaultSpec {
+            endurance_limit,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let target: Vec<f32> = (0..k * n)
+        .map(|i| (((i * 3 + 5) % 13) as f32 - 6.0) / 8.0)
+        .collect();
+    let mut gt = GridTrainer::new(
+        params, HicGeometry::default(), k, n,
+        TilingPolicy { tile_rows: tile, tile_cols: tile }, target,
+        WorkerPool::from_env(),
+        GridTrainerOptions {
+            seed: 3,
+            lr: LrSchedule::constant(0.5),
+            ..Default::default()
+        });
+    println!("\ntraining {grid_steps} grid steps ({k}x{n}, tile {tile}, \
+              endurance limit {endurance_limit})...");
+    gt.train_steps(grid_steps);
+
+    println!("\nper-tile wear-out margin (worst device vs the \
+              {endurance_limit}-cycle budget):");
+    println!("{:>4} {:>10} {:>10} {:>8} {:>6}",
+             "tile", "max_we", "margin", "used%", "worn");
+    for (ti, ct) in gt.grid.tiles.iter().enumerate() {
+        let msb = &ct.weights.msb;
+        let max_we = msb
+            .plus
+            .set_count
+            .iter()
+            .zip(&msb.plus.reset_count)
+            .chain(msb.minus.set_count.iter().zip(&msb.minus.reset_count))
+            .map(|(&s, &r)| s + r)
+            .max()
+            .unwrap_or(0);
+        let map = ct.weights.fault_map();
+        let margin = endurance_limit as i64 - max_we as i64;
+        println!("{ti:>4} {max_we:>10} {margin:>10} {:>7.1}% {:>6}",
+                 100.0 * max_we as f64 / endurance_limit.max(1) as f64,
+                 map.worn);
+    }
+    let map = gt.fault_summary();
+    if map.worn > 0 {
+        println!("=> {} device(s) crossed the budget and froze at \
+                  their last conductance", map.worn);
+    } else {
+        println!("=> every device stayed inside the budget");
+    }
     Ok(())
 }

@@ -1,0 +1,31 @@
+# Device fault-injection sweep (fig6 --faults) on the crossbar grid
+# device model — the golden-pinned tiny configuration: running
+#
+#   hic-train run examples/fig6_faults.hic
+#
+# writes results/fig6_faults_grid.json with exactly the bytes pinned in
+# rust/tests/golden/fig6_faults_grid.json: accuracy vs fault rate and
+# endurance limit.  Each rate r seeds stuck-at cells (r/3 per class:
+# SET, RESET, open) and a per-write programming-failure probability of
+# r/5, with write-verify retried up to `retries` pulses; each endurance
+# entry caps per-device write-erase cycles (0 = unlimited), freezing a
+# device at its last conductance when crossed.  The (0, 0) point is the
+# byte-identical fault-free baseline.
+
+experiment fig6 {
+  grid {
+    k = 10      # logical weight-matrix rows
+    n = 6       # logical weight-matrix cols
+    tile = 4    # physical tile size (3x2 tile grid)
+  }
+  train {
+    steps = 8
+    batch = 4
+  }
+  faults {
+    rates = [0, 0.05, 0.2]   # stuck-at + programming-failure scale
+    endurance = [0, 6]       # write-erase budget per device
+    retries = 2              # write-verify re-pulse budget
+  }
+  seed = 7
+}

@@ -265,6 +265,12 @@ impl GridTrainer {
         self.grid.record_endurance(&mut ledger);
         ledger
     }
+
+    /// Fault/degradation accounting over every grid tile (all-zero
+    /// when the fault model is disabled).
+    pub fn fault_summary(&self) -> crate::pcm::FaultMap {
+        self.grid.fault_summary()
+    }
 }
 
 #[cfg(test)]

@@ -442,6 +442,13 @@ impl NetTrainer {
         ledger
     }
 
+    /// Fault/degradation accounting folded over every grid's tiles
+    /// (all-zero when the fault model is disabled); carried through
+    /// the freeze handoff, since the frozen net keeps its fault planes.
+    pub fn fault_summary(&self) -> crate::pcm::FaultMap {
+        self.net.fault_summary()
+    }
+
     /// Total SET pulses across all grids.
     pub fn total_set_pulses(&self) -> u64 {
         self.net.total_set_pulses()

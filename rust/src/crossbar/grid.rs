@@ -74,6 +74,13 @@
 //!
 //! * state kernels draw one [`op_rng`]`(seed, round, op_tag, tile)`
 //!   stream per tile;
+//! * fabrication stuck faults (`pcm::fault`) are placed once at
+//!   construction from the dedicated `(seed, 0, OP_FAULT, tile)`
+//!   stream — one uniform per cell, G+ plane then G− — so fault
+//!   placement is worker-invariant and fault-off runs draw nothing
+//!   extra (the goldens' byte-identity guarantee);
+//!   programming-failure draws ride the op stream already driving
+//!   each write (see `pcm::fault` for the exact draw-order contract);
 //! * the blocked VMM kernels draw one
 //!   [`op_sample_rng`]`(seed, round, op_tag, tile, sample)`
 //!   **sub-stream per (op, tile, sample)** — `OP_VMM` forward,
@@ -134,6 +141,13 @@ pub const OP_VMM: u64 = 4;
 pub const OP_REFRESH: u64 = 5;
 pub const OP_PROGRAM_INIT: u64 = 6;
 pub const OP_VMM_T: u64 = 7;
+/// Fabrication stuck-fault placement (`pcm::fault`): sampled once at
+/// grid construction, one `op_rng(seed, 0, OP_FAULT, tile)` stream per
+/// tile — disjoint from every other op family, so enabling stuck
+/// faults never perturbs init/program/VMM/update draws, and fault
+/// placement is a pure function of `(seed, tile)`: bitwise invariant
+/// across worker counts.
+pub const OP_FAULT: u64 = 8;
 
 /// Cache budget the auto-tuned sample block targets: one block's read
 /// noise for one tile is `B` even segments of `2·rows·cols` f32
@@ -376,8 +390,15 @@ impl CrossbarGrid {
         let (mut max_r, mut max_c) = (1usize, 1usize);
         for (ti, t) in mapping.tiles.iter().enumerate() {
             let mut rng = op_rng(seed, 0, OP_INIT, ti);
-            let hw = HicWeight::new(params, geom, t.used_rows,
-                                    t.used_cols, &mut rng);
+            let mut hw = HicWeight::new(params, geom, t.used_rows,
+                                        t.used_cols, &mut rng);
+            if params.fault.stuck_rate() > 0.0 {
+                // Dedicated per-tile sampling stream (see OP_FAULT):
+                // the oracle mirrors this draw order exactly — one
+                // uniform per cell, G+ plane then G−.
+                let mut frng = op_rng(seed, 0, OP_FAULT, ti);
+                hw.seed_faults(&mut frng);
+            }
             tiles.push(CrossbarTile::new(hw, dac, adc));
             max_r = max_r.max(t.used_rows);
             max_c = max_c.max(t.used_cols);
@@ -606,6 +627,10 @@ impl CrossbarGrid {
             let msb = &tiles[ti].weights.msb;
             msb.plus.drift_into(t_now, &mut d.gp);
             msb.minus.drift_into(t_now, &mut d.gm);
+            // Spare-strip remap: patch claimed dead cells with their
+            // spare device's drifted conductance (no-op unless the
+            // fault model's remap knob is on and a cell was claimed).
+            msb.apply_remap_overrides(t_now, &mut d.gp, &mut d.gm);
         });
     }
 
@@ -1166,6 +1191,18 @@ impl CrossbarGrid {
         for t in &self.tiles {
             t.weights.record_endurance(ledger);
         }
+    }
+
+    /// Fold every tile's fault/degradation accounting into one
+    /// [`crate::pcm::FaultMap`] (tile enumeration order) — stuck/worn
+    /// populations from the fault planes plus the programming-failure,
+    /// write-verify and remap event counters.
+    pub fn fault_summary(&self) -> crate::pcm::FaultMap {
+        let mut map = crate::pcm::FaultMap::default();
+        for t in &self.tiles {
+            map.merge(&t.weights.fault_map());
+        }
+        map
     }
 
     /// Inference model bits held by this grid (MSB arrays only — the

@@ -211,6 +211,9 @@ impl CrossbarTile {
         // planes once per batch, not once per sample.
         msb.plus.drift_into(t_now, &mut scratch.gp);
         msb.minus.drift_into(t_now, &mut scratch.gm);
+        // Fault-model spare-strip remap (no-op unless cells claimed).
+        msb.apply_remap_overrides(t_now, &mut scratch.gp,
+                                  &mut scratch.gm);
 
         for s in 0..m {
             // Fresh stochastic read of the whole array for this sample
@@ -261,6 +264,9 @@ impl CrossbarTile {
 
         msb.plus.drift_into(t_now, &mut scratch.gp);
         msb.minus.drift_into(t_now, &mut scratch.gm);
+        // Fault-model spare-strip remap (no-op unless cells claimed).
+        msb.apply_remap_overrides(t_now, &mut scratch.gp,
+                                  &mut scratch.gm);
 
         for s in 0..m {
             read_noisy_weights(msb, &scratch.gp, &scratch.gm, rng,

@@ -177,6 +177,49 @@ pub fn variant_params(tag: &str) -> Result<PcmParams> {
     Ok(p)
 }
 
+/// Raw device-physics overrides layered on top of a variant's
+/// [`PcmParams`] — the spec DSL's `device { … }` knobs (ROADMAP open
+/// item (b)).  `None` leaves the variant's value untouched, so a
+/// fully-unset tweak set changes neither the run nor the document
+/// (the pinned goldens predate these keys).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DeviceTweaks {
+    /// per-device drift-exponent spread σ_ν (`drift_nu_sigma`)
+    pub nu_sigma: Option<f32>,
+    /// read-noise scale σ_read (`read_sigma`)
+    pub read_sigma: Option<f32>,
+    /// programming granularity Δg₀ (`dg0`)
+    pub granularity: Option<f32>,
+}
+
+impl DeviceTweaks {
+    pub fn apply(&self, p: &mut PcmParams) {
+        if let Some(v) = self.nu_sigma {
+            p.drift_nu_sigma = v;
+        }
+        if let Some(v) = self.read_sigma {
+            p.read_sigma = v;
+        }
+        if let Some(v) = self.granularity {
+            p.dg0 = v;
+        }
+    }
+
+    /// Echo the set knobs into a document (unset knobs emit nothing —
+    /// golden neutrality).
+    pub(crate) fn echo_into(&self, doc: &mut Vec<(&'static str, Json)>) {
+        if let Some(v) = self.nu_sigma {
+            doc.push(("device_nu_sigma_u6", u6(v as f64)));
+        }
+        if let Some(v) = self.read_sigma {
+            doc.push(("device_read_sigma_u6", u6(v as f64)));
+        }
+        if let Some(v) = self.granularity {
+            doc.push(("device_granularity_u6", u6(v as f64)));
+        }
+    }
+}
+
 /// Quantize a float metric to integer micro-units (round half away from
 /// zero, like `f64::round`) — every number in the documents is integral,
 /// which keeps serialization byte-stable across formatters.
@@ -269,6 +312,113 @@ pub fn run_fig6(opts: &GridExpOptions) -> Result<Json> {
     Ok(Json::obj(doc))
 }
 
+// -- FIG6 --faults: accuracy vs fault rate / endurance limit -------------
+
+/// Parameters of the fault-injection sweep (`fig6 --faults`).
+#[derive(Clone, Debug)]
+pub struct FaultSweepOptions {
+    pub grid: GridExpOptions,
+    /// total stuck-device rates swept (each split evenly over
+    /// stuck-SET / stuck-RESET / stuck-open, with a proportional
+    /// per-pulse programming-failure rate — see [`fault_point_spec`])
+    pub rates: Vec<f32>,
+    /// endurance limits swept (`0` = wear-out off)
+    pub endurance: Vec<u64>,
+    /// write-verify retry budget (verify is on for every point; the
+    /// all-zero point has no fault plane, so verify is inert there and
+    /// the point is byte-identical to a fault-free run)
+    pub max_retries: u32,
+}
+
+impl Default for FaultSweepOptions {
+    fn default() -> Self {
+        FaultSweepOptions {
+            grid: GridExpOptions::default(),
+            rates: vec![0.0, 0.02, 0.05, 0.1],
+            endurance: vec![0, 1000],
+            max_retries: 3,
+        }
+    }
+}
+
+/// The [`crate::pcm::FaultSpec`] of one sweep point: the total stuck
+/// rate splits evenly across the three stuck classes, the per-pulse
+/// programming-failure probability scales at rate/5, and write-verify
+/// is always armed with the sweep's retry budget.  Pure f32
+/// arithmetic — the oracle mirrors it literally.
+pub fn fault_point_spec(rate: f32, endurance_limit: u64,
+                        max_retries: u32) -> crate::pcm::FaultSpec {
+    crate::pcm::FaultSpec {
+        stuck_set: rate / 3.0f32,
+        stuck_reset: rate / 3.0f32,
+        stuck_open: rate / 3.0f32,
+        prog_fail: rate / 5.0f32,
+        endurance_limit,
+        write_verify: true,
+        max_retries,
+        remap: false,
+    }
+}
+
+/// FIG6 `--faults` (grid-routed): final regression MSE (raw and
+/// gain-compensated) vs stuck-device rate and endurance limit on the
+/// linear device, with write-verify always armed.  One fresh trainer
+/// per (rate, limit) point; every point reports the grid's full
+/// [`crate::pcm::FaultMap`] accounting, so the document shows both the
+/// accuracy decay *and* the degradation machinery's work (retry
+/// totals bounded by `max_retries · verified writes`).  The
+/// `(0, 0)` point allocates no fault plane and is byte-identical to a
+/// fault-free run — the in-document baseline.
+pub fn run_fig6_faults(opts: &FaultSweepOptions) -> Result<Json> {
+    if opts.rates.is_empty() || opts.endurance.is_empty() {
+        bail!("fault sweep needs at least one rate and one limit");
+    }
+    let mut points = Vec::new();
+    for &rate in &opts.rates {
+        if !(0.0..=1.0).contains(&rate) {
+            bail!("fault rate {rate} outside [0, 1]");
+        }
+        for &limit in &opts.endurance {
+            let mut params = variant_params("linear")?;
+            params.fault =
+                fault_point_spec(rate, limit, opts.max_retries);
+            let mut t = opts.grid.trainer(params);
+            t.train_steps(opts.grid.steps);
+            let t_final = t.clock.now_f32();
+            let (mse, mse_gain) =
+                t.eval_mse_pair(t_final, EVAL_ROUND_BASE);
+            let map = t.fault_summary();
+            log_info!(
+                "fig6-faults rate={rate} limit={limit}: mse {mse:.4} \
+                 (gain {mse_gain:.4}), dead {}, retries {}",
+                map.dead(), map.verify_retries);
+            points.push(Json::obj(vec![
+                ("fault_rate_u6", u6(rate as f64)),
+                ("endurance_limit", Json::Num(limit as f64)),
+                ("mse_u6", u6(mse)),
+                ("mse_gain_u6", u6(mse_gain)),
+                ("stuck_set", Json::Num(map.stuck_set as f64)),
+                ("stuck_reset", Json::Num(map.stuck_reset as f64)),
+                ("stuck_open", Json::Num(map.stuck_open as f64)),
+                ("worn", Json::Num(map.worn as f64)),
+                ("prog_failures",
+                 Json::Num(map.prog_failures as f64)),
+                ("verify_retries",
+                 Json::Num(map.verify_retries as f64)),
+                ("verify_failures",
+                 Json::Num(map.verify_failures as f64)),
+                ("overflows", Json::Num(t.overflows as f64)),
+                ("set_pulses",
+                 Json::Num(t.grid.total_set_pulses() as f64)),
+            ]));
+        }
+    }
+    let mut doc = opts.grid.echo("fig6_faults");
+    doc.push(("max_retries", Json::Num(opts.max_retries as f64)));
+    doc.push(("points", Json::Arr(points)));
+    Ok(Json::obj(doc))
+}
+
 // -- FIG4 (grid-routed): the multi-layer width sweep ---------------------
 
 /// Feature source of the fig4 device sweep.
@@ -345,6 +495,9 @@ pub struct NnExpOptions {
     /// device variant tag ([`variant_params`]); the default
     /// ([`FIG4_DEFAULT_VARIANT`]) is the golden-pinned model
     pub device_variant: String,
+    /// raw device-knob overrides on top of the variant (the spec
+    /// DSL's `device { … }` block; all-`None` = golden-neutral)
+    pub device_tweaks: DeviceTweaks,
     /// batches between MSB refreshes (0 = never — the golden default)
     pub refresh_every: usize,
     /// explicit CIFAR-10 directory (overrides `$HIC_CIFAR10` and the
@@ -372,6 +525,7 @@ impl Default for NnExpOptions {
             workers: 0,
             out_dir: PathBuf::from("results"),
             device_variant: FIG4_DEFAULT_VARIANT.to_string(),
+            device_tweaks: DeviceTweaks::default(),
             refresh_every: 0,
             cifar_dir: None,
         }
@@ -546,6 +700,7 @@ impl NnExpOptions {
             doc.push(("refresh_every",
                       Json::Num(self.refresh_every as f64)));
         }
+        self.device_tweaks.echo_into(&mut doc);
         doc
     }
 }
@@ -562,8 +717,10 @@ pub fn run_fig4(opts: &NnExpOptions) -> Result<Json> {
         bail!("fig4 needs at least one width multiplier");
     }
     // Default variant "linear_read" reproduces the historical
-    // hard-coded model (linear device, read noise on) byte for byte.
-    let params = variant_params(&opts.device_variant)?;
+    // hard-coded model (linear device, read noise on) byte for byte;
+    // tweaks layer on top (all-None = untouched).
+    let mut params = variant_params(&opts.device_variant)?;
+    opts.device_tweaks.apply(&mut params);
     let policy =
         TilingPolicy { tile_rows: opts.tile, tile_cols: opts.tile };
     let mut rows = Vec::new();
@@ -872,5 +1029,130 @@ mod tests {
         let msb = doc.get("msb_count").unwrap().as_f64().unwrap();
         // 2 devices per weight cell, G+ and G− planes both recorded.
         assert_eq!(msb as usize, 2 * o.k * o.n);
+    }
+
+    fn tiny_faults() -> FaultSweepOptions {
+        FaultSweepOptions {
+            grid: tiny(),
+            rates: vec![0.0, 0.2],
+            endurance: vec![0, 30],
+            max_retries: 2,
+        }
+    }
+
+    #[test]
+    fn fault_sweep_document_shape() {
+        let doc = run_fig6_faults(&tiny_faults()).unwrap();
+        assert_eq!(doc.get("experiment").unwrap().as_str().unwrap(),
+                   "fig6_faults");
+        let points = doc.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(points.len(), 4); // 2 rates × 2 limits
+        for p in points {
+            for key in ["fault_rate_u6", "endurance_limit", "mse_u6",
+                        "mse_gain_u6", "stuck_set", "stuck_reset",
+                        "stuck_open", "worn", "prog_failures",
+                        "verify_retries", "verify_failures",
+                        "overflows", "set_pulses"] {
+                let num = p.get(key).unwrap().as_f64().unwrap();
+                assert!(num.is_finite() && num.fract() == 0.0,
+                        "{key} = {num} not integral");
+            }
+        }
+        // The all-zero point is fault-free: no dead devices, no
+        // verify activity.
+        let base = &points[0];
+        for key in ["stuck_set", "stuck_reset", "stuck_open", "worn",
+                    "prog_failures", "verify_retries",
+                    "verify_failures"] {
+            assert_eq!(base.get(key).unwrap().as_f64().unwrap(), 0.0,
+                       "baseline {key} nonzero");
+        }
+        // At 20% stuck rate the dead population must be visible, and
+        // the stuck counts are worker-schedule-free placement counts.
+        let faulty = &points[2];
+        let dead = faulty.get("stuck_set").unwrap().as_f64().unwrap()
+            + faulty.get("stuck_reset").unwrap().as_f64().unwrap()
+            + faulty.get("stuck_open").unwrap().as_f64().unwrap();
+        assert!(dead > 0.0, "no stuck devices at 20%");
+        // Retry totals are bounded by budget × verified writes (each
+        // verified write is ≤ one overflow-programmed increment, and
+        // set_pulses counts every pulse including retries).
+        let retries =
+            faulty.get("verify_retries").unwrap().as_f64().unwrap();
+        let pulses = faulty.get("set_pulses").unwrap().as_f64().unwrap();
+        assert!(retries <= pulses,
+                "retries {retries} exceed total pulses {pulses}");
+    }
+
+    #[test]
+    fn fault_sweep_zero_point_matches_fault_free_run() {
+        // The (rate=0, limit=0) point trains the identical model to a
+        // plain linear fig3 run: same MSE to the last micro-unit.
+        let o = tiny();
+        let sweep = run_fig6_faults(&FaultSweepOptions {
+            grid: o.clone(),
+            rates: vec![0.0],
+            endurance: vec![0],
+            max_retries: 2,
+        })
+        .unwrap();
+        let point = &sweep.get("points").unwrap().as_arr().unwrap()[0];
+        let fig3 = run_fig3(&o, &["linear"]).unwrap();
+        let want = fig3.get("variants").unwrap().get("linear").unwrap()
+            .get("eval_mse_u6").unwrap().as_f64().unwrap();
+        assert_eq!(point.get("mse_u6").unwrap().as_f64().unwrap(), want);
+    }
+
+    #[test]
+    fn fault_sweep_is_worker_invariant() {
+        let a = run_fig6_faults(&tiny_faults()).unwrap().to_string();
+        let opts = FaultSweepOptions {
+            grid: GridExpOptions { workers: 4, ..tiny() },
+            ..tiny_faults()
+        };
+        let b = run_fig6_faults(&opts).unwrap().to_string();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn fault_sweep_rejects_bad_config() {
+        let mut o = tiny_faults();
+        o.rates = vec![1.5];
+        assert!(run_fig6_faults(&o).is_err());
+        o.rates = Vec::new();
+        assert!(run_fig6_faults(&o).is_err());
+    }
+
+    #[test]
+    fn device_tweaks_apply_and_echo() {
+        let mut p = variant_params("linear").unwrap();
+        let none = DeviceTweaks::default();
+        let before = p;
+        none.apply(&mut p);
+        assert_eq!(p, before);
+        let tw = DeviceTweaks {
+            nu_sigma: Some(0.01),
+            read_sigma: Some(0.02),
+            granularity: Some(0.05),
+        };
+        tw.apply(&mut p);
+        assert_eq!(p.drift_nu_sigma, 0.01);
+        assert_eq!(p.read_sigma, 0.02);
+        assert_eq!(p.dg0, 0.05);
+        // Echo: nothing for the default, three keys when all set.
+        let mut doc = Vec::new();
+        none.echo_into(&mut doc);
+        assert!(doc.is_empty());
+        tw.echo_into(&mut doc);
+        assert_eq!(doc.len(), 3);
+        // And a default tweak set leaves the fig4 document unchanged.
+        let plain = run_fig4(&tiny_nn()).unwrap().to_string();
+        let tweaked = run_fig4(&NnExpOptions {
+            device_tweaks: DeviceTweaks::default(),
+            ..tiny_nn()
+        })
+        .unwrap()
+        .to_string();
+        assert_eq!(plain, tweaked);
     }
 }

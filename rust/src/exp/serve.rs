@@ -28,7 +28,7 @@ use std::path::PathBuf;
 
 use anyhow::Result;
 
-use super::gridexp::variant_params;
+use super::gridexp::{variant_params, DeviceTweaks};
 
 use crate::coordinator::nettrainer::{NetTrainer, NetTrainerOptions};
 use crate::coordinator::schedule::LrSchedule;
@@ -87,6 +87,12 @@ pub struct ServeExpOptions {
     /// device variant tag ([`variant_params`]); the default
     /// ([`SERVE_DEFAULT_VARIANT`]) is the golden-pinned fig5 model
     pub device_variant: String,
+    /// raw device-knob overrides on top of the variant (the spec
+    /// DSL's `device { … }` block; all-`None` = golden-neutral)
+    pub device_tweaks: DeviceTweaks,
+    /// fault-injection spec carried through training into the frozen
+    /// snapshot (default disabled — golden-neutral)
+    pub fault: crate::pcm::FaultSpec,
     /// batches between MSB refreshes during training (0 = never)
     pub refresh_every: usize,
     /// drift probe times in simulated seconds (default: the fig5 axis,
@@ -123,6 +129,8 @@ impl Default for ServeExpOptions {
             workers: 0,
             out_dir: PathBuf::from("results"),
             device_variant: SERVE_DEFAULT_VARIANT.to_string(),
+            device_tweaks: DeviceTweaks::default(),
+            fault: crate::pcm::FaultSpec::default(),
             refresh_every: 0,
             probes: super::fig5::probe_times(),
             cifar_dir: None,
@@ -214,6 +222,15 @@ impl ServeExpOptions {
             doc.push(("refresh_every",
                       Json::Num(self.refresh_every as f64)));
         }
+        self.device_tweaks.echo_into(&mut doc);
+        if self.fault.enabled() {
+            doc.push(("fault_rate_u6",
+                      u6(self.fault.stuck_rate() as f64)));
+            doc.push(("fault_prog_fail_u6",
+                      u6(self.fault.prog_fail as f64)));
+            doc.push(("fault_endurance_limit",
+                      Json::Num(self.fault.endurance_limit as f64)));
+        }
         doc
     }
 }
@@ -224,7 +241,10 @@ pub fn run_fig5_serve(opts: &ServeExpOptions) -> Result<Json> {
     // Default variant "linear_read_drift" is the grid fig5 device
     // model: linear, read noise on, drift on, ν spread off (stream
     // determinism — variant_params zeroes drift_nu_sigma throughout).
-    let params = variant_params(&opts.device_variant)?;
+    // Tweaks and the fault spec layer on top (defaults = untouched).
+    let mut params = variant_params(&opts.device_variant)?;
+    opts.device_tweaks.apply(&mut params);
+    params.fault = opts.fault;
     let policy =
         TilingPolicy { tile_rows: opts.tile, tile_cols: opts.tile };
     let spec = GraphSpec::mlp(&opts.dims());
@@ -294,6 +314,18 @@ pub fn run_fig5_serve(opts: &ServeExpOptions) -> Result<Json> {
     doc.push(("final_train_loss_u6", u6(train_loss)));
     doc.push(("recalibrations",
               Json::Num(snap.recalibrations as f64)));
+    // With faults on, the frozen snapshot carries the training-time
+    // degradation — report it (absent otherwise: golden neutrality).
+    if opts.fault.enabled() {
+        let map = snap.fault_summary();
+        doc.push(("fault_dead", Json::Num(map.dead() as f64)));
+        doc.push(("fault_prog_failures",
+                  Json::Num(map.prog_failures as f64)));
+        doc.push(("fault_verify_retries",
+                  Json::Num(map.verify_retries as f64)));
+        doc.push(("fault_verify_failures",
+                  Json::Num(map.verify_failures as f64)));
+    }
     doc.push(("probes", Json::Arr(probes)));
     Ok(Json::obj(doc))
 }
@@ -346,6 +378,28 @@ mod tests {
                 p.get("gains_u6").unwrap().as_arr().unwrap();
             assert_eq!(gains.len(), 3); // one per weighted layer
         }
+    }
+
+    #[test]
+    fn faulted_serve_carries_degradation_into_the_snapshot() {
+        // Faults injected at training time surface in the frozen
+        // snapshot's accounting; the default config emits none of the
+        // fault keys (golden neutrality).
+        let mut o = tiny_serve();
+        o.fault = crate::pcm::FaultSpec {
+            stuck_open: 0.15,
+            prog_fail: 0.05,
+            write_verify: true,
+            max_retries: 2,
+            ..Default::default()
+        };
+        let doc = run_fig5_serve(&o).unwrap();
+        assert!(doc.get("fault_dead").unwrap().as_f64().unwrap() > 0.0,
+                "15% stuck-open left no dead devices");
+        assert!(doc.get("fault_rate_u6").is_some());
+        let base = run_fig5_serve(&tiny_serve()).unwrap();
+        assert!(base.get("fault_dead").is_none());
+        assert!(base.get("fault_rate_u6").is_none());
     }
 
     #[test]

@@ -9,6 +9,7 @@
 use crate::pcm::array::{DifferentialPair, G_SPAN};
 use crate::pcm::device::PcmParams;
 use crate::pcm::endurance::EnduranceLedger;
+use crate::pcm::fault::FaultMap;
 use crate::util::rng::Pcg64;
 
 use super::fixedpoint::{AccumulatorPlane, FixedPointAccumulator};
@@ -163,6 +164,18 @@ impl HicWeight {
         for (&f, &r) in self.lsb_flips.iter().zip(&self.lsb_resets) {
             ledger.record_lsb_weight(f, r, self.geom.lsb_bits as u64);
         }
+    }
+
+    /// Seed fabrication stuck faults on the MSB differential pair from
+    /// a dedicated sampling stream (no-op when the fault model is off).
+    pub fn seed_faults(&mut self, rng: &mut Pcg64) {
+        self.msb.seed_faults(rng);
+    }
+
+    /// Aggregated fault/degradation accounting for this tensor (both
+    /// MSB planes plus spare-strip remap state).
+    pub fn fault_map(&self) -> FaultMap {
+        self.msb.fault_map()
     }
 
     /// Inference model bits: only the MSB array is needed at inference.

@@ -80,7 +80,9 @@ fn print_usage() {
          grids and transposed-VMM backprop — dense stacks (--arch mlp)\n\
          or conv/residual ResNet stages via im2col patch lowering\n\
          (--arch resnet; --long-run = the paper's full ResNet-32 /\n\
-         CIFAR-10 shape).\n\
+         CIFAR-10 shape); fig6 --faults runs the device fault-injection\n\
+         sweep (accuracy vs stuck rate / endurance limit with\n\
+         write-verify degradation accounting).\n\
          run any subcommand with --help for its options"
     );
 }
@@ -443,8 +445,39 @@ fn cmd_fig5(args: &[String]) -> Result<()> {
 fn cmd_fig6(args: &[String]) -> Result<()> {
     let spec = with_grid_opts(common_exp_spec(
         "fig6", "write–erase cycle histograms (paper Fig. 6)"))
-        .opt("config", "core", "artifact config to train");
+        .opt("config", "core", "artifact config to train")
+        .flag("faults",
+              "[device-grid] run the fault-injection sweep instead: \
+               accuracy vs stuck-device rate and endurance limit, with \
+               write-verify degradation accounting; writes \
+               <out>/fig6_faults_grid.json")
+        .opt("fault-rates", "0.0,0.02,0.05,0.1",
+             "[faults] comma-separated total stuck-device rates")
+        .opt("endurance-limits", "0,1000",
+             "[faults] comma-separated endurance limits (0 = unlimited)")
+        .opt("fault-retries", "3",
+             "[faults] write-verify retry budget per programming event");
     let m = spec.parse(args)?;
+    if m.flag("faults") {
+        let fopts = hic_train::exp::gridexp::FaultSweepOptions {
+            grid: parse_grid_opts(&m)?,
+            rates: m
+                .list("fault-rates")
+                .iter()
+                .map(|s| s.parse::<f32>())
+                .collect::<std::result::Result<Vec<_>, _>>()?,
+            endurance: m
+                .list("endurance-limits")
+                .iter()
+                .map(|s| s.parse::<u64>())
+                .collect::<std::result::Result<Vec<_>, _>>()?,
+            max_retries: m.usize("fault-retries")? as u32,
+        };
+        let doc = exp::gridexp::run_fig6_faults(&fopts)?;
+        exp::gridexp::write_json(&fopts.grid.out_dir,
+                                 "fig6_faults_grid.json", &doc)?;
+        return Ok(());
+    }
     if m.flag("device-grid") {
         let gopts = parse_grid_opts(&m)?;
         let doc = exp::gridexp::run_fig6(&gopts)?;

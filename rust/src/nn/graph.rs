@@ -1206,6 +1206,22 @@ impl Layer {
         }
     }
 
+    fn fault_summary(&self, map: &mut crate::pcm::FaultMap) {
+        match self {
+            Layer::Dense(d) => map.merge(&d.grid.fault_summary()),
+            Layer::Conv(cv) => map.merge(&cv.grid.fault_summary()),
+            Layer::Residual(r) => {
+                for l in &r.body {
+                    l.fault_summary(map);
+                }
+                if let Some(pj) = r.proj.as_ref() {
+                    map.merge(&pj.grid.fault_summary());
+                }
+            }
+            _ => {}
+        }
+    }
+
     fn inference_bits(&self) -> usize {
         match self {
             Layer::Dense(d) => d.grid.inference_bits(),
@@ -1819,6 +1835,17 @@ impl GraphNet {
         for l in &self.layers {
             l.record_endurance(ledger);
         }
+    }
+
+    /// Fold every grid's fault/degradation accounting into one
+    /// [`crate::pcm::FaultMap`] (layer order; all-zero when the fault
+    /// model is disabled).
+    pub fn fault_summary(&self) -> crate::pcm::FaultMap {
+        let mut map = crate::pcm::FaultMap::default();
+        for l in &self.layers {
+            l.fault_summary(&mut map);
+        }
+        map
     }
 
     /// Total SET pulses across all grids.

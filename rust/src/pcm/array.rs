@@ -26,11 +26,35 @@
 //! `PcmDevice` survives as the scalar reference model and a test-facing
 //! view: [`PcmArray::device_at`] gathers one element's planes back into
 //! a `PcmDevice` value.
+//!
+//! # Fault model (`params.fault`, off by default)
+//!
+//! When [`crate::pcm::fault::FaultSpec::enabled`] the array carries one extra `u8` fault
+//! plane (see [`crate::pcm::fault::class`]) and the kernels degrade
+//! gracefully instead of assuming perfect yield:
+//!
+//! * faulty devices (stuck or worn) freeze at their conductance — no
+//!   drift, no programming effect (attempts still count against
+//!   endurance), RESET ignored;
+//! * each SET pulse on a healthy device first draws one uniform from
+//!   the *caller's* stream when `prog_fail > 0` — a failed pulse
+//!   leaves the conductance untouched;
+//! * a healthy device whose `set_count + reset_count` reaches
+//!   `endurance_limit` transitions to `WORN` at its last conductance;
+//! * `write_verify` makes [`PcmArray::program_increment_at`] read the
+//!   programmed conductance back (device state, RNG-free) and re-pulse
+//!   an under-programmed healthy cell up to `max_retries` times,
+//!   counting retries and terminal failures in the per-array counters
+//!   ([`PcmArray::fault_stats`]).
+//!
+//! With faults disabled every branch above is skipped *before* any RNG
+//! draw, so fault-off runs are byte-identical to the pre-fault engine.
 
 use crate::util::fastmath::pow_fast;
 use crate::util::rng::Pcg64;
 
 use super::device::{PcmDevice, PcmParams};
+use super::fault::{class, FaultMap};
 
 /// Fraction of the conductance window used by the weight map (the rest is
 /// the saturation guard band) — must match `python/compile/hic.py::G_SPAN`.
@@ -58,6 +82,16 @@ pub struct PcmArray {
     pub set_count: Vec<u64>,
     /// lifetime RESET counters (endurance)
     pub reset_count: Vec<u64>,
+    /// per-device fault class ([`class`]); **empty when
+    /// `params.fault` is disabled** — every fault branch keys off this
+    /// emptiness, so fault-off arrays pay nothing
+    pub fault: Vec<u8>,
+    /// SET pulses lost to programming failures
+    pub prog_failures: u64,
+    /// extra pulses issued by write-verify retries
+    pub verify_retries: u64,
+    /// verified writes still short of target after `max_retries`
+    pub verify_failures: u64,
 }
 
 impl PcmArray {
@@ -75,6 +109,11 @@ impl PcmArray {
                     .clamp(0.0, 0.12),
             );
         }
+        let fault = if params.fault.enabled() {
+            vec![class::NONE; n]
+        } else {
+            Vec::new()
+        };
         PcmArray {
             params,
             rows,
@@ -85,6 +124,10 @@ impl PcmArray {
             nu,
             set_count: vec![0; n],
             reset_count: vec![0; n],
+            fault,
+            prog_failures: 0,
+            verify_retries: 0,
+            verify_failures: 0,
         }
     }
 
@@ -121,12 +164,91 @@ impl PcmArray {
         }
     }
 
+    // -- fault plane -------------------------------------------------------
+
+    /// Fault class of element `i` (`class::NONE` when faults are off).
+    #[inline]
+    pub fn fault_at(&self, i: usize) -> u8 {
+        if self.fault.is_empty() {
+            class::NONE
+        } else {
+            self.fault[i]
+        }
+    }
+
+    /// Sample fabrication stuck faults over the whole array: one
+    /// uniform per cell in row-major order against the cumulative
+    /// class thresholds.  Stuck-at-SET cells freeze at g = 1, stuck-at-
+    /// RESET and stuck-open at g = 0.  Draws nothing when every stuck
+    /// rate is zero.  Called once per plane at grid construction from
+    /// the dedicated per-(op, tile) `OP_FAULT` stream (see
+    /// `crossbar::grid`).
+    pub fn seed_faults(&mut self, rng: &mut Pcg64) {
+        let fs = self.params.fault;
+        if fs.stuck_rate() <= 0.0 {
+            return;
+        }
+        debug_assert!(!self.fault.is_empty());
+        let c1 = fs.stuck_set as f64;
+        let c2 = c1 + fs.stuck_reset as f64;
+        let c3 = c2 + fs.stuck_open as f64;
+        for i in 0..self.g.len() {
+            let u = rng.uniform();
+            if u < c1 {
+                self.fault[i] = class::STUCK_SET;
+                self.g[i] = 1.0;
+            } else if u < c2 {
+                self.fault[i] = class::STUCK_RESET;
+                self.g[i] = 0.0;
+            } else if u < c3 {
+                self.fault[i] = class::STUCK_OPEN;
+                self.g[i] = 0.0;
+            }
+        }
+    }
+
+    /// Wear-out transition: a healthy device whose write–erase traffic
+    /// reached the endurance limit freezes at its current conductance.
+    #[inline]
+    fn check_wear(&mut self, i: usize) {
+        let limit = self.params.fault.endurance_limit;
+        if limit > 0
+            && self.fault[i] == class::NONE
+            && self.set_count[i] + self.reset_count[i] >= limit
+        {
+            self.fault[i] = class::WORN;
+        }
+    }
+
+    /// Per-class stuck/worn counts plus the write-verify and
+    /// programming-failure counters of this array.
+    pub fn fault_stats(&self) -> FaultMap {
+        let mut m = FaultMap {
+            prog_failures: self.prog_failures,
+            verify_retries: self.verify_retries,
+            verify_failures: self.verify_failures,
+            ..Default::default()
+        };
+        for &f in &self.fault {
+            match f {
+                class::STUCK_SET => m.stuck_set += 1,
+                class::STUCK_RESET => m.stuck_reset += 1,
+                class::STUCK_OPEN => m.stuck_open += 1,
+                class::WORN => m.worn += 1,
+                _ => {}
+            }
+        }
+        m
+    }
+
     // -- batched kernels ---------------------------------------------------
 
     /// Drifted conductance of one element at `t_now` (no read noise).
+    /// Faulty devices are frozen: their stored conductance is returned
+    /// unchanged.
     #[inline]
     pub fn drift_at(&self, i: usize, t_now: f32) -> f32 {
-        if !self.params.drift {
+        if !self.params.drift || self.fault_at(i) != class::NONE {
             return self.g[i];
         }
         let elapsed = (t_now - self.t_prog[i]).max(self.params.drift_t0);
@@ -149,6 +271,15 @@ impl PcmArray {
         {
             let elapsed = (t_now - tp).max(t0);
             *o = g * pow_fast(elapsed / t0, -nu);
+        }
+        // Fault fixup pass: faulty devices are frozen at their stored
+        // conductance (no plane allocated -> no pass at all).
+        if !self.fault.is_empty() {
+            for (i, &f) in self.fault.iter().enumerate() {
+                if f != class::NONE {
+                    out[i] = self.g[i];
+                }
+            }
         }
     }
 
@@ -194,9 +325,29 @@ impl PcmArray {
     }
 
     /// Apply one SET pulse to element `i` at `t_now` — identical update
-    /// rule to `PcmDevice::set_pulse`.
+    /// rule to `PcmDevice::set_pulse` when faults are off.
+    ///
+    /// Fault semantics (exact draw order, mirrored by the oracle): a
+    /// stuck/worn device absorbs the pulse with **no RNG draw** (only
+    /// `set_count` advances); otherwise, when `prog_fail > 0`, one
+    /// uniform is drawn from `rng` *before* any write-noise draw and a
+    /// failing pulse returns without touching the conductance.  Every
+    /// attempt counts against the endurance limit.
     pub fn set_pulse_at(&mut self, i: usize, t_now: f32,
                         rng: &mut Pcg64) {
+        if !self.fault.is_empty() {
+            if self.fault[i] != class::NONE {
+                self.set_count[i] += 1;
+                return;
+            }
+            let pf = self.params.fault.prog_fail;
+            if pf > 0.0 && rng.uniform() < pf as f64 {
+                self.set_count[i] += 1;
+                self.prog_failures += 1;
+                self.check_wear(i);
+                return;
+            }
+        }
         let mean = self.params.pulse_increment_mean(self.pulses[i]);
         let dg = if self.params.write_noise {
             mean + self.params.write_sigma * mean * rng.normal() as f32
@@ -207,17 +358,52 @@ impl PcmArray {
         self.pulses[i] += 1.0;
         self.t_prog[i] = t_now;
         self.set_count[i] += 1;
+        if !self.fault.is_empty() {
+            self.check_wear(i);
+        }
     }
 
     /// Program element `i` towards a target increment (pulse-by-pulse);
-    /// returns the pulses applied.
+    /// returns the pulses applied (scheduled plus verify retries).
+    ///
+    /// With `params.fault.write_verify` (and the fault model enabled),
+    /// the programmed conductance is read back after the scheduled
+    /// pulses — a device-state read, no RNG — and compared against the
+    /// target at half-granule (`dg0 / 2`) tolerance; an
+    /// under-programmed *healthy* cell is re-pulsed up to
+    /// `max_retries` extra times.  A write still short after the
+    /// retry budget (stuck cell, wear-out mid-write, repeated
+    /// programming failures, saturation shortfall) increments
+    /// `verify_failures`.  Retries are bounded by construction, and
+    /// both counters surface through [`PcmArray::fault_stats`].
     pub fn program_increment_at(&mut self, i: usize, dg_target: f32,
                                 t_now: f32, rng: &mut Pcg64) -> u32 {
         let n = self.params.pulses_for_target(self.pulses[i], dg_target);
+        let fs = self.params.fault;
+        let verify =
+            fs.write_verify && !self.fault.is_empty() && dg_target > 0.0;
+        let g_before = self.g[i];
         for _ in 0..n {
             self.set_pulse_at(i, t_now, rng);
         }
-        n
+        if !verify {
+            return n;
+        }
+        let target = (g_before + dg_target).min(1.0);
+        let granule = self.params.dg0 * 0.5;
+        let mut retries = 0u32;
+        while target - self.g[i] > granule
+            && retries < fs.max_retries
+            && self.fault[i] == class::NONE
+        {
+            self.set_pulse_at(i, t_now, rng);
+            retries += 1;
+        }
+        self.verify_retries += retries as u64;
+        if target - self.g[i] > granule {
+            self.verify_failures += 1;
+        }
+        n + retries
     }
 
     /// Program the whole array towards per-element target increments
@@ -235,12 +421,20 @@ impl PcmArray {
         total
     }
 
-    /// RESET element `i` to the low-conductance state.
+    /// RESET element `i` to the low-conductance state.  Faulty devices
+    /// ignore the RESET (the attempt still counts against endurance).
     pub fn reset_at(&mut self, i: usize, t_now: f32) {
+        if !self.fault.is_empty() && self.fault[i] != class::NONE {
+            self.reset_count[i] += 1;
+            return;
+        }
         self.g[i] = 0.0;
         self.pulses[i] = 0.0;
         self.t_prog[i] = t_now;
         self.reset_count[i] += 1;
+        if !self.fault.is_empty() {
+            self.check_wear(i);
+        }
     }
 
     /// RESET every element whose mask entry is set; returns the count.
@@ -257,22 +451,117 @@ impl PcmArray {
     }
 }
 
+/// Spare column strip of a differential pair (the `remap` mitigation):
+/// one plus/minus device column of `rows` cells, each row able to
+/// adopt the first dead cell of that row.
+struct SpareStrip {
+    plus: PcmArray,
+    minus: PcmArray,
+    /// `claim[r]` = column index remapped onto row `r`'s spare cell,
+    /// or −1 while unclaimed.
+    claim: Vec<i32>,
+}
+
 /// Differential pair of planar arrays encoding signed weights (the MSB
 /// array).
 pub struct DifferentialPair {
     pub plus: PcmArray,
     pub minus: PcmArray,
     pub w_max: f32,
+    /// spare column strip, allocated only under `params.fault.remap`
+    spare: Option<Box<SpareStrip>>,
 }
 
 impl DifferentialPair {
     pub fn new(params: PcmParams, rows: usize, cols: usize, w_max: f32,
                rng: &mut Pcg64) -> Self {
-        DifferentialPair {
-            plus: PcmArray::new(params, rows, cols, rng),
-            minus: PcmArray::new(params, rows, cols, rng),
-            w_max,
+        let plus = PcmArray::new(params, rows, cols, rng);
+        let minus = PcmArray::new(params, rows, cols, rng);
+        // The spare strip shares the device physics (and its ν draws
+        // come from the same construction stream, deterministically),
+        // but is never seeded with fabrication faults: spares are
+        // assumed tested-good at bind-out.
+        let spare = if params.fault.enabled() && params.fault.remap {
+            Some(Box::new(SpareStrip {
+                plus: PcmArray::new(params, rows, 1, rng),
+                minus: PcmArray::new(params, rows, 1, rng),
+                claim: vec![-1; rows],
+            }))
+        } else {
+            None
+        };
+        DifferentialPair { plus, minus, w_max, spare }
+    }
+
+    /// Seed fabrication stuck faults on both planes from one stream:
+    /// every G+ cell first, then every G− cell (row-major each) — the
+    /// order the oracle mirrors.  The spare strip is not seeded.
+    pub fn seed_faults(&mut self, rng: &mut Pcg64) {
+        self.plus.seed_faults(rng);
+        self.minus.seed_faults(rng);
+    }
+
+    /// True when either device of pair element `i` is stuck or worn.
+    pub fn pair_faulty(&self, i: usize) -> bool {
+        self.plus.fault_at(i) != class::NONE
+            || self.minus.fault_at(i) != class::NONE
+    }
+
+    /// Spare slot (row index) serving element `i`: an existing claim,
+    /// or — when `claim` is allowed — a fresh claim if the pair is
+    /// dead and row `i / cols`'s spare is still free.
+    fn remap_slot(&mut self, i: usize, claim: bool) -> Option<usize> {
+        let dead = self.pair_faulty(i);
+        let cols = self.plus.cols;
+        let sp = self.spare.as_mut()?;
+        let r = i / cols;
+        let c = (i % cols) as i32;
+        if sp.claim[r] == c {
+            return Some(r);
         }
+        if claim && dead && sp.claim[r] < 0 {
+            sp.claim[r] = c;
+            return Some(r);
+        }
+        None
+    }
+
+    /// Overwrite drifted plane reads (`gp`/`gm`, full row-major G+/G−
+    /// planes at `t_now`) at remapped positions with the spare strip's
+    /// state.  No-op without claims; callers gate on nothing — the
+    /// grid/tile read paths call this after every `drift_into` pair.
+    pub fn apply_remap_overrides(&self, t_now: f32, gp: &mut [f32],
+                                 gm: &mut [f32]) {
+        let Some(sp) = self.spare.as_ref() else { return };
+        let cols = self.plus.cols;
+        for (r, &c) in sp.claim.iter().enumerate() {
+            if c >= 0 {
+                let i = r * cols + c as usize;
+                gp[i] = sp.plus.drift_at(r, t_now);
+                gm[i] = sp.minus.drift_at(r, t_now);
+            }
+        }
+    }
+
+    /// Differential-pair cells currently remapped onto the spare strip.
+    pub fn remapped(&self) -> u64 {
+        self.spare
+            .as_ref()
+            .map(|sp| sp.claim.iter().filter(|&&c| c >= 0).count() as u64)
+            .unwrap_or(0)
+    }
+
+    /// Fault/degradation accounting over both planes (and the spare
+    /// strip, including its claim count).
+    pub fn fault_map(&self) -> FaultMap {
+        let mut m = self.plus.fault_stats();
+        m.merge(&self.minus.fault_stats());
+        if let Some(sp) = &self.spare {
+            m.merge(&sp.plus.fault_stats());
+            m.merge(&sp.minus.fault_stats());
+            m.remapped += sp.claim.iter().filter(|&&c| c >= 0).count() as u64;
+        }
+        m
     }
 
     pub fn rows(&self) -> usize {
@@ -324,21 +613,35 @@ impl DifferentialPair {
     }
 
     /// Apply one signed weight increment to element `i` (overflow
-    /// programming): positive pulses G+, negative pulses G−.
+    /// programming): positive pulses G+, negative pulses G−.  Under
+    /// the `remap` mitigation, a dead pair claims (or reuses) its
+    /// row's spare slot and the write routes there instead.
     pub fn apply_increment(&mut self, i: usize, dw: f32, t_now: f32,
                            rng: &mut Pcg64) -> u32 {
+        if dw == 0.0 {
+            return 0;
+        }
         let dg = self.w_to_g(dw.abs());
+        if self.spare.is_some() {
+            if let Some(slot) = self.remap_slot(i, true) {
+                let sp = self.spare.as_mut().unwrap();
+                return if dw > 0.0 {
+                    sp.plus.program_increment_at(slot, dg, t_now, rng)
+                } else {
+                    sp.minus.program_increment_at(slot, dg, t_now, rng)
+                };
+            }
+        }
         if dw > 0.0 {
             self.plus.program_increment_at(i, dg, t_now, rng)
-        } else if dw < 0.0 {
-            self.minus.program_increment_at(i, dg, t_now, rng)
         } else {
-            0
+            self.minus.program_increment_at(i, dg, t_now, rng)
         }
     }
 
     /// Decode the weight matrix at `t_now` into `out` (drift, no read
-    /// noise) — one fused pass over both conductance planes.
+    /// noise) — one fused pass over both conductance planes, with
+    /// remapped cells decoded from the spare strip.
     pub fn decode_into(&self, t_now: f32, out: &mut [f32]) {
         assert_eq!(out.len(), self.len());
         let scale = self.w_max / G_SPAN;
@@ -346,6 +649,17 @@ impl DifferentialPair {
             *o = (self.plus.drift_at(i, t_now)
                 - self.minus.drift_at(i, t_now))
                 * scale;
+        }
+        if let Some(sp) = &self.spare {
+            let cols = self.plus.cols;
+            for (r, &c) in sp.claim.iter().enumerate() {
+                if c >= 0 {
+                    out[r * cols + c as usize] =
+                        (sp.plus.drift_at(r, t_now)
+                            - sp.minus.drift_at(r, t_now))
+                            * scale;
+                }
+            }
         }
     }
 
@@ -394,8 +708,17 @@ impl DifferentialPair {
 
     /// Selective saturation refresh (paper §III-A): read, RESET both,
     /// reprogram the difference.  Returns refreshed indices.
+    ///
+    /// Fault-aware: pairs with a stuck or worn device are skipped —
+    /// RESET would not land and the reprogram would corrupt the frozen
+    /// conductance's decoded weight (a stuck-SET device sits above
+    /// `G_SAT` forever, so without the skip it would be re-attempted
+    /// every cycle).
     pub fn refresh(&mut self, t_now: f32, rng: &mut Pcg64) -> Vec<usize> {
-        let idx = self.saturating();
+        let mut idx = self.saturating();
+        if !self.plus.fault.is_empty() || !self.minus.fault.is_empty() {
+            idx.retain(|&i| !self.pair_faulty(i));
+        }
         for &i in &idx {
             let p = self.plus.read_at(i, t_now, rng);
             let m = self.minus.read_at(i, t_now, rng);
@@ -540,5 +863,201 @@ mod tests {
         for (c, m) in clean.iter().zip(&mean) {
             assert!((*c as f64 - m).abs() < 0.01, "{c} vs {m}");
         }
+    }
+
+    // -- fault model -------------------------------------------------------
+
+    use crate::pcm::fault::{class, FaultSpec};
+
+    fn faulty_params(fault: FaultSpec) -> PcmParams {
+        PcmParams { fault, ..PcmParams::ideal() }
+    }
+
+    #[test]
+    fn fault_off_allocates_nothing() {
+        let mut r = rng();
+        let a = PcmArray::new(PcmParams::default(), 4, 4, &mut r);
+        assert!(a.fault.is_empty());
+        assert_eq!(a.fault_at(3), class::NONE);
+        assert_eq!(a.fault_stats(), Default::default());
+    }
+
+    #[test]
+    fn stuck_cells_freeze_and_ignore_programming() {
+        let mut r = rng();
+        let spec = FaultSpec {
+            stuck_set: 0.3,
+            stuck_reset: 0.2,
+            stuck_open: 0.1,
+            ..Default::default()
+        };
+        let mut a = PcmArray::new(faulty_params(spec), 8, 8, &mut r);
+        a.seed_faults(&mut r);
+        let stats = a.fault_stats();
+        assert!(stats.dead() > 0, "no faults seeded at 60% rate");
+        let i = (0..a.len())
+            .find(|&i| a.fault[i] == class::STUCK_SET)
+            .expect("a stuck-SET cell at 30% rate");
+        assert_eq!(a.g[i], 1.0);
+        // Programming attempts wear but never move the conductance.
+        a.program_increment_at(i, 0.4, 1.0, &mut r);
+        assert_eq!(a.g[i], 1.0);
+        assert!(a.set_count[i] > 0);
+        // RESET is ignored too.
+        a.reset_at(i, 2.0);
+        assert_eq!(a.g[i], 1.0);
+        assert_eq!(a.reset_count[i], 1);
+        // Drift is frozen.
+        let mut drifted = vec![0.0; a.len()];
+        a.drift_into(1e6, &mut drifted);
+        assert_eq!(drifted[i], 1.0);
+        assert_eq!(a.drift_at(i, 1e6), 1.0);
+    }
+
+    #[test]
+    fn seeding_draws_match_the_threshold_walk() {
+        // Same seed, two arrays: seeding is one uniform per cell in
+        // row-major order, so the placement is a pure function of the
+        // stream — the worker-invariance contract at plane level.
+        let spec = FaultSpec { stuck_reset: 0.4, ..Default::default() };
+        let mut r1 = rng();
+        let mut a = PcmArray::new(faulty_params(spec), 5, 7, &mut r1);
+        let mut s1 = Pcg64::new(9, 9);
+        a.seed_faults(&mut s1);
+        let mut r2 = rng();
+        let mut b = PcmArray::new(faulty_params(spec), 5, 7, &mut r2);
+        let mut s2 = Pcg64::new(9, 9);
+        b.seed_faults(&mut s2);
+        assert_eq!(a.fault, b.fault);
+        assert_eq!(a.g, b.g);
+    }
+
+    #[test]
+    fn endurance_wearout_freezes_at_last_conductance() {
+        let spec = FaultSpec { endurance_limit: 5, ..Default::default() };
+        let mut r = rng();
+        let mut a = PcmArray::new(faulty_params(spec), 1, 1, &mut r);
+        for _ in 0..4 {
+            a.set_pulse_at(0, 0.0, &mut r);
+        }
+        assert_eq!(a.fault[0], class::NONE);
+        let g_then = a.g[0];
+        a.set_pulse_at(0, 0.0, &mut r); // 5th write: crosses the limit
+        assert_eq!(a.fault[0], class::WORN);
+        let g_worn = a.g[0];
+        // Further writes and resets do nothing.
+        a.set_pulse_at(0, 0.0, &mut r);
+        a.reset_at(0, 1.0);
+        assert_eq!(a.g[0], g_worn);
+        assert!(g_worn >= g_then);
+        assert_eq!(a.fault_stats().worn, 1);
+    }
+
+    #[test]
+    fn prog_fail_certain_failure_never_programs() {
+        let spec = FaultSpec { prog_fail: 1.0, ..Default::default() };
+        let mut r = rng();
+        let mut a = PcmArray::new(faulty_params(spec), 1, 2, &mut r);
+        a.program_increment_at(0, 0.3, 0.0, &mut r);
+        assert_eq!(a.g[0], 0.0);
+        assert_eq!(a.set_count[0], 3); // ceil(0.3/0.1) attempts
+        assert_eq!(a.fault_stats().prog_failures, 3);
+    }
+
+    #[test]
+    fn write_verify_retries_recover_lost_pulses() {
+        // prog_fail = 0.5: some scheduled pulses fail; verify re-pulses
+        // the shortfall within the retry budget.
+        let spec = FaultSpec {
+            prog_fail: 0.5,
+            write_verify: true,
+            max_retries: 8,
+            ..Default::default()
+        };
+        let mut r = rng();
+        let mut a = PcmArray::new(faulty_params(spec), 1, 8, &mut r);
+        for i in 0..8 {
+            a.program_increment_at(i, 0.3, 0.0, &mut r);
+        }
+        let stats = a.fault_stats();
+        assert!(stats.prog_failures > 0, "no pulse failed at 50%");
+        assert!(stats.verify_retries > 0, "verify never retried");
+        // Every cell that verify did not flag reached its target.
+        let made_it =
+            (0..8).filter(|&i| (a.g[i] - 0.3).abs() < 0.051).count();
+        assert!(made_it as u64 + stats.verify_failures >= 8);
+        // Retry budget bounds the extra pulses per write.
+        assert!(stats.verify_retries <= 8 * 8);
+    }
+
+    #[test]
+    fn verify_is_inert_without_fault_sources() {
+        // write_verify alone must not enable the machinery (no fault
+        // plane, identical draws) — the golden-neutrality guard.
+        let spec = FaultSpec { write_verify: true, ..Default::default() };
+        let mut r1 = rng();
+        let mut a = PcmArray::new(faulty_params(spec), 2, 2, &mut r1);
+        let mut r2 = rng();
+        let mut b = PcmArray::new(PcmParams::ideal(), 2, 2, &mut r2);
+        a.program_increment_at(0, 0.35, 0.0, &mut r1);
+        b.program_increment_at(0, 0.35, 0.0, &mut r2);
+        assert!(a.fault.is_empty());
+        assert_eq!(a.g, b.g);
+        assert_eq!(r1.uniform().to_bits(), r2.uniform().to_bits());
+    }
+
+    #[test]
+    fn fault_aware_refresh_skips_dead_pairs() {
+        let spec = FaultSpec { endurance_limit: 1, ..Default::default() };
+        let mut r = rng();
+        let mut pair =
+            DifferentialPair::new(faulty_params(spec), 1, 2, 1.0, &mut r);
+        // One pulse wears each written cell out at limit 1, frozen at
+        // its first increment (dg0 = 0.1 < G_SAT, so craft saturation
+        // by hand on the worn cell).
+        pair.apply_increment(0, 0.2, 0.0, &mut r);
+        assert_eq!(pair.plus.fault[0], class::WORN);
+        pair.plus.g[0] = 0.95; // frozen above the guard band
+        let refreshed = pair.refresh(1.0, &mut r);
+        assert!(refreshed.is_empty(), "refresh touched a dead pair");
+        assert_eq!(pair.plus.reset_count[0], 0);
+    }
+
+    #[test]
+    fn remap_adopts_dead_cell_and_serves_reads() {
+        let spec = FaultSpec {
+            stuck_open: 1.0, // every cell dead
+            remap: true,
+            ..Default::default()
+        };
+        let mut r = rng();
+        let mut pair =
+            DifferentialPair::new(faulty_params(spec), 2, 3, 1.0, &mut r);
+        pair.seed_faults(&mut r);
+        assert!(pair.pair_faulty(0));
+        assert_eq!(pair.remapped(), 0);
+        // First write to a dead pair claims the row's spare slot…
+        pair.apply_increment(4, 0.5, 0.0, &mut r); // row 1, col 1
+        assert_eq!(pair.remapped(), 1);
+        let decoded = pair.decode(0.0);
+        assert!(decoded[4] > 0.3, "remapped write lost: {decoded:?}");
+        // …and the dead plane cells stayed untouched.
+        assert_eq!(pair.plus.g[4], 0.0);
+        // A second dead cell in the same row can't claim (strip is one
+        // column wide) — its write lands on the dead device (no-op).
+        pair.apply_increment(5, 0.5, 0.0, &mut r);
+        assert_eq!(pair.remapped(), 1);
+        assert_eq!(pair.decode(0.0)[5], 0.0);
+        // Read-path override patches the drifted planes in place.
+        let mut gp = vec![0.0f32; 6];
+        let mut gm = vec![0.0f32; 6];
+        pair.plus.drift_into(0.0, &mut gp);
+        pair.minus.drift_into(0.0, &mut gm);
+        pair.apply_remap_overrides(0.0, &mut gp, &mut gm);
+        assert!(gp[4] > 0.0, "override missing: {gp:?}");
+        assert_eq!(pair.fault_map().remapped, 1);
+        // Negative updates route to the spare's minus device.
+        pair.apply_increment(4, -0.2, 0.0, &mut r);
+        assert!(pair.decode(0.0)[4] < decoded[4]);
     }
 }

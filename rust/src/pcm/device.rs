@@ -19,8 +19,17 @@
 
 use crate::util::rng::Pcg64;
 
+use super::fault::FaultSpec;
+
 /// Device-model parameters (see `PcmConfig` for provenance / defaults).
-#[derive(Clone, Copy, Debug)]
+///
+/// `fault` declares the yield/wear-out model and the write-verify /
+/// remap degradation machinery ([`FaultSpec`]); the default spec is
+/// fully disabled, and the planar kernels only take fault branches
+/// when [`FaultSpec::enabled`] is true.  The scalar [`PcmDevice`]
+/// reference path deliberately stays fault-free — the SoA-equivalence
+/// suite compares it against the planes with faults off.
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct PcmParams {
     pub dg0: f32,
     pub n0: f32,
@@ -34,6 +43,7 @@ pub struct PcmParams {
     pub drift_t0: f32,
     pub drift: bool,
     pub max_pulses: u32,
+    pub fault: FaultSpec,
 }
 
 impl Default for PcmParams {
@@ -51,6 +61,7 @@ impl Default for PcmParams {
             drift_t0: 1.0,
             drift: true,
             max_pulses: 10,
+            fault: FaultSpec::default(),
         }
     }
 }

@@ -1,0 +1,220 @@
+//! Device fault model: stuck cells, programming failures, endurance
+//! wear-out — and the accounting that makes degradation observable.
+//!
+//! Real PCM/memristor arrays are not perfect-yield: a fraction of
+//! devices is stuck at SET (high conductance), stuck at RESET (low
+//! conductance) or stuck open (no conductance at all), individual
+//! programming pulses fail outright, and devices whose cumulative
+//! write–erase traffic crosses the endurance limit freeze at their
+//! last conductance.  [`FaultSpec`] declares all of it; the planar
+//! kernels in [`crate::pcm::array`] consume it.
+//!
+//! # Determinism contract
+//!
+//! * **Off by default.**  `FaultSpec::default()` disables every
+//!   mechanism, and *every* fault branch in the hot kernels is gated on
+//!   [`FaultSpec::enabled`] — a fault-off run performs byte-identical
+//!   arithmetic *and* byte-identical RNG draws to a build without this
+//!   module, so all pinned goldens are unchanged.
+//! * **Dedicated sampling streams.**  Stuck-fault placement is sampled
+//!   once at grid construction from the per-(op, tile) counter stream
+//!   `op_rng(seed, 0, OP_FAULT, tile)` (see `crossbar::grid`), one
+//!   uniform per cell in row-major order, plus plane before minus
+//!   plane — bitwise invariant across worker counts and disjoint from
+//!   every init/program/VMM/update stream.
+//! * **Programming-failure draws** come from the stream already driving
+//!   the write (the per-(op, tile) program/update stream): one uniform
+//!   *before* any write-noise draw, and no draw at all for a cell that
+//!   is already stuck or worn — so the draw sequence is a pure function
+//!   of the fault state, reproducible by the numpy oracle op for op.
+//!
+//! # Degradation machinery
+//!
+//! Write-verify (`write_verify` + `max_retries`) runs inside
+//! `PcmArray::program_increment_at`: after the scheduled pulses, the
+//! programmed conductance is read back (noise-free device-state read)
+//! and compared against the target at half-granule tolerance; an
+//! under-programmed healthy cell is re-pulsed up to `max_retries`
+//! times, and a write still short after that is counted as a verify
+//! failure in the per-array [`FaultMap`].  Refresh skips differential
+//! pairs with a dead device, and the `remap` knob gives every tile's
+//! differential pair a spare column strip that adopts the first dead
+//! cell of each row (see `DifferentialPair::apply_remap_overrides`).
+
+/// Fault classes stored in the per-cell fault plane
+/// (`PcmArray::fault`).  `NONE` cells behave exactly as without the
+/// fault model.
+pub mod class {
+    /// Healthy device.
+    pub const NONE: u8 = 0;
+    /// Stuck at SET: frozen at full conductance (g = 1).
+    pub const STUCK_SET: u8 = 1;
+    /// Stuck at RESET: frozen at zero conductance.
+    pub const STUCK_RESET: u8 = 2;
+    /// Stuck open (broken selector/via): no conductance at all.
+    pub const STUCK_OPEN: u8 = 3;
+    /// Worn out: write–erase traffic crossed `endurance_limit`; the
+    /// device froze at its last programmed conductance.
+    pub const WORN: u8 = 4;
+}
+
+/// Fault-injection configuration carried inside
+/// [`crate::pcm::PcmParams`].  The default disables everything
+/// ([`FaultSpec::enabled`] is false), which the pinned goldens rely
+/// on.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultSpec {
+    /// Fraction of devices stuck at SET (g = 1) from fabrication.
+    pub stuck_set: f32,
+    /// Fraction of devices stuck at RESET (g = 0).
+    pub stuck_reset: f32,
+    /// Fraction of devices stuck open (g = 0, broken access device).
+    pub stuck_open: f32,
+    /// Per-SET-pulse probability that the pulse has no effect on the
+    /// conductance (the attempt still counts against endurance).
+    pub prog_fail: f32,
+    /// Write–erase budget per device: once `set_count + reset_count`
+    /// reaches this, the device freezes at its current conductance.
+    /// `0` disables wear-out.
+    pub endurance_limit: u64,
+    /// Read back each programmed increment and re-pulse
+    /// under-programmed healthy cells (bounded by `max_retries`).
+    pub write_verify: bool,
+    /// Retry budget per verified write.
+    pub max_retries: u32,
+    /// Remap the first dead cell of each differential-pair row onto
+    /// the pair's spare column strip.
+    pub remap: bool,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            stuck_set: 0.0,
+            stuck_reset: 0.0,
+            stuck_open: 0.0,
+            prog_fail: 0.0,
+            endurance_limit: 0,
+            write_verify: false,
+            max_retries: 3,
+            remap: false,
+        }
+    }
+}
+
+impl FaultSpec {
+    /// True when any fault mechanism is active.  Every fault branch in
+    /// the kernels is gated on this, so a disabled spec is bitwise
+    /// free: no extra arithmetic, no extra RNG draws, no fault plane
+    /// allocation.
+    pub fn enabled(&self) -> bool {
+        self.stuck_set > 0.0
+            || self.stuck_reset > 0.0
+            || self.stuck_open > 0.0
+            || self.prog_fail > 0.0
+            || self.endurance_limit > 0
+    }
+
+    /// Combined stuck-device rate (fabrication yield loss).
+    pub fn stuck_rate(&self) -> f32 {
+        self.stuck_set + self.stuck_reset + self.stuck_open
+    }
+}
+
+/// Aggregated fault/degradation accounting: per-class stuck counts
+/// from the fault planes plus the write-verify and wear-out event
+/// counters.  Mergeable across planes, pairs, tiles and grids.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultMap {
+    /// Devices stuck at SET (fabrication).
+    pub stuck_set: u64,
+    /// Devices stuck at RESET (fabrication).
+    pub stuck_reset: u64,
+    /// Devices stuck open (fabrication).
+    pub stuck_open: u64,
+    /// Devices worn out past the endurance limit.
+    pub worn: u64,
+    /// SET pulses that drew a programming failure.
+    pub prog_failures: u64,
+    /// Extra pulses issued by write-verify retries.
+    pub verify_retries: u64,
+    /// Verified writes still short of target after `max_retries`.
+    pub verify_failures: u64,
+    /// Differential-pair cells remapped onto a spare column strip.
+    pub remapped: u64,
+}
+
+impl FaultMap {
+    /// Fold another map into this one (plain counter sums).
+    pub fn merge(&mut self, other: &FaultMap) {
+        self.stuck_set += other.stuck_set;
+        self.stuck_reset += other.stuck_reset;
+        self.stuck_open += other.stuck_open;
+        self.worn += other.worn;
+        self.prog_failures += other.prog_failures;
+        self.verify_retries += other.verify_retries;
+        self.verify_failures += other.verify_failures;
+        self.remapped += other.remapped;
+    }
+
+    /// Total dead devices (stuck + worn).
+    pub fn dead(&self) -> u64 {
+        self.stuck_set + self.stuck_reset + self.stuck_open + self.worn
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_is_fully_disabled() {
+        let s = FaultSpec::default();
+        assert!(!s.enabled());
+        assert_eq!(s.stuck_rate(), 0.0);
+        assert_eq!(s.endurance_limit, 0);
+        assert!(!s.write_verify);
+        assert!(!s.remap);
+    }
+
+    #[test]
+    fn any_mechanism_enables() {
+        for s in [
+            FaultSpec { stuck_set: 0.01, ..Default::default() },
+            FaultSpec { stuck_reset: 0.01, ..Default::default() },
+            FaultSpec { stuck_open: 0.01, ..Default::default() },
+            FaultSpec { prog_fail: 0.01, ..Default::default() },
+            FaultSpec { endurance_limit: 5, ..Default::default() },
+        ] {
+            assert!(s.enabled(), "{s:?}");
+        }
+        // write_verify / remap alone change nothing without a fault
+        // source, so they do not enable the machinery.
+        let s = FaultSpec {
+            write_verify: true,
+            remap: true,
+            ..Default::default()
+        };
+        assert!(!s.enabled());
+    }
+
+    #[test]
+    fn merge_sums_every_counter() {
+        let mut a = FaultMap {
+            stuck_set: 1,
+            stuck_reset: 2,
+            stuck_open: 3,
+            worn: 4,
+            prog_failures: 5,
+            verify_retries: 6,
+            verify_failures: 7,
+            remapped: 8,
+        };
+        a.merge(&a.clone());
+        assert_eq!(a.stuck_set, 2);
+        assert_eq!(a.worn, 8);
+        assert_eq!(a.verify_retries, 12);
+        assert_eq!(a.remapped, 16);
+        assert_eq!(a.dead(), 2 + 4 + 6 + 8);
+    }
+}

@@ -17,6 +17,13 @@
 //!   and the differential-pair weight mapping
 //! * [`endurance`] — write–erase-cycle ledger and histograms (Fig. 6),
 //!   ingesting whole count planes per sweep
+//! * [`fault`] — device fault injection (stuck-at-SET/RESET/open,
+//!   per-pulse programming failures, endurance wear-out) plus the
+//!   write-verify / spare-remap degradation machinery and its
+//!   [`FaultMap`] accounting; fully disabled by default and gated so a
+//!   fault-off run is byte-identical (same arithmetic, same RNG draws)
+//!   to every pinned golden — see the `fault` module docs for the RNG
+//!   stream assignment
 //!
 //! Unit/property tests cross-validate the aggregate statistics of the
 //! pulse-by-pulse process against the closed-form aggregate the JAX model
@@ -27,7 +34,9 @@
 pub mod array;
 pub mod device;
 pub mod endurance;
+pub mod fault;
 
 pub use array::{DifferentialPair, PcmArray};
 pub use device::{PcmDevice, PcmParams};
 pub use endurance::{EnduranceLedger, Histogram};
+pub use fault::{FaultMap, FaultSpec};

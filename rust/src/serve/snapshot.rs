@@ -141,6 +141,15 @@ impl ModelSnapshot {
         &self.refs
     }
 
+    /// Fault/degradation accounting of the frozen net (all-zero when
+    /// the fault model is disabled).  The fault planes freeze with the
+    /// conductances, so this is the training-time degradation the
+    /// served model carries — stuck/worn populations, programming
+    /// failures, write-verify retry totals and remapped cells.
+    pub fn fault_summary(&self) -> crate::pcm::FaultMap {
+        self.net.fault_summary()
+    }
+
     /// Serve one coalesced batch: logits `[m, classes]` at drift time
     /// `t_now`.  `sample_base` is the globally unique id of the
     /// batch's first request (ids ascend by 1 across the batch), so

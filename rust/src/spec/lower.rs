@@ -18,8 +18,9 @@ use std::path::{Path, PathBuf};
 use crate::data::{IMG_C, IMG_H, IMG_W, NUM_CLASSES};
 use crate::exp::fig3;
 use crate::exp::gridexp::{
-    run_fig3, run_fig4, run_fig5, run_fig6, variant_params,
-    GridExpOptions, NnArch, NnExpData, NnExpOptions,
+    run_fig3, run_fig4, run_fig5, run_fig6, run_fig6_faults,
+    variant_params, DeviceTweaks, FaultSweepOptions, GridExpOptions,
+    NnArch, NnExpData, NnExpOptions,
 };
 use crate::exp::serve::{run_fig5_serve, ServeData, ServeExpOptions};
 use crate::nn::graph::{scale_widths, ActShape, GraphSpec, LayerSpec};
@@ -36,6 +37,8 @@ pub enum LoweredSpec {
     Fig4(Box<NnExpOptions>),
     Fig5(GridExpOptions),
     Fig6(GridExpOptions),
+    /// `fig6` with a `faults { … }` block: the fault-injection sweep.
+    Fig6Faults(FaultSweepOptions),
     Serve(Box<ServeExpOptions>),
 }
 
@@ -52,6 +55,7 @@ impl LoweredSpec {
             },
             LoweredSpec::Fig5(_) => "fig5_grid.json",
             LoweredSpec::Fig6(_) => "fig6_grid.json",
+            LoweredSpec::Fig6Faults(_) => "fig6_faults_grid.json",
             LoweredSpec::Serve(_) => "fig5_serve.json",
         }
     }
@@ -61,6 +65,7 @@ impl LoweredSpec {
             LoweredSpec::Fig3 { opts, .. } => &opts.out_dir,
             LoweredSpec::Fig4(o) => &o.out_dir,
             LoweredSpec::Fig5(o) | LoweredSpec::Fig6(o) => &o.out_dir,
+            LoweredSpec::Fig6Faults(o) => &o.grid.out_dir,
             LoweredSpec::Serve(o) => &o.out_dir,
         }
     }
@@ -73,6 +78,7 @@ impl LoweredSpec {
             LoweredSpec::Fig5(o) | LoweredSpec::Fig6(o) => {
                 o.out_dir = dir;
             }
+            LoweredSpec::Fig6Faults(o) => o.grid.out_dir = dir,
             LoweredSpec::Serve(o) => o.out_dir = dir,
         }
     }
@@ -88,6 +94,7 @@ impl LoweredSpec {
             LoweredSpec::Fig4(o) => run_fig4(o),
             LoweredSpec::Fig5(o) => run_fig5(o),
             LoweredSpec::Fig6(o) => run_fig6(o),
+            LoweredSpec::Fig6Faults(o) => run_fig6_faults(o),
             LoweredSpec::Serve(o) => run_fig5_serve(o),
         }
     }
@@ -108,7 +115,16 @@ pub fn lower(ast: &SpecAst) -> Result<LoweredSpec, SpecError> {
         }
         "fig4" => Ok(LoweredSpec::Fig4(Box::new(lower_fig4(ast)?))),
         "fig5" => Ok(LoweredSpec::Fig5(lower_grid(ast, false)?.0)),
-        "fig6" => Ok(LoweredSpec::Fig6(lower_grid(ast, false)?.0)),
+        "fig6" => {
+            let opts = lower_grid(ast, false)?.0;
+            match lower_faults(&ast.body)? {
+                None => Ok(LoweredSpec::Fig6(opts)),
+                Some(mut f) => {
+                    f.grid = opts;
+                    Ok(LoweredSpec::Fig6Faults(f))
+                }
+            }
+        }
         "serve" => Ok(LoweredSpec::Serve(Box::new(lower_serve(ast)?))),
         other => err(ast.kind.span, format!(
             "unknown experiment kind '{other}' (expected fig3, fig4, \
@@ -334,22 +350,92 @@ fn common_top(body: &Block, seed: &mut u64, workers: &mut usize,
     Ok(())
 }
 
-/// Validate a device-variant word through the real tag table, so the
-/// diagnostic points at the spec instead of failing at run time.
-fn device_variant(body: &Block) -> Result<Option<String>, SpecError> {
-    match sub(body, "device")? {
-        None => Ok(None),
-        Some(d) => {
-            vet(&d.body, "device", &["variant"])?;
-            match get_word(&d.body, "variant")? {
-                None => Ok(None),
-                Some(w) => match variant_params(&w.text) {
-                    Ok(_) => Ok(Some(w.text.clone())),
-                    Err(e) => err(w.span, format!("{e:#}")),
-                },
-            }
+/// The lowered `device { … }` block: the variant word (validated
+/// through the real tag table, so the diagnostic points at the spec
+/// instead of failing at run time) plus the raw physics knobs.
+struct DeviceCfg {
+    variant: Option<String>,
+    tweaks: DeviceTweaks,
+}
+
+/// Parse one raw device knob with its physical range check.  `lo` is
+/// exclusive when `lo_open` (granularity must be strictly positive).
+fn device_knob(b: &Block, key: &str, lo: f64, hi: f64, lo_open: bool)
+               -> Result<Option<f32>, SpecError> {
+    let Some(a) = assign(b, key)? else {
+        return Ok(None);
+    };
+    let n = num_of(a)?;
+    let in_range = n.value <= hi
+        && if lo_open { n.value > lo } else { n.value >= lo };
+    if !in_range {
+        return err(n.span, format!(
+            "'{key}' must be in {}{lo}, {hi}], got {}",
+            if lo_open { "(" } else { "[" }, n.text));
+    }
+    Ok(Some(n.value as f32))
+}
+
+fn lower_device(body: &Block) -> Result<DeviceCfg, SpecError> {
+    let mut cfg = DeviceCfg {
+        variant: None,
+        tweaks: DeviceTweaks::default(),
+    };
+    let Some(d) = sub(body, "device")? else {
+        return Ok(cfg);
+    };
+    vet(&d.body, "device",
+        &["variant", "nu_sigma", "read_sigma", "granularity"])?;
+    if let Some(w) = get_word(&d.body, "variant")? {
+        match variant_params(&w.text) {
+            Ok(_) => cfg.variant = Some(w.text.clone()),
+            Err(e) => return err(w.span, format!("{e:#}")),
         }
     }
+    cfg.tweaks.nu_sigma =
+        device_knob(&d.body, "nu_sigma", 0.0, 0.12, false)?;
+    cfg.tweaks.read_sigma =
+        device_knob(&d.body, "read_sigma", 0.0, 0.1, false)?;
+    cfg.tweaks.granularity =
+        device_knob(&d.body, "granularity", 0.0, 0.5, true)?;
+    Ok(cfg)
+}
+
+/// Lower a fig6 `faults { … }` block into a [`FaultSweepOptions`]
+/// (with a default `grid` — the caller substitutes the lowered one).
+/// Absent block → `None` → plain fig6 endurance histograms.
+fn lower_faults(body: &Block)
+                -> Result<Option<FaultSweepOptions>, SpecError> {
+    let Some(f) = sub(body, "faults")? else {
+        return Ok(None);
+    };
+    vet(&f.body, "faults", &["rates", "endurance", "retries"])?;
+    let mut o = FaultSweepOptions::default();
+    if let Some((nums, span)) = num_list(&f.body, "rates")? {
+        if nums.is_empty() {
+            return err(span, "'rates' must not be empty".to_string());
+        }
+        let mut rates = Vec::with_capacity(nums.len());
+        for n in nums {
+            if !(0.0..=1.0).contains(&n.value) {
+                return err(n.span, format!(
+                    "fault rate {} out of range (0..=1)", n.text));
+            }
+            rates.push(n.value as f32);
+        }
+        o.rates = rates;
+    }
+    if let Some((v, span)) = int_list(&f.body, "endurance", 0)? {
+        if v.is_empty() {
+            return err(span,
+                       "'endurance' must not be empty".to_string());
+        }
+        o.endurance = v.into_iter().map(|x| x as u64).collect();
+    }
+    if let Some(v) = get_int(&f.body, "retries", 0)? {
+        o.max_retries = v as u32;
+    }
+    Ok(Some(o))
 }
 
 /// `data { … }` lowering shared by fig4 and serve.  Returns the
@@ -448,6 +534,9 @@ fn lower_grid(ast: &SpecAst, fig3_variants: bool)
               -> Result<(GridExpOptions, Option<Vec<String>>), SpecError> {
     let allowed: &[&str] = if fig3_variants {
         &["grid", "train", "variants", "seed", "workers", "out"]
+    } else if ast.kind.text == "fig6" {
+        // fig6 alone grows the fault-injection sweep block.
+        &["grid", "train", "faults", "seed", "workers", "out"]
     } else {
         &["grid", "train", "seed", "workers", "out"]
     };
@@ -640,9 +729,11 @@ fn lower_fig4(ast: &SpecAst) -> Result<NnExpOptions, SpecError> {
             o.refresh_every = v;
         }
     }
-    if let Some(v) = device_variant(&ast.body)? {
+    let dev = lower_device(&ast.body)?;
+    if let Some(v) = dev.variant {
         o.device_variant = v;
     }
+    o.device_tweaks = dev.tweaks;
 
     // Shape-check the custom graph per width **now**, so a bad spec is
     // a spanned diagnostic instead of a run-time failure deep in the
@@ -873,9 +964,11 @@ fn lower_serve(ast: &SpecAst) -> Result<ServeExpOptions, SpecError> {
             o.probes = probes;
         }
     }
-    if let Some(v) = device_variant(&ast.body)? {
+    let dev = lower_device(&ast.body)?;
+    if let Some(v) = dev.variant {
         o.device_variant = v;
     }
+    o.device_tweaks = dev.tweaks;
     Ok(o)
 }
 
@@ -1089,6 +1182,90 @@ mod tests {
         assert!(e.msg.contains("divide the 32x32 image"), "{e}");
         let e = low("experiment fig4 { seed = 1.5 }").unwrap_err();
         assert!(e.msg.contains("non-negative integer"), "{e}");
+    }
+
+    #[test]
+    fn fig6_faults_block_lowers_to_the_sweep() {
+        let l = low("experiment fig6 {\n  \
+                     grid { k = 10 n = 6 tile = 4 }\n  \
+                     train { steps = 8 batch = 4 }\n  \
+                     faults { rates = [0, 0.05, 0.2] \
+                     endurance = [0, 30] retries = 2 }\n  seed = 7\n}")
+            .unwrap();
+        assert_eq!(l.out_name(), "fig6_faults_grid.json");
+        let LoweredSpec::Fig6Faults(o) = l else { panic!() };
+        assert_eq!((o.grid.k, o.grid.n, o.grid.tile), (10, 6, 4));
+        assert_eq!((o.grid.steps, o.grid.seed), (8, 7));
+        assert_eq!(o.rates, vec![0.0, 0.05, 0.2]);
+        assert_eq!(o.endurance, vec![0, 30]);
+        assert_eq!(o.max_retries, 2);
+        // Empty faults block: the sweep defaults.
+        let l = low("experiment fig6 { faults { } }").unwrap();
+        let LoweredSpec::Fig6Faults(o) = l else { panic!() };
+        assert_eq!(o.rates, vec![0.0, 0.02, 0.05, 0.1]);
+        assert_eq!(o.endurance, vec![0, 1000]);
+        assert_eq!(o.max_retries, 3);
+        // No faults block: plain fig6, and fig5 rejects the block.
+        assert!(matches!(low("experiment fig6 {}").unwrap(),
+                         LoweredSpec::Fig6(_)));
+        let e = low("experiment fig5 {\n  faults { }\n}").unwrap_err();
+        assert!(e.msg.contains("unknown key 'faults'"), "{e}");
+    }
+
+    #[test]
+    fn fault_sweep_ranges_are_spanned() {
+        let e = low("experiment fig6 {\n  faults { rates = [0, \
+                     1.5] }\n}")
+            .unwrap_err();
+        assert_eq!(e.span, Span::new(2, 24));
+        assert!(e.msg.contains("fault rate 1.5 out of range"), "{e}");
+        let e = low("experiment fig6 { faults { rates = [] } }")
+            .unwrap_err();
+        assert!(e.msg.contains("'rates' must not be empty"), "{e}");
+        let e = low("experiment fig6 { faults { endurance = [] } }")
+            .unwrap_err();
+        assert!(e.msg.contains("'endurance' must not be empty"), "{e}");
+        let e = low("experiment fig6 { faults { retries = 1.5 } }")
+            .unwrap_err();
+        assert!(e.msg.contains("non-negative integer"), "{e}");
+    }
+
+    #[test]
+    fn device_knobs_lower_into_tweaks() {
+        let l = low("experiment fig4 {\n  device { variant = full \
+                     nu_sigma = 0.01 read_sigma = 0.02 \
+                     granularity = 0.05 }\n}")
+            .unwrap();
+        let LoweredSpec::Fig4(o) = l else { panic!() };
+        assert_eq!(o.device_variant, "full");
+        assert_eq!(o.device_tweaks.nu_sigma, Some(0.01));
+        assert_eq!(o.device_tweaks.read_sigma, Some(0.02));
+        assert_eq!(o.device_tweaks.granularity, Some(0.05));
+        // serve takes the same knobs; unset ones stay None.
+        let l = low("experiment serve {\n  device { read_sigma = 0 }\n}")
+            .unwrap();
+        let LoweredSpec::Serve(o) = l else { panic!() };
+        assert_eq!(o.device_tweaks.read_sigma, Some(0.0));
+        assert_eq!(o.device_tweaks.nu_sigma, None);
+        assert_eq!(o.device_tweaks.granularity, None);
+    }
+
+    #[test]
+    fn device_knob_ranges_are_spanned() {
+        let e = low("experiment fig4 {\n  device { nu_sigma = 0.2 }\n}")
+            .unwrap_err();
+        assert_eq!(e.span, Span::new(2, 23));
+        assert!(e.msg.contains("'nu_sigma' must be in [0, 0.12]"),
+                "{e}");
+        let e = low("experiment fig4 { device { read_sigma = -0.1 } }")
+            .unwrap_err();
+        assert!(e.msg.contains("'read_sigma' must be in [0, 0.1]"),
+                "{e}");
+        // granularity's lower bound is exclusive: 0 is rejected.
+        let e = low("experiment serve { device { granularity = 0 } }")
+            .unwrap_err();
+        assert!(e.msg.contains("'granularity' must be in (0, 0.5]"),
+                "{e}");
     }
 
     #[test]

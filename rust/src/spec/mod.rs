@@ -59,6 +59,16 @@
 //! `linear_drift`, `nonlinear`, `nonlinear_write`, `nonlinear_read`,
 //! `full`; default: all eight).
 //!
+//! fig6 additionally takes a `faults { … }` block, which switches the
+//! run to the fault-injection sweep (output `fig6_faults_grid.json`,
+//! the `fig6 --faults` CLI path):
+//!
+//! | block | key | type | default |
+//! |---|---|---|---|
+//! | `faults` | `rates` | numbers in 0..=1 | `[0, 0.02, 0.05, 0.1]` |
+//! | `faults` | `endurance` | int list | `[0, 1000]` (0 = unlimited) |
+//! | `faults` | `retries` | int | 3 (write-verify budget) |
+//!
 //! **`experiment fig4`** — the network width sweeps:
 //!
 //! | block | key | type | default |
@@ -82,6 +92,9 @@
 //! | `train` | `eval_n` | int ≥ 1 | 200 |
 //! | `train` | `refresh_every` | int | 0 (batches; 0 = never) |
 //! | `device` | `variant` | word | `linear_read` (any fig3 tag, plus `linear_read_drift`) |
+//! | `device` | `nu_sigma` | number in 0..=0.12 | variant's σ_ν (drift spread) |
+//! | `device` | `read_sigma` | number in 0..=0.1 | variant's σ_read |
+//! | `device` | `granularity` | number in (0, 0.5] | 0.10 (Δg₀ pulse step) |
 //!
 //! ¹ `layers` ⇒ `custom`, `stages`/`blocks` ⇒ `resnet`, else `mlp`.
 //! ² multipliers are converted to permille exactly like the CLI
@@ -103,7 +116,8 @@
 //! **`experiment serve`** — the drift-aware serving benchmark: `model
 //! { hidden tile }`, `data { … }` (as fig4, flat `blobs { dim }`
 //! only), `train { steps batch lr refresh_every }`, `device {
-//! variant }` (default `linear_read_drift`), and
+//! variant nu_sigma read_sigma granularity }` (variant default
+//! `linear_read_drift`), and
 //!
 //! | block | key | type | default |
 //! |---|---|---|---|

@@ -51,7 +51,7 @@ LOG2_E = f32(1.4426950408889634)
 SQRT_2 = f32(1.4142135623730951)
 
 OP_INIT, OP_PROGRAM, OP_UPDATE, OP_VMM, OP_REFRESH = 1, 2, 3, 4, 5
-OP_PROGRAM_INIT, OP_VMM_T = 6, 7
+OP_PROGRAM_INIT, OP_VMM_T, OP_FAULT = 6, 7, 8
 
 
 # -- util::rng ---------------------------------------------------------------
@@ -253,11 +253,41 @@ DRIFT_T0 = f32(1.0)
 READ_SIGMA = f32(0.009)
 
 
+class Fault:
+    """pcm::fault::FaultSpec — f32 fields, exactly like the Rust struct."""
+
+    def __init__(self, stuck_set=0.0, stuck_reset=0.0, stuck_open=0.0,
+                 prog_fail=0.0, endurance_limit=0, write_verify=False,
+                 max_retries=3):
+        self.stuck_set = f32(stuck_set)
+        self.stuck_reset = f32(stuck_reset)
+        self.stuck_open = f32(stuck_open)
+        self.prog_fail = f32(prog_fail)
+        self.endurance_limit = int(endurance_limit)
+        self.write_verify = write_verify
+        self.max_retries = int(max_retries)
+
+    def stuck_rate(self):
+        return (float(self.stuck_set) + float(self.stuck_reset)
+                + float(self.stuck_open))
+
+    def enabled(self):
+        return (self.stuck_rate() > 0.0 or float(self.prog_fail) > 0.0
+                or self.endurance_limit > 0)
+
+
+FAULT_OFF = Fault()
+
+# fault plane classes (pcm::fault::class)
+F_NONE, F_STUCK_SET, F_STUCK_RESET, F_STUCK_OPEN, F_WORN = 0, 1, 2, 3, 4
+
+
 class Params:
-    def __init__(self, read_noise=False, drift=False):
+    def __init__(self, read_noise=False, drift=False, fault=None):
         # golden variants are linear, write-noise off, nu-sigma 0
         self.read_noise = read_noise
         self.drift = drift
+        self.fault = fault if fault is not None else FAULT_OFF
 
 
 # -- pcm planes (linear, write-noise-off path only) --------------------------
@@ -265,32 +295,119 @@ class Params:
 class Plane:
     """One PcmArray's planes (ν = DRIFT_NU everywhere: σ_ν = 0)."""
 
-    def __init__(self, nelem):
+    def __init__(self, nelem, fault=FAULT_OFF):
         self.g = np.zeros(nelem, dtype=np.float32)
         self.pulses = np.zeros(nelem, dtype=np.float32)
         self.t_prog = np.zeros(nelem, dtype=np.float32)
         self.set_count = np.zeros(nelem, dtype=np.int64)
         self.reset_count = np.zeros(nelem, dtype=np.int64)
+        self.spec = fault
+        # PcmArray::fault — allocated only when the model is enabled,
+        # so a fault-off run touches no fault branch at all.
+        self.fault = [F_NONE] * nelem if fault.enabled() else None
+        self.prog_failures = 0
+        self.verify_retries = 0
+        self.verify_failures = 0
 
-    def set_pulse_at(self, i, t_now):
+    def seed_faults(self, rng):
+        """PcmArray::seed_faults — one uniform per cell, row-major,
+        against the cumulative f64 class thresholds."""
+        fs = self.spec
+        if fs.stuck_rate() <= 0.0:
+            return
+        c1 = float(fs.stuck_set)
+        c2 = c1 + float(fs.stuck_reset)
+        c3 = c2 + float(fs.stuck_open)
+        for i in range(len(self.g)):
+            u = rng.uniform()
+            if u < c1:
+                self.fault[i] = F_STUCK_SET
+                self.g[i] = f32(1.0)
+            elif u < c2:
+                self.fault[i] = F_STUCK_RESET
+                self.g[i] = f32(0.0)
+            elif u < c3:
+                self.fault[i] = F_STUCK_OPEN
+                self.g[i] = f32(0.0)
+
+    def check_wear(self, i):
+        limit = self.spec.endurance_limit
+        if (limit > 0 and self.fault[i] == F_NONE
+                and int(self.set_count[i]) + int(self.reset_count[i])
+                >= limit):
+            self.fault[i] = F_WORN
+
+    def set_pulse_at(self, i, t_now, rng=None):
+        # PcmArray::set_pulse_at fault preamble: a stuck/worn cell
+        # absorbs the pulse with no draw; a prog-fail uniform is drawn
+        # (from the caller's write stream) before any write-noise draw.
+        if self.fault is not None:
+            if self.fault[i] != F_NONE:
+                self.set_count[i] += 1
+                return
+            pf = self.spec.prog_fail
+            if pf > 0.0 and rng.uniform() < float(pf):
+                self.set_count[i] += 1
+                self.prog_failures += 1
+                self.check_wear(i)
+                return
         # linear, no write noise: dg = DG0
         self.g[i] = clamp(f32(self.g[i] + DG0), f32(0.0), f32(1.0))
         self.pulses[i] = f32(self.pulses[i] + f32(1.0))
         self.t_prog[i] = f32(t_now)
         self.set_count[i] += 1
+        if self.fault is not None:
+            self.check_wear(i)
 
-    def program_increment_at(self, i, dg_target, t_now):
+    def program_increment_at(self, i, dg_target, t_now, rng=None):
         if dg_target <= 0.0:
             return 0
         nf = f32(f32(dg_target) / DG0)
         n = int(f32(max(float(np.ceil(nf)), 1.0)))
         n = min(n, MAX_PULSES)
+        verify = (self.spec.write_verify and self.fault is not None
+                  and dg_target > 0.0)
+        g_before = f32(self.g[i])
         for _ in range(n):
-            self.set_pulse_at(i, t_now)
-        return n
+            self.set_pulse_at(i, t_now, rng)
+        if not verify:
+            return n
+        # PcmArray::program_increment_at write-verify: readback is a
+        # device-state read (no RNG), re-pulse healthy short cells.
+        target = min(f32(g_before + f32(dg_target)), f32(1.0))
+        granule = f32(DG0 * f32(0.5))
+        retries = 0
+        while (f32(target - self.g[i]) > granule
+               and retries < self.spec.max_retries
+               and self.fault[i] == F_NONE):
+            self.set_pulse_at(i, t_now, rng)
+            retries += 1
+        self.verify_retries += retries
+        if f32(target - self.g[i]) > granule:
+            self.verify_failures += 1
+        return n + retries
+
+    def fault_counts(self, m):
+        """Fold this plane's fault classes + counters into dict `m`
+        (PcmArray::fault_stats)."""
+        if self.fault is not None:
+            for fc in self.fault:
+                if fc == F_STUCK_SET:
+                    m["stuck_set"] += 1
+                elif fc == F_STUCK_RESET:
+                    m["stuck_reset"] += 1
+                elif fc == F_STUCK_OPEN:
+                    m["stuck_open"] += 1
+                elif fc == F_WORN:
+                    m["worn"] += 1
+        m["prog_failures"] += self.prog_failures
+        m["verify_retries"] += self.verify_retries
+        m["verify_failures"] += self.verify_failures
 
     def drift_at(self, i, t_now, drift):
-        if not drift:
+        # faulty devices are frozen at their stored conductance
+        if not drift or (self.fault is not None
+                         and self.fault[i] != F_NONE):
             return f32(self.g[i])
         elapsed = f32(max(f32(f32(t_now) - self.t_prog[i]), DRIFT_T0))
         return f32(self.g[i]
@@ -312,11 +429,11 @@ class Tile:
     bit for bit.
     """
 
-    def __init__(self, rows, cols, w_max=W_MAX):
+    def __init__(self, rows, cols, w_max=W_MAX, fault=FAULT_OFF):
         self.rows, self.cols = rows, cols
         n = rows * cols
-        self.plus = Plane(n)
-        self.minus = Plane(n)
+        self.plus = Plane(n, fault)
+        self.minus = Plane(n, fault)
         self.acc = np.zeros(n, dtype=np.int64)
         self.w_max = f32(w_max)
         self.w_to_g = f32(G_SPAN / self.w_max)
@@ -331,9 +448,9 @@ class Tile:
         q = clamp(rust_round_f32(t), f32(-7.0), f32(7.0))
         return f32(q * self.msb_step)
 
-    def program_init(self, w0, t_now):
+    def program_init(self, w0, t_now, rng=None):
         """HicWeight::program_init → DifferentialPair::program_weights
-        (linear, write-noise-off: no RNG consumed)."""
+        (linear, write-noise-off: RNG consumed only by fault draws)."""
         n = self.rows * self.cols
         dgp = np.zeros(n, dtype=np.float32)
         dgm = np.zeros(n, dtype=np.float32)
@@ -346,17 +463,17 @@ class Tile:
                 dgm[i] = f32(-g)
         for i in range(n):
             if dgp[i] > 0.0:
-                self.plus.program_increment_at(i, dgp[i], t_now)
+                self.plus.program_increment_at(i, dgp[i], t_now, rng)
         for i in range(n):
             if dgm[i] > 0.0:
-                self.minus.program_increment_at(i, dgm[i], t_now)
+                self.minus.program_increment_at(i, dgm[i], t_now, rng)
 
-    def apply_increment(self, i, dw, t_now):
+    def apply_increment(self, i, dw, t_now, rng=None):
         dg = f32(f32(abs(f32(dw))) * self.w_to_g)
         if dw > 0.0:
-            return self.plus.program_increment_at(i, dg, t_now)
+            return self.plus.program_increment_at(i, dg, t_now, rng)
         if dw < 0.0:
-            return self.minus.program_increment_at(i, dg, t_now)
+            return self.minus.program_increment_at(i, dg, t_now, rng)
         return 0
 
     def apply_update(self, grad, lr, t_now, rng):
@@ -377,7 +494,7 @@ class Tile:
             if ovf != 0:
                 overflows += abs(ovf)
                 dw = f32(f32(float(ovf)) * self.msb_step)
-                self.apply_increment(i, dw, t_now)
+                self.apply_increment(i, dw, t_now, rng)
         return overflows
 
     def decode_at(self, i, t_now, drift):
@@ -425,16 +542,23 @@ class Grid:
             for gc in range(self.grid_c):
                 ur = min(k - gr * tile, tile)
                 uc = min(n - gc * tile, tile)
-                self.tiles.append(Tile(ur, uc, w_max))
+                self.tiles.append(Tile(ur, uc, w_max, params.fault))
                 self.coords.append((gr * tile, gc * tile, ur, uc))
+        # CrossbarGrid::new fault seeding: one dedicated per-tile
+        # OP_FAULT stream, G+ plane fully, then G− (same stream).
+        if params.fault.stuck_rate() > 0.0:
+            for ti, t in enumerate(self.tiles):
+                frng = op_rng(self.seed, 0, OP_FAULT, ti)
+                t.plus.seed_faults(frng)
+                t.minus.seed_faults(frng)
 
     def program_init(self, w, t_now, rnd):
         """CrossbarGrid::program_init (write-noise-off path: the
-        per-tile OP_PROGRAM_INIT streams are derived but unused)."""
+        per-tile OP_PROGRAM_INIT streams feed only fault draws)."""
         subs = self.scatter(w)
         for ti, tile in enumerate(self.tiles):
-            op_rng(self.seed, rnd, OP_PROGRAM_INIT, ti)
-            tile.program_init(subs[ti], t_now)
+            rng = op_rng(self.seed, rnd, OP_PROGRAM_INIT, ti)
+            tile.program_init(subs[ti], t_now, rng)
 
     def scatter(self, src):
         subs = []
@@ -548,6 +672,15 @@ class Grid:
     def total_set_pulses(self):
         return sum(int(t.plus.set_count.sum()) + int(t.minus.set_count.sum())
                    for t in self.tiles)
+
+    def fault_summary(self):
+        """CrossbarGrid::fault_summary → merged per-plane FaultMaps."""
+        m = dict(stuck_set=0, stuck_reset=0, stuck_open=0, worn=0,
+                 prog_failures=0, verify_retries=0, verify_failures=0)
+        for t in self.tiles:
+            t.plus.fault_counts(m)
+            t.minus.fault_counts(m)
+        return m
 
 
 # -- coordinator::gridtrainer ------------------------------------------------
@@ -1061,6 +1194,54 @@ def run_fig5(o):
     doc = echo("fig5_grid", o)
     doc["trained_mse_u6"] = u6(t.losses[-1])
     doc["probes"] = probes
+    return doc
+
+
+# Mirror of the Rust golden fault-sweep config (exp::gridexp
+# fig6_faults golden test): TINY grid + the sweep axes.
+TINY_FAULTS = dict(rates=[0.0, 0.05, 0.2], endurance=[0, 6], retries=2,
+                   **TINY)
+
+
+def fault_point_spec(rate, limit, retries):
+    """exp::gridexp::fault_point_spec — pure f32 arithmetic."""
+    r = f32(rate)
+    third = f32(r / f32(3.0))
+    return Fault(stuck_set=third, stuck_reset=third, stuck_open=third,
+                 prog_fail=f32(r / f32(5.0)), endurance_limit=limit,
+                 write_verify=True, max_retries=retries)
+
+
+def run_fig6_faults(o):
+    points = []
+    for rate in o["rates"]:
+        for limit in o["endurance"]:
+            params = Params()  # variant_params("linear")
+            params.fault = fault_point_spec(rate, limit, o["retries"])
+            t = GridTrainer(o["k"], o["n"], o["tile"], o["seed"], params,
+                            o["batch"])
+            t.train_steps(o["steps"])
+            t_final = f32(t.now)
+            mse, mse_gain = t.eval_mse_pair(t_final, EVAL_ROUND_BASE)
+            fm = t.grid.fault_summary()
+            points.append({
+                "fault_rate_u6": u6(float(f32(rate))),
+                "endurance_limit": limit,
+                "mse_u6": u6(mse),
+                "mse_gain_u6": u6(mse_gain),
+                "stuck_set": fm["stuck_set"],
+                "stuck_reset": fm["stuck_reset"],
+                "stuck_open": fm["stuck_open"],
+                "worn": fm["worn"],
+                "prog_failures": fm["prog_failures"],
+                "verify_retries": fm["verify_retries"],
+                "verify_failures": fm["verify_failures"],
+                "overflows": t.overflows,
+                "set_pulses": t.grid.total_set_pulses(),
+            })
+    doc = echo("fig6_faults", o)
+    doc["max_retries"] = o["retries"]
+    doc["points"] = points
     return doc
 
 
@@ -2111,3 +2292,7 @@ if __name__ == "__main__":
     with open(os.path.join(here, "fig5_serve.json"), "w") as f:
         f.write(fig5s)
     print("fig5_serve.json:", fig5s)
+    fig6f = jdump(run_fig6_faults(TINY_FAULTS))
+    with open(os.path.join(here, "fig6_faults_grid.json"), "w") as f:
+        f.write(fig6f)
+    print("fig6_faults_grid.json:", fig6f)

@@ -1,0 +1,351 @@
+//! Fault-injection determinism suite (`pcm::fault` + the degradation
+//! machinery woven through `pcm::array`, `crossbar::grid` and the
+//! fault sweep).
+//!
+//! Contract pinned here (see the `pcm::fault` module docs):
+//!
+//! * **fault placement and write-verify accounting are bitwise
+//!   invariant across worker counts** {1, 4, 8} — placement comes from
+//!   the dedicated per-(op, tile) `OP_FAULT` streams and every
+//!   prog-fail/verify draw rides the per-tile write stream, so neither
+//!   depends on scheduling;
+//! * **a fault-off spec is bitwise free**: arming `write_verify` /
+//!   `remap` / `max_retries` without any fault source performs
+//!   byte-identical arithmetic and RNG draws to `FaultSpec::default()`
+//!   (the five pinned goldens in `golden_gridexp` all run fault-off
+//!   and are the byte-level proof at the document layer);
+//! * **placement is a pure function of (seed, tile)**: rebuilding the
+//!   same faulted grid reproduces the same fault map, and training
+//!   never moves a fabrication fault (only `worn` can grow);
+//! * **write-verify retries are bounded by construction**:
+//!   `verify_retries ≤ max_retries · programming events`;
+//! * **remap** routes a dead pair's writes onto its row's spare slot
+//!   and decode serves the spare's state at the claimed position.
+
+use hic_train::exp::gridexp::{run_fig6_faults, FaultSweepOptions,
+                              GridExpOptions};
+use hic_train::crossbar::grid::CrossbarGrid;
+use hic_train::crossbar::{AdcSpec, DacSpec, TilingPolicy};
+use hic_train::hic::weight::HicGeometry;
+use hic_train::pcm::device::PcmParams;
+use hic_train::pcm::{FaultMap, FaultSpec};
+use hic_train::testutil::prop;
+use hic_train::util::json::Json;
+use hic_train::util::pool::WorkerPool;
+use std::path::PathBuf;
+
+fn faulted_params(fault: FaultSpec) -> PcmParams {
+    PcmParams { fault, ..Default::default() } // full noisy model
+}
+
+fn grid(params: PcmParams, k: usize, n: usize, tile: usize,
+        seed: u64) -> CrossbarGrid {
+    CrossbarGrid::new(params, HicGeometry::default(), k, n,
+                      TilingPolicy { tile_rows: tile, tile_cols: tile },
+                      DacSpec::default(), AdcSpec::default(), seed)
+}
+
+fn grid_state(gr: &CrossbarGrid) -> Vec<(Vec<f32>, Vec<f32>, Vec<u64>,
+                                         Vec<u64>)> {
+    gr.tiles
+        .iter()
+        .map(|t| {
+            let msb = &t.weights.msb;
+            (msb.plus.g.clone(), msb.minus.g.clone(),
+             msb.plus.set_count.clone(), msb.minus.set_count.clone())
+        })
+        .collect()
+}
+
+/// The whole fault sweep document — placement, degradation counters,
+/// verify accounting, metrics — is bitwise invariant across worker
+/// counts {1, 4, 8}.
+#[test]
+fn prop_fault_sweep_worker_invariant() {
+    prop("fault sweep document invariant across workers", 4, |g| {
+        let sweep = |workers: usize| FaultSweepOptions {
+            grid: GridExpOptions {
+                k: g.usize_in(5, 10),
+                n: g.usize_in(4, 8),
+                tile: g.usize_in(3, 5),
+                steps: 3,
+                batch: 3,
+                seed: g.u64_below(1 << 24),
+                workers,
+                out_dir: PathBuf::from("results"),
+            },
+            rates: vec![0.15],
+            endurance: vec![8],
+            max_retries: 2,
+        };
+        // The generator must be consumed once only: build the three
+        // configs from one draw set.
+        let base = sweep(1);
+        let mut w4 = base.clone();
+        w4.grid.workers = 4;
+        let mut w8 = base.clone();
+        w8.grid.workers = 8;
+        let a = run_fig6_faults(&base).unwrap().to_string();
+        let b = run_fig6_faults(&w4).unwrap().to_string();
+        let c = run_fig6_faults(&w8).unwrap().to_string();
+        if a != b || a != c {
+            return Err(format!(
+                "fault sweep diverges across workers (k={} n={} \
+                 tile={})", base.grid.k, base.grid.n, base.grid.tile));
+        }
+        Ok(())
+    });
+}
+
+/// Faulted grid state kernels — seeding, init programming, signed
+/// increments with write-verify, hybrid updates with prog-fail draws,
+/// fault-aware refresh — leave bitwise identical device state and
+/// fault accounting for worker counts {1, 4, 8}, full noisy model +
+/// remap on.
+#[test]
+fn prop_fault_state_kernels_worker_invariant() {
+    prop("faulted grid kernels invariant across workers", 15, |g| {
+        let k = g.usize_in(4, 12);
+        let n = g.usize_in(3, 10);
+        let tile = g.usize_in(2, 5);
+        let seed = g.u64_below(1 << 32);
+        let fault = FaultSpec {
+            stuck_set: 0.04,
+            stuck_reset: 0.04,
+            stuck_open: 0.04,
+            prog_fail: 0.05,
+            endurance_limit: 12,
+            write_verify: true,
+            max_retries: 3,
+            remap: true,
+        };
+        let w0 = g.vec_f32(k * n, -0.7, 0.7);
+        let dw = g.vec_f32(k * n, -0.3, 0.3);
+        let grad = g.vec_f32(k * n, -2.0, 2.0);
+        let run = |workers: usize| {
+            let pool = WorkerPool::new(workers);
+            let mut gr = grid(faulted_params(fault), k, n, tile, seed);
+            let mut scratch = gr.scratch();
+            gr.program_init(&w0, 0.0, 0, &pool);
+            let pulses =
+                gr.program_increments(&dw, 1.0, 1, &pool, &mut scratch);
+            let ovf =
+                gr.apply_update(&grad, 0.5, 2.0, 2, &pool, &mut scratch);
+            let refreshed = gr.refresh(3.0, 3, &pool);
+            let mut decoded = vec![0.0f32; k * n];
+            gr.drift_into(4.0, &pool, &mut scratch, &mut decoded);
+            (pulses, ovf, refreshed, decoded, grid_state(&gr),
+             gr.fault_summary())
+        };
+        let a = run(1);
+        let b = run(4);
+        let c = run(8);
+        if a != b || a != c {
+            return Err(format!(
+                "faulted kernels diverge across workers (k={k} n={n} \
+                 tile={tile})"));
+        }
+        Ok(())
+    });
+}
+
+/// A spec with no fault source is bitwise free even with the
+/// degradation machinery armed: `write_verify` + `remap` +
+/// `max_retries` change neither the device state nor any RNG draw
+/// relative to `FaultSpec::default()` — the property behind the five
+/// pinned goldens staying byte-identical with this module compiled in.
+#[test]
+fn prop_fault_off_specs_are_bitwise_free() {
+    prop("armed-but-sourceless fault spec is bitwise free", 15, |g| {
+        let k = g.usize_in(4, 12);
+        let n = g.usize_in(3, 10);
+        let tile = g.usize_in(2, 5);
+        let seed = g.u64_below(1 << 32);
+        let armed = FaultSpec {
+            write_verify: true,
+            max_retries: 7,
+            remap: true,
+            ..Default::default()
+        };
+        assert!(!armed.enabled());
+        let w0 = g.vec_f32(k * n, -0.7, 0.7);
+        let grad = g.vec_f32(k * n, -2.0, 2.0);
+        let m = g.usize_in(1, 3);
+        let x = g.vec_f32(m * k, -1.0, 1.0);
+        let run = |fault: FaultSpec| {
+            let pool = WorkerPool::new(2);
+            let mut gr = grid(faulted_params(fault), k, n, tile, seed);
+            let mut scratch = gr.scratch();
+            gr.program_init(&w0, 0.0, 0, &pool);
+            let ovf =
+                gr.apply_update(&grad, 0.5, 1.0, 1, &pool, &mut scratch);
+            let y = gr.vmm_batch(&x, m, 2.0, 5, &pool);
+            let refreshed = gr.refresh(3.0, 3, &pool);
+            (ovf, y, refreshed, grid_state(&gr), gr.fault_summary())
+        };
+        let a = run(FaultSpec::default());
+        let b = run(armed);
+        if a != b {
+            return Err(format!(
+                "armed-but-sourceless spec changed behavior (k={k} \
+                 n={n} tile={tile})"));
+        }
+        if a.4 != FaultMap::default() {
+            return Err("fault-free run reports nonzero fault map".into());
+        }
+        Ok(())
+    });
+}
+
+/// Fabrication fault placement is a pure function of (seed, tile):
+/// rebuilding reproduces the same map, and a training workload can
+/// only grow `worn` — the stuck classes never move.
+#[test]
+fn prop_fault_placement_reproducible_and_stable() {
+    prop("fault placement pure in (seed, tile) and training-stable",
+         15, |g| {
+        let k = g.usize_in(4, 12);
+        let n = g.usize_in(3, 10);
+        let tile = g.usize_in(2, 5);
+        let seed = g.u64_below(1 << 32);
+        let fault = FaultSpec {
+            stuck_set: 0.1,
+            stuck_reset: 0.1,
+            stuck_open: 0.1,
+            endurance_limit: 10,
+            ..Default::default()
+        };
+        let gr1 = grid(faulted_params(fault), k, n, tile, seed);
+        let gr2 = grid(faulted_params(fault), k, n, tile, seed);
+        let fresh = gr1.fault_summary();
+        if fresh != gr2.fault_summary() {
+            return Err("same (seed, config), different placement".into());
+        }
+        // Train-ish workload on a third copy; stuck classes frozen.
+        let pool = WorkerPool::new(2);
+        let mut gr = grid(faulted_params(fault), k, n, tile, seed);
+        let mut scratch = gr.scratch();
+        let grad = g.vec_f32(k * n, -3.0, 3.0);
+        for r in 0..4 {
+            gr.apply_update(&grad, 0.5, r as f32, r, &pool, &mut scratch);
+        }
+        let after = gr.fault_summary();
+        if (after.stuck_set, after.stuck_reset, after.stuck_open)
+            != (fresh.stuck_set, fresh.stuck_reset, fresh.stuck_open)
+        {
+            return Err("training moved a fabrication fault".into());
+        }
+        if after.worn < fresh.worn {
+            return Err("worn count decreased".into());
+        }
+        Ok(())
+    });
+}
+
+/// Write-verify retry totals in the sweep document are bounded by
+/// `max_retries` per programming event, and every point carries the
+/// full degradation accounting.
+#[test]
+fn verify_retries_are_bounded_in_the_sweep_document() {
+    let opts = FaultSweepOptions {
+        grid: GridExpOptions {
+            k: 8,
+            n: 6,
+            tile: 4,
+            steps: 4,
+            batch: 3,
+            seed: 11,
+            workers: 2,
+            out_dir: PathBuf::from("results"),
+        },
+        rates: vec![0.0, 0.25],
+        endurance: vec![0, 6],
+        max_retries: 2,
+    };
+    let doc = run_fig6_faults(&opts).unwrap();
+    let points = match doc.get("points") {
+        Some(Json::Arr(p)) => p,
+        _ => panic!("sweep document has no points array"),
+    };
+    assert_eq!(points.len(), 4);
+    let num = |p: &Json, key: &str| -> f64 {
+        p.get(key)
+            .and_then(|j| j.as_f64())
+            .unwrap_or_else(|| panic!("point missing {key}"))
+    };
+    for p in points {
+        // One verified write per overflow event at most, so the retry
+        // total is bounded by max_retries · overflows.
+        assert!(num(p, "verify_retries")
+                    <= 2.0 * num(p, "overflows"),
+                "retry total exceeds the budget bound: {p}");
+        for key in ["fault_rate_u6", "endurance_limit", "mse_u6",
+                    "mse_gain_u6", "stuck_set", "stuck_reset",
+                    "stuck_open", "worn", "prog_failures",
+                    "verify_failures", "set_pulses"] {
+            assert!(p.get(key).is_some(), "point missing {key}");
+        }
+    }
+    // The all-off point reports a clean map.
+    assert_eq!(num(&points[0], "fault_rate_u6"), 0.0);
+    assert_eq!(num(&points[0], "stuck_open"), 0.0);
+    assert_eq!(num(&points[0], "verify_retries"), 0.0);
+}
+
+/// Remap end to end on a fully dead grid: every pair is stuck open, so
+/// the first write in each row claims that row's spare slot; decode
+/// then serves the spare's programmed weight at the claimed position
+/// while every unclaimed (dead, unremapped) position stays exactly 0.
+#[test]
+fn remap_claims_one_spare_per_row_and_decode_serves_it() {
+    let fault = FaultSpec {
+        stuck_open: 1.0,
+        remap: true,
+        ..Default::default()
+    };
+    let params = PcmParams {
+        nonlinear: false,
+        write_noise: false,
+        read_noise: false,
+        drift: false,
+        drift_nu_sigma: 0.0,
+        fault,
+        ..Default::default()
+    };
+    let (k, n, tile) = (6, 5, 3);
+    let pool = WorkerPool::new(2);
+    let mut gr = grid(params, k, n, tile, 3);
+    let mut scratch = gr.scratch();
+    let before = gr.fault_summary();
+    assert_eq!(before.stuck_open as usize, 2 * k * n);
+    assert_eq!(before.remapped, 0);
+
+    // Element order is row-major per tile: the first write of each
+    // row lands on local column 0 and claims the row's spare.
+    let dw = vec![0.5f32; k * n];
+    gr.program_increments(&dw, 1.0, 1, &pool, &mut scratch);
+    let after = gr.fault_summary();
+    // One claim per row per column strip (grid_c strips of k rows).
+    let strips = n.div_ceil(tile);
+    assert_eq!(after.remapped as usize, k * strips);
+    // Stuck cells absorbed the rest: placement unchanged.
+    assert_eq!(after.stuck_open, before.stuck_open);
+
+    let mut decoded = vec![0.0f32; k * n];
+    gr.drift_into(2.0, &pool, &mut scratch, &mut decoded);
+    for r in 0..k {
+        for c in 0..n {
+            let v = decoded[r * n + c];
+            if c % tile == 0 {
+                // claimed: the spare carries the 0.5 target (4 × Δg₀
+                // pulses ⇒ g = 0.4 ⇒ w = 0.5, up to f32 accumulation)
+                assert!((v - 0.5).abs() < 1e-3,
+                        "remapped ({r},{c}) decodes {v}, want ≈0.5");
+            } else {
+                // dead and unremapped: both planes frozen at 0
+                assert_eq!(v, 0.0,
+                           "dead unremapped ({r},{c}) decodes {v}");
+            }
+        }
+    }
+}

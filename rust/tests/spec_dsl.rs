@@ -71,6 +71,13 @@ fn example_fig5_serve_reproduces_the_golden_bytes() {
 }
 
 #[test]
+fn example_fig6_faults_reproduces_the_golden_bytes() {
+    let got = run_spec(include_str!("../../examples/fig6_faults.hic"));
+    assert_eq!(got,
+               include_str!("golden/fig6_faults_grid.json").trim_end());
+}
+
+#[test]
 fn example_out_names_match_the_golden_files() {
     for (src, name) in [
         (include_str!("../../examples/fig3_grid.hic"),
@@ -83,6 +90,8 @@ fn example_out_names_match_the_golden_files() {
          "fig5_grid.json"),
         (include_str!("../../examples/fig5_serve.hic"),
          "fig5_serve.json"),
+        (include_str!("../../examples/fig6_faults.hic"),
+         "fig6_faults_grid.json"),
     ] {
         assert_eq!(load_str(src).unwrap().out_name(), name);
     }
@@ -90,13 +99,14 @@ fn example_out_names_match_the_golden_files() {
 
 // -- 2. round-trip property ----------------------------------------------
 
-const EXAMPLES: [(&str, &str); 5] = [
+const EXAMPLES: [(&str, &str); 6] = [
     ("fig3_grid.hic", include_str!("../../examples/fig3_grid.hic")),
     ("fig4_grid.hic", include_str!("../../examples/fig4_grid.hic")),
     ("fig4_resnet_grid.hic",
      include_str!("../../examples/fig4_resnet_grid.hic")),
     ("fig5_grid.hic", include_str!("../../examples/fig5_grid.hic")),
     ("fig5_serve.hic", include_str!("../../examples/fig5_serve.hic")),
+    ("fig6_faults.hic", include_str!("../../examples/fig6_faults.hic")),
 ];
 
 #[test]
